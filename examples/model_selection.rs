@@ -1,0 +1,98 @@
+//! Model selection — the paper's primary workload (Table 2 row 1) at
+//! CPU-feasible scale, and this repo's END-TO-END VALIDATION driver
+//! (DESIGN.md §4 "e2e real", recorded in EXPERIMENTS.md).
+//!
+//! A hyperparameter grid over a BERT-style byte-LM: {2 batch sizes} x
+//! {3 learning rates} = 6 models trained TOGETHER on 2 memory-constrained
+//! virtual devices, every shard unit executing the Pallas-bearing AOT HLO
+//! via PJRT. Prints per-model loss curves and the winner.
+//!
+//! ```bash
+//! cargo run --release --example model_selection [-- --steps 50]
+//! ```
+
+use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::exec::real::RealModelSpec;
+use hydra::train::optimizer::OptKind;
+use hydra::util::cli::Args;
+
+const MIB: u64 = 1 << 20;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]).map_err(anyhow::Error::msg)?;
+    let steps = args.opt_usize("steps", 40).map_err(anyhow::Error::msg)? as u32;
+
+    // Table 2-style grid: batch {4, 8} x lr {0.08, 0.04, 0.01}
+    let mut orchestra = ModelOrchestrator::new("artifacts");
+    let mut names = Vec::new();
+    for (bi, config) in ["tiny-lm-b4", "tiny-lm-b8"].into_iter().enumerate() {
+        for (li, lr) in [0.08f32, 0.04, 0.01].into_iter().enumerate() {
+            let name = format!("{config}-lr{lr}");
+            names.push(name.clone());
+            orchestra.add_task(RealModelSpec {
+                name,
+                config: config.into(),
+                lr,
+                opt: OptKind::Momentum { beta: 0.9 },
+                epochs: 1,
+                minibatches_per_epoch: steps,
+                seed: (bi * 3 + li) as u64 + 7,
+                inference: false,
+            });
+        }
+    }
+
+    let cluster = Cluster::uniform(2, 1536 * 1024, 8192 * MIB);
+    println!("training {} models for {steps} steps each ...", names.len());
+    let t0 = std::time::Instant::now();
+    let report = orchestra.train_models(&cluster)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "\nwallclock {wall:.0}s | virtual makespan {:.1}s | {} shard units | util {:.1}%",
+        report.run.makespan,
+        report.run.units_executed,
+        100.0 * report.run.utilization
+    );
+    println!(
+        "spill traffic: {} promoted / {} demoted\n",
+        hydra::util::fmt_bytes(report.run.promoted_bytes),
+        hydra::util::fmt_bytes(report.run.demoted_bytes)
+    );
+
+    println!(
+        "{:<22} {:>9} {:>9} {:>9} {:>9}",
+        "model", "loss@1", "loss@25%", "loss@50%", "final"
+    );
+    let mut best: Option<(usize, f32)> = None;
+    for (i, losses) in report.losses.iter().enumerate() {
+        let at = |f: f64| losses[((losses.len() - 1) as f64 * f) as usize].1;
+        let last = losses.last().unwrap().1;
+        println!(
+            "{:<22} {:>9.4} {:>9.4} {:>9.4} {:>9.4}",
+            names[i],
+            losses[0].1,
+            at(0.25),
+            at(0.5),
+            last
+        );
+        if best.map(|(_, b)| last < b).unwrap_or(true) {
+            best = Some((i, last));
+        }
+    }
+    let (wi, wl) = best.unwrap();
+    println!("\nselected model: {} (final loss {wl:.4})", names[wi]);
+
+    // e2e validation: the mean final loss must be meaningfully below the
+    // random-prediction baseline ln(256) = 5.545
+    let mean_final: f32 = report
+        .losses
+        .iter()
+        .map(|l| l.last().unwrap().1)
+        .sum::<f32>()
+        / report.losses.len() as f32;
+    println!("mean final loss {mean_final:.4} (random baseline 5.545)");
+    assert!(mean_final < 4.5, "training failed to learn");
+    println!("model_selection OK");
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT pipeline: lower every shard function of every registered config to
+HLO *text* and emit artifacts/manifest.json for the Rust runtime.
+
+Interchange format is HLO text, NOT ``lowered.compiler_ir().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Python runs exactly once, at build time (`make artifacts`); the Rust binary
+is self-contained afterwards.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--configs a,b | --all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import DEFAULT_SET, REGISTRY, ModelConfig
+from .kernels.flash_attention import vmem_footprint_bytes as attn_vmem_bytes
+from .kernels.fused_ffn import vmem_footprint_bytes as ffn_vmem_bytes
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_str(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dt).name]
+
+
+def _io_entry(name, shape, dtype=F32):
+    return dict(name=name, shape=list(shape), dtype=_dtype_str(dtype))
+
+
+def _data_spec(cfg: ModelConfig):
+    """(shape, dtype) of the embed shard's data input."""
+    if cfg.kind == "lm":
+        return (cfg.batch, cfg.seq), I32
+    return (cfg.batch, cfg.seq, cfg.patch_dim), F32
+
+
+def _targets_spec(cfg: ModelConfig):
+    if cfg.kind == "lm":
+        return (cfg.batch, cfg.seq), I32
+    return (cfg.batch,), I32
+
+
+def shard_entry_points(cfg: ModelConfig):
+    """Yield (exe_name, flat_fn, example_args, input_io, output_io).
+
+    Flat functions take/return positional arrays only — the ABI with Rust.
+    Convention: parameters first, then data inputs, then cotangents.
+    """
+    specs = model.param_specs(cfg)
+    h_shape = (cfg.batch, cfg.seq, cfg.d_model)
+    data_shape, data_dt = _data_spec(cfg)
+    tgt_shape, tgt_dt = _targets_spec(cfg)
+
+    e_specs = specs["embed"]
+    b_specs = specs["block"]
+    h_specs = specs["head"]
+    ne, nb, nh = len(e_specs), len(b_specs), len(h_specs)
+
+    def pio(pspecs):
+        return [_io_entry(p["name"], p["shape"]) for p in pspecs]
+
+    def gio(pspecs):
+        return [_io_entry("d_" + p["name"], p["shape"]) for p in pspecs]
+
+    # -- embed ------------------------------------------------------------
+    def embed_fwd_flat(*a):
+        return (model.embed_fwd(cfg, a[:ne], a[ne]),)
+
+    yield (
+        "embed_fwd", embed_fwd_flat,
+        [_spec(p["shape"]) for p in e_specs] + [_spec(data_shape, data_dt)],
+        pio(e_specs) + [_io_entry("data", data_shape, data_dt)],
+        [_io_entry("h", h_shape)],
+    )
+
+    def embed_bwd_flat(*a):
+        return tuple(model.embed_bwd(cfg, a[:ne], a[ne], a[ne + 1]))
+
+    yield (
+        "embed_bwd", embed_bwd_flat,
+        [_spec(p["shape"]) for p in e_specs]
+        + [_spec(data_shape, data_dt), _spec(h_shape)],
+        pio(e_specs) + [_io_entry("data", data_shape, data_dt),
+                        _io_entry("d_h", h_shape)],
+        gio(e_specs),
+    )
+
+    # -- block ------------------------------------------------------------
+    def block_fwd_flat(*a):
+        return (model.block_fwd(cfg, a[:nb], a[nb]),)
+
+    yield (
+        "block_fwd", block_fwd_flat,
+        [_spec(p["shape"]) for p in b_specs] + [_spec(h_shape)],
+        pio(b_specs) + [_io_entry("x", h_shape)],
+        [_io_entry("y", h_shape)],
+    )
+
+    # Reference-ops forward, used ONLY for interior recompute inside a bwd
+    # shard unit (EXPERIMENTS.md §Perf L2): numerically equal to block_fwd
+    # within kernel==ref tolerance, but free of interpret-mode while-loops.
+    def block_fwd_ref_flat(*a):
+        return (model.block_fwd(cfg, a[:nb], a[nb], use_pallas=False),)
+
+    yield (
+        "block_fwd_ref", block_fwd_ref_flat,
+        [_spec(p["shape"]) for p in b_specs] + [_spec(h_shape)],
+        pio(b_specs) + [_io_entry("x", h_shape)],
+        [_io_entry("y", h_shape)],
+    )
+
+    def block_bwd_flat(*a):
+        d_x, d_params = model.block_bwd(cfg, a[:nb], a[nb], a[nb + 1])
+        return (d_x,) + tuple(d_params)
+
+    yield (
+        "block_bwd", block_bwd_flat,
+        [_spec(p["shape"]) for p in b_specs]
+        + [_spec(h_shape), _spec(h_shape)],
+        pio(b_specs) + [_io_entry("x", h_shape), _io_entry("d_y", h_shape)],
+        [_io_entry("d_x", h_shape)] + gio(b_specs),
+    )
+
+    # -- head -------------------------------------------------------------
+    def head_fwd_flat(*a):
+        return (model.head_fwd(cfg, a[:nh], a[nh], a[nh + 1]),)
+
+    yield (
+        "head_fwd", head_fwd_flat,
+        [_spec(p["shape"]) for p in h_specs]
+        + [_spec(h_shape), _spec(tgt_shape, tgt_dt)],
+        pio(h_specs) + [_io_entry("x", h_shape),
+                        _io_entry("targets", tgt_shape, tgt_dt)],
+        [_io_entry("loss", ())],
+    )
+
+    def head_bwd_flat(*a):
+        loss, d_x, d_params = model.head_bwd(cfg, a[:nh], a[nh], a[nh + 1])
+        return (loss, d_x) + tuple(d_params)
+
+    yield (
+        "head_bwd", head_bwd_flat,
+        [_spec(p["shape"]) for p in h_specs]
+        + [_spec(h_shape), _spec(tgt_shape, tgt_dt)],
+        pio(h_specs) + [_io_entry("x", h_shape),
+                        _io_entry("targets", tgt_shape, tgt_dt)],
+        [_io_entry("loss", ()), _io_entry("d_x", h_shape)] + gio(h_specs),
+    )
+
+
+def compile_config(cfg: ModelConfig, out_dir: str) -> dict:
+    """Lower all shard entry points of one config; return manifest entry."""
+    executables = {}
+    for name, fn, args, in_io, out_io in shard_entry_points(cfg):
+        # keep_unused: gradients like d_tok_emb don't read tok_emb, but the
+        # Rust ABI passes every declared input — argument elision would make
+        # the compiled parameter list diverge from the manifest.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}.{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        executables[name] = dict(
+            file=fname,
+            inputs=in_io,
+            outputs=out_io,
+            sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+        )
+        print(f"  {cfg.name}.{name}: {len(text)} chars, "
+              f"{len(in_io)} in / {len(out_io)} out")
+
+    return dict(
+        config=cfg.to_dict(),
+        params=model.param_specs(cfg),
+        executables=executables,
+        kernel_vmem_bytes=dict(
+            flash_attention=attn_vmem_bytes(cfg.seq, cfg.head_dim),
+            fused_ffn=ffn_vmem_bytes(cfg.d_model, cfg.d_ff),
+        ),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_SET),
+                    help="comma-separated config names")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    names = sorted(REGISTRY) if args.all else args.configs.split(",")
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = dict(version=1, configs={})
+    for name in names:
+        cfg = REGISTRY[name]
+        print(f"lowering {name} ...")
+        manifest["configs"][name] = compile_config(cfg, args.out_dir)
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(names)} configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Model configuration registry shared by the L2 model, the AOT pipeline,
+and (via manifest.json) the Rust coordinator.
+
+Each named config fully determines the shapes of every shard executable, so
+one compiled artifact family serves every model instance (hyperparameter
+grid point, NAS candidate, ...) that shares the config. Learning rate,
+optimizer, epochs etc. are runtime-side knobs and never enter the HLO.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + batch geometry of one transformer family.
+
+    kind:
+      - "lm":  byte-level masked/causal-free LM. Inputs are i32 token ids
+               of shape (batch, seq); the head computes mean cross-entropy
+               against i32 targets of the same shape.
+      - "cls": ViT-style classifier. Inputs are f32 patch vectors of shape
+               (batch, seq, patch_dim); the head mean-pools and computes
+               cross-entropy against i32 labels of shape (batch,).
+    """
+
+    name: str
+    kind: str  # "lm" | "cls"
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    seq: int
+    batch: int
+    vocab: int = 256  # lm: vocabulary size; cls: number of classes
+    patch_dim: int = 0  # cls only: flattened patch vector length
+
+    def __post_init__(self):
+        assert self.kind in ("lm", "cls"), self.kind
+        assert self.d_model % self.n_heads == 0
+        if self.kind == "cls":
+            assert self.patch_dim > 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_param_arrays_block(self) -> int:
+        return 16  # see model.block_param_spec
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def _lm(name, d, h, layers, ff, seq, batch, vocab=256):
+    return ModelConfig(
+        name=name, kind="lm", d_model=d, n_heads=h, n_layers=layers,
+        d_ff=ff, seq=seq, batch=batch, vocab=vocab,
+    )
+
+
+def _cls(name, d, h, layers, ff, seq, batch, patch_dim, classes=10):
+    return ModelConfig(
+        name=name, kind="cls", d_model=d, n_heads=h, n_layers=layers,
+        d_ff=ff, seq=seq, batch=batch, vocab=classes, patch_dim=patch_dim,
+    )
+
+
+# The artifact family compiled by `make artifacts`. Names encode batch size
+# because batch geometry is baked into the HLO. The e2e examples use the
+# tiny/small/medium LM family (BERT-style encoder on a byte corpus) and the
+# cls family (ViT-style encoder on synthetic patch images), mirroring the
+# paper's two workloads at CPU-feasible scale (see DESIGN.md §1).
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        _lm("tiny-lm-b4", d=64, h=4, layers=4, ff=256, seq=32, batch=4),
+        _lm("tiny-lm-b8", d=64, h=4, layers=4, ff=256, seq=32, batch=8),
+        _lm("small-lm-b8", d=128, h=4, layers=6, ff=512, seq=64, batch=8),
+        _lm("medium-lm-b8", d=256, h=8, layers=8, ff=1024, seq=64, batch=8),
+        _lm("large-lm-b8", d=512, h=8, layers=12, ff=2048, seq=64, batch=8),
+        _cls("tiny-cls-b8", d=64, h=4, layers=4, ff=256, seq=16, batch=8, patch_dim=48),
+        _cls("small-cls-b8", d=128, h=4, layers=6, ff=512, seq=16, batch=8, patch_dim=48),
+    ]
+}
+
+# Subset compiled by default (`make artifacts`); `--all` compiles everything.
+DEFAULT_SET = [
+    "tiny-lm-b4",
+    "tiny-lm-b8",
+    "small-lm-b8",
+    "medium-lm-b8",
+    "tiny-cls-b8",
+    "small-cls-b8",
+]
+
+
+def get(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; known: {sorted(REGISTRY)}")

@@ -1,0 +1,47 @@
+"""L1 Pallas kernels for the transformer hot spots, with custom-VJP wiring.
+
+Forward passes run the Pallas kernels (interpret=True); backward passes are
+jax autodiff of the pure-jnp references in ref.py. Because pytest enforces
+kernel == reference to tight tolerances, the resulting gradients are the
+gradients of the executed computation. This also keeps the *_bwd shard HLOs
+free of the interpret-mode while-loops, which matters for CPU-PJRT runtime
+cost (see DESIGN.md §8 L2 notes).
+"""
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention
+from .fused_ffn import fused_ffn
+from .layernorm import layernorm
+
+
+def _make_custom_vjp(pallas_fn, ref_fn):
+    @jax.custom_vjp
+    def op(*args):
+        return pallas_fn(*args)
+
+    def fwd(*args):
+        return pallas_fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+#: Differentiable attention: Pallas forward, reference-autodiff backward.
+attention = _make_custom_vjp(flash_attention, ref.attention_ref)
+
+#: Differentiable fused FFN.
+ffn = _make_custom_vjp(fused_ffn, ref.ffn_ref)
+
+#: Differentiable LayerNorm.
+ln = _make_custom_vjp(layernorm, ref.layernorm_ref)
+
+__all__ = [
+    "attention", "ffn", "ln",
+    "flash_attention", "fused_ffn", "layernorm", "ref",
+]

@@ -1,0 +1,110 @@
+"""Flash-attention as a Pallas kernel (L1 hot spot, forward pass).
+
+TPU adaptation of the paper's GPU hot path (DESIGN.md §2): instead of CUDA
+threadblocks staging tiles through shared memory, the BlockSpecs express the
+HBM->VMEM schedule and the inner loop performs online-softmax accumulation
+over K/V tiles so the (S x S) score matrix never materialises. The inner
+`q_tile @ k_tile.T` contraction is shaped for the MXU (tile sizes are
+multiples of 8/16; f32 under interpret, bf16-ready layout).
+
+Runs under interpret=True only — the CPU PJRT client cannot execute Mosaic
+custom-calls. Real-TPU efficiency is estimated from the VMEM footprint in
+`vmem_footprint_bytes` (reported by aot.py into the manifest and DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile-size caps. Tiles adapt downward to divide the sequence
+# (fit_block); 32 keeps the second-minor dim MXU-friendly while halving the
+# grid count vs 16 — a ~1.9x interpret-mode fwd win recorded in
+# EXPERIMENTS.md §Perf, and on real TPU fewer/larger MXU issues per tile.
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+
+def fit_block(extent: int, cap: int) -> int:
+    """Largest power-of-two block <= cap that divides extent (>=1)."""
+    b = min(cap, extent)
+    while b > 1 and extent % b:
+        b //= 2
+    return max(b, 1)
+
+_NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, seq: int,
+                 scale: float):
+    """One (batch*head, q-tile) program: online softmax over K/V tiles."""
+    q = q_ref[0]  # (block_q, D) — resident in VMEM for the whole program
+    block_q, d = q.shape
+
+    def body(j, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.dslice(j * block_k, block_k), :]  # (block_k, D)
+        v = v_ref[0, pl.dslice(j * block_k, block_k), :]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, seq // block_k, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K) -> jnp.ndarray:
+    """Bidirectional attention over (B, S, D) with B = batch*heads.
+
+    Matches kernels.ref.attention_ref numerically (tested to ~1e-5).
+    """
+    b, s, d = q.shape
+    block_q = fit_block(s, block_q)
+    block_k = fit_block(s, block_k)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq {s} must be divisible by tiles ({block_q},{block_k})")
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, seq=s, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, s // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(seq: int, head_dim: int,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         bytes_per_el: int = 4) -> int:
+    """Estimated VMEM working set of one program instance.
+
+    q tile + full K + full V + accumulator/softmax state + output tile.
+    Used for the real-TPU feasibility estimate in the manifest (must stay
+    well under ~16 MiB VMEM).
+    """
+    block_q = fit_block(seq, block_q)
+    q_tile = block_q * head_dim
+    kv = 2 * seq * head_dim
+    acc = block_q * head_dim + 2 * block_q
+    out = block_q * head_dim
+    return (q_tile + kv + acc + out) * bytes_per_el

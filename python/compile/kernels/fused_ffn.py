@@ -1,0 +1,71 @@
+"""Fused transformer FFN (matmul -> GELU -> matmul) as a Pallas kernel.
+
+The (R, d_ff) intermediate activation — 4x the residual width — never leaves
+the kernel: each row tile computes GELU(x@w1+b1)@w2+b2 with the intermediate
+held in VMEM. On GPU this is the classic fused-epilogue trick; on TPU the
+BlockSpec row tiling is the analogue (DESIGN.md §2).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile cap; adapts downward to divide the row count. 128 rows amortise
+# the weight residency across 4x more output per grid step than 32
+# (EXPERIMENTS.md §Perf).
+DEFAULT_BLOCK_R = 128
+
+
+def fit_block(extent: int, cap: int) -> int:
+    """Largest power-of-two block <= cap that divides extent (>=1)."""
+    b = min(cap, extent)
+    while b > 1 and extent % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # (block_r, d_model)
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h + b1_ref[...], approximate=True)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (o + b2_ref[...]).astype(o_ref.dtype)
+
+
+def fused_ffn(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+              w2: jnp.ndarray, b2: jnp.ndarray,
+              *, block_r: int = DEFAULT_BLOCK_R) -> jnp.ndarray:
+    """x: (R, d_model) -> (R, d_model). Matches kernels.ref.ffn_ref."""
+    r, d = x.shape
+    d_ff = w1.shape[1]
+    block_r = fit_block(r, block_r)
+    if r % block_r:
+        raise ValueError(f"rows {r} must be divisible by block_r {block_r}")
+
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_ff), lambda i: (0, 0)),
+            pl.BlockSpec((d_ff,), lambda i: (0,)),
+            pl.BlockSpec((d_ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_footprint_bytes(d_model: int, d_ff: int,
+                         block_r: int = DEFAULT_BLOCK_R,
+                         bytes_per_el: int = 4) -> int:
+    """VMEM working set per program: x tile + both weights + intermediate."""
+    x_tile = block_r * d_model
+    weights = d_model * d_ff + d_ff * d_model + d_ff + d_model
+    inter = block_r * d_ff
+    out = block_r * d_model
+    return (x_tile + weights + inter + out) * bytes_per_el

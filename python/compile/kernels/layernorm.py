@@ -1,0 +1,47 @@
+"""Row-tiled LayerNorm as a Pallas kernel: mean/var/normalise in one pass
+over a VMEM-resident row tile (no separate reduction kernels)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_R = 256
+
+
+def fit_block(extent: int, cap: int) -> int:
+    """Largest power-of-two block <= cap that divides extent (>=1)."""
+    b = min(cap, extent)
+    while b > 1 and extent % b:
+        b //= 2
+    return max(b, 1)
+EPS = 1e-5
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]  # (block_r, d)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+              *, block_r: int = DEFAULT_BLOCK_R) -> jnp.ndarray:
+    """x: (R, d); gamma, beta: (d,). Matches kernels.ref.layernorm_ref."""
+    r, d = x.shape
+    block_r = fit_block(r, block_r)
+    if r % block_r:
+        raise ValueError(f"rows {r} must be divisible by block_r {block_r}")
+
+    return pl.pallas_call(
+        _ln_kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

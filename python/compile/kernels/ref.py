@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the single source of truth for numerics: the Pallas kernels must
+match them (pytest/hypothesis enforce allclose), and the backward passes of
+the L2 shard functions are defined as jax.vjp of *these* references (see
+kernels/__init__.py custom_vjp wiring), so gradients are exactly jax
+autodiff of the reference semantics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Bidirectional scaled dot-product attention.
+
+    q, k, v: (B, S, D) where B = batch * heads, D = head_dim.
+    Returns (B, S, D).
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    s = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def ffn_ref(x: jnp.ndarray, w1: jnp.ndarray, b1: jnp.ndarray,
+            w2: jnp.ndarray, b2: jnp.ndarray) -> jnp.ndarray:
+    """Feed-forward: GELU(x @ w1 + b1) @ w2 + b2.
+
+    x: (R, d_model); w1: (d_model, d_ff); w2: (d_ff, d_model).
+    """
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2
+
+
+def layernorm_ref(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    """Row-wise layer normalisation. x: (R, d); gamma, beta: (d,)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta

@@ -1,0 +1,244 @@
+"""L2: the transformer model as *shard functions* in JAX.
+
+A Hydra shard = a contiguous group of layers. The natural cut points of an
+encoder transformer are [embed][block]*n[head] (paper §2.1 "model shards"),
+so we expose exactly those three shard kinds, each as a pure function over
+flat parameter tuples plus data, in both forward and backward form. Every
+function here is AOT-lowered by aot.py into its own HLO artifact; all blocks
+of a config share one artifact because parameters are runtime arguments.
+
+Backward convention (paper §4.6): only shard-boundary activations are
+checkpointed by the coordinator; each *_bwd recomputes its interior. A bwd
+shard unit therefore takes (params, saved_input, cotangent) and returns
+(d_input, d_params...).
+
+Parameter layout is flat, ordered, and mirrored in param_specs() which
+aot.py serialises into manifest.json so the Rust side can allocate and
+initialise parameters without Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .configs import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Parameter specifications (order matters — it is the ABI with Rust)
+# ---------------------------------------------------------------------------
+
+
+def embed_param_spec(cfg: ModelConfig) -> list[dict]:
+    if cfg.kind == "lm":
+        return [
+            dict(name="tok_emb", shape=[cfg.vocab, cfg.d_model],
+                 init=dict(kind="normal", std=0.02)),
+            dict(name="pos_emb", shape=[cfg.seq, cfg.d_model],
+                 init=dict(kind="normal", std=0.02)),
+        ]
+    return [
+        dict(name="w_patch", shape=[cfg.patch_dim, cfg.d_model],
+             init=dict(kind="normal", std=0.02)),
+        dict(name="b_patch", shape=[cfg.d_model], init=dict(kind="zeros")),
+        dict(name="pos_emb", shape=[cfg.seq, cfg.d_model],
+             init=dict(kind="normal", std=0.02)),
+    ]
+
+
+def block_param_spec(cfg: ModelConfig) -> list[dict]:
+    d, ff = cfg.d_model, cfg.d_ff
+    n = dict(kind="normal", std=0.02)
+    z = dict(kind="zeros")
+    o = dict(kind="ones")
+    return [
+        dict(name="ln1_g", shape=[d], init=o),
+        dict(name="ln1_b", shape=[d], init=z),
+        dict(name="wq", shape=[d, d], init=n),
+        dict(name="bq", shape=[d], init=z),
+        dict(name="wk", shape=[d, d], init=n),
+        dict(name="bk", shape=[d], init=z),
+        dict(name="wv", shape=[d, d], init=n),
+        dict(name="bv", shape=[d], init=z),
+        dict(name="wo", shape=[d, d], init=n),
+        dict(name="bo", shape=[d], init=z),
+        dict(name="ln2_g", shape=[d], init=o),
+        dict(name="ln2_b", shape=[d], init=z),
+        dict(name="w1", shape=[d, ff], init=n),
+        dict(name="b1", shape=[ff], init=z),
+        dict(name="w2", shape=[ff, d], init=n),
+        dict(name="b2", shape=[d], init=z),
+    ]
+
+
+def head_param_spec(cfg: ModelConfig) -> list[dict]:
+    return [
+        dict(name="lnf_g", shape=[cfg.d_model], init=dict(kind="ones")),
+        dict(name="lnf_b", shape=[cfg.d_model], init=dict(kind="zeros")),
+        dict(name="w_out", shape=[cfg.d_model, cfg.vocab],
+             init=dict(kind="normal", std=0.02)),
+        dict(name="b_out", shape=[cfg.vocab], init=dict(kind="zeros")),
+    ]
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, list[dict]]:
+    return {
+        "embed": embed_param_spec(cfg),
+        "block": block_param_spec(cfg),
+        "head": head_param_spec(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward shard functions
+# ---------------------------------------------------------------------------
+
+
+def _ops(use_pallas: bool):
+    """Select (layernorm, attention, ffn) implementations.
+
+    Forward shards lower with the Pallas kernels (the L1 hot path lives in
+    the fwd HLO). Backward shards recompute their interior with the pure-jnp
+    references: gradients are identical up to kernel==ref tolerance (enforced
+    by pytest) and the bwd HLO stays free of interpret-mode while-loop
+    emulation — an L2 optimization recorded in EXPERIMENTS.md §Perf.
+    """
+    if use_pallas:
+        return kernels.ln, kernels.attention, kernels.ffn
+    return (kernels.ref.layernorm_ref, kernels.ref.attention_ref,
+            kernels.ref.ffn_ref)
+
+
+def embed_fwd(cfg: ModelConfig, params: tuple, data) -> jnp.ndarray:
+    """LM: data = i32 tokens (batch, seq). CLS: data = f32 patches
+    (batch, seq, patch_dim). Returns hidden states (batch, seq, d)."""
+    if cfg.kind == "lm":
+        tok_emb, pos_emb = params
+        return tok_emb[data] + pos_emb[None, :, :]
+    w_patch, b_patch, pos_emb = params
+    return data @ w_patch + b_patch + pos_emb[None, :, :]
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+    # (b, s, h, hd) -> (b, h, s, hd) -> (b*h, s, hd)
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3).reshape(
+        b * n_heads, s, hd)
+
+
+def _merge_heads(x, batch, n_heads):
+    bh, s, hd = x.shape
+    return x.reshape(batch, n_heads, s, hd).transpose(0, 2, 1, 3).reshape(
+        batch, s, n_heads * hd)
+
+
+def block_fwd(cfg: ModelConfig, params: tuple, x: jnp.ndarray,
+              use_pallas: bool = True) -> jnp.ndarray:
+    """Pre-LN encoder block: x + Attn(LN(x)); then + FFN(LN(.))."""
+    ln, attention, ffn = _ops(use_pallas)
+    (ln1_g, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_g, ln2_b, w1, b1, w2, b2) = params
+    b, s, d = x.shape
+
+    h = ln(x.reshape(b * s, d), ln1_g, ln1_b).reshape(b, s, d)
+    q = _split_heads(h @ wq + bq, cfg.n_heads)
+    k = _split_heads(h @ wk + bk, cfg.n_heads)
+    v = _split_heads(h @ wv + bv, cfg.n_heads)
+    a = _merge_heads(attention(q, k, v), b, cfg.n_heads)
+    x = x + a @ wo + bo
+
+    h2 = ln(x.reshape(b * s, d), ln2_g, ln2_b)
+    f = ffn(h2, w1, b1, w2, b2).reshape(b, s, d)
+    return x + f
+
+
+def head_fwd(cfg: ModelConfig, params: tuple, x: jnp.ndarray,
+             targets, use_pallas: bool = True) -> jnp.ndarray:
+    """Final LN + projection + mean cross-entropy loss (scalar).
+
+    LM: targets i32 (batch, seq), loss over every position.
+    CLS: targets i32 (batch,), loss over mean-pooled representation.
+    """
+    ln, _, _ = _ops(use_pallas)
+    lnf_g, lnf_b, w_out, b_out = params
+    b, s, d = x.shape
+    h = ln(x.reshape(b * s, d), lnf_g, lnf_b).reshape(b, s, d)
+    if cfg.kind == "cls":
+        h = jnp.mean(h, axis=1)  # (b, d)
+        logits = h @ w_out + b_out  # (b, classes)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(
+            logp, targets[:, None], axis=-1))
+    logits = h @ w_out + b_out  # (b, s, vocab)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(
+        logp, targets[..., None], axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Backward shard functions (recompute-inside; see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def embed_bwd(cfg: ModelConfig, params: tuple, data, d_h):
+    """Returns d_params (no d_input: embeddings are the first shard)."""
+    _, vjp = jax.vjp(lambda p: embed_fwd(cfg, p, data), params)
+    (d_params,) = vjp(d_h)
+    return d_params
+
+
+def block_bwd(cfg: ModelConfig, params: tuple, x, d_y):
+    """Returns (d_x, d_params)."""
+    _, vjp = jax.vjp(
+        lambda p, xx: block_fwd(cfg, p, xx, use_pallas=False), params, x)
+    d_params, d_x = vjp(d_y)
+    return d_x, d_params
+
+
+def head_bwd(cfg: ModelConfig, params: tuple, x, targets):
+    """Returns (loss, d_x, d_params). The head's cotangent is 1.0 (loss)."""
+    loss, vjp = jax.vjp(
+        lambda p, xx: head_fwd(cfg, p, xx, targets, use_pallas=False),
+        params, x)
+    d_params, d_x = vjp(jnp.ones_like(loss))
+    return loss, d_x, d_params
+
+
+# ---------------------------------------------------------------------------
+# Monolithic reference (test-only): whole model fwd, for composition checks
+# ---------------------------------------------------------------------------
+
+
+def full_fwd(cfg: ModelConfig, embed_params, block_params_list, head_params,
+             data, targets):
+    h = embed_fwd(cfg, embed_params, data)
+    for bp in block_params_list:
+        h = block_fwd(cfg, bp, h)
+    return head_fwd(cfg, head_params, h, targets)
+
+
+def init_params(cfg: ModelConfig, key) -> tuple:
+    """Test-only JAX-side init (Rust has its own seeded init per manifest)."""
+    def mk(spec, k):
+        shape = tuple(spec["shape"])
+        kind = spec["init"]["kind"]
+        if kind == "normal":
+            return jax.random.normal(k, shape, jnp.float32) * spec["init"]["std"]
+        if kind == "zeros":
+            return jnp.zeros(shape, jnp.float32)
+        return jnp.ones(shape, jnp.float32)
+
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, 3)
+    embed = tuple(mk(s, k) for s, k in zip(
+        specs["embed"], jax.random.split(keys[0], len(specs["embed"]))))
+    blocks = []
+    bkeys = jax.random.split(keys[1], cfg.n_layers)
+    for bk in bkeys:
+        blocks.append(tuple(mk(s, k) for s, k in zip(
+            specs["block"], jax.random.split(bk, len(specs["block"])))))
+    head = tuple(mk(s, k) for s, k in zip(
+        specs["head"], jax.random.split(keys[2], len(specs["head"]))))
+    return embed, blocks, head

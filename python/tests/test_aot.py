@@ -1,0 +1,109 @@
+"""AOT pipeline tests: lowering determinism, manifest shape agreement, and
+HLO-text invariants the Rust loader depends on."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.configs import get
+
+TINY = get("tiny-lm-b4")
+
+
+@pytest.fixture(scope="module")
+def compiled(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    entry = aot.compile_config(TINY, str(out))
+    return out, entry
+
+
+def test_all_entry_points_emitted(compiled):
+    out, entry = compiled
+    assert set(entry["executables"]) == {
+        "embed_fwd", "embed_bwd", "block_fwd", "block_fwd_ref", "block_bwd",
+        "head_fwd", "head_bwd",
+    }
+    for exe in entry["executables"].values():
+        path = os.path.join(out, exe["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        assert text.startswith("HloModule"), text[:40]
+        assert "ENTRY" in text
+
+
+def test_manifest_io_matches_param_specs(compiled):
+    _, entry = compiled
+    specs = model.param_specs(TINY)
+    exes = entry["executables"]
+
+    # block_fwd: 16 params + x -> y
+    bf = exes["block_fwd"]
+    assert len(bf["inputs"]) == len(specs["block"]) + 1
+    assert [i["name"] for i in bf["inputs"][:-1]] == [
+        p["name"] for p in specs["block"]]
+    assert bf["outputs"][0]["shape"] == [TINY.batch, TINY.seq, TINY.d_model]
+
+    # block_bwd: outputs d_x + one grad per param, shapes match params
+    bb = exes["block_bwd"]
+    assert len(bb["outputs"]) == 1 + len(specs["block"])
+    for g, p in zip(bb["outputs"][1:], specs["block"]):
+        assert g["shape"] == p["shape"], (g, p)
+
+    # head_bwd: loss scalar + d_x + head grads
+    hb = exes["head_bwd"]
+    assert hb["outputs"][0]["shape"] == []
+    assert hb["outputs"][1]["shape"] == [TINY.batch, TINY.seq, TINY.d_model]
+
+    # embed_fwd data input is i32 tokens for lm
+    ef = exes["embed_fwd"]
+    assert ef["inputs"][-1]["dtype"] == "i32"
+
+
+def test_lowering_is_deterministic(compiled, tmp_path):
+    _, entry = compiled
+    entry2 = aot.compile_config(TINY, str(tmp_path))
+    for name in entry["executables"]:
+        assert (entry["executables"][name]["sha256"]
+                == entry2["executables"][name]["sha256"]), name
+
+
+def test_fwd_hlo_contains_pallas_bwd_does_not(compiled):
+    """Forward shards embed the interpret-mode Pallas lowering (while-loops);
+    backward and recompute shards must stay clean XLA (DESIGN.md §8 L2)."""
+    out, entry = compiled
+    fwd = open(os.path.join(out, entry["executables"]["block_fwd"]["file"])).read()
+    bwd = open(os.path.join(out, entry["executables"]["block_bwd"]["file"])).read()
+    ref = open(os.path.join(out, entry["executables"]["block_fwd_ref"]["file"])).read()
+    assert "while" in fwd  # interpret-mode pallas emits while loops
+    assert "while" not in bwd
+    assert "while" not in ref
+
+
+def test_block_fwd_ref_matches_pallas_fwd_io(compiled):
+    """The recompute executable is ABI-identical to block_fwd."""
+    _, entry = compiled
+    a = entry["executables"]["block_fwd"]
+    b = entry["executables"]["block_fwd_ref"]
+    assert a["inputs"] == b["inputs"]
+    assert a["outputs"] == b["outputs"]
+
+
+def test_kernel_vmem_estimates_present(compiled):
+    _, entry = compiled
+    vm = entry["kernel_vmem_bytes"]
+    assert vm["flash_attention"] > 0
+    assert vm["fused_ffn"] > 0
+    # must fit the 16 MiB VMEM class at compiled geometry
+    assert vm["flash_attention"] < 16 * 2**20
+    assert vm["fused_ffn"] < 16 * 2**20
+
+
+def test_manifest_json_round_trips(compiled, tmp_path):
+    _, entry = compiled
+    p = tmp_path / "m.json"
+    p.write_text(json.dumps({"version": 1, "configs": {TINY.name: entry}}))
+    loaded = json.loads(p.read_text())
+    assert loaded["configs"][TINY.name]["config"]["d_model"] == TINY.d_model

@@ -1,0 +1,219 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the CORE correctness signal for the compiled artifacts: the fwd HLOs
+embed the Pallas lowering, the bwd HLOs embed autodiff of the references, so
+kernel == reference is what makes the two layers consistent.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention, vmem_footprint_bytes
+from compile.kernels.fused_ffn import fused_ffn
+from compile.kernels.layernorm import layernorm
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d", [
+    (1, 16, 8), (4, 32, 16), (8, 32, 16), (2, 64, 32), (16, 16, 4),
+])
+def test_attention_matches_ref(b, s, d):
+    kq, kk, kv = _keys(3)
+    q, k, v = _rand(kq, b, s, d), _rand(kk, b, s, d), _rand(kv, b, s, d)
+    np.testing.assert_allclose(
+        flash_attention(q, k, v), ref.attention_ref(q, k, v),
+        atol=ATOL, rtol=RTOL)
+
+
+def test_attention_scale_invariance_of_softmax_shift():
+    # Online softmax must be numerically stable for large logits.
+    kq, kk, kv = _keys(3, seed=7)
+    q = _rand(kq, 2, 16, 8) * 30.0
+    k = _rand(kk, 2, 16, 8) * 30.0
+    v = _rand(kv, 2, 16, 8)
+    out = flash_attention(q, k, v)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_attention_identity_value_recovery():
+    # With one-hot V rows, output rows are convex combinations: rows sum to 1.
+    kq, kk = _keys(2, seed=3)
+    b, s, d = 2, 16, 16
+    q, k = _rand(kq, b, s, d), _rand(kk, b, s, d)
+    v = jnp.tile(jnp.eye(s, d)[None], (b, 1, 1))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out).sum(-1), 1.0, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    s=st.sampled_from([8, 16, 32, 48, 64]),
+    d=st.sampled_from([4, 8, 16, 24, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_hypothesis_sweep(b, s, d, seed):
+    kq, kk, kv = _keys(3, seed=seed)
+    q, k, v = _rand(kq, b, s, d), _rand(kk, b, s, d), _rand(kv, b, s, d)
+    np.testing.assert_allclose(
+        flash_attention(q, k, v), ref.attention_ref(q, k, v),
+        atol=5e-5, rtol=5e-5)
+
+
+def test_attention_adapts_tiles_to_awkward_seq():
+    # fit_block shrinks the tile until it divides the sequence, so
+    # non-power-of-two lengths still run and still match the oracle
+    kq, kk, kv = _keys(3, seed=5)
+    for s in [24, 40, 23]:
+        q, k, v = _rand(kq, 2, s, 8), _rand(kk, 2, s, 8), _rand(kv, 2, s, 8)
+        np.testing.assert_allclose(
+            flash_attention(q, k, v), ref.attention_ref(q, k, v),
+            atol=5e-5, rtol=5e-5)
+
+
+def test_attention_vmem_under_tpu_budget():
+    # Paper-scale geometry must fit the ~16 MiB VMEM class (DESIGN.md §2).
+    assert vmem_footprint_bytes(seq=2048, head_dim=64) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# fused ffn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,d,ff", [
+    (32, 16, 64), (64, 64, 256), (256, 64, 256), (128, 32, 96),
+])
+def test_ffn_matches_ref(r, d, ff):
+    kx, k1, k2 = _keys(3, seed=1)
+    x = _rand(kx, r, d)
+    w1, b1 = _rand(k1, d, ff) * 0.1, jnp.zeros(ff)
+    w2, b2 = _rand(k2, ff, d) * 0.1, jnp.full((d,), 0.5)
+    np.testing.assert_allclose(
+        fused_ffn(x, w1, b1, w2, b2), ref.ffn_ref(x, w1, b1, w2, b2),
+        atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.sampled_from([8, 16, 32, 64, 96]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    ff=st.sampled_from([16, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_hypothesis_sweep(r, d, ff, seed):
+    kx, k1, k2, kb = _keys(4, seed=seed)
+    x = _rand(kx, r, d)
+    w1, b1 = _rand(k1, d, ff) * 0.2, _rand(kb, ff) * 0.1
+    w2, b2 = _rand(k2, ff, d) * 0.2, jnp.zeros(d)
+    np.testing.assert_allclose(
+        fused_ffn(x, w1, b1, w2, b2), ref.ffn_ref(x, w1, b1, w2, b2),
+        atol=5e-5, rtol=5e-5)
+
+
+def test_ffn_zero_weights_yield_bias():
+    x = _rand(_keys(1)[0], 32, 16)
+    w1, b1 = jnp.zeros((16, 32)), jnp.zeros(32)
+    w2, b2 = jnp.zeros((32, 16)), jnp.full((16,), 3.0)
+    np.testing.assert_allclose(fused_ffn(x, w1, b1, w2, b2), 3.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("r,d", [(16, 8), (64, 64), (256, 64), (128, 256)])
+def test_layernorm_matches_ref(r, d):
+    kx, kg, kb = _keys(3, seed=2)
+    x = _rand(kx, r, d) * 3.0
+    g, b = 1.0 + _rand(kg, d) * 0.1, _rand(kb, d) * 0.1
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), atol=ATOL, rtol=RTOL)
+
+
+def test_layernorm_output_statistics():
+    x = _rand(_keys(1, seed=9)[0], 64, 128) * 5 + 2
+    out = np.asarray(layernorm(x, jnp.ones(128), jnp.zeros(128)))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    r=st.sampled_from([8, 16, 64, 128]),
+    d=st.sampled_from([4, 8, 32, 64, 128]),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_hypothesis_sweep(r, d, scale, seed):
+    kx, kg, kb = _keys(3, seed=seed)
+    x = _rand(kx, r, d) * scale
+    g, b = _rand(kg, d), _rand(kb, d)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), atol=5e-5, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# custom-vjp wrappers: gradients == autodiff of reference
+# ---------------------------------------------------------------------------
+
+def test_attention_grad_matches_ref_grad():
+    kq, kk, kv = _keys(3, seed=11)
+    q, k, v = _rand(kq, 2, 16, 8), _rand(kk, 2, 16, 8), _rand(kv, 2, 16, 8)
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(kernels.attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_ffn_grad_matches_ref_grad():
+    kx, k1, k2 = _keys(3, seed=12)
+    x = _rand(kx, 16, 8)
+    w1, b1 = _rand(k1, 8, 32) * 0.3, jnp.zeros(32)
+    w2, b2 = _rand(k2, 32, 8) * 0.3, jnp.zeros(8)
+
+    gk = jax.grad(lambda *a: jnp.sum(kernels.ffn(*a)), argnums=(0, 1, 3))(
+        x, w1, b1, w2, b2)
+    gr = jax.grad(lambda *a: jnp.sum(ref.ffn_ref(*a)), argnums=(0, 1, 3))(
+        x, w1, b1, w2, b2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_ln_grad_matches_ref_grad():
+    kx, kg = _keys(2, seed=13)
+    x, g = _rand(kx, 16, 32), 1.0 + _rand(kg, 32) * 0.2
+    b = jnp.zeros(32)
+    gk = jax.grad(lambda *a: jnp.sum(jnp.sin(kernels.ln(*a))),
+                  argnums=(0, 1, 2))(x, g, b)
+    gr = jax.grad(lambda *a: jnp.sum(jnp.sin(ref.layernorm_ref(*a))),
+                  argnums=(0, 1, 2))(x, g, b)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figure 10 (impact of model scale) plus Figure 6's
+//! illustrative Gantt and Table 2's workload definitions.
+
+use hydra::figures;
+use hydra::util::bench::run_once;
+
+fn main() {
+    let (t2, _) = run_once("table2 (workload definitions)", || figures::table2().unwrap());
+    t2.print();
+    t2.write_csv("results").unwrap();
+
+    let (f6, _) = run_once("fig6 (illustrative SHARP gantt)", || figures::fig6().unwrap());
+    f6.print();
+    f6.write_csv("results").unwrap();
+
+    let (f10, _) = run_once("fig10 (0.5B/1B/2B scales x 3 systems)", || {
+        figures::fig10().unwrap()
+    });
+    f10.print();
+    f10.write_csv("results").unwrap();
+}

@@ -1,0 +1,43 @@
+//! Bench: regenerate Figure 7 (scheduler comparison) and measure the
+//! Sharded-LRTF decision path — the paper reports "tens of milliseconds"
+//! per scheduling decision; we target sub-microsecond (§Perf).
+
+use std::time::Duration;
+
+use hydra::coordinator::sched::{self, PickContext, Scheduler};
+use hydra::coordinator::task::ModelSnapshot;
+use hydra::coordinator::unit::Phase;
+use hydra::figures;
+use hydra::util::bench::{bench, run_once};
+use hydra::util::rng::Rng;
+
+fn main() {
+    println!("--- fig7: scheduler comparison ---");
+    let (fig, _) = run_once("fig7 (bnb budget 3s/instance)", || {
+        figures::fig7(Duration::from_secs(3)).unwrap()
+    });
+    fig.print();
+    fig.write_csv("results").unwrap();
+
+    println!("--- scheduler decision latency (paper §4.7.3: ~10s of ms) ---");
+    for n in [8usize, 100, 1000, 10_000] {
+        let snaps: Vec<ModelSnapshot> = (0..n)
+            .map(|i| ModelSnapshot {
+                id: i,
+                remaining_time: (i % 97) as f64,
+                remaining_units: 1000,
+                front_cost: 1.0,
+                front_shard: 0,
+                front_phase: Phase::Fwd,
+            })
+            .collect();
+        let mut lrtf = sched::by_name("sharded-lrtf").unwrap();
+        let mut rng = Rng::new(0);
+        let ctx = PickContext { now: 0.0, device: 0, resident: None };
+        bench(&format!("sharded-lrtf pick, {n} eligible models"), 7, 1000, || {
+            for _ in 0..1000 {
+                std::hint::black_box(lrtf.pick(&snaps, ctx, &mut rng));
+            }
+        });
+    }
+}

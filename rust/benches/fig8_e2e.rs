@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 8 (end-to-end workload comparison) and time the
+//! full Hydra engine run at paper scale.
+
+use hydra::figures;
+use hydra::util::bench::run_once;
+
+fn main() {
+    let (fig, _) = run_once("fig8 (both Table 2 workloads, 6 systems)", || {
+        figures::fig8().unwrap()
+    });
+    fig.print();
+    fig.write_csv("results").unwrap();
+}

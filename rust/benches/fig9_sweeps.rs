@@ -1,0 +1,14 @@
+//! Bench: regenerate Figures 9A (models sweep) and 9B (GPU sweep).
+
+use hydra::figures;
+use hydra::util::bench::run_once;
+
+fn main() {
+    let (a, _) = run_once("fig9a (1..16 models, 8 GPUs)", || figures::fig9a().unwrap());
+    a.print();
+    a.write_csv("results").unwrap();
+
+    let (b, _) = run_once("fig9b (4 models, 1..8 GPUs)", || figures::fig9b().unwrap());
+    b.print();
+    b.write_csv("results").unwrap();
+}

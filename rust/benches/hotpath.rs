@@ -1,0 +1,111 @@
+//! Hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md §Perf):
+//! engine dispatch throughput, scheduler latency, memory-ledger ops,
+//! manifest JSON parsing, BnB node rate, PRNG throughput.
+
+use hydra::coordinator::memory::{DeviceLedger, Residency};
+use hydra::coordinator::sched::{self, bnb};
+use hydra::coordinator::sharp::{EngineOptions, SharpEngine, TransferModel};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::exec::SimBackend;
+use hydra::util::bench::bench;
+use hydra::util::json::Json;
+use hydra::util::rng::Rng;
+
+const GIB: u64 = 1 << 30;
+
+fn tasks(n: usize, shards: usize, mbs: u32) -> Vec<ModelTask> {
+    (0..n)
+        .map(|i| {
+            let sd: Vec<ShardDesc> = (0..shards)
+                .map(|_| ShardDesc {
+                    param_bytes: 64 << 20,
+                    fwd_transfer_bytes: 32 << 20,
+                    bwd_transfer_bytes: 32 << 20,
+                    activation_bytes: 4 << 20,
+                    fwd_cost: 0.01,
+                    bwd_cost: 0.02,
+                    n_layers: 1,
+                })
+                .collect();
+            ModelTask::new(i, format!("m{i}"), "bench", sd, mbs, 1, 1e-3)
+        })
+        .collect()
+}
+
+fn main() {
+    // --- engine dispatch throughput -------------------------------------
+    // 16 models x 4 shards x 64 mbs = 8192 units per run
+    let units = 16 * 4 * 2 * 64;
+    bench(
+        &format!("engine: schedule+retire {units} shard units"),
+        5,
+        units,
+        || {
+            let mut backend = SimBackend::deterministic();
+            let opts = EngineOptions {
+                transfer: TransferModel::pcie_gen3(),
+                record_intervals: false,
+                ..Default::default()
+            };
+            let mut engine = SharpEngine::new(
+                tasks(16, 4, 64),
+                &vec![GIB; 8],
+                64 * GIB,
+                sched::by_name("sharded-lrtf").unwrap(),
+                &mut backend,
+                opts,
+            )
+            .unwrap();
+            std::hint::black_box(engine.run().unwrap());
+        },
+    );
+
+    // --- memory ledger ---------------------------------------------------
+    bench("ledger: alloc+release cycle", 7, 100_000, || {
+        let mut l = DeviceLedger::new(0, GIB);
+        for i in 0..100_000u64 {
+            let r = Residency::ShardParams { model: (i % 64) as usize, shard: 0 };
+            l.alloc(r, 1024).unwrap();
+            l.release(&r);
+        }
+        std::hint::black_box(l.used());
+    });
+
+    // --- manifest JSON parse ----------------------------------------------
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let bytes = text.len() as u64;
+        bench(
+            &format!("json: parse manifest ({} KiB)", bytes / 1024),
+            9,
+            1,
+            || {
+                std::hint::black_box(Json::parse(&text).unwrap());
+            },
+        );
+    } else {
+        println!("(artifacts/manifest.json missing; run `make artifacts` for the json bench)");
+    }
+
+    // --- BnB solver node rate ---------------------------------------------
+    let problem = bnb::Problem {
+        units: (0..6).map(|_| vec![1.0; 10]).collect(),
+        devices: 3,
+    };
+    bench("bnb: 6x10-unit instance (bounded search)", 3, 1, || {
+        std::hint::black_box(bnb::solve(
+            &problem,
+            std::time::Duration::from_millis(200),
+            None,
+        ));
+    });
+
+    // --- PRNG ----------------------------------------------------------------
+    bench("rng: next_u64 x 1M", 7, 1_000_000, || {
+        let mut r = Rng::new(1);
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc ^= r.next_u64();
+        }
+        std::hint::black_box(acc);
+    });
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Table 3 (ablation: SHARP / double-buffering, plus the
+//! paper-design full-state-spilling fidelity rows).
+
+use hydra::figures;
+use hydra::util::bench::run_once;
+
+fn main() {
+    let (fig, _) = run_once("table3 (5 ablation levels, 16x1B models)", || {
+        figures::table3().unwrap()
+    });
+    fig.print();
+    fig.write_csv("results").unwrap();
+}

@@ -1,0 +1,353 @@
+//! Baseline execution paradigms (§2.2, §5): from-scratch schedule
+//! calculators for the systems Hydra is compared against in Figures 8–10.
+//!
+//! Each paradigm is an analytical schedule generator over the *same*
+//! partitioned ModelTasks and device pool the SHARP engine uses, per the
+//! substitution table in DESIGN.md §1: Fig 8 compares execution paradigms,
+//! which are fully determined by their schedules over shard units.
+
+use crate::coordinator::sharp::TransferModel;
+use crate::coordinator::task::ModelTask;
+use crate::error::{HydraError, Result};
+
+/// NVLink-class device-to-device link (the paper's testbed interconnect).
+pub fn nvlink() -> TransferModel {
+    TransferModel { bandwidth_bytes_per_sec: 50.0e9, latency_secs: 5e-6 }
+}
+
+/// Outcome of running a workload under one paradigm.
+#[derive(Debug, Clone)]
+pub struct ParadigmReport {
+    pub name: &'static str,
+    pub makespan: f64,
+    pub utilization: f64,
+}
+
+fn model_compute_secs(t: &ModelTask) -> f64 {
+    // remaining_time at construction == total compute
+    t.remaining_time()
+}
+
+fn total_compute(tasks: &[ModelTask]) -> f64 {
+    tasks.iter().map(model_compute_secs).sum()
+}
+
+fn unit_sequence_cost(t: &ModelTask) -> Vec<f64> {
+    (0..t.total_units())
+        .map(|j| {
+            let u = t.geometry.unit_at(t.id, j);
+            t.shard(u.shard).cost(u.phase)
+        })
+        .collect()
+}
+
+/// Devices needed to hold one model entirely resident (classic MP layout).
+fn devices_needed(t: &ModelTask, device_mem: u64) -> usize {
+    let shards = &t.shards;
+    // first-fit round-robin: shard i -> device i mod g; find min g where
+    // every device's share fits
+    'outer: for g in 1..=shards.len() {
+        let mut loads = vec![0u64; g];
+        for (i, s) in shards.iter().enumerate() {
+            loads[i % g] += s.param_bytes;
+        }
+        for l in &loads {
+            if *l > device_mem {
+                continue 'outer;
+            }
+        }
+        return g;
+    }
+    usize::MAX
+}
+
+/// 1) Strict model parallelism (PyTorch Distributed / DeepSpeed MP):
+/// every model's shards are spread across the devices and stay resident;
+/// models run one after another; sequential shard dependencies keep exactly
+/// one device busy, plus an activation hop between consecutive shards.
+pub fn model_parallel(
+    tasks: &[ModelTask],
+    n_devices: usize,
+    device_mem: u64,
+    link: TransferModel,
+) -> Result<ParadigmReport> {
+    let mut makespan = 0.0;
+    for t in tasks {
+        let need = devices_needed(t, device_mem);
+        if need > n_devices {
+            return Err(HydraError::DeviceOom {
+                device: 0,
+                needed: t.total_param_bytes(),
+                free: device_mem * n_devices as u64,
+            });
+        }
+        // all units sequential; a cross-shard boundary moves one activation
+        // over the device link
+        makespan += model_compute_secs(t);
+        let hops_per_mb = 2.0 * t.shards.len().saturating_sub(1) as f64;
+        let mbs = t.total_units() as f64 / (2.0 * t.shards.len() as f64);
+        let hop_bytes = t.shards.iter().map(|s| s.activation_bytes).max().unwrap_or(0);
+        makespan += hops_per_mb * mbs * link.secs(hop_bytes);
+    }
+    Ok(ParadigmReport {
+        name: "model-parallel",
+        makespan,
+        utilization: total_compute(tasks) / (n_devices as f64 * makespan),
+    })
+}
+
+/// 2) MP + task-parallel hybrid (DeepSpeed MP with concurrent instances):
+/// the device pool is split into G = P / devices_per_model groups; each
+/// group runs strict MP; models are assigned to groups by LPT.
+pub fn mp_task_hybrid(
+    tasks: &[ModelTask],
+    n_devices: usize,
+    device_mem: u64,
+    link: TransferModel,
+) -> Result<ParadigmReport> {
+    let per_model = tasks
+        .iter()
+        .map(|t| devices_needed(t, device_mem))
+        .max()
+        .unwrap_or(1);
+    if per_model > n_devices {
+        return Err(HydraError::DeviceOom {
+            device: 0,
+            needed: 0,
+            free: 0,
+        });
+    }
+    let groups = (n_devices / per_model).max(1);
+    // LPT assignment of serial model times to groups
+    let mut serial: Vec<f64> = tasks
+        .iter()
+        .map(|t| {
+            let mp = model_parallel(std::slice::from_ref(t), per_model, device_mem, link)?;
+            Ok(mp.makespan)
+        })
+        .collect::<Result<_>>()?;
+    serial.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut loads = vec![0.0f64; groups];
+    for s in serial {
+        let i = (0..groups)
+            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .unwrap();
+        loads[i] += s;
+    }
+    let makespan = loads.iter().cloned().fold(0.0, f64::max);
+    Ok(ParadigmReport {
+        name: "mp+task",
+        makespan,
+        utilization: total_compute(tasks) / (n_devices as f64 * makespan),
+    })
+}
+
+/// 3) MP + data-parallel hybrid (ZeRO/DeepSpeed-style): one model at a time;
+/// R = P / devices_per_model replicas consume the epoch's mini-batches in
+/// parallel, paying a gradient all-reduce per step.
+pub fn mp_data_hybrid(
+    tasks: &[ModelTask],
+    n_devices: usize,
+    device_mem: u64,
+    link: TransferModel,
+) -> Result<ParadigmReport> {
+    let mut makespan = 0.0;
+    for t in tasks {
+        let need = devices_needed(t, device_mem);
+        if need > n_devices {
+            return Err(HydraError::DeviceOom { device: 0, needed: 0, free: 0 });
+        }
+        let replicas = (n_devices / need).max(1) as f64;
+        let serial = model_parallel(std::slice::from_ref(t), need, device_mem, link)?;
+        // ring all-reduce of gradients once per step: 2 * params bytes
+        let mbs = t.total_units() as f64 / (2.0 * t.shards.len() as f64);
+        let allreduce = if replicas > 1.0 {
+            2.0 * t.total_param_bytes() as f64
+                / nlink_bw(link)
+                * (replicas - 1.0)
+                / replicas
+        } else {
+            0.0
+        };
+        makespan += serial.makespan / replicas + mbs / replicas * allreduce;
+    }
+    Ok(ParadigmReport {
+        name: "mp+data",
+        makespan,
+        utilization: total_compute(tasks) / (n_devices as f64 * makespan),
+    })
+}
+
+fn nlink_bw(link: TransferModel) -> f64 {
+    link.bandwidth_bytes_per_sec
+}
+
+/// 4) Synchronous pipeline parallelism (GPipe): partition count and
+/// microbatch count equal the GPU count (the paper's §5 configuration);
+/// models run one after another; each mini-batch pays the (S-1)-slot fill
+/// and drain bubbles of Figure 3.
+pub fn pipeline(
+    tasks: &[ModelTask],
+    n_devices: usize,
+    _device_mem: u64,
+    _link: TransferModel,
+) -> Result<ParadigmReport> {
+    let s = n_devices as f64; // stages
+    let m = n_devices as f64; // microbatches
+    let mut makespan = 0.0;
+    for t in tasks {
+        let units = unit_sequence_cost(t);
+        let per_mb: f64 = units
+            .iter()
+            .take(2 * t.shards.len())
+            .sum();
+        let mbs = t.total_units() as f64 / (2.0 * t.shards.len() as f64);
+        // uniform stage split: stage time per microbatch = per_mb / (S * M);
+        // synchronous fwd+bwd schedule fills and drains twice per minibatch
+        let t_mb = (m + s - 1.0) * per_mb / (s * m);
+        makespan += mbs * t_mb;
+    }
+    Ok(ParadigmReport {
+        name: "pipeline",
+        makespan,
+        utilization: total_compute(tasks) / (n_devices as f64 * makespan),
+    })
+}
+
+/// 5) Pure task parallelism (Cerebro/Ray-style): whole model per device.
+/// Errors with OOM when the model (params + optimizer + full backprop
+/// activation footprint, no checkpointing) exceeds device memory — the
+/// paper's "we cannot even benchmark against them" case.
+pub fn task_parallel(
+    tasks: &[ModelTask],
+    n_devices: usize,
+    device_mem: u64,
+    full_activation_bytes: &[u64],
+) -> Result<ParadigmReport> {
+    for (t, &act) in tasks.iter().zip(full_activation_bytes) {
+        let resident = t.total_param_bytes() + act;
+        if resident > device_mem {
+            return Err(HydraError::DeviceOom {
+                device: 0,
+                needed: resident,
+                free: device_mem,
+            });
+        }
+    }
+    // LPT over devices
+    let mut serial: Vec<f64> = tasks.iter().map(model_compute_secs).collect();
+    serial.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut loads = vec![0.0f64; n_devices];
+    for s in serial {
+        let i = (0..n_devices)
+            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .unwrap();
+        loads[i] += s;
+    }
+    let makespan = loads.iter().cloned().fold(0.0, f64::max);
+    Ok(ParadigmReport {
+        name: "task-parallel",
+        makespan,
+        utilization: total_compute(tasks) / (n_devices as f64 * makespan),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::ShardDesc;
+
+    const GIB: u64 = 1 << 30;
+
+    fn mk_tasks(n: usize, shards: usize, cost: f64) -> Vec<ModelTask> {
+        (0..n)
+            .map(|i| {
+                let sd: Vec<ShardDesc> = (0..shards)
+                    .map(|_| ShardDesc {
+                        param_bytes: GIB,
+                        fwd_transfer_bytes: GIB / 3,
+                        bwd_transfer_bytes: GIB / 3,
+                        activation_bytes: 4 << 20,
+                        fwd_cost: cost,
+                        bwd_cost: 2.0 * cost,
+                        n_layers: 1,
+                    })
+                    .collect();
+                ModelTask::new(i, format!("m{i}"), "sim", sd, 2, 1, 1e-3)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn model_parallel_utilization_is_one_over_p() {
+        let tasks = mk_tasks(4, 4, 1.0);
+        let r = model_parallel(&tasks, 8, 2 * GIB, TransferModel::zero_cost()).unwrap();
+        // sequential everything: makespan = total work
+        let total: f64 = tasks.iter().map(|t| t.remaining_time()).sum();
+        assert!((r.makespan - total).abs() < 1e-9);
+        assert!((r.utilization - 1.0 / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mp_task_splits_into_groups() {
+        // each model needs 2 devices (4 shards x 1GiB, 2GiB devices)
+        let tasks = mk_tasks(4, 4, 1.0);
+        let mp = model_parallel(&tasks, 8, 2 * GIB, TransferModel::zero_cost()).unwrap();
+        let ht = mp_task_hybrid(&tasks, 8, 2 * GIB, TransferModel::zero_cost()).unwrap();
+        // 4 groups of 2 -> 4 models concurrently: ~4x faster than MP
+        assert!(
+            (mp.makespan / ht.makespan - 4.0).abs() < 0.2,
+            "mp {} ht {}",
+            mp.makespan,
+            ht.makespan
+        );
+    }
+
+    #[test]
+    fn pipeline_beats_mp_but_has_bubbles() {
+        let tasks = mk_tasks(4, 8, 1.0);
+        let mp = model_parallel(&tasks, 8, 8 * GIB, TransferModel::zero_cost()).unwrap();
+        let pp = pipeline(&tasks, 8, 8 * GIB, TransferModel::zero_cost()).unwrap();
+        let speedup = mp.makespan / pp.makespan;
+        // GPipe with S=M=8: speedup = P * M/(M+S-1) = 8 * 8/15 ≈ 4.27
+        assert!((speedup - 4.27).abs() < 0.3, "speedup {speedup}");
+        assert!(pp.utilization > 0.4 && pp.utilization < 0.65, "{}", pp.utilization);
+    }
+
+    #[test]
+    fn task_parallel_ooms_on_large_models() {
+        let tasks = mk_tasks(2, 4, 1.0); // 4 GiB params
+        let acts = vec![GIB; 2];
+        let err = task_parallel(&tasks, 8, 2 * GIB, &acts);
+        assert!(matches!(err, Err(HydraError::DeviceOom { .. })));
+    }
+
+    #[test]
+    fn task_parallel_lpt_when_models_fit() {
+        let tasks = mk_tasks(4, 1, 1.0); // 1 GiB models on 4 GiB devices
+        let acts = vec![0u64; 4];
+        let r = task_parallel(&tasks, 2, 4 * GIB, &acts).unwrap();
+        // 4 models x 6s serial on 2 devices -> 12s
+        assert!((r.makespan - 12.0).abs() < 1e-9, "{}", r.makespan);
+        assert!((r.utilization - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mp_data_speedup_bounded_by_replicas() {
+        let tasks = mk_tasks(2, 4, 1.0);
+        let mp = model_parallel(&tasks, 8, 2 * GIB, TransferModel::zero_cost()).unwrap();
+        let dp = mp_data_hybrid(&tasks, 8, 2 * GIB, nvlink()).unwrap();
+        let speedup = mp.makespan / dp.makespan;
+        assert!(speedup > 2.0 && speedup <= 4.0 + 1e-9, "{speedup}");
+    }
+
+    #[test]
+    fn infeasible_mp_is_oom() {
+        // 4 shards of 1 GiB on 2 devices of 1 GiB: needs 4 devices
+        let tasks = mk_tasks(1, 4, 1.0);
+        assert!(matches!(
+            model_parallel(&tasks, 2, GIB, TransferModel::zero_cost()),
+            Err(HydraError::DeviceOom { .. })
+        ));
+    }
+}

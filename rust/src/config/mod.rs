@@ -1,0 +1,253 @@
+//! Declarative workload specifications: a JSON file describing the model
+//! tasks, cluster, and engine knobs, consumed by `hydra run --spec <file>`.
+//! This is the "real config system" a deployment would drive Hydra with —
+//! the programmatic `ModelOrchestrator` API stays available underneath.
+//!
+//! ```json
+//! {
+//!   "cluster": { "devices": 2, "device_mem_mib": 2, "dram_mib": 4096 },
+//!   "engine": { "scheduler": "sharded-lrtf", "double_buffer": true,
+//!               "sequential": false, "buffer_frac": 0.05,
+//!               "early_stop_median_after": 2 },
+//!   "tasks": [
+//!     { "name": "bert-a", "config": "tiny-lm-b8", "lr": 0.05,
+//!       "opt": "sgd", "epochs": 1, "minibatches": 8, "seed": 1 },
+//!     { "name": "probe", "config": "tiny-lm-b4", "lr": 0.0,
+//!       "opt": "sgd", "minibatches": 4, "inference": true }
+//!   ]
+//! }
+//! ```
+
+use crate::coordinator::sharp::{EngineOptions, ParallelMode};
+use crate::coordinator::{Cluster, ModelOrchestrator};
+use crate::error::{HydraError, Result};
+use crate::exec::real::RealModelSpec;
+use crate::train::optimizer::OptKind;
+use crate::util::json::Json;
+
+/// A fully parsed workload specification.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub cluster: Cluster,
+    pub engine: EngineOptions,
+    pub scheduler: String,
+    pub early_stop_median_after: Option<u32>,
+    pub tasks: Vec<RealModelSpec>,
+}
+
+fn cerr(msg: impl Into<String>) -> HydraError {
+    HydraError::Config(msg.into())
+}
+
+impl WorkloadSpec {
+    pub fn load(path: &str) -> Result<WorkloadSpec> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<WorkloadSpec> {
+        let j = Json::parse(text)?;
+
+        // --- cluster -------------------------------------------------------
+        let c = j.get("cluster").ok_or_else(|| cerr("missing cluster"))?;
+        let mib = 1u64 << 20;
+        let cluster = if let Some(per_dev) = c.get("device_mem_mib_each") {
+            // heterogeneous: explicit per-device list
+            let mems: Vec<u64> = per_dev
+                .as_arr()
+                .ok_or_else(|| cerr("device_mem_mib_each must be an array"))?
+                .iter()
+                .map(|v| v.as_u64().map(|m| m * mib).ok_or_else(|| cerr("bad mem")))
+                .collect::<Result<_>>()?;
+            if mems.is_empty() {
+                return Err(cerr("device_mem_mib_each is empty"));
+            }
+            Cluster {
+                device_mem: mems,
+                dram_bytes: c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib,
+            }
+        } else {
+            let devices = c
+                .get("devices")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| cerr("cluster.devices missing"))?;
+            if devices == 0 {
+                return Err(cerr("cluster.devices must be > 0"));
+            }
+            Cluster::uniform(
+                devices,
+                c.get("device_mem_mib")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| cerr("cluster.device_mem_mib missing"))?
+                    * mib,
+                c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib,
+            )
+        };
+
+        // --- engine ---------------------------------------------------------
+        let mut engine = EngineOptions::default();
+        let mut scheduler = "sharded-lrtf".to_string();
+        let mut early_stop = None;
+        if let Some(e) = j.get("engine") {
+            if let Some(s) = e.get("scheduler").and_then(Json::as_str) {
+                if crate::coordinator::sched::by_name(s).is_none() {
+                    return Err(cerr(format!("unknown scheduler {s:?}")));
+                }
+                scheduler = s.to_string();
+            }
+            if let Some(db) = e.get("double_buffer").and_then(Json::as_bool) {
+                engine.double_buffer = db;
+            }
+            if let Some(seq) = e.get("sequential").and_then(Json::as_bool) {
+                engine.mode = if seq {
+                    ParallelMode::Sequential
+                } else {
+                    ParallelMode::Sharp
+                };
+            }
+            if let Some(f) = e.get("buffer_frac").and_then(Json::as_f64) {
+                if !(0.0..0.9).contains(&f) {
+                    return Err(cerr(format!("buffer_frac {f} out of [0, 0.9)")));
+                }
+                engine.buffer_frac = f;
+            }
+            if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
+                early_stop = Some(me as u32);
+            }
+        }
+
+        // --- tasks ------------------------------------------------------------
+        let tasks_json = j
+            .get("tasks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| cerr("missing tasks array"))?;
+        if tasks_json.is_empty() {
+            return Err(cerr("tasks array is empty"));
+        }
+        let tasks: Vec<RealModelSpec> = tasks_json
+            .iter()
+            .enumerate()
+            .map(|(i, t)| parse_task(i, t))
+            .collect::<Result<_>>()?;
+
+        Ok(WorkloadSpec {
+            cluster,
+            engine,
+            scheduler,
+            early_stop_median_after: early_stop,
+            tasks,
+        })
+    }
+
+    /// Build the orchestrator this spec describes.
+    pub fn orchestrator(&self, manifest_dir: &str) -> ModelOrchestrator {
+        let mut orch = ModelOrchestrator::new(manifest_dir);
+        orch.engine_options = self.engine.clone();
+        orch.scheduler = self.scheduler.clone();
+        orch.early_stop_median_after = self.early_stop_median_after;
+        for t in &self.tasks {
+            orch.add_task(t.clone());
+        }
+        orch
+    }
+}
+
+fn parse_task(i: usize, t: &Json) -> Result<RealModelSpec> {
+    let name = t
+        .get("name")
+        .and_then(Json::as_str)
+        .map(String::from)
+        .unwrap_or_else(|| format!("task-{i}"));
+    let config = t
+        .get("config")
+        .and_then(Json::as_str)
+        .ok_or_else(|| cerr(format!("task {name}: missing config")))?
+        .to_string();
+    let opt = OptKind::parse(t.get("opt").and_then(Json::as_str).unwrap_or("sgd"))
+        .map_err(cerr)?;
+    Ok(RealModelSpec {
+        name,
+        config,
+        lr: t.get("lr").and_then(Json::as_f64).unwrap_or(0.01) as f32,
+        opt,
+        epochs: t.get("epochs").and_then(Json::as_u64).unwrap_or(1) as u32,
+        minibatches_per_epoch: t
+            .get("minibatches")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| cerr("task missing minibatches"))? as u32,
+        seed: t.get("seed").and_then(Json::as_u64).unwrap_or(i as u64),
+        inference: t.get("inference").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"{
+      "cluster": { "devices": 2, "device_mem_mib": 2, "dram_mib": 1024 },
+      "engine": { "scheduler": "random", "double_buffer": false,
+                  "sequential": true, "buffer_frac": 0.1,
+                  "early_stop_median_after": 3 },
+      "tasks": [
+        { "name": "a", "config": "tiny-lm-b4", "lr": 0.05, "opt": "momentum",
+          "epochs": 2, "minibatches": 4, "seed": 9 },
+        { "config": "tiny-cls-b8", "minibatches": 2, "inference": true }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let w = WorkloadSpec::parse(SPEC).unwrap();
+        assert_eq!(w.cluster.device_mem, vec![2 << 20, 2 << 20]);
+        assert_eq!(w.cluster.dram_bytes, 1024 << 20);
+        assert_eq!(w.scheduler, "random");
+        assert!(!w.engine.double_buffer);
+        assert_eq!(w.engine.mode, ParallelMode::Sequential);
+        assert_eq!(w.engine.buffer_frac, 0.1);
+        assert_eq!(w.early_stop_median_after, Some(3));
+        assert_eq!(w.tasks.len(), 2);
+        assert_eq!(w.tasks[0].opt, OptKind::Momentum { beta: 0.9 });
+        assert_eq!(w.tasks[0].epochs, 2);
+        assert_eq!(w.tasks[1].name, "task-1"); // defaulted
+        assert!(w.tasks[1].inference);
+    }
+
+    #[test]
+    fn heterogeneous_device_list() {
+        let spec = r#"{
+          "cluster": { "device_mem_mib_each": [4, 2, 8] },
+          "tasks": [ { "config": "tiny-lm-b4", "minibatches": 1 } ]
+        }"#;
+        let w = WorkloadSpec::parse(spec).unwrap();
+        assert_eq!(w.cluster.device_mem, vec![4 << 20, 2 << 20, 8 << 20]);
+        assert_eq!(w.cluster.min_device_mem(), 2 << 20);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(WorkloadSpec::parse("{}").is_err());
+        assert!(WorkloadSpec::parse(r#"{"cluster":{"devices":0,"device_mem_mib":1},"tasks":[]}"#).is_err());
+        let no_tasks = r#"{"cluster":{"devices":1,"device_mem_mib":1},"tasks":[]}"#;
+        assert!(WorkloadSpec::parse(no_tasks).is_err());
+        let bad_sched = r#"{
+          "cluster": {"devices":1,"device_mem_mib":1},
+          "engine": {"scheduler":"gurobi"},
+          "tasks":[{"config":"x","minibatches":1}]}"#;
+        assert!(WorkloadSpec::parse(bad_sched).is_err());
+        let bad_frac = r#"{
+          "cluster": {"devices":1,"device_mem_mib":1},
+          "engine": {"buffer_frac": 1.5},
+          "tasks":[{"config":"x","minibatches":1}]}"#;
+        assert!(WorkloadSpec::parse(bad_frac).is_err());
+    }
+
+    #[test]
+    fn orchestrator_inherits_spec() {
+        let w = WorkloadSpec::parse(SPEC).unwrap();
+        let orch = w.orchestrator("artifacts");
+        assert_eq!(orch.n_tasks(), 2);
+        assert_eq!(orch.scheduler, "random");
+        assert_eq!(orch.early_stop_median_after, Some(3));
+    }
+}

@@ -1,0 +1,136 @@
+//! Double-buffering (§4.6): each device reserves a buffer zone; while a unit
+//! computes, the *next* scheduled unit's shard parameters are prefetched into
+//! the zone, hiding DRAM->device latency. On retire, the buffered shard is
+//! promoted zone->active at zero cost.
+//!
+//! The timing math lives in the SHARP engine; this module owns the zone
+//! lifecycle and the stall computation, so it can be unit-tested in
+//! isolation and disabled wholesale for Table 3's ablation.
+
+use crate::coordinator::memory::{DeviceLedger, Residency};
+use crate::error::Result;
+
+/// Per-device double-buffer state.
+#[derive(Debug, Clone)]
+pub struct DoubleBuffer {
+    pub enabled: bool,
+    /// Bytes reserved in the device ledger for the loading zone.
+    pub zone_bytes: u64,
+    /// Shard currently staged in the zone, with the virtual time its
+    /// transfer completes.
+    staged: Option<StagedShard>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StagedShard {
+    pub model: usize,
+    pub shard: u32,
+    pub bytes: u64,
+    /// Virtual time when the prefetch transfer finishes.
+    pub ready_at: f64,
+}
+
+impl DoubleBuffer {
+    /// Reserve the zone in the ledger (done once at startup, mirroring the
+    /// partitioner's §4.6 "protect a buffer space during partitioning").
+    pub fn new(enabled: bool, zone_bytes: u64, ledger: &mut DeviceLedger) -> Result<DoubleBuffer> {
+        if enabled {
+            ledger.alloc(Residency::BufferZone, zone_bytes)?;
+        }
+        Ok(DoubleBuffer { enabled, zone_bytes, staged: None })
+    }
+
+    pub fn staged(&self) -> Option<&StagedShard> {
+        self.staged.as_ref()
+    }
+
+    /// Begin prefetching a shard into the zone at time `now`; the transfer
+    /// takes `transfer_secs`. Overwrites any previous staging (the engine
+    /// never stages two shards at once per device).
+    pub fn stage(&mut self, model: usize, shard: u32, bytes: u64, now: f64, transfer_secs: f64) {
+        debug_assert!(self.enabled);
+        debug_assert!(bytes <= self.zone_bytes, "shard exceeds buffer zone");
+        self.staged = Some(StagedShard { model, shard, bytes, ready_at: now + transfer_secs });
+    }
+
+    /// At unit start time `now`, consume the staged shard if it matches.
+    /// Returns the *stall* the device incurs waiting for the prefetch to
+    /// finish (0 when compute fully hid the transfer — the §4.6 payoff).
+    pub fn consume(&mut self, model: usize, shard: u32, now: f64) -> Option<f64> {
+        match self.staged {
+            Some(s) if s.model == model && s.shard == shard => {
+                self.staged = None;
+                Some((s.ready_at - now).max(0.0))
+            }
+            _ => None,
+        }
+    }
+
+    /// Drop any staging (device loss / model early-stop).
+    pub fn clear(&mut self) {
+        self.staged = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger() -> DeviceLedger {
+        DeviceLedger::new(0, 1_000)
+    }
+
+    #[test]
+    fn zone_reserved_in_ledger() {
+        let mut l = ledger();
+        let _b = DoubleBuffer::new(true, 50, &mut l).unwrap();
+        assert_eq!(l.used(), 50);
+        assert!(l.contains(&Residency::BufferZone));
+    }
+
+    #[test]
+    fn disabled_buffer_reserves_nothing() {
+        let mut l = ledger();
+        let _b = DoubleBuffer::new(false, 50, &mut l).unwrap();
+        assert_eq!(l.used(), 0);
+    }
+
+    #[test]
+    fn transfer_hidden_behind_compute_has_zero_stall() {
+        let mut l = ledger();
+        let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
+        // prefetch starts at t=0, takes 2s; unit starts at t=5 (compute hid it)
+        b.stage(3, 1, 80, 0.0, 2.0);
+        let stall = b.consume(3, 1, 5.0).unwrap();
+        assert_eq!(stall, 0.0);
+        assert!(b.staged().is_none());
+    }
+
+    #[test]
+    fn slow_transfer_produces_partial_stall() {
+        let mut l = ledger();
+        let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
+        b.stage(3, 1, 80, 0.0, 7.0);
+        let stall = b.consume(3, 1, 5.0).unwrap();
+        assert!((stall - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mismatched_consume_returns_none() {
+        let mut l = ledger();
+        let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
+        b.stage(3, 1, 80, 0.0, 1.0);
+        assert!(b.consume(4, 1, 2.0).is_none());
+        // staging preserved for the matching consumer
+        assert!(b.staged().is_some());
+    }
+
+    #[test]
+    fn clear_drops_staging() {
+        let mut l = ledger();
+        let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
+        b.stage(1, 0, 10, 0.0, 1.0);
+        b.clear();
+        assert!(b.staged().is_none());
+    }
+}

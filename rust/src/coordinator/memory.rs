@@ -1,0 +1,219 @@
+//! Memory manager: the paper's *model spilling* substrate (§4.2, §4.5).
+//!
+//! Every device has a byte-accurate ledger with an enforced capacity; model
+//! shards are *promoted* from the DRAM pool into a device ledger before
+//! their unit runs and *demoted* back afterwards (unless cached for reuse —
+//! the §4.6 "serendipitous bonus"). The partitioner probes against this
+//! ledger exactly like Algorithm 1 probes a real GPU, and the double-buffer
+//! reserves its zone here.
+
+use std::collections::BTreeMap;
+
+use crate::error::{HydraError, Result};
+
+/// What a ledger entry holds (for traces and accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Residency {
+    /// Parameters (+ optimizer state) of (model, shard).
+    ShardParams { model: usize, shard: u32 },
+    /// Boundary activation checkpoint of a model's in-flight mini-batch.
+    Activation { model: usize },
+    /// Workspace for the running unit (activations produced inside the
+    /// shard — the §4.6 "as much as 99%" of footprint; never transferred).
+    Workspace { model: usize },
+    /// Reserved double-buffer zone.
+    BufferZone,
+}
+
+/// Byte-accurate per-device memory ledger.
+#[derive(Debug, Clone)]
+pub struct DeviceLedger {
+    pub device: usize,
+    capacity: u64,
+    used: u64,
+    entries: BTreeMap<Residency, u64>,
+}
+
+impl DeviceLedger {
+    pub fn new(device: usize, capacity: u64) -> DeviceLedger {
+        DeviceLedger { device, capacity, used: 0, entries: BTreeMap::new() }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn contains(&self, r: &Residency) -> bool {
+        self.entries.contains_key(r)
+    }
+
+    pub fn bytes_of(&self, r: &Residency) -> u64 {
+        self.entries.get(r).copied().unwrap_or(0)
+    }
+
+    /// Allocate; errors with DeviceOom if over capacity (a *real* error
+    /// path — Algorithm 1's pilot runs rely on it).
+    pub fn alloc(&mut self, r: Residency, bytes: u64) -> Result<()> {
+        if self.entries.contains_key(&r) {
+            return Err(HydraError::Exec(format!(
+                "device {}: duplicate residency {r:?}", self.device)));
+        }
+        if bytes > self.free() {
+            return Err(HydraError::DeviceOom {
+                device: self.device,
+                needed: bytes,
+                free: self.free(),
+            });
+        }
+        self.used += bytes;
+        self.entries.insert(r, bytes);
+        Ok(())
+    }
+
+    /// Free; returns the freed byte count.
+    pub fn release(&mut self, r: &Residency) -> u64 {
+        let bytes = self.entries.remove(r).unwrap_or(0);
+        self.used -= bytes;
+        bytes
+    }
+
+    /// All shard-param residencies currently held (for eviction decisions).
+    pub fn resident_shards(&self) -> Vec<(usize, u32, u64)> {
+        self.entries
+            .iter()
+            .filter_map(|(r, b)| match r {
+                Residency::ShardParams { model, shard } => Some((*model, *shard, *b)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// The DRAM tier: tracks spilled bytes so we can assert the paper's "fits in
+/// DRAM" precondition and report spill traffic.
+#[derive(Debug, Clone)]
+pub struct DramPool {
+    capacity: u64,
+    used: u64,
+    /// Cumulative promote/demote traffic in bytes (for EXPERIMENTS.md).
+    pub promoted_bytes: u64,
+    pub demoted_bytes: u64,
+}
+
+impl DramPool {
+    pub fn new(capacity: u64) -> DramPool {
+        DramPool { capacity, used: 0, promoted_bytes: 0, demoted_bytes: 0 }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    /// Home a model's full parameter set in DRAM (start of training).
+    pub fn home(&mut self, bytes: u64) -> Result<()> {
+        if bytes > self.free() {
+            return Err(HydraError::Exec(format!(
+                "DRAM exhausted: need {bytes}, free {}", self.free())));
+        }
+        self.used += bytes;
+        Ok(())
+    }
+
+    pub fn unhome(&mut self, bytes: u64) {
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn note_promote(&mut self, bytes: u64) {
+        self.promoted_bytes += bytes;
+    }
+
+    pub fn note_demote(&mut self, bytes: u64) {
+        self.demoted_bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_release_track_usage() {
+        let mut l = DeviceLedger::new(0, 1000);
+        l.alloc(Residency::ShardParams { model: 1, shard: 0 }, 400).unwrap();
+        assert_eq!(l.used(), 400);
+        assert_eq!(l.free(), 600);
+        l.alloc(Residency::Activation { model: 1 }, 100).unwrap();
+        assert_eq!(l.free(), 500);
+        assert_eq!(l.release(&Residency::ShardParams { model: 1, shard: 0 }), 400);
+        assert_eq!(l.used(), 100);
+    }
+
+    #[test]
+    fn oom_is_an_error_not_a_panic() {
+        let mut l = DeviceLedger::new(3, 100);
+        let e = l.alloc(Residency::Workspace { model: 0 }, 200).unwrap_err();
+        match e {
+            HydraError::DeviceOom { device, needed, free } => {
+                assert_eq!((device, needed, free), (3, 200, 100));
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+        assert_eq!(l.used(), 0); // failed alloc leaves ledger unchanged
+    }
+
+    #[test]
+    fn duplicate_residency_rejected() {
+        let mut l = DeviceLedger::new(0, 1000);
+        let r = Residency::ShardParams { model: 0, shard: 1 };
+        l.alloc(r, 10).unwrap();
+        assert!(l.alloc(r, 10).is_err());
+    }
+
+    #[test]
+    fn resident_shards_lists_only_params() {
+        let mut l = DeviceLedger::new(0, 1000);
+        l.alloc(Residency::ShardParams { model: 0, shard: 1 }, 10).unwrap();
+        l.alloc(Residency::ShardParams { model: 2, shard: 0 }, 20).unwrap();
+        l.alloc(Residency::BufferZone, 50).unwrap();
+        let mut rs = l.resident_shards();
+        rs.sort();
+        assert_eq!(rs, vec![(0, 1, 10), (2, 0, 20)]);
+    }
+
+    #[test]
+    fn dram_pool_enforces_capacity() {
+        let mut d = DramPool::new(100);
+        d.home(80).unwrap();
+        assert!(d.home(30).is_err());
+        d.unhome(80);
+        assert!(d.home(30).is_ok());
+    }
+
+    #[test]
+    fn traffic_counters_accumulate() {
+        let mut d = DramPool::new(100);
+        d.note_promote(10);
+        d.note_promote(5);
+        d.note_demote(7);
+        assert_eq!(d.promoted_bytes, 15);
+        assert_eq!(d.demoted_bytes, 7);
+    }
+
+    #[test]
+    fn release_missing_is_zero() {
+        let mut l = DeviceLedger::new(0, 10);
+        assert_eq!(l.release(&Residency::BufferZone), 0);
+    }
+}

@@ -1,0 +1,235 @@
+//! Execution traces and derived metrics: makespan, per-device busy time,
+//! GPU utilization (Fig 8's second panel), transfer/stall accounting, and
+//! an ASCII Gantt renderer for the Fig 3/6-style schedule illustrations.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::unit::Phase;
+
+/// What a device interval was spent on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IntervalKind {
+    /// Shard-unit compute.
+    Compute,
+    /// Synchronous DRAM<->device transfer (spilling cost).
+    Transfer,
+    /// Waiting on an in-flight double-buffer prefetch.
+    BufferStall,
+}
+
+/// One device-time interval in the schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct Interval {
+    pub device: usize,
+    pub start: f64,
+    pub end: f64,
+    pub model: usize,
+    pub shard: u32,
+    pub phase: Phase,
+    /// Queue position of the unit (for ordering invariants in tests).
+    pub unit_seq: u64,
+    pub kind: IntervalKind,
+}
+
+/// Full execution trace of a run.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub intervals: Vec<Interval>,
+    /// Device lifetime windows [start, end) for utilization denominators
+    /// (devices may arrive/leave mid-run).
+    pub device_windows: BTreeMap<usize, (f64, f64)>,
+    pub makespan: f64,
+}
+
+impl Trace {
+    pub fn record(&mut self, iv: Interval) {
+        debug_assert!(iv.end >= iv.start);
+        if iv.end > self.makespan {
+            self.makespan = iv.end;
+        }
+        self.intervals.push(iv);
+    }
+
+    pub fn set_device_window(&mut self, device: usize, start: f64, end: f64) {
+        self.device_windows.insert(device, (start, end));
+    }
+
+    pub fn close_device_windows(&mut self) {
+        let mk = self.makespan;
+        for (_, (_, end)) in self.device_windows.iter_mut() {
+            if !end.is_finite() {
+                *end = mk;
+            }
+        }
+    }
+
+    pub fn compute_time(&self) -> f64 {
+        self.time_of(IntervalKind::Compute)
+    }
+
+    pub fn transfer_time(&self) -> f64 {
+        self.time_of(IntervalKind::Transfer)
+    }
+
+    pub fn stall_time(&self) -> f64 {
+        self.time_of(IntervalKind::BufferStall)
+    }
+
+    fn time_of(&self, kind: IntervalKind) -> f64 {
+        self.intervals
+            .iter()
+            .filter(|iv| iv.kind == kind)
+            .map(|iv| iv.end - iv.start)
+            .sum()
+    }
+
+    /// Total device-seconds available across all device windows.
+    pub fn device_seconds(&self) -> f64 {
+        self.device_windows
+            .values()
+            .map(|&(s, e)| (e.min(self.makespan) - s).max(0.0))
+            .sum()
+    }
+
+    /// GPU utilization: compute time / available device time (the paper's
+    /// Fig 8 metric; transfers and stalls count as idle).
+    pub fn utilization(&self) -> f64 {
+        let denom = self.device_seconds();
+        if denom <= 0.0 {
+            0.0
+        } else {
+            self.compute_time() / denom
+        }
+    }
+
+    pub fn units_executed(&self) -> usize {
+        self.intervals
+            .iter()
+            .filter(|iv| iv.kind == IntervalKind::Compute)
+            .count()
+    }
+
+    /// Per-device busy (compute) seconds.
+    pub fn per_device_compute(&self) -> BTreeMap<usize, f64> {
+        let mut m = BTreeMap::new();
+        for iv in &self.intervals {
+            if iv.kind == IntervalKind::Compute {
+                *m.entry(iv.device).or_insert(0.0) += iv.end - iv.start;
+            }
+        }
+        m
+    }
+
+    /// ASCII Gantt chart (Fig 3 / Fig 6 style). Each row is a device; each
+    /// column a time bucket; cells show the model letter for compute,
+    /// '·' transfer, '~' stall, ' ' idle.
+    pub fn gantt(&self, width: usize) -> String {
+        if self.makespan <= 0.0 || self.intervals.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let devices: Vec<usize> = self.device_windows.keys().copied().collect();
+        let scale = width as f64 / self.makespan;
+        let mut out = String::new();
+        for &d in &devices {
+            let mut row = vec![' '; width];
+            for iv in self.intervals.iter().filter(|iv| iv.device == d) {
+                let a = (iv.start * scale) as usize;
+                let b = ((iv.end * scale) as usize).min(width.saturating_sub(1));
+                for c in row.iter_mut().take(b + 1).skip(a.min(width - 1)) {
+                    *c = match iv.kind {
+                        IntervalKind::Compute => model_letter(iv.model),
+                        IntervalKind::Transfer => '·',
+                        IntervalKind::BufferStall => '~',
+                    };
+                }
+            }
+            out.push_str(&format!("dev{d:>2} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "        0{:>width$.2}s\n",
+            self.makespan,
+            width = width - 1
+        ));
+        out
+    }
+}
+
+fn model_letter(model: usize) -> char {
+    (b'A' + (model % 26) as u8) as char
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(device: usize, start: f64, end: f64, model: usize, kind: IntervalKind) -> Interval {
+        Interval { device, start, end, model, shard: 0, phase: Phase::Fwd, unit_seq: 0, kind }
+    }
+
+    #[test]
+    fn makespan_tracks_latest_end() {
+        let mut t = Trace::default();
+        t.record(iv(0, 0.0, 2.0, 0, IntervalKind::Compute));
+        t.record(iv(1, 1.0, 5.0, 1, IntervalKind::Compute));
+        assert_eq!(t.makespan, 5.0);
+    }
+
+    #[test]
+    fn utilization_counts_only_compute() {
+        let mut t = Trace::default();
+        t.set_device_window(0, 0.0, f64::INFINITY);
+        t.set_device_window(1, 0.0, f64::INFINITY);
+        t.record(iv(0, 0.0, 4.0, 0, IntervalKind::Compute));
+        t.record(iv(1, 0.0, 1.0, 1, IntervalKind::Transfer));
+        t.record(iv(1, 1.0, 2.0, 1, IntervalKind::Compute));
+        t.record(iv(1, 2.0, 4.0, 1, IntervalKind::BufferStall));
+        t.close_device_windows();
+        // makespan 4, device-seconds 8, compute 5
+        assert!((t.utilization() - 5.0 / 8.0).abs() < 1e-12);
+        assert_eq!(t.compute_time(), 5.0);
+        assert_eq!(t.transfer_time(), 1.0);
+        assert_eq!(t.stall_time(), 2.0);
+    }
+
+    #[test]
+    fn device_windows_bound_denominator() {
+        let mut t = Trace::default();
+        t.set_device_window(0, 0.0, f64::INFINITY);
+        t.set_device_window(1, 2.0, f64::INFINITY); // arrived late
+        t.record(iv(0, 0.0, 4.0, 0, IntervalKind::Compute));
+        t.close_device_windows();
+        assert!((t.device_seconds() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_device_compute_aggregates() {
+        let mut t = Trace::default();
+        t.record(iv(0, 0.0, 1.0, 0, IntervalKind::Compute));
+        t.record(iv(0, 2.0, 3.0, 1, IntervalKind::Compute));
+        t.record(iv(1, 0.0, 0.5, 2, IntervalKind::Compute));
+        let m = t.per_device_compute();
+        assert!((m[&0] - 2.0).abs() < 1e-12);
+        assert!((m[&1] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let mut t = Trace::default();
+        t.set_device_window(0, 0.0, f64::INFINITY);
+        t.set_device_window(1, 0.0, f64::INFINITY);
+        t.record(iv(0, 0.0, 1.0, 0, IntervalKind::Compute));
+        t.record(iv(1, 0.5, 1.0, 1, IntervalKind::Compute));
+        t.close_device_windows();
+        let g = t.gantt(20);
+        assert!(g.contains("dev 0"));
+        assert!(g.contains('A'));
+        assert!(g.contains('B'));
+    }
+
+    #[test]
+    fn empty_trace_gantt_is_safe() {
+        let t = Trace::default();
+        assert_eq!(t.gantt(10), "(empty trace)\n");
+        assert_eq!(t.utilization(), 0.0);
+    }
+}

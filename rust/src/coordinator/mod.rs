@@ -1,0 +1,124 @@
+//! The Hydra coordinator — the paper's L3 contribution.
+//!
+//! Components (paper §3): the user-facing API ([`ModelOrchestrator`]), the
+//! Automated Partitioner ([`partitioner`]), the Memory Manager ([`memory`],
+//! [`buffer`]) and the Scheduler ([`sched`], [`sharp`]).
+
+pub mod buffer;
+pub mod memory;
+pub mod metrics;
+pub mod partitioner;
+pub mod sched;
+pub mod sharp;
+pub mod task;
+pub mod unit;
+
+use crate::coordinator::partitioner::PartitionPolicy;
+use crate::coordinator::sharp::{EngineOptions, RunReport, SharpEngine};
+use crate::error::{HydraError, Result};
+use crate::exec::real::{RealBackend, RealModelSpec};
+
+/// High-level multi-model training API, mirroring the paper's Figure 4:
+///
+/// ```ignore
+/// let mut orch = ModelOrchestrator::new("artifacts");
+/// orch.add_task(RealModelSpec { name: "bert-lr3".into(), config: "tiny-lm-b8".into(), .. });
+/// orch.add_task(RealModelSpec { .. });
+/// let report = orch.train_models(&cluster)?;
+/// ```
+pub struct ModelOrchestrator {
+    manifest_dir: String,
+    specs: Vec<RealModelSpec>,
+    pub partition_policy: PartitionPolicy,
+    pub engine_options: EngineOptions,
+    pub scheduler: String,
+    /// AutoML-style early stopping: models whose epoch-mean loss falls
+    /// behind the median after `min_epochs` are dropped (§4.7.2).
+    pub early_stop_median_after: Option<u32>,
+}
+
+/// Cluster description for real runs: per-device "GPU memory" capacities
+/// plus the DRAM pool (all simulated capacities; compute is real — see
+/// DESIGN.md §1).
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub device_mem: Vec<u64>,
+    pub dram_bytes: u64,
+}
+
+impl Cluster {
+    pub fn uniform(n_devices: usize, mem_per_device: u64, dram_bytes: u64) -> Cluster {
+        Cluster { device_mem: vec![mem_per_device; n_devices], dram_bytes }
+    }
+
+    pub fn min_device_mem(&self) -> u64 {
+        self.device_mem.iter().copied().min().unwrap_or(0)
+    }
+}
+
+/// Everything a caller needs to inspect after training.
+pub struct TrainingReport {
+    pub run: RunReport,
+    /// Per-model loss logs: (step, loss) pairs in retirement order.
+    pub losses: Vec<Vec<(u64, f32)>>,
+}
+
+impl ModelOrchestrator {
+    pub fn new(manifest_dir: impl Into<String>) -> ModelOrchestrator {
+        ModelOrchestrator {
+            manifest_dir: manifest_dir.into(),
+            specs: Vec::new(),
+            partition_policy: PartitionPolicy::default(),
+            engine_options: EngineOptions::default(),
+            scheduler: "sharded-lrtf".to_string(),
+            early_stop_median_after: None,
+        }
+    }
+
+    /// Register one model training task.
+    pub fn add_task(&mut self, spec: RealModelSpec) -> &mut Self {
+        self.specs.push(spec);
+        self
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Train all registered models to completion over the cluster.
+    ///
+    /// This is where the whole stack composes: pilot runs -> Algorithm-1
+    /// partitioning -> ModelTask queues -> SHARP engine with spilling and
+    /// double-buffering -> real PJRT execution of every shard unit.
+    pub fn train_models(&self, cluster: &Cluster) -> Result<TrainingReport> {
+        if self.specs.is_empty() {
+            return Err(HydraError::Config("no tasks registered".into()));
+        }
+        let (mut backend, tasks) = RealBackend::build(
+            &self.manifest_dir,
+            &self.specs,
+            cluster.min_device_mem(),
+            self.partition_policy,
+        )?;
+        if let Some(min_epochs) = self.early_stop_median_after {
+            backend.early_stop =
+                Some(crate::exec::real::MedianRule { min_epochs });
+        }
+        let scheduler = sched::by_name(&self.scheduler)
+            .ok_or_else(|| HydraError::Config(format!(
+                "unknown scheduler {:?}", self.scheduler)))?;
+        let mut engine = SharpEngine::new(
+            tasks,
+            &cluster.device_mem,
+            cluster.dram_bytes,
+            scheduler,
+            &mut backend,
+            self.engine_options.clone(),
+        )?;
+        let run = engine.run()?;
+        let losses = (0..self.specs.len())
+            .map(|m| backend.loss_log(m).to_vec())
+            .collect();
+        Ok(TrainingReport { run, losses })
+    }
+}

@@ -1,0 +1,295 @@
+//! Exact scheduler — the "MILP optimal" comparator of Figure 7.
+//!
+//! The paper encodes SHARP scheduling as an MILP (§4.7.1, constraints
+//! (a)–(e)) and solves it with Gurobi under a 100 s timeout, reporting the
+//! incumbent. Gurobi is unavailable here; this branch-and-bound solver has
+//! the same semantics: minimise makespan of T sequential unit-chains over P
+//! identical devices, subject to (a) per-model unit order, (b,c) device
+//! isolation, (d) non-negative starts, (e) makespan envelope.
+//!
+//! Enumeration is over *active schedules* (every unit starts as early as
+//! possible given the decision order), which is complete for makespan
+//! minimisation. Bounds: chain bound + aggregate work bound. Like the
+//! paper, we return the best incumbent when the time budget expires.
+
+use std::time::{Duration, Instant};
+
+/// Abstract instance: per-model unit runtime lists, device count.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub units: Vec<Vec<f64>>,
+    pub devices: usize,
+}
+
+impl Problem {
+    pub fn total_work(&self) -> f64 {
+        self.units.iter().map(|u| u.iter().sum::<f64>()).sum()
+    }
+
+    pub fn longest_chain(&self) -> f64 {
+        self.units
+            .iter()
+            .map(|u| u.iter().sum::<f64>())
+            .fold(0.0, f64::max)
+    }
+
+    /// The classic machine-scheduling lower bound.
+    pub fn lower_bound(&self) -> f64 {
+        (self.total_work() / self.devices as f64).max(self.longest_chain())
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Solution {
+    pub makespan: f64,
+    pub proven_optimal: bool,
+    pub nodes: u64,
+}
+
+const EPS: f64 = 1e-9;
+
+struct Search<'a> {
+    p: &'a Problem,
+    next_unit: Vec<usize>,
+    model_free: Vec<f64>,
+    device_free: Vec<f64>,
+    remaining: Vec<f64>,
+    best: f64,
+    nodes: u64,
+    deadline: Instant,
+    timed_out: bool,
+}
+
+impl<'a> Search<'a> {
+    fn lb(&self) -> f64 {
+        let dmin = self.device_free.iter().cloned().fold(f64::INFINITY, f64::min);
+        // chain bound
+        let mut lb = self.device_free.iter().cloned().fold(0.0, f64::max);
+        for i in 0..self.p.units.len() {
+            if self.remaining[i] > 0.0 {
+                lb = lb.max(self.model_free[i].max(dmin) + self.remaining[i]);
+            }
+        }
+        // aggregate work bound: all remaining work + device head-starts
+        let head: f64 = self.device_free.iter().map(|d| d - dmin).sum();
+        let total: f64 = self.remaining.iter().sum();
+        lb.max(dmin + (total + head) / self.p.devices as f64)
+    }
+
+    /// One application of a branch decision (for undo on backtrack).
+    fn make_frame(&self) -> Frame {
+        // Branch: assign some unfinished model's next unit to the earliest
+        // device. Identical devices => fixing the earliest device loses no
+        // active schedules.
+        let (d, _) = self
+            .device_free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        // Candidate models, ordered by a heuristic (longest remaining first)
+        // so the first incumbent is strong. Candidates whose model_free is
+        // later than d_free start with deliberate idle time — still active
+        // schedules, must be explored.
+        let mut cands: Vec<usize> = (0..self.p.units.len())
+            .filter(|&i| self.next_unit[i] < self.p.units[i].len())
+            .collect();
+        cands.sort_by(|&a, &b| {
+            self.remaining[b].partial_cmp(&self.remaining[a]).unwrap()
+        });
+        Frame { d, d_free: self.device_free[d], cands, next: 0, applied: None }
+    }
+
+    fn undo(&mut self, frame: &mut Frame) {
+        if let Some((i, old_mf, dur)) = frame.applied.take() {
+            self.next_unit[i] -= 1;
+            self.model_free[i] = old_mf;
+            self.device_free[frame.d] = frame.d_free;
+            self.remaining[i] += dur;
+        }
+    }
+
+    /// Iterative DFS with explicit stack: search depth equals the number of
+    /// scheduled units (tens of thousands at Fig-7 scale), far beyond the
+    /// thread stack a recursive formulation would tolerate.
+    fn search(&mut self) {
+        let mut stack: Vec<Frame> = vec![self.make_frame()];
+        while !stack.is_empty() {
+            let top = stack.len() - 1;
+            // undo the previous application at this frame, if any
+            let mut frame = std::mem::replace(&mut stack[top], Frame::dummy());
+            self.undo(&mut frame);
+            if self.timed_out || frame.next >= frame.cands.len() {
+                stack.pop();
+                continue;
+            }
+            let i = frame.cands[frame.next];
+            frame.next += 1;
+
+            // apply decision: model i's next unit on device frame.d
+            let start = frame.d_free.max(self.model_free[i]);
+            let dur = self.p.units[i][self.next_unit[i]];
+            let end = start + dur;
+            self.next_unit[i] += 1;
+            let old_mf = self.model_free[i];
+            self.model_free[i] = end;
+            self.device_free[frame.d] = end;
+            self.remaining[i] -= dur;
+            frame.applied = Some((i, old_mf, dur));
+            stack[top] = frame;
+
+            self.nodes += 1;
+            if self.nodes % 4096 == 0 && Instant::now() >= self.deadline {
+                self.timed_out = true;
+            }
+
+            // leaf? (index-based: float residue in `remaining` must not
+            // affect completion detection)
+            if (0..self.p.units.len())
+                .all(|m| self.next_unit[m] >= self.p.units[m].len())
+            {
+                let mk = self.device_free.iter().cloned().fold(0.0, f64::max);
+                if mk < self.best - EPS {
+                    self.best = mk;
+                }
+                continue; // undo happens when this frame is revisited
+            }
+            if self.lb() >= self.best - EPS {
+                continue; // pruned
+            }
+            stack.push(self.make_frame());
+        }
+    }
+}
+
+/// Explicit DFS frame (see `Search::search`).
+struct Frame {
+    d: usize,
+    d_free: f64,
+    cands: Vec<usize>,
+    next: usize,
+    /// (model, old model_free, duration) of the currently applied decision.
+    applied: Option<(usize, f64, f64)>,
+}
+
+impl Frame {
+    fn dummy() -> Frame {
+        Frame { d: 0, d_free: 0.0, cands: Vec::new(), next: 0, applied: None }
+    }
+}
+
+/// Solve to optimality or best-incumbent-within-budget.
+///
+/// `incumbent`: a known feasible makespan (e.g. from Sharded-LRTF) used to
+/// warm-start pruning, mirroring how one would warm-start Gurobi.
+pub fn solve(p: &Problem, budget: Duration, incumbent: Option<f64>) -> Solution {
+    assert!(p.devices > 0);
+    let mut s = Search {
+        p,
+        next_unit: vec![0; p.units.len()],
+        model_free: vec![0.0; p.units.len()],
+        device_free: vec![0.0; p.devices],
+        remaining: p.units.iter().map(|u| u.iter().sum()).collect(),
+        best: incumbent.unwrap_or(f64::INFINITY) + EPS,
+        nodes: 0,
+        deadline: Instant::now() + budget,
+        timed_out: false,
+    };
+    s.search();
+    let mut makespan = if s.best.is_finite() {
+        s.best
+    } else {
+        incumbent.unwrap_or(f64::INFINITY)
+    };
+    if let Some(inc) = incumbent {
+        makespan = makespan.min(inc); // warm start remains feasible
+    }
+    Solution { makespan, proven_optimal: !s.timed_out, nodes: s.nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prob(units: &[&[f64]], devices: usize) -> Problem {
+        Problem { units: units.iter().map(|u| u.to_vec()).collect(), devices }
+    }
+
+    #[test]
+    fn single_model_single_device_is_chain_sum() {
+        let p = prob(&[&[1.0, 2.0, 3.0]], 1);
+        let s = solve(&p, Duration::from_secs(5), None);
+        assert!(s.proven_optimal);
+        assert!((s.makespan - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn independent_models_parallelise_perfectly() {
+        let p = prob(&[&[2.0, 2.0], &[2.0, 2.0]], 2);
+        let s = solve(&p, Duration::from_secs(5), None);
+        assert!(s.proven_optimal);
+        assert!((s.makespan - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_models_than_devices_packs_work() {
+        // 3 models x 2 units x 1.0 on 2 devices: total 6, LB = 3;
+        // chains of 2 => achievable: d1: A,A,C  d2: B,B,C -> 3.0? C's units
+        // must be sequential: C1 at t=2 on d1, C2 at t=3 -> mk 4? or
+        // interleave: d1: A1 B1 C2?? Let's trust the solver + LB check.
+        let p = prob(&[&[1.0, 1.0], &[1.0, 1.0], &[1.0, 1.0]], 2);
+        let s = solve(&p, Duration::from_secs(10), None);
+        assert!(s.proven_optimal);
+        assert!((s.makespan - 3.0).abs() < 1e-9, "{}", s.makespan);
+    }
+
+    #[test]
+    fn chain_dominates_when_one_model_is_huge() {
+        let p = prob(&[&[10.0, 10.0], &[1.0]], 4);
+        let s = solve(&p, Duration::from_secs(5), None);
+        assert!(s.proven_optimal);
+        assert!((s.makespan - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn never_below_lower_bound_randomised() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for _ in 0..25 {
+            let t = rng.range_u64(1, 4) as usize;
+            let d = rng.range_u64(1, 3) as usize;
+            let units: Vec<Vec<f64>> = (0..t)
+                .map(|_| {
+                    (0..rng.range_u64(1, 4))
+                        .map(|_| rng.range_f64(0.5, 3.0))
+                        .collect()
+                })
+                .collect();
+            let p = Problem { units, devices: d };
+            let s = solve(&p, Duration::from_secs(2), None);
+            assert!(
+                s.makespan >= p.lower_bound() - 1e-6,
+                "makespan {} < lb {}",
+                s.makespan,
+                p.lower_bound()
+            );
+        }
+    }
+
+    #[test]
+    fn incumbent_bounds_result() {
+        let p = prob(&[&[1.0, 1.0], &[1.0, 1.0]], 1);
+        // feasible: 4.0 total work on 1 device
+        let s = solve(&p, Duration::from_secs(5), Some(4.0));
+        assert!((s.makespan - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timeout_returns_incumbent_not_worse() {
+        // big instance, zero budget: must return the warm-start incumbent
+        let units: Vec<Vec<f64>> = (0..10).map(|_| vec![1.0; 50]).collect();
+        let p = Problem { units, devices: 3 };
+        let s = solve(&p, Duration::from_millis(0), Some(500.0));
+        assert!(s.makespan <= 500.0 + 1e-9);
+    }
+}

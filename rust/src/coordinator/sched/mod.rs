@@ -1,0 +1,283 @@
+//! Scheduling policies for SHARP (§4.7).
+//!
+//! A scheduler is consulted whenever a device frees up: it picks one model
+//! from the *eligible* set (front-of-queue, not running elsewhere). The
+//! engine enforces all MILP constraints (sequential order per model, device
+//! isolation); policies only order the eligible set.
+
+pub mod bnb;
+
+use crate::coordinator::task::ModelSnapshot;
+use crate::util::rng::Rng;
+
+/// Context a policy may use when picking (device affinity etc.).
+#[derive(Debug, Clone, Copy)]
+pub struct PickContext<'a> {
+    /// Virtual time of the decision.
+    pub now: f64,
+    /// Device the unit would run on.
+    pub device: usize,
+    /// (model, shard) already resident on this device, if any — lets
+    /// affinity-aware policies exploit the §4.6 no-move bonus.
+    pub resident: Option<&'a [(usize, u32)]>,
+}
+
+/// A scheduling policy. Returns an index into `eligible`, or None to leave
+/// the device idle (no policy in this crate ever does when work exists).
+pub trait Scheduler: Send {
+    fn name(&self) -> &'static str;
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        ctx: PickContext<'_>,
+        rng: &mut Rng,
+    ) -> Option<usize>;
+}
+
+// ---------------------------------------------------------------------------
+// Sharded-LRTF — Algorithm 2, the paper's scheduler
+// ---------------------------------------------------------------------------
+
+/// Sharded Longest-Remaining-Time-First: pick the eligible model with the
+/// largest total remaining train time. O(|eligible|) per decision; the
+/// remaining-time values themselves are maintained incrementally by
+/// `ModelTask::retire`, so there is no per-decision recomputation.
+#[derive(Debug, Default)]
+pub struct ShardedLrtf;
+
+impl Scheduler for ShardedLrtf {
+    fn name(&self) -> &'static str {
+        "sharded-lrtf"
+    }
+
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        _ctx: PickContext<'_>,
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, m) in eligible.iter().enumerate() {
+            match best {
+                // ties broken by lower model id for determinism
+                Some((_, t)) if m.remaining_time <= t => {}
+                _ => best = Some((i, m.remaining_time)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline policies (Fig 7 comparisons + extras)
+// ---------------------------------------------------------------------------
+
+/// Uniform random choice among eligible models (paper's "Random").
+#[derive(Debug, Default)]
+pub struct RandomSched;
+
+impl Scheduler for RandomSched {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        _ctx: PickContext<'_>,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        if eligible.is_empty() {
+            None
+        } else {
+            Some(rng.below(eligible.len() as u64) as usize)
+        }
+    }
+}
+
+/// First-come-first-served by model id (arrival order).
+#[derive(Debug, Default)]
+pub struct FifoSched;
+
+impl Scheduler for FifoSched {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        _ctx: PickContext<'_>,
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        eligible
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, m)| m.id)
+            .map(|(i, _)| i)
+    }
+}
+
+/// Shortest-Remaining-Time-First (the classic makespan anti-pattern here —
+/// kept as an ablation showing *why* LRTF's ordering matters in §4.7.2's
+/// case-degradation argument).
+#[derive(Debug, Default)]
+pub struct SrtfSched;
+
+impl Scheduler for SrtfSched {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        _ctx: PickContext<'_>,
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, m) in eligible.iter().enumerate() {
+            match best {
+                Some((_, t)) if m.remaining_time >= t => {}
+                _ => best = Some((i, m.remaining_time)),
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+/// LRTF with device affinity: prefer a model whose front shard is already
+/// resident on this device (§4.6 no-transfer bonus), falling back to plain
+/// LRTF. An extension beyond the paper, benchmarked in the ablations.
+#[derive(Debug, Default)]
+pub struct AffinityLrtf;
+
+impl Scheduler for AffinityLrtf {
+    fn name(&self) -> &'static str {
+        "affinity-lrtf"
+    }
+
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        ctx: PickContext<'_>,
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        if let Some(resident) = ctx.resident {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, m) in eligible.iter().enumerate() {
+                if resident.contains(&(m.id, m.front_shard)) {
+                    match best {
+                        Some((_, t)) if m.remaining_time <= t => {}
+                        _ => best = Some((i, m.remaining_time)),
+                    }
+                }
+            }
+            if let Some((i, _)) = best {
+                return Some(i);
+            }
+        }
+        ShardedLrtf.pick(eligible, ctx, rng)
+    }
+}
+
+/// Construct a policy by name (CLI / config surface).
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "sharded-lrtf" | "lrtf" => Some(Box::new(ShardedLrtf)),
+        "random" => Some(Box::new(RandomSched)),
+        "fifo" => Some(Box::new(FifoSched)),
+        "srtf" => Some(Box::new(SrtfSched)),
+        "affinity-lrtf" => Some(Box::new(AffinityLrtf)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::unit::Phase;
+
+    fn snap(id: usize, remaining: f64) -> ModelSnapshot {
+        ModelSnapshot {
+            id,
+            remaining_time: remaining,
+            remaining_units: 10,
+            front_cost: 1.0,
+            front_shard: 0,
+            front_phase: Phase::Fwd,
+        }
+    }
+
+    fn ctx() -> PickContext<'static> {
+        PickContext { now: 0.0, device: 0, resident: None }
+    }
+
+    #[test]
+    fn lrtf_picks_longest() {
+        let mut s = ShardedLrtf;
+        let es = [snap(0, 5.0), snap(1, 9.0), snap(2, 3.0)];
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(1));
+    }
+
+    #[test]
+    fn lrtf_breaks_ties_by_lower_id() {
+        let mut s = ShardedLrtf;
+        let es = [snap(3, 5.0), snap(1, 5.0)];
+        // first index with strictly greater time wins; ties keep earlier
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(0));
+    }
+
+    #[test]
+    fn srtf_picks_shortest() {
+        let mut s = SrtfSched;
+        let es = [snap(0, 5.0), snap(1, 9.0), snap(2, 3.0)];
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(2));
+    }
+
+    #[test]
+    fn fifo_picks_lowest_id() {
+        let mut s = FifoSched;
+        let es = [snap(7, 5.0), snap(2, 9.0), snap(9, 3.0)];
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(1));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed_and_in_range() {
+        let mut s = RandomSched;
+        let es = [snap(0, 1.0), snap(1, 1.0), snap(2, 1.0)];
+        let picks1: Vec<_> = (0..10)
+            .map(|i| s.pick(&es, ctx(), &mut Rng::new(i)).unwrap())
+            .collect();
+        let picks2: Vec<_> = (0..10)
+            .map(|i| s.pick(&es, ctx(), &mut Rng::new(i)).unwrap())
+            .collect();
+        assert_eq!(picks1, picks2);
+        assert!(picks1.iter().all(|&p| p < 3));
+        assert!(picks1.iter().any(|&p| p != picks1[0])); // some variety
+    }
+
+    #[test]
+    fn empty_eligible_returns_none() {
+        for name in ["sharded-lrtf", "random", "fifo", "srtf", "affinity-lrtf"] {
+            let mut s = by_name(name).unwrap();
+            assert_eq!(s.pick(&[], ctx(), &mut Rng::new(0)), None, "{name}");
+        }
+    }
+
+    #[test]
+    fn affinity_prefers_resident_shard() {
+        let mut s = AffinityLrtf;
+        let es = [snap(0, 9.0), snap(1, 2.0)];
+        let resident = [(1usize, 0u32)];
+        let c = PickContext { now: 0.0, device: 0, resident: Some(&resident) };
+        assert_eq!(s.pick(&es, c, &mut Rng::new(0)), Some(1));
+        // without residency info falls back to LRTF
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(0));
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("gurobi").is_none());
+    }
+}

@@ -1,0 +1,604 @@
+//! SHARP — Shard Alternator Parallelism (§4.4): the event-driven engine
+//! that blends the shard-unit queues of many models over a pool of devices.
+//!
+//! The engine runs in *virtual time*: every decision (eligibility, memory
+//! promotion/demotion, double-buffer prefetch, stalls) is identical whether
+//! the execution backend is the discrete-event cost model (`SimBackend`) or
+//! the real PJRT runtime (`RealBackend`, which reports measured wallclock as
+//! the unit duration). That is what lets one engine both *reproduce the
+//! paper's figures* at 8-GPU scale and *actually train* models on this
+//! machine (DESIGN.md §1).
+//!
+//! Invariants enforced here (and property-tested in rust/tests):
+//!   1. sequential order of a model's shard units (MILP constraint (a)),
+//!   2. device isolation — one unit per device at a time (b, c),
+//!   3. model isolation — one in-flight unit per model,
+//!   4. ledgers never exceed device capacity,
+//!   5. every unit executes exactly once.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::buffer::DoubleBuffer;
+use crate::coordinator::memory::{DeviceLedger, DramPool, Residency};
+use crate::coordinator::metrics::{Interval, IntervalKind, Trace};
+use crate::coordinator::sched::{PickContext, Scheduler};
+use crate::coordinator::task::{ModelSnapshot, ModelTask, TaskState};
+use crate::coordinator::unit::{Phase, ShardUnit};
+use crate::error::{HydraError, Result};
+use crate::exec::ExecutionBackend;
+use crate::util::rng::Rng;
+
+/// Link cost model for DRAM<->device transfers (PCIe class by default).
+#[derive(Debug, Clone, Copy)]
+pub struct TransferModel {
+    pub bandwidth_bytes_per_sec: f64,
+    pub latency_secs: f64,
+}
+
+impl TransferModel {
+    pub fn pcie_gen3() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: 12.0e9, latency_secs: 20e-6 }
+    }
+
+    /// Instantaneous transfers (pure-scheduling studies, Fig 7).
+    pub fn zero_cost() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: f64::INFINITY, latency_secs: 0.0 }
+    }
+
+    pub fn secs(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_secs + bytes as f64 / self.bandwidth_bytes_per_sec
+        }
+    }
+}
+
+/// Parallelism mode: SHARP blending vs the spilling-only ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Full SHARP: all idle models are eligible on any free device.
+    Sharp,
+    /// Ablation (Table 3 "without SHARP"): models run one-after-another;
+    /// only the lowest-id unfinished model is ever eligible, so sequential
+    /// shard dependencies leave at most one device busy.
+    Sequential,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    pub mode: ParallelMode,
+    pub double_buffer: bool,
+    /// Fraction of device memory reserved as the prefetch zone (§4.6).
+    pub buffer_frac: f64,
+    pub transfer: TransferModel,
+    pub seed: u64,
+    /// Record per-interval trace entries (disable for very long sims to
+    /// bound memory; aggregates are still collected).
+    pub record_intervals: bool,
+    /// Paper-fidelity mode: spilling moves the *full* shard state (weights +
+    /// gradients + optimizer state) instead of weights-only. Hydra's default
+    /// (false) keeps optimizer state in DRAM with a Rust-side update — the
+    /// same design the real backend implements — which shrinks transfer
+    /// volume ~3x. Used by the Table 3 ablation to recover the paper's
+    /// no-double-buffering penalty.
+    pub full_state_transfers: bool,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            mode: ParallelMode::Sharp,
+            double_buffer: true,
+            buffer_frac: 0.05,
+            transfer: TransferModel::pcie_gen3(),
+            seed: 0,
+            record_intervals: true,
+            full_state_transfers: false,
+        }
+    }
+}
+
+/// A fault-injection / elasticity event (§4.7's dynamic setting).
+#[derive(Debug, Clone, Copy)]
+pub enum ClusterEvent {
+    /// Device joins at `time` with the given memory capacity.
+    Arrive { time: f64, mem_bytes: u64 },
+    /// Device `device` is lost at `time` (takes effect when its in-flight
+    /// unit retires; the unit itself completes — fail-stop between units).
+    Fail { time: f64, device: usize },
+}
+
+#[derive(Debug)]
+struct DeviceState {
+    id: usize,
+    ledger: DeviceLedger,
+    buffer: DoubleBuffer,
+    /// (model, shard) whose parameters are resident from the previous unit.
+    resident: Option<(usize, u32)>,
+    /// Unit pre-claimed for this device by the double-buffer path.
+    pending: Option<ShardUnit>,
+    alive: bool,
+    /// Set while a unit is in flight.
+    busy: bool,
+    fail_pending: bool,
+    /// Bytes that flow back to DRAM when the resident shard is evicted.
+    last_demote_bytes: u64,
+}
+
+/// Totally ordered f64 key for the event heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Key(f64);
+
+impl Eq for Key {}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    /// A device finished its unit (or is ready at start-up).
+    DeviceFree { device: usize },
+    /// The unit on `device` retires at this time; model becomes idle.
+    UnitRetire { device: usize, unit: ShardUnit },
+    Cluster(usize), // index into the cluster-event list
+}
+
+/// Result summary of an engine run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub trace: Trace,
+    pub makespan: f64,
+    pub utilization: f64,
+    pub compute_secs: f64,
+    pub transfer_secs: f64,
+    pub stall_secs: f64,
+    pub units_executed: u64,
+    pub promoted_bytes: u64,
+    pub demoted_bytes: u64,
+    pub scheduler: &'static str,
+}
+
+/// The SHARP engine.
+pub struct SharpEngine<'a> {
+    pub tasks: Vec<ModelTask>,
+    devices: Vec<DeviceState>,
+    dram: DramPool,
+    options: EngineOptions,
+    scheduler: Box<dyn Scheduler>,
+    backend: &'a mut dyn ExecutionBackend,
+    cluster_events: Vec<ClusterEvent>,
+    // run state
+    heap: BinaryHeap<Reverse<(Key, u64, usize)>>, // (time, seq, event idx)
+    events: Vec<Event>,
+    seq: u64,
+    trace: Trace,
+    units_executed: u64,
+    agg_compute: f64,
+    agg_transfer: f64,
+    agg_stall: f64,
+    rng: Rng,
+}
+
+impl<'a> SharpEngine<'a> {
+    pub fn new(
+        tasks: Vec<ModelTask>,
+        device_mem: &[u64],
+        dram_bytes: u64,
+        scheduler: Box<dyn Scheduler>,
+        backend: &'a mut dyn ExecutionBackend,
+        options: EngineOptions,
+    ) -> Result<SharpEngine<'a>> {
+        if device_mem.is_empty() {
+            return Err(HydraError::Config("no devices".into()));
+        }
+        let mut dram = DramPool::new(dram_bytes);
+        for t in &tasks {
+            dram.home(t.total_param_bytes())?;
+        }
+        let mut devices = Vec::new();
+        for (id, &mem) in device_mem.iter().enumerate() {
+            devices.push(Self::mk_device(id, mem, &options)?);
+        }
+        let rng = Rng::new(options.seed);
+        Ok(SharpEngine {
+            tasks,
+            devices,
+            dram,
+            options,
+            scheduler,
+            backend,
+            cluster_events: Vec::new(),
+            heap: BinaryHeap::new(),
+            events: Vec::new(),
+            seq: 0,
+            trace: Trace::default(),
+            units_executed: 0,
+            agg_compute: 0.0,
+            agg_transfer: 0.0,
+            agg_stall: 0.0,
+            rng,
+        })
+    }
+
+    fn mk_device(id: usize, mem: u64, options: &EngineOptions) -> Result<DeviceState> {
+        let mut ledger = DeviceLedger::new(id, mem);
+        let zone = (mem as f64 * options.buffer_frac) as u64;
+        let buffer = DoubleBuffer::new(options.double_buffer, zone, &mut ledger)?;
+        Ok(DeviceState {
+            id,
+            ledger,
+            buffer,
+            resident: None,
+            pending: None,
+            alive: true,
+            busy: false,
+            fail_pending: false,
+            last_demote_bytes: 0,
+        })
+    }
+
+    /// Register arrival/failure events before `run`.
+    pub fn with_cluster_events(mut self, events: Vec<ClusterEvent>) -> Self {
+        self.cluster_events = events;
+        self
+    }
+
+    fn push_event(&mut self, time: f64, ev: Event) {
+        let idx = self.events.len();
+        self.events.push(ev);
+        self.heap.push(Reverse((Key(time), self.seq, idx)));
+        self.seq += 1;
+    }
+
+    /// Eligible model snapshots under the current parallel mode.
+    fn eligible(&self) -> Vec<ModelSnapshot> {
+        match self.options.mode {
+            ParallelMode::Sharp => self
+                .tasks
+                .iter()
+                .filter_map(ModelSnapshot::of)
+                .collect(),
+            ParallelMode::Sequential => {
+                // only the lowest-id unfinished model may run
+                for t in &self.tasks {
+                    if t.state() != TaskState::Done {
+                        return ModelSnapshot::of(t).into_iter().collect();
+                    }
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    /// Run to completion; returns the report.
+    pub fn run(&mut self) -> Result<RunReport> {
+        for d in 0..self.devices.len() {
+            self.trace.set_device_window(d, 0.0, f64::INFINITY);
+            self.push_event(0.0, Event::DeviceFree { device: d });
+        }
+        for (i, ev) in self.cluster_events.clone().into_iter().enumerate() {
+            let time = match ev {
+                ClusterEvent::Arrive { time, .. } | ClusterEvent::Fail { time, .. } => time,
+            };
+            self.push_event(time, Event::Cluster(i));
+        }
+
+        while let Some(Reverse((Key(now), _, idx))) = self.heap.pop() {
+            match self.events[idx] {
+                Event::DeviceFree { device } => self.on_device_free(device, now)?,
+                Event::UnitRetire { device, unit } => self.on_unit_retire(device, unit, now)?,
+                Event::Cluster(i) => self.on_cluster_event(i, now)?,
+            }
+        }
+
+        // Sanity: every task finished (unless devices all died).
+        let alive = self.devices.iter().any(|d| d.alive);
+        let done = self.tasks.iter().all(|t| t.state() == TaskState::Done);
+        if alive && !done {
+            return Err(HydraError::Sched(
+                "engine drained events with unfinished tasks".into(),
+            ));
+        }
+
+        self.trace.close_device_windows();
+        let device_secs = self.trace.device_seconds();
+        let utilization =
+            if device_secs > 0.0 { self.agg_compute / device_secs } else { 0.0 };
+        Ok(RunReport {
+            makespan: self.trace.makespan,
+            utilization,
+            compute_secs: self.agg_compute,
+            transfer_secs: self.agg_transfer,
+            stall_secs: self.agg_stall,
+            units_executed: self.units_executed,
+            promoted_bytes: self.dram.promoted_bytes,
+            demoted_bytes: self.dram.demoted_bytes,
+            scheduler: self.scheduler.name(),
+            trace: std::mem::take(&mut self.trace),
+        })
+    }
+
+    fn on_cluster_event(&mut self, i: usize, now: f64) -> Result<()> {
+        match self.cluster_events[i] {
+            ClusterEvent::Arrive { mem_bytes, .. } => {
+                let id = self.devices.len();
+                self.devices.push(Self::mk_device(id, mem_bytes, &self.options)?);
+                self.trace.set_device_window(id, now, f64::INFINITY);
+                self.push_event(now, Event::DeviceFree { device: id });
+            }
+            ClusterEvent::Fail { device, .. } => {
+                if device < self.devices.len() && self.devices[device].alive {
+                    if self.devices[device].busy {
+                        // fail-stop between units: take effect on retire
+                        self.devices[device].fail_pending = true;
+                    } else {
+                        self.kill_device(device, now);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn kill_device(&mut self, device: usize, now: f64) {
+        let pending = self.devices[device].pending.take();
+        self.devices[device].alive = false;
+        self.devices[device].buffer.clear();
+        self.devices[device].resident = None;
+        if let Some(u) = pending {
+            // return the pre-claimed unit to its model's queue
+            self.tasks[u.model].unclaim(&u);
+        }
+        let start = self.trace.device_windows.get(&device).map(|w| w.0).unwrap_or(0.0);
+        self.trace.set_device_window(device, start, now);
+        // pre-claimed model may now be runnable elsewhere
+        self.wake_idle_devices(now);
+    }
+
+    /// Wake every idle live device (a model may have become eligible).
+    fn wake_idle_devices(&mut self, now: f64) {
+        let idle: Vec<usize> = self
+            .devices
+            .iter()
+            .filter(|d| d.alive && !d.busy)
+            .map(|d| d.id)
+            .collect();
+        for d in idle {
+            self.push_event(now, Event::DeviceFree { device: d });
+        }
+    }
+
+    fn on_device_free(&mut self, device: usize, now: f64) -> Result<()> {
+        if !self.devices[device].alive || self.devices[device].busy {
+            return Ok(());
+        }
+        // 1. a pre-claimed (double-buffered) unit takes priority
+        let unit = if let Some(u) = self.devices[device].pending.take() {
+            Some(u)
+        } else {
+            let eligible = self.eligible();
+            let resident: Vec<(usize, u32)> =
+                self.devices[device].resident.into_iter().collect();
+            let ctx = PickContext { now, device, resident: Some(&resident) };
+            match self.scheduler.pick(&eligible, ctx, &mut self.rng) {
+                Some(i) => {
+                    let id = eligible[i].id;
+                    Some(self.tasks[id].claim_front())
+                }
+                None => None, // idle until a retire wakes us
+            }
+        };
+        let Some(unit) = unit else { return Ok(()) };
+        self.start_unit(device, unit, now)
+    }
+
+    /// Promote memory, account transfers/stalls, execute, schedule retire.
+    fn start_unit(&mut self, device: usize, unit: ShardUnit, now: f64) -> Result<()> {
+        let task_shard = self.tasks[unit.model].shard(unit.shard).clone();
+        let mut t = now;
+
+        // --- parameter promotion -----------------------------------------
+        let promote_bytes = if self.options.full_state_transfers {
+            task_shard.param_bytes
+        } else {
+            task_shard.transfer_bytes(unit.phase)
+        };
+        let cached = self.devices[device].resident == Some((unit.model, unit.shard));
+        if !cached {
+            // demote whatever was resident (a bwd unit's gradients/updated
+            // weights flow back; fwd demotion is a discard of clean weights)
+            if let Some((m, s)) = self.devices[device].resident.take() {
+                self.devices[device]
+                    .ledger
+                    .release(&Residency::ShardParams { model: m, shard: s });
+                let wb = self.devices[device].last_demote_bytes;
+                self.dram.note_demote(wb);
+                if !self.options.double_buffer && wb > 0 {
+                    // synchronous write-back (no overlap without DB)
+                    let dt = self.options.transfer.secs(wb);
+                    self.record(device, t, t + dt, unit, IntervalKind::Transfer);
+                    t += dt;
+                }
+            }
+            // promote: either consume the prefetched copy or transfer now
+            let stall = self.devices[device]
+                .buffer
+                .consume(unit.model, unit.shard, t);
+            let dt = match stall {
+                Some(stall) => {
+                    if stall > 0.0 {
+                        self.record(device, t, t + stall, unit, IntervalKind::BufferStall);
+                    }
+                    stall
+                }
+                None => {
+                    let dt = self.options.transfer.secs(promote_bytes);
+                    if dt > 0.0 {
+                        self.record(device, t, t + dt, unit, IntervalKind::Transfer);
+                    }
+                    dt
+                }
+            };
+            t += dt;
+            self.dram.note_promote(promote_bytes);
+            self.devices[device]
+                .ledger
+                .alloc(
+                    Residency::ShardParams { model: unit.model, shard: unit.shard },
+                    task_shard.param_bytes,
+                )?;
+            self.devices[device].resident = Some((unit.model, unit.shard));
+        }
+        // what flows back to DRAM when this residency is evicted: bwd units
+        // produce gradients/updated weights; fwd residency is clean
+        self.devices[device].last_demote_bytes = if self.options.full_state_transfers {
+            task_shard.param_bytes
+        } else {
+            match unit.phase {
+                Phase::Bwd => task_shard.bwd_transfer_bytes,
+                Phase::Fwd => 0,
+            }
+        };
+
+        // --- boundary activation ------------------------------------------
+        // Needed unless this model's previous unit ran on this device and the
+        // checkpoint never left (§4.6 bonus). We approximate with: cached
+        // shard => activation also local (fwd+bwd pairs share the device).
+        let needs_act = unit.shard > 0 || unit.phase == Phase::Bwd;
+        if needs_act && !cached {
+            let dt = self.options.transfer.secs(task_shard.activation_bytes);
+            if dt > 0.0 {
+                self.record(device, t, t + dt, unit, IntervalKind::Transfer);
+                t += dt;
+            }
+        }
+        self.devices[device]
+            .ledger
+            .alloc(Residency::Activation { model: unit.model }, 2 * task_shard.activation_bytes)?;
+
+        // --- execute -------------------------------------------------------
+        let dur = self.backend.execute_unit(&self.tasks[unit.model], &unit)?;
+        self.devices[device].busy = true;
+        self.record(device, t, t + dur, unit, IntervalKind::Compute);
+        let end = t + dur;
+
+        // --- double-buffer prefetch of the *next* unit ----------------------
+        if self.options.double_buffer {
+            self.try_stage_prefetch(device, t);
+        }
+
+        self.push_event(end, Event::UnitRetire { device, unit });
+        Ok(())
+    }
+
+    /// While `device` computes, pick and claim the next unit for it and
+    /// start the prefetch transfer into the buffer zone (§4.6: "the
+    /// Scheduler is actually picking shard units for double-buffering").
+    fn try_stage_prefetch(&mut self, device: usize, now: f64) {
+        if self.devices[device].pending.is_some() || self.devices[device].fail_pending {
+            return;
+        }
+        // Don't steal an eligible model from a device that could run it
+        // *right now* — prefetching is only a win when every device is busy
+        // (claiming for the buffer would otherwise serialise work that task
+        // parallelism would run immediately).
+        if self.devices.iter().any(|d| d.alive && !d.busy) {
+            return;
+        }
+        let eligible = self.eligible();
+        if eligible.is_empty() {
+            return;
+        }
+        let resident: Vec<(usize, u32)> =
+            self.devices[device].resident.into_iter().collect();
+        let ctx = PickContext { now, device, resident: Some(&resident) };
+        let Some(i) = self.scheduler.pick(&eligible, ctx, &mut self.rng) else {
+            return;
+        };
+        let id = eligible[i].id;
+        let unit = self.tasks[id].claim_front();
+        let bytes = if self.options.full_state_transfers {
+            self.tasks[id].shard(unit.shard).param_bytes
+        } else {
+            self.tasks[id].shard(unit.shard).transfer_bytes(unit.phase)
+        };
+        // only stage what fits the protected zone; otherwise fall back to a
+        // synchronous transfer at start time (consume returns None then)
+        if bytes <= self.devices[device].buffer.zone_bytes {
+            let dt = self.options.transfer.secs(bytes);
+            self.devices[device].buffer.stage(id, unit.shard, bytes, now, dt);
+        }
+        self.devices[device].pending = Some(unit);
+    }
+
+    fn on_unit_retire(&mut self, device: usize, unit: ShardUnit, now: f64) -> Result<()> {
+        self.units_executed += 1;
+        self.devices[device].busy = false;
+        self.devices[device]
+            .ledger
+            .release(&Residency::Activation { model: unit.model });
+        self.tasks[unit.model].retire(&unit);
+        self.backend.on_unit_retired(&self.tasks[unit.model], &unit);
+
+        // epoch boundary: last unit of the epoch just retired (training:
+        // bwd of shard 0 on the final mini-batch; inference: fwd of the
+        // last shard) — give the backend its early-stop vote (§4.7.2)
+        let g = self.tasks[unit.model].geometry;
+        let epoch_done = unit.minibatch + 1 == g.minibatches_per_epoch
+            && match unit.phase {
+                Phase::Bwd => unit.shard == 0,
+                Phase::Fwd => g.inference_only && unit.shard + 1 == g.n_shards,
+            };
+        if epoch_done
+            && self.tasks[unit.model].state() == TaskState::Idle
+            && self.backend.should_early_stop(&self.tasks[unit.model], unit.epoch)
+        {
+            self.tasks[unit.model].early_stop();
+        }
+
+        if self.devices[device].fail_pending {
+            self.kill_device(device, now);
+        } else {
+            self.push_event(now, Event::DeviceFree { device });
+        }
+        // The retired model is idle again: other idle devices may now have
+        // eligible work.
+        self.wake_idle_devices(now);
+        Ok(())
+    }
+
+    fn record(&mut self, device: usize, start: f64, end: f64, unit: ShardUnit, kind: IntervalKind) {
+        if end > self.trace.makespan {
+            self.trace.makespan = end;
+        }
+        match kind {
+            IntervalKind::Compute => self.agg_compute += end - start,
+            IntervalKind::Transfer => self.agg_transfer += end - start,
+            IntervalKind::BufferStall => self.agg_stall += end - start,
+        }
+        if self.options.record_intervals {
+            self.trace.record(Interval {
+                device,
+                start,
+                end,
+                model: unit.model,
+                shard: unit.shard,
+                phase: unit.phase,
+                unit_seq: unit.seq_idx,
+                kind,
+            });
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Model tasks: one entry of the user's multi-model workload (Figure 4's
+//! `ModelTask`), plus the runtime bookkeeping the scheduler needs —
+//! queue-front tracking, remaining-time accounting, running/idle state.
+
+use crate::coordinator::unit::{Phase, ShardUnit, UnitGeometry};
+
+/// Per-shard static description produced by the partitioner.
+#[derive(Debug, Clone)]
+pub struct ShardDesc {
+    /// Resident bytes on a device while this shard's unit runs (weights +
+    /// gradient buffer + optimizer state) — what the memory ledger charges.
+    pub param_bytes: u64,
+    /// Bytes actually moved DRAM->device for a forward unit (weights only:
+    /// optimizer state stays in DRAM, ZeRO-Offload-style, exactly like the
+    /// real backend's Rust-side optimizer).
+    pub fwd_transfer_bytes: u64,
+    /// Bytes moved for a backward unit (weights in, gradients out).
+    pub bwd_transfer_bytes: u64,
+    /// Bytes of the boundary activation checkpoint handed to the next unit.
+    pub activation_bytes: u64,
+    /// Estimated forward-unit compute seconds (from the pilot run / cost
+    /// model); bwd units are assumed `bwd_factor` times this.
+    pub fwd_cost: f64,
+    /// Estimated backward-unit compute seconds.
+    pub bwd_cost: f64,
+    /// Number of model layers folded into this shard.
+    pub n_layers: u32,
+}
+
+impl ShardDesc {
+    pub fn transfer_bytes(&self, phase: Phase) -> u64 {
+        match phase {
+            Phase::Fwd => self.fwd_transfer_bytes,
+            Phase::Bwd => self.bwd_transfer_bytes,
+        }
+    }
+
+    pub fn cost(&self, phase: Phase) -> f64 {
+        match phase {
+            Phase::Fwd => self.fwd_cost,
+            Phase::Bwd => self.bwd_cost,
+        }
+    }
+}
+
+/// Lifecycle state of a model task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskState {
+    /// Front unit is eligible for scheduling.
+    Idle,
+    /// A unit of this model is running (or buffered) on a device — the
+    /// paper's model-training-isolation constraint (§4.7.1 (b,c)).
+    Running,
+    /// All units retired.
+    Done,
+}
+
+/// A model training task with scheduler bookkeeping.
+#[derive(Debug, Clone)]
+pub struct ModelTask {
+    pub id: usize,
+    /// Human-readable tag, e.g. "bert-lr1e-4-b8".
+    pub name: String,
+    /// Artifact config this model instance executes (real backend).
+    pub config_name: String,
+    pub shards: Vec<ShardDesc>,
+    pub geometry: UnitGeometry,
+    /// Hyperparameters owned by the runtime side (never baked into HLO).
+    pub lr: f32,
+    /// Next queue position to schedule.
+    next_idx: u64,
+    state: TaskState,
+    /// Sum of remaining unit costs (the paper's remaining train time, kept
+    /// incrementally so Sharded-LRTF decisions are O(1) per model).
+    remaining_time: f64,
+    /// Completed-unit counter (== next_idx unless a unit is in flight).
+    completed: u64,
+}
+
+impl ModelTask {
+    pub fn new(
+        id: usize,
+        name: impl Into<String>,
+        config_name: impl Into<String>,
+        shards: Vec<ShardDesc>,
+        minibatches_per_epoch: u32,
+        epochs: u32,
+        lr: f32,
+    ) -> ModelTask {
+        assert!(!shards.is_empty());
+        let geometry =
+            UnitGeometry::new(shards.len() as u32, minibatches_per_epoch, epochs);
+        let per_mb: f64 =
+            shards.iter().map(|s| s.fwd_cost + s.bwd_cost).sum();
+        let remaining_time =
+            per_mb * (minibatches_per_epoch as f64) * (epochs as f64);
+        ModelTask {
+            id,
+            name: name.into(),
+            config_name: config_name.into(),
+            shards,
+            geometry,
+            lr,
+            next_idx: 0,
+            state: TaskState::Idle,
+            remaining_time,
+            completed: 0,
+        }
+    }
+
+    /// An inference task: forward-only units over `batches` batches
+    /// (paper §6 — spilling/partitioning/orchestration already suffice
+    /// for out-of-the-box large-model inference).
+    pub fn new_inference(
+        id: usize,
+        name: impl Into<String>,
+        config_name: impl Into<String>,
+        shards: Vec<ShardDesc>,
+        batches: u32,
+    ) -> ModelTask {
+        assert!(!shards.is_empty());
+        let geometry = UnitGeometry::new_inference(shards.len() as u32, batches);
+        let per_batch: f64 = shards.iter().map(|s| s.fwd_cost).sum();
+        let remaining_time = per_batch * batches as f64;
+        ModelTask {
+            id,
+            name: name.into(),
+            config_name: config_name.into(),
+            shards,
+            geometry,
+            lr: 0.0,
+            next_idx: 0,
+            state: TaskState::Idle,
+            remaining_time,
+            completed: 0,
+        }
+    }
+
+    pub fn state(&self) -> TaskState {
+        self.state
+    }
+
+    pub fn total_units(&self) -> u64 {
+        self.geometry.total_units()
+    }
+
+    pub fn completed_units(&self) -> u64 {
+        self.completed
+    }
+
+    /// Remaining total train time (Sharded-LRTF's key, Algorithm 2).
+    pub fn remaining_time(&self) -> f64 {
+        self.remaining_time
+    }
+
+    /// The unit at the front of the queue, if any.
+    pub fn front_unit(&self) -> Option<ShardUnit> {
+        (self.next_idx < self.total_units())
+            .then(|| self.geometry.unit_at(self.id, self.next_idx))
+    }
+
+    pub fn shard(&self, idx: u32) -> &ShardDesc {
+        &self.shards[idx as usize]
+    }
+
+    /// Cost estimate of the front unit.
+    pub fn front_cost(&self) -> Option<f64> {
+        self.front_unit().map(|u| self.shard(u.shard).cost(u.phase))
+    }
+
+    /// Mark the front unit as claimed by a device (scheduled or buffered).
+    /// Returns the claimed unit. Panics if not Idle (isolation invariant).
+    pub fn claim_front(&mut self) -> ShardUnit {
+        assert_eq!(self.state, TaskState::Idle, "model {} not idle", self.id);
+        let u = self.front_unit().expect("claim on finished task");
+        self.state = TaskState::Running;
+        self.next_idx += 1;
+        u
+    }
+
+    /// Mark a claimed unit as retired; updates remaining time and state.
+    pub fn retire(&mut self, unit: &ShardUnit) {
+        assert_eq!(self.state, TaskState::Running);
+        debug_assert_eq!(unit.seq_idx + 1, self.next_idx);
+        self.remaining_time -= self.shard(unit.shard).cost(unit.phase);
+        if self.remaining_time < 0.0 {
+            self.remaining_time = 0.0;
+        }
+        self.completed += 1;
+        self.state = if self.next_idx >= self.total_units() {
+            TaskState::Done
+        } else {
+            TaskState::Idle
+        };
+    }
+
+    /// Cancel a claim without running it (failure injection / device loss).
+    pub fn unclaim(&mut self, unit: &ShardUnit) {
+        assert_eq!(self.state, TaskState::Running);
+        debug_assert_eq!(unit.seq_idx + 1, self.next_idx);
+        self.next_idx -= 1;
+        self.state = TaskState::Idle;
+    }
+
+    /// Early-stop: drop all remaining units (Hyperband-style, §4.7.2).
+    pub fn early_stop(&mut self) {
+        if self.state != TaskState::Done && self.state != TaskState::Running {
+            self.remaining_time = 0.0;
+            self.next_idx = self.total_units();
+            self.state = TaskState::Done;
+        }
+    }
+
+    /// Total bytes of this model's parameters across shards.
+    pub fn total_param_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.param_bytes).sum()
+    }
+}
+
+/// Immutable scheduler view of one model (what `Scheduler::pick` sees).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSnapshot {
+    pub id: usize,
+    pub remaining_time: f64,
+    pub remaining_units: u64,
+    pub front_cost: f64,
+    /// Shard index of the front unit (for affinity-aware policies).
+    pub front_shard: u32,
+    pub front_phase: Phase,
+}
+
+impl ModelSnapshot {
+    pub fn of(task: &ModelTask) -> Option<ModelSnapshot> {
+        let u = task.front_unit()?;
+        if task.state() != TaskState::Idle {
+            return None;
+        }
+        Some(ModelSnapshot {
+            id: task.id,
+            remaining_time: task.remaining_time(),
+            remaining_units: task.total_units() - task.completed_units(),
+            front_cost: task.shard(u.shard).cost(u.phase),
+            front_shard: u.shard,
+            front_phase: u.phase,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_task(shards: usize, mbs: u32, epochs: u32) -> ModelTask {
+        let sd = (0..shards)
+            .map(|i| ShardDesc {
+                param_bytes: 1000,
+                fwd_transfer_bytes: 400,
+                bwd_transfer_bytes: 800,
+                activation_bytes: 100,
+                fwd_cost: 1.0 + i as f64,
+                bwd_cost: 2.0 * (1.0 + i as f64),
+                n_layers: 1,
+            })
+            .collect();
+        ModelTask::new(0, "t", "cfg", sd, mbs, epochs, 1e-3)
+    }
+
+    #[test]
+    fn remaining_time_initialises_to_total() {
+        let t = mk_task(2, 3, 2);
+        // per minibatch: (1+2) + (2+4) = 9; * 3 mbs * 2 epochs = 54
+        assert!((t.remaining_time() - 54.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn claim_retire_cycle_updates_state() {
+        let mut t = mk_task(2, 1, 1);
+        assert_eq!(t.state(), TaskState::Idle);
+        let u = t.claim_front();
+        assert_eq!(u.shard, 0);
+        assert_eq!(u.phase, Phase::Fwd);
+        assert_eq!(t.state(), TaskState::Running);
+        t.retire(&u);
+        assert_eq!(t.state(), TaskState::Idle);
+        assert!((t.remaining_time() - 8.0).abs() < 1e-9); // 9 - 1
+    }
+
+    #[test]
+    fn completes_after_all_units() {
+        let mut t = mk_task(2, 1, 1);
+        for _ in 0..4 {
+            let u = t.claim_front();
+            t.retire(&u);
+        }
+        assert_eq!(t.state(), TaskState::Done);
+        assert!(t.front_unit().is_none());
+        assert!(t.remaining_time().abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "not idle")]
+    fn double_claim_panics() {
+        let mut t = mk_task(2, 1, 1);
+        t.claim_front();
+        t.claim_front();
+    }
+
+    #[test]
+    fn unclaim_restores_front() {
+        let mut t = mk_task(2, 1, 1);
+        let u = t.claim_front();
+        t.unclaim(&u);
+        assert_eq!(t.state(), TaskState::Idle);
+        assert_eq!(t.front_unit().unwrap().seq_idx, 0);
+    }
+
+    #[test]
+    fn early_stop_finishes_task() {
+        let mut t = mk_task(2, 5, 5);
+        let u = t.claim_front();
+        t.retire(&u);
+        t.early_stop();
+        assert_eq!(t.state(), TaskState::Done);
+        assert_eq!(t.remaining_time(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_only_for_idle() {
+        let mut t = mk_task(2, 1, 1);
+        assert!(ModelSnapshot::of(&t).is_some());
+        let _u = t.claim_front();
+        assert!(ModelSnapshot::of(&t).is_none());
+    }
+}

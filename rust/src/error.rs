@@ -1,0 +1,32 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum HydraError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("json error: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("device out of memory: need {needed} bytes, free {free} (device {device})")]
+    DeviceOom { device: usize, needed: u64, free: u64 },
+
+    #[error("scheduling error: {0}")]
+    Sched(String),
+
+    #[error("execution error: {0}")]
+    Exec(String),
+}
+
+pub type Result<T> = std::result::Result<T, HydraError>;

@@ -1,0 +1,113 @@
+//! Execution backends for the SHARP engine.
+//!
+//! The engine's scheduling, spilling and buffering logic is backend-agnostic
+//! (DESIGN.md §1): `SimBackend` advances virtual time by a calibrated cost
+//! model (paper-scale figure reproduction); `RealBackend` (exec::real)
+//! executes the AOT HLO artifacts on the PJRT CPU client and reports
+//! measured wallclock, while actually updating model parameters.
+
+pub mod real;
+
+use crate::coordinator::task::ModelTask;
+use crate::coordinator::unit::ShardUnit;
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+/// A backend executes shard units and observes retirements.
+pub trait ExecutionBackend {
+    /// Execute one shard unit; returns its compute duration in (virtual)
+    /// seconds. For the sim backend this is the cost model; for the real
+    /// backend it is measured wallclock of the PJRT execution.
+    fn execute_unit(&mut self, task: &ModelTask, unit: &ShardUnit) -> Result<f64>;
+
+    /// Called after the engine retires a unit (loss logging, optimizer
+    /// hooks). Default: no-op.
+    fn on_unit_retired(&mut self, _task: &ModelTask, _unit: &ShardUnit) {}
+
+    /// Consulted at each epoch boundary (§4.7.2: convergence-based stopping
+    /// and AutoML early stopping). Returning true drops the model's
+    /// remaining units. Default: never stop.
+    fn should_early_stop(&mut self, _task: &ModelTask, _epoch: u32) -> bool {
+        false
+    }
+}
+
+/// Cost-model backend: unit duration = ShardDesc estimate, optionally
+/// perturbed by multiplicative noise to model runtime variance.
+pub struct SimBackend {
+    /// Relative noise amplitude (0.0 = deterministic; 0.05 = ±5%).
+    pub noise: f64,
+    rng: Rng,
+}
+
+impl SimBackend {
+    pub fn new(noise: f64, seed: u64) -> SimBackend {
+        SimBackend { noise, rng: Rng::new(seed) }
+    }
+
+    pub fn deterministic() -> SimBackend {
+        SimBackend::new(0.0, 0)
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn execute_unit(&mut self, task: &ModelTask, unit: &ShardUnit) -> Result<f64> {
+        let base = task.shard(unit.shard).cost(unit.phase);
+        if self.noise == 0.0 {
+            Ok(base)
+        } else {
+            let f = 1.0 + self.noise * (2.0 * self.rng.uniform() - 1.0);
+            Ok(base * f.max(0.01))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::{ModelTask, ShardDesc};
+
+    fn task() -> ModelTask {
+        ModelTask::new(
+            0,
+            "t",
+            "cfg",
+            vec![ShardDesc {
+                param_bytes: 1,
+                fwd_transfer_bytes: 1,
+                bwd_transfer_bytes: 1,
+                activation_bytes: 1,
+                fwd_cost: 2.0,
+                bwd_cost: 4.0,
+                n_layers: 1,
+            }],
+            1,
+            1,
+            0.1,
+        )
+    }
+
+    #[test]
+    fn deterministic_returns_cost_model() {
+        let mut b = SimBackend::deterministic();
+        let t = task();
+        let fwd = t.geometry.unit_at(0, 0);
+        let bwd = t.geometry.unit_at(0, 1);
+        assert_eq!(b.execute_unit(&t, &fwd).unwrap(), 2.0);
+        assert_eq!(b.execute_unit(&t, &bwd).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn noise_stays_within_band_and_is_seeded() {
+        let t = task();
+        let fwd = t.geometry.unit_at(0, 0);
+        let mut b1 = SimBackend::new(0.1, 7);
+        let mut b2 = SimBackend::new(0.1, 7);
+        for _ in 0..100 {
+            let d1 = b1.execute_unit(&t, &fwd).unwrap();
+            let d2 = b2.execute_unit(&t, &fwd).unwrap();
+            assert_eq!(d1, d2);
+            assert!(d1 >= 2.0 * 0.9 - 1e-9 && d1 <= 2.0 * 1.1 + 1e-9, "{d1}");
+        }
+    }
+}

@@ -1,0 +1,611 @@
+//! Real execution backend: shard units run the AOT-compiled HLO artifacts on
+//! the PJRT CPU client, parameters live in host memory (the DRAM tier of the
+//! spilling design), and optimizer steps apply per-shard as backward units
+//! retire. Unit durations reported to the engine are measured wallclock, so
+//! the virtual-time schedule reflects real compute.
+//!
+//! Backward recompute: only shard-boundary activations are checkpointed
+//! (paper §4.6); a bwd unit first re-runs the shard's interior forwards from
+//! the checkpoint, then walks the layers in reverse applying *_bwd HLOs.
+
+use std::time::Instant;
+
+use crate::coordinator::partitioner::{partition, LayerDesc, Partition, PartitionPolicy};
+use crate::coordinator::task::ModelTask;
+use crate::coordinator::unit::{Phase, ShardUnit};
+use crate::error::{HydraError, Result};
+use crate::exec::ExecutionBackend;
+use crate::runtime::{ConfigArtifacts, Manifest, ModelKind, RuntimeClient};
+use crate::tensor::{DType, HostTensor};
+use crate::train::data::DataGen;
+use crate::train::optimizer::{OptKind, OptSlot, Optimizer};
+use crate::util::rng::Rng;
+
+/// User-facing training spec for one model (Figure 4's ModelTask fields).
+#[derive(Debug, Clone)]
+pub struct RealModelSpec {
+    pub name: String,
+    pub config: String,
+    pub lr: f32,
+    pub opt: OptKind,
+    pub epochs: u32,
+    pub minibatches_per_epoch: u32,
+    pub seed: u64,
+    /// Forward-only inference task (paper §6). Losses are still logged per
+    /// batch (they are the model's NLL on the eval stream) but no gradients
+    /// or optimizer steps happen.
+    pub inference: bool,
+}
+
+/// A model layer at shard granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LayerKind {
+    Embed,
+    Block,
+    Head,
+}
+
+impl LayerKind {
+    fn exe(self, phase: Phase) -> &'static str {
+        match (self, phase) {
+            (LayerKind::Embed, Phase::Fwd) => "embed_fwd",
+            (LayerKind::Embed, Phase::Bwd) => "embed_bwd",
+            (LayerKind::Block, Phase::Fwd) => "block_fwd",
+            (LayerKind::Block, Phase::Bwd) => "block_bwd",
+            (LayerKind::Head, Phase::Fwd) => "head_fwd",
+            (LayerKind::Head, Phase::Bwd) => "head_bwd",
+        }
+    }
+}
+
+/// Mutable training state of one model instance.
+struct ModelState {
+    spec: RealModelSpec,
+    cfg: ConfigArtifacts,
+    layers: Vec<LayerKind>,
+    /// Parameters per layer, in manifest spec order (the HLO ABI).
+    params: Vec<Vec<HostTensor>>,
+    opt: Optimizer,
+    slots: Vec<Vec<OptSlot>>,
+    /// Layer ranges per shard: shard i covers layers[ranges[i].0..ranges[i].1].
+    ranges: Vec<(usize, usize)>,
+    /// Checkpointed input activation per shard boundary (index = layer).
+    boundary: Vec<Option<HostTensor>>,
+    /// Cotangent flowing down between bwd shard units.
+    cot: Option<HostTensor>,
+    datagen: DataGen,
+    /// Loss per minibatch (step, loss), appended by head_fwd.
+    pub losses: Vec<(u64, f32)>,
+    step: u64,
+}
+
+impl ModelState {
+    fn minibatch_data(&self, epoch: u32, minibatch: u32) -> (HostTensor, HostTensor) {
+        self.datagen.minibatch(&self.cfg.config, epoch, minibatch)
+    }
+
+    fn layer_params(&self, layer: usize) -> Vec<&HostTensor> {
+        self.params[layer].iter().collect()
+    }
+}
+
+/// Measured pilot-run statistics for one artifact config (Algorithm 1's
+/// "record runtime statistics for later use by our Scheduler").
+#[derive(Debug, Clone, Copy)]
+pub struct PilotStats {
+    pub embed_fwd: f64,
+    pub embed_bwd: f64,
+    pub block_fwd: f64,
+    pub block_bwd: f64,
+    pub head_fwd: f64,
+    pub head_bwd: f64,
+}
+
+/// Median early-stopping rule (§4.7.2 / Vizier-style): after `min_epochs`,
+/// a model whose epoch-mean loss is worse than the median of all models'
+/// means at the same epoch is stopped.
+#[derive(Debug, Clone, Copy)]
+pub struct MedianRule {
+    pub min_epochs: u32,
+}
+
+/// The real backend: owns the runtime client and all model states.
+pub struct RealBackend {
+    client: RuntimeClient,
+    states: Vec<ModelState>,
+    /// Optional AutoML-style early stopping across the model set.
+    pub early_stop: Option<MedianRule>,
+}
+
+impl RealBackend {
+    /// Build states + ModelTasks: pilot-runs each distinct config, estimates
+    /// layer memory footprints, partitions against the smallest device, and
+    /// initialises parameters (seeded).
+    pub fn build(
+        manifest_dir: &str,
+        specs: &[RealModelSpec],
+        min_device_mem: u64,
+        policy: PartitionPolicy,
+    ) -> Result<(RealBackend, Vec<ModelTask>)> {
+        let manifest = Manifest::load(manifest_dir)?;
+        let mut client = RuntimeClient::new(manifest)?;
+
+        let mut states = Vec::new();
+        let mut tasks = Vec::new();
+        let mut pilot_cache: std::collections::BTreeMap<String, PilotStats> =
+            Default::default();
+
+        for (id, spec) in specs.iter().enumerate() {
+            let cfg = client.config(&spec.config)?.clone();
+            let pilot = match pilot_cache.get(&spec.config) {
+                Some(p) => *p,
+                None => {
+                    let p = pilot_run(&mut client, &cfg)?;
+                    pilot_cache.insert(spec.config.clone(), p);
+                    p
+                }
+            };
+
+            let layers = layer_list(&cfg);
+            let layer_descs = layer_descs(&cfg, &layers, &pilot, spec.opt);
+            let part: Partition = partition(&layer_descs, min_device_mem, policy)?;
+            let ranges = ranges_from_cuts(&part.cuts);
+
+            let task = if spec.inference {
+                ModelTask::new_inference(
+                    id,
+                    spec.name.clone(),
+                    spec.config.clone(),
+                    part.shards.clone(),
+                    spec.minibatches_per_epoch,
+                )
+            } else {
+                ModelTask::new(
+                    id,
+                    spec.name.clone(),
+                    spec.config.clone(),
+                    part.shards.clone(),
+                    spec.minibatches_per_epoch,
+                    spec.epochs,
+                    spec.lr,
+                )
+            };
+
+            let mut rng = Rng::new(spec.seed);
+            let params: Vec<Vec<HostTensor>> = layers
+                .iter()
+                .enumerate()
+                .map(|(li, _)| init_layer_params(&cfg, kind_str(layers[li]), &mut rng))
+                .collect();
+            let slots = params
+                .iter()
+                .map(|ps| ps.iter().map(|_| OptSlot::default()).collect())
+                .collect();
+
+            let n_layers = layers.len();
+            states.push(ModelState {
+                spec: spec.clone(),
+                cfg,
+                layers,
+                params,
+                opt: Optimizer::new(spec.opt, spec.lr),
+                slots,
+                ranges,
+                boundary: vec![None; n_layers + 1],
+                cot: None,
+                datagen: DataGen::new(spec.seed ^ 0xDA7A),
+                losses: Vec::new(),
+                step: 0,
+            });
+            tasks.push(task);
+        }
+
+        // Warm the executable cache so compilation never lands mid-schedule.
+        for spec in specs {
+            client.preload_config(&spec.config)?;
+        }
+        Ok((RealBackend { client, states, early_stop: None }, tasks))
+    }
+
+    pub fn loss_log(&self, model: usize) -> &[(u64, f32)] {
+        &self.states[model].losses
+    }
+
+    pub fn model_params(&self, model: usize) -> &[Vec<HostTensor>] {
+        &self.states[model].params
+    }
+
+    pub fn steps_completed(&self, model: usize) -> u64 {
+        self.states[model].step
+    }
+
+    /// Forward one layer; returns its output (head returns loss: logged).
+    /// `recompute` selects the reference-ops forward for interior recompute
+    /// inside bwd units (same numerics, no interpret-mode loops — §Perf L2).
+    fn run_layer_fwd(
+        &mut self,
+        model: usize,
+        layer: usize,
+        input: &HostTensor,
+        unit: &ShardUnit,
+        recompute: bool,
+    ) -> Result<Option<HostTensor>> {
+        let kind = self.states[model].layers[layer];
+        let entry = if recompute && kind == LayerKind::Block {
+            "block_fwd_ref"
+        } else {
+            kind.exe(Phase::Fwd)
+        };
+        let exe = self
+            .client
+            .load(&self.states[model].spec.config, entry)?;
+        match kind {
+            LayerKind::Embed | LayerKind::Block => {
+                let st = &self.states[model];
+                let mut args = st.layer_params(layer);
+                args.push(input);
+                let out = exe.run(&args)?;
+                Ok(Some(out.into_iter().next().unwrap()))
+            }
+            LayerKind::Head => {
+                let (_, targets) =
+                    self.states[model].minibatch_data(unit.epoch, unit.minibatch);
+                let st = &self.states[model];
+                let mut args = st.layer_params(layer);
+                args.push(input);
+                args.push(&targets);
+                let out = exe.run(&args)?;
+                let loss = out[0].scalar_value();
+                let step = self.states[model].step;
+                self.states[model].losses.push((step, loss));
+                if self.states[model].spec.inference {
+                    // forward-only: the batch is complete here
+                    let st = &mut self.states[model];
+                    st.boundary.iter_mut().for_each(|b| *b = None);
+                    st.step += 1;
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Backward one layer: returns d_input (None for embed) and applies the
+    /// optimizer to the layer's parameters.
+    fn run_layer_bwd(
+        &mut self,
+        model: usize,
+        layer: usize,
+        input: &HostTensor,
+        cot: Option<&HostTensor>,
+        unit: &ShardUnit,
+    ) -> Result<Option<HostTensor>> {
+        let kind = self.states[model].layers[layer];
+        let exe = self
+            .client
+            .load(&self.states[model].spec.config, kind.exe(Phase::Bwd))?;
+        let (d_input, grads): (Option<HostTensor>, Vec<HostTensor>) = match kind {
+            LayerKind::Head => {
+                let (_, targets) =
+                    self.states[model].minibatch_data(unit.epoch, unit.minibatch);
+                let st = &self.states[model];
+                let mut args = st.layer_params(layer);
+                args.push(input);
+                args.push(&targets);
+                let mut out = exe.run(&args)?;
+                // outputs: [loss, d_x, grads...]
+                let grads = out.split_off(2);
+                let d_x = out.pop().unwrap();
+                (Some(d_x), grads)
+            }
+            LayerKind::Block => {
+                let cot = cot.ok_or_else(|| {
+                    HydraError::Exec("block bwd without cotangent".into())
+                })?;
+                let st = &self.states[model];
+                let mut args = st.layer_params(layer);
+                args.push(input);
+                args.push(cot);
+                let mut out = exe.run(&args)?;
+                // outputs: [d_x, grads...]
+                let grads = out.split_off(1);
+                let d_x = out.pop().unwrap();
+                (Some(d_x), grads)
+            }
+            LayerKind::Embed => {
+                let cot = cot.ok_or_else(|| {
+                    HydraError::Exec("embed bwd without cotangent".into())
+                })?;
+                let (data, _) =
+                    self.states[model].minibatch_data(unit.epoch, unit.minibatch);
+                let st = &self.states[model];
+                let mut args = st.layer_params(layer);
+                args.push(&data);
+                args.push(cot);
+                let out = exe.run(&args)?;
+                (None, out)
+            }
+        };
+        // optimizer step on this layer
+        let st = &mut self.states[model];
+        debug_assert_eq!(grads.len(), st.params[layer].len());
+        for (i, g) in grads.iter().enumerate() {
+            let mut slot = std::mem::take(&mut st.slots[layer][i]);
+            st.opt.step(&mut st.params[layer][i], g, &mut slot);
+            st.slots[layer][i] = slot;
+        }
+        Ok(d_input)
+    }
+
+    fn exec_fwd_unit(&mut self, model: usize, unit: &ShardUnit) -> Result<()> {
+        let (a, b) = self.states[model].ranges[unit.shard as usize];
+        let mut x: HostTensor = if a == 0 {
+            let (data, _) = self.states[model].minibatch_data(unit.epoch, unit.minibatch);
+            data
+        } else {
+            self.states[model].boundary[a]
+                .clone()
+                .ok_or_else(|| HydraError::Exec(format!(
+                    "model {model}: missing boundary activation at layer {a}")))?
+        };
+        for layer in a..b {
+            match self.run_layer_fwd(model, layer, &x, unit, false)? {
+                Some(out) => x = out,
+                None => return Ok(()), // head: minibatch forward complete
+            }
+        }
+        self.states[model].boundary[b] = Some(x);
+        Ok(())
+    }
+
+    fn exec_bwd_unit(&mut self, model: usize, unit: &ShardUnit) -> Result<()> {
+        let (a, b) = self.states[model].ranges[unit.shard as usize];
+        // 1. recompute interior inputs from the boundary checkpoint
+        let mut xs: Vec<HostTensor> = Vec::with_capacity(b - a);
+        let mut x: HostTensor = if a == 0 {
+            self.states[model].minibatch_data(unit.epoch, unit.minibatch).0
+        } else {
+            self.states[model].boundary[a]
+                .clone()
+                .ok_or_else(|| HydraError::Exec(format!(
+                    "model {model}: missing boundary activation at layer {a}")))?
+        };
+        for layer in a..b {
+            xs.push(x.clone());
+            if layer + 1 < b {
+                x = self
+                    .run_layer_fwd(model, layer, &x, unit, true)?
+                    .ok_or_else(|| HydraError::Exec("head mid-shard".into()))?;
+            }
+        }
+        // 2. reverse sweep
+        let mut cot = self.states[model].cot.take();
+        for (idx, layer) in (a..b).enumerate().rev() {
+            cot = self.run_layer_bwd(model, layer, &xs[idx], cot.as_ref(), unit)?;
+        }
+        if a == 0 {
+            // minibatch complete: clear checkpoints, bump step
+            let st = &mut self.states[model];
+            st.boundary.iter_mut().for_each(|bnd| *bnd = None);
+            st.cot = None;
+            st.step += 1;
+        } else {
+            self.states[model].cot = cot;
+            self.states[model].boundary[b] = None; // consumed
+        }
+        Ok(())
+    }
+}
+
+impl RealBackend {
+    /// Mean loss of `model` during `epoch` (None if not fully recorded).
+    fn epoch_mean_loss(&self, model: usize, epoch: u32) -> Option<f32> {
+        let st = &self.states[model];
+        let mbs = st.spec.minibatches_per_epoch as usize;
+        let lo = epoch as usize * mbs;
+        let hi = lo + mbs;
+        if st.losses.len() < hi {
+            return None;
+        }
+        Some(st.losses[lo..hi].iter().map(|&(_, l)| l).sum::<f32>() / mbs as f32)
+    }
+}
+
+impl ExecutionBackend for RealBackend {
+    fn execute_unit(&mut self, task: &ModelTask, unit: &ShardUnit) -> Result<f64> {
+        let t0 = Instant::now();
+        match unit.phase {
+            Phase::Fwd => self.exec_fwd_unit(task.id, unit)?,
+            Phase::Bwd => self.exec_bwd_unit(task.id, unit)?,
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn should_early_stop(&mut self, task: &ModelTask, epoch: u32) -> bool {
+        let Some(rule) = self.early_stop else { return false };
+        if epoch + 1 < rule.min_epochs {
+            return false;
+        }
+        let Some(mine) = self.epoch_mean_loss(task.id, epoch) else {
+            return false;
+        };
+        // median over every model that has completed this epoch
+        let mut peers: Vec<f32> = (0..self.states.len())
+            .filter_map(|m| self.epoch_mean_loss(m, epoch))
+            .collect();
+        if peers.len() < 2 {
+            return false;
+        }
+        peers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = peers[peers.len() / 2];
+        mine > median
+    }
+}
+
+// ---------------------------------------------------------------------------
+// construction helpers
+// ---------------------------------------------------------------------------
+
+fn kind_str(k: LayerKind) -> &'static str {
+    match k {
+        LayerKind::Embed => "embed",
+        LayerKind::Block => "block",
+        LayerKind::Head => "head",
+    }
+}
+
+fn layer_list(cfg: &ConfigArtifacts) -> Vec<LayerKind> {
+    let mut layers = vec![LayerKind::Embed];
+    layers.extend(std::iter::repeat(LayerKind::Block).take(cfg.config.n_layers));
+    layers.push(LayerKind::Head);
+    layers
+}
+
+/// Initialise one layer's parameters per the manifest init specs.
+pub fn init_layer_params(
+    cfg: &ConfigArtifacts,
+    kind: &str,
+    rng: &mut Rng,
+) -> Vec<HostTensor> {
+    cfg.param_specs(kind)
+        .iter()
+        .map(|p| match p.init {
+            crate::runtime::InitSpec::Normal { std } => {
+                HostTensor::normal(&p.shape, std, rng)
+            }
+            crate::runtime::InitSpec::Zeros => HostTensor::zeros(&p.shape, DType::F32),
+            crate::runtime::InitSpec::Ones => HostTensor::ones(&p.shape),
+        })
+        .collect()
+}
+
+/// Estimated memory footprints + measured costs per layer.
+fn layer_descs(
+    cfg: &ConfigArtifacts,
+    layers: &[LayerKind],
+    pilot: &PilotStats,
+    opt: OptKind,
+) -> Vec<LayerDesc> {
+    let c = &cfg.config;
+    let opt_factor = 1 + opt.state_factor();
+    let act = (c.batch * c.seq * c.d_model * 4) as u64;
+    let wbytes = |kind: &str| -> u64 {
+        cfg.param_specs(kind).iter().map(|p| p.size_bytes()).sum::<u64>()
+    };
+    let pbytes = |kind: &str| -> u64 { wbytes(kind) * opt_factor };
+    // workspace: intra-layer activations. Block: qkv + attn + ffn hidden;
+    // head: logits dominate; embed: negligible beyond output.
+    let block_ws = (c.batch * c.seq * (3 * c.d_model + c.d_ff) * 4) as u64;
+    let head_ws = (c.batch * c.seq * c.vocab * 4) as u64;
+    layers
+        .iter()
+        .map(|k| match k {
+            LayerKind::Embed => LayerDesc {
+                param_bytes: pbytes("embed"),
+                weight_bytes: wbytes("embed"),
+                workspace_bytes: act,
+                activation_bytes: act,
+                fwd_cost: pilot.embed_fwd,
+                bwd_cost: pilot.embed_bwd,
+            },
+            LayerKind::Block => LayerDesc {
+                param_bytes: pbytes("block"),
+                weight_bytes: wbytes("block"),
+                workspace_bytes: block_ws,
+                activation_bytes: act,
+                fwd_cost: pilot.block_fwd,
+                bwd_cost: pilot.block_bwd,
+            },
+            LayerKind::Head => LayerDesc {
+                param_bytes: pbytes("head"),
+                weight_bytes: wbytes("head"),
+                workspace_bytes: head_ws,
+                activation_bytes: act,
+                fwd_cost: pilot.head_fwd,
+                bwd_cost: pilot.head_bwd,
+            },
+        })
+        .collect()
+}
+
+fn ranges_from_cuts(cuts: &[usize]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::with_capacity(cuts.len());
+    let mut start = 0;
+    for &end in cuts {
+        ranges.push((start, end));
+        start = end;
+    }
+    ranges
+}
+
+/// Algorithm 1's pilot pass: run each entry point once with synthetic
+/// inputs, recording wallclock. Compilation happens here too, so the pilot
+/// also serves as the warm-up.
+fn pilot_run(client: &mut RuntimeClient, cfg: &ConfigArtifacts) -> Result<PilotStats> {
+    let c = cfg.config.clone();
+    let mut rng = Rng::new(0x9107);
+    let name = c.name.clone();
+
+    let embed_p = init_layer_params(cfg, "embed", &mut rng);
+    let block_p = init_layer_params(cfg, "block", &mut rng);
+    let head_p = init_layer_params(cfg, "head", &mut rng);
+
+    let data = match c.kind {
+        ModelKind::Lm => HostTensor::from_i32(
+            &[c.batch, c.seq],
+            (0..c.batch * c.seq).map(|i| (i % c.vocab) as i32).collect(),
+        ),
+        ModelKind::Cls => {
+            HostTensor::normal(&[c.batch, c.seq, c.patch_dim], 1.0, &mut rng)
+        }
+    };
+    let targets = match c.kind {
+        ModelKind::Lm => HostTensor::from_i32(
+            &[c.batch, c.seq],
+            (0..c.batch * c.seq).map(|i| ((i * 3) % c.vocab) as i32).collect(),
+        ),
+        ModelKind::Cls => HostTensor::from_i32(
+            &[c.batch],
+            (0..c.batch).map(|i| (i % c.vocab) as i32).collect(),
+        ),
+    };
+
+    let timed = |client: &mut RuntimeClient, entry: &str, args: &[&HostTensor]| -> Result<(Vec<HostTensor>, f64)> {
+        let exe = client.load(&name, entry)?;
+        // first call includes one-time buffer warmup; measure second call
+        let _ = exe.run(args)?;
+        let (out, d) = exe.run_timed(args)?;
+        Ok((out, d.as_secs_f64()))
+    };
+
+    let mut args: Vec<&HostTensor> = embed_p.iter().collect();
+    args.push(&data);
+    let (h_out, embed_fwd) = timed(client, "embed_fwd", &args)?;
+    let h = h_out.into_iter().next().unwrap();
+
+    let mut args: Vec<&HostTensor> = embed_p.iter().collect();
+    args.push(&data);
+    args.push(&h);
+    let (_, embed_bwd) = timed(client, "embed_bwd", &args)?;
+
+    let mut args: Vec<&HostTensor> = block_p.iter().collect();
+    args.push(&h);
+    let (y_out, block_fwd) = timed(client, "block_fwd", &args)?;
+    let y = y_out.into_iter().next().unwrap();
+
+    let mut args: Vec<&HostTensor> = block_p.iter().collect();
+    args.push(&h);
+    args.push(&y);
+    let (_, block_bwd) = timed(client, "block_bwd", &args)?;
+
+    let mut args: Vec<&HostTensor> = head_p.iter().collect();
+    args.push(&y);
+    args.push(&targets);
+    let (_, head_fwd) = timed(client, "head_fwd", &args)?;
+
+    let mut args: Vec<&HostTensor> = head_p.iter().collect();
+    args.push(&y);
+    args.push(&targets);
+    let (_, head_bwd) = timed(client, "head_bwd", &args)?;
+
+    Ok(PilotStats { embed_fwd, embed_bwd, block_fwd, block_bwd, head_fwd, head_bwd })
+}

@@ -1,0 +1,765 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §4 experiment index). Each function returns a printable
+//! report plus CSV rows; the `hydra figure <id>` subcommand and the bench
+//! harness both route through here.
+
+use std::time::Duration;
+
+use crate::baselines;
+use crate::coordinator::sched::{self, bnb};
+use crate::coordinator::sharp::{
+    EngineOptions, ParallelMode, RunReport, SharpEngine, TransferModel,
+};
+use crate::coordinator::task::{ModelTask, ShardDesc};
+use crate::error::Result;
+use crate::exec::SimBackend;
+use crate::sim::{bert_grid, build_tasks, uniform_grid, vit_grid, GpuSpec};
+use crate::util::rng::Rng;
+
+/// A rendered figure/table: human-readable rows + CSV for plotting.
+#[derive(Debug, Clone)]
+pub struct FigureOutput {
+    pub id: &'static str,
+    pub title: String,
+    pub lines: Vec<String>,
+    pub csv: String,
+}
+
+impl FigureOutput {
+    pub fn print(&self) {
+        println!("=== {}: {} ===", self.id, self.title);
+        for l in &self.lines {
+            println!("{l}");
+        }
+        println!();
+    }
+
+    pub fn write_csv(&self, dir: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{}.csv", self.id);
+        std::fs::write(path, &self.csv)?;
+        Ok(())
+    }
+}
+
+const DRAM: u64 = 500 << 30; // paper machine: 500 GB DRAM
+
+/// Paper-scale partition/buffer policy: the prefetch zone must hold a full
+/// shard's transferable weights for double-buffering to engage (the paper's
+/// 5% claim assumes activation-dominated shards; at 1B-params/11GB the
+/// weights are the dominant term, so we protect 30%). The partitioner and
+/// the engine share the same fraction.
+const PAPER_BUFFER_FRAC: f64 = 0.30;
+
+fn paper_policy() -> crate::coordinator::partitioner::PartitionPolicy {
+    crate::coordinator::partitioner::PartitionPolicy {
+        buffer_frac: PAPER_BUFFER_FRAC,
+        ..Default::default()
+    }
+}
+
+/// Run the Hydra engine on a task set with the simulated backend.
+pub fn run_hydra(
+    tasks: Vec<ModelTask>,
+    n_devices: usize,
+    device_mem: u64,
+    mode: ParallelMode,
+    double_buffer: bool,
+    scheduler: &str,
+) -> Result<RunReport> {
+    let mut backend = SimBackend::deterministic();
+    let opts = EngineOptions {
+        mode,
+        double_buffer,
+        buffer_frac: PAPER_BUFFER_FRAC,
+        transfer: TransferModel::pcie_gen3(),
+        record_intervals: false,
+        ..Default::default()
+    };
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![device_mem; n_devices],
+        DRAM,
+        sched::by_name(scheduler).expect("scheduler"),
+        &mut backend,
+        opts,
+    )?;
+    engine.run()
+}
+
+fn hours(secs: f64) -> String {
+    format!("{:7.2}h", secs / 3600.0)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 7 — scheduler comparison (normalised makespans)
+// ---------------------------------------------------------------------------
+
+/// Build a Fig-7 style abstract instance as single-shard ModelTasks.
+fn fig7_tasks(hetero: bool, n_models: usize, seed: u64) -> Vec<ModelTask> {
+    let mut rng = Rng::new(seed);
+    (0..n_models)
+        .map(|i| {
+            // homogeneous: 2h per-model runtime over 2000 units;
+            // heterogeneous: 0.5-4h over 100-10000 units (paper §4.7.3)
+            let (total_secs, units) = if hetero {
+                (rng.range_f64(0.5, 4.0) * 3600.0, rng.range_u64(100, 10_000))
+            } else {
+                (2.0 * 3600.0, 2000)
+            };
+            let units = (units / 2).max(1); // fwd+bwd pairs
+            let per_unit = total_secs / (2 * units) as f64;
+            let sd = vec![ShardDesc {
+                param_bytes: 1 << 30,
+                fwd_transfer_bytes: 0,
+                bwd_transfer_bytes: 0,
+                activation_bytes: 1 << 20,
+                fwd_cost: per_unit,
+                bwd_cost: per_unit,
+                n_layers: 1,
+            }];
+            ModelTask::new(i, format!("m{i}"), "fig7", sd, units as u32, 1, 1e-3)
+        })
+        .collect()
+}
+
+fn tasks_to_problem(tasks: &[ModelTask], devices: usize) -> bnb::Problem {
+    bnb::Problem {
+        units: tasks
+            .iter()
+            .map(|t| {
+                (0..t.total_units())
+                    .map(|j| {
+                        let u = t.geometry.unit_at(t.id, j);
+                        t.shard(u.shard).cost(u.phase)
+                    })
+                    .collect()
+            })
+            .collect(),
+        devices,
+    }
+}
+
+/// Figure 7: Sharded-LRTF vs Random vs MILP(BnB, time-budgeted) across
+/// homogeneous and heterogeneous settings. Makespans normalised to the BnB
+/// incumbent (like the paper, the "optimal" may not have converged — the
+/// solver warm-starts from FIFO and keeps its best incumbent).
+pub fn fig7(bnb_budget: Duration) -> Result<FigureOutput> {
+    let mut lines = vec![format!(
+        "{:<14} {:>7} {:>7} {:>9} {:>9} {:>9}",
+        "setting", "models", "devices", "lrtf", "random", "milp"
+    )];
+    let mut csv = String::from("setting,models,devices,lrtf,random,milp\n");
+    for &hetero in &[false, true] {
+        for &(n_models, devices) in &[(4usize, 4usize), (8, 8), (16, 8)] {
+            let mk = |sched: &str, seed: u64| -> Result<f64> {
+                let mut tasks = fig7_tasks(hetero, n_models, 7);
+                for t in tasks.iter_mut() {
+                    *t = t.clone();
+                }
+                let mut backend = SimBackend::deterministic();
+                let opts = EngineOptions {
+                    transfer: TransferModel::zero_cost(),
+                    double_buffer: false,
+                    record_intervals: false,
+                    seed,
+                    ..Default::default()
+                };
+                let mut engine = SharpEngine::new(
+                    tasks,
+                    &vec![16 << 30; devices],
+                    DRAM,
+                    sched::by_name(sched).unwrap(),
+                    &mut backend,
+                    opts,
+                )?;
+                Ok(engine.run()?.makespan)
+            };
+            let lrtf = mk("sharded-lrtf", 0)?;
+            // random: average of 3 seeded runs (paper: 3 runs, mean)
+            let random = (mk("random", 1)? + mk("random", 2)? + mk("random", 3)?) / 3.0;
+            let fifo = mk("fifo", 0)?;
+            let tasks = fig7_tasks(hetero, n_models, 7);
+            let problem = tasks_to_problem(&tasks, devices);
+            let milp = bnb::solve(&problem, bnb_budget, Some(fifo)).makespan;
+            let base = milp.min(lrtf).min(random);
+            let setting = if hetero { "heterogeneous" } else { "homogeneous" };
+            lines.push(format!(
+                "{:<14} {:>7} {:>7} {:>9.3} {:>9.3} {:>9.3}",
+                setting,
+                n_models,
+                devices,
+                lrtf / base,
+                random / base,
+                milp / base
+            ));
+            csv.push_str(&format!(
+                "{setting},{n_models},{devices},{},{},{}\n",
+                lrtf / base,
+                random / base,
+                milp / base
+            ));
+        }
+    }
+    lines.push("(normalised to best-known schedule; paper Fig 7 expects lrtf ≈ 1.0,".into());
+    lines.push(" random ≥ lrtf, milp sometimes > lrtf due to solver timeout)".into());
+    Ok(FigureOutput {
+        id: "fig7",
+        title: "Scheduling algorithm comparison (normalised makespan)".into(),
+        lines,
+        csv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 8 — end-to-end workloads
+// ---------------------------------------------------------------------------
+
+fn fig8_workload(kind: &str) -> Vec<crate::sim::WorkloadModel> {
+    match kind {
+        "bert" => bert_grid(6),
+        _ => vit_grid(3),
+    }
+}
+
+/// One paradigm row: (name, makespan, utilization); Hydra last.
+pub fn fig8_rows(kind: &str) -> Result<Vec<(String, f64, f64)>> {
+    let gpu = GpuSpec::rtx2080ti();
+    let workload = fig8_workload(kind);
+    let tasks = build_tasks(&workload, &gpu, paper_policy())?;
+    let link = baselines::nvlink();
+    let n = 8;
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let mp = baselines::model_parallel(&tasks, n, gpu.mem_bytes, link)?;
+    rows.push(("model-parallel".into(), mp.makespan, mp.utilization));
+    let mpt = baselines::mp_task_hybrid(&tasks, n, gpu.mem_bytes, link)?;
+    rows.push(("mp+task".into(), mpt.makespan, mpt.utilization));
+    let mpd = baselines::mp_data_hybrid(&tasks, n, gpu.mem_bytes, link)?;
+    rows.push(("mp+data".into(), mpd.makespan, mpd.utilization));
+    let pp = baselines::pipeline(&tasks, n, gpu.mem_bytes, link)?;
+    rows.push(("pipeline(gpipe)".into(), pp.makespan, pp.utilization));
+
+    // task parallelism: expected OOM at these scales (paper: "cannot even
+    // benchmark")
+    let acts: Vec<u64> = workload
+        .iter()
+        .map(|w| {
+            (w.model.batch * w.model.seq * w.model.d_model * 4) as u64
+                * w.model.n_layers as u64
+        })
+        .collect();
+    match baselines::task_parallel(&tasks, n, gpu.mem_bytes, &acts) {
+        Ok(tp) => rows.push(("task-parallel".into(), tp.makespan, tp.utilization)),
+        Err(_) => rows.push(("task-parallel".into(), f64::NAN, f64::NAN)),
+    }
+
+    let hydra = run_hydra(
+        build_tasks(&workload, &gpu, paper_policy())?,
+        n,
+        gpu.mem_bytes,
+        ParallelMode::Sharp,
+        true,
+        "sharded-lrtf",
+    )?;
+    rows.push(("hydra".into(), hydra.makespan, hydra.utilization));
+    Ok(rows)
+}
+
+/// Figure 8: runtime speedups vs PyTorch-Distributed-style MP + utilization
+/// for the two Table 2 workloads.
+pub fn fig8() -> Result<FigureOutput> {
+    let mut lines = vec![format!(
+        "{:<10} {:<16} {:>10} {:>9} {:>7}",
+        "workload", "system", "runtime", "speedup", "util"
+    )];
+    let mut csv = String::from("workload,system,runtime_h,speedup,utilization\n");
+    for kind in ["bert", "vit"] {
+        let rows = fig8_rows(kind)?;
+        let mp = rows[0].1;
+        for (name, makespan, util) in &rows {
+            if makespan.is_nan() {
+                lines.push(format!(
+                    "{:<10} {:<16} {:>10} {:>9} {:>7}",
+                    kind, name, "OOM", "-", "-"
+                ));
+                csv.push_str(&format!("{kind},{name},OOM,,\n"));
+            } else {
+                lines.push(format!(
+                    "{:<10} {:<16} {:>10} {:>8.2}x {:>6.1}%",
+                    kind,
+                    name,
+                    hours(*makespan),
+                    mp / makespan,
+                    100.0 * util
+                ));
+                csv.push_str(&format!(
+                    "{kind},{name},{},{},{}\n",
+                    makespan / 3600.0,
+                    mp / makespan,
+                    util
+                ));
+            }
+        }
+    }
+    lines.push("(paper Fig 8: hydra ≈ 7.5x over MP, pipeline ≈ 4x, hybrids between,".into());
+    lines.push(" task-parallel OOM, hydra utilization > 80%)".into());
+    Ok(FigureOutput {
+        id: "fig8",
+        title: "End-to-end workloads: speedup over model parallelism & GPU utilization"
+            .into(),
+        lines,
+        csv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 9A/9B — drill-down sweeps
+// ---------------------------------------------------------------------------
+
+/// Serial reference: all models one after another with no idle parallelism.
+fn serial_reference(tasks: &[ModelTask]) -> f64 {
+    tasks.iter().map(|t| t.remaining_time()).sum()
+}
+
+/// Figure 9A: vary the number of models (1..16) at 8 GPUs, 250M params.
+pub fn fig9a() -> Result<FigureOutput> {
+    let gpu = GpuSpec::rtx2080ti();
+    let mut lines = vec![format!(
+        "{:<8} {:>9} {:>9} {:>7}",
+        "models", "runtime", "speedup", "util"
+    )];
+    let mut csv = String::from("models,runtime_h,speedup,utilization\n");
+    for n in [1usize, 2, 4, 8, 12, 16] {
+        let grid = uniform_grid(n, 250_000_000, 8, 1, 24);
+        let tasks = build_tasks(&grid, &gpu, paper_policy())?;
+        let serial = serial_reference(&tasks);
+        let r = run_hydra(tasks, 8, gpu.mem_bytes, ParallelMode::Sharp, true, "sharded-lrtf")?;
+        let speedup = serial / r.makespan;
+        lines.push(format!(
+            "{:<8} {:>9} {:>8.2}x {:>6.1}%",
+            n,
+            hours(r.makespan),
+            speedup,
+            100.0 * r.utilization
+        ));
+        csv.push_str(&format!(
+            "{n},{},{speedup},{}\n",
+            r.makespan / 3600.0,
+            r.utilization
+        ));
+    }
+    lines.push("(paper Fig 9A: speedup ≈ min(#models, 8), flattening at 8)".into());
+    Ok(FigureOutput {
+        id: "fig9a",
+        title: "Impact of number of models (8 GPUs, 250M params each)".into(),
+        lines,
+        csv,
+    })
+}
+
+/// Figure 9B: vary the number of GPUs (1..8) with 4 models of 250M params.
+pub fn fig9b() -> Result<FigureOutput> {
+    let gpu = GpuSpec::rtx2080ti();
+    let mut lines = vec![format!(
+        "{:<8} {:>9} {:>9} {:>7}",
+        "gpus", "runtime", "speedup", "util"
+    )];
+    let mut csv = String::from("gpus,runtime_h,speedup,utilization\n");
+    let grid = uniform_grid(4, 250_000_000, 8, 1, 24);
+    let base_tasks = build_tasks(&grid, &gpu, paper_policy())?;
+    let serial = serial_reference(&base_tasks);
+    for d in 1..=8usize {
+        let tasks = build_tasks(&grid, &gpu, paper_policy())?;
+        let r = run_hydra(tasks, d, gpu.mem_bytes, ParallelMode::Sharp, true, "sharded-lrtf")?;
+        let speedup = serial / r.makespan;
+        lines.push(format!(
+            "{:<8} {:>9} {:>8.2}x {:>6.1}%",
+            d,
+            hours(r.makespan),
+            speedup,
+            100.0 * r.utilization
+        ));
+        csv.push_str(&format!(
+            "{d},{},{speedup},{}\n",
+            r.makespan / 3600.0,
+            r.utilization
+        ));
+    }
+    lines.push("(paper Fig 9B: near-linear up to #models=4 GPUs, flat beyond)".into());
+    Ok(FigureOutput {
+        id: "fig9b",
+        title: "Impact of number of GPUs (4 models, 250M params each)".into(),
+        lines,
+        csv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Figure 10 — impact of model scale
+// ---------------------------------------------------------------------------
+
+/// Figure 10: paradigm runtimes normalised to model parallelism, across
+/// model scales (12 models, 8 GPUs).
+pub fn fig10() -> Result<FigureOutput> {
+    let gpu = GpuSpec::rtx2080ti();
+    let link = baselines::nvlink();
+    let mut lines = vec![format!(
+        "{:<8} {:<16} {:>10} {:>11}",
+        "scale", "system", "runtime", "norm-to-MP"
+    )];
+    let mut csv = String::from("scale,system,runtime_h,normalized\n");
+    for (params, tag) in [
+        (500_000_000u64, "0.5B"),
+        (1_000_000_000, "1B"),
+        (2_000_000_000, "2B"),
+    ] {
+        let grid = uniform_grid(12, params, 8, 1, 12);
+        let tasks = build_tasks(&grid, &gpu, paper_policy())?;
+        let mp = baselines::model_parallel(&tasks, 8, gpu.mem_bytes, link)?;
+        let pp = baselines::pipeline(&tasks, 8, gpu.mem_bytes, link)?;
+        let hy = run_hydra(
+            build_tasks(&grid, &gpu, paper_policy())?,
+            8,
+            gpu.mem_bytes,
+            ParallelMode::Sharp,
+            true,
+            "sharded-lrtf",
+        )?;
+        for (name, t) in [
+            ("model-parallel", mp.makespan),
+            ("pipeline(gpipe)", pp.makespan),
+            ("hydra", hy.makespan),
+        ] {
+            lines.push(format!(
+                "{:<8} {:<16} {:>10} {:>11.3}",
+                tag,
+                name,
+                hours(t),
+                t / mp.makespan
+            ));
+            csv.push_str(&format!(
+                "{tag},{name},{},{}\n",
+                t / 3600.0,
+                t / mp.makespan
+            ));
+        }
+    }
+    lines.push("(paper Fig 10: hydra's advantage holds steady across scales)".into());
+    Ok(FigureOutput {
+        id: "fig10",
+        title: "Impact of model scale (12 models, 8 GPUs, normalised to MP)".into(),
+        lines,
+        csv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — ablation
+// ---------------------------------------------------------------------------
+
+/// Table 3: disable the two key optimizations one by one
+/// (16 transformer models, 8 devices; spilling always on).
+pub fn table3() -> Result<FigureOutput> {
+    let gpu = GpuSpec::rtx2080ti();
+    let grid = uniform_grid(16, 1_000_000_000, 8, 1, 6);
+    let mk = |mode, db, full_state| -> Result<f64> {
+        let mut backend = SimBackend::deterministic();
+        let opts = EngineOptions {
+            mode,
+            double_buffer: db,
+            buffer_frac: PAPER_BUFFER_FRAC,
+            transfer: TransferModel::pcie_gen3(),
+            record_intervals: false,
+            full_state_transfers: full_state,
+            ..Default::default()
+        };
+        let mut engine = SharpEngine::new(
+            build_tasks(&grid, &gpu, paper_policy())?,
+            &vec![gpu.mem_bytes; 8],
+            DRAM,
+            sched::by_name("sharded-lrtf").unwrap(),
+            &mut backend,
+            opts,
+        )?;
+        Ok(engine.run()?.makespan)
+    };
+    let full = mk(ParallelMode::Sharp, true, false)?;
+    let no_db = mk(ParallelMode::Sharp, false, false)?;
+    let spill_only = mk(ParallelMode::Sequential, false, false)?;
+    // paper-fidelity rows: full shard state (w+g+opt) moves on every spill,
+    // as in the paper's GPU-side-optimizer design
+    let no_db_full_state = mk(ParallelMode::Sharp, false, true)?;
+    let spill_only_full_state = mk(ParallelMode::Sequential, false, true)?;
+
+    let mut lines = vec![format!(
+        "{:<42} {:>10} {:>10}",
+        "optimization level", "runtime", "vs hydra"
+    )];
+    let mut csv = String::from("level,runtime_h,relative\n");
+    for (name, t) in [
+        ("hydra without SHARP or double-buffering", spill_only),
+        ("hydra without double-buffering", no_db),
+        ("hydra (full)", full),
+        ("(paper design) full-state spill, no SHARP/DB", spill_only_full_state),
+        ("(paper design) full-state spill, no DB", no_db_full_state),
+    ] {
+        lines.push(format!(
+            "{:<42} {:>10} {:>9.2}X",
+            name,
+            hours(t),
+            t / full
+        ));
+        csv.push_str(&format!("{name},{},{}\n", t / 3600.0, t / full));
+    }
+    lines.push("(paper Table 3: 13.05X / 2.3X / 1X)".into());
+    Ok(FigureOutput {
+        id: "table3",
+        title: "Ablation: SHARP and double-buffering (16 models, 8 GPUs)".into(),
+        lines,
+        csv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 + Figure 6 — workload definitions & illustrative schedule
+// ---------------------------------------------------------------------------
+
+pub fn table2() -> Result<FigureOutput> {
+    let mut lines = vec![format!(
+        "{:<10} {:<22} {:>9} {:>7} {:>7} {:>7}",
+        "dataset", "model", "params", "batch", "epochs", "mbs"
+    )];
+    let mut csv = String::from("dataset,model,params,batch,epochs,minibatches\n");
+    for w in bert_grid(6) {
+        lines.push(format!(
+            "{:<10} {:<22} {:>8.2}M {:>7} {:>7} {:>7}",
+            "wikitext2",
+            w.name,
+            w.model.total_params() as f64 / 1e6,
+            w.model.batch,
+            w.epochs,
+            w.minibatches_per_epoch
+        ));
+        csv.push_str(&format!(
+            "wikitext2,{},{},{},{},{}\n",
+            w.name,
+            w.model.total_params(),
+            w.model.batch,
+            w.epochs,
+            w.minibatches_per_epoch
+        ));
+    }
+    for w in vit_grid(3) {
+        lines.push(format!(
+            "{:<10} {:<22} {:>8.2}M {:>7} {:>7} {:>7}",
+            "cifar10",
+            w.name,
+            w.model.total_params() as f64 / 1e6,
+            w.model.batch,
+            w.epochs,
+            w.minibatches_per_epoch
+        ));
+        csv.push_str(&format!(
+            "cifar10,{},{},{},{},{}\n",
+            w.name,
+            w.model.total_params(),
+            w.model.batch,
+            w.epochs,
+            w.minibatches_per_epoch
+        ));
+    }
+    Ok(FigureOutput {
+        id: "table2",
+        title: "End-to-end workload definitions (Table 2)".into(),
+        lines,
+        csv,
+    })
+}
+
+/// Figure 6: illustrative SHARP schedule (3 models x 2 shards) as an ASCII
+/// Gantt, with the task-/model-parallel makespans for contrast.
+pub fn fig6() -> Result<FigureOutput> {
+    let mk_tasks = || -> Vec<ModelTask> {
+        (0..3)
+            .map(|i| {
+                let sd = vec![
+                    ShardDesc {
+                        param_bytes: 4 << 30,
+                        fwd_transfer_bytes: 2 << 30,
+                        bwd_transfer_bytes: 2 << 30,
+                        activation_bytes: 8 << 20,
+                        fwd_cost: 1.0,
+                        bwd_cost: 2.0,
+                        n_layers: 1,
+                    };
+                    2
+                ];
+                ModelTask::new(i, format!("m{i}"), "fig6", sd, 2, 1, 1e-3)
+            })
+            .collect()
+    };
+    let mut backend = SimBackend::deterministic();
+    let opts = EngineOptions {
+        transfer: TransferModel::pcie_gen3(),
+        ..Default::default()
+    };
+    let mut engine = SharpEngine::new(
+        mk_tasks(),
+        &vec![11 << 30; 2],
+        DRAM,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        opts,
+    )?;
+    let r = engine.run()?;
+
+    let mp = baselines::model_parallel(
+        &mk_tasks(),
+        2,
+        11 << 30,
+        baselines::nvlink(),
+    )?;
+    let mut lines = Vec::new();
+    lines.push("SHARP schedule (2 devices, 3 models x 2 shards, A/B/C = models):".into());
+    lines.extend(r.trace.gantt(72).lines().map(String::from));
+    lines.push(format!(
+        "SHARP makespan {:.1}s vs model-parallel {:.1}s ({:.2}x)",
+        r.makespan,
+        mp.makespan,
+        mp.makespan / r.makespan
+    ));
+    let csv = format!(
+        "system,makespan\nsharp,{}\nmodel-parallel,{}\n",
+        r.makespan, mp.makespan
+    );
+    Ok(FigureOutput {
+        id: "fig6",
+        title: "Illustrative SHARP schedule vs model parallelism (Fig 6)".into(),
+        lines,
+        csv,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Extension ablations (beyond the paper; DESIGN.md §4 "ablation benches for
+// the design choices")
+// ---------------------------------------------------------------------------
+
+/// ext-sched: all scheduling policies at paper scale on a heterogeneous
+/// workload (where policy choice matters most, §4.7.2).
+pub fn ext_sched() -> Result<FigureOutput> {
+    let gpu = GpuSpec::rtx2080ti();
+    // heterogeneous: mixed scales like the ViT grid
+    let grid = crate::sim::vit_grid(3);
+    let mut lines = vec![format!("{:<16} {:>10} {:>9} {:>7}", "scheduler", "runtime", "vs lrtf", "util")];
+    let mut csv = String::from("scheduler,runtime_h,vs_lrtf,utilization\n");
+    let mut base = None;
+    for sched_name in ["sharded-lrtf", "affinity-lrtf", "fifo", "srtf", "random"] {
+        let tasks = build_tasks(&grid, &gpu, paper_policy())?;
+        let r = run_hydra(tasks, 8, gpu.mem_bytes, ParallelMode::Sharp, true, sched_name)?;
+        let b = *base.get_or_insert(r.makespan);
+        lines.push(format!(
+            "{:<16} {:>10} {:>9.3} {:>6.1}%",
+            sched_name,
+            hours(r.makespan),
+            r.makespan / b,
+            100.0 * r.utilization
+        ));
+        csv.push_str(&format!(
+            "{sched_name},{},{},{}\n",
+            r.makespan / 3600.0,
+            r.makespan / b,
+            r.utilization
+        ));
+    }
+    lines.push("(design ablation: LRTF-family ahead of FIFO/SRTF/random on".into());
+    lines.push(" heterogeneous mixes; affinity tie-break exploits §4.6 caching)".into());
+    Ok(FigureOutput {
+        id: "ext_sched",
+        title: "Extension ablation: scheduling policies at paper scale".into(),
+        lines,
+        csv,
+    })
+}
+
+/// ext-buffer: double-buffer zone size sweep — the §4.6 "5% is enough"
+/// claim holds only when shards are activation-dominated; at 1B-params the
+/// zone must hold a shard's transferable weights to engage.
+pub fn ext_buffer() -> Result<FigureOutput> {
+    let gpu = GpuSpec::rtx2080ti();
+    let grid = uniform_grid(12, 1_000_000_000, 8, 1, 6);
+    let mut lines = vec![format!(
+        "{:<12} {:>10} {:>9} {:>10} {:>10}",
+        "zone frac", "runtime", "util", "stalls(h)", "transfers(h)"
+    )];
+    let mut csv = String::from("buffer_frac,runtime_h,utilization,stall_h,transfer_h\n");
+    for frac in [0.05, 0.10, 0.20, 0.30, 0.40] {
+        let policy = crate::coordinator::partitioner::PartitionPolicy {
+            buffer_frac: frac,
+            ..Default::default()
+        };
+        let tasks = build_tasks(&grid, &gpu, policy)?;
+        let mut backend = SimBackend::deterministic();
+        let opts = EngineOptions {
+            buffer_frac: frac,
+            transfer: TransferModel::pcie_gen3(),
+            record_intervals: false,
+            ..Default::default()
+        };
+        let mut engine = SharpEngine::new(
+            tasks,
+            &vec![gpu.mem_bytes; 8],
+            DRAM,
+            sched::by_name("sharded-lrtf").unwrap(),
+            &mut backend,
+            opts,
+        )?;
+        let r = engine.run()?;
+        lines.push(format!(
+            "{:<12} {:>10} {:>8.1}% {:>10.3} {:>10.3}",
+            format!("{:.0}%", frac * 100.0),
+            hours(r.makespan),
+            100.0 * r.utilization,
+            r.stall_secs / 3600.0,
+            r.transfer_secs / 3600.0
+        ));
+        csv.push_str(&format!(
+            "{frac},{},{},{},{}\n",
+            r.makespan / 3600.0,
+            r.utilization,
+            r.stall_secs / 3600.0,
+            r.transfer_secs / 3600.0
+        ));
+    }
+    lines.push("(small zones cannot stage 1B-scale shards: prefetch disengages and".into());
+    lines.push(" transfers serialise — quantifying the limit of the paper's 5% rule)".into());
+    Ok(FigureOutput {
+        id: "ext_buffer",
+        title: "Extension ablation: double-buffer zone size at 1B scale".into(),
+        lines,
+        csv,
+    })
+}
+
+/// All figure generators by id.
+pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
+    match id {
+        "fig6" => Some(fig6()),
+        "fig7" => Some(fig7(bnb_budget)),
+        "fig8" => Some(fig8()),
+        "fig9a" => Some(fig9a()),
+        "fig9b" => Some(fig9b()),
+        "fig10" => Some(fig10()),
+        "table2" => Some(table2()),
+        "table3" => Some(table3()),
+        "ext_sched" => Some(ext_sched()),
+        "ext_buffer" => Some(ext_buffer()),
+        _ => None,
+    }
+}
+
+pub const ALL_IDS: [&str; 10] = [
+    "table2", "fig6", "fig7", "fig8", "fig9a", "fig9b", "fig10", "table3",
+    "ext_sched", "ext_buffer",
+];

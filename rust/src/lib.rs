@@ -1,0 +1,31 @@
+//! # Hydra
+//!
+//! A reproduction of *"Hydra: An Optimized Data System for Large Multi-Model
+//! Deep Learning"* (Nagrecha & Kumar, PVLDB'22) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! - **L3 (this crate)**: the paper's contribution — model spilling, SHARP
+//!   (Shard Alternator Parallelism), Sharded-LRTF scheduling and
+//!   double-buffering — plus the substrates it needs: a PJRT runtime, a
+//!   memory hierarchy manager, a discrete-event simulator, baseline
+//!   execution paradigms, an optimizer/training stack, and a config/CLI
+//!   launcher.
+//! - **L2/L1 (python/, build-time only)**: JAX shard functions calling
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//!
+//! Start with [`coordinator::ModelOrchestrator`] (mirrors the paper's
+//! Figure 4 API) or the `hydra` binary.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod exec;
+pub mod figures;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use error::{HydraError, Result};

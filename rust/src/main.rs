@@ -1,0 +1,314 @@
+//! `hydra` — CLI launcher for the Hydra multi-model training system.
+//!
+//! Subcommands:
+//!   train     — real multi-model training over the PJRT runtime
+//!   figure    — regenerate a paper figure/table (or `all`)
+//!   simulate  — ad-hoc paper-scale simulation with chosen knobs
+//!   partition — show Algorithm-1 partitioning for a config
+//!   inspect   — list artifact configs and their executables
+
+use std::time::Duration;
+
+use hydra::coordinator::partitioner::PartitionPolicy;
+use hydra::coordinator::sharp::{EngineOptions, ParallelMode, TransferModel};
+use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::exec::real::RealModelSpec;
+use hydra::figures;
+use hydra::runtime::Manifest;
+use hydra::sim::{build_tasks, uniform_grid, GpuSpec};
+use hydra::train::optimizer::OptKind;
+use hydra::util::cli::Args;
+use hydra::util::fmt_bytes;
+
+const USAGE: &str = "\
+hydra — large multi-model deep learning (PVLDB'22 reproduction)
+
+USAGE:
+  hydra train   [--manifest artifacts] [--config tiny-lm-b8] [--models 4]
+                [--devices 2] [--device-mem-mib 4] [--minibatches 8]
+                [--epochs 1] [--lr 0.05] [--opt sgd|momentum|adam]
+                [--scheduler sharded-lrtf] [--no-double-buffer] [--sequential]
+                [--gantt]
+  hydra run     --spec configs/grid_tiny.json [--manifest artifacts] [--gantt]
+  hydra figure  <table2|fig6|fig7|fig8|fig9a|fig9b|fig10|table3|all>
+                [--out results] [--bnb-secs 3]
+  hydra simulate [--models 12] [--params-m 1000] [--devices 8]
+                [--minibatches 6] [--scheduler sharded-lrtf]
+                [--no-double-buffer] [--sequential]
+  hydra partition [--manifest artifacts] [--config tiny-lm-b8]
+                [--device-mem-mib 2]
+  hydra inspect [--manifest artifacts]
+";
+
+fn main() {
+    let flags = ["no-double-buffer", "sequential", "gantt", "help"];
+    let args = match Args::from_env(&flags) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    let result = match args.positional[0].as_str() {
+        "train" => cmd_train(&args),
+        "run" => cmd_run(&args),
+        "figure" => cmd_figure(&args),
+        "simulate" => cmd_simulate(&args),
+        "partition" => cmd_partition(&args),
+        "inspect" => cmd_inspect(&args),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn engine_options(args: &Args) -> EngineOptions {
+    EngineOptions {
+        mode: if args.flag("sequential") {
+            ParallelMode::Sequential
+        } else {
+            ParallelMode::Sharp
+        },
+        double_buffer: !args.flag("no-double-buffer"),
+        transfer: TransferModel::pcie_gen3(),
+        ..Default::default()
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let manifest = args.opt_or("manifest", "artifacts");
+    let config = args.opt_or("config", "tiny-lm-b8");
+    let n_models = args.opt_usize("models", 4).map_err(anyhow::Error::msg)?;
+    let devices = args.opt_usize("devices", 2).map_err(anyhow::Error::msg)?;
+    let mem_mib = args.opt_usize("device-mem-mib", 4).map_err(anyhow::Error::msg)?;
+    let mbs = args.opt_usize("minibatches", 8).map_err(anyhow::Error::msg)? as u32;
+    let epochs = args.opt_usize("epochs", 1).map_err(anyhow::Error::msg)? as u32;
+    let lr = args.opt_f64("lr", 0.05).map_err(anyhow::Error::msg)? as f32;
+    let opt = OptKind::parse(&args.opt_or("opt", "sgd")).map_err(anyhow::Error::msg)?;
+
+    let mut orch = ModelOrchestrator::new(manifest);
+    orch.scheduler = args.opt_or("scheduler", "sharded-lrtf");
+    orch.engine_options = engine_options(args);
+    for i in 0..n_models {
+        // a small hyperparameter grid around the requested lr
+        let lr_i = lr * (1.0 + 0.5 * i as f32);
+        orch.add_task(RealModelSpec {
+            name: format!("{config}-m{i}-lr{lr_i:.4}"),
+            config: config.clone(),
+            lr: lr_i,
+            opt,
+            epochs,
+            minibatches_per_epoch: mbs,
+            seed: 1000 + i as u64,
+            inference: false,
+        });
+    }
+    let cluster = Cluster::uniform(devices, (mem_mib as u64) << 20, 32 << 30);
+    println!(
+        "training {n_models} x {config} on {devices} virtual devices ({} each)...",
+        fmt_bytes((mem_mib as u64) << 20)
+    );
+    let t0 = std::time::Instant::now();
+    let report = orch.train_models(&cluster)?;
+    println!(
+        "done in {:.1}s wallclock | virtual makespan {:.2}s | {} units | util {:.1}% | sched {}",
+        t0.elapsed().as_secs_f64(),
+        report.run.makespan,
+        report.run.units_executed,
+        100.0 * report.run.utilization,
+        report.run.scheduler,
+    );
+    println!(
+        "spill traffic: {} promoted, {} demoted",
+        fmt_bytes(report.run.promoted_bytes),
+        fmt_bytes(report.run.demoted_bytes)
+    );
+    for (i, losses) in report.losses.iter().enumerate() {
+        let first = losses.first().map(|x| x.1).unwrap_or(f32::NAN);
+        let last = losses.last().map(|x| x.1).unwrap_or(f32::NAN);
+        println!("model {i}: loss {first:.4} -> {last:.4} over {} steps", losses.len());
+    }
+    if args.flag("gantt") {
+        println!("{}", report.run.trace.gantt(100));
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let spec_path = args
+        .opt("spec")
+        .ok_or_else(|| anyhow::anyhow!("run requires --spec <file.json>"))?;
+    let manifest = args.opt_or("manifest", "artifacts");
+    let spec = hydra::config::WorkloadSpec::load(spec_path)?;
+    let orch = spec.orchestrator(&manifest);
+    println!(
+        "running spec {spec_path}: {} tasks on {} devices ({} scheduler)",
+        orch.n_tasks(),
+        spec.cluster.device_mem.len(),
+        orch.scheduler
+    );
+    let t0 = std::time::Instant::now();
+    let report = orch.train_models(&spec.cluster)?;
+    println!(
+        "done in {:.1}s wallclock | makespan {:.2}s | {} units | util {:.1}%",
+        t0.elapsed().as_secs_f64(),
+        report.run.makespan,
+        report.run.units_executed,
+        100.0 * report.run.utilization
+    );
+    for (i, (t, losses)) in spec.tasks.iter().zip(&report.losses).enumerate() {
+        let first = losses.first().map(|x| x.1).unwrap_or(f32::NAN);
+        let last = losses.last().map(|x| x.1).unwrap_or(f32::NAN);
+        let stopped = if (losses.len() as u32)
+            < t.epochs * t.minibatches_per_epoch && !t.inference
+        {
+            "  [early-stopped]"
+        } else {
+            ""
+        };
+        println!(
+            "task {i} ({}): loss {first:.4} -> {last:.4} over {} steps{stopped}",
+            t.name,
+            losses.len()
+        );
+    }
+    if args.flag("gantt") {
+        println!("{}", report.run.trace.gantt(100));
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let out = args.opt_or("out", "results");
+    let bnb =
+        Duration::from_secs_f64(args.opt_f64("bnb-secs", 3.0).map_err(anyhow::Error::msg)?);
+    let ids: Vec<&str> = if id == "all" {
+        figures::ALL_IDS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let fig = figures::by_id(id, bnb)
+            .ok_or_else(|| anyhow::anyhow!("unknown figure {id:?}"))??;
+        fig.print();
+        fig.write_csv(&out)?;
+        println!("(csv written to {out}/{id}.csv)\n");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let models = args.opt_usize("models", 12).map_err(anyhow::Error::msg)?;
+    let params_m = args.opt_usize("params-m", 1000).map_err(anyhow::Error::msg)?;
+    let devices = args.opt_usize("devices", 8).map_err(anyhow::Error::msg)?;
+    let mbs = args.opt_usize("minibatches", 6).map_err(anyhow::Error::msg)? as u32;
+    let sched = args.opt_or("scheduler", "sharded-lrtf");
+
+    let gpu = GpuSpec::rtx2080ti();
+    let grid = uniform_grid(models, (params_m as u64) * 1_000_000, 8, 1, mbs);
+    let tasks = build_tasks(&grid, &gpu, PartitionPolicy::default())?;
+    let shards = tasks[0].shards.len();
+    let mode = if args.flag("sequential") {
+        ParallelMode::Sequential
+    } else {
+        ParallelMode::Sharp
+    };
+    let r = figures::run_hydra(
+        tasks,
+        devices,
+        gpu.mem_bytes,
+        mode,
+        !args.flag("no-double-buffer"),
+        &sched,
+    )?;
+    println!("{models} x {params_m}M models ({shards} shards each) on {devices} simulated 2080Ti:");
+    println!(
+        "  makespan {:.2}h | utilization {:.1}% | {} units | compute {:.2}h | transfer {:.2}h | stalls {:.2}h",
+        r.makespan / 3600.0,
+        100.0 * r.utilization,
+        r.units_executed,
+        r.compute_secs / 3600.0,
+        r.transfer_secs / 3600.0,
+        r.stall_secs / 3600.0,
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    let manifest_dir = args.opt_or("manifest", "artifacts");
+    let config = args.opt_or("config", "tiny-lm-b8");
+    let mem_mib = args.opt_usize("device-mem-mib", 2).map_err(anyhow::Error::msg)?;
+
+    let (_backend, tasks) = hydra::exec::real::RealBackend::build(
+        &manifest_dir,
+        &[RealModelSpec {
+            name: "probe".into(),
+            config: config.clone(),
+            lr: 0.01,
+            opt: OptKind::Sgd,
+            epochs: 1,
+            minibatches_per_epoch: 1,
+            seed: 0,
+            inference: false,
+        }],
+        (mem_mib as u64) << 20,
+        PartitionPolicy::default(),
+    )?;
+    let t = &tasks[0];
+    println!(
+        "config {config} on {} devices: {} shards",
+        fmt_bytes((mem_mib as u64) << 20),
+        t.shards.len()
+    );
+    for (i, s) in t.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: {} layers | params {} | act {} | fwd {:.2}ms | bwd {:.2}ms",
+            s.n_layers,
+            fmt_bytes(s.param_bytes),
+            fmt_bytes(s.activation_bytes),
+            1e3 * s.fwd_cost,
+            1e3 * s.bwd_cost
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let manifest_dir = args.opt_or("manifest", "artifacts");
+    let m = Manifest::load(&manifest_dir)?;
+    println!("manifest at {manifest_dir}: {} configs", m.configs.len());
+    for (name, c) in &m.configs {
+        println!(
+            "  {name}: {:?} d={} h={} L={} ff={} seq={} b={} vocab={} | {} params | {} executables",
+            c.config.kind,
+            c.config.d_model,
+            c.config.n_heads,
+            c.config.n_layers,
+            c.config.d_ff,
+            c.config.seq,
+            c.config.batch,
+            c.config.vocab,
+            c.total_params(),
+            c.executables.len()
+        );
+        for (ename, e) in &c.executables {
+            println!(
+                "      {ename}: {} inputs -> {} outputs ({})",
+                e.inputs.len(),
+                e.outputs.len(),
+                e.file
+            );
+        }
+    }
+    Ok(())
+}

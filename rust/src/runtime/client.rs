@@ -1,0 +1,127 @@
+//! PJRT runtime client: loads AOT HLO-text artifacts, compiles them once,
+//! caches the executables, and runs shard units.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* interchange
+//! (xla_extension 0.5.1 rejects jax>=0.5 serialized protos), compile on the
+//! CPU PJRT client, execute with literals, unwrap the return tuple.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use crate::error::{HydraError, Result};
+use crate::runtime::literal::{from_literal, to_literal};
+use crate::runtime::manifest::{ConfigArtifacts, ExecutableSpec, Manifest};
+use crate::tensor::HostTensor;
+
+/// A compiled shard entry point plus its manifest spec.
+pub struct LoadedExecutable {
+    pub spec: ExecutableSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedExecutable {
+    /// Run with host tensors; returns host tensors (tuple flattened).
+    pub fn run(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(HydraError::Exec(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != spec.shape {
+                return Err(HydraError::Exec(format!(
+                    "{}: input {} shape mismatch: got {:?}, want {:?}",
+                    self.spec.name, spec.name, t.shape, spec.shape
+                )));
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| to_literal(t)).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(HydraError::Exec(format!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts.iter().map(from_literal).collect()
+    }
+
+    /// Run and measure wallclock (the real backend's shard-unit cost probe).
+    pub fn run_timed(&self, inputs: &[&HostTensor]) -> Result<(Vec<HostTensor>, Duration)> {
+        let t0 = Instant::now();
+        let out = self.run(inputs)?;
+        Ok((out, t0.elapsed()))
+    }
+}
+
+/// PJRT client + executable cache, keyed by (config, entry point).
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<(String, String), Rc<LoadedExecutable>>,
+}
+
+impl RuntimeClient {
+    pub fn new(manifest: Manifest) -> Result<RuntimeClient> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(RuntimeClient { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigArtifacts> {
+        self.manifest.config(name)
+    }
+
+    /// Load + compile (or fetch from cache) one entry point of one config.
+    pub fn load(&mut self, config: &str, entry: &str) -> Result<Rc<LoadedExecutable>> {
+        let key = (config.to_string(), entry.to_string());
+        if let Some(exe) = self.cache.get(&key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.config(config)?.executable(entry)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Rc::new(LoadedExecutable { spec, exe });
+        self.cache.insert(key, loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Pre-compile every entry point of a config (startup warm-up so compile
+    /// time never lands on the training path).
+    pub fn preload_config(&mut self, config: &str) -> Result<()> {
+        let entries: Vec<String> = self
+            .manifest
+            .config(config)?
+            .executables
+            .keys()
+            .cloned()
+            .collect();
+        for e in entries {
+            self.load(config, &e)?;
+        }
+        Ok(())
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}

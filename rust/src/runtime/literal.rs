@@ -1,0 +1,76 @@
+//! HostTensor <-> xla::Literal conversion. This is the DRAM->device promotion
+//! boundary of the real execution backend.
+
+use crate::error::Result;
+use crate::tensor::{DType, HostTensor, TensorData};
+
+/// Convert a host tensor into an XLA literal (bytes are copied).
+pub fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, &[u8]) = match &t.data {
+        TensorData::F32(v) => (xla::ElementType::F32, bytemuck_f32(v)),
+        TensorData::I32(v) => (xla::ElementType::S32, bytemuck_i32(v)),
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, bytes)?)
+}
+
+/// Convert an XLA literal back into a host tensor.
+pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = lit.to_vec()?;
+            Ok(HostTensor::from_f32(&dims, v))
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = lit.to_vec()?;
+            Ok(HostTensor::from_i32(&dims, v))
+        }
+        other => Err(crate::error::HydraError::Exec(format!(
+            "unsupported literal element type {other:?}"
+        ))),
+    }
+}
+
+pub fn dtype_of(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::I32 => xla::ElementType::S32,
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = to_literal(&t).unwrap();
+        let back = from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_round_trip() {
+        let t = HostTensor::from_i32(&[4], vec![-1, 0, 7, 42]);
+        let back = from_literal(&to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_round_trip() {
+        let t = HostTensor::scalar_f32(2.25);
+        let back = from_literal(&to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.scalar_value(), 2.25);
+        assert!(back.shape.is_empty());
+    }
+}

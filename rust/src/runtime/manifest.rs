@@ -1,0 +1,371 @@
+//! Typed view of `artifacts/manifest.json`, the ABI between the Python AOT
+//! pipeline and the Rust runtime. See python/compile/aot.py for the writer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{HydraError, Result};
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// Mirror of python compile.configs.ModelConfig.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub kind: ModelKind,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub vocab: usize,
+    pub patch_dim: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Lm,
+    Cls,
+}
+
+impl ModelConfig {
+    /// Tokens processed per mini-batch (for throughput reporting).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+/// One parameter array of a shard kind, with its initialiser.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitSpec,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitSpec {
+    Normal { std: f32 },
+    Zeros,
+    Ones,
+}
+
+impl ParamSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> u64 {
+        (self.element_count() * 4) as u64
+    }
+}
+
+/// One compiled HLO entry point.
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One config's full artifact family.
+#[derive(Debug, Clone)]
+pub struct ConfigArtifacts {
+    pub config: ModelConfig,
+    /// Param specs per shard kind: "embed" | "block" | "head".
+    pub params: BTreeMap<String, Vec<ParamSpec>>,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+    pub kernel_vmem_bytes: BTreeMap<String, u64>,
+}
+
+impl ConfigArtifacts {
+    pub fn param_specs(&self, shard_kind: &str) -> &[ParamSpec] {
+        &self.params[shard_kind]
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| HydraError::Manifest(format!(
+                "config {} missing executable {name}", self.config.name)))
+    }
+
+    /// Total parameter count of one model instance of this config.
+    pub fn total_params(&self) -> usize {
+        let one = |k: &str| -> usize {
+            self.params[k].iter().map(|p| p.element_count()).sum()
+        };
+        one("embed") + self.config.n_layers * one("block") + one("head")
+    }
+}
+
+/// Parsed manifest with artifact directory context.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigArtifacts>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| HydraError::Manifest("missing version".into()))?;
+        if version != 1 {
+            return Err(HydraError::Manifest(format!("unsupported version {version}")));
+        }
+        let mut configs = BTreeMap::new();
+        let cfgs = j
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| HydraError::Manifest("missing configs".into()))?;
+        for (name, entry) in cfgs {
+            configs.insert(name.clone(), parse_config_entry(name, entry)?);
+        }
+        Ok(Manifest { dir, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigArtifacts> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| HydraError::Manifest(format!(
+                "unknown config {name:?}; available: {:?}",
+                self.configs.keys().collect::<Vec<_>>())))
+    }
+
+    pub fn hlo_path(&self, exe: &ExecutableSpec) -> PathBuf {
+        self.dir.join(&exe.file)
+    }
+}
+
+fn merr(msg: impl Into<String>) -> HydraError {
+    HydraError::Manifest(msg.into())
+}
+
+fn parse_usize(j: &Json, field: &str) -> Result<usize> {
+    j.get(field)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| merr(format!("bad field {field}")))
+}
+
+fn parse_config_entry(name: &str, entry: &Json) -> Result<ConfigArtifacts> {
+    let c = entry.get("config").ok_or_else(|| merr("missing config"))?;
+    let kind = match c.get("kind").and_then(Json::as_str) {
+        Some("lm") => ModelKind::Lm,
+        Some("cls") => ModelKind::Cls,
+        other => return Err(merr(format!("bad kind {other:?}"))),
+    };
+    let config = ModelConfig {
+        name: name.to_string(),
+        kind,
+        d_model: parse_usize(c, "d_model")?,
+        n_heads: parse_usize(c, "n_heads")?,
+        n_layers: parse_usize(c, "n_layers")?,
+        d_ff: parse_usize(c, "d_ff")?,
+        seq: parse_usize(c, "seq")?,
+        batch: parse_usize(c, "batch")?,
+        vocab: parse_usize(c, "vocab")?,
+        patch_dim: parse_usize(c, "patch_dim").unwrap_or(0),
+    };
+
+    let mut params = BTreeMap::new();
+    let pgroups = entry
+        .get("params")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| merr("missing params"))?;
+    for (kind, list) in pgroups {
+        let mut specs = Vec::new();
+        for p in list.as_arr().ok_or_else(|| merr("params not array"))? {
+            specs.push(parse_param_spec(p)?);
+        }
+        params.insert(kind.clone(), specs);
+    }
+
+    let mut executables = BTreeMap::new();
+    let exes = entry
+        .get("executables")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| merr("missing executables"))?;
+    for (ename, e) in exes {
+        executables.insert(ename.clone(), parse_exe_spec(ename, e)?);
+    }
+
+    let mut kernel_vmem_bytes = BTreeMap::new();
+    if let Some(vm) = entry.get("kernel_vmem_bytes").and_then(Json::as_obj) {
+        for (k, v) in vm {
+            kernel_vmem_bytes
+                .insert(k.clone(), v.as_u64().ok_or_else(|| merr("bad vmem"))?);
+        }
+    }
+
+    Ok(ConfigArtifacts { config, params, executables, kernel_vmem_bytes })
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| merr("shape not array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| merr("bad dim")))
+        .collect()
+}
+
+fn parse_param_spec(p: &Json) -> Result<ParamSpec> {
+    let init_obj = p.get("init").ok_or_else(|| merr("missing init"))?;
+    let init = match init_obj.get("kind").and_then(Json::as_str) {
+        Some("normal") => InitSpec::Normal {
+            std: init_obj
+                .get("std")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| merr("missing std"))? as f32,
+        },
+        Some("zeros") => InitSpec::Zeros,
+        Some("ones") => InitSpec::Ones,
+        other => return Err(merr(format!("bad init kind {other:?}"))),
+    };
+    Ok(ParamSpec {
+        name: p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| merr("missing param name"))?
+            .to_string(),
+        shape: parse_shape(p.get("shape").ok_or_else(|| merr("missing shape"))?)?,
+        init,
+    })
+}
+
+fn parse_io_spec(io: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: io
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        shape: parse_shape(io.get("shape").ok_or_else(|| merr("io missing shape"))?)?,
+        dtype: DType::parse(
+            io.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+        )
+        .map_err(merr)?,
+    })
+}
+
+fn parse_exe_spec(name: &str, e: &Json) -> Result<ExecutableSpec> {
+    let ios = |field: &str| -> Result<Vec<IoSpec>> {
+        e.get(field)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| merr(format!("missing {field}")))?
+            .iter()
+            .map(parse_io_spec)
+            .collect()
+    };
+    Ok(ExecutableSpec {
+        name: name.to_string(),
+        file: e
+            .get("file")
+            .and_then(Json::as_str)
+            .ok_or_else(|| merr("missing file"))?
+            .to_string(),
+        inputs: ios("inputs")?,
+        outputs: ios("outputs")?,
+        sha256: e
+            .get("sha256")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "tiny-lm-b4": {
+          "config": {"name":"tiny-lm-b4","kind":"lm","d_model":64,"n_heads":4,
+                     "n_layers":4,"d_ff":256,"seq":32,"batch":4,"vocab":256,
+                     "patch_dim":0},
+          "params": {
+            "embed": [
+              {"name":"tok_emb","shape":[256,64],"init":{"kind":"normal","std":0.02}},
+              {"name":"pos_emb","shape":[32,64],"init":{"kind":"normal","std":0.02}}
+            ],
+            "block": [
+              {"name":"ln1_g","shape":[64],"init":{"kind":"ones"}}
+            ],
+            "head": [
+              {"name":"w_out","shape":[64,256],"init":{"kind":"normal","std":0.02}}
+            ]
+          },
+          "executables": {
+            "embed_fwd": {
+              "file": "tiny-lm-b4.embed_fwd.hlo.txt",
+              "inputs": [
+                {"name":"tok_emb","shape":[256,64],"dtype":"f32"},
+                {"name":"pos_emb","shape":[32,64],"dtype":"f32"},
+                {"name":"data","shape":[4,32],"dtype":"i32"}
+              ],
+              "outputs": [{"name":"h","shape":[4,32,64],"dtype":"f32"}],
+              "sha256": "abc"
+            }
+          },
+          "kernel_vmem_bytes": {"flash_attention": 9216}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let c = m.config("tiny-lm-b4").unwrap();
+        assert_eq!(c.config.kind, ModelKind::Lm);
+        assert_eq!(c.config.d_model, 64);
+        assert_eq!(c.params["embed"].len(), 2);
+        assert_eq!(c.params["embed"][0].init, InitSpec::Normal { std: 0.02 });
+        let e = c.executable("embed_fwd").unwrap();
+        assert_eq!(e.inputs[2].dtype, DType::I32);
+        assert_eq!(e.outputs[0].shape, vec![4, 32, 64]);
+        assert_eq!(c.kernel_vmem_bytes["flash_attention"], 9216);
+    }
+
+    #[test]
+    fn unknown_config_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.config("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn param_sizes() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let c = m.config("tiny-lm-b4").unwrap();
+        assert_eq!(c.params["embed"][0].element_count(), 256 * 64);
+        assert_eq!(c.params["embed"][0].size_bytes(), 256 * 64 * 4);
+        // total = embed + 4 * block + head
+        let expect = (256 * 64 + 32 * 64) + 4 * 64 + 64 * 256;
+        assert_eq!(c.total_params(), expect);
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime layer: manifest-driven loading and execution of the AOT-compiled
+//! HLO artifacts via the PJRT C API (`xla` crate).
+//!
+//! Python authored and lowered the computations at build time (`make
+//! artifacts`); this module is everything the training path needs —
+//! Python is never on the request path.
+
+pub mod client;
+pub mod literal;
+pub mod manifest;
+
+pub use client::{LoadedExecutable, RuntimeClient};
+pub use manifest::{
+    ConfigArtifacts, ExecutableSpec, InitSpec, IoSpec, Manifest, ModelConfig,
+    ModelKind, ParamSpec,
+};

@@ -1,0 +1,9 @@
+//! Paper-scale simulation substrate: GPU/transformer cost models and
+//! Table 2 workload builders. The SHARP engine itself is backend-agnostic
+//! (coordinator::sharp); this module only supplies the numbers.
+
+pub mod cost;
+pub mod workload;
+
+pub use cost::{GpuSpec, PaperModel};
+pub use workload::{bert_grid, build_tasks, uniform_grid, vit_grid, WorkloadModel};

@@ -1,0 +1,152 @@
+//! Table 2 workload builders: turn paper-scale model grids into ModelTask
+//! sets (partitioned for the target GPU) ready for the SHARP engine or any
+//! baseline paradigm.
+
+use crate::coordinator::partitioner::{partition, PartitionPolicy};
+use crate::coordinator::task::ModelTask;
+use crate::error::Result;
+use crate::sim::cost::{GpuSpec, PaperModel};
+
+/// One workload entry prior to partitioning.
+#[derive(Debug, Clone)]
+pub struct WorkloadModel {
+    pub name: String,
+    pub model: PaperModel,
+    pub epochs: u32,
+    pub minibatches_per_epoch: u32,
+}
+
+/// Table 2 row 1: BERT-Large* hyperparameter grid — batch {8,16,32} x
+/// lr {1e-3..1e-6} = 12 models, 1B params each, 4 epochs (WikiText-2).
+///
+/// `minibatches_per_epoch` is scaled down from the real corpus so that
+/// simulated makespans stay tractable; schedules are unit-count invariant
+/// beyond a few hundred units per model (verified in benches).
+pub fn bert_grid(minibatches_per_epoch: u32) -> Vec<WorkloadModel> {
+    let mut out = Vec::new();
+    for &batch in &[8usize, 16, 32] {
+        for &lr_exp in &[3, 4, 5, 6] {
+            out.push(WorkloadModel {
+                name: format!("bert-1b-b{batch}-lr1e-{lr_exp}"),
+                model: PaperModel::bert_like(1_000_000_000, batch),
+                epochs: 4,
+                // same tokens per epoch regardless of batch size
+                minibatches_per_epoch: (minibatches_per_epoch * 8 / batch as u32)
+                    .max(1),
+            });
+        }
+    }
+    out
+}
+
+/// Table 2 row 2: ViT* architecture grid — sizes {0.3,0.6,0.8,1,1.5,2}B x
+/// batch {512,1024} = 12 models, 5 epochs (CIFAR-10).
+pub fn vit_grid(minibatches_per_epoch: u32) -> Vec<WorkloadModel> {
+    let sizes: [(u64, &str); 6] = [
+        (300_000_000, "300m"),
+        (600_000_000, "600m"),
+        (800_000_000, "800m"),
+        (1_000_000_000, "1b"),
+        (1_500_000_000, "1.5b"),
+        (2_000_000_000, "2b"),
+    ];
+    let mut out = Vec::new();
+    for (params, tag) in sizes {
+        for &batch in &[512usize, 1024] {
+            out.push(WorkloadModel {
+                name: format!("vit-{tag}-b{batch}"),
+                model: PaperModel::vit_like(params, batch),
+                epochs: 5,
+                minibatches_per_epoch: (minibatches_per_epoch * 512
+                    / batch as u32)
+                    .max(1),
+            });
+        }
+    }
+    out
+}
+
+/// Uniform grid for the drill-down studies (§5.2): `n` transformer models
+/// of `params` parameters each.
+pub fn uniform_grid(
+    n: usize,
+    params: u64,
+    batch: usize,
+    epochs: u32,
+    minibatches_per_epoch: u32,
+) -> Vec<WorkloadModel> {
+    (0..n)
+        .map(|i| WorkloadModel {
+            name: format!("uniform-{i}"),
+            model: PaperModel::bert_like(params, batch),
+            epochs,
+            minibatches_per_epoch,
+        })
+        .collect()
+}
+
+/// Partition every workload model for `gpu` and build ModelTasks.
+pub fn build_tasks(
+    workload: &[WorkloadModel],
+    gpu: &GpuSpec,
+    policy: PartitionPolicy,
+) -> Result<Vec<ModelTask>> {
+    workload
+        .iter()
+        .enumerate()
+        .map(|(id, w)| {
+            let layers = w.model.layer_descs(gpu);
+            let part = partition(&layers, gpu.mem_bytes, policy)?;
+            Ok(ModelTask::new(
+                id,
+                w.name.clone(),
+                "paper-sim",
+                part.shards,
+                w.minibatches_per_epoch,
+                w.epochs,
+                1e-3,
+            ))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_grid_has_12_models_all_1b() {
+        let g = bert_grid(8);
+        assert_eq!(g.len(), 12);
+        for w in &g {
+            let p = w.model.total_params() as f64;
+            assert!((0.8e9..1.2e9).contains(&p), "{}: {p}", w.name);
+            assert_eq!(w.epochs, 4);
+        }
+        // token budget equalised: batch 32 gets 1/4 the minibatches of batch 8
+        assert_eq!(g[0].minibatches_per_epoch, 8); // batch 8
+        assert_eq!(g[11].minibatches_per_epoch, 2); // batch 32
+    }
+
+    #[test]
+    fn vit_grid_spans_sizes() {
+        let g = vit_grid(4);
+        assert_eq!(g.len(), 12);
+        let smallest = g[0].model.total_params();
+        let largest = g[10].model.total_params();
+        assert!(largest > 5 * smallest);
+    }
+
+    #[test]
+    fn build_tasks_partitions_against_gpu() {
+        let gpu = GpuSpec::rtx2080ti();
+        let tasks =
+            build_tasks(&uniform_grid(3, 1_000_000_000, 8, 1, 2), &gpu, Default::default())
+                .unwrap();
+        assert_eq!(tasks.len(), 3);
+        for t in &tasks {
+            assert!(t.shards.len() >= 2, "{} shards", t.shards.len());
+            assert!(t.total_units() > 0);
+        }
+    }
+}

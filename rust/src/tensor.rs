@@ -1,0 +1,178 @@
+//! Host-side tensors: the coordinator's representation of parameters,
+//! activations, gradients and data batches while they live in DRAM
+//! (the paper's "spilled" tier). Conversion to/from `xla::Literal` happens
+//! only at device promotion time (runtime::literal).
+
+use crate::util::rng::Rng;
+
+/// Element type of a host tensor. Only the two types the model ABI uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype {other:?}")),
+        }
+    }
+}
+
+/// A dense host tensor (row-major). Scalars have an empty shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize], dtype: DType) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+        };
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn ones(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: TensorData::F32(vec![1.0; n]) }
+    }
+
+    pub fn normal(shape: &[usize], std: f32, rng: &mut Rng) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        HostTensor { shape: shape.to_vec(), data: TensorData::F32(v) }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    /// First element as f32 (for scalar losses).
+    pub fn scalar_value(&self) -> f32 {
+        self.as_f32()[0]
+    }
+
+    /// L2 norm (diagnostics / gradient clipping).
+    pub fn l2_norm(&self) -> f32 {
+        match &self.data {
+            TensorData::F32(v) => v.iter().map(|x| x * x).sum::<f32>().sqrt(),
+            TensorData::I32(v) => (v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() as f32).sqrt(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_bytes() {
+        let t = HostTensor::zeros(&[2, 3], DType::F32);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert!(t.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scalar_has_empty_shape() {
+        let t = HostTensor::scalar_f32(3.5);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.scalar_value(), 3.5);
+    }
+
+    #[test]
+    fn normal_respects_std() {
+        let mut rng = Rng::new(1);
+        let t = HostTensor::normal(&[10_000], 0.02, &mut rng);
+        let v = t.as_f32();
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        let var: f32 = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / v.len() as f32;
+        assert!(mean.abs() < 0.001, "{mean}");
+        assert!((var.sqrt() - 0.02).abs() < 0.002, "{}", var.sqrt());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_f32_checks_length() {
+        HostTensor::from_f32(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn dtype_accessors_guard() {
+        let t = HostTensor::from_i32(&[2], vec![1, 2]);
+        assert_eq!(t.dtype(), DType::I32);
+        assert_eq!(t.as_i32(), &[1, 2]);
+    }
+
+    #[test]
+    fn l2_norm_matches_hand_value() {
+        let t = HostTensor::from_f32(&[2], vec![3.0, 4.0]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,4 @@
+//! Training substrate: synthetic data generation and host-side optimizers.
+
+pub mod data;
+pub mod optimizer;

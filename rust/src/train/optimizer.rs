@@ -1,0 +1,201 @@
+//! Optimizers over host-owned f32 parameter buffers.
+//!
+//! Updates run in Rust on the DRAM-resident ("spilled") parameter copies
+//! right after a shard's backward unit retires — the per-shard analogue of
+//! ZeRO-Offload's CPU optimizer step (§7), and bitwise deterministic.
+
+use crate::tensor::HostTensor;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptKind {
+    Sgd,
+    Momentum { beta: f32 },
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Result<OptKind, String> {
+        match s {
+            "sgd" => Ok(OptKind::Sgd),
+            "momentum" => Ok(OptKind::Momentum { beta: 0.9 }),
+            "adam" => Ok(OptKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }),
+            other => Err(format!("unknown optimizer {other:?}")),
+        }
+    }
+
+    /// Bytes of optimizer state per parameter byte (for the memory model:
+    /// spilled shard bytes = params * (1 + state_factor)).
+    pub fn state_factor(&self) -> u64 {
+        match self {
+            OptKind::Sgd => 0,
+            OptKind::Momentum { .. } => 1,
+            OptKind::Adam { .. } => 2,
+        }
+    }
+}
+
+/// Per-parameter-array optimizer state.
+#[derive(Debug, Clone, Default)]
+pub struct OptSlot {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+/// One optimizer instance (shared hyperparameters, per-array slots).
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub kind: OptKind,
+    pub lr: f32,
+    /// Optional global gradient-norm clip (0 = off).
+    pub clip: f32,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptKind, lr: f32) -> Optimizer {
+        Optimizer { kind, lr, clip: 0.0 }
+    }
+
+    /// Apply one update step to `param` given `grad`; `slot` holds state.
+    pub fn step(&self, param: &mut HostTensor, grad: &HostTensor, slot: &mut OptSlot) {
+        let g = grad.as_f32();
+        let p = param.as_f32_mut();
+        assert_eq!(p.len(), g.len(), "param/grad shape mismatch");
+
+        let scale = if self.clip > 0.0 {
+            let norm = g.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > self.clip {
+                self.clip / norm
+            } else {
+                1.0
+            }
+        } else {
+            1.0
+        };
+
+        match self.kind {
+            OptKind::Sgd => {
+                for (pi, gi) in p.iter_mut().zip(g) {
+                    *pi -= self.lr * gi * scale;
+                }
+            }
+            OptKind::Momentum { beta } => {
+                if slot.m.len() != g.len() {
+                    slot.m = vec![0.0; g.len()];
+                }
+                for ((pi, gi), mi) in p.iter_mut().zip(g).zip(slot.m.iter_mut()) {
+                    *mi = beta * *mi + gi * scale;
+                    *pi -= self.lr * *mi;
+                }
+            }
+            OptKind::Adam { beta1, beta2, eps } => {
+                if slot.m.len() != g.len() {
+                    slot.m = vec![0.0; g.len()];
+                    slot.v = vec![0.0; g.len()];
+                }
+                slot.t += 1;
+                let bc1 = 1.0 - beta1.powi(slot.t as i32);
+                let bc2 = 1.0 - beta2.powi(slot.t as i32);
+                for (((pi, gi), mi), vi) in
+                    p.iter_mut().zip(g).zip(slot.m.iter_mut()).zip(slot.v.iter_mut())
+                {
+                    let gs = gi * scale;
+                    *mi = beta1 * *mi + (1.0 - beta1) * gs;
+                    *vi = beta2 * *vi + (1.0 - beta2) * gs * gs;
+                    let mhat = *mi / bc1;
+                    let vhat = *vi / bc2;
+                    *pi -= self.lr * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: &[f32]) -> HostTensor {
+        HostTensor::from_f32(&[v.len()], v.to_vec())
+    }
+
+    #[test]
+    fn sgd_step_matches_hand_math() {
+        let opt = Optimizer::new(OptKind::Sgd, 0.1);
+        let mut p = t(&[1.0, 2.0]);
+        let g = t(&[10.0, -5.0]);
+        opt.step(&mut p, &g, &mut OptSlot::default());
+        assert_eq!(p.as_f32(), &[0.0, 2.5]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let opt = Optimizer::new(OptKind::Momentum { beta: 0.5 }, 1.0);
+        let mut p = t(&[0.0]);
+        let g = t(&[1.0]);
+        let mut s = OptSlot::default();
+        opt.step(&mut p, &g, &mut s); // v=1, p=-1
+        opt.step(&mut p, &g, &mut s); // v=1.5, p=-2.5
+        assert!((p.as_f32()[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // bias correction makes |Δp| ≈ lr on step 1 regardless of grad scale
+        let opt = Optimizer::new(
+            OptKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            0.01,
+        );
+        for g0 in [0.001f32, 1.0, 100.0] {
+            let mut p = t(&[0.0]);
+            let g = t(&[g0]);
+            opt.step(&mut p, &g, &mut OptSlot::default());
+            assert!((p.as_f32()[0].abs() - 0.01).abs() < 1e-4, "{}", p.as_f32()[0]);
+        }
+    }
+
+    #[test]
+    fn clipping_caps_effective_gradient() {
+        let mut opt = Optimizer::new(OptKind::Sgd, 1.0);
+        opt.clip = 1.0;
+        let mut p = t(&[0.0, 0.0]);
+        let g = t(&[30.0, 40.0]); // norm 50 -> scaled to 1
+        opt.step(&mut p, &g, &mut OptSlot::default());
+        let v = p.as_f32();
+        let norm = (v[0] * v[0] + v[1] * v[1]).sqrt();
+        assert!((norm - 1.0).abs() < 1e-5, "{norm}");
+    }
+
+    #[test]
+    fn quadratic_converges_under_all_optimizers() {
+        // minimise f(p) = (p-3)^2, grad = 2(p-3)
+        for kind in [
+            OptKind::Sgd,
+            OptKind::Momentum { beta: 0.9 },
+            OptKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+        ] {
+            let lr = match kind {
+                OptKind::Adam { .. } => 0.3,
+                _ => 0.05,
+            };
+            let opt = Optimizer::new(kind, lr);
+            let mut p = t(&[0.0]);
+            let mut slot = OptSlot::default();
+            for _ in 0..200 {
+                let g = t(&[2.0 * (p.as_f32()[0] - 3.0)]);
+                opt.step(&mut p, &g, &mut slot);
+            }
+            assert!((p.as_f32()[0] - 3.0).abs() < 0.05, "{kind:?}: {}", p.as_f32()[0]);
+        }
+    }
+
+    #[test]
+    fn state_factor_reflects_buffers() {
+        assert_eq!(OptKind::Sgd.state_factor(), 0);
+        assert_eq!(OptKind::Momentum { beta: 0.9 }.state_factor(), 1);
+        assert_eq!(
+            OptKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }.state_factor(),
+            2
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Minimal benchmark kit (criterion is unavailable offline): median-of-N
+//! timing with warmup, ns/op reporting, and a tabular printer shared by the
+//! `cargo bench` harnesses in rust/benches/.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters_per_run: u64,
+    pub runs: usize,
+}
+
+impl Measurement {
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64 / self.iters_per_run as f64
+    }
+
+    pub fn print(&self) {
+        let per_iter = self.ns_per_iter();
+        let human = if per_iter >= 1e9 {
+            format!("{:.3} s", per_iter / 1e9)
+        } else if per_iter >= 1e6 {
+            format!("{:.3} ms", per_iter / 1e6)
+        } else if per_iter >= 1e3 {
+            format!("{:.3} µs", per_iter / 1e3)
+        } else {
+            format!("{per_iter:.1} ns")
+        };
+        println!(
+            "{:<44} {:>12}/iter   (median of {} runs, min {:?}, max {:?})",
+            self.name, human, self.runs, self.min, self.max
+        );
+    }
+}
+
+/// Time `f` (which performs `iters_per_run` iterations per call) `runs`
+/// times after one warmup; report median/min/max.
+pub fn bench<F: FnMut()>(name: &str, runs: usize, iters_per_run: u64, mut f: F) -> Measurement {
+    f(); // warmup
+    let mut samples: Vec<Duration> = (0..runs.max(1))
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    let m = Measurement {
+        name: name.to_string(),
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        iters_per_run,
+        runs: samples.len(),
+    };
+    m.print();
+    m
+}
+
+/// Run a whole-figure generator once and report wallclock.
+pub fn run_once<F: FnOnce() -> R, R>(name: &str, f: F) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    let dt = t0.elapsed();
+    println!("{name:<44} {dt:>12.2?} total");
+    (r, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("spin", 3, 1000, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.median.as_nanos() > 0);
+        assert_eq!(m.runs, 3);
+    }
+
+    #[test]
+    fn run_once_returns_value() {
+        let (v, dt) = run_once("id", || 42);
+        assert_eq!(v, 42);
+        assert!(dt.as_nanos() > 0);
+    }
+}

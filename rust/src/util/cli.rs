@@ -1,0 +1,106 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `flag_names` lists options that take
+    /// no value; everything else starting with `--` consumes one value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad float {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(
+            &s(&["run", "--n", "4", "--fast", "--out=o.csv", "extra"]),
+            &["fast"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, s(&["run", "extra"]));
+        assert_eq!(a.opt("n"), Some("4"));
+        assert_eq!(a.opt("out"), Some("o.csv"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&s(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(&s(&["--n", "8", "--lr", "0.5"]), &[]).unwrap();
+        assert_eq!(a.opt_usize("n", 1).unwrap(), 8);
+        assert_eq!(a.opt_usize("m", 3).unwrap(), 3);
+        assert_eq!(a.opt_f64("lr", 0.0).unwrap(), 0.5);
+        assert!(a.opt_usize("lr", 0).is_err() || a.opt("lr") == Some("0.5"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Small self-contained utilities replacing unavailable external crates
+//! (see Cargo.toml note and DESIGN.md §1): JSON, PRNG, CLI parsing, and a
+//! property-test driver.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a byte count human-readably (for logs and traces).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds as h:mm:ss.ms for schedule traces.
+pub fn fmt_secs(s: f64) -> String {
+    let total_ms = (s * 1000.0).round() as u64;
+    let ms = total_ms % 1000;
+    let secs = (total_ms / 1000) % 60;
+    let mins = (total_ms / 60_000) % 60;
+    let hours = total_ms / 3_600_000;
+    if hours > 0 {
+        format!("{hours}:{mins:02}:{secs:02}")
+    } else if mins > 0 {
+        format!("{mins}:{secs:02}.{ms:03}")
+    } else {
+        format!("{secs}.{ms:03}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(11 * 1024 * 1024 * 1024), "11.00 GiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(0.5), "0.500s");
+        assert_eq!(fmt_secs(75.25), "1:15.250");
+        assert_eq!(fmt_secs(3661.0), "1:01:01");
+    }
+}

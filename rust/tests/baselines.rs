@@ -1,0 +1,138 @@
+//! Paper-scale cross-paradigm shape tests: the qualitative claims of
+//! Figures 8-10 must hold on the simulated testbed (who wins, rough
+//! factors, where crossovers fall — DESIGN.md §4).
+
+use hydra::baselines;
+use hydra::coordinator::sharp::ParallelMode;
+use hydra::figures;
+use hydra::sim::{build_tasks, uniform_grid, GpuSpec};
+
+fn policy() -> hydra::coordinator::partitioner::PartitionPolicy {
+    hydra::coordinator::partitioner::PartitionPolicy {
+        buffer_frac: 0.30,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fig8_shape_bert_workload() {
+    let rows = figures::fig8_rows("bert").unwrap();
+    let get = |name: &str| {
+        rows.iter()
+            .find(|(n, _, _)| n == name)
+            .unwrap_or_else(|| panic!("row {name}"))
+            .clone()
+    };
+    let (_, mp, mp_util) = get("model-parallel");
+    let (_, pp, _) = get("pipeline(gpipe)");
+    let (_, hy, hy_util) = get("hydra");
+    let (_, tp, _) = get("task-parallel");
+
+    // the paper's headline ordering
+    assert!(hy < pp, "hydra {hy} must beat pipeline {pp}");
+    assert!(pp < mp, "pipeline must beat MP");
+    assert!(tp.is_nan(), "task parallelism must OOM at 1B scale");
+    // rough factors: hydra 5-8x over MP; pipeline ~4x
+    let hydra_speedup = mp / hy;
+    assert!(
+        (4.5..8.5).contains(&hydra_speedup),
+        "hydra speedup {hydra_speedup}"
+    );
+    let pp_speedup = mp / pp;
+    assert!((3.5..5.0).contains(&pp_speedup), "pipeline speedup {pp_speedup}");
+    // utilization ordering: hydra highest, MP = 1/8
+    assert!(hy_util > 0.6, "hydra util {hy_util}");
+    assert!((mp_util - 0.125).abs() < 0.01, "mp util {mp_util}");
+    for (name, _, util) in &rows {
+        if !util.is_nan() && name != "hydra" {
+            assert!(hy_util >= *util - 1e-9, "{name} util {util} > hydra {hy_util}");
+        }
+    }
+}
+
+#[test]
+fn fig10_hydra_advantage_stable_across_scales() {
+    let gpu = GpuSpec::rtx2080ti();
+    let link = baselines::nvlink();
+    let mut ratios = Vec::new();
+    for params in [500_000_000u64, 2_000_000_000] {
+        let grid = uniform_grid(12, params, 8, 1, 4);
+        let tasks = build_tasks(&grid, &gpu, policy()).unwrap();
+        let mp = baselines::model_parallel(&tasks, 8, gpu.mem_bytes, link).unwrap();
+        let hy = figures::run_hydra(
+            build_tasks(&grid, &gpu, policy()).unwrap(),
+            8,
+            gpu.mem_bytes,
+            ParallelMode::Sharp,
+            true,
+            "sharded-lrtf",
+        )
+        .unwrap();
+        ratios.push(mp.makespan / hy.makespan);
+    }
+    // speedup consistent across scales (paper Fig 10): within 25% of each other
+    let (a, b) = (ratios[0], ratios[1]);
+    assert!(a > 5.0 && b > 5.0, "{ratios:?}");
+    assert!((a - b).abs() / a.max(b) < 0.25, "{ratios:?}");
+}
+
+#[test]
+fn fig9a_speedup_flattens_at_device_count() {
+    let gpu = GpuSpec::rtx2080ti();
+    let serial = |tasks: &[hydra::coordinator::task::ModelTask]| -> f64 {
+        tasks.iter().map(|t| t.remaining_time()).sum()
+    };
+    let speedup = |n: usize| -> f64 {
+        let grid = uniform_grid(n, 250_000_000, 8, 1, 12);
+        let tasks = build_tasks(&grid, &gpu, policy()).unwrap();
+        let s = serial(&tasks);
+        let r = figures::run_hydra(
+            tasks,
+            8,
+            gpu.mem_bytes,
+            ParallelMode::Sharp,
+            true,
+            "sharded-lrtf",
+        )
+        .unwrap();
+        s / r.makespan
+    };
+    let s4 = speedup(4);
+    let s8 = speedup(8);
+    let s16 = speedup(16);
+    assert!((s4 - 4.0).abs() < 0.5, "s4 {s4}");
+    assert!(s8 > 7.0, "s8 {s8}");
+    assert!(s16 > 7.0 && (s16 - s8).abs() < 1.0, "s8 {s8} s16 {s16}");
+}
+
+#[test]
+fn table3_ablation_factors_match_paper_design() {
+    // full-state spilling (the paper's design) must reproduce the paper's
+    // Table 3 within tolerance: ~13X spilling-only, ~2.3X no-DB.
+    let out = figures::by_id("table3", std::time::Duration::from_secs(1))
+        .unwrap()
+        .unwrap();
+    let find = |needle: &str| -> f64 {
+        let line = out
+            .csv
+            .lines()
+            .find(|l| l.contains(needle))
+            .unwrap_or_else(|| panic!("{needle} in {}", out.csv));
+        line.rsplit(',').next().unwrap().parse().unwrap()
+    };
+    let spill_full_state = find("full-state spill, no SHARP/DB");
+    let nodb_full_state = find("full-state spill, no DB");
+    assert!(
+        (10.0..17.0).contains(&spill_full_state),
+        "spilling-only {spill_full_state} (paper: 13.05)"
+    );
+    assert!(
+        (1.8..3.0).contains(&nodb_full_state),
+        "no-DB {nodb_full_state} (paper: 2.3)"
+    );
+    // our weights-only design strictly improves on the paper's
+    let spill_ours = find("hydra without SHARP or double-buffering");
+    let nodb_ours = find("hydra without double-buffering");
+    assert!(spill_ours < spill_full_state);
+    assert!(nodb_ours < nodb_full_state);
+}

@@ -1,0 +1,531 @@
+//! Integration tests of the SHARP engine over the simulated backend:
+//! behavioural checks (makespans, ablation ordering, elasticity) plus the
+//! MILP-constraint invariants from DESIGN.md §6, property-tested with the
+//! in-crate prop driver.
+
+use hydra::coordinator::metrics::IntervalKind;
+use hydra::coordinator::sched::{self, bnb};
+use hydra::coordinator::sharp::{
+    ClusterEvent, EngineOptions, ParallelMode, RunReport, SharpEngine, TransferModel,
+};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::exec::SimBackend;
+use hydra::util::prop;
+use hydra::util::rng::Rng;
+
+const GIB: u64 = 1 << 30;
+
+fn uniform_task(id: usize, shards: usize, mbs: u32, epochs: u32, cost: f64) -> ModelTask {
+    let sd: Vec<ShardDesc> = (0..shards)
+        .map(|_| ShardDesc {
+            param_bytes: 100 << 20, // 100 MiB
+            fwd_transfer_bytes: 50 << 20,
+            bwd_transfer_bytes: 50 << 20,
+            activation_bytes: 4 << 20,
+            fwd_cost: cost,
+            bwd_cost: 2.0 * cost,
+            n_layers: 1,
+        })
+        .collect();
+    ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, epochs, 1e-3)
+}
+
+fn run_engine(
+    tasks: Vec<ModelTask>,
+    devices: usize,
+    opts: EngineOptions,
+    scheduler: &str,
+) -> RunReport {
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![GIB; devices],
+        64 * GIB,
+        sched::by_name(scheduler).unwrap(),
+        &mut backend,
+        opts,
+    )
+    .unwrap();
+    engine.run().unwrap()
+}
+
+fn zero_transfer_opts() -> EngineOptions {
+    EngineOptions {
+        transfer: TransferModel::zero_cost(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn single_model_single_device_makespan_is_total_work() {
+    let t = uniform_task(0, 2, 3, 1, 1.0);
+    // per mb: 2 fwd (1.0) + 2 bwd (2.0) = 6.0; 3 mbs = 18.0
+    let r = run_engine(vec![t], 1, zero_transfer_opts(), "sharded-lrtf");
+    assert!((r.makespan - 18.0).abs() < 1e-9, "{}", r.makespan);
+    assert_eq!(r.units_executed, 12);
+    assert!((r.utilization - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn eight_models_eight_devices_scale_nearly_linearly() {
+    let tasks: Vec<ModelTask> =
+        (0..8).map(|i| uniform_task(i, 4, 5, 1, 0.5)).collect();
+    let single_total: f64 = 5.0 * 4.0 * (0.5 + 1.0); // 30s per model
+    let r = run_engine(tasks, 8, zero_transfer_opts(), "sharded-lrtf");
+    // perfect task parallelism would be exactly one model per device
+    assert!((r.makespan - single_total).abs() < 1e-6, "{}", r.makespan);
+    assert!(r.utilization > 0.99);
+}
+
+#[test]
+fn more_models_than_devices_keeps_devices_saturated() {
+    let tasks: Vec<ModelTask> =
+        (0..16).map(|i| uniform_task(i, 4, 3, 1, 0.5)).collect();
+    let total_work: f64 = 16.0 * 3.0 * 4.0 * 1.5;
+    let r = run_engine(tasks, 8, zero_transfer_opts(), "sharded-lrtf");
+    let lb = total_work / 8.0;
+    assert!(r.makespan >= lb - 1e-9);
+    assert!(r.makespan < lb * 1.1, "makespan {} vs lb {lb}", r.makespan);
+    assert!(r.utilization > 0.9, "{}", r.utilization);
+}
+
+#[test]
+fn sequential_mode_uses_one_device_at_a_time() {
+    let tasks: Vec<ModelTask> =
+        (0..4).map(|i| uniform_task(i, 2, 2, 1, 1.0)).collect();
+    let total_work: f64 = 4.0 * 2.0 * 2.0 * 3.0;
+    let opts = EngineOptions {
+        mode: ParallelMode::Sequential,
+        transfer: TransferModel::zero_cost(),
+        ..Default::default()
+    };
+    let r = run_engine(tasks, 8, opts, "sharded-lrtf");
+    // no blending: makespan equals total serial work
+    assert!((r.makespan - total_work).abs() < 1e-9, "{}", r.makespan);
+    assert!(r.utilization < 0.2); // 1 of 8 devices busy
+}
+
+#[test]
+fn double_buffering_hides_transfer_latency() {
+    let tasks: Vec<ModelTask> =
+        (0..8).map(|i| uniform_task(i, 4, 4, 1, 0.05)).collect();
+    // PCIe-class transfers of 100 MiB shards ≈ 8.7ms vs 50ms compute
+    let with_db = EngineOptions { double_buffer: true, ..Default::default() };
+    let without_db = EngineOptions { double_buffer: false, ..Default::default() };
+    let r_db = run_engine(tasks.clone(), 4, with_db, "sharded-lrtf");
+    let r_nodb = run_engine(tasks, 4, without_db, "sharded-lrtf");
+    assert!(
+        r_db.makespan < r_nodb.makespan * 0.95,
+        "db {} vs nodb {}",
+        r_db.makespan,
+        r_nodb.makespan
+    );
+    assert!(r_db.utilization > r_nodb.utilization);
+}
+
+#[test]
+fn table3_ablation_ordering_holds() {
+    // Hydra > Hydra-no-DB > spilling-only, as in Table 3.
+    let mk = |mode, db| {
+        let tasks: Vec<ModelTask> =
+            (0..16).map(|i| uniform_task(i, 4, 3, 1, 0.05)).collect();
+        let opts = EngineOptions { mode, double_buffer: db, ..Default::default() };
+        run_engine(tasks, 8, opts, "sharded-lrtf").makespan
+    };
+    let full = mk(ParallelMode::Sharp, true);
+    let no_db = mk(ParallelMode::Sharp, false);
+    let spill_only = mk(ParallelMode::Sequential, false);
+    assert!(full < no_db, "full {full} no_db {no_db}");
+    assert!(no_db < spill_only, "no_db {no_db} spill {spill_only}");
+    // spilling-only should be ~#devices slower than full Hydra
+    assert!(spill_only / full > 4.0, "ratio {}", spill_only / full);
+}
+
+#[test]
+fn lrtf_beats_or_matches_random_on_heterogeneous_workloads() {
+    let mut lrtf_wins = 0;
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(seed);
+        let tasks: Vec<ModelTask> = (0..8)
+            .map(|i| {
+                uniform_task(
+                    i,
+                    rng.range_u64(2, 6) as usize,
+                    rng.range_u64(2, 8) as u32,
+                    1,
+                    rng.range_f64(0.2, 2.0),
+                )
+            })
+            .collect();
+        let r_lrtf = run_engine(tasks.clone(), 4, zero_transfer_opts(), "sharded-lrtf");
+        let r_rand = run_engine(tasks, 4, zero_transfer_opts(), "random");
+        if r_lrtf.makespan <= r_rand.makespan + 1e-9 {
+            lrtf_wins += 1;
+        }
+    }
+    assert!(lrtf_wins >= 8, "lrtf only won {lrtf_wins}/10");
+}
+
+#[test]
+fn engine_makespan_close_to_bnb_optimal_on_small_instances() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(100 + seed);
+        let tasks: Vec<ModelTask> = (0..3)
+            .map(|i| uniform_task(i, rng.range_u64(1, 3) as usize, 1, 1, rng.range_f64(0.5, 2.0)))
+            .collect();
+        let problem = bnb::Problem {
+            units: tasks
+                .iter()
+                .map(|t| {
+                    (0..t.total_units())
+                        .map(|j| {
+                            let u = t.geometry.unit_at(t.id, j);
+                            t.shard(u.shard).cost(u.phase)
+                        })
+                        .collect()
+                })
+                .collect(),
+            devices: 2,
+        };
+        let r = run_engine(tasks, 2, zero_transfer_opts(), "sharded-lrtf");
+        let opt = bnb::solve(&problem, std::time::Duration::from_secs(5), None);
+        assert!(opt.proven_optimal);
+        assert!(
+            r.makespan >= opt.makespan - 1e-9,
+            "engine beat optimal?! {} < {}",
+            r.makespan,
+            opt.makespan
+        );
+        assert!(
+            r.makespan <= opt.makespan * 1.35 + 1e-9,
+            "engine too far from optimal: {} vs {}",
+            r.makespan,
+            opt.makespan
+        );
+    }
+}
+
+#[test]
+fn device_failure_mid_run_still_completes_all_units() {
+    let tasks: Vec<ModelTask> =
+        (0..4).map(|i| uniform_task(i, 2, 4, 1, 0.5)).collect();
+    let total_units: u64 = tasks.iter().map(|t| t.total_units()).sum();
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![GIB; 4],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap()
+    .with_cluster_events(vec![
+        ClusterEvent::Fail { time: 2.0, device: 0 },
+        ClusterEvent::Fail { time: 3.0, device: 1 },
+    ]);
+    let r = engine.run().unwrap();
+    assert_eq!(r.units_executed, total_units);
+    // two fewer devices -> longer makespan than the 4-device run
+    assert!(r.makespan > 6.0);
+}
+
+#[test]
+fn device_arrival_mid_run_shortens_makespan() {
+    let tasks = |n: usize| -> Vec<ModelTask> {
+        (0..n).map(|i| uniform_task(i, 2, 6, 1, 0.5)).collect()
+    };
+    let r_static = run_engine(tasks(4), 1, zero_transfer_opts(), "sharded-lrtf");
+
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        tasks(4),
+        &[GIB],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap()
+    .with_cluster_events(vec![ClusterEvent::Arrive { time: 1.0, mem_bytes: GIB }]);
+    let r_elastic = engine.run().unwrap();
+    assert!(
+        r_elastic.makespan < r_static.makespan * 0.7,
+        "elastic {} static {}",
+        r_elastic.makespan,
+        r_static.makespan
+    );
+}
+
+// ---------------------------------------------------------------------------
+// property tests: the MILP invariants (DESIGN.md §6 / sharp.rs header)
+// ---------------------------------------------------------------------------
+
+fn random_workload(rng: &mut Rng) -> (Vec<ModelTask>, usize) {
+    let n_models = rng.range_u64(1, 7) as usize;
+    let devices = rng.range_u64(1, 5) as usize;
+    let tasks: Vec<ModelTask> = (0..n_models)
+        .map(|i| {
+            let shards = rng.range_u64(1, 5) as usize;
+            let sd: Vec<ShardDesc> = (0..shards)
+                .map(|_| ShardDesc {
+                    param_bytes: rng.range_u64(1 << 20, 200 << 20),
+                    fwd_transfer_bytes: rng.range_u64(1 << 20, 100 << 20),
+                    bwd_transfer_bytes: rng.range_u64(1 << 20, 100 << 20),
+                    activation_bytes: rng.range_u64(1 << 16, 8 << 20),
+                    fwd_cost: rng.range_f64(0.01, 2.0),
+                    bwd_cost: rng.range_f64(0.01, 4.0),
+                    n_layers: 1,
+                })
+                .collect();
+            ModelTask::new(
+                i,
+                format!("m{i}"),
+                "sim",
+                sd,
+                rng.range_u64(1, 4) as u32,
+                rng.range_u64(1, 3) as u32,
+                1e-3,
+            )
+        })
+        .collect();
+    (tasks, devices)
+}
+
+fn run_random(rng: &mut Rng) -> (RunReport, u64) {
+    let (tasks, devices) = random_workload(rng);
+    let total_units: u64 = tasks.iter().map(|t| t.total_units()).sum();
+    let sched_name = ["sharded-lrtf", "random", "fifo", "srtf", "affinity-lrtf"]
+        [rng.below(5) as usize];
+    let db = rng.uniform() < 0.5;
+    let opts = EngineOptions {
+        double_buffer: db,
+        seed: rng.next_u64(),
+        ..Default::default()
+    };
+    let r = run_engine(tasks, devices, opts, sched_name);
+    (r, total_units)
+}
+
+#[test]
+fn prop_every_unit_executes_exactly_once() {
+    prop::check("unit completeness", 60, |rng| {
+        let (r, total) = run_random(rng);
+        if r.units_executed != total {
+            return Err(format!("{} executed, {} expected", r.units_executed, total));
+        }
+        let computes =
+            r.trace.intervals.iter().filter(|iv| iv.kind == IntervalKind::Compute).count();
+        if computes as u64 != total {
+            return Err(format!("{computes} compute intervals, {total} units"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_device_overlap() {
+    prop::check("device isolation", 60, |rng| {
+        let (r, _) = run_random(rng);
+        let mut by_dev: std::collections::BTreeMap<usize, Vec<(f64, f64)>> =
+            Default::default();
+        for iv in &r.trace.intervals {
+            by_dev.entry(iv.device).or_default().push((iv.start, iv.end));
+        }
+        for (d, mut ivs) in by_dev {
+            ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in ivs.windows(2) {
+                if w[1].0 < w[0].1 - 1e-9 {
+                    return Err(format!(
+                        "device {d}: overlap {:?} then {:?}", w[0], w[1]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_model_units_sequential_and_ordered() {
+    prop::check("sequential dependency", 60, |rng| {
+        let (r, _) = run_random(rng);
+        let mut by_model: std::collections::BTreeMap<usize, Vec<(f64, f64, u64)>> =
+            Default::default();
+        for iv in &r.trace.intervals {
+            if iv.kind == IntervalKind::Compute {
+                by_model
+                    .entry(iv.model)
+                    .or_default()
+                    .push((iv.start, iv.end, iv.unit_seq));
+            }
+        }
+        for (m, mut ivs) in by_model {
+            ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in ivs.windows(2) {
+                // queue order must match time order (constraint (a))
+                if w[1].2 != w[0].2 + 1 {
+                    return Err(format!(
+                        "model {m}: unit {} ran after {}", w[1].2, w[0].2));
+                }
+                // compute of unit k+1 may not start before unit k ends
+                if w[1].0 < w[0].1 - 1e-9 {
+                    return Err(format!(
+                        "model {m}: units overlap: {:?} {:?}", w[0], w[1]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_makespan_at_least_lower_bound() {
+    prop::check("makespan lower bound", 60, |rng| {
+        let (tasks, devices) = random_workload(rng);
+        let total_work: f64 = tasks.iter().map(|t| t.remaining_time()).sum();
+        let longest: f64 = tasks
+            .iter()
+            .map(|t| t.remaining_time())
+            .fold(0.0, f64::max);
+        let lb = (total_work / devices as f64).max(longest);
+        let mut backend = SimBackend::deterministic();
+        let mut engine = SharpEngine::new(
+            tasks,
+            &vec![GIB; devices],
+            64 * GIB,
+            sched::by_name("sharded-lrtf").unwrap(),
+            &mut backend,
+            zero_transfer_opts(),
+        )
+        .unwrap();
+        let r = engine.run().unwrap();
+        if r.makespan < lb - 1e-6 {
+            return Err(format!("makespan {} below bound {lb}", r.makespan));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_utilization_in_unit_interval() {
+    prop::check("utilization sanity", 40, |rng| {
+        let (r, _) = run_random(rng);
+        if !(0.0..=1.0 + 1e-9).contains(&r.utilization) {
+            return Err(format!("utilization {}", r.utilization));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// inference mode + early stopping at engine level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn inference_tasks_schedule_fwd_only() {
+    let sd = vec![
+        ShardDesc {
+            param_bytes: 10 << 20,
+            fwd_transfer_bytes: 5 << 20,
+            bwd_transfer_bytes: 5 << 20,
+            activation_bytes: 1 << 20,
+            fwd_cost: 1.0,
+            bwd_cost: 2.0,
+            n_layers: 1,
+        };
+        3
+    ];
+    let t = ModelTask::new_inference(0, "serve", "cfg", sd, 4);
+    assert_eq!(t.total_units(), 12);
+    let r = run_engine(vec![t], 2, zero_transfer_opts(), "sharded-lrtf");
+    assert_eq!(r.units_executed, 12);
+    // all fwd: total compute = 12 * 1.0
+    assert!((r.compute_secs - 12.0).abs() < 1e-9, "{}", r.compute_secs);
+}
+
+#[test]
+fn mixed_training_and_inference_workload_completes() {
+    let mut tasks = vec![uniform_task(0, 2, 3, 1, 0.5)];
+    let sd = vec![
+        ShardDesc {
+            param_bytes: 10 << 20,
+            fwd_transfer_bytes: 5 << 20,
+            bwd_transfer_bytes: 5 << 20,
+            activation_bytes: 1 << 20,
+            fwd_cost: 0.2,
+            bwd_cost: 0.4,
+            n_layers: 1,
+        };
+        2
+    ];
+    tasks.push(ModelTask::new_inference(1, "serve", "cfg", sd, 5));
+    let total: u64 = tasks.iter().map(|t| t.total_units()).sum();
+    let r = run_engine(tasks, 2, zero_transfer_opts(), "sharded-lrtf");
+    assert_eq!(r.units_executed, total);
+}
+
+/// Backend scripted to stop a chosen model after a chosen epoch.
+struct StoppingBackend {
+    inner: SimBackend,
+    stop_model: usize,
+    stop_after_epoch: u32,
+}
+
+impl hydra::exec::ExecutionBackend for StoppingBackend {
+    fn execute_unit(
+        &mut self,
+        task: &ModelTask,
+        unit: &hydra::coordinator::unit::ShardUnit,
+    ) -> hydra::Result<f64> {
+        self.inner.execute_unit(task, unit)
+    }
+
+    fn should_early_stop(&mut self, task: &ModelTask, epoch: u32) -> bool {
+        task.id == self.stop_model && epoch >= self.stop_after_epoch
+    }
+}
+
+#[test]
+fn engine_early_stop_drops_remaining_units() {
+    let tasks: Vec<ModelTask> =
+        (0..3).map(|i| uniform_task(i, 2, 2, 3, 0.5)).collect();
+    let per_model = tasks[0].total_units(); // 2 shards * 2 * 2 mbs * 3 epochs
+    let mut backend = StoppingBackend {
+        inner: SimBackend::deterministic(),
+        stop_model: 1,
+        stop_after_epoch: 0,
+    };
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![GIB; 2],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap();
+    let r = engine.run().unwrap();
+    // model 1 ran only its first epoch (1/3 of units)
+    let expected = 2 * per_model + per_model / 3;
+    assert_eq!(r.units_executed, expected, "per_model {per_model}");
+}
+
+#[test]
+fn heterogeneous_device_memories_respected() {
+    // big device + small device; shards sized for the small one still run
+    // everywhere (partitioner contract: smallest device bounds shards)
+    let tasks: Vec<ModelTask> =
+        (0..4).map(|i| uniform_task(i, 2, 2, 1, 0.5)).collect();
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        tasks,
+        &[GIB, 256 << 20],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap();
+    let r = engine.run().unwrap();
+    assert_eq!(r.units_executed, 4 * 8);
+}

@@ -1,0 +1,80 @@
+//! Smoke tests: every figure/table generator runs, prints sane rows, and
+//! writes parseable CSV (the regeneration path of DESIGN.md §4).
+
+use std::time::Duration;
+
+use hydra::figures;
+
+#[test]
+fn every_figure_generates_and_serialises() {
+    for id in figures::ALL_IDS {
+        // small BnB budget keeps fig7 fast in CI
+        let fig = figures::by_id(id, Duration::from_millis(200))
+            .unwrap_or_else(|| panic!("unknown id {id}"))
+            .unwrap_or_else(|e| panic!("{id} failed: {e}"));
+        assert_eq!(fig.id, id);
+        assert!(!fig.lines.is_empty(), "{id} produced no lines");
+        assert!(fig.csv.lines().count() >= 2, "{id} csv too small");
+        // header + at least one data row, comma-separated
+        let header = fig.csv.lines().next().unwrap();
+        assert!(header.contains(','), "{id} header {header:?}");
+    }
+}
+
+#[test]
+fn unknown_figure_id_is_none() {
+    assert!(figures::by_id("fig99", Duration::from_secs(1)).is_none());
+}
+
+#[test]
+fn fig7_lrtf_never_worse_than_random() {
+    let fig = figures::fig7(Duration::from_millis(200)).unwrap();
+    for line in fig.csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let lrtf: f64 = cols[3].parse().unwrap();
+        let random: f64 = cols[4].parse().unwrap();
+        assert!(lrtf <= random + 1e-6, "{line}");
+        assert!(lrtf >= 0.999, "normalised lrtf below base: {line}");
+    }
+}
+
+#[test]
+fn fig9b_speedup_monotone_then_flat() {
+    let fig = figures::fig9b().unwrap();
+    let speedups: Vec<f64> = fig
+        .csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').nth(2).unwrap().parse().unwrap())
+        .collect();
+    assert_eq!(speedups.len(), 8);
+    // monotone non-decreasing up to 4 devices (within noise)
+    for w in speedups[..4].windows(2) {
+        assert!(w[1] >= w[0] - 0.15, "{speedups:?}");
+    }
+    // flat after 4 devices (4 models): no big gain
+    assert!(speedups[7] < speedups[3] + 0.5, "{speedups:?}");
+}
+
+#[test]
+fn fig6_gantt_contains_all_models() {
+    let fig = figures::fig6().unwrap();
+    let text = fig.lines.join("\n");
+    for m in ["A", "B", "C"] {
+        assert!(text.contains(m), "model {m} missing from gantt:\n{text}");
+    }
+    assert!(text.contains("dev 0"));
+    assert!(text.contains("dev 1"));
+}
+
+#[test]
+fn csv_files_written_to_disk() {
+    let dir = std::env::temp_dir().join("hydra_figcsv_test");
+    let dir = dir.to_str().unwrap();
+    let fig = figures::table2().unwrap();
+    fig.write_csv(dir).unwrap();
+    let content = std::fs::read_to_string(format!("{dir}/table2.csv")).unwrap();
+    assert!(content.starts_with("dataset,"));
+    // Table 2: 12 BERT + 12 ViT rows
+    assert_eq!(content.lines().count(), 25);
+}
