@@ -18,9 +18,9 @@ use hydra::util::cli::Args;
 
 const MIB: u64 = 1 << 20;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&[]).map_err(anyhow::Error::msg)?;
-    let steps = args.opt_usize("steps", 40).map_err(anyhow::Error::msg)? as u32;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(&[])?;
+    let steps = args.opt_usize("steps", 40)? as u32;
 
     // Table 2-style grid: batch {4, 8} x lr {0.08, 0.04, 0.01}
     let mut orchestra = ModelOrchestrator::new("artifacts");
@@ -38,6 +38,7 @@ fn main() -> anyhow::Result<()> {
                 minibatches_per_epoch: steps,
                 seed: (bi * 3 + li) as u64 + 7,
                 inference: false,
+                arrival: 0.0,
             });
         }
     }

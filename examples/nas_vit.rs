@@ -17,9 +17,9 @@ use hydra::util::cli::Args;
 
 const MIB: u64 = 1 << 20;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&[]).map_err(anyhow::Error::msg)?;
-    let steps = args.opt_usize("steps", 30).map_err(anyhow::Error::msg)? as u32;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(&[])?;
+    let steps = args.opt_usize("steps", 30)? as u32;
 
     // two architectures x two learning rates = 4 candidates
     let candidates = [
@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
             minibatches_per_epoch: steps,
             seed: 21 + i as u64,
             inference: false,
+            arrival: 0.0,
         });
     }
 

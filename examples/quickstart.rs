@@ -16,7 +16,7 @@ use hydra::train::optimizer::OptKind;
 
 const MIB: u64 = 1 << 20;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. register model tasks (the paper's ModelTask/ModelOrchestrator API)
     let mut orchestra = ModelOrchestrator::new("artifacts");
     for (i, lr) in [0.05f32, 0.02].into_iter().enumerate() {
@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
             minibatches_per_epoch: 8,
             seed: 42 + i as u64,
             inference: false,
+            arrival: 0.0,
         });
     }
 

@@ -19,9 +19,9 @@ use hydra::util::fmt_bytes;
 
 const MIB: u64 = 1 << 20;
 
-fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&[]).map_err(anyhow::Error::msg)?;
-    let steps = args.opt_usize("steps", 3).map_err(anyhow::Error::msg)? as u32;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env(&[])?;
+    let steps = args.opt_usize("steps", 3)? as u32;
 
     let device_mem = 12 * MIB;
     let mut orchestra = ModelOrchestrator::new("artifacts");
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         minibatches_per_epoch: steps,
         seed: 5,
         inference: false,
+        arrival: 0.0,
     });
 
     let cluster = Cluster::uniform(1, device_mem, 8192 * MIB);

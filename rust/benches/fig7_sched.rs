@@ -29,11 +29,12 @@ fn main() {
                 front_cost: 1.0,
                 front_shard: 0,
                 front_phase: Phase::Fwd,
+                arrival: 0.0,
             })
             .collect();
         let mut lrtf = sched::by_name("sharded-lrtf").unwrap();
         let mut rng = Rng::new(0);
-        let ctx = PickContext { now: 0.0, device: 0, resident: None };
+        let ctx = PickContext { now: 0.0, device: 0, speed: 1.0, resident: None };
         bench(&format!("sharded-lrtf pick, {n} eligible models"), 7, 1000, || {
             for _ in 0..1000 {
                 std::hint::black_box(lrtf.pick(&snaps, ctx, &mut rng));

@@ -4,7 +4,7 @@
 
 use hydra::coordinator::memory::{DeviceLedger, Residency};
 use hydra::coordinator::sched::{self, bnb};
-use hydra::coordinator::sharp::{EngineOptions, SharpEngine, TransferModel};
+use hydra::coordinator::sharp::{EngineOptions, QueueKind, SharpEngine, TransferModel};
 use hydra::coordinator::task::{ModelTask, ShardDesc};
 use hydra::exec::SimBackend;
 use hydra::util::bench::bench;
@@ -32,6 +32,26 @@ fn tasks(n: usize, shards: usize, mbs: u32) -> Vec<ModelTask> {
         .collect()
 }
 
+fn run_engine_bench(n_models: usize, devices: usize, mbs: u32, queue: QueueKind) -> f64 {
+    let mut backend = SimBackend::deterministic();
+    let opts = EngineOptions {
+        transfer: TransferModel::pcie_gen3(),
+        record_intervals: false,
+        queue,
+        ..Default::default()
+    };
+    let mut engine = SharpEngine::new(
+        tasks(n_models, 4, mbs),
+        &vec![GIB; devices],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        opts,
+    )
+    .unwrap();
+    engine.run().unwrap().makespan
+}
+
 fn main() {
     // --- engine dispatch throughput -------------------------------------
     // 16 models x 4 shards x 64 mbs = 8192 units per run
@@ -41,24 +61,67 @@ fn main() {
         5,
         units,
         || {
-            let mut backend = SimBackend::deterministic();
-            let opts = EngineOptions {
-                transfer: TransferModel::pcie_gen3(),
-                record_intervals: false,
-                ..Default::default()
-            };
-            let mut engine = SharpEngine::new(
-                tasks(16, 4, 64),
-                &vec![GIB; 8],
-                64 * GIB,
-                sched::by_name("sharded-lrtf").unwrap(),
-                &mut backend,
-                opts,
-            )
-            .unwrap();
-            std::hint::black_box(engine.run().unwrap());
+            std::hint::black_box(run_engine_bench(16, 8, 64, QueueKind::Heap));
         },
     );
+
+    // --- event-queue discipline: O(log n) heap vs O(n) linear scan --------
+    // Large fleet (64 models on 24 devices) where event-queue cost matters.
+    let big_units = 64 * 4 * 2 * 48;
+    let heap_makespan = run_engine_bench(64, 24, 48, QueueKind::Heap);
+    let scan_makespan = run_engine_bench(64, 24, 48, QueueKind::LinearScan);
+    assert!(
+        (heap_makespan - scan_makespan).abs() <= 1e-6 * heap_makespan.abs(),
+        "heap/scan schedule divergence: {heap_makespan} vs {scan_makespan}"
+    );
+    bench(
+        &format!("engine[heap]: {big_units} units, 64 models, 24 devices"),
+        5,
+        big_units,
+        || {
+            std::hint::black_box(run_engine_bench(64, 24, 48, QueueKind::Heap));
+        },
+    );
+    bench(
+        &format!("engine[scan]: {big_units} units, 64 models, 24 devices"),
+        5,
+        big_units,
+        || {
+            std::hint::black_box(run_engine_bench(64, 24, 48, QueueKind::LinearScan));
+        },
+    );
+
+    // --- online multi-tenant dispatch ------------------------------------
+    // Poisson arrivals over a mixed pool: the eligible-set bookkeeping path.
+    bench("engine[online]: 24 Poisson jobs on 8-device mixed pool", 5, 1, || {
+        let stream = hydra::sim::poisson_mixed_tenants(24, 12.0, 3, 2);
+        let pool = hydra::sim::mixed_pool(4, 4);
+        let (tasks, specs) = hydra::sim::build_tasks_pool(
+            &stream,
+            &pool,
+            hydra::coordinator::partitioner::PartitionPolicy {
+                buffer_frac: 0.30,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut backend = SimBackend::deterministic();
+        let opts = EngineOptions {
+            buffer_frac: 0.30,
+            record_intervals: false,
+            ..Default::default()
+        };
+        let mut engine = SharpEngine::with_devices(
+            tasks,
+            &specs,
+            500 * GIB,
+            sched::by_name("sharded-lrtf").unwrap(),
+            &mut backend,
+            opts,
+        )
+        .unwrap();
+        std::hint::black_box(engine.run().unwrap());
+    });
 
     // --- memory ledger ---------------------------------------------------
     bench("ledger: alloc+release cycle", 7, 100_000, || {

@@ -8,20 +8,30 @@
 //!   "cluster": { "devices": 2, "device_mem_mib": 2, "dram_mib": 4096 },
 //!   "engine": { "scheduler": "sharded-lrtf", "double_buffer": true,
 //!               "sequential": false, "buffer_frac": 0.05,
-//!               "early_stop_median_after": 2 },
+//!               "early_stop_median_after": 2, "event_queue": "heap" },
 //!   "tasks": [
 //!     { "name": "bert-a", "config": "tiny-lm-b8", "lr": 0.05,
 //!       "opt": "sgd", "epochs": 1, "minibatches": 8, "seed": 1 },
+//!     { "name": "late", "config": "tiny-lm-b8", "lr": 0.05,
+//!       "opt": "sgd", "minibatches": 8, "arrival": 30.0 },
 //!     { "name": "probe", "config": "tiny-lm-b4", "lr": 0.0,
 //!       "opt": "sgd", "minibatches": 4, "inference": true }
 //!   ]
 //! }
 //! ```
+//!
+//! Clusters may be heterogeneous: `"device_mem_mib_each": [4, 2, 8]` gives
+//! per-device memories, and `"device_classes": ["a4000", "a6000"]` builds a
+//! mixed pool of named GPU classes (per-class memory, relative speed, and
+//! host-link bandwidth; speeds are relative to the slowest listed class).
+//! Tasks may carry an `"arrival"` time in virtual seconds — the online
+//! multi-tenant setting.
 
-use crate::coordinator::sharp::{EngineOptions, ParallelMode};
+use crate::coordinator::sharp::{DeviceSpec, EngineOptions, ParallelMode, QueueKind};
 use crate::coordinator::{Cluster, ModelOrchestrator};
 use crate::error::{HydraError, Result};
 use crate::exec::real::RealModelSpec;
+use crate::sim::GpuSpec;
 use crate::train::optimizer::OptKind;
 use crate::util::json::Json;
 
@@ -51,8 +61,32 @@ impl WorkloadSpec {
         // --- cluster -------------------------------------------------------
         let c = j.get("cluster").ok_or_else(|| cerr("missing cluster"))?;
         let mib = 1u64 << 20;
-        let cluster = if let Some(per_dev) = c.get("device_mem_mib_each") {
-            // heterogeneous: explicit per-device list
+        let dram_bytes = c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib;
+        let cluster = if let Some(classes) = c.get("device_classes") {
+            // heterogeneous: named GPU classes (memory + speed + link)
+            let arr = classes
+                .as_arr()
+                .ok_or_else(|| cerr("device_classes must be an array"))?;
+            if arr.is_empty() {
+                return Err(cerr("device_classes is empty"));
+            }
+            let mut gpus: Vec<GpuSpec> = Vec::new();
+            for v in arr {
+                let name = v
+                    .as_str()
+                    .ok_or_else(|| cerr("device_classes entries must be strings"))?;
+                let g = GpuSpec::by_name(name)
+                    .ok_or_else(|| cerr(format!("unknown GPU class {name:?}")))?;
+                gpus.push(g);
+            }
+            let reference = crate::sim::pool_reference(&gpus)
+                .ok_or_else(|| cerr("device_classes is empty"))?;
+            Cluster::heterogeneous(
+                gpus.iter().map(|g| g.device_spec(&reference)).collect(),
+                dram_bytes,
+            )
+        } else if let Some(per_dev) = c.get("device_mem_mib_each") {
+            // heterogeneous in memory only: explicit per-device list
             let mems: Vec<u64> = per_dev
                 .as_arr()
                 .ok_or_else(|| cerr("device_mem_mib_each must be an array"))?
@@ -62,10 +96,10 @@ impl WorkloadSpec {
             if mems.is_empty() {
                 return Err(cerr("device_mem_mib_each is empty"));
             }
-            Cluster {
-                device_mem: mems,
-                dram_bytes: c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib,
-            }
+            Cluster::heterogeneous(
+                mems.into_iter().map(DeviceSpec::uniform).collect(),
+                dram_bytes,
+            )
         } else {
             let devices = c
                 .get("devices")
@@ -80,7 +114,7 @@ impl WorkloadSpec {
                     .and_then(Json::as_u64)
                     .ok_or_else(|| cerr("cluster.device_mem_mib missing"))?
                     * mib,
-                c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib,
+                dram_bytes,
             )
         };
 
@@ -113,6 +147,17 @@ impl WorkloadSpec {
             }
             if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
                 early_stop = Some(me as u32);
+            }
+            if let Some(q) = e.get("event_queue").and_then(Json::as_str) {
+                engine.queue = match q {
+                    "heap" => QueueKind::Heap,
+                    "scan" | "linear-scan" => QueueKind::LinearScan,
+                    other => {
+                        return Err(cerr(format!(
+                            "unknown event_queue {other:?} (heap|scan)"
+                        )))
+                    }
+                };
             }
         }
 
@@ -165,6 +210,10 @@ fn parse_task(i: usize, t: &Json) -> Result<RealModelSpec> {
         .to_string();
     let opt = OptKind::parse(t.get("opt").and_then(Json::as_str).unwrap_or("sgd"))
         .map_err(cerr)?;
+    let arrival = t.get("arrival").and_then(Json::as_f64).unwrap_or(0.0);
+    if !arrival.is_finite() || arrival < 0.0 {
+        return Err(cerr(format!("task {name}: bad arrival {arrival}")));
+    }
     Ok(RealModelSpec {
         name,
         config,
@@ -177,6 +226,7 @@ fn parse_task(i: usize, t: &Json) -> Result<RealModelSpec> {
             .ok_or_else(|| cerr("task missing minibatches"))? as u32,
         seed: t.get("seed").and_then(Json::as_u64).unwrap_or(i as u64),
         inference: t.get("inference").and_then(Json::as_bool).unwrap_or(false),
+        arrival,
     })
 }
 
@@ -199,7 +249,7 @@ mod tests {
     #[test]
     fn parses_full_spec() {
         let w = WorkloadSpec::parse(SPEC).unwrap();
-        assert_eq!(w.cluster.device_mem, vec![2 << 20, 2 << 20]);
+        assert_eq!(w.cluster.device_mem(), vec![2 << 20, 2 << 20]);
         assert_eq!(w.cluster.dram_bytes, 1024 << 20);
         assert_eq!(w.scheduler, "random");
         assert!(!w.engine.double_buffer);
@@ -209,6 +259,7 @@ mod tests {
         assert_eq!(w.tasks.len(), 2);
         assert_eq!(w.tasks[0].opt, OptKind::Momentum { beta: 0.9 });
         assert_eq!(w.tasks[0].epochs, 2);
+        assert_eq!(w.tasks[0].arrival, 0.0); // defaulted
         assert_eq!(w.tasks[1].name, "task-1"); // defaulted
         assert!(w.tasks[1].inference);
     }
@@ -220,8 +271,51 @@ mod tests {
           "tasks": [ { "config": "tiny-lm-b4", "minibatches": 1 } ]
         }"#;
         let w = WorkloadSpec::parse(spec).unwrap();
-        assert_eq!(w.cluster.device_mem, vec![4 << 20, 2 << 20, 8 << 20]);
+        assert_eq!(w.cluster.device_mem(), vec![4 << 20, 2 << 20, 8 << 20]);
         assert_eq!(w.cluster.min_device_mem(), 2 << 20);
+        // memory-only heterogeneity keeps reference speed
+        assert!(w.cluster.devices.iter().all(|d| d.speed == 1.0));
+    }
+
+    #[test]
+    fn device_classes_build_mixed_pool() {
+        let spec = r#"{
+          "cluster": { "device_classes": ["a4000", "a6000", "a4000"] },
+          "tasks": [ { "config": "tiny-lm-b4", "minibatches": 1,
+                       "arrival": 30.5 } ]
+        }"#;
+        let w = WorkloadSpec::parse(spec).unwrap();
+        assert_eq!(w.cluster.n_devices(), 3);
+        // speeds relative to the slowest listed class (A4000)
+        assert_eq!(w.cluster.devices[0].speed, 1.0);
+        assert!(w.cluster.devices[1].speed > 1.0);
+        assert_eq!(w.cluster.min_device_mem(), 16 << 30);
+        assert!(w.cluster.devices[1].link.is_some());
+        assert_eq!(w.tasks[0].arrival, 30.5);
+    }
+
+    #[test]
+    fn event_queue_option_parses() {
+        use crate::coordinator::sharp::QueueKind;
+        let mk = |q: &str| {
+            WorkloadSpec::parse(&format!(
+                r#"{{"cluster": {{"devices":1,"device_mem_mib":1}},
+                     "engine": {{"event_queue": "{q}"}},
+                     "tasks":[{{"config":"x","minibatches":1}}]}}"#
+            ))
+        };
+        assert_eq!(mk("heap").unwrap().engine.queue, QueueKind::Heap);
+        assert_eq!(mk("scan").unwrap().engine.queue, QueueKind::LinearScan);
+        assert!(mk("fibheap").is_err());
+    }
+
+    #[test]
+    fn bad_task_arrival_rejected() {
+        let spec = r#"{
+          "cluster": { "devices": 1, "device_mem_mib": 1 },
+          "tasks": [ { "config": "x", "minibatches": 1, "arrival": -2.0 } ]
+        }"#;
+        assert!(WorkloadSpec::parse(spec).is_err());
     }
 
     #[test]

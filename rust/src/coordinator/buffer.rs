@@ -10,9 +10,12 @@
 use crate::coordinator::memory::{DeviceLedger, Residency};
 use crate::error::Result;
 
-/// Per-device double-buffer state.
+/// Per-device double-buffer state. The zone is sized from the owning
+/// device's own capacity (a fraction of [`DeviceLedger::capacity`]), so in
+/// heterogeneous pools bigger devices stage bigger prefetches.
 #[derive(Debug, Clone)]
 pub struct DoubleBuffer {
+    /// Whether prefetching is active (Table 3 ablation disables it).
     pub enabled: bool,
     /// Bytes reserved in the device ledger for the loading zone.
     pub zone_bytes: u64,
@@ -21,10 +24,14 @@ pub struct DoubleBuffer {
     staged: Option<StagedShard>,
 }
 
+/// A shard parked in the buffer zone mid-prefetch.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StagedShard {
+    /// Model the staged shard belongs to.
     pub model: usize,
+    /// Shard index within the model.
     pub shard: u32,
+    /// Bytes being transferred.
     pub bytes: u64,
     /// Virtual time when the prefetch transfer finishes.
     pub ready_at: f64,
@@ -40,6 +47,7 @@ impl DoubleBuffer {
         Ok(DoubleBuffer { enabled, zone_bytes, staged: None })
     }
 
+    /// The shard currently staged, if any.
     pub fn staged(&self) -> Option<&StagedShard> {
         self.staged.as_ref()
     }

@@ -5,7 +5,9 @@
 //! their unit runs and *demoted* back afterwards (unless cached for reuse —
 //! the §4.6 "serendipitous bonus"). The partitioner probes against this
 //! ledger exactly like Algorithm 1 probes a real GPU, and the double-buffer
-//! reserves its zone here.
+//! reserves its zone here. Capacities are per-ledger, so heterogeneous
+//! pools (unequal device memories) account correctly: each device's buffer
+//! zone and free space are derived from its own capacity.
 
 use std::collections::BTreeMap;
 
@@ -35,26 +37,34 @@ pub struct DeviceLedger {
 }
 
 impl DeviceLedger {
+    /// A fresh ledger for `device` with `capacity` bytes. Heterogeneous
+    /// pools simply build ledgers with different capacities — all
+    /// accounting below is per-ledger.
     pub fn new(device: usize, capacity: u64) -> DeviceLedger {
         DeviceLedger { device, capacity, used: 0, entries: BTreeMap::new() }
     }
 
+    /// Total device capacity in bytes.
     pub fn capacity(&self) -> u64 {
         self.capacity
     }
 
+    /// Bytes currently allocated.
     pub fn used(&self) -> u64 {
         self.used
     }
 
+    /// Bytes still available.
     pub fn free(&self) -> u64 {
         self.capacity - self.used
     }
 
+    /// Whether residency `r` is currently held.
     pub fn contains(&self, r: &Residency) -> bool {
         self.entries.contains_key(r)
     }
 
+    /// Bytes held by residency `r` (0 if absent).
     pub fn bytes_of(&self, r: &Residency) -> u64 {
         self.entries.get(r).copied().unwrap_or(0)
     }
@@ -109,14 +119,17 @@ pub struct DramPool {
 }
 
 impl DramPool {
+    /// A DRAM tier of `capacity` bytes.
     pub fn new(capacity: u64) -> DramPool {
         DramPool { capacity, used: 0, promoted_bytes: 0, demoted_bytes: 0 }
     }
 
+    /// Bytes homed in DRAM.
     pub fn used(&self) -> u64 {
         self.used
     }
 
+    /// Bytes still available.
     pub fn free(&self) -> u64 {
         self.capacity - self.used
     }
@@ -131,14 +144,17 @@ impl DramPool {
         Ok(())
     }
 
+    /// Release a model's parameter set (job eviction / teardown).
     pub fn unhome(&mut self, bytes: u64) {
         self.used = self.used.saturating_sub(bytes);
     }
 
+    /// Account DRAM->device promotion traffic.
     pub fn note_promote(&mut self, bytes: u64) {
         self.promoted_bytes += bytes;
     }
 
+    /// Account device->DRAM demotion traffic.
     pub fn note_demote(&mut self, bytes: u64) {
         self.demoted_bytes += bytes;
     }

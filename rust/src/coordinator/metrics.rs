@@ -20,28 +20,38 @@ pub enum IntervalKind {
 /// One device-time interval in the schedule.
 #[derive(Debug, Clone, Copy)]
 pub struct Interval {
+    /// Device the interval occurred on.
     pub device: usize,
+    /// Virtual start time.
     pub start: f64,
+    /// Virtual end time.
     pub end: f64,
+    /// Model the interval served.
     pub model: usize,
+    /// Shard index within the model.
     pub shard: u32,
+    /// Forward or backward.
     pub phase: Phase,
     /// Queue position of the unit (for ordering invariants in tests).
     pub unit_seq: u64,
+    /// What the time was spent on.
     pub kind: IntervalKind,
 }
 
 /// Full execution trace of a run.
 #[derive(Debug, Clone, Default)]
 pub struct Trace {
+    /// Every recorded device-time interval.
     pub intervals: Vec<Interval>,
     /// Device lifetime windows [start, end) for utilization denominators
     /// (devices may arrive/leave mid-run).
     pub device_windows: BTreeMap<usize, (f64, f64)>,
+    /// Virtual time the last interval ends.
     pub makespan: f64,
 }
 
 impl Trace {
+    /// Append an interval, extending the makespan.
     pub fn record(&mut self, iv: Interval) {
         debug_assert!(iv.end >= iv.start);
         if iv.end > self.makespan {
@@ -50,10 +60,12 @@ impl Trace {
         self.intervals.push(iv);
     }
 
+    /// Set the lifetime window of `device` (infinity = until run end).
     pub fn set_device_window(&mut self, device: usize, start: f64, end: f64) {
         self.device_windows.insert(device, (start, end));
     }
 
+    /// Clamp open-ended device windows to the final makespan.
     pub fn close_device_windows(&mut self) {
         let mk = self.makespan;
         for (_, (_, end)) in self.device_windows.iter_mut() {
@@ -63,14 +75,17 @@ impl Trace {
         }
     }
 
+    /// Total compute seconds across devices.
     pub fn compute_time(&self) -> f64 {
         self.time_of(IntervalKind::Compute)
     }
 
+    /// Total synchronous transfer seconds.
     pub fn transfer_time(&self) -> f64 {
         self.time_of(IntervalKind::Transfer)
     }
 
+    /// Total double-buffer stall seconds.
     pub fn stall_time(&self) -> f64 {
         self.time_of(IntervalKind::BufferStall)
     }
@@ -102,6 +117,8 @@ impl Trace {
         }
     }
 
+    /// Number of compute intervals (one per retired unit when interval
+    /// recording is on).
     pub fn units_executed(&self) -> usize {
         self.intervals
             .iter()

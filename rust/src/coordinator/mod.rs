@@ -14,56 +14,103 @@ pub mod task;
 pub mod unit;
 
 use crate::coordinator::partitioner::PartitionPolicy;
-use crate::coordinator::sharp::{EngineOptions, RunReport, SharpEngine};
+use crate::coordinator::sharp::{DeviceSpec, EngineOptions, RunReport, SharpEngine};
 use crate::error::{HydraError, Result};
 use crate::exec::real::{RealBackend, RealModelSpec};
 
-/// High-level multi-model training API, mirroring the paper's Figure 4:
+/// High-level multi-model training API, mirroring the paper's Figure 4.
 ///
-/// ```ignore
+/// Register tasks, then [`ModelOrchestrator::train_models`] composes the
+/// whole stack: pilot runs -> Algorithm-1 partitioning -> ModelTask queues
+/// -> SHARP engine with spilling and double-buffering -> PJRT execution of
+/// every shard unit.
+///
+/// ```
+/// use hydra::coordinator::ModelOrchestrator;
+/// use hydra::exec::real::RealModelSpec;
+/// use hydra::train::optimizer::OptKind;
+///
 /// let mut orch = ModelOrchestrator::new("artifacts");
-/// orch.add_task(RealModelSpec { name: "bert-lr3".into(), config: "tiny-lm-b8".into(), .. });
-/// orch.add_task(RealModelSpec { .. });
-/// let report = orch.train_models(&cluster)?;
+/// orch.add_task(RealModelSpec {
+///     name: "bert-lr3".into(),
+///     config: "tiny-lm-b8".into(),
+///     lr: 1e-3,
+///     opt: OptKind::Sgd,
+///     epochs: 1,
+///     minibatches_per_epoch: 4,
+///     seed: 0,
+///     inference: false,
+///     arrival: 0.0,
+/// });
+/// orch.scheduler = "sharded-lrtf".to_string();
+/// assert_eq!(orch.n_tasks(), 1);
+/// // orch.train_models(&cluster) then runs everything (needs artifacts/).
 /// ```
 pub struct ModelOrchestrator {
     manifest_dir: String,
     specs: Vec<RealModelSpec>,
+    /// Algorithm-1 partitioning knobs.
     pub partition_policy: PartitionPolicy,
+    /// SHARP engine knobs (mode, double-buffering, transfer model, ...).
     pub engine_options: EngineOptions,
+    /// Scheduling policy name (see [`sched::by_name`]).
     pub scheduler: String,
     /// AutoML-style early stopping: models whose epoch-mean loss falls
     /// behind the median after `min_epochs` are dropped (§4.7.2).
     pub early_stop_median_after: Option<u32>,
 }
 
-/// Cluster description for real runs: per-device "GPU memory" capacities
-/// plus the DRAM pool (all simulated capacities; compute is real — see
-/// DESIGN.md §1).
+/// Cluster description for real runs: per-device specs (memory capacity,
+/// relative speed, optional link override) plus the DRAM pool. Capacities
+/// are simulated; compute is real — see DESIGN.md §1.
 #[derive(Debug, Clone)]
 pub struct Cluster {
-    pub device_mem: Vec<u64>,
+    /// One spec per device; heterogeneous pools are first-class.
+    pub devices: Vec<DeviceSpec>,
+    /// Size of the host DRAM tier models spill to.
     pub dram_bytes: u64,
 }
 
 impl Cluster {
+    /// A homogeneous pool of `n_devices` reference-speed devices.
     pub fn uniform(n_devices: usize, mem_per_device: u64, dram_bytes: u64) -> Cluster {
-        Cluster { device_mem: vec![mem_per_device; n_devices], dram_bytes }
+        Cluster {
+            devices: vec![DeviceSpec::uniform(mem_per_device); n_devices],
+            dram_bytes,
+        }
     }
 
+    /// A heterogeneous pool from explicit device specs.
+    pub fn heterogeneous(devices: Vec<DeviceSpec>, dram_bytes: u64) -> Cluster {
+        Cluster { devices, dram_bytes }
+    }
+
+    /// Number of devices in the pool.
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Per-device memory capacities.
+    pub fn device_mem(&self) -> Vec<u64> {
+        self.devices.iter().map(|d| d.mem_bytes).collect()
+    }
+
+    /// Capacity of the smallest device — the §4.3 partitioning bound.
     pub fn min_device_mem(&self) -> u64 {
-        self.device_mem.iter().copied().min().unwrap_or(0)
+        self.devices.iter().map(|d| d.mem_bytes).min().unwrap_or(0)
     }
 }
 
 /// Everything a caller needs to inspect after training.
 pub struct TrainingReport {
+    /// Engine-level schedule report (makespan, utilization, job stats).
     pub run: RunReport,
     /// Per-model loss logs: (step, loss) pairs in retirement order.
     pub losses: Vec<Vec<(u64, f32)>>,
 }
 
 impl ModelOrchestrator {
+    /// Create an orchestrator over the artifact manifest at `manifest_dir`.
     pub fn new(manifest_dir: impl Into<String>) -> ModelOrchestrator {
         ModelOrchestrator {
             manifest_dir: manifest_dir.into(),
@@ -81,6 +128,7 @@ impl ModelOrchestrator {
         self
     }
 
+    /// Number of registered tasks.
     pub fn n_tasks(&self) -> usize {
         self.specs.len()
     }
@@ -89,7 +137,9 @@ impl ModelOrchestrator {
     ///
     /// This is where the whole stack composes: pilot runs -> Algorithm-1
     /// partitioning -> ModelTask queues -> SHARP engine with spilling and
-    /// double-buffering -> real PJRT execution of every shard unit.
+    /// double-buffering -> real PJRT execution of every shard unit. Tasks
+    /// with a non-zero [`RealModelSpec::arrival`] enter the schedule online
+    /// at that virtual time.
     pub fn train_models(&self, cluster: &Cluster) -> Result<TrainingReport> {
         if self.specs.is_empty() {
             return Err(HydraError::Config("no tasks registered".into()));
@@ -107,9 +157,9 @@ impl ModelOrchestrator {
         let scheduler = sched::by_name(&self.scheduler)
             .ok_or_else(|| HydraError::Config(format!(
                 "unknown scheduler {:?}", self.scheduler)))?;
-        let mut engine = SharpEngine::new(
+        let mut engine = SharpEngine::with_devices(
             tasks,
-            &cluster.device_mem,
+            &cluster.devices,
             cluster.dram_bytes,
             scheduler,
             &mut backend,

@@ -53,7 +53,9 @@ impl Default for PartitionPolicy {
 /// Probe result: the shard boundaries (exclusive end indices) + shard descs.
 #[derive(Debug, Clone)]
 pub struct Partition {
+    /// Exclusive end index of each shard's layer range.
     pub cuts: Vec<usize>,
+    /// Per-shard static descriptions for the engine/scheduler.
     pub shards: Vec<ShardDesc>,
 }
 

@@ -17,15 +17,19 @@ use std::time::{Duration, Instant};
 /// Abstract instance: per-model unit runtime lists, device count.
 #[derive(Debug, Clone)]
 pub struct Problem {
+    /// Per-model sequential unit runtimes.
     pub units: Vec<Vec<f64>>,
+    /// Number of identical devices.
     pub devices: usize,
 }
 
 impl Problem {
+    /// Sum of all unit runtimes.
     pub fn total_work(&self) -> f64 {
         self.units.iter().map(|u| u.iter().sum::<f64>()).sum()
     }
 
+    /// Longest single-model chain.
     pub fn longest_chain(&self) -> f64 {
         self.units
             .iter()
@@ -39,10 +43,14 @@ impl Problem {
     }
 }
 
+/// Solver outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct Solution {
+    /// Best makespan found (incumbent on timeout).
     pub makespan: f64,
+    /// Whether the search finished within budget.
     pub proven_optimal: bool,
+    /// Branch-and-bound nodes explored.
     pub nodes: u64,
 }
 

@@ -1,9 +1,12 @@
 //! Scheduling policies for SHARP (§4.7).
 //!
 //! A scheduler is consulted whenever a device frees up: it picks one model
-//! from the *eligible* set (front-of-queue, not running elsewhere). The
-//! engine enforces all MILP constraints (sequential order per model, device
-//! isolation); policies only order the eligible set.
+//! from the *eligible* set (front-of-queue, not running elsewhere, arrival
+//! time passed). The engine enforces all MILP constraints (sequential order
+//! per model, device isolation) and — in the online setting — keeps
+//! not-yet-arrived and cancelled jobs out of the eligible set, so policies
+//! stay correct under dynamic arrivals without any changes: they only ever
+//! order what is runnable *now*.
 
 pub mod bnb;
 
@@ -17,6 +20,10 @@ pub struct PickContext<'a> {
     pub now: f64,
     /// Device the unit would run on.
     pub device: usize,
+    /// Compute speed of that device relative to the reference GPU the unit
+    /// costs were calibrated on (1.0 on homogeneous pools). Lets
+    /// heterogeneity-aware policies prefer fast devices for long jobs.
+    pub speed: f64,
     /// (model, shard) already resident on this device, if any — lets
     /// affinity-aware policies exploit the §4.6 no-move bonus.
     pub resident: Option<&'a [(usize, u32)]>,
@@ -95,7 +102,10 @@ impl Scheduler for RandomSched {
     }
 }
 
-/// First-come-first-served by model id (arrival order).
+/// First-come-first-served: earliest arrival first, model id as the
+/// deterministic tie-break. For batch workloads every arrival is 0.0, so
+/// this reduces to the seed behaviour (lowest id); under online Poisson
+/// traffic it is true submission-order FIFO.
 #[derive(Debug, Default)]
 pub struct FifoSched;
 
@@ -110,11 +120,19 @@ impl Scheduler for FifoSched {
         _ctx: PickContext<'_>,
         _rng: &mut Rng,
     ) -> Option<usize> {
-        eligible
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, m)| m.id)
-            .map(|(i, _)| i)
+        let mut best: Option<(usize, f64, usize)> = None;
+        for (i, m) in eligible.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some((_, t, id)) => {
+                    m.arrival < t || (m.arrival == t && m.id < id)
+                }
+            };
+            if better {
+                best = Some((i, m.arrival, m.id));
+            }
+        }
+        best.map(|(i, _, _)| i)
     }
 }
 
@@ -206,11 +224,12 @@ mod tests {
             front_cost: 1.0,
             front_shard: 0,
             front_phase: Phase::Fwd,
+            arrival: 0.0,
         }
     }
 
     fn ctx() -> PickContext<'static> {
-        PickContext { now: 0.0, device: 0, resident: None }
+        PickContext { now: 0.0, device: 0, speed: 1.0, resident: None }
     }
 
     #[test]
@@ -243,6 +262,17 @@ mod tests {
     }
 
     #[test]
+    fn fifo_orders_by_arrival_before_id() {
+        let mut s = FifoSched;
+        let mut a = snap(7, 5.0);
+        a.arrival = 1.0;
+        let mut b = snap(2, 9.0);
+        b.arrival = 4.0;
+        // id 7 arrived first: true FIFO must pick it over the lower id
+        assert_eq!(s.pick(&[a, b], ctx(), &mut Rng::new(0)), Some(0));
+    }
+
+    #[test]
     fn random_is_deterministic_per_seed_and_in_range() {
         let mut s = RandomSched;
         let es = [snap(0, 1.0), snap(1, 1.0), snap(2, 1.0)];
@@ -270,7 +300,7 @@ mod tests {
         let mut s = AffinityLrtf;
         let es = [snap(0, 9.0), snap(1, 2.0)];
         let resident = [(1usize, 0u32)];
-        let c = PickContext { now: 0.0, device: 0, resident: Some(&resident) };
+        let c = PickContext { now: 0.0, device: 0, speed: 1.0, resident: Some(&resident) };
         assert_eq!(s.pick(&es, c, &mut Rng::new(0)), Some(1));
         // without residency info falls back to LRTF
         assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(0));

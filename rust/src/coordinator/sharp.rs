@@ -9,15 +9,30 @@
 //! paper's figures* at 8-GPU scale and *actually train* models on this
 //! machine (DESIGN.md §1).
 //!
+//! Beyond the paper's batch setting, the engine is **online and
+//! multi-tenant**: jobs carry arrival times ([`ModelTask::with_arrival`]),
+//! can be submitted and cancelled while the engine runs ([`JobEvent`]), and
+//! devices may be **heterogeneous** ([`DeviceSpec`]: per-device memory,
+//! relative compute speed, and host-link bandwidth). Per-job latency
+//! statistics come back in [`RunReport::jobs`].
+//!
+//! The dispatch hot path is incremental: a binary-heap event queue
+//! (O(log n) push/pop), a ready-set of eligible models, and a parked-set of
+//! idle devices replace the seed engine's linear scans over all devices and
+//! all tasks on every decision. [`QueueKind::LinearScan`] keeps the O(n)
+//! event-selection discipline available as a reference implementation — the
+//! two produce identical schedules (property- and equivalence-tested in
+//! rust/tests) because both pop events in (time, submission-order) order.
+//!
 //! Invariants enforced here (and property-tested in rust/tests):
 //!   1. sequential order of a model's shard units (MILP constraint (a)),
 //!   2. device isolation — one unit per device at a time (b, c),
 //!   3. model isolation — one in-flight unit per model,
 //!   4. ledgers never exceed device capacity,
-//!   5. every unit executes exactly once.
+//!   5. every unit executes exactly once (unless its job is cancelled),
+//!   6. no unit of a job starts before the job's arrival time.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeSet, BinaryHeap};
 
 use crate::coordinator::buffer::DoubleBuffer;
 use crate::coordinator::memory::{DeviceLedger, DramPool, Residency};
@@ -32,13 +47,21 @@ use crate::util::rng::Rng;
 /// Link cost model for DRAM<->device transfers (PCIe class by default).
 #[derive(Debug, Clone, Copy)]
 pub struct TransferModel {
+    /// Sustained link bandwidth in bytes per second.
     pub bandwidth_bytes_per_sec: f64,
+    /// Fixed per-transfer latency in seconds.
     pub latency_secs: f64,
 }
 
 impl TransferModel {
+    /// PCIe gen3 x16-class link (the paper's testbed host link).
     pub fn pcie_gen3() -> TransferModel {
         TransferModel { bandwidth_bytes_per_sec: 12.0e9, latency_secs: 20e-6 }
+    }
+
+    /// PCIe gen4 x16-class link (A4000/A6000-era hosts).
+    pub fn pcie_gen4() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: 24.0e9, latency_secs: 20e-6 }
     }
 
     /// Instantaneous transfers (pure-scheduling studies, Fig 7).
@@ -46,6 +69,7 @@ impl TransferModel {
         TransferModel { bandwidth_bytes_per_sec: f64::INFINITY, latency_secs: 0.0 }
     }
 
+    /// Seconds to move `bytes` over this link.
     pub fn secs(&self, bytes: u64) -> f64 {
         if bytes == 0 {
             0.0
@@ -55,25 +79,70 @@ impl TransferModel {
     }
 }
 
+/// Static description of one accelerator in a (possibly heterogeneous) pool.
+///
+/// The memory ledger, double-buffer zone sizing, transfer accounting and
+/// unit durations are all derived per device from this spec, so mixed pools
+/// (e.g. A4000s next to A6000s) schedule correctly: bigger devices get
+/// bigger prefetch zones, faster devices retire units sooner, and every
+/// transfer is charged against the device's own host link.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    /// Usable device memory in bytes (the ledger capacity).
+    pub mem_bytes: u64,
+    /// Compute speed relative to the reference GPU that calibrated the
+    /// `ShardDesc` unit costs (1.0 = the reference itself, 2.0 = twice as
+    /// fast). Unit durations are divided by this factor.
+    pub speed: f64,
+    /// Host-link override for this device; `None` uses
+    /// [`EngineOptions::transfer`].
+    pub link: Option<TransferModel>,
+}
+
+impl DeviceSpec {
+    /// A reference-speed device with the engine-wide default link.
+    pub fn uniform(mem_bytes: u64) -> DeviceSpec {
+        DeviceSpec { mem_bytes, speed: 1.0, link: None }
+    }
+}
+
 /// Parallelism mode: SHARP blending vs the spilling-only ablation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ParallelMode {
     /// Full SHARP: all idle models are eligible on any free device.
     Sharp,
     /// Ablation (Table 3 "without SHARP"): models run one-after-another;
-    /// only the lowest-id unfinished model is ever eligible, so sequential
-    /// shard dependencies leave at most one device busy.
+    /// only the lowest-id unfinished (arrived) model is ever eligible, so
+    /// sequential shard dependencies leave at most one device busy.
     Sequential,
+}
+
+/// Event-queue discipline for the engine's virtual-time loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Binary min-heap keyed by (time, submission order): O(log n) per
+    /// event. The default.
+    Heap,
+    /// Linear scan for the earliest event: O(n) per event. Kept as the
+    /// reference discipline for the heap-equivalence tests and the hotpath
+    /// bench; schedules are identical to [`QueueKind::Heap`] by
+    /// construction (same key, same tie-break).
+    LinearScan,
 }
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
 pub struct EngineOptions {
+    /// SHARP blending vs the sequential ablation.
     pub mode: ParallelMode,
+    /// Enable §4.6 double-buffered prefetch.
     pub double_buffer: bool,
     /// Fraction of device memory reserved as the prefetch zone (§4.6).
     pub buffer_frac: f64,
+    /// Engine-wide DRAM<->device link (overridable per device via
+    /// [`DeviceSpec::link`]).
     pub transfer: TransferModel,
+    /// Seed for the engine's RNG stream (Random scheduler etc.).
     pub seed: u64,
     /// Record per-interval trace entries (disable for very long sims to
     /// bound memory; aggregates are still collected).
@@ -85,6 +154,8 @@ pub struct EngineOptions {
     /// volume ~3x. Used by the Table 3 ablation to recover the paper's
     /// no-double-buffering penalty.
     pub full_state_transfers: bool,
+    /// Event-queue discipline (heap by default; linear scan as reference).
+    pub queue: QueueKind,
 }
 
 impl Default for EngineOptions {
@@ -97,6 +168,7 @@ impl Default for EngineOptions {
             seed: 0,
             record_intervals: true,
             full_state_transfers: false,
+            queue: QueueKind::Heap,
         }
     }
 }
@@ -104,16 +176,90 @@ impl Default for EngineOptions {
 /// A fault-injection / elasticity event (§4.7's dynamic setting).
 #[derive(Debug, Clone, Copy)]
 pub enum ClusterEvent {
-    /// Device joins at `time` with the given memory capacity.
-    Arrive { time: f64, mem_bytes: u64 },
+    /// Device joins at `time` with the given memory capacity (reference
+    /// speed; use [`SharpEngine::with_devices`] for heterogeneous pools
+    /// known up front).
+    Arrive {
+        /// Virtual time the device joins.
+        time: f64,
+        /// Memory capacity of the joining device.
+        mem_bytes: u64,
+    },
     /// Device `device` is lost at `time` (takes effect when its in-flight
     /// unit retires; the unit itself completes — fail-stop between units).
-    Fail { time: f64, device: usize },
+    Fail {
+        /// Virtual time of the loss.
+        time: f64,
+        /// Index of the failing device.
+        device: usize,
+    },
+}
+
+/// A tenant-facing job-queue event: submissions and cancellations that take
+/// effect *while the engine runs* (the online multi-tenant setting).
+///
+/// Jobs known up front carry their arrival via [`ModelTask::with_arrival`];
+/// `Submit` additionally allows tasks the engine has never seen (e.g. a
+/// tenant showing up mid-run), and `Cancel` revokes a job at unit
+/// granularity: an in-flight unit completes, everything else is dropped.
+#[derive(Debug, Clone)]
+pub enum JobEvent {
+    /// Submit `task` at `time`. The task's id must equal the number of
+    /// tasks the engine will know at that point (construction tasks +
+    /// earlier submissions), i.e. ids follow submission order.
+    Submit {
+        /// Virtual time of the submission.
+        time: f64,
+        /// The job being submitted.
+        task: ModelTask,
+    },
+    /// Cancel `model` at `time`. Idempotent; cancelling a finished job is a
+    /// no-op.
+    Cancel {
+        /// Virtual time of the cancellation.
+        time: f64,
+        /// Task id to cancel.
+        model: usize,
+    },
+}
+
+/// Per-job outcome statistics for the online setting.
+#[derive(Debug, Clone)]
+pub struct JobStat {
+    /// Task id.
+    pub model: usize,
+    /// Task name (tenant-facing tag).
+    pub name: String,
+    /// Arrival (submission) time.
+    pub arrival: f64,
+    /// Virtual time the job finished (last unit retired, or the moment a
+    /// cancellation took effect). `NaN` if the run ended with the job
+    /// unfinished (e.g. every device failed).
+    pub finished: f64,
+    /// Whether the job was cancelled.
+    pub cancelled: bool,
+    /// Units this job actually executed.
+    pub units_executed: u64,
+}
+
+impl JobStat {
+    /// Job latency (finish - arrival), clamped at 0 so a job cancelled
+    /// *before* its arrival reports zero rather than a negative latency;
+    /// `NaN` for unfinished jobs.
+    pub fn latency(&self) -> f64 {
+        let l = self.finished - self.arrival;
+        // NaN compares false, so unfinished jobs keep their NaN latency
+        if l < 0.0 {
+            0.0
+        } else {
+            l
+        }
+    }
 }
 
 #[derive(Debug)]
 struct DeviceState {
-    id: usize,
+    spec: DeviceSpec,
     ledger: DeviceLedger,
     buffer: DoubleBuffer,
     /// (model, shard) whose parameters are resident from the previous unit.
@@ -128,50 +274,130 @@ struct DeviceState {
     last_demote_bytes: u64,
 }
 
-/// Totally ordered f64 key for the event heap.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct Key(f64);
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    /// A device finished its unit (or is ready at start-up / was woken).
+    DeviceFree { device: usize },
+    /// The unit on `device` retires at this time; model becomes idle.
+    UnitRetire { device: usize, unit: ShardUnit },
+    /// Index into the cluster-event list.
+    Cluster(usize),
+    /// A construction-time task reaches its arrival time.
+    JobArrive { model: usize },
+    /// Index into the pending-submission list.
+    JobSubmit(usize),
+    /// Tenant cancellation of `model`.
+    JobCancel { model: usize },
+}
 
-impl Eq for Key {}
+/// One queued event. Total order: earliest (time, seq) first; `Ord` is
+/// implemented *reversed* so `BinaryHeap` (a max-heap) pops the minimum.
+#[derive(Debug, Clone, Copy)]
+struct QueuedEvent {
+    time: f64,
+    seq: u64,
+    ev: Event,
+}
 
-impl PartialOrd for Key {
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedEvent {}
+
+impl PartialOrd for QueuedEvent {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for Key {
+impl Ord for QueuedEvent {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.total_cmp(&other.0)
+        // reversed: the earliest (time, seq) is the heap maximum
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
-#[derive(Debug, Clone, Copy)]
-enum Event {
-    /// A device finished its unit (or is ready at start-up).
-    DeviceFree { device: usize },
-    /// The unit on `device` retires at this time; model becomes idle.
-    UnitRetire { device: usize, unit: ShardUnit },
-    Cluster(usize), // index into the cluster-event list
+/// The virtual-time event queue: a binary heap (default) or a linear-scan
+/// list with identical pop order, switchable via [`QueueKind`].
+#[derive(Debug)]
+struct EventQueue {
+    kind: QueueKind,
+    heap: BinaryHeap<QueuedEvent>,
+    list: Vec<QueuedEvent>,
+    seq: u64,
+}
+
+impl EventQueue {
+    fn new(kind: QueueKind) -> EventQueue {
+        EventQueue { kind, heap: BinaryHeap::new(), list: Vec::new(), seq: 0 }
+    }
+
+    fn push(&mut self, time: f64, ev: Event) {
+        let q = QueuedEvent { time, seq: self.seq, ev };
+        self.seq += 1;
+        match self.kind {
+            QueueKind::Heap => self.heap.push(q),
+            QueueKind::LinearScan => self.list.push(q),
+        }
+    }
+
+    fn pop(&mut self) -> Option<QueuedEvent> {
+        match self.kind {
+            QueueKind::Heap => self.heap.pop(),
+            QueueKind::LinearScan => {
+                if self.list.is_empty() {
+                    return None;
+                }
+                // `Ord` is reversed, so the earliest event is the maximum.
+                let mut best = 0;
+                for i in 1..self.list.len() {
+                    if self.list[i] > self.list[best] {
+                        best = i;
+                    }
+                }
+                Some(self.list.swap_remove(best))
+            }
+        }
+    }
 }
 
 /// Result summary of an engine run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// Full execution trace (intervals, device windows, makespan).
     pub trace: Trace,
+    /// Virtual time the last interval ends.
     pub makespan: f64,
+    /// Compute seconds / available device seconds.
     pub utilization: f64,
+    /// Total shard-unit compute seconds.
     pub compute_secs: f64,
+    /// Total synchronous transfer seconds.
     pub transfer_secs: f64,
+    /// Total double-buffer stall seconds.
     pub stall_secs: f64,
+    /// Shard units retired.
     pub units_executed: u64,
+    /// DRAM->device promotion traffic.
     pub promoted_bytes: u64,
+    /// Device->DRAM demotion traffic.
     pub demoted_bytes: u64,
+    /// Name of the scheduling policy used.
     pub scheduler: &'static str,
+    /// Per-job arrival/finish/cancellation statistics (online setting;
+    /// batch runs have arrival 0.0 everywhere).
+    pub jobs: Vec<JobStat>,
 }
 
 /// The SHARP engine.
 pub struct SharpEngine<'a> {
+    /// The model tasks (public for post-run inspection in tests/figures).
     pub tasks: Vec<ModelTask>,
     devices: Vec<DeviceState>,
     dram: DramPool,
@@ -179,10 +405,24 @@ pub struct SharpEngine<'a> {
     scheduler: Box<dyn Scheduler>,
     backend: &'a mut dyn ExecutionBackend,
     cluster_events: Vec<ClusterEvent>,
+    job_events: Vec<JobEvent>,
     // run state
-    heap: BinaryHeap<Reverse<(Key, u64, usize)>>, // (time, seq, event idx)
-    events: Vec<Event>,
-    seq: u64,
+    queue: EventQueue,
+    pending_submissions: Vec<Option<ModelTask>>,
+    /// Models whose front unit is eligible right now (arrived + idle).
+    ready: BTreeSet<usize>,
+    /// Per-model: has the arrival time passed?
+    arrived: Vec<bool>,
+    /// Per-model: has a cancellation been issued?
+    job_cancelled: Vec<bool>,
+    /// Cancellations waiting for an in-flight unit to retire.
+    cancel_pending: BTreeSet<usize>,
+    /// Per-model finish time (NaN until finished).
+    finish_times: Vec<f64>,
+    /// Devices that are alive, idle, and found no work at their last wake.
+    parked: BTreeSet<usize>,
+    /// Count of alive devices not currently computing.
+    free_devices: usize,
     trace: Trace,
     units_executed: u64,
     agg_compute: f64,
@@ -192,6 +432,9 @@ pub struct SharpEngine<'a> {
 }
 
 impl<'a> SharpEngine<'a> {
+    /// Build an engine over a homogeneous pool (`device_mem[i]` bytes each,
+    /// reference speed, engine-wide link). The seed API; see
+    /// [`SharpEngine::with_devices`] for heterogeneous pools.
     pub fn new(
         tasks: Vec<ModelTask>,
         device_mem: &[u64],
@@ -200,29 +443,63 @@ impl<'a> SharpEngine<'a> {
         backend: &'a mut dyn ExecutionBackend,
         options: EngineOptions,
     ) -> Result<SharpEngine<'a>> {
-        if device_mem.is_empty() {
+        let specs: Vec<DeviceSpec> =
+            device_mem.iter().map(|&m| DeviceSpec::uniform(m)).collect();
+        Self::with_devices(tasks, &specs, dram_bytes, scheduler, backend, options)
+    }
+
+    /// Build an engine over an explicit (possibly heterogeneous) device
+    /// pool. Tasks must be partitioned so every shard fits the smallest
+    /// device (the §4.3 "smallest-memory GPU" contract — see
+    /// [`crate::sim::build_tasks_pool`]).
+    pub fn with_devices(
+        tasks: Vec<ModelTask>,
+        specs: &[DeviceSpec],
+        dram_bytes: u64,
+        scheduler: Box<dyn Scheduler>,
+        backend: &'a mut dyn ExecutionBackend,
+        options: EngineOptions,
+    ) -> Result<SharpEngine<'a>> {
+        if specs.is_empty() {
             return Err(HydraError::Config("no devices".into()));
+        }
+        for (m, t) in tasks.iter().enumerate() {
+            if t.id != m {
+                return Err(HydraError::Config(format!(
+                    "task {m} has id {} (ids must be dense and in order)",
+                    t.id
+                )));
+            }
         }
         let mut dram = DramPool::new(dram_bytes);
         for t in &tasks {
             dram.home(t.total_param_bytes())?;
         }
         let mut devices = Vec::new();
-        for (id, &mem) in device_mem.iter().enumerate() {
-            devices.push(Self::mk_device(id, mem, &options)?);
+        for (id, &spec) in specs.iter().enumerate() {
+            devices.push(Self::mk_device(id, spec, &options)?);
         }
         let rng = Rng::new(options.seed);
+        let n_tasks = tasks.len();
+        let n_devices = devices.len();
         Ok(SharpEngine {
             tasks,
             devices,
             dram,
-            options,
+            options: options.clone(),
             scheduler,
             backend,
             cluster_events: Vec::new(),
-            heap: BinaryHeap::new(),
-            events: Vec::new(),
-            seq: 0,
+            job_events: Vec::new(),
+            queue: EventQueue::new(options.queue),
+            pending_submissions: Vec::new(),
+            ready: BTreeSet::new(),
+            arrived: vec![false; n_tasks],
+            job_cancelled: vec![false; n_tasks],
+            cancel_pending: BTreeSet::new(),
+            finish_times: vec![f64::NAN; n_tasks],
+            parked: BTreeSet::new(),
+            free_devices: n_devices,
             trace: Trace::default(),
             units_executed: 0,
             agg_compute: 0.0,
@@ -232,12 +509,18 @@ impl<'a> SharpEngine<'a> {
         })
     }
 
-    fn mk_device(id: usize, mem: u64, options: &EngineOptions) -> Result<DeviceState> {
-        let mut ledger = DeviceLedger::new(id, mem);
-        let zone = (mem as f64 * options.buffer_frac) as u64;
+    fn mk_device(id: usize, spec: DeviceSpec, options: &EngineOptions) -> Result<DeviceState> {
+        if !spec.speed.is_finite() || spec.speed <= 0.0 {
+            return Err(HydraError::Config(format!(
+                "device {id}: speed {} must be finite and positive",
+                spec.speed
+            )));
+        }
+        let mut ledger = DeviceLedger::new(id, spec.mem_bytes);
+        let zone = (spec.mem_bytes as f64 * options.buffer_frac) as u64;
         let buffer = DoubleBuffer::new(options.double_buffer, zone, &mut ledger)?;
         Ok(DeviceState {
-            id,
+            spec,
             ledger,
             buffer,
             resident: None,
@@ -255,25 +538,38 @@ impl<'a> SharpEngine<'a> {
         self
     }
 
-    fn push_event(&mut self, time: f64, ev: Event) {
-        let idx = self.events.len();
-        self.events.push(ev);
-        self.heap.push(Reverse((Key(time), self.seq, idx)));
-        self.seq += 1;
+    /// Register online job submissions/cancellations before `run`.
+    pub fn with_job_events(mut self, events: Vec<JobEvent>) -> Self {
+        self.job_events = events;
+        self
     }
 
-    /// Eligible model snapshots under the current parallel mode.
+    /// The effective host link of `device`.
+    fn link(&self, device: usize) -> TransferModel {
+        self.devices[device].spec.link.unwrap_or(self.options.transfer)
+    }
+
+    /// Eligible model snapshots under the current parallel mode. Built from
+    /// the incrementally-maintained ready-set, so the cost is
+    /// O(|eligible|), not O(|all tasks|).
     fn eligible(&self) -> Vec<ModelSnapshot> {
         match self.options.mode {
             ParallelMode::Sharp => self
-                .tasks
+                .ready
                 .iter()
-                .filter_map(ModelSnapshot::of)
+                .filter_map(|&id| ModelSnapshot::of(&self.tasks[id]))
                 .collect(),
             ParallelMode::Sequential => {
-                // only the lowest-id unfinished model may run
+                // strictly one model in flight across the whole pool: while
+                // any model runs, nothing else is eligible (otherwise a
+                // lower-id job arriving mid-unit would put two devices to
+                // work and corrupt the no-SHARP ablation)
+                if self.tasks.iter().any(|t| t.state() == TaskState::Running) {
+                    return Vec::new();
+                }
+                // then: the lowest-id unfinished *arrived* model
                 for t in &self.tasks {
-                    if t.state() != TaskState::Done {
+                    if t.state() != TaskState::Done && self.arrived[t.id] {
                         return ModelSnapshot::of(t).into_iter().collect();
                     }
                 }
@@ -282,24 +578,78 @@ impl<'a> SharpEngine<'a> {
         }
     }
 
+    /// Mark `model` finished at `now` (first transition only) and release
+    /// its DRAM-homed parameters — online streams with churn would
+    /// otherwise exhaust the pool and reject later submissions.
+    fn finish_job(&mut self, model: usize, now: f64) {
+        if self.finish_times[model].is_nan() {
+            self.finish_times[model] = now;
+            let bytes = self.tasks[model].total_param_bytes();
+            self.dram.unhome(bytes);
+        }
+    }
+
+    /// Wake one parked device (a model just became eligible). Waking
+    /// exactly one is sufficient — at most one model becomes eligible per
+    /// event — and keeps the wake cost O(log n) instead of the seed
+    /// engine's O(devices) broadcast.
+    fn wake_one(&mut self, now: f64) {
+        if let Some(&d) = self.parked.iter().next() {
+            self.parked.remove(&d);
+            self.queue.push(now, Event::DeviceFree { device: d });
+        }
+    }
+
     /// Run to completion; returns the report.
     pub fn run(&mut self) -> Result<RunReport> {
         for d in 0..self.devices.len() {
             self.trace.set_device_window(d, 0.0, f64::INFINITY);
-            self.push_event(0.0, Event::DeviceFree { device: d });
+            self.queue.push(0.0, Event::DeviceFree { device: d });
         }
         for (i, ev) in self.cluster_events.clone().into_iter().enumerate() {
             let time = match ev {
                 ClusterEvent::Arrive { time, .. } | ClusterEvent::Fail { time, .. } => time,
             };
-            self.push_event(time, Event::Cluster(i));
+            self.queue.push(time, Event::Cluster(i));
+        }
+        // Online jobs: construction-time tasks with future arrivals stay out
+        // of the ready-set until their arrival event fires.
+        self.ready.clear();
+        for m in 0..self.tasks.len() {
+            let arrival = self.tasks[m].arrival();
+            if arrival > 0.0 {
+                self.arrived[m] = false;
+                self.queue.push(arrival, Event::JobArrive { model: m });
+            } else {
+                self.arrived[m] = true;
+                if self.tasks[m].state() == TaskState::Idle {
+                    self.ready.insert(m);
+                }
+            }
+        }
+        let job_events = std::mem::take(&mut self.job_events);
+        for ev in job_events {
+            match ev {
+                JobEvent::Submit { time, task } => {
+                    let idx = self.pending_submissions.len();
+                    self.pending_submissions.push(Some(task));
+                    self.queue.push(time, Event::JobSubmit(idx));
+                }
+                JobEvent::Cancel { time, model } => {
+                    self.queue.push(time, Event::JobCancel { model });
+                }
+            }
         }
 
-        while let Some(Reverse((Key(now), _, idx))) = self.heap.pop() {
-            match self.events[idx] {
+        while let Some(q) = self.queue.pop() {
+            let now = q.time;
+            match q.ev {
                 Event::DeviceFree { device } => self.on_device_free(device, now)?,
                 Event::UnitRetire { device, unit } => self.on_unit_retire(device, unit, now)?,
                 Event::Cluster(i) => self.on_cluster_event(i, now)?,
+                Event::JobArrive { model } => self.on_job_arrive(model, now),
+                Event::JobSubmit(idx) => self.on_job_submit(idx, now)?,
+                Event::JobCancel { model } => self.on_job_cancel(model, now)?,
             }
         }
 
@@ -316,6 +666,19 @@ impl<'a> SharpEngine<'a> {
         let device_secs = self.trace.device_seconds();
         let utilization =
             if device_secs > 0.0 { self.agg_compute / device_secs } else { 0.0 };
+        let jobs: Vec<JobStat> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(m, t)| JobStat {
+                model: m,
+                name: t.name.clone(),
+                arrival: t.arrival(),
+                finished: self.finish_times[m],
+                cancelled: self.job_cancelled[m],
+                units_executed: t.completed_units(),
+            })
+            .collect();
         Ok(RunReport {
             makespan: self.trace.makespan,
             utilization,
@@ -326,6 +689,7 @@ impl<'a> SharpEngine<'a> {
             promoted_bytes: self.dram.promoted_bytes,
             demoted_bytes: self.dram.demoted_bytes,
             scheduler: self.scheduler.name(),
+            jobs,
             trace: std::mem::take(&mut self.trace),
         })
     }
@@ -334,9 +698,11 @@ impl<'a> SharpEngine<'a> {
         match self.cluster_events[i] {
             ClusterEvent::Arrive { mem_bytes, .. } => {
                 let id = self.devices.len();
-                self.devices.push(Self::mk_device(id, mem_bytes, &self.options)?);
+                self.devices
+                    .push(Self::mk_device(id, DeviceSpec::uniform(mem_bytes), &self.options)?);
+                self.free_devices += 1;
                 self.trace.set_device_window(id, now, f64::INFINITY);
-                self.push_event(now, Event::DeviceFree { device: id });
+                self.queue.push(now, Event::DeviceFree { device: id });
             }
             ClusterEvent::Fail { device, .. } => {
                 if device < self.devices.len() && self.devices[device].alive {
@@ -357,33 +723,106 @@ impl<'a> SharpEngine<'a> {
         self.devices[device].alive = false;
         self.devices[device].buffer.clear();
         self.devices[device].resident = None;
+        self.parked.remove(&device);
+        self.free_devices -= 1;
         if let Some(u) = pending {
-            // return the pre-claimed unit to its model's queue
+            // return the pre-claimed unit to its model's queue; the model
+            // may now be runnable elsewhere
             self.tasks[u.model].unclaim(&u);
+            self.ready.insert(u.model);
+            self.wake_one(now);
         }
         let start = self.trace.device_windows.get(&device).map(|w| w.0).unwrap_or(0.0);
         self.trace.set_device_window(device, start, now);
-        // pre-claimed model may now be runnable elsewhere
-        self.wake_idle_devices(now);
     }
 
-    /// Wake every idle live device (a model may have become eligible).
-    fn wake_idle_devices(&mut self, now: f64) {
-        let idle: Vec<usize> = self
-            .devices
-            .iter()
-            .filter(|d| d.alive && !d.busy)
-            .map(|d| d.id)
-            .collect();
-        for d in idle {
-            self.push_event(now, Event::DeviceFree { device: d });
+    fn on_job_arrive(&mut self, model: usize, now: f64) {
+        self.arrived[model] = true;
+        if !self.job_cancelled[model] && self.tasks[model].state() == TaskState::Idle {
+            self.ready.insert(model);
+            self.wake_one(now);
         }
+    }
+
+    fn on_job_submit(&mut self, idx: usize, now: f64) -> Result<()> {
+        let Some(task) = self.pending_submissions[idx].take() else {
+            return Ok(());
+        };
+        let id = self.tasks.len();
+        if task.id != id {
+            return Err(HydraError::Sched(format!(
+                "submitted task has id {} but {id} tasks are registered \
+                 (ids must follow submission order)",
+                task.id
+            )));
+        }
+        self.dram.home(task.total_param_bytes())?;
+        self.tasks.push(task);
+        self.job_cancelled.push(false);
+        self.finish_times.push(f64::NAN);
+        // a submission may carry its own later arrival time; gate on it
+        let arrival = self.tasks[id].arrival();
+        if arrival > now {
+            self.arrived.push(false);
+            self.queue.push(arrival, Event::JobArrive { model: id });
+        } else {
+            self.arrived.push(true);
+            if self.tasks[id].state() == TaskState::Idle {
+                self.ready.insert(id);
+                self.wake_one(now);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_job_cancel(&mut self, model: usize, now: f64) -> Result<()> {
+        if model >= self.tasks.len() {
+            return Err(HydraError::Sched(format!(
+                "cancel of unknown model {model}"
+            )));
+        }
+        if self.job_cancelled[model] || self.tasks[model].state() == TaskState::Done {
+            return Ok(()); // idempotent; cancelling a finished job is a no-op
+        }
+        self.job_cancelled[model] = true;
+        match self.tasks[model].state() {
+            TaskState::Idle => {
+                self.ready.remove(&model);
+                self.tasks[model].early_stop();
+                self.finish_job(model, now);
+            }
+            TaskState::Running => {
+                // The claim is either a pre-claimed double-buffer prefetch
+                // (revoked immediately) or a genuinely in-flight unit
+                // (completes first; cancellation is unit-granular).
+                let mut revoked = false;
+                for d in 0..self.devices.len() {
+                    if self.devices[d].pending.map(|u| u.model) == Some(model) {
+                        let u = self.devices[d].pending.take().expect("checked");
+                        if self.devices[d].buffer.staged().map(|s| s.model) == Some(model) {
+                            self.devices[d].buffer.clear();
+                        }
+                        self.tasks[model].unclaim(&u);
+                        self.tasks[model].early_stop();
+                        self.finish_job(model, now);
+                        revoked = true;
+                        break;
+                    }
+                }
+                if !revoked {
+                    self.cancel_pending.insert(model);
+                }
+            }
+            TaskState::Done => {}
+        }
+        Ok(())
     }
 
     fn on_device_free(&mut self, device: usize, now: f64) -> Result<()> {
         if !self.devices[device].alive || self.devices[device].busy {
             return Ok(());
         }
+        self.parked.remove(&device);
         // 1. a pre-claimed (double-buffered) unit takes priority
         let unit = if let Some(u) = self.devices[device].pending.take() {
             Some(u)
@@ -391,22 +830,34 @@ impl<'a> SharpEngine<'a> {
             let eligible = self.eligible();
             let resident: Vec<(usize, u32)> =
                 self.devices[device].resident.into_iter().collect();
-            let ctx = PickContext { now, device, resident: Some(&resident) };
+            let ctx = PickContext {
+                now,
+                device,
+                speed: self.devices[device].spec.speed,
+                resident: Some(&resident),
+            };
             match self.scheduler.pick(&eligible, ctx, &mut self.rng) {
                 Some(i) => {
                     let id = eligible[i].id;
+                    self.ready.remove(&id);
                     Some(self.tasks[id].claim_front())
                 }
-                None => None, // idle until a retire wakes us
+                None => None, // park until a wake-up
             }
         };
-        let Some(unit) = unit else { return Ok(()) };
-        self.start_unit(device, unit, now)
+        match unit {
+            Some(unit) => self.start_unit(device, unit, now),
+            None => {
+                self.parked.insert(device);
+                Ok(())
+            }
+        }
     }
 
     /// Promote memory, account transfers/stalls, execute, schedule retire.
     fn start_unit(&mut self, device: usize, unit: ShardUnit, now: f64) -> Result<()> {
         let task_shard = self.tasks[unit.model].shard(unit.shard).clone();
+        let link = self.link(device);
         let mut t = now;
 
         // --- parameter promotion -----------------------------------------
@@ -427,7 +878,7 @@ impl<'a> SharpEngine<'a> {
                 self.dram.note_demote(wb);
                 if !self.options.double_buffer && wb > 0 {
                     // synchronous write-back (no overlap without DB)
-                    let dt = self.options.transfer.secs(wb);
+                    let dt = link.secs(wb);
                     self.record(device, t, t + dt, unit, IntervalKind::Transfer);
                     t += dt;
                 }
@@ -444,7 +895,7 @@ impl<'a> SharpEngine<'a> {
                     stall
                 }
                 None => {
-                    let dt = self.options.transfer.secs(promote_bytes);
+                    let dt = link.secs(promote_bytes);
                     if dt > 0.0 {
                         self.record(device, t, t + dt, unit, IntervalKind::Transfer);
                     }
@@ -478,7 +929,7 @@ impl<'a> SharpEngine<'a> {
         // shard => activation also local (fwd+bwd pairs share the device).
         let needs_act = unit.shard > 0 || unit.phase == Phase::Bwd;
         if needs_act && !cached {
-            let dt = self.options.transfer.secs(task_shard.activation_bytes);
+            let dt = link.secs(task_shard.activation_bytes);
             if dt > 0.0 {
                 self.record(device, t, t + dt, unit, IntervalKind::Transfer);
                 t += dt;
@@ -489,8 +940,12 @@ impl<'a> SharpEngine<'a> {
             .alloc(Residency::Activation { model: unit.model }, 2 * task_shard.activation_bytes)?;
 
         // --- execute -------------------------------------------------------
-        let dur = self.backend.execute_unit(&self.tasks[unit.model], &unit)?;
+        // Unit costs are calibrated on the reference GPU; faster devices in
+        // a heterogeneous pool retire the same unit proportionally sooner.
+        let dur = self.backend.execute_unit(&self.tasks[unit.model], &unit)?
+            / self.devices[device].spec.speed;
         self.devices[device].busy = true;
+        self.free_devices -= 1;
         self.record(device, t, t + dur, unit, IntervalKind::Compute);
         let end = t + dur;
 
@@ -499,7 +954,7 @@ impl<'a> SharpEngine<'a> {
             self.try_stage_prefetch(device, t);
         }
 
-        self.push_event(end, Event::UnitRetire { device, unit });
+        self.queue.push(end, Event::UnitRetire { device, unit });
         Ok(())
     }
 
@@ -514,7 +969,7 @@ impl<'a> SharpEngine<'a> {
         // *right now* — prefetching is only a win when every device is busy
         // (claiming for the buffer would otherwise serialise work that task
         // parallelism would run immediately).
-        if self.devices.iter().any(|d| d.alive && !d.busy) {
+        if self.free_devices > 0 {
             return;
         }
         let eligible = self.eligible();
@@ -523,11 +978,17 @@ impl<'a> SharpEngine<'a> {
         }
         let resident: Vec<(usize, u32)> =
             self.devices[device].resident.into_iter().collect();
-        let ctx = PickContext { now, device, resident: Some(&resident) };
+        let ctx = PickContext {
+            now,
+            device,
+            speed: self.devices[device].spec.speed,
+            resident: Some(&resident),
+        };
         let Some(i) = self.scheduler.pick(&eligible, ctx, &mut self.rng) else {
             return;
         };
         let id = eligible[i].id;
+        self.ready.remove(&id);
         let unit = self.tasks[id].claim_front();
         let bytes = if self.options.full_state_transfers {
             self.tasks[id].shard(unit.shard).param_bytes
@@ -537,7 +998,7 @@ impl<'a> SharpEngine<'a> {
         // only stage what fits the protected zone; otherwise fall back to a
         // synchronous transfer at start time (consume returns None then)
         if bytes <= self.devices[device].buffer.zone_bytes {
-            let dt = self.options.transfer.secs(bytes);
+            let dt = self.link(device).secs(bytes);
             self.devices[device].buffer.stage(id, unit.shard, bytes, now, dt);
         }
         self.devices[device].pending = Some(unit);
@@ -546,6 +1007,7 @@ impl<'a> SharpEngine<'a> {
     fn on_unit_retire(&mut self, device: usize, unit: ShardUnit, now: f64) -> Result<()> {
         self.units_executed += 1;
         self.devices[device].busy = false;
+        self.free_devices += 1;
         self.devices[device]
             .ledger
             .release(&Residency::Activation { model: unit.model });
@@ -568,14 +1030,30 @@ impl<'a> SharpEngine<'a> {
             self.tasks[unit.model].early_stop();
         }
 
+        // a cancellation issued while this unit was in flight lands now
+        if self.cancel_pending.remove(&unit.model) {
+            self.tasks[unit.model].early_stop();
+        }
+        match self.tasks[unit.model].state() {
+            TaskState::Idle => {
+                self.ready.insert(unit.model);
+            }
+            TaskState::Done => {
+                self.finish_job(unit.model, now);
+            }
+            TaskState::Running => {}
+        }
+
         if self.devices[device].fail_pending {
             self.kill_device(device, now);
         } else {
-            self.push_event(now, Event::DeviceFree { device });
+            self.queue.push(now, Event::DeviceFree { device });
         }
-        // The retired model is idle again: other idle devices may now have
+        // The retired model is idle again: one parked device may now have
         // eligible work.
-        self.wake_idle_devices(now);
+        if self.tasks[unit.model].state() == TaskState::Idle {
+            self.wake_one(now);
+        }
         Ok(())
     }
 

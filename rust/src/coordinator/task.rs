@@ -28,6 +28,7 @@ pub struct ShardDesc {
 }
 
 impl ShardDesc {
+    /// Bytes spilling moves for a unit of the given phase.
     pub fn transfer_bytes(&self, phase: Phase) -> u64 {
         match phase {
             Phase::Fwd => self.fwd_transfer_bytes,
@@ -35,6 +36,8 @@ impl ShardDesc {
         }
     }
 
+    /// Estimated compute seconds of a unit of the given phase (on the
+    /// reference device; the engine divides by the device's speed).
     pub fn cost(&self, phase: Phase) -> f64 {
         match phase {
             Phase::Fwd => self.fwd_cost,
@@ -58,15 +61,23 @@ pub enum TaskState {
 /// A model training task with scheduler bookkeeping.
 #[derive(Debug, Clone)]
 pub struct ModelTask {
+    /// Task id == index into the engine's task vector.
     pub id: usize,
     /// Human-readable tag, e.g. "bert-lr1e-4-b8".
     pub name: String,
     /// Artifact config this model instance executes (real backend).
     pub config_name: String,
+    /// Per-shard static descriptions from the partitioner.
     pub shards: Vec<ShardDesc>,
+    /// Unit-queue geometry (shards x mini-batches x epochs).
     pub geometry: UnitGeometry,
     /// Hyperparameters owned by the runtime side (never baked into HLO).
     pub lr: f32,
+    /// Virtual time this job enters the system (0.0 = present from the
+    /// start, the paper's batch setting). The engine keeps the task out of
+    /// the eligible set until its arrival time passes, which is what turns
+    /// the batch scheduler into an online one.
+    arrival: f64,
     /// Next queue position to schedule.
     next_idx: u64,
     state: TaskState,
@@ -78,6 +89,9 @@ pub struct ModelTask {
 }
 
 impl ModelTask {
+    /// A training task over `shards`, running `epochs` x
+    /// `minibatches_per_epoch` mini-batches (arrival 0.0; see
+    /// [`ModelTask::with_arrival`]).
     pub fn new(
         id: usize,
         name: impl Into<String>,
@@ -101,6 +115,7 @@ impl ModelTask {
             shards,
             geometry,
             lr,
+            arrival: 0.0,
             next_idx: 0,
             state: TaskState::Idle,
             remaining_time,
@@ -129,6 +144,7 @@ impl ModelTask {
             shards,
             geometry,
             lr: 0.0,
+            arrival: 0.0,
             next_idx: 0,
             state: TaskState::Idle,
             remaining_time,
@@ -136,14 +152,31 @@ impl ModelTask {
         }
     }
 
+    /// Set the arrival time (builder style) for online workloads.
+    ///
+    /// Panics if `arrival` is negative or non-finite.
+    pub fn with_arrival(mut self, arrival: f64) -> ModelTask {
+        assert!(arrival.is_finite() && arrival >= 0.0, "bad arrival {arrival}");
+        self.arrival = arrival;
+        self
+    }
+
+    /// Virtual time this job enters the system.
+    pub fn arrival(&self) -> f64 {
+        self.arrival
+    }
+
+    /// Current lifecycle state.
     pub fn state(&self) -> TaskState {
         self.state
     }
 
+    /// Total units over the whole run (the paper's M_i).
     pub fn total_units(&self) -> u64 {
         self.geometry.total_units()
     }
 
+    /// Units retired so far.
     pub fn completed_units(&self) -> u64 {
         self.completed
     }
@@ -159,6 +192,7 @@ impl ModelTask {
             .then(|| self.geometry.unit_at(self.id, self.next_idx))
     }
 
+    /// Static description of shard `idx`.
     pub fn shard(&self, idx: u32) -> &ShardDesc {
         &self.shards[idx as usize]
     }
@@ -203,6 +237,9 @@ impl ModelTask {
     }
 
     /// Early-stop: drop all remaining units (Hyperband-style, §4.7.2).
+    /// Also the mechanism behind tenant-initiated cancellation in the online
+    /// setting — the engine defers it until any in-flight unit retires, so
+    /// it only ever fires from the `Idle` state.
     pub fn early_stop(&mut self) {
         if self.state != TaskState::Done && self.state != TaskState::Running {
             self.remaining_time = 0.0;
@@ -220,16 +257,25 @@ impl ModelTask {
 /// Immutable scheduler view of one model (what `Scheduler::pick` sees).
 #[derive(Debug, Clone, Copy)]
 pub struct ModelSnapshot {
+    /// Model task id.
     pub id: usize,
+    /// Remaining total train time (Sharded-LRTF's key).
     pub remaining_time: f64,
+    /// Units not yet retired.
     pub remaining_units: u64,
+    /// Cost estimate of the front unit.
     pub front_cost: f64,
     /// Shard index of the front unit (for affinity-aware policies).
     pub front_shard: u32,
+    /// Phase of the front unit.
     pub front_phase: Phase,
+    /// Arrival time of the job (0.0 for batch workloads). Lets FIFO order
+    /// by true arrival under online submissions instead of model id.
+    pub arrival: f64,
 }
 
 impl ModelSnapshot {
+    /// Snapshot an idle task; `None` if it is running or done.
     pub fn of(task: &ModelTask) -> Option<ModelSnapshot> {
         let u = task.front_unit()?;
         if task.state() != TaskState::Idle {
@@ -242,6 +288,7 @@ impl ModelSnapshot {
             front_cost: task.shard(u.shard).cost(u.phase),
             front_shard: u.shard,
             front_phase: u.phase,
+            arrival: task.arrival(),
         })
     }
 }
@@ -322,6 +369,21 @@ mod tests {
         t.early_stop();
         assert_eq!(t.state(), TaskState::Done);
         assert_eq!(t.remaining_time(), 0.0);
+    }
+
+    #[test]
+    fn arrival_defaults_to_zero_and_builds() {
+        let t = mk_task(1, 1, 1);
+        assert_eq!(t.arrival(), 0.0);
+        let t = t.with_arrival(12.5);
+        assert_eq!(t.arrival(), 12.5);
+        assert_eq!(ModelSnapshot::of(&t).unwrap().arrival, 12.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad arrival")]
+    fn negative_arrival_panics() {
+        let _ = mk_task(1, 1, 1).with_arrival(-1.0);
     }
 
     #[test]

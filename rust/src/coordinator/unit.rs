@@ -10,7 +10,9 @@
 /// Direction of a shard unit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
+    /// Forward pass.
     Fwd,
+    /// Backward pass.
     Bwd,
 }
 
@@ -33,8 +35,11 @@ pub struct ShardUnit {
 /// Geometry of a model's unit queue: derives units from positions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct UnitGeometry {
+    /// Number of shards the model was partitioned into.
     pub n_shards: u32,
+    /// Mini-batches per epoch (inference: batches total).
     pub minibatches_per_epoch: u32,
+    /// Training epochs (inference: 1).
     pub epochs: u32,
     /// Training (fwd+bwd per mini-batch) vs inference (fwd only) — the
     /// paper's §6 observation that spilling/partitioning/orchestration
@@ -43,11 +48,13 @@ pub struct UnitGeometry {
 }
 
 impl UnitGeometry {
+    /// Training geometry: fwd+bwd over every shard, per mini-batch.
     pub fn new(n_shards: u32, minibatches_per_epoch: u32, epochs: u32) -> Self {
         assert!(n_shards > 0 && minibatches_per_epoch > 0 && epochs > 0);
         UnitGeometry { n_shards, minibatches_per_epoch, epochs, inference_only: false }
     }
 
+    /// Inference geometry: forward-only over `batches` batches.
     pub fn new_inference(n_shards: u32, batches: u32) -> Self {
         assert!(n_shards > 0 && batches > 0);
         UnitGeometry {

@@ -1,32 +1,85 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error`/`From` impls: the `thiserror` derive crate
+//! is unavailable in the offline build environment (see Cargo.toml).
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+/// Every way a Hydra operation can fail.
+#[derive(Debug)]
 pub enum HydraError {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
-
-    #[error("json error: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-
-    #[error("manifest error: {0}")]
+    /// Filesystem / IO failure (manifest loading, CSV output, ...).
+    Io(std::io::Error),
+    /// PJRT / XLA runtime failure (or the vendored stub refusing to run).
+    Xla(xla::Error),
+    /// JSON parse failure (manifests, workload specs).
+    Json(crate::util::json::JsonError),
+    /// Artifact manifest is malformed or missing entries.
     Manifest(String),
-
-    #[error("config error: {0}")]
+    /// User-facing configuration problem (CLI flags, workload specs).
     Config(String),
-
-    #[error("device out of memory: need {needed} bytes, free {free} (device {device})")]
-    DeviceOom { device: usize, needed: u64, free: u64 },
-
-    #[error("scheduling error: {0}")]
+    /// A device-memory allocation would exceed capacity. A *real* error
+    /// path: Algorithm 1's pilot runs probe with it.
+    DeviceOom {
+        /// Device whose ledger rejected the allocation.
+        device: usize,
+        /// Bytes the allocation needed.
+        needed: u64,
+        /// Bytes that were free.
+        free: u64,
+    },
+    /// Scheduler / engine invariant violation.
     Sched(String),
-
-    #[error("execution error: {0}")]
+    /// Execution backend failure.
     Exec(String),
 }
 
+impl fmt::Display for HydraError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HydraError::Io(e) => write!(f, "io error: {e}"),
+            HydraError::Xla(e) => write!(f, "xla error: {e}"),
+            HydraError::Json(e) => write!(f, "json error: {e}"),
+            HydraError::Manifest(m) => write!(f, "manifest error: {m}"),
+            HydraError::Config(m) => write!(f, "config error: {m}"),
+            HydraError::DeviceOom { device, needed, free } => write!(
+                f,
+                "device out of memory: need {needed} bytes, free {free} (device {device})"
+            ),
+            HydraError::Sched(m) => write!(f, "scheduling error: {m}"),
+            HydraError::Exec(m) => write!(f, "execution error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HydraError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HydraError::Io(e) => Some(e),
+            HydraError::Xla(e) => Some(e),
+            HydraError::Json(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HydraError {
+    fn from(e: std::io::Error) -> HydraError {
+        HydraError::Io(e)
+    }
+}
+
+impl From<xla::Error> for HydraError {
+    fn from(e: xla::Error) -> HydraError {
+        HydraError::Xla(e)
+    }
+}
+
+impl From<crate::util::json::JsonError> for HydraError {
+    fn from(e: crate::util::json::JsonError) -> HydraError {
+        HydraError::Json(e)
+    }
+}
+
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, HydraError>;

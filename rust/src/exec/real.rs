@@ -24,17 +24,28 @@ use crate::util::rng::Rng;
 /// User-facing training spec for one model (Figure 4's ModelTask fields).
 #[derive(Debug, Clone)]
 pub struct RealModelSpec {
+    /// Tenant-facing task name.
     pub name: String,
+    /// Artifact config (manifest entry) this model executes.
     pub config: String,
+    /// Learning rate (runtime-side; never baked into HLO).
     pub lr: f32,
+    /// Optimizer kind (SGD / momentum / Adam).
     pub opt: OptKind,
+    /// Training epochs.
     pub epochs: u32,
+    /// Mini-batches per epoch.
     pub minibatches_per_epoch: u32,
+    /// Seed for parameter init and the data stream.
     pub seed: u64,
     /// Forward-only inference task (paper §6). Losses are still logged per
     /// batch (they are the model's NLL on the eval stream) but no gradients
     /// or optimizer steps happen.
     pub inference: bool,
+    /// Virtual arrival time of the job (0.0 = present from the start). The
+    /// engine keeps the job out of the eligible set until this time passes
+    /// — the online multi-tenant setting.
+    pub arrival: f64,
 }
 
 /// A model layer at shard granularity.
@@ -169,7 +180,8 @@ impl RealBackend {
                     spec.epochs,
                     spec.lr,
                 )
-            };
+            }
+            .with_arrival(spec.arrival);
 
             let mut rng = Rng::new(spec.seed);
             let params: Vec<Vec<HostTensor>> = layers

@@ -742,6 +742,72 @@ pub fn ext_buffer() -> Result<FigureOutput> {
     })
 }
 
+/// ext-online: the production-serving scenario beyond the paper — a Poisson
+/// stream of mixed BERT/ViT tenant jobs arriving online over a mixed
+/// A4000/A6000 pool, scheduled by the event-heap engine. Reports per-job
+/// latency (finish - arrival), the metric a serving deployment cares about,
+/// alongside the engine's utilization.
+pub fn ext_online() -> Result<FigureOutput> {
+    let pool = crate::sim::mixed_pool(4, 4);
+    let stream = crate::sim::poisson_mixed_tenants(12, 6.0, 7, 3);
+    let (tasks, specs) = crate::sim::build_tasks_pool(&stream, &pool, paper_policy())?;
+    let mut backend = SimBackend::deterministic();
+    let opts = EngineOptions {
+        buffer_frac: PAPER_BUFFER_FRAC,
+        record_intervals: false,
+        ..Default::default()
+    };
+    let mut engine = SharpEngine::with_devices(
+        tasks,
+        &specs,
+        DRAM,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        opts,
+    )?;
+    let r = engine.run()?;
+
+    let mut lines = vec![format!(
+        "{:<26} {:>10} {:>10} {:>10} {:>7}",
+        "job", "arrival", "finish", "latency", "units"
+    )];
+    let mut csv = String::from("job,arrival_h,finish_h,latency_h,units\n");
+    let mut total_latency = 0.0;
+    for j in &r.jobs {
+        lines.push(format!(
+            "{:<26} {:>9.2}h {:>9.2}h {:>9.2}h {:>7}",
+            j.name,
+            j.arrival / 3600.0,
+            j.finished / 3600.0,
+            j.latency() / 3600.0,
+            j.units_executed
+        ));
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            j.name,
+            j.arrival / 3600.0,
+            j.finished / 3600.0,
+            j.latency() / 3600.0,
+            j.units_executed
+        ));
+        total_latency += j.latency();
+    }
+    lines.push(format!(
+        "mean latency {:.2}h | makespan {:.2}h | utilization {:.1}%",
+        total_latency / r.jobs.len().max(1) as f64 / 3600.0,
+        r.makespan / 3600.0,
+        100.0 * r.utilization
+    ));
+    lines.push("(online extension: jobs arrive Poisson(6/h) on 4x A4000 + 4x A6000;".into());
+    lines.push(" speeds/links per class, shards bounded by the smallest device)".into());
+    Ok(FigureOutput {
+        id: "ext_online",
+        title: "Extension: online multi-tenant serving on a heterogeneous pool".into(),
+        lines,
+        csv,
+    })
+}
+
 /// All figure generators by id.
 pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
     match id {
@@ -755,11 +821,13 @@ pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
         "table3" => Some(table3()),
         "ext_sched" => Some(ext_sched()),
         "ext_buffer" => Some(ext_buffer()),
+        "ext_online" => Some(ext_online()),
         _ => None,
     }
 }
 
-pub const ALL_IDS: [&str; 10] = [
+/// Every figure/table id, in presentation order.
+pub const ALL_IDS: [&str; 11] = [
     "table2", "fig6", "fig7", "fig8", "fig9a", "fig9b", "fig10", "table3",
-    "ext_sched", "ext_buffer",
+    "ext_sched", "ext_buffer", "ext_online",
 ];

@@ -3,22 +3,31 @@
 //! Subcommands:
 //!   train     — real multi-model training over the PJRT runtime
 //!   figure    — regenerate a paper figure/table (or `all`)
-//!   simulate  — ad-hoc paper-scale simulation with chosen knobs
+//!   simulate  — ad-hoc paper-scale simulation with chosen knobs, including
+//!               the online Poisson-arrival / heterogeneous-pool scenario
 //!   partition — show Algorithm-1 partitioning for a config
 //!   inspect   — list artifact configs and their executables
 
 use std::time::Duration;
 
 use hydra::coordinator::partitioner::PartitionPolicy;
-use hydra::coordinator::sharp::{EngineOptions, ParallelMode, TransferModel};
+use hydra::coordinator::sched;
+use hydra::coordinator::sharp::{
+    EngineOptions, ParallelMode, QueueKind, SharpEngine, TransferModel,
+};
 use hydra::coordinator::{Cluster, ModelOrchestrator};
 use hydra::exec::real::RealModelSpec;
+use hydra::exec::SimBackend;
 use hydra::figures;
 use hydra::runtime::Manifest;
-use hydra::sim::{build_tasks, uniform_grid, GpuSpec};
+use hydra::sim::{
+    build_tasks, build_tasks_pool, poisson_mixed_tenants, uniform_grid, GpuSpec,
+};
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
 use hydra::util::fmt_bytes;
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 const USAGE: &str = "\
 hydra — large multi-model deep learning (PVLDB'22 reproduction)
@@ -34,14 +43,24 @@ USAGE:
                 [--out results] [--bnb-secs 3]
   hydra simulate [--models 12] [--params-m 1000] [--devices 8]
                 [--minibatches 6] [--scheduler sharded-lrtf]
-                [--no-double-buffer] [--sequential]
+                [--no-double-buffer] [--sequential] [--scan-queue]
+  hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
+                [--pool a4000:4,a6000:4] [--minibatches 3]
+                [--scheduler sharded-lrtf] [--gantt]
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
                 [--device-mem-mib 2]
   hydra inspect [--manifest artifacts]
 ";
 
 fn main() {
-    let flags = ["no-double-buffer", "sequential", "gantt", "help"];
+    let flags = [
+        "no-double-buffer",
+        "sequential",
+        "gantt",
+        "help",
+        "online",
+        "scan-queue",
+    ];
     let args = match Args::from_env(&flags) {
         Ok(a) => a,
         Err(e) => {
@@ -80,20 +99,25 @@ fn engine_options(args: &Args) -> EngineOptions {
         },
         double_buffer: !args.flag("no-double-buffer"),
         transfer: TransferModel::pcie_gen3(),
+        queue: if args.flag("scan-queue") {
+            QueueKind::LinearScan
+        } else {
+            QueueKind::Heap
+        },
         ..Default::default()
     }
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+fn cmd_train(args: &Args) -> CliResult {
     let manifest = args.opt_or("manifest", "artifacts");
     let config = args.opt_or("config", "tiny-lm-b8");
-    let n_models = args.opt_usize("models", 4).map_err(anyhow::Error::msg)?;
-    let devices = args.opt_usize("devices", 2).map_err(anyhow::Error::msg)?;
-    let mem_mib = args.opt_usize("device-mem-mib", 4).map_err(anyhow::Error::msg)?;
-    let mbs = args.opt_usize("minibatches", 8).map_err(anyhow::Error::msg)? as u32;
-    let epochs = args.opt_usize("epochs", 1).map_err(anyhow::Error::msg)? as u32;
-    let lr = args.opt_f64("lr", 0.05).map_err(anyhow::Error::msg)? as f32;
-    let opt = OptKind::parse(&args.opt_or("opt", "sgd")).map_err(anyhow::Error::msg)?;
+    let n_models = args.opt_usize("models", 4)?;
+    let devices = args.opt_usize("devices", 2)?;
+    let mem_mib = args.opt_usize("device-mem-mib", 4)?;
+    let mbs = args.opt_usize("minibatches", 8)? as u32;
+    let epochs = args.opt_usize("epochs", 1)? as u32;
+    let lr = args.opt_f64("lr", 0.05)? as f32;
+    let opt = OptKind::parse(&args.opt_or("opt", "sgd"))?;
 
     let mut orch = ModelOrchestrator::new(manifest);
     orch.scheduler = args.opt_or("scheduler", "sharded-lrtf");
@@ -110,6 +134,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             minibatches_per_epoch: mbs,
             seed: 1000 + i as u64,
             inference: false,
+            arrival: 0.0,
         });
     }
     let cluster = Cluster::uniform(devices, (mem_mib as u64) << 20, 32 << 30);
@@ -143,17 +168,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_run(args: &Args) -> anyhow::Result<()> {
+fn cmd_run(args: &Args) -> CliResult {
     let spec_path = args
         .opt("spec")
-        .ok_or_else(|| anyhow::anyhow!("run requires --spec <file.json>"))?;
+        .ok_or("run requires --spec <file.json>")?;
     let manifest = args.opt_or("manifest", "artifacts");
     let spec = hydra::config::WorkloadSpec::load(spec_path)?;
     let orch = spec.orchestrator(&manifest);
     println!(
         "running spec {spec_path}: {} tasks on {} devices ({} scheduler)",
         orch.n_tasks(),
-        spec.cluster.device_mem.len(),
+        spec.cluster.n_devices(),
         orch.scheduler
     );
     let t0 = std::time::Instant::now();
@@ -187,11 +212,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+fn cmd_figure(args: &Args) -> CliResult {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("all");
     let out = args.opt_or("out", "results");
-    let bnb =
-        Duration::from_secs_f64(args.opt_f64("bnb-secs", 3.0).map_err(anyhow::Error::msg)?);
+    let bnb = Duration::from_secs_f64(args.opt_f64("bnb-secs", 3.0)?);
     let ids: Vec<&str> = if id == "all" {
         figures::ALL_IDS.to_vec()
     } else {
@@ -199,7 +223,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     };
     for id in ids {
         let fig = figures::by_id(id, bnb)
-            .ok_or_else(|| anyhow::anyhow!("unknown figure {id:?}"))??;
+            .ok_or_else(|| format!("unknown figure {id:?}"))??;
         fig.print();
         fig.write_csv(&out)?;
         println!("(csv written to {out}/{id}.csv)\n");
@@ -207,11 +231,37 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let models = args.opt_usize("models", 12).map_err(anyhow::Error::msg)?;
-    let params_m = args.opt_usize("params-m", 1000).map_err(anyhow::Error::msg)?;
-    let devices = args.opt_usize("devices", 8).map_err(anyhow::Error::msg)?;
-    let mbs = args.opt_usize("minibatches", 6).map_err(anyhow::Error::msg)? as u32;
+/// Parse a pool string like `a4000:4,a6000:2` into GPU specs.
+fn parse_pool(s: &str) -> Result<Vec<GpuSpec>, String> {
+    let mut pool = Vec::new();
+    for part in s.split(',') {
+        let (class, count) = match part.split_once(':') {
+            Some((c, n)) => {
+                let n: usize = n
+                    .parse()
+                    .map_err(|_| format!("bad device count in {part:?}"))?;
+                (c, n)
+            }
+            None => (part, 1),
+        };
+        let gpu = GpuSpec::by_name(class)
+            .ok_or_else(|| format!("unknown GPU class {class:?} in pool"))?;
+        pool.extend(std::iter::repeat(gpu).take(count));
+    }
+    if pool.is_empty() {
+        return Err("empty pool".into());
+    }
+    Ok(pool)
+}
+
+fn cmd_simulate(args: &Args) -> CliResult {
+    if args.flag("online") {
+        return cmd_simulate_online(args);
+    }
+    let models = args.opt_usize("models", 12)?;
+    let params_m = args.opt_usize("params-m", 1000)?;
+    let devices = args.opt_usize("devices", 8)?;
+    let mbs = args.opt_usize("minibatches", 6)? as u32;
     let sched = args.opt_or("scheduler", "sharded-lrtf");
 
     let gpu = GpuSpec::rtx2080ti();
@@ -244,10 +294,72 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+/// The online multi-tenant scenario: Poisson job arrivals over a
+/// heterogeneous GPU pool, scheduled by the event-heap SHARP engine.
+fn cmd_simulate_online(args: &Args) -> CliResult {
+    let jobs = args.opt_usize("jobs", 12)?;
+    let rate = args.opt_f64("rate", 6.0)?;
+    let seed = args.opt_usize("seed", 7)? as u64;
+    let mbs = args.opt_usize("minibatches", 3)? as u32;
+    let sched_name = args.opt_or("scheduler", "sharded-lrtf");
+    let pool = parse_pool(&args.opt_or("pool", "a4000:4,a6000:4"))?;
+
+    let stream = poisson_mixed_tenants(jobs, rate, seed, mbs);
+    let (tasks, specs) = build_tasks_pool(
+        &stream,
+        &pool,
+        PartitionPolicy { buffer_frac: 0.30, ..Default::default() },
+    )?;
+    let mut backend = SimBackend::deterministic();
+    let opts = EngineOptions {
+        buffer_frac: 0.30,
+        queue: if args.flag("scan-queue") {
+            QueueKind::LinearScan
+        } else {
+            QueueKind::Heap
+        },
+        ..Default::default()
+    };
+    let scheduler =
+        sched::by_name(&sched_name).ok_or_else(|| format!("unknown scheduler {sched_name:?}"))?;
+    let mut engine =
+        SharpEngine::with_devices(tasks, &specs, 500 << 30, scheduler, &mut backend, opts)?;
+    let r = engine.run()?;
+
+    println!(
+        "{jobs} tenant jobs (Poisson, {rate}/h) over {} heterogeneous devices:",
+        specs.len()
+    );
+    println!(
+        "  makespan {:.2}h | utilization {:.1}% | {} units executed",
+        r.makespan / 3600.0,
+        100.0 * r.utilization,
+        r.units_executed
+    );
+    println!(
+        "  {:<26} {:>10} {:>10} {:>10} {:>7}",
+        "job", "arrival", "finish", "latency", "units"
+    );
+    for j in &r.jobs {
+        println!(
+            "  {:<26} {:>9.2}m {:>9.2}m {:>9.2}m {:>7}",
+            j.name,
+            j.arrival / 60.0,
+            j.finished / 60.0,
+            j.latency() / 60.0,
+            j.units_executed
+        );
+    }
+    if args.flag("gantt") {
+        println!("{}", r.trace.gantt(100));
+    }
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> CliResult {
     let manifest_dir = args.opt_or("manifest", "artifacts");
     let config = args.opt_or("config", "tiny-lm-b8");
-    let mem_mib = args.opt_usize("device-mem-mib", 2).map_err(anyhow::Error::msg)?;
+    let mem_mib = args.opt_usize("device-mem-mib", 2)?;
 
     let (_backend, tasks) = hydra::exec::real::RealBackend::build(
         &manifest_dir,
@@ -260,6 +372,7 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
             minibatches_per_epoch: 1,
             seed: 0,
             inference: false,
+            arrival: 0.0,
         }],
         (mem_mib as u64) << 20,
         PartitionPolicy::default(),
@@ -283,7 +396,7 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+fn cmd_inspect(args: &Args) -> CliResult {
     let manifest_dir = args.opt_or("manifest", "artifacts");
     let m = Manifest::load(&manifest_dir)?;
     println!("manifest at {manifest_dir}: {} configs", m.configs.len());

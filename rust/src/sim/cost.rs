@@ -7,41 +7,121 @@
 //! regenerate the paper's figures at full scale.
 
 use crate::coordinator::partitioner::LayerDesc;
+use crate::coordinator::sharp::{DeviceSpec, TransferModel};
 
-/// A GPU class for the simulator.
+/// A GPU class for the simulator: memory, compute, and host link.
+///
+/// Heterogeneous pools mix classes; [`GpuSpec::device_spec`] converts a
+/// class into the engine-facing [`DeviceSpec`] relative to the reference
+/// class the unit costs were calibrated on.
 #[derive(Debug, Clone, Copy)]
 pub struct GpuSpec {
+    /// Device memory capacity in bytes.
     pub mem_bytes: u64,
     /// Peak dense f32 throughput.
     pub peak_flops: f64,
     /// Achievable fraction of peak for transformer training kernels.
     pub efficiency: f64,
+    /// Host (PCIe) link bandwidth for spill traffic, bytes per second.
+    pub pcie_bytes_per_sec: f64,
 }
 
 impl GpuSpec {
-    /// NVIDIA RTX 2080Ti (11 GB, ~13.4 TFLOPS fp32), the paper's device.
+    /// NVIDIA RTX 2080Ti (11 GB, ~13.4 TFLOPS fp32, PCIe gen3), the
+    /// paper's device.
     pub fn rtx2080ti() -> GpuSpec {
         GpuSpec {
             mem_bytes: 11 * (1 << 30),
             peak_flops: 13.4e12,
             // fp32 PyTorch transformer training on Turing: ~15% of peak
             efficiency: 0.15,
+            pcie_bytes_per_sec: 12.0e9,
         }
     }
 
+    /// NVIDIA RTX A4000-class card (16 GB, ~19.2 TFLOPS fp32, PCIe gen4).
+    pub fn a4000() -> GpuSpec {
+        GpuSpec {
+            mem_bytes: 16 * (1 << 30),
+            peak_flops: 19.2e12,
+            efficiency: 0.15,
+            pcie_bytes_per_sec: 24.0e9,
+        }
+    }
+
+    /// NVIDIA RTX A6000-class card (48 GB, ~38.7 TFLOPS fp32, PCIe gen4).
+    pub fn a6000() -> GpuSpec {
+        GpuSpec {
+            mem_bytes: 48 * (1 << 30),
+            peak_flops: 38.7e12,
+            efficiency: 0.15,
+            pcie_bytes_per_sec: 24.0e9,
+        }
+    }
+
+    /// Look a class up by name (CLI / config surface).
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name {
+            "rtx2080ti" | "2080ti" => Some(GpuSpec::rtx2080ti()),
+            "a4000" => Some(GpuSpec::a4000()),
+            "a6000" => Some(GpuSpec::a6000()),
+            _ => None,
+        }
+    }
+
+    /// Sustained training throughput.
     pub fn effective_flops(&self) -> f64 {
         self.peak_flops * self.efficiency
     }
+
+    /// Host-link transfer model for this class.
+    pub fn transfer_model(&self) -> TransferModel {
+        TransferModel {
+            bandwidth_bytes_per_sec: self.pcie_bytes_per_sec,
+            latency_secs: 20e-6,
+        }
+    }
+
+    /// Engine-facing device spec, with speed expressed relative to
+    /// `reference` (the class the `ShardDesc` costs were computed for).
+    pub fn device_spec(&self, reference: &GpuSpec) -> DeviceSpec {
+        DeviceSpec {
+            mem_bytes: self.mem_bytes,
+            speed: self.effective_flops() / reference.effective_flops(),
+            link: Some(self.transfer_model()),
+        }
+    }
+}
+
+/// The calibration reference of a pool: its slowest class by sustained
+/// FLOPs, so every relative [`DeviceSpec::speed`] comes out >= 1.0. `None`
+/// for an empty pool. Shared by [`crate::sim::build_tasks_pool`] and the
+/// config layer so CLI-spec runs and simulated runs always agree on
+/// speeds.
+pub fn pool_reference(pool: &[GpuSpec]) -> Option<GpuSpec> {
+    pool.iter().copied().reduce(|r, g| {
+        if g.effective_flops() < r.effective_flops() {
+            g
+        } else {
+            r
+        }
+    })
 }
 
 /// A paper-scale transformer description (BERT-Large* / ViT* of Table 2).
 #[derive(Debug, Clone, Copy)]
 pub struct PaperModel {
+    /// Hidden width.
     pub d_model: usize,
+    /// Encoder block count.
     pub n_layers: usize,
+    /// Feed-forward width.
     pub d_ff: usize,
+    /// Sequence length (ViT: patch count).
     pub seq: usize,
+    /// Mini-batch size.
     pub batch: usize,
+    /// Vocabulary (ViT: class count).
     pub vocab: usize,
     /// Optimizer state bytes per parameter byte (momentum = 1).
     pub opt_factor: u64,
@@ -87,10 +167,12 @@ impl PaperModel {
         }
     }
 
+    /// Tokens processed per mini-batch.
     pub fn tokens_per_batch(&self) -> usize {
         self.batch * self.seq
     }
 
+    /// Parameters of one encoder block.
     pub fn block_params(&self) -> u64 {
         (4 * self.d_model * self.d_model
             + 2 * self.d_model * self.d_ff
@@ -98,14 +180,17 @@ impl PaperModel {
             + self.d_ff) as u64
     }
 
+    /// Parameters of the embedding (token + positional) layer.
     pub fn embed_params(&self) -> u64 {
         (self.vocab * self.d_model + self.seq * self.d_model) as u64
     }
 
+    /// Parameters of the output head.
     pub fn head_params(&self) -> u64 {
         (self.d_model * self.vocab + self.vocab + 2 * self.d_model) as u64
     }
 
+    /// Total model parameters.
     pub fn total_params(&self) -> u64 {
         self.embed_params()
             + self.n_layers as u64 * self.block_params()
@@ -121,11 +206,13 @@ impl PaperModel {
         gemm + attn
     }
 
+    /// Forward FLOPs of the embedding layer on one mini-batch.
     pub fn embed_fwd_flops(&self) -> f64 {
         // lookup + positional add: bandwidth-bound; charge 10 flops/token/dim
         10.0 * self.tokens_per_batch() as f64 * self.d_model as f64
     }
 
+    /// Forward FLOPs of the output head on one mini-batch.
     pub fn head_fwd_flops(&self) -> f64 {
         2.0 * self.tokens_per_batch() as f64
             * self.d_model as f64
@@ -228,6 +315,23 @@ mod tests {
         let gpu = GpuSpec::rtx2080ti();
         let t = m.block_fwd_flops() / gpu.effective_flops();
         assert!(t > 1e-3 && t < 0.5, "block fwd {t}s");
+    }
+
+    #[test]
+    fn gpu_classes_resolve_by_name_and_scale() {
+        let r = GpuSpec::by_name("rtx2080ti").unwrap();
+        let a4 = GpuSpec::by_name("a4000").unwrap();
+        let a6 = GpuSpec::by_name("a6000").unwrap();
+        assert!(GpuSpec::by_name("h100").is_none());
+        assert!(a6.mem_bytes > a4.mem_bytes && a4.mem_bytes > r.mem_bytes);
+        // device spec relative to the 2080Ti reference
+        let spec = a6.device_spec(&r);
+        assert!(spec.speed > 2.0 && spec.speed < 4.0, "{}", spec.speed);
+        assert_eq!(spec.mem_bytes, a6.mem_bytes);
+        let link = spec.link.unwrap();
+        assert!(link.bandwidth_bytes_per_sec > r.pcie_bytes_per_sec);
+        // the reference maps to itself at speed 1.0
+        assert!((r.device_spec(&r).speed - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Paper-scale simulation substrate: GPU/transformer cost models and
-//! Table 2 workload builders. The SHARP engine itself is backend-agnostic
-//! (coordinator::sharp); this module only supplies the numbers.
+//! workload builders — the Table 2 batch grids plus online multi-tenant
+//! streams and heterogeneous GPU pools. The SHARP engine itself is
+//! backend-agnostic (coordinator::sharp); this module only supplies the
+//! numbers.
 
 pub mod cost;
 pub mod workload;
 
-pub use cost::{GpuSpec, PaperModel};
-pub use workload::{bert_grid, build_tasks, uniform_grid, vit_grid, WorkloadModel};
+pub use cost::{pool_reference, GpuSpec, PaperModel};
+pub use workload::{
+    bert_grid, build_tasks, build_tasks_pool, mixed_pool, poisson_mixed_tenants,
+    uniform_grid, vit_grid, WorkloadModel,
+};

@@ -1,19 +1,27 @@
-//! Table 2 workload builders: turn paper-scale model grids into ModelTask
-//! sets (partitioned for the target GPU) ready for the SHARP engine or any
-//! baseline paradigm.
+//! Workload builders: Table 2 grids for the paper's batch experiments, plus
+//! online multi-tenant streams (Poisson arrivals, mixed BERT/ViT tenants)
+//! and heterogeneous GPU pools for the production-serving scenarios.
 
 use crate::coordinator::partitioner::{partition, PartitionPolicy};
+use crate::coordinator::sharp::DeviceSpec;
 use crate::coordinator::task::ModelTask;
-use crate::error::Result;
+use crate::error::{HydraError, Result};
 use crate::sim::cost::{GpuSpec, PaperModel};
+use crate::util::rng::Rng;
 
 /// One workload entry prior to partitioning.
 #[derive(Debug, Clone)]
 pub struct WorkloadModel {
+    /// Tenant-facing job name.
     pub name: String,
+    /// Transformer description (size, batch, sequence length).
     pub model: PaperModel,
+    /// Training epochs.
     pub epochs: u32,
+    /// Mini-batches per epoch.
     pub minibatches_per_epoch: u32,
+    /// Virtual arrival time in seconds (0.0 = batch workload).
+    pub arrival: f64,
 }
 
 /// Table 2 row 1: BERT-Large* hyperparameter grid — batch {8,16,32} x
@@ -33,6 +41,7 @@ pub fn bert_grid(minibatches_per_epoch: u32) -> Vec<WorkloadModel> {
                 // same tokens per epoch regardless of batch size
                 minibatches_per_epoch: (minibatches_per_epoch * 8 / batch as u32)
                     .max(1),
+                arrival: 0.0,
             });
         }
     }
@@ -60,6 +69,7 @@ pub fn vit_grid(minibatches_per_epoch: u32) -> Vec<WorkloadModel> {
                 minibatches_per_epoch: (minibatches_per_epoch * 512
                     / batch as u32)
                     .max(1),
+                arrival: 0.0,
             });
         }
     }
@@ -81,11 +91,65 @@ pub fn uniform_grid(
             model: PaperModel::bert_like(params, batch),
             epochs,
             minibatches_per_epoch,
+            arrival: 0.0,
         })
         .collect()
 }
 
-/// Partition every workload model for `gpu` and build ModelTasks.
+/// Online multi-tenant stream: `n` jobs with exponential inter-arrival
+/// times (a Poisson process at `rate_per_hour`), alternating BERT-style
+/// language-model tenants and ViT-style vision tenants with per-tenant
+/// size/batch variety. Deterministic for a given `seed`.
+pub fn poisson_mixed_tenants(
+    n: usize,
+    rate_per_hour: f64,
+    seed: u64,
+    minibatches_per_epoch: u32,
+) -> Vec<WorkloadModel> {
+    assert!(rate_per_hour > 0.0, "rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mean_gap_secs = 3600.0 / rate_per_hour;
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    for i in 0..n {
+        // inverse-CDF exponential sample; uniform() < 1.0 keeps ln finite
+        t += -(1.0 - rng.uniform()).ln() * mean_gap_secs;
+        let w = if i % 2 == 0 {
+            let batch = [8usize, 16, 32][rng.below(3) as usize];
+            let params = [600_000_000u64, 1_000_000_000][rng.below(2) as usize];
+            WorkloadModel {
+                name: format!("tenant{i}-bert-{}m-b{batch}", params / 1_000_000),
+                model: PaperModel::bert_like(params, batch),
+                epochs: 1,
+                minibatches_per_epoch,
+                arrival: t,
+            }
+        } else {
+            let batch = [512usize, 1024][rng.below(2) as usize];
+            let params =
+                [300_000_000u64, 800_000_000, 1_500_000_000][rng.below(3) as usize];
+            WorkloadModel {
+                name: format!("tenant{i}-vit-{}m-b{batch}", params / 1_000_000),
+                model: PaperModel::vit_like(params, batch),
+                epochs: 1,
+                minibatches_per_epoch,
+                arrival: t,
+            }
+        };
+        out.push(w);
+    }
+    out
+}
+
+/// A mixed GPU pool: `n_a4000` A4000-class and `n_a6000` A6000-class cards.
+pub fn mixed_pool(n_a4000: usize, n_a6000: usize) -> Vec<GpuSpec> {
+    let mut pool = vec![GpuSpec::a4000(); n_a4000];
+    pool.extend(vec![GpuSpec::a6000(); n_a6000]);
+    pool
+}
+
+/// Partition every workload model for `gpu` and build ModelTasks
+/// (homogeneous pool; arrivals are threaded through).
 pub fn build_tasks(
     workload: &[WorkloadModel],
     gpu: &GpuSpec,
@@ -105,9 +169,48 @@ pub fn build_tasks(
                 w.minibatches_per_epoch,
                 w.epochs,
                 1e-3,
-            ))
+            )
+            .with_arrival(w.arrival))
         })
         .collect()
+}
+
+/// Build tasks for a heterogeneous `pool`: unit costs are calibrated
+/// against the *slowest* class (so every [`DeviceSpec::speed`] >= 1.0) and
+/// shards are partitioned for the *smallest* memory in the pool (the §4.3
+/// "smallest-memory GPU" contract, which keeps every shard placeable on
+/// every device). Returns the tasks plus the engine-facing device specs,
+/// ready for [`crate::coordinator::sharp::SharpEngine::with_devices`].
+pub fn build_tasks_pool(
+    workload: &[WorkloadModel],
+    pool: &[GpuSpec],
+    policy: PartitionPolicy,
+) -> Result<(Vec<ModelTask>, Vec<DeviceSpec>)> {
+    let reference = crate::sim::cost::pool_reference(pool)
+        .ok_or_else(|| HydraError::Config("empty GPU pool".into()))?;
+    let min_mem = pool.iter().map(|g| g.mem_bytes).min().expect("non-empty pool");
+    // cost-calibrate on the slowest class, partition for the smallest memory
+    let probe = GpuSpec { mem_bytes: min_mem, ..reference };
+    let tasks = workload
+        .iter()
+        .enumerate()
+        .map(|(id, w)| {
+            let layers = w.model.layer_descs(&probe);
+            let part = partition(&layers, min_mem, policy)?;
+            Ok(ModelTask::new(
+                id,
+                w.name.clone(),
+                "paper-sim",
+                part.shards,
+                w.minibatches_per_epoch,
+                w.epochs,
+                1e-3,
+            )
+            .with_arrival(w.arrival))
+        })
+        .collect::<Result<Vec<ModelTask>>>()?;
+    let specs = pool.iter().map(|g| g.device_spec(&reference)).collect();
+    Ok((tasks, specs))
 }
 
 #[cfg(test)]
@@ -122,6 +225,7 @@ mod tests {
             let p = w.model.total_params() as f64;
             assert!((0.8e9..1.2e9).contains(&p), "{}: {p}", w.name);
             assert_eq!(w.epochs, 4);
+            assert_eq!(w.arrival, 0.0);
         }
         // token budget equalised: batch 32 gets 1/4 the minibatches of batch 8
         assert_eq!(g[0].minibatches_per_epoch, 8); // batch 8
@@ -148,5 +252,51 @@ mod tests {
             assert!(t.shards.len() >= 2, "{} shards", t.shards.len());
             assert!(t.total_units() > 0);
         }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_and_seeded() {
+        let a = poisson_mixed_tenants(10, 6.0, 3, 4);
+        let b = poisson_mixed_tenants(10, 6.0, 3, 4);
+        assert_eq!(a.len(), 10);
+        let mut last = 0.0;
+        for w in &a {
+            assert!(w.arrival > last, "{} <= {last}", w.arrival);
+            last = w.arrival;
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.name, y.name);
+        }
+        // mean inter-arrival roughly 10 minutes at 6 jobs/hour
+        let mean = a.last().unwrap().arrival / 10.0;
+        assert!(mean > 60.0 && mean < 6000.0, "{mean}");
+        // tenants alternate modality
+        assert!(a[0].name.contains("bert") && a[1].name.contains("vit"));
+    }
+
+    #[test]
+    fn pool_build_partitions_for_smallest_and_speeds_relative_to_slowest() {
+        let pool = mixed_pool(1, 1);
+        let grid = uniform_grid(2, 1_000_000_000, 8, 1, 2);
+        let (tasks, specs) = build_tasks_pool(&grid, &pool, Default::default()).unwrap();
+        assert_eq!(tasks.len(), 2);
+        assert_eq!(specs.len(), 2);
+        // A4000 is the slowest class -> speed 1.0; A6000 strictly faster
+        assert!((specs[0].speed - 1.0).abs() < 1e-12, "{}", specs[0].speed);
+        assert!(specs[1].speed > 1.0);
+        // every shard fits the smallest (16 GB) device
+        let min_mem = pool.iter().map(|g| g.mem_bytes).min().unwrap();
+        for t in &tasks {
+            for s in &t.shards {
+                assert!(s.param_bytes < min_mem);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_pool_is_config_error() {
+        let grid = uniform_grid(1, 1_000_000, 8, 1, 1);
+        assert!(build_tasks_pool(&grid, &[], Default::default()).is_err());
     }
 }

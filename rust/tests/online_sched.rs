@@ -1,0 +1,541 @@
+//! Integration tests for the online multi-tenant engine: dynamic job
+//! arrivals (in and out of submission order), tenant cancellations,
+//! mid-run submissions, heterogeneous device pools (memory, speed, link),
+//! and the event-heap vs linear-scan makespan equivalence on the Table 2
+//! workloads.
+
+use hydra::coordinator::metrics::IntervalKind;
+use hydra::coordinator::sched;
+use hydra::coordinator::sharp::{
+    DeviceSpec, EngineOptions, JobEvent, QueueKind, RunReport, SharpEngine,
+    TransferModel,
+};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::exec::SimBackend;
+use hydra::sim::{bert_grid, build_tasks, vit_grid, GpuSpec, WorkloadModel};
+use hydra::util::prop;
+
+const GIB: u64 = 1 << 30;
+
+/// A task of `shards` uniform shards, `mbs` mini-batches, 1 epoch; per
+/// mini-batch work = shards * (cost + 2*cost).
+fn uniform_task(id: usize, shards: usize, mbs: u32, cost: f64) -> ModelTask {
+    let sd: Vec<ShardDesc> = (0..shards)
+        .map(|_| ShardDesc {
+            param_bytes: 100 << 20,
+            fwd_transfer_bytes: 50 << 20,
+            bwd_transfer_bytes: 50 << 20,
+            activation_bytes: 4 << 20,
+            fwd_cost: cost,
+            bwd_cost: 2.0 * cost,
+            n_layers: 1,
+        })
+        .collect();
+    ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, 1, 1e-3)
+}
+
+fn zero_transfer_opts() -> EngineOptions {
+    EngineOptions { transfer: TransferModel::zero_cost(), ..Default::default() }
+}
+
+fn run(
+    tasks: Vec<ModelTask>,
+    devices: usize,
+    opts: EngineOptions,
+    scheduler: &str,
+    jobs: Vec<JobEvent>,
+) -> RunReport {
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![GIB; devices],
+        64 * GIB,
+        sched::by_name(scheduler).unwrap(),
+        &mut backend,
+        opts,
+    )
+    .unwrap()
+    .with_job_events(jobs);
+    engine.run().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// arrivals
+// ---------------------------------------------------------------------------
+
+#[test]
+fn arrival_delays_job_start() {
+    // work = 2 mbs * (1 + 2) = 6s, arriving at t=10 on an idle device
+    let t = uniform_task(0, 1, 2, 1.0).with_arrival(10.0);
+    let r = run(vec![t], 1, zero_transfer_opts(), "sharded-lrtf", vec![]);
+    assert!((r.makespan - 16.0).abs() < 1e-9, "{}", r.makespan);
+    assert_eq!(r.jobs.len(), 1);
+    assert_eq!(r.jobs[0].arrival, 10.0);
+    assert!((r.jobs[0].finished - 16.0).abs() < 1e-9);
+    assert!((r.jobs[0].latency() - 6.0).abs() < 1e-9);
+    assert!(!r.jobs[0].cancelled);
+    // no interval may start before the arrival
+    for iv in &r.trace.intervals {
+        assert!(iv.start >= 10.0 - 1e-9, "{iv:?}");
+    }
+}
+
+#[test]
+fn out_of_order_arrivals_run_in_arrival_order_under_fifo() {
+    // ids 0,1,2 arrive at 5.0, 0.0, 2.5 — each 3s of work, one device
+    let tasks = vec![
+        uniform_task(0, 1, 1, 1.0).with_arrival(5.0),
+        uniform_task(1, 1, 1, 1.0), // arrival 0.0
+        uniform_task(2, 1, 1, 1.0).with_arrival(2.5),
+    ];
+    let r = run(tasks, 1, zero_transfer_opts(), "fifo", vec![]);
+    assert!((r.makespan - 9.0).abs() < 1e-9, "{}", r.makespan);
+    let finish: Vec<f64> = r.jobs.iter().map(|j| j.finished).collect();
+    assert!((finish[1] - 3.0).abs() < 1e-9, "{finish:?}");
+    assert!((finish[2] - 6.0).abs() < 1e-9, "{finish:?}");
+    assert!((finish[0] - 9.0).abs() < 1e-9, "{finish:?}");
+    assert_eq!(r.units_executed, 6);
+}
+
+#[test]
+fn late_arrivals_fill_idle_devices_immediately() {
+    // two devices; one job from t=0, a second arriving at t=1 must start on
+    // the second (idle) device right away, not queue behind the first
+    let tasks = vec![
+        uniform_task(0, 1, 2, 1.0),                  // 6s of work
+        uniform_task(1, 1, 1, 1.0).with_arrival(1.0), // 3s of work
+    ];
+    let r = run(tasks, 2, zero_transfer_opts(), "sharded-lrtf", vec![]);
+    assert!((r.jobs[1].finished - 4.0).abs() < 1e-9, "{:?}", r.jobs[1]);
+    assert!((r.makespan - 6.0).abs() < 1e-9, "{}", r.makespan);
+}
+
+// ---------------------------------------------------------------------------
+// cancellation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cancel_idle_job_drops_all_its_units() {
+    // LRTF runs the long model first on the single device; the short one is
+    // cancelled before it ever starts
+    let tasks = vec![
+        uniform_task(0, 1, 3, 1.0), // 9s — picked first by LRTF
+        uniform_task(1, 1, 1, 1.0), // 3s — cancelled at t=0.5
+    ];
+    let r = run(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        "sharded-lrtf",
+        vec![JobEvent::Cancel { time: 0.5, model: 1 }],
+    );
+    assert!((r.makespan - 9.0).abs() < 1e-9, "{}", r.makespan);
+    assert_eq!(r.units_executed, 6); // only model 0's units
+    assert!(r.jobs[1].cancelled);
+    assert_eq!(r.jobs[1].units_executed, 0);
+    assert!((r.jobs[1].finished - 0.5).abs() < 1e-9);
+    assert!(!r.jobs[0].cancelled);
+}
+
+#[test]
+fn cancel_running_job_lets_inflight_unit_finish() {
+    // single model, units: fwd 0-1, bwd 1-3, fwd 3-4, bwd 4-6, fwd 6-7,
+    // bwd 7-9; cancel at 3.5 -> the in-flight fwd (3..4) completes, rest drop
+    let tasks = vec![uniform_task(0, 1, 3, 1.0)];
+    let r = run(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        "sharded-lrtf",
+        vec![JobEvent::Cancel { time: 3.5, model: 0 }],
+    );
+    assert_eq!(r.units_executed, 3, "{:?}", r.jobs);
+    assert!(r.jobs[0].cancelled);
+    assert!((r.jobs[0].finished - 4.0).abs() < 1e-9, "{:?}", r.jobs[0]);
+    assert!((r.makespan - 4.0).abs() < 1e-9);
+}
+
+#[test]
+fn cancel_before_arrival_prevents_any_execution() {
+    let tasks = vec![
+        uniform_task(0, 1, 1, 1.0),
+        uniform_task(1, 1, 2, 1.0).with_arrival(5.0),
+    ];
+    let r = run(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        "sharded-lrtf",
+        vec![JobEvent::Cancel { time: 2.0, model: 1 }],
+    );
+    assert_eq!(r.units_executed, 2); // model 0 only
+    assert!(r.jobs[1].cancelled);
+    assert_eq!(r.jobs[1].units_executed, 0);
+    assert!((r.makespan - 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn cancel_is_idempotent_and_ignores_finished_jobs() {
+    let tasks = vec![uniform_task(0, 1, 1, 1.0)];
+    let r = run(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        "sharded-lrtf",
+        vec![
+            JobEvent::Cancel { time: 10.0, model: 0 }, // job already done
+        ],
+    );
+    assert_eq!(r.units_executed, 2);
+    assert!(!r.jobs[0].cancelled);
+    assert!((r.jobs[0].finished - 3.0).abs() < 1e-9);
+}
+
+#[test]
+fn cancel_of_unknown_model_is_an_error() {
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        vec![uniform_task(0, 1, 1, 1.0)],
+        &[GIB],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap()
+    .with_job_events(vec![JobEvent::Cancel { time: 0.5, model: 7 }]);
+    assert!(engine.run().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// mid-run submission
+// ---------------------------------------------------------------------------
+
+#[test]
+fn submit_while_running_schedules_the_new_job() {
+    let tasks = vec![uniform_task(0, 1, 2, 1.0)]; // 6s
+    let late = uniform_task(1, 1, 1, 1.0).with_arrival(2.0); // 3s
+    let r = run(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        "sharded-lrtf",
+        vec![JobEvent::Submit { time: 2.0, task: late }],
+    );
+    assert_eq!(r.jobs.len(), 2);
+    assert_eq!(r.units_executed, 6);
+    assert!((r.jobs[1].finished - 9.0).abs() < 1e-9, "{:?}", r.jobs[1]);
+    assert!((r.makespan - 9.0).abs() < 1e-9);
+}
+
+#[test]
+fn submit_onto_idle_pool_starts_immediately() {
+    // empty-ish pool: first job finishes at 3.0, submission at 5.0 starts at
+    // its submission time on the parked device
+    let tasks = vec![uniform_task(0, 1, 1, 1.0)];
+    let late = uniform_task(1, 1, 1, 1.0).with_arrival(5.0);
+    let r = run(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        "sharded-lrtf",
+        vec![JobEvent::Submit { time: 5.0, task: late }],
+    );
+    assert!((r.jobs[1].finished - 8.0).abs() < 1e-9, "{:?}", r.jobs[1]);
+    assert!((r.makespan - 8.0).abs() < 1e-9);
+}
+
+#[test]
+fn submit_with_wrong_id_is_an_error() {
+    let mut backend = SimBackend::deterministic();
+    let bad = uniform_task(5, 1, 1, 1.0); // should be id 1
+    let mut engine = SharpEngine::new(
+        vec![uniform_task(0, 1, 1, 1.0)],
+        &[GIB],
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap()
+    .with_job_events(vec![JobEvent::Submit { time: 1.0, task: bad }]);
+    assert!(engine.run().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneous pools
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faster_device_retires_units_proportionally_sooner() {
+    let mk = |speed: f64| {
+        let specs = [DeviceSpec { mem_bytes: GIB, speed, link: None }];
+        let mut backend = SimBackend::deterministic();
+        let mut engine = SharpEngine::with_devices(
+            vec![uniform_task(0, 1, 2, 1.0)], // 6s at reference speed
+            &specs,
+            64 * GIB,
+            sched::by_name("sharded-lrtf").unwrap(),
+            &mut backend,
+            zero_transfer_opts(),
+        )
+        .unwrap();
+        engine.run().unwrap().makespan
+    };
+    assert!((mk(1.0) - 6.0).abs() < 1e-9);
+    assert!((mk(2.0) - 3.0).abs() < 1e-9);
+    assert!((mk(0.5) - 12.0).abs() < 1e-9);
+}
+
+#[test]
+fn per_device_link_charges_transfers_at_device_bandwidth() {
+    let mk = |link: Option<TransferModel>| {
+        let specs = [DeviceSpec { mem_bytes: 4 * GIB, speed: 1.0, link }];
+        let mut backend = SimBackend::deterministic();
+        let opts = EngineOptions {
+            transfer: TransferModel::pcie_gen3(),
+            double_buffer: false,
+            ..Default::default()
+        };
+        let mut engine = SharpEngine::with_devices(
+            vec![uniform_task(0, 2, 2, 0.01)],
+            &specs,
+            64 * GIB,
+            sched::by_name("sharded-lrtf").unwrap(),
+            &mut backend,
+            opts,
+        )
+        .unwrap();
+        engine.run().unwrap()
+    };
+    let slow = mk(None); // engine-wide pcie gen3
+    let fast = mk(Some(TransferModel::pcie_gen4()));
+    assert!(
+        fast.transfer_secs < slow.transfer_secs * 0.6,
+        "fast {} vs slow {}",
+        fast.transfer_secs,
+        slow.transfer_secs
+    );
+    assert!(fast.makespan < slow.makespan);
+}
+
+#[test]
+fn invalid_device_speed_is_rejected() {
+    let mut backend = SimBackend::deterministic();
+    let specs = [DeviceSpec { mem_bytes: GIB, speed: 0.0, link: None }];
+    let r = SharpEngine::with_devices(
+        vec![uniform_task(0, 1, 1, 1.0)],
+        &specs,
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    );
+    assert!(r.is_err());
+}
+
+#[test]
+fn unequal_capacity_ledgers_complete_and_size_zones_per_device() {
+    // one big + one small device; shards sized for the small one run on both
+    let tasks: Vec<ModelTask> =
+        (0..4).map(|i| uniform_task(i, 2, 2, 0.5)).collect();
+    let total: u64 = tasks.iter().map(|t| t.total_units()).sum();
+    let specs = [
+        DeviceSpec { mem_bytes: GIB, speed: 1.0, link: None },
+        DeviceSpec { mem_bytes: 256 << 20, speed: 1.0, link: None },
+    ];
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::with_devices(
+        tasks,
+        &specs,
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap();
+    let r = engine.run().unwrap();
+    assert_eq!(r.units_executed, total);
+    // both devices actually computed (the small one was usable)
+    let devices_used: std::collections::BTreeSet<usize> = r
+        .trace
+        .intervals
+        .iter()
+        .filter(|iv| iv.kind == IntervalKind::Compute)
+        .map(|iv| iv.device)
+        .collect();
+    assert_eq!(devices_used.len(), 2, "{devices_used:?}");
+}
+
+#[test]
+fn oversized_shard_on_small_device_is_clean_oom() {
+    // a shard that fits the big device but not the small one: the engine
+    // surfaces DeviceOom instead of silently over-packing the ledger
+    let tasks = vec![uniform_task(0, 1, 1, 1.0)]; // 100 MiB params/shard
+    let specs = [
+        DeviceSpec { mem_bytes: 64 << 20, speed: 1.0, link: None }, // too small
+    ];
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::with_devices(
+        tasks,
+        &specs,
+        64 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        zero_transfer_opts(),
+    )
+    .unwrap();
+    let err = engine.run().unwrap_err();
+    assert!(
+        matches!(err, hydra::HydraError::DeviceOom { .. }),
+        "expected OOM, got {err:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// event-heap vs linear-scan equivalence (Table 2 workloads)
+// ---------------------------------------------------------------------------
+
+fn run_table2_workload(workload: &[WorkloadModel], queue: QueueKind) -> RunReport {
+    let gpu = GpuSpec::rtx2080ti();
+    let policy = hydra::coordinator::partitioner::PartitionPolicy {
+        buffer_frac: 0.30,
+        ..Default::default()
+    };
+    let tasks = build_tasks(workload, &gpu, policy).unwrap();
+    let mut backend = SimBackend::deterministic();
+    let opts = EngineOptions {
+        buffer_frac: 0.30,
+        record_intervals: false,
+        queue,
+        ..Default::default()
+    };
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![gpu.mem_bytes; 8],
+        500 * GIB,
+        sched::by_name("sharded-lrtf").unwrap(),
+        &mut backend,
+        opts,
+    )
+    .unwrap();
+    engine.run().unwrap()
+}
+
+#[test]
+fn heap_and_scan_queues_agree_on_every_table2_workload() {
+    for (name, workload) in
+        [("bert", bert_grid(2)), ("vit", vit_grid(2))]
+    {
+        let heap = run_table2_workload(&workload, QueueKind::Heap);
+        let scan = run_table2_workload(&workload, QueueKind::LinearScan);
+        let rel = (heap.makespan - scan.makespan).abs() / heap.makespan.max(1e-12);
+        assert!(
+            rel < 1e-6,
+            "{name}: heap {} vs scan {} (rel {rel})",
+            heap.makespan,
+            scan.makespan
+        );
+        assert_eq!(heap.units_executed, scan.units_executed, "{name}");
+        assert!(
+            (heap.utilization - scan.utilization).abs() < 1e-9,
+            "{name}: {} vs {}",
+            heap.utilization,
+            scan.utilization
+        );
+    }
+}
+
+#[test]
+fn heap_and_scan_queues_agree_under_online_traffic() {
+    let mk = |queue: QueueKind| {
+        let tasks: Vec<ModelTask> = (0..6)
+            .map(|i| {
+                uniform_task(i, 1 + i % 3, 2, 0.3 + 0.2 * i as f64)
+                    .with_arrival(1.5 * i as f64)
+            })
+            .collect();
+        let opts = EngineOptions { queue, ..zero_transfer_opts() };
+        run(
+            tasks,
+            2,
+            opts,
+            "sharded-lrtf",
+            vec![JobEvent::Cancel { time: 4.0, model: 5 }],
+        )
+    };
+    let heap = mk(QueueKind::Heap);
+    let scan = mk(QueueKind::LinearScan);
+    assert!((heap.makespan - scan.makespan).abs() < 1e-9);
+    assert_eq!(heap.units_executed, scan.units_executed);
+}
+
+// ---------------------------------------------------------------------------
+// invariants under random online workloads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_online_invariants_hold() {
+    prop::check("online invariants", 40, |rng| {
+        let n_models = rng.range_u64(1, 6) as usize;
+        let devices = rng.range_u64(1, 4) as usize;
+        let tasks: Vec<ModelTask> = (0..n_models)
+            .map(|i| {
+                uniform_task(
+                    i,
+                    rng.range_u64(1, 4) as usize,
+                    rng.range_u64(1, 4) as u32,
+                    rng.range_f64(0.1, 1.0),
+                )
+                .with_arrival(rng.range_f64(0.0, 8.0))
+            })
+            .collect();
+        let cancel_model = rng.below(n_models as u64 * 2) as usize; // may miss
+        let jobs = if cancel_model < n_models {
+            vec![JobEvent::Cancel {
+                time: rng.range_f64(0.0, 10.0),
+                model: cancel_model,
+            }]
+        } else {
+            vec![]
+        };
+        let r = run(tasks, devices, zero_transfer_opts(), "sharded-lrtf", jobs);
+
+        // every non-cancelled job finishes with all its units
+        for j in &r.jobs {
+            if !j.cancelled && j.finished.is_nan() {
+                return Err(format!("job {} never finished", j.model));
+            }
+        }
+        // compute intervals per model are sequential and start after arrival
+        let mut by_model: std::collections::BTreeMap<usize, Vec<(f64, f64, u64)>> =
+            Default::default();
+        for iv in &r.trace.intervals {
+            if iv.kind == IntervalKind::Compute {
+                by_model
+                    .entry(iv.model)
+                    .or_default()
+                    .push((iv.start, iv.end, iv.unit_seq));
+            }
+        }
+        for (m, mut ivs) in by_model {
+            let arrival = r.jobs[m].arrival;
+            ivs.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for (i, iv) in ivs.iter().enumerate() {
+                if iv.0 < arrival - 1e-9 {
+                    return Err(format!(
+                        "model {m}: unit ran at {} before arrival {arrival}",
+                        iv.0
+                    ));
+                }
+                if iv.2 != i as u64 {
+                    return Err(format!(
+                        "model {m}: unit order broken at {i} (seq {})",
+                        iv.2
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}

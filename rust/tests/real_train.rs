@@ -24,6 +24,7 @@ fn spec(name: &str, config: &str, lr: f32, mbs: u32, seed: u64) -> RealModelSpec
         minibatches_per_epoch: mbs,
         seed,
         inference: false,
+        arrival: 0.0,
     }
 }
 
@@ -122,6 +123,7 @@ fn adam_and_momentum_paths_work_end_to_end() {
             minibatches_per_epoch: 4,
             seed: 3,
             inference: false,
+            arrival: 0.0,
         });
         let cluster = Cluster::uniform(1, 2 * MIB, 1024 * MIB);
         let report = orch.train_models(&cluster).unwrap();

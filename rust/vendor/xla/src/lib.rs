@@ -1,0 +1,304 @@
+//! Offline stub of the `xla` (xla_extension) PJRT bindings.
+//!
+//! The build environment for this repository has no network access and no
+//! prebuilt XLA runtime, so the real bindings cannot be compiled. This stub
+//! keeps the crate API-compatible with the subset Hydra uses:
+//!
+//! - [`Literal`] / [`ArrayShape`] / [`ElementType`] are **fully functional**
+//!   host-side implementations (create, inspect, round-trip), because the
+//!   host-tensor conversion layer and its unit tests exercise them without a
+//!   device.
+//! - [`PjRtClient::cpu`] returns a descriptive [`Error`], so any path that
+//!   would actually execute HLO fails fast with a clear message while every
+//!   simulated path (the SHARP engine, figures, benches) works.
+//!
+//! Swapping this path dependency for the real `xla_extension` bindings
+//! re-enables real PJRT execution with no source changes elsewhere.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error`: a message, nothing more.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: XLA/PJRT runtime unavailable (offline stub build; \
+             swap rust/vendor/xla for the real xla_extension bindings)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types (subset of XLA's primitive types; Hydra uses F32/S32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    /// Predicate / boolean byte.
+    Pred,
+    /// 8-bit unsigned integer.
+    U8,
+    /// 32-bit signed integer.
+    S32,
+    /// 32-bit IEEE float.
+    F32,
+    /// 64-bit IEEE float.
+    F64,
+}
+
+impl ElementType {
+    fn byte_size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::U8 => 1,
+            ElementType::F32 | ElementType::S32 => 4,
+            ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Rust native types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    /// The XLA element type this native type corresponds to.
+    const TY: ElementType;
+    /// Decode one element from its little-endian byte representation.
+    fn read_le(bytes: &[u8]) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn read_le(bytes: &[u8]) -> i32 {
+        i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]])
+    }
+}
+
+/// Shape of a (non-tuple) literal: element type + dimensions.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension extents.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Element type.
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side literal: either a dense array or a tuple of literals.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build a dense array literal from raw little-endian bytes.
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        let want = elems * ty.byte_size();
+        if data.len() != want {
+            return Err(Error(format!(
+                "literal data size mismatch: {} bytes for {:?} x {:?} (want {})",
+                data.len(),
+                ty,
+                dims,
+                want
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Build a tuple literal (what HLO entry points return).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { ty: ElementType::F32, dims: Vec::new(), bytes: Vec::new(), tuple: Some(parts) }
+    }
+
+    /// Shape of a dense literal; errors on tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if self.tuple.is_some() {
+            return Err(Error("array_shape on tuple literal".into()));
+        }
+        Ok(ArrayShape { ty: self.ty, dims: self.dims.clone() })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error("to_vec on tuple literal".into()));
+        }
+        if self.ty != T::TY {
+            return Err(Error(format!(
+                "to_vec element type mismatch: literal is {:?}, requested {:?}",
+                self.ty,
+                T::TY
+            )));
+        }
+        Ok(self.bytes.chunks_exact(self.ty.byte_size()).map(T::read_le).collect())
+    }
+
+    /// Flatten a tuple literal into its parts; errors on dense literals.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(parts) => Ok(parts.clone()),
+            None => Err(Error("to_tuple on non-tuple literal".into())),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: records the path only).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file. The stub only checks the file exists; it
+    /// cannot parse or execute HLO.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        if !p.exists() {
+            return Err(Error(format!("HLO file not found: {}", p.display())));
+        }
+        Ok(HloModuleProto { path: p.display().to_string() })
+    }
+}
+
+/// An XLA computation handle (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    path: String,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// PJRT device buffer handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle. In the stub, construction always fails.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always errors in the stub build.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_f32() {
+        let data: Vec<u8> = [1.0f32, 2.5, -3.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &data).unwrap();
+        let back: Vec<f32> = lit.to_vec().unwrap();
+        assert_eq!(back, vec![1.0, 2.5, -3.0]);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        assert!(
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &[0u8; 4]).is_err()
+        );
+    }
+
+    #[test]
+    fn tuple_round_trip() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &[1, 0, 0, 0])
+            .unwrap();
+        let t = Literal::tuple(vec![a]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"), "{e}");
+    }
+}
