@@ -11,8 +11,9 @@
 //! cargo run --release --example model_selection [-- --steps 50]
 //! ```
 
-use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
+use hydra::session::{Backend, Policy, Session};
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
 
@@ -22,14 +23,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env(&[])?;
     let steps = args.opt_usize("steps", 40)? as u32;
 
+    let cluster = Cluster::uniform(2, 1536 * 1024, 8192 * MIB);
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(Policy::ShardedLrtf)
+        .build()?;
+
     // Table 2-style grid: batch {4, 8} x lr {0.08, 0.04, 0.01}
-    let mut orchestra = ModelOrchestrator::new("artifacts");
     let mut names = Vec::new();
     for (bi, config) in ["tiny-lm-b4", "tiny-lm-b8"].into_iter().enumerate() {
         for (li, lr) in [0.08f32, 0.04, 0.01].into_iter().enumerate() {
             let name = format!("{config}-lr{lr}");
             names.push(name.clone());
-            orchestra.add_task(RealModelSpec {
+            session.submit(RealModelSpec {
                 name,
                 config: config.into(),
                 lr,
@@ -39,14 +45,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 seed: (bi * 3 + li) as u64 + 7,
                 inference: false,
                 arrival: 0.0,
-            });
+            })?;
         }
     }
 
-    let cluster = Cluster::uniform(2, 1536 * 1024, 8192 * MIB);
     println!("training {} models for {steps} steps each ...", names.len());
     let t0 = std::time::Instant::now();
-    let report = orchestra.train_models(&cluster)?;
+    let report = session.run()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!(

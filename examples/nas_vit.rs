@@ -10,8 +10,9 @@
 //! cargo run --release --example nas_vit [-- --steps 30]
 //! ```
 
-use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
+use hydra::session::{Backend, Policy, Session};
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
 
@@ -28,9 +29,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ("small-cls-b8", 0.08),
         ("small-cls-b8", 0.03),
     ];
-    let mut orchestra = ModelOrchestrator::new("artifacts");
+    let cluster = Cluster::uniform(2, 3 * MIB, 8192 * MIB);
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(Policy::ShardedLrtf)
+        .build()?;
     for (i, (config, lr)) in candidates.into_iter().enumerate() {
-        orchestra.add_task(RealModelSpec {
+        session.submit(RealModelSpec {
             name: format!("{config}-lr{lr}"),
             config: config.into(),
             lr,
@@ -40,12 +45,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             seed: 21 + i as u64,
             inference: false,
             arrival: 0.0,
-        });
+        })?;
     }
 
-    let cluster = Cluster::uniform(2, 3 * MIB, 8192 * MIB);
     println!("evaluating {} ViT-style candidates for {steps} steps ...", candidates.len());
-    let report = orchestra.train_models(&cluster)?;
+    let report = session.run()?;
 
     println!(
         "\nvirtual makespan {:.1}s | util {:.1}% | {} units | scheduler {}",

@@ -1,4 +1,4 @@
-//! Quickstart: train two models at once with the Figure-4 style API.
+//! Quickstart: train two models at once through the `Session` front door.
 //!
 //! ```bash
 //! make artifacts           # once: AOT-compile the JAX/Pallas shards
@@ -10,17 +10,28 @@
 //! Hydra partitions them (Algorithm 1), spills shards through DRAM, and
 //! blends their schedules with SHARP + Sharded-LRTF + double buffering.
 
-use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
+use hydra::session::{Backend, Policy, Session};
 use hydra::train::optimizer::OptKind;
 
 const MIB: u64 = 1 << 20;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    // 1. register model tasks (the paper's ModelTask/ModelOrchestrator API)
-    let mut orchestra = ModelOrchestrator::new("artifacts");
+    // 1. describe the hardware: 2 devices x 1.5 MiB "GPU memory" (tiny on
+    //    purpose: forces real multi-shard spilling), 4 GiB DRAM pool
+    let cluster = Cluster::uniform(2, 1536 * 1024, 4096 * MIB);
+
+    // 2. one typed builder picks the backend and policy
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(Policy::ShardedLrtf)
+        .build()?;
+
+    // 3. submit model tasks (the paper's ModelTask registration, Figure 4)
+    let mut handles = Vec::new();
     for (i, lr) in [0.05f32, 0.02].into_iter().enumerate() {
-        orchestra.add_task(RealModelSpec {
+        handles.push(session.submit(RealModelSpec {
             name: format!("bert-tiny-lr{lr}"),
             config: "tiny-lm-b8".into(),
             lr,
@@ -30,20 +41,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             seed: 42 + i as u64,
             inference: false,
             arrival: 0.0,
-        });
+        })?);
     }
 
-    // 2. describe the hardware: 2 devices x 1.5 MiB "GPU memory" (tiny on
-    //    purpose: forces real multi-shard spilling), 4 GiB DRAM pool
-    let cluster = Cluster::uniform(2, 1536 * 1024, 4096 * MIB);
-
-    // 3. train everything
-    let report = orchestra.train_models(&cluster)?;
+    // 4. train everything
+    let report = session.run()?;
 
     println!("makespan (virtual): {:.2}s", report.run.makespan);
     println!("device utilization: {:.1}%", 100.0 * report.run.utilization);
     println!("shard units executed: {}", report.run.units_executed);
-    for (i, losses) in report.losses.iter().enumerate() {
+    for (i, h) in handles.iter().enumerate() {
+        let losses = report.losses_for(*h).unwrap();
         let first = losses.first().unwrap().1;
         let last = losses.last().unwrap().1;
         println!(

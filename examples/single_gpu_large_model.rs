@@ -11,8 +11,9 @@
 //! cargo run --release --example single_gpu_large_model [-- --steps 3]
 //! ```
 
-use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
+use hydra::session::{Backend, Policy, Session};
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
 use hydra::util::fmt_bytes;
@@ -24,8 +25,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps = args.opt_usize("steps", 3)? as u32;
 
     let device_mem = 12 * MIB;
-    let mut orchestra = ModelOrchestrator::new("artifacts");
-    orchestra.add_task(RealModelSpec {
+    let cluster = Cluster::uniform(1, device_mem, 8192 * MIB);
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(Policy::ShardedLrtf)
+        .build()?;
+    let job = session.submit(RealModelSpec {
         name: "medium-lm".into(),
         config: "medium-lm-b8".into(),
         lr: 0.02,
@@ -35,16 +40,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         seed: 5,
         inference: false,
         arrival: 0.0,
-    });
+    })?;
 
-    let cluster = Cluster::uniform(1, device_mem, 8192 * MIB);
     println!(
         "training one ~6.6M-param model on a single {} device ...",
         fmt_bytes(device_mem)
     );
-    let report = orchestra.train_models(&cluster)?;
+    let report = session.run()?;
 
-    let losses = &report.losses[0];
+    let losses = report.losses_for(job).unwrap();
     println!(
         "shard units executed: {} ({} shards/pass)",
         report.run.units_executed,

@@ -4,7 +4,7 @@
 
 use std::time::Duration;
 
-use hydra::coordinator::sched::{self, PickContext, Scheduler};
+use hydra::coordinator::sched::{PickContext, Policy, Scheduler};
 use hydra::coordinator::task::ModelSnapshot;
 use hydra::coordinator::unit::Phase;
 use hydra::figures;
@@ -32,7 +32,7 @@ fn main() {
                 arrival: 0.0,
             })
             .collect();
-        let mut lrtf = sched::by_name("sharded-lrtf").unwrap();
+        let mut lrtf = Policy::ShardedLrtf.build();
         let mut rng = Rng::new(0);
         let ctx = PickContext { now: 0.0, device: 0, speed: 1.0, resident: None };
         bench(&format!("sharded-lrtf pick, {n} eligible models"), 7, 1000, || {

@@ -1,15 +1,18 @@
 //! Hot-path microbenchmarks for the §Perf pass (EXPERIMENTS.md §Perf):
-//! engine dispatch throughput, scheduler latency, memory-ledger ops,
-//! manifest JSON parsing, BnB node rate, PRNG throughput.
+//! engine dispatch throughput, observer-opt-in trace cost, scheduler
+//! latency, memory-ledger ops, manifest JSON parsing, BnB node rate, PRNG
+//! throughput. Engine runs go through the `Session` front door.
 
 use hydra::coordinator::memory::{DeviceLedger, Residency};
-use hydra::coordinator::sched::{self, bnb};
-use hydra::coordinator::sharp::{EngineOptions, QueueKind, SharpEngine, TransferModel};
+use hydra::coordinator::sched::bnb;
+use hydra::coordinator::sharp::{EngineOptions, QueueKind, TransferModel};
 use hydra::coordinator::task::{ModelTask, ShardDesc};
-use hydra::exec::SimBackend;
+use hydra::coordinator::Cluster;
+use hydra::session::{Backend, Policy, Session};
 use hydra::util::bench::bench;
 use hydra::util::json::Json;
 use hydra::util::rng::Rng;
+use hydra::{NoopObserver, TraceRecorder};
 
 const GIB: u64 = 1 << 30;
 
@@ -32,24 +35,27 @@ fn tasks(n: usize, shards: usize, mbs: u32) -> Vec<ModelTask> {
         .collect()
 }
 
+fn mk_session(n_models: usize, devices: usize, mbs: u32, opts: EngineOptions) -> Session {
+    let mut session = Session::builder(Cluster::uniform(devices, GIB, 64 * GIB))
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts)
+        .build()
+        .unwrap();
+    for t in tasks(n_models, 4, mbs) {
+        session.submit(t).unwrap();
+    }
+    session
+}
+
 fn run_engine_bench(n_models: usize, devices: usize, mbs: u32, queue: QueueKind) -> f64 {
-    let mut backend = SimBackend::deterministic();
     let opts = EngineOptions {
         transfer: TransferModel::pcie_gen3(),
         record_intervals: false,
         queue,
         ..Default::default()
     };
-    let mut engine = SharpEngine::new(
-        tasks(n_models, 4, mbs),
-        &vec![GIB; devices],
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        opts,
-    )
-    .unwrap();
-    engine.run().unwrap().makespan
+    mk_session(n_models, devices, mbs, opts).run().unwrap().run.makespan
 }
 
 fn main() {
@@ -62,6 +68,38 @@ fn main() {
         units,
         || {
             std::hint::black_box(run_engine_bench(16, 8, 64, QueueKind::Heap));
+        },
+    );
+
+    // --- observer: trace bookkeeping is opt-in, off the hot path ---------
+    // Same workload, same options; the only difference is the observer fed
+    // to run_with: Noop (nothing recorded) vs TraceRecorder (every interval
+    // collected). Quantifies what `record_intervals`/tracing costs.
+    let obs_units = 16 * 4 * 2 * 64;
+    let no_trace_opts = || EngineOptions {
+        transfer: TransferModel::pcie_gen3(),
+        record_intervals: false,
+        ..Default::default()
+    };
+    bench(
+        &format!("engine[observer=noop]: {obs_units} units, no trace"),
+        5,
+        obs_units,
+        || {
+            let session = mk_session(16, 8, 64, no_trace_opts());
+            std::hint::black_box(session.run_with(&mut NoopObserver).unwrap());
+        },
+    );
+    bench(
+        &format!("engine[observer=trace]: {obs_units} units, full interval log"),
+        5,
+        obs_units,
+        || {
+            let session = mk_session(16, 8, 64, no_trace_opts());
+            let mut rec = TraceRecorder::default();
+            let r = session.run_with(&mut rec).unwrap();
+            assert!(rec.intervals.len() as u64 >= r.run.units_executed);
+            std::hint::black_box((r, rec.intervals.len()));
         },
     );
 
@@ -105,22 +143,21 @@ fn main() {
             },
         )
         .unwrap();
-        let mut backend = SimBackend::deterministic();
         let opts = EngineOptions {
             buffer_frac: 0.30,
             record_intervals: false,
             ..Default::default()
         };
-        let mut engine = SharpEngine::with_devices(
-            tasks,
-            &specs,
-            500 * GIB,
-            sched::by_name("sharded-lrtf").unwrap(),
-            &mut backend,
-            opts,
-        )
-        .unwrap();
-        std::hint::black_box(engine.run().unwrap());
+        let mut session = Session::builder(Cluster::heterogeneous(specs, 500 * GIB))
+            .backend(Backend::sim())
+            .policy(Policy::ShardedLrtf)
+            .options(opts)
+            .build()
+            .unwrap();
+        for t in tasks {
+            session.submit(t).unwrap();
+        }
+        std::hint::black_box(session.run().unwrap());
     });
 
     // --- memory ledger ---------------------------------------------------

@@ -1,7 +1,8 @@
 //! Declarative workload specifications: a JSON file describing the model
 //! tasks, cluster, and engine knobs, consumed by `hydra run --spec <file>`.
 //! This is the "real config system" a deployment would drive Hydra with —
-//! the programmatic `ModelOrchestrator` API stays available underneath.
+//! [`WorkloadSpec::session`] builds the programmatic
+//! [`crate::session::Session`] underneath.
 //!
 //! ```json
 //! {
@@ -21,16 +22,19 @@
 //! ```
 //!
 //! Clusters may be heterogeneous: `"device_mem_mib_each": [4, 2, 8]` gives
-//! per-device memories, and `"device_classes": ["a4000", "a6000"]` builds a
+//! per-device memories, `"device_classes": ["a4000", "a6000"]` builds a
 //! mixed pool of named GPU classes (per-class memory, relative speed, and
-//! host-link bandwidth; speeds are relative to the slowest listed class).
-//! Tasks may carry an `"arrival"` time in virtual seconds — the online
-//! multi-tenant setting.
+//! host-link bandwidth; speeds are relative to the slowest listed class),
+//! and `"pool": "a4000:4,a6000:2"` is the compact class:count form shared
+//! with the `hydra simulate --online --pool` flag. Tasks may carry an
+//! `"arrival"` time in virtual seconds — the online multi-tenant setting.
 
+use crate::coordinator::sched::Policy;
 use crate::coordinator::sharp::{DeviceSpec, EngineOptions, ParallelMode, QueueKind};
-use crate::coordinator::{Cluster, ModelOrchestrator};
+use crate::coordinator::Cluster;
 use crate::error::{HydraError, Result};
 use crate::exec::real::RealModelSpec;
+use crate::session::{Backend, Session};
 use crate::sim::GpuSpec;
 use crate::train::optimizer::OptKind;
 use crate::util::json::Json;
@@ -40,7 +44,8 @@ use crate::util::json::Json;
 pub struct WorkloadSpec {
     pub cluster: Cluster,
     pub engine: EngineOptions,
-    pub scheduler: String,
+    /// Typed scheduling policy (parsed from the spec's `"scheduler"`).
+    pub policy: Policy,
     pub early_stop_median_after: Option<u32>,
     pub tasks: Vec<RealModelSpec>,
 }
@@ -62,7 +67,19 @@ impl WorkloadSpec {
         let c = j.get("cluster").ok_or_else(|| cerr("missing cluster"))?;
         let mib = 1u64 << 20;
         let dram_bytes = c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib;
-        let cluster = if let Some(classes) = c.get("device_classes") {
+        let cluster = if let Some(pool) = c.get("pool") {
+            // compact heterogeneous form, shared with the --pool CLI flag
+            let s = pool
+                .as_str()
+                .ok_or_else(|| cerr("pool must be a string like \"a4000:4,a6000:2\""))?;
+            let gpus = crate::sim::parse_pool(s)?;
+            let reference = crate::sim::pool_reference(&gpus)
+                .ok_or_else(|| cerr("pool is empty"))?;
+            Cluster::heterogeneous(
+                gpus.iter().map(|g| g.device_spec(&reference)).collect(),
+                dram_bytes,
+            )
+        } else if let Some(classes) = c.get("device_classes") {
             // heterogeneous: named GPU classes (memory + speed + link)
             let arr = classes
                 .as_arr()
@@ -120,14 +137,11 @@ impl WorkloadSpec {
 
         // --- engine ---------------------------------------------------------
         let mut engine = EngineOptions::default();
-        let mut scheduler = "sharded-lrtf".to_string();
+        let mut policy = Policy::default();
         let mut early_stop = None;
         if let Some(e) = j.get("engine") {
             if let Some(s) = e.get("scheduler").and_then(Json::as_str) {
-                if crate::coordinator::sched::by_name(s).is_none() {
-                    return Err(cerr(format!("unknown scheduler {s:?}")));
-                }
-                scheduler = s.to_string();
+                policy = s.parse::<Policy>()?;
             }
             if let Some(db) = e.get("double_buffer").and_then(Json::as_bool) {
                 engine.double_buffer = db;
@@ -178,17 +192,36 @@ impl WorkloadSpec {
         Ok(WorkloadSpec {
             cluster,
             engine,
-            scheduler,
+            policy,
             early_stop_median_after: early_stop,
             tasks,
         })
     }
 
+    /// Build the real-backend [`Session`] this spec describes, with every
+    /// task submitted; call `.run()` (or `.run_with(..)`) on the result.
+    pub fn session(&self, manifest_dir: &str) -> Result<Session> {
+        let mut builder = Session::builder(self.cluster.clone())
+            .backend(Backend::Real { manifest: manifest_dir.to_string() })
+            .policy(self.policy)
+            .options(self.engine.clone());
+        if let Some(min_epochs) = self.early_stop_median_after {
+            builder = builder.early_stop_median_after(min_epochs);
+        }
+        let mut session = builder.build()?;
+        for t in &self.tasks {
+            session.submit(t.clone())?;
+        }
+        Ok(session)
+    }
+
     /// Build the orchestrator this spec describes.
-    pub fn orchestrator(&self, manifest_dir: &str) -> ModelOrchestrator {
-        let mut orch = ModelOrchestrator::new(manifest_dir);
+    #[deprecated(since = "0.2.0", note = "use WorkloadSpec::session")]
+    #[allow(deprecated)]
+    pub fn orchestrator(&self, manifest_dir: &str) -> crate::coordinator::ModelOrchestrator {
+        let mut orch = crate::coordinator::ModelOrchestrator::new(manifest_dir);
         orch.engine_options = self.engine.clone();
-        orch.scheduler = self.scheduler.clone();
+        orch.scheduler = self.policy.name().to_string();
         orch.early_stop_median_after = self.early_stop_median_after;
         for t in &self.tasks {
             orch.add_task(t.clone());
@@ -251,7 +284,7 @@ mod tests {
         let w = WorkloadSpec::parse(SPEC).unwrap();
         assert_eq!(w.cluster.device_mem(), vec![2 << 20, 2 << 20]);
         assert_eq!(w.cluster.dram_bytes, 1024 << 20);
-        assert_eq!(w.scheduler, "random");
+        assert_eq!(w.policy, Policy::Random);
         assert!(!w.engine.double_buffer);
         assert_eq!(w.engine.mode, ParallelMode::Sequential);
         assert_eq!(w.engine.buffer_frac, 0.1);
@@ -337,7 +370,33 @@ mod tests {
     }
 
     #[test]
-    fn orchestrator_inherits_spec() {
+    fn session_inherits_spec() {
+        let w = WorkloadSpec::parse(SPEC).unwrap();
+        let session = w.session("artifacts").unwrap();
+        assert_eq!(session.n_jobs(), 2);
+    }
+
+    #[test]
+    fn pool_key_builds_mixed_cluster() {
+        let spec = r#"{
+          "cluster": { "pool": "a4000:2,a6000" },
+          "tasks": [ { "config": "tiny-lm-b4", "minibatches": 1 } ]
+        }"#;
+        let w = WorkloadSpec::parse(spec).unwrap();
+        assert_eq!(w.cluster.n_devices(), 3);
+        // A4000 is the slowest class -> reference speed; A6000 faster
+        assert_eq!(w.cluster.devices[0].speed, 1.0);
+        assert!(w.cluster.devices[2].speed > 1.0);
+        assert!(WorkloadSpec::parse(
+            r#"{"cluster":{"pool":"h100:1"},
+                "tasks":[{"config":"x","minibatches":1}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn orchestrator_shim_inherits_spec() {
         let w = WorkloadSpec::parse(SPEC).unwrap();
         let orch = w.orchestrator("artifacts");
         assert_eq!(orch.n_tasks(), 2);

@@ -1,12 +1,15 @@
 //! The Hydra coordinator — the paper's L3 contribution.
 //!
-//! Components (paper §3): the user-facing API ([`ModelOrchestrator`]), the
-//! Automated Partitioner ([`partitioner`]), the Memory Manager ([`memory`],
-//! [`buffer`]) and the Scheduler ([`sched`], [`sharp`]).
+//! Components (paper §3): the Automated Partitioner ([`partitioner`]), the
+//! Memory Manager ([`memory`], [`buffer`]) and the Scheduler ([`sched`],
+//! [`sharp`]), plus streaming run observation ([`observer`]). The
+//! user-facing API is [`crate::session::Session`]; the paper's Figure-4
+//! style [`ModelOrchestrator`] remains as a deprecated shim over it.
 
 pub mod buffer;
 pub mod memory;
 pub mod metrics;
+pub mod observer;
 pub mod partitioner;
 pub mod sched;
 pub mod sharp;
@@ -14,51 +17,11 @@ pub mod task;
 pub mod unit;
 
 use crate::coordinator::partitioner::PartitionPolicy;
-use crate::coordinator::sharp::{DeviceSpec, EngineOptions, RunReport, SharpEngine};
+use crate::coordinator::sched::Policy;
+use crate::coordinator::sharp::{DeviceSpec, EngineOptions, RunReport};
 use crate::error::{HydraError, Result};
-use crate::exec::real::{RealBackend, RealModelSpec};
-
-/// High-level multi-model training API, mirroring the paper's Figure 4.
-///
-/// Register tasks, then [`ModelOrchestrator::train_models`] composes the
-/// whole stack: pilot runs -> Algorithm-1 partitioning -> ModelTask queues
-/// -> SHARP engine with spilling and double-buffering -> PJRT execution of
-/// every shard unit.
-///
-/// ```
-/// use hydra::coordinator::ModelOrchestrator;
-/// use hydra::exec::real::RealModelSpec;
-/// use hydra::train::optimizer::OptKind;
-///
-/// let mut orch = ModelOrchestrator::new("artifacts");
-/// orch.add_task(RealModelSpec {
-///     name: "bert-lr3".into(),
-///     config: "tiny-lm-b8".into(),
-///     lr: 1e-3,
-///     opt: OptKind::Sgd,
-///     epochs: 1,
-///     minibatches_per_epoch: 4,
-///     seed: 0,
-///     inference: false,
-///     arrival: 0.0,
-/// });
-/// orch.scheduler = "sharded-lrtf".to_string();
-/// assert_eq!(orch.n_tasks(), 1);
-/// // orch.train_models(&cluster) then runs everything (needs artifacts/).
-/// ```
-pub struct ModelOrchestrator {
-    manifest_dir: String,
-    specs: Vec<RealModelSpec>,
-    /// Algorithm-1 partitioning knobs.
-    pub partition_policy: PartitionPolicy,
-    /// SHARP engine knobs (mode, double-buffering, transfer model, ...).
-    pub engine_options: EngineOptions,
-    /// Scheduling policy name (see [`sched::by_name`]).
-    pub scheduler: String,
-    /// AutoML-style early stopping: models whose epoch-mean loss falls
-    /// behind the median after `min_epochs` are dropped (§4.7.2).
-    pub early_stop_median_after: Option<u32>,
-}
+use crate::exec::real::RealModelSpec;
+use crate::session::{Backend, Session};
 
 /// Cluster description for real runs: per-device specs (memory capacity,
 /// relative speed, optional link override) plus the DRAM pool. Capacities
@@ -96,8 +59,38 @@ impl Cluster {
     }
 
     /// Capacity of the smallest device — the §4.3 partitioning bound.
+    /// Returns 0 on an empty pool, which is why [`Cluster::validate`] runs
+    /// at `Session::builder(..).build()`: a zero bound would flow into
+    /// partitioning as zero capacity and fail far from the real cause.
     pub fn min_device_mem(&self) -> u64 {
         self.devices.iter().map(|d| d.mem_bytes).min().unwrap_or(0)
+    }
+
+    /// Reject unusable clusters with a clear configuration error: empty
+    /// device lists, zero-memory devices, and non-positive/non-finite
+    /// speeds.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            return Err(HydraError::Config(
+                "cluster has no devices (an empty pool would give the \
+                 partitioner a zero-capacity memory bound)"
+                    .into(),
+            ));
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            if d.mem_bytes == 0 {
+                return Err(HydraError::Config(format!(
+                    "cluster device {i} has zero memory"
+                )));
+            }
+            if !d.speed.is_finite() || d.speed <= 0.0 {
+                return Err(HydraError::Config(format!(
+                    "cluster device {i}: speed {} must be finite and positive",
+                    d.speed
+                )));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -109,6 +102,34 @@ pub struct TrainingReport {
     pub losses: Vec<Vec<(u64, f32)>>,
 }
 
+/// High-level multi-model training API, mirroring the paper's Figure 4.
+///
+/// Deprecated: this is now a thin shim over [`crate::session::Session`],
+/// which unifies the real and simulated backends behind one typed builder
+/// (`Session::builder(cluster).backend(..).policy(..).submit(..).run()`).
+/// It remains for one release so existing callers keep compiling.
+#[deprecated(
+    since = "0.2.0",
+    note = "use hydra::session::Session: \
+            Session::builder(cluster).backend(Backend::Real { manifest }) \
+            .policy(policy).submit(spec)?.run()"
+)]
+pub struct ModelOrchestrator {
+    manifest_dir: String,
+    specs: Vec<RealModelSpec>,
+    /// Algorithm-1 partitioning knobs.
+    pub partition_policy: PartitionPolicy,
+    /// SHARP engine knobs (mode, double-buffering, transfer model, ...).
+    pub engine_options: EngineOptions,
+    /// Scheduling policy name, parsed through [`Policy::from_str`] at run
+    /// time (the `Session` API takes the [`Policy`] enum directly).
+    pub scheduler: String,
+    /// AutoML-style early stopping: models whose epoch-mean loss falls
+    /// behind the median after `min_epochs` are dropped (§4.7.2).
+    pub early_stop_median_after: Option<u32>,
+}
+
+#[allow(deprecated)]
 impl ModelOrchestrator {
     /// Create an orchestrator over the artifact manifest at `manifest_dir`.
     pub fn new(manifest_dir: impl Into<String>) -> ModelOrchestrator {
@@ -117,7 +138,7 @@ impl ModelOrchestrator {
             specs: Vec::new(),
             partition_policy: PartitionPolicy::default(),
             engine_options: EngineOptions::default(),
-            scheduler: "sharded-lrtf".to_string(),
+            scheduler: Policy::default().name().to_string(),
             early_stop_median_after: None,
         }
     }
@@ -134,41 +155,25 @@ impl ModelOrchestrator {
     }
 
     /// Train all registered models to completion over the cluster.
-    ///
-    /// This is where the whole stack composes: pilot runs -> Algorithm-1
-    /// partitioning -> ModelTask queues -> SHARP engine with spilling and
-    /// double-buffering -> real PJRT execution of every shard unit. Tasks
-    /// with a non-zero [`RealModelSpec::arrival`] enter the schedule online
-    /// at that virtual time.
+    /// Delegates to [`Session`] — pilot runs -> Algorithm-1 partitioning ->
+    /// SHARP engine -> PJRT execution are all composed there now.
     pub fn train_models(&self, cluster: &Cluster) -> Result<TrainingReport> {
         if self.specs.is_empty() {
             return Err(HydraError::Config("no tasks registered".into()));
         }
-        let (mut backend, tasks) = RealBackend::build(
-            &self.manifest_dir,
-            &self.specs,
-            cluster.min_device_mem(),
-            self.partition_policy,
-        )?;
+        let mut builder = Session::builder(cluster.clone())
+            .backend(Backend::Real { manifest: self.manifest_dir.clone() })
+            .policy(self.scheduler.parse::<Policy>()?)
+            .options(self.engine_options.clone())
+            .partition_policy(self.partition_policy);
         if let Some(min_epochs) = self.early_stop_median_after {
-            backend.early_stop =
-                Some(crate::exec::real::MedianRule { min_epochs });
+            builder = builder.early_stop_median_after(min_epochs);
         }
-        let scheduler = sched::by_name(&self.scheduler)
-            .ok_or_else(|| HydraError::Config(format!(
-                "unknown scheduler {:?}", self.scheduler)))?;
-        let mut engine = SharpEngine::with_devices(
-            tasks,
-            &cluster.devices,
-            cluster.dram_bytes,
-            scheduler,
-            &mut backend,
-            self.engine_options.clone(),
-        )?;
-        let run = engine.run()?;
-        let losses = (0..self.specs.len())
-            .map(|m| backend.loss_log(m).to_vec())
-            .collect();
-        Ok(TrainingReport { run, losses })
+        let mut session = builder.build()?;
+        for spec in &self.specs {
+            session.submit(spec.clone())?;
+        }
+        let report = session.run()?;
+        Ok(TrainingReport { run: report.run, losses: report.losses })
     }
 }

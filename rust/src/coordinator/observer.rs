@@ -1,0 +1,148 @@
+//! Streaming observation of a running SHARP engine.
+//!
+//! [`EngineObserver`] is the engine's event tap: every scheduling decision,
+//! spill, retired unit, job arrival/finish and recorded interval flows
+//! through it *as it happens* in virtual time. The engine itself keeps only
+//! scalar aggregates (makespan, compute/transfer/stall seconds) on the hot
+//! path — per-interval trace bookkeeping is just one observer
+//! ([`TraceRecorder`]), so callers that do not need a trace pay nothing for
+//! it (quantified in `rust/benches/hotpath.rs`), while callers that want
+//! live gantt/progress streaming for online runs implement the trait and
+//! pass it to `run_with`.
+
+use crate::coordinator::metrics::Interval;
+use crate::coordinator::unit::ShardUnit;
+
+/// Observer of engine events, called synchronously from the engine's
+/// virtual-time loop. All methods default to no-ops so implementations
+/// override only what they care about; implementations must be cheap — they
+/// run on the dispatch hot path.
+pub trait EngineObserver {
+    /// A job entered the eligible set (its arrival time passed, or it was
+    /// submitted mid-run with an arrival in the past).
+    fn on_job_arrived(&mut self, _model: usize, _name: &str, _now: f64) {}
+
+    /// The scheduler picked `model` for `device` — either to run now
+    /// (`prefetch == false`) or as a double-buffer pre-claim
+    /// (`prefetch == true`).
+    fn on_decision(&mut self, _device: usize, _model: usize, _prefetch: bool, _now: f64) {}
+
+    /// A shard unit retired on `device` at `now`.
+    fn on_unit_retired(&mut self, _device: usize, _unit: &ShardUnit, _now: f64) {}
+
+    /// A job finished (all units retired, or a cancellation took effect).
+    /// Fires exactly once per job.
+    fn on_job_finished(&mut self, _model: usize, _now: f64, _cancelled: bool) {}
+
+    /// Spill traffic: `promoted` bytes moved DRAM->device and/or `demoted`
+    /// bytes flowed back device->DRAM for `device`. `now` is the virtual
+    /// time the corresponding transfer starts (for both directions).
+    fn on_spill(&mut self, _device: usize, _promoted: u64, _demoted: u64, _now: f64) {}
+
+    /// A device-time interval (compute / transfer / buffer-stall) was
+    /// recorded. This is the trace feed: [`TraceRecorder`] collects these
+    /// into [`crate::coordinator::metrics::Trace::intervals`].
+    fn on_interval(&mut self, _interval: &Interval) {}
+}
+
+/// The do-nothing observer: the engine's hot path with zero bookkeeping.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopObserver;
+
+impl EngineObserver for NoopObserver {}
+
+/// Collects per-interval trace entries — the pre-redesign
+/// `record_intervals: true` behaviour as an opt-in observer. The engine's
+/// `run()` installs one automatically when
+/// `EngineOptions::record_intervals` is set, so existing callers see
+/// identical `RunReport`s.
+#[derive(Debug, Clone, Default)]
+pub struct TraceRecorder {
+    /// Every interval observed, in recording order.
+    pub intervals: Vec<Interval>,
+}
+
+impl EngineObserver for TraceRecorder {
+    fn on_interval(&mut self, interval: &Interval) {
+        self.intervals.push(*interval);
+    }
+}
+
+/// Fan out engine events to two observers (used by
+/// [`crate::coordinator::sharp::SharpEngine::run_observed`] to combine a
+/// caller's observer with the built-in trace recorder).
+pub struct Tee<'a>(pub &'a mut dyn EngineObserver, pub &'a mut dyn EngineObserver);
+
+impl EngineObserver for Tee<'_> {
+    fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
+        self.0.on_job_arrived(model, name, now);
+        self.1.on_job_arrived(model, name, now);
+    }
+
+    fn on_decision(&mut self, device: usize, model: usize, prefetch: bool, now: f64) {
+        self.0.on_decision(device, model, prefetch, now);
+        self.1.on_decision(device, model, prefetch, now);
+    }
+
+    fn on_unit_retired(&mut self, device: usize, unit: &ShardUnit, now: f64) {
+        self.0.on_unit_retired(device, unit, now);
+        self.1.on_unit_retired(device, unit, now);
+    }
+
+    fn on_job_finished(&mut self, model: usize, now: f64, cancelled: bool) {
+        self.0.on_job_finished(model, now, cancelled);
+        self.1.on_job_finished(model, now, cancelled);
+    }
+
+    fn on_spill(&mut self, device: usize, promoted: u64, demoted: u64, now: f64) {
+        self.0.on_spill(device, promoted, demoted, now);
+        self.1.on_spill(device, promoted, demoted, now);
+    }
+
+    fn on_interval(&mut self, interval: &Interval) {
+        self.0.on_interval(interval);
+        self.1.on_interval(interval);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::IntervalKind;
+    use crate::coordinator::unit::Phase;
+
+    fn iv(start: f64, end: f64) -> Interval {
+        Interval {
+            device: 0,
+            start,
+            end,
+            model: 0,
+            shard: 0,
+            phase: Phase::Fwd,
+            unit_seq: 0,
+            kind: IntervalKind::Compute,
+        }
+    }
+
+    #[test]
+    fn trace_recorder_collects_in_order() {
+        let mut rec = TraceRecorder::default();
+        rec.on_interval(&iv(0.0, 1.0));
+        rec.on_interval(&iv(1.0, 2.0));
+        assert_eq!(rec.intervals.len(), 2);
+        assert_eq!(rec.intervals[1].start, 1.0);
+    }
+
+    #[test]
+    fn tee_feeds_both_observers() {
+        let mut a = TraceRecorder::default();
+        let mut b = TraceRecorder::default();
+        {
+            let mut tee = Tee(&mut a, &mut b);
+            tee.on_interval(&iv(0.0, 1.0));
+            tee.on_job_finished(3, 1.0, false);
+        }
+        assert_eq!(a.intervals.len(), 1);
+        assert_eq!(b.intervals.len(), 1);
+    }
+}

@@ -10,7 +10,11 @@
 
 pub mod bnb;
 
+use std::fmt;
+use std::str::FromStr;
+
 use crate::coordinator::task::ModelSnapshot;
+use crate::error::HydraError;
 use crate::util::rng::Rng;
 
 /// Context a policy may use when picking (device affinity etc.).
@@ -199,16 +203,96 @@ impl Scheduler for AffinityLrtf {
     }
 }
 
-/// Construct a policy by name (CLI / config surface).
-pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
-    match name {
-        "sharded-lrtf" | "lrtf" => Some(Box::new(ShardedLrtf)),
-        "random" => Some(Box::new(RandomSched)),
-        "fifo" => Some(Box::new(FifoSched)),
-        "srtf" => Some(Box::new(SrtfSched)),
-        "affinity-lrtf" => Some(Box::new(AffinityLrtf)),
-        _ => None,
+// ---------------------------------------------------------------------------
+// Typed policy surface
+// ---------------------------------------------------------------------------
+
+/// The scheduling policies this crate ships, as a typed enum — the
+/// [`crate::session::Session`] builder's `.policy(..)` argument and the only
+/// place scheduler names are spelled out. String surfaces (CLI flags, JSON
+/// specs) parse through [`Policy::from_str`]; everything downstream carries
+/// the enum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Policy {
+    /// Sharded Longest-Remaining-Time-First (Algorithm 2, the default).
+    #[default]
+    ShardedLrtf,
+    /// LRTF with §4.6 device-affinity tie-break (extension).
+    AffinityLrtf,
+    /// First-come-first-served by true arrival time.
+    Fifo,
+    /// Shortest-Remaining-Time-First (anti-pattern ablation).
+    Srtf,
+    /// Uniform random choice (paper baseline).
+    Random,
+}
+
+impl Policy {
+    /// Every policy, in presentation order (round-trip tested against
+    /// [`Policy::from_str`]).
+    pub const ALL: [Policy; 5] = [
+        Policy::ShardedLrtf,
+        Policy::AffinityLrtf,
+        Policy::Fifo,
+        Policy::Srtf,
+        Policy::Random,
+    ];
+
+    /// Canonical name (matches `Scheduler::name` of the built instance).
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::ShardedLrtf => "sharded-lrtf",
+            Policy::AffinityLrtf => "affinity-lrtf",
+            Policy::Fifo => "fifo",
+            Policy::Srtf => "srtf",
+            Policy::Random => "random",
+        }
     }
+
+    /// Instantiate the scheduler this policy names.
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            Policy::ShardedLrtf => Box::new(ShardedLrtf),
+            Policy::AffinityLrtf => Box::new(AffinityLrtf),
+            Policy::Fifo => Box::new(FifoSched),
+            Policy::Srtf => Box::new(SrtfSched),
+            Policy::Random => Box::new(RandomSched),
+        }
+    }
+}
+
+impl fmt::Display for Policy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // pad() (not write_str) so width/alignment specifiers work in the
+        // figure tables
+        f.pad(self.name())
+    }
+}
+
+impl FromStr for Policy {
+    type Err = HydraError;
+
+    /// The one string->policy shim: accepts every canonical name plus the
+    /// historical `"lrtf"` alias.
+    fn from_str(s: &str) -> Result<Policy, HydraError> {
+        match s {
+            "sharded-lrtf" | "lrtf" => Ok(Policy::ShardedLrtf),
+            "affinity-lrtf" => Ok(Policy::AffinityLrtf),
+            "fifo" => Ok(Policy::Fifo),
+            "srtf" => Ok(Policy::Srtf),
+            "random" => Ok(Policy::Random),
+            other => Err(HydraError::Config(format!(
+                "unknown scheduler {other:?} (expected one of: sharded-lrtf, \
+                 affinity-lrtf, fifo, srtf, random)"
+            ))),
+        }
+    }
+}
+
+/// Construct a policy by name. Legacy shim over [`Policy::from_str`] +
+/// [`Policy::build`] — new code should parse a [`Policy`] and carry the enum.
+pub fn by_name(name: &str) -> Option<Box<dyn Scheduler>> {
+    name.parse::<Policy>().ok().map(Policy::build)
 }
 
 #[cfg(test)]
@@ -309,5 +393,16 @@ mod tests {
     #[test]
     fn by_name_rejects_unknown() {
         assert!(by_name("gurobi").is_none());
+    }
+
+    #[test]
+    fn policy_roundtrips_and_matches_scheduler_names() {
+        for p in Policy::ALL {
+            assert_eq!(p.name().parse::<Policy>().unwrap(), p);
+            assert_eq!(p.to_string(), p.name());
+            assert_eq!(p.build().name(), p.name());
+        }
+        assert_eq!("lrtf".parse::<Policy>().unwrap(), Policy::ShardedLrtf);
+        assert!("gurobi".parse::<Policy>().is_err());
     }
 }

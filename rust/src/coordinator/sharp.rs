@@ -19,7 +19,10 @@
 //! The dispatch hot path is incremental: a binary-heap event queue
 //! (O(log n) push/pop), a ready-set of eligible models, and a parked-set of
 //! idle devices replace the seed engine's linear scans over all devices and
-//! all tasks on every decision. [`QueueKind::LinearScan`] keeps the O(n)
+//! all tasks on every decision. Every engine event additionally streams
+//! through an [`EngineObserver`] ([`SharpEngine::run_with`]): trace
+//! bookkeeping is just one observer impl, and live progress/gantt streaming
+//! for online runs is another. [`QueueKind::LinearScan`] keeps the O(n)
 //! event-selection discipline available as a reference implementation — the
 //! two produce identical schedules (property- and equivalence-tested in
 //! rust/tests) because both pop events in (time, submission-order) order.
@@ -37,6 +40,7 @@ use std::collections::{BTreeSet, BinaryHeap};
 use crate::coordinator::buffer::DoubleBuffer;
 use crate::coordinator::memory::{DeviceLedger, DramPool, Residency};
 use crate::coordinator::metrics::{Interval, IntervalKind, Trace};
+use crate::coordinator::observer::{EngineObserver, NoopObserver, Tee, TraceRecorder};
 use crate::coordinator::sched::{PickContext, Scheduler};
 use crate::coordinator::task::{ModelSnapshot, ModelTask, TaskState};
 use crate::coordinator::unit::{Phase, ShardUnit};
@@ -144,8 +148,12 @@ pub struct EngineOptions {
     pub transfer: TransferModel,
     /// Seed for the engine's RNG stream (Random scheduler etc.).
     pub seed: u64,
-    /// Record per-interval trace entries (disable for very long sims to
-    /// bound memory; aggregates are still collected).
+    /// Record per-interval trace entries into the report
+    /// (`RunReport::trace`). Implemented as an opt-in
+    /// [`crate::coordinator::observer::TraceRecorder`] observer, so turning
+    /// it off removes the bookkeeping from the hot path entirely (disable
+    /// for very long sims to bound memory; scalar aggregates are still
+    /// collected).
     pub record_intervals: bool,
     /// Paper-fidelity mode: spilling moves the *full* shard state (weights +
     /// gradients + optimizer state) instead of weights-only. Hydra's default
@@ -581,11 +589,12 @@ impl<'a> SharpEngine<'a> {
     /// Mark `model` finished at `now` (first transition only) and release
     /// its DRAM-homed parameters — online streams with churn would
     /// otherwise exhaust the pool and reject later submissions.
-    fn finish_job(&mut self, model: usize, now: f64) {
+    fn finish_job(&mut self, model: usize, now: f64, obs: &mut dyn EngineObserver) {
         if self.finish_times[model].is_nan() {
             self.finish_times[model] = now;
             let bytes = self.tasks[model].total_param_bytes();
             self.dram.unhome(bytes);
+            obs.on_job_finished(model, now, self.job_cancelled[model]);
         }
     }
 
@@ -600,8 +609,45 @@ impl<'a> SharpEngine<'a> {
         }
     }
 
-    /// Run to completion; returns the report.
+    /// Run to completion; returns the report. Per-interval trace recording
+    /// honours [`EngineOptions::record_intervals`] by installing a
+    /// [`TraceRecorder`] observer — see [`SharpEngine::run_with`] for the
+    /// underlying observer-threaded loop.
     pub fn run(&mut self) -> Result<RunReport> {
+        self.run_observed(None)
+    }
+
+    /// Run with an optional external observer. This is the one place the
+    /// [`EngineOptions::record_intervals`] semantics live: when set, a
+    /// [`TraceRecorder`] is installed (teed with `obs` if both are present)
+    /// and its intervals become `RunReport::trace.intervals`.
+    pub fn run_observed(
+        &mut self,
+        obs: Option<&mut dyn EngineObserver>,
+    ) -> Result<RunReport> {
+        if !self.options.record_intervals {
+            return match obs {
+                Some(o) => self.run_with(o),
+                None => self.run_with(&mut NoopObserver),
+            };
+        }
+        let mut rec = TraceRecorder::default();
+        let mut report = match obs {
+            Some(o) => self.run_with(&mut Tee(o, &mut rec))?,
+            None => self.run_with(&mut rec)?,
+        };
+        report.trace.intervals = rec.intervals;
+        Ok(report)
+    }
+
+    /// Run to completion, streaming every engine event through `obs`.
+    ///
+    /// The report's `trace.intervals` stays empty on this path — interval
+    /// bookkeeping belongs to the observer (pass a [`TraceRecorder`], or use
+    /// [`SharpEngine::run`] which wires one from the options). Makespan,
+    /// device windows, utilization and the scalar aggregates are always
+    /// maintained engine-side.
+    pub fn run_with(&mut self, obs: &mut dyn EngineObserver) -> Result<RunReport> {
         for d in 0..self.devices.len() {
             self.trace.set_device_window(d, 0.0, f64::INFINITY);
             self.queue.push(0.0, Event::DeviceFree { device: d });
@@ -622,6 +668,7 @@ impl<'a> SharpEngine<'a> {
                 self.queue.push(arrival, Event::JobArrive { model: m });
             } else {
                 self.arrived[m] = true;
+                obs.on_job_arrived(m, &self.tasks[m].name, 0.0);
                 if self.tasks[m].state() == TaskState::Idle {
                     self.ready.insert(m);
                 }
@@ -644,12 +691,14 @@ impl<'a> SharpEngine<'a> {
         while let Some(q) = self.queue.pop() {
             let now = q.time;
             match q.ev {
-                Event::DeviceFree { device } => self.on_device_free(device, now)?,
-                Event::UnitRetire { device, unit } => self.on_unit_retire(device, unit, now)?,
+                Event::DeviceFree { device } => self.on_device_free(device, now, obs)?,
+                Event::UnitRetire { device, unit } => {
+                    self.on_unit_retire(device, unit, now, obs)?
+                }
                 Event::Cluster(i) => self.on_cluster_event(i, now)?,
-                Event::JobArrive { model } => self.on_job_arrive(model, now),
-                Event::JobSubmit(idx) => self.on_job_submit(idx, now)?,
-                Event::JobCancel { model } => self.on_job_cancel(model, now)?,
+                Event::JobArrive { model } => self.on_job_arrive(model, now, obs),
+                Event::JobSubmit(idx) => self.on_job_submit(idx, now, obs)?,
+                Event::JobCancel { model } => self.on_job_cancel(model, now, obs)?,
             }
         }
 
@@ -736,15 +785,23 @@ impl<'a> SharpEngine<'a> {
         self.trace.set_device_window(device, start, now);
     }
 
-    fn on_job_arrive(&mut self, model: usize, now: f64) {
+    fn on_job_arrive(&mut self, model: usize, now: f64, obs: &mut dyn EngineObserver) {
         self.arrived[model] = true;
+        // a job cancelled before its arrival never becomes eligible: no
+        // arrival notification after its on_job_finished(cancelled=true)
         if !self.job_cancelled[model] && self.tasks[model].state() == TaskState::Idle {
+            obs.on_job_arrived(model, &self.tasks[model].name, now);
             self.ready.insert(model);
             self.wake_one(now);
         }
     }
 
-    fn on_job_submit(&mut self, idx: usize, now: f64) -> Result<()> {
+    fn on_job_submit(
+        &mut self,
+        idx: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         let Some(task) = self.pending_submissions[idx].take() else {
             return Ok(());
         };
@@ -767,6 +824,7 @@ impl<'a> SharpEngine<'a> {
             self.queue.push(arrival, Event::JobArrive { model: id });
         } else {
             self.arrived.push(true);
+            obs.on_job_arrived(id, &self.tasks[id].name, now);
             if self.tasks[id].state() == TaskState::Idle {
                 self.ready.insert(id);
                 self.wake_one(now);
@@ -775,7 +833,12 @@ impl<'a> SharpEngine<'a> {
         Ok(())
     }
 
-    fn on_job_cancel(&mut self, model: usize, now: f64) -> Result<()> {
+    fn on_job_cancel(
+        &mut self,
+        model: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         if model >= self.tasks.len() {
             return Err(HydraError::Sched(format!(
                 "cancel of unknown model {model}"
@@ -789,7 +852,7 @@ impl<'a> SharpEngine<'a> {
             TaskState::Idle => {
                 self.ready.remove(&model);
                 self.tasks[model].early_stop();
-                self.finish_job(model, now);
+                self.finish_job(model, now, obs);
             }
             TaskState::Running => {
                 // The claim is either a pre-claimed double-buffer prefetch
@@ -804,7 +867,7 @@ impl<'a> SharpEngine<'a> {
                         }
                         self.tasks[model].unclaim(&u);
                         self.tasks[model].early_stop();
-                        self.finish_job(model, now);
+                        self.finish_job(model, now, obs);
                         revoked = true;
                         break;
                     }
@@ -818,7 +881,12 @@ impl<'a> SharpEngine<'a> {
         Ok(())
     }
 
-    fn on_device_free(&mut self, device: usize, now: f64) -> Result<()> {
+    fn on_device_free(
+        &mut self,
+        device: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         if !self.devices[device].alive || self.devices[device].busy {
             return Ok(());
         }
@@ -840,13 +908,14 @@ impl<'a> SharpEngine<'a> {
                 Some(i) => {
                     let id = eligible[i].id;
                     self.ready.remove(&id);
+                    obs.on_decision(device, id, false, now);
                     Some(self.tasks[id].claim_front())
                 }
                 None => None, // park until a wake-up
             }
         };
         match unit {
-            Some(unit) => self.start_unit(device, unit, now),
+            Some(unit) => self.start_unit(device, unit, now, obs),
             None => {
                 self.parked.insert(device);
                 Ok(())
@@ -855,7 +924,13 @@ impl<'a> SharpEngine<'a> {
     }
 
     /// Promote memory, account transfers/stalls, execute, schedule retire.
-    fn start_unit(&mut self, device: usize, unit: ShardUnit, now: f64) -> Result<()> {
+    fn start_unit(
+        &mut self,
+        device: usize,
+        unit: ShardUnit,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         let task_shard = self.tasks[unit.model].shard(unit.shard).clone();
         let link = self.link(device);
         let mut t = now;
@@ -876,10 +951,13 @@ impl<'a> SharpEngine<'a> {
                     .release(&Residency::ShardParams { model: m, shard: s });
                 let wb = self.devices[device].last_demote_bytes;
                 self.dram.note_demote(wb);
+                if wb > 0 {
+                    obs.on_spill(device, 0, wb, t);
+                }
                 if !self.options.double_buffer && wb > 0 {
                     // synchronous write-back (no overlap without DB)
                     let dt = link.secs(wb);
-                    self.record(device, t, t + dt, unit, IntervalKind::Transfer);
+                    self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
                     t += dt;
                 }
             }
@@ -887,17 +965,22 @@ impl<'a> SharpEngine<'a> {
             let stall = self.devices[device]
                 .buffer
                 .consume(unit.model, unit.shard, t);
+            // like demotions above, spill events carry the time the
+            // transfer starts
+            if promote_bytes > 0 {
+                obs.on_spill(device, promote_bytes, 0, t);
+            }
             let dt = match stall {
                 Some(stall) => {
                     if stall > 0.0 {
-                        self.record(device, t, t + stall, unit, IntervalKind::BufferStall);
+                        self.record(device, t, t + stall, unit, IntervalKind::BufferStall, obs);
                     }
                     stall
                 }
                 None => {
                     let dt = link.secs(promote_bytes);
                     if dt > 0.0 {
-                        self.record(device, t, t + dt, unit, IntervalKind::Transfer);
+                        self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
                     }
                     dt
                 }
@@ -931,7 +1014,7 @@ impl<'a> SharpEngine<'a> {
         if needs_act && !cached {
             let dt = link.secs(task_shard.activation_bytes);
             if dt > 0.0 {
-                self.record(device, t, t + dt, unit, IntervalKind::Transfer);
+                self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
                 t += dt;
             }
         }
@@ -946,12 +1029,12 @@ impl<'a> SharpEngine<'a> {
             / self.devices[device].spec.speed;
         self.devices[device].busy = true;
         self.free_devices -= 1;
-        self.record(device, t, t + dur, unit, IntervalKind::Compute);
+        self.record(device, t, t + dur, unit, IntervalKind::Compute, obs);
         let end = t + dur;
 
         // --- double-buffer prefetch of the *next* unit ----------------------
         if self.options.double_buffer {
-            self.try_stage_prefetch(device, t);
+            self.try_stage_prefetch(device, t, obs);
         }
 
         self.queue.push(end, Event::UnitRetire { device, unit });
@@ -961,7 +1044,7 @@ impl<'a> SharpEngine<'a> {
     /// While `device` computes, pick and claim the next unit for it and
     /// start the prefetch transfer into the buffer zone (§4.6: "the
     /// Scheduler is actually picking shard units for double-buffering").
-    fn try_stage_prefetch(&mut self, device: usize, now: f64) {
+    fn try_stage_prefetch(&mut self, device: usize, now: f64, obs: &mut dyn EngineObserver) {
         if self.devices[device].pending.is_some() || self.devices[device].fail_pending {
             return;
         }
@@ -989,6 +1072,7 @@ impl<'a> SharpEngine<'a> {
         };
         let id = eligible[i].id;
         self.ready.remove(&id);
+        obs.on_decision(device, id, true, now);
         let unit = self.tasks[id].claim_front();
         let bytes = if self.options.full_state_transfers {
             self.tasks[id].shard(unit.shard).param_bytes
@@ -1004,7 +1088,13 @@ impl<'a> SharpEngine<'a> {
         self.devices[device].pending = Some(unit);
     }
 
-    fn on_unit_retire(&mut self, device: usize, unit: ShardUnit, now: f64) -> Result<()> {
+    fn on_unit_retire(
+        &mut self,
+        device: usize,
+        unit: ShardUnit,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         self.units_executed += 1;
         self.devices[device].busy = false;
         self.free_devices += 1;
@@ -1013,6 +1103,7 @@ impl<'a> SharpEngine<'a> {
             .release(&Residency::Activation { model: unit.model });
         self.tasks[unit.model].retire(&unit);
         self.backend.on_unit_retired(&self.tasks[unit.model], &unit);
+        obs.on_unit_retired(device, &unit, now);
 
         // epoch boundary: last unit of the epoch just retired (training:
         // bwd of shard 0 on the final mini-batch; inference: fwd of the
@@ -1039,7 +1130,7 @@ impl<'a> SharpEngine<'a> {
                 self.ready.insert(unit.model);
             }
             TaskState::Done => {
-                self.finish_job(unit.model, now);
+                self.finish_job(unit.model, now, obs);
             }
             TaskState::Running => {}
         }
@@ -1057,7 +1148,17 @@ impl<'a> SharpEngine<'a> {
         Ok(())
     }
 
-    fn record(&mut self, device: usize, start: f64, end: f64, unit: ShardUnit, kind: IntervalKind) {
+    /// Account an interval: scalar aggregates + makespan stay engine-side
+    /// (they feed the report); per-interval bookkeeping is the observer's.
+    fn record(
+        &mut self,
+        device: usize,
+        start: f64,
+        end: f64,
+        unit: ShardUnit,
+        kind: IntervalKind,
+        obs: &mut dyn EngineObserver,
+    ) {
         if end > self.trace.makespan {
             self.trace.makespan = end;
         }
@@ -1066,17 +1167,15 @@ impl<'a> SharpEngine<'a> {
             IntervalKind::Transfer => self.agg_transfer += end - start,
             IntervalKind::BufferStall => self.agg_stall += end - start,
         }
-        if self.options.record_intervals {
-            self.trace.record(Interval {
-                device,
-                start,
-                end,
-                model: unit.model,
-                shard: unit.shard,
-                phase: unit.phase,
-                unit_seq: unit.seq_idx,
-                kind,
-            });
-        }
+        obs.on_interval(&Interval {
+            device,
+            start,
+            end,
+            model: unit.model,
+            shard: unit.shard,
+            phase: unit.phase,
+            unit_seq: unit.seq_idx,
+            kind,
+        });
     }
 }

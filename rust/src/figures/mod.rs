@@ -6,13 +6,12 @@
 use std::time::Duration;
 
 use crate::baselines;
-use crate::coordinator::sched::{self, bnb};
-use crate::coordinator::sharp::{
-    EngineOptions, ParallelMode, RunReport, SharpEngine, TransferModel,
-};
+use crate::coordinator::sched::bnb;
+use crate::coordinator::sharp::{EngineOptions, ParallelMode, RunReport, TransferModel};
 use crate::coordinator::task::{ModelTask, ShardDesc};
+use crate::coordinator::Cluster;
 use crate::error::Result;
-use crate::exec::SimBackend;
+use crate::session::{Backend, Policy, Session};
 use crate::sim::{bert_grid, build_tasks, uniform_grid, vit_grid, GpuSpec};
 use crate::util::rng::Rng;
 
@@ -58,16 +57,35 @@ fn paper_policy() -> crate::coordinator::partitioner::PartitionPolicy {
     }
 }
 
-/// Run the Hydra engine on a task set with the simulated backend.
+/// Drive a pre-built task set through a simulated [`Session`] — the single
+/// engine-construction path every figure/table uses.
+fn sim_run(
+    tasks: Vec<ModelTask>,
+    cluster: Cluster,
+    policy: Policy,
+    options: EngineOptions,
+) -> Result<RunReport> {
+    let mut session = Session::builder(cluster)
+        .backend(Backend::sim())
+        .policy(policy)
+        .options(options)
+        .build()?;
+    for t in tasks {
+        session.submit(t)?;
+    }
+    Ok(session.run()?.run)
+}
+
+/// Run the Hydra engine on a task set with the simulated backend at the
+/// paper's buffer/transfer settings. A thin [`Session`] wrapper.
 pub fn run_hydra(
     tasks: Vec<ModelTask>,
     n_devices: usize,
     device_mem: u64,
     mode: ParallelMode,
     double_buffer: bool,
-    scheduler: &str,
+    policy: Policy,
 ) -> Result<RunReport> {
-    let mut backend = SimBackend::deterministic();
     let opts = EngineOptions {
         mode,
         double_buffer,
@@ -76,15 +94,7 @@ pub fn run_hydra(
         record_intervals: false,
         ..Default::default()
     };
-    let mut engine = SharpEngine::new(
-        tasks,
-        &vec![device_mem; n_devices],
-        DRAM,
-        sched::by_name(scheduler).expect("scheduler"),
-        &mut backend,
-        opts,
-    )?;
-    engine.run()
+    sim_run(tasks, Cluster::uniform(n_devices, device_mem, DRAM), policy, opts)
 }
 
 fn hours(secs: f64) -> String {
@@ -152,12 +162,8 @@ pub fn fig7(bnb_budget: Duration) -> Result<FigureOutput> {
     let mut csv = String::from("setting,models,devices,lrtf,random,milp\n");
     for &hetero in &[false, true] {
         for &(n_models, devices) in &[(4usize, 4usize), (8, 8), (16, 8)] {
-            let mk = |sched: &str, seed: u64| -> Result<f64> {
-                let mut tasks = fig7_tasks(hetero, n_models, 7);
-                for t in tasks.iter_mut() {
-                    *t = t.clone();
-                }
-                let mut backend = SimBackend::deterministic();
+            let mk = |policy: Policy, seed: u64| -> Result<f64> {
+                let tasks = fig7_tasks(hetero, n_models, 7);
                 let opts = EngineOptions {
                     transfer: TransferModel::zero_cost(),
                     double_buffer: false,
@@ -165,20 +171,14 @@ pub fn fig7(bnb_budget: Duration) -> Result<FigureOutput> {
                     seed,
                     ..Default::default()
                 };
-                let mut engine = SharpEngine::new(
-                    tasks,
-                    &vec![16 << 30; devices],
-                    DRAM,
-                    sched::by_name(sched).unwrap(),
-                    &mut backend,
-                    opts,
-                )?;
-                Ok(engine.run()?.makespan)
+                let cluster = Cluster::uniform(devices, 16 << 30, DRAM);
+                Ok(sim_run(tasks, cluster, policy, opts)?.makespan)
             };
-            let lrtf = mk("sharded-lrtf", 0)?;
+            let lrtf = mk(Policy::ShardedLrtf, 0)?;
             // random: average of 3 seeded runs (paper: 3 runs, mean)
-            let random = (mk("random", 1)? + mk("random", 2)? + mk("random", 3)?) / 3.0;
-            let fifo = mk("fifo", 0)?;
+            let random =
+                (mk(Policy::Random, 1)? + mk(Policy::Random, 2)? + mk(Policy::Random, 3)?) / 3.0;
+            let fifo = mk(Policy::Fifo, 0)?;
             let tasks = fig7_tasks(hetero, n_models, 7);
             let problem = tasks_to_problem(&tasks, devices);
             let milp = bnb::solve(&problem, bnb_budget, Some(fifo)).makespan;
@@ -260,7 +260,7 @@ pub fn fig8_rows(kind: &str) -> Result<Vec<(String, f64, f64)>> {
         gpu.mem_bytes,
         ParallelMode::Sharp,
         true,
-        "sharded-lrtf",
+        Policy::ShardedLrtf,
     )?;
     rows.push(("hydra".into(), hydra.makespan, hydra.utilization));
     Ok(rows)
@@ -334,7 +334,14 @@ pub fn fig9a() -> Result<FigureOutput> {
         let grid = uniform_grid(n, 250_000_000, 8, 1, 24);
         let tasks = build_tasks(&grid, &gpu, paper_policy())?;
         let serial = serial_reference(&tasks);
-        let r = run_hydra(tasks, 8, gpu.mem_bytes, ParallelMode::Sharp, true, "sharded-lrtf")?;
+        let r = run_hydra(
+            tasks,
+            8,
+            gpu.mem_bytes,
+            ParallelMode::Sharp,
+            true,
+            Policy::ShardedLrtf,
+        )?;
         let speedup = serial / r.makespan;
         lines.push(format!(
             "{:<8} {:>9} {:>8.2}x {:>6.1}%",
@@ -371,7 +378,14 @@ pub fn fig9b() -> Result<FigureOutput> {
     let serial = serial_reference(&base_tasks);
     for d in 1..=8usize {
         let tasks = build_tasks(&grid, &gpu, paper_policy())?;
-        let r = run_hydra(tasks, d, gpu.mem_bytes, ParallelMode::Sharp, true, "sharded-lrtf")?;
+        let r = run_hydra(
+            tasks,
+            d,
+            gpu.mem_bytes,
+            ParallelMode::Sharp,
+            true,
+            Policy::ShardedLrtf,
+        )?;
         let speedup = serial / r.makespan;
         lines.push(format!(
             "{:<8} {:>9} {:>8.2}x {:>6.1}%",
@@ -424,7 +438,7 @@ pub fn fig10() -> Result<FigureOutput> {
             gpu.mem_bytes,
             ParallelMode::Sharp,
             true,
-            "sharded-lrtf",
+            Policy::ShardedLrtf,
         )?;
         for (name, t) in [
             ("model-parallel", mp.makespan),
@@ -464,7 +478,6 @@ pub fn table3() -> Result<FigureOutput> {
     let gpu = GpuSpec::rtx2080ti();
     let grid = uniform_grid(16, 1_000_000_000, 8, 1, 6);
     let mk = |mode, db, full_state| -> Result<f64> {
-        let mut backend = SimBackend::deterministic();
         let opts = EngineOptions {
             mode,
             double_buffer: db,
@@ -474,15 +487,9 @@ pub fn table3() -> Result<FigureOutput> {
             full_state_transfers: full_state,
             ..Default::default()
         };
-        let mut engine = SharpEngine::new(
-            build_tasks(&grid, &gpu, paper_policy())?,
-            &vec![gpu.mem_bytes; 8],
-            DRAM,
-            sched::by_name("sharded-lrtf").unwrap(),
-            &mut backend,
-            opts,
-        )?;
-        Ok(engine.run()?.makespan)
+        let tasks = build_tasks(&grid, &gpu, paper_policy())?;
+        let cluster = Cluster::uniform(8, gpu.mem_bytes, DRAM);
+        Ok(sim_run(tasks, cluster, Policy::ShardedLrtf, opts)?.makespan)
     };
     let full = mk(ParallelMode::Sharp, true, false)?;
     let no_db = mk(ParallelMode::Sharp, false, false)?;
@@ -599,20 +606,16 @@ pub fn fig6() -> Result<FigureOutput> {
             })
             .collect()
     };
-    let mut backend = SimBackend::deterministic();
     let opts = EngineOptions {
         transfer: TransferModel::pcie_gen3(),
         ..Default::default()
     };
-    let mut engine = SharpEngine::new(
+    let r = sim_run(
         mk_tasks(),
-        &vec![11 << 30; 2],
-        DRAM,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
+        Cluster::uniform(2, 11 << 30, DRAM),
+        Policy::ShardedLrtf,
         opts,
     )?;
-    let r = engine.run()?;
 
     let mp = baselines::model_parallel(
         &mk_tasks(),
@@ -655,19 +658,19 @@ pub fn ext_sched() -> Result<FigureOutput> {
     let mut lines = vec![format!("{:<16} {:>10} {:>9} {:>7}", "scheduler", "runtime", "vs lrtf", "util")];
     let mut csv = String::from("scheduler,runtime_h,vs_lrtf,utilization\n");
     let mut base = None;
-    for sched_name in ["sharded-lrtf", "affinity-lrtf", "fifo", "srtf", "random"] {
+    for policy in Policy::ALL {
         let tasks = build_tasks(&grid, &gpu, paper_policy())?;
-        let r = run_hydra(tasks, 8, gpu.mem_bytes, ParallelMode::Sharp, true, sched_name)?;
+        let r = run_hydra(tasks, 8, gpu.mem_bytes, ParallelMode::Sharp, true, policy)?;
         let b = *base.get_or_insert(r.makespan);
         lines.push(format!(
             "{:<16} {:>10} {:>9.3} {:>6.1}%",
-            sched_name,
+            policy,
             hours(r.makespan),
             r.makespan / b,
             100.0 * r.utilization
         ));
         csv.push_str(&format!(
-            "{sched_name},{},{},{}\n",
+            "{policy},{},{},{}\n",
             r.makespan / 3600.0,
             r.makespan / b,
             r.utilization
@@ -700,22 +703,18 @@ pub fn ext_buffer() -> Result<FigureOutput> {
             ..Default::default()
         };
         let tasks = build_tasks(&grid, &gpu, policy)?;
-        let mut backend = SimBackend::deterministic();
         let opts = EngineOptions {
             buffer_frac: frac,
             transfer: TransferModel::pcie_gen3(),
             record_intervals: false,
             ..Default::default()
         };
-        let mut engine = SharpEngine::new(
+        let r = sim_run(
             tasks,
-            &vec![gpu.mem_bytes; 8],
-            DRAM,
-            sched::by_name("sharded-lrtf").unwrap(),
-            &mut backend,
+            Cluster::uniform(8, gpu.mem_bytes, DRAM),
+            Policy::ShardedLrtf,
             opts,
         )?;
-        let r = engine.run()?;
         lines.push(format!(
             "{:<12} {:>10} {:>8.1}% {:>10.3} {:>10.3}",
             format!("{:.0}%", frac * 100.0),
@@ -751,21 +750,17 @@ pub fn ext_online() -> Result<FigureOutput> {
     let pool = crate::sim::mixed_pool(4, 4);
     let stream = crate::sim::poisson_mixed_tenants(12, 6.0, 7, 3);
     let (tasks, specs) = crate::sim::build_tasks_pool(&stream, &pool, paper_policy())?;
-    let mut backend = SimBackend::deterministic();
     let opts = EngineOptions {
         buffer_frac: PAPER_BUFFER_FRAC,
         record_intervals: false,
         ..Default::default()
     };
-    let mut engine = SharpEngine::with_devices(
+    let r = sim_run(
         tasks,
-        &specs,
-        DRAM,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
+        Cluster::heterogeneous(specs, DRAM),
+        Policy::ShardedLrtf,
         opts,
     )?;
-    let r = engine.run()?;
 
     let mut lines = vec![format!(
         "{:<26} {:>10} {:>10} {:>10} {:>7}",

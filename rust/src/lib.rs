@@ -13,8 +13,9 @@
 //! - **L2/L1 (python/, build-time only)**: JAX shard functions calling
 //!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //!
-//! Start with [`coordinator::ModelOrchestrator`] (mirrors the paper's
-//! Figure 4 API) or the `hydra` binary.
+//! Start with [`session::Session`] — the one typed front door over both
+//! backends (`Session::builder(cluster).backend(..).policy(..)
+//! .submit(..)?.run()`) — or the `hydra` binary.
 
 pub mod baselines;
 pub mod config;
@@ -23,9 +24,14 @@ pub mod error;
 pub mod exec;
 pub mod figures;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod tensor;
 pub mod train;
 pub mod util;
 
+pub use coordinator::observer::{EngineObserver, NoopObserver, TraceRecorder};
+pub use coordinator::sched::Policy;
+pub use coordinator::Cluster;
 pub use error::{HydraError, Result};
+pub use session::{Backend, JobHandle, JobSpec, Session, SessionBuilder, SessionReport};

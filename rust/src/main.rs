@@ -1,31 +1,35 @@
 //! `hydra` — CLI launcher for the Hydra multi-model training system.
 //!
-//! Subcommands:
+//! Every run-producing subcommand drives the one front door,
+//! [`hydra::session::Session`]:
 //!   train     — real multi-model training over the PJRT runtime
+//!   run       — declarative workload spec (JSON) over the real runtime
 //!   figure    — regenerate a paper figure/table (or `all`)
 //!   simulate  — ad-hoc paper-scale simulation with chosen knobs, including
 //!               the online Poisson-arrival / heterogeneous-pool scenario
+//!               (`--progress` streams job events live via EngineObserver)
 //!   partition — show Algorithm-1 partitioning for a config
 //!   inspect   — list artifact configs and their executables
 
 use std::time::Duration;
 
 use hydra::coordinator::partitioner::PartitionPolicy;
-use hydra::coordinator::sched;
 use hydra::coordinator::sharp::{
-    EngineOptions, ParallelMode, QueueKind, SharpEngine, TransferModel,
+    EngineOptions, ParallelMode, QueueKind, TransferModel,
 };
-use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
-use hydra::exec::SimBackend;
 use hydra::figures;
 use hydra::runtime::Manifest;
+use hydra::session::{Backend, Policy, Session};
 use hydra::sim::{
-    build_tasks, build_tasks_pool, poisson_mixed_tenants, uniform_grid, GpuSpec,
+    build_tasks, build_tasks_pool, parse_pool, poisson_mixed_tenants, uniform_grid,
+    GpuSpec,
 };
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
 use hydra::util::fmt_bytes;
+use hydra::EngineObserver;
 
 type CliResult = Result<(), Box<dyn std::error::Error>>;
 
@@ -46,7 +50,7 @@ USAGE:
                 [--no-double-buffer] [--sequential] [--scan-queue]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
-                [--scheduler sharded-lrtf] [--gantt]
+                [--scheduler sharded-lrtf] [--progress] [--gantt]
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
                 [--device-mem-mib 2]
   hydra inspect [--manifest artifacts]
@@ -60,6 +64,7 @@ fn main() {
         "help",
         "online",
         "scan-queue",
+        "progress",
     ];
     let args = match Args::from_env(&flags) {
         Ok(a) => a,
@@ -108,6 +113,25 @@ fn engine_options(args: &Args) -> EngineOptions {
     }
 }
 
+fn policy_arg(args: &Args) -> Result<Policy, hydra::HydraError> {
+    args.opt_or("scheduler", "sharded-lrtf").parse()
+}
+
+/// Streams job lifecycle events while the engine runs — the
+/// `simulate --online --progress` demo of the [`EngineObserver`] API.
+struct ProgressObserver;
+
+impl EngineObserver for ProgressObserver {
+    fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
+        println!("  [{now:>9.1}s] + job {model} ({name}) arrived");
+    }
+
+    fn on_job_finished(&mut self, model: usize, now: f64, cancelled: bool) {
+        let how = if cancelled { "cancelled" } else { "finished" };
+        println!("  [{now:>9.1}s] - job {model} {how}");
+    }
+}
+
 fn cmd_train(args: &Args) -> CliResult {
     let manifest = args.opt_or("manifest", "artifacts");
     let config = args.opt_or("config", "tiny-lm-b8");
@@ -119,13 +143,16 @@ fn cmd_train(args: &Args) -> CliResult {
     let lr = args.opt_f64("lr", 0.05)? as f32;
     let opt = OptKind::parse(&args.opt_or("opt", "sgd"))?;
 
-    let mut orch = ModelOrchestrator::new(manifest);
-    orch.scheduler = args.opt_or("scheduler", "sharded-lrtf");
-    orch.engine_options = engine_options(args);
+    let cluster = Cluster::uniform(devices, (mem_mib as u64) << 20, 32 << 30);
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest })
+        .policy(policy_arg(args)?)
+        .options(engine_options(args))
+        .build()?;
     for i in 0..n_models {
         // a small hyperparameter grid around the requested lr
         let lr_i = lr * (1.0 + 0.5 * i as f32);
-        orch.add_task(RealModelSpec {
+        session.submit(RealModelSpec {
             name: format!("{config}-m{i}-lr{lr_i:.4}"),
             config: config.clone(),
             lr: lr_i,
@@ -135,15 +162,14 @@ fn cmd_train(args: &Args) -> CliResult {
             seed: 1000 + i as u64,
             inference: false,
             arrival: 0.0,
-        });
+        })?;
     }
-    let cluster = Cluster::uniform(devices, (mem_mib as u64) << 20, 32 << 30);
     println!(
         "training {n_models} x {config} on {devices} virtual devices ({} each)...",
         fmt_bytes((mem_mib as u64) << 20)
     );
     let t0 = std::time::Instant::now();
-    let report = orch.train_models(&cluster)?;
+    let report = session.run()?;
     println!(
         "done in {:.1}s wallclock | virtual makespan {:.2}s | {} units | util {:.1}% | sched {}",
         t0.elapsed().as_secs_f64(),
@@ -174,15 +200,15 @@ fn cmd_run(args: &Args) -> CliResult {
         .ok_or("run requires --spec <file.json>")?;
     let manifest = args.opt_or("manifest", "artifacts");
     let spec = hydra::config::WorkloadSpec::load(spec_path)?;
-    let orch = spec.orchestrator(&manifest);
+    let session = spec.session(&manifest)?;
     println!(
         "running spec {spec_path}: {} tasks on {} devices ({} scheduler)",
-        orch.n_tasks(),
+        session.n_jobs(),
         spec.cluster.n_devices(),
-        orch.scheduler
+        spec.policy
     );
     let t0 = std::time::Instant::now();
-    let report = orch.train_models(&spec.cluster)?;
+    let report = session.run()?;
     println!(
         "done in {:.1}s wallclock | makespan {:.2}s | {} units | util {:.1}%",
         t0.elapsed().as_secs_f64(),
@@ -231,29 +257,6 @@ fn cmd_figure(args: &Args) -> CliResult {
     Ok(())
 }
 
-/// Parse a pool string like `a4000:4,a6000:2` into GPU specs.
-fn parse_pool(s: &str) -> Result<Vec<GpuSpec>, String> {
-    let mut pool = Vec::new();
-    for part in s.split(',') {
-        let (class, count) = match part.split_once(':') {
-            Some((c, n)) => {
-                let n: usize = n
-                    .parse()
-                    .map_err(|_| format!("bad device count in {part:?}"))?;
-                (c, n)
-            }
-            None => (part, 1),
-        };
-        let gpu = GpuSpec::by_name(class)
-            .ok_or_else(|| format!("unknown GPU class {class:?} in pool"))?;
-        pool.extend(std::iter::repeat(gpu).take(count));
-    }
-    if pool.is_empty() {
-        return Err("empty pool".into());
-    }
-    Ok(pool)
-}
-
 fn cmd_simulate(args: &Args) -> CliResult {
     if args.flag("online") {
         return cmd_simulate_online(args);
@@ -262,7 +265,7 @@ fn cmd_simulate(args: &Args) -> CliResult {
     let params_m = args.opt_usize("params-m", 1000)?;
     let devices = args.opt_usize("devices", 8)?;
     let mbs = args.opt_usize("minibatches", 6)? as u32;
-    let sched = args.opt_or("scheduler", "sharded-lrtf");
+    let policy = policy_arg(args)?;
 
     let gpu = GpuSpec::rtx2080ti();
     let grid = uniform_grid(models, (params_m as u64) * 1_000_000, 8, 1, mbs);
@@ -279,7 +282,7 @@ fn cmd_simulate(args: &Args) -> CliResult {
         gpu.mem_bytes,
         mode,
         !args.flag("no-double-buffer"),
-        &sched,
+        policy,
     )?;
     println!("{models} x {params_m}M models ({shards} shards each) on {devices} simulated 2080Ti:");
     println!(
@@ -301,7 +304,6 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
     let rate = args.opt_f64("rate", 6.0)?;
     let seed = args.opt_usize("seed", 7)? as u64;
     let mbs = args.opt_usize("minibatches", 3)? as u32;
-    let sched_name = args.opt_or("scheduler", "sharded-lrtf");
     let pool = parse_pool(&args.opt_or("pool", "a4000:4,a6000:4"))?;
 
     let stream = poisson_mixed_tenants(jobs, rate, seed, mbs);
@@ -310,7 +312,7 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         &pool,
         PartitionPolicy { buffer_frac: 0.30, ..Default::default() },
     )?;
-    let mut backend = SimBackend::deterministic();
+    let n_devices = specs.len();
     let opts = EngineOptions {
         buffer_frac: 0.30,
         queue: if args.flag("scan-queue") {
@@ -320,15 +322,24 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         },
         ..Default::default()
     };
-    let scheduler =
-        sched::by_name(&sched_name).ok_or_else(|| format!("unknown scheduler {sched_name:?}"))?;
-    let mut engine =
-        SharpEngine::with_devices(tasks, &specs, 500 << 30, scheduler, &mut backend, opts)?;
-    let r = engine.run()?;
+    let mut session = Session::builder(Cluster::heterogeneous(specs, 500 << 30))
+        .backend(Backend::sim())
+        .policy(policy_arg(args)?)
+        .options(opts)
+        .build()?;
+    for t in tasks {
+        session.submit(t)?;
+    }
+    let report = if args.flag("progress") {
+        println!("live job stream:");
+        session.run_with(&mut ProgressObserver)?
+    } else {
+        session.run()?
+    };
+    let r = report.run;
 
     println!(
-        "{jobs} tenant jobs (Poisson, {rate}/h) over {} heterogeneous devices:",
-        specs.len()
+        "{jobs} tenant jobs (Poisson, {rate}/h) over {n_devices} heterogeneous devices:"
     );
     println!(
         "  makespan {:.2}h | utilization {:.1}% | {} units executed",

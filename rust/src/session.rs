@@ -1,0 +1,761 @@
+//! The one front door to Hydra: a typed [`Session`] builder that unifies
+//! the simulated and real execution backends, typed scheduler policies, and
+//! streaming observation of a run.
+//!
+//! Everything the crate can do — paper-scale simulation, real PJRT
+//! training, online multi-tenant streams over heterogeneous pools,
+//! elasticity/fault injection — is expressed as one pipeline:
+//!
+//! ```text
+//! Session::builder(cluster)        // hardware: Cluster (uniform or mixed)
+//!     .backend(Backend::..)        // Sim { noise, seed } | Real { manifest } | Custom(..)
+//!     .policy(Policy::..)          // typed scheduler enum (FromStr for CLIs)
+//!     .options(EngineOptions::..)  // SHARP knobs
+//!     .build()?                    // validates the cluster
+//!     .submit(spec)? -> JobHandle  // pre-partitioned ModelTask or RealModelSpec
+//!     .run()? / .run_with(&mut impl EngineObserver)?
+//! ```
+//!
+//! [`JobHandle`]s subsume the raw `JobEvent::Submit`/`Cancel` wiring:
+//! [`Session::submit_at`] schedules a mid-run submission, bringing online
+//! job streams to the real backend too, [`Session::cancel_at`] schedules a
+//! tenant cancellation, and [`SessionReport::job`] looks up the per-job
+//! outcome after the run. The deprecated
+//! [`crate::coordinator::ModelOrchestrator`] delegates here.
+
+use std::fmt;
+
+use crate::coordinator::observer::EngineObserver;
+use crate::coordinator::partitioner::PartitionPolicy;
+use crate::coordinator::sharp::{
+    ClusterEvent, EngineOptions, JobEvent, JobStat, RunReport, SharpEngine,
+};
+use crate::coordinator::task::ModelTask;
+use crate::coordinator::Cluster;
+use crate::error::{HydraError, Result};
+use crate::exec::real::{MedianRule, RealBackend, RealModelSpec};
+use crate::exec::{ExecutionBackend, SimBackend};
+
+pub use crate::coordinator::sched::Policy;
+
+/// Which execution substrate a [`Session`] drives. The engine's scheduling,
+/// spilling and buffering decisions are identical across backends — only
+/// where unit durations come from differs.
+pub enum Backend {
+    /// Discrete-event cost model ([`SimBackend`]): unit duration = the
+    /// `ShardDesc` estimate, optionally perturbed by `noise` (0.0 =
+    /// deterministic) from a stream seeded with `seed`. Takes
+    /// pre-partitioned [`ModelTask`] submissions.
+    Sim {
+        /// Relative noise amplitude (0.05 = ±5% per unit).
+        noise: f64,
+        /// Seed of the backend's noise stream.
+        seed: u64,
+    },
+    /// Real PJRT execution ([`RealBackend`]): pilot runs + Algorithm-1
+    /// partitioning against the cluster's smallest device, then every shard
+    /// unit executes its AOT HLO. Takes [`RealModelSpec`] submissions
+    /// naming configs in the artifact manifest at `manifest`.
+    Real {
+        /// Directory of the artifact manifest (`artifacts/` by default).
+        manifest: String,
+    },
+    /// A caller-provided backend (scripted tests, custom cost models).
+    /// Takes pre-partitioned [`ModelTask`] submissions like `Sim`.
+    Custom(Box<dyn ExecutionBackend>),
+}
+
+impl Backend {
+    /// The deterministic simulation backend (no noise, seed 0) — what the
+    /// figure/bench paths use.
+    pub fn sim() -> Backend {
+        Backend::Sim { noise: 0.0, seed: 0 }
+    }
+}
+
+impl fmt::Debug for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Backend::Sim { noise, seed } => {
+                write!(f, "Sim {{ noise: {noise}, seed: {seed} }}")
+            }
+            Backend::Real { manifest } => write!(f, "Real {{ manifest: {manifest:?} }}"),
+            Backend::Custom(_) => f.write_str("Custom(..)"),
+        }
+    }
+}
+
+/// One job submission: either a pre-partitioned task (sim/custom backends)
+/// or a manifest-config spec the real backend pilots and partitions itself.
+/// [`Session::submit`] accepts both via `Into<JobSpec>`.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    /// A pre-partitioned model task (see [`crate::sim::build_tasks`] and
+    /// friends for paper-scale builders). Its `id` is reassigned by the
+    /// session; its arrival time is honoured.
+    Task(ModelTask),
+    /// A real-backend training/inference spec naming an artifact config.
+    Model(RealModelSpec),
+}
+
+impl From<ModelTask> for JobSpec {
+    fn from(t: ModelTask) -> JobSpec {
+        JobSpec::Task(t)
+    }
+}
+
+impl From<RealModelSpec> for JobSpec {
+    fn from(s: RealModelSpec) -> JobSpec {
+        JobSpec::Model(s)
+    }
+}
+
+impl JobSpec {
+    fn name(&self) -> &str {
+        match self {
+            JobSpec::Task(t) => &t.name,
+            JobSpec::Model(s) => &s.name,
+        }
+    }
+}
+
+/// Handle to a submitted job: cancel it ([`Session::cancel_at`]) and look
+/// up its outcome after the run ([`SessionReport::job`],
+/// [`SessionReport::losses_for`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobHandle(usize);
+
+impl JobHandle {
+    /// Submission index within the session (not necessarily the engine's
+    /// model id — mid-run submissions are renumbered into arrival order).
+    pub fn index(self) -> usize {
+        self.0
+    }
+}
+
+/// Builder for a [`Session`]; start with [`Session::builder`].
+#[derive(Debug)]
+pub struct SessionBuilder {
+    cluster: Cluster,
+    backend: Backend,
+    policy: Policy,
+    options: EngineOptions,
+    partition_policy: PartitionPolicy,
+    early_stop_median_after: Option<u32>,
+}
+
+impl SessionBuilder {
+    /// Select the execution backend (default: deterministic sim).
+    pub fn backend(mut self, backend: Backend) -> SessionBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// Select the scheduling policy (default: [`Policy::ShardedLrtf`]).
+    pub fn policy(mut self, policy: Policy) -> SessionBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the SHARP engine options (mode, double-buffering, transfer
+    /// model, event-queue discipline, ...).
+    pub fn options(mut self, options: EngineOptions) -> SessionBuilder {
+        self.options = options;
+        self
+    }
+
+    /// Set the Algorithm-1 partitioning knobs (real backend only; sim
+    /// submissions arrive pre-partitioned).
+    pub fn partition_policy(mut self, policy: PartitionPolicy) -> SessionBuilder {
+        self.partition_policy = policy;
+        self
+    }
+
+    /// Enable AutoML-style median early stopping after `min_epochs`
+    /// (real backend, §4.7.2).
+    pub fn early_stop_median_after(mut self, min_epochs: u32) -> SessionBuilder {
+        self.early_stop_median_after = Some(min_epochs);
+        self
+    }
+
+    /// Validate the cluster and produce the [`Session`].
+    pub fn build(self) -> Result<Session> {
+        self.cluster.validate()?;
+        Ok(Session {
+            cluster: self.cluster,
+            backend: self.backend,
+            policy: self.policy,
+            options: self.options,
+            partition_policy: self.partition_policy,
+            early_stop_median_after: self.early_stop_median_after,
+            jobs: Vec::new(),
+            cancels: Vec::new(),
+            cluster_events: Vec::new(),
+        })
+    }
+}
+
+struct Job {
+    spec: JobSpec,
+    /// `None` = known at construction (its own arrival time still gates
+    /// eligibility); `Some(t)` = submitted to the engine mid-run at `t`.
+    submit_at: Option<f64>,
+}
+
+/// A configured run: submit jobs, then [`Session::run`] (or
+/// [`Session::run_with`] to stream engine events through an observer).
+///
+/// ```
+/// use hydra::coordinator::task::{ModelTask, ShardDesc};
+/// use hydra::coordinator::Cluster;
+/// use hydra::session::{Backend, Policy, Session};
+///
+/// # fn main() -> hydra::Result<()> {
+/// let shard = ShardDesc {
+///     param_bytes: 1 << 20,
+///     fwd_transfer_bytes: 1 << 20,
+///     bwd_transfer_bytes: 1 << 20,
+///     activation_bytes: 1 << 10,
+///     fwd_cost: 1.0,
+///     bwd_cost: 2.0,
+///     n_layers: 1,
+/// };
+/// let mut session = Session::builder(Cluster::uniform(2, 1 << 30, 8 << 30))
+///     .backend(Backend::Sim { noise: 0.0, seed: 0 })
+///     .policy(Policy::ShardedLrtf)
+///     .build()?;
+/// let job = session.submit(ModelTask::new(0, "demo", "sim", vec![shard], 2, 1, 1e-3))?;
+/// let report = session.run()?;
+/// // 1 shard x 2 mini-batches x (fwd + bwd) = 4 units
+/// assert_eq!(report.job(job).unwrap().units_executed, 4);
+/// assert!(report.run.makespan > 0.0);
+/// # Ok(())
+/// # }
+/// ```
+pub struct Session {
+    cluster: Cluster,
+    backend: Backend,
+    policy: Policy,
+    options: EngineOptions,
+    partition_policy: PartitionPolicy,
+    early_stop_median_after: Option<u32>,
+    jobs: Vec<Job>,
+    /// (job index, virtual time) cancellations.
+    cancels: Vec<(usize, f64)>,
+    cluster_events: Vec<ClusterEvent>,
+}
+
+impl Session {
+    /// Start building a session over `cluster`.
+    pub fn builder(cluster: Cluster) -> SessionBuilder {
+        SessionBuilder {
+            cluster,
+            backend: Backend::sim(),
+            policy: Policy::default(),
+            options: EngineOptions::default(),
+            partition_policy: PartitionPolicy::default(),
+            early_stop_median_after: None,
+        }
+    }
+
+    /// Submit a job known up front. Its arrival time (if any) still gates
+    /// when it becomes eligible — this is the batch *and* the
+    /// arrivals-known-in-advance online setting.
+    pub fn submit(&mut self, spec: impl Into<JobSpec>) -> Result<JobHandle> {
+        self.push_job(spec.into(), None)
+    }
+
+    /// Submit a job the engine first learns about at virtual `time` — a
+    /// tenant showing up mid-run. Equivalent to the engine-level
+    /// `JobEvent::Submit`, with ids managed for you.
+    pub fn submit_at(&mut self, spec: impl Into<JobSpec>, time: f64) -> Result<JobHandle> {
+        if !time.is_finite() || time < 0.0 {
+            return Err(HydraError::Config(format!("bad submission time {time}")));
+        }
+        self.push_job(spec.into(), Some(time))
+    }
+
+    fn push_job(&mut self, spec: JobSpec, submit_at: Option<f64>) -> Result<JobHandle> {
+        match (&self.backend, &spec) {
+            (Backend::Real { .. }, JobSpec::Task(_)) => {
+                return Err(HydraError::Config(format!(
+                    "job {:?}: the real backend takes RealModelSpec submissions \
+                     (pre-partitioned ModelTasks carry no artifact config)",
+                    spec.name()
+                )));
+            }
+            (Backend::Sim { .. } | Backend::Custom(_), JobSpec::Model(_)) => {
+                return Err(HydraError::Config(format!(
+                    "job {:?}: a RealModelSpec needs Backend::Real {{ manifest }}; \
+                     sim/custom backends take pre-partitioned ModelTasks",
+                    spec.name()
+                )));
+            }
+            _ => {}
+        }
+        let handle = JobHandle(self.jobs.len());
+        self.jobs.push(Job { spec, submit_at });
+        Ok(handle)
+    }
+
+    /// Schedule a tenant cancellation of `job` at virtual `time`.
+    /// Unit-granular and idempotent: an in-flight unit completes, the rest
+    /// drop; cancelling a finished job is a no-op.
+    pub fn cancel_at(&mut self, job: JobHandle, time: f64) -> Result<()> {
+        if !time.is_finite() || time < 0.0 {
+            return Err(HydraError::Config(format!("bad cancellation time {time}")));
+        }
+        if job.0 >= self.jobs.len() {
+            return Err(HydraError::Config(format!(
+                "cancel of unknown job handle {} (this session has {} jobs — \
+                 handle from another session?)",
+                job.0,
+                self.jobs.len()
+            )));
+        }
+        self.cancels.push((job.0, time));
+        Ok(())
+    }
+
+    /// Inject cluster elasticity / fault events (§4.7's dynamic setting).
+    pub fn cluster_events(&mut self, events: Vec<ClusterEvent>) {
+        self.cluster_events.extend(events);
+    }
+
+    /// Number of submitted jobs.
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Run to completion. Per-interval trace recording follows
+    /// [`EngineOptions::record_intervals`] (on by default — disable for
+    /// very long simulations).
+    pub fn run(self) -> Result<SessionReport> {
+        self.run_inner(None)
+    }
+
+    /// Run to completion, streaming every engine event (decisions, spills,
+    /// retired units, job arrivals/finishes, intervals) through `obs` as
+    /// they happen in virtual time. Trace recording into the report still
+    /// follows [`EngineOptions::record_intervals`]; the observer is fed
+    /// either way.
+    pub fn run_with<O: EngineObserver>(self, obs: &mut O) -> Result<SessionReport> {
+        self.run_inner(Some(obs))
+    }
+
+    fn run_inner(self, obs: Option<&mut dyn EngineObserver>) -> Result<SessionReport> {
+        let Session {
+            cluster,
+            backend,
+            policy,
+            options,
+            partition_policy,
+            early_stop_median_after,
+            jobs,
+            cancels,
+            cluster_events,
+        } = self;
+        // cluster already validated at SessionBuilder::build
+        if jobs.is_empty() {
+            return Err(HydraError::Config("no jobs submitted".into()));
+        }
+
+        // Engine model ids: construction jobs first in submission order,
+        // then mid-run submissions in (time, submission order) — the
+        // engine's ids-follow-submission-order contract.
+        let n = jobs.len();
+        let submit_times: Vec<Option<f64>> = jobs.iter().map(|j| j.submit_at).collect();
+        let mut order: Vec<usize> = (0..n).filter(|&j| submit_times[j].is_none()).collect();
+        let n_construction = order.len();
+        let mut deferred: Vec<usize> = (0..n).filter(|&j| submit_times[j].is_some()).collect();
+        deferred.sort_by(|&a, &b| {
+            submit_times[a]
+                .unwrap()
+                .total_cmp(&submit_times[b].unwrap())
+                .then(a.cmp(&b))
+        });
+        order.extend(&deferred);
+        let mut model_of_job = vec![0usize; n];
+        for (m, &j) in order.iter().enumerate() {
+            model_of_job[j] = m;
+        }
+        for &(j, time) in &cancels {
+            if let Some(st) = submit_times[j] {
+                if time < st {
+                    return Err(HydraError::Config(format!(
+                        "job {:?}: cancellation at {time} precedes its mid-run \
+                         submission at {st}",
+                        jobs[j].spec.name()
+                    )));
+                }
+            }
+        }
+        let cancel_events: Vec<JobEvent> = cancels
+            .iter()
+            .map(|&(j, time)| JobEvent::Cancel { time, model: model_of_job[j] })
+            .collect();
+        let mut specs: Vec<Option<JobSpec>> = jobs.into_iter().map(|j| Some(j.spec)).collect();
+
+        match backend {
+            Backend::Real { manifest } => {
+                // Build *all* specs (construction + mid-run) in engine-id
+                // order so backend states align with model ids; split the
+                // built tasks into construction tasks and Submit events.
+                let mut ordered: Vec<RealModelSpec> = Vec::with_capacity(n);
+                for &j in &order {
+                    match specs[j].take() {
+                        Some(JobSpec::Model(s)) => ordered.push(s),
+                        _ => unreachable!("validated at submit"),
+                    }
+                }
+                let (mut real, mut tasks) = RealBackend::build(
+                    &manifest,
+                    &ordered,
+                    cluster.min_device_mem(),
+                    partition_policy,
+                )?;
+                if let Some(min_epochs) = early_stop_median_after {
+                    real.early_stop = Some(MedianRule { min_epochs });
+                }
+                let mut job_events: Vec<JobEvent> = tasks
+                    .split_off(n_construction)
+                    .into_iter()
+                    .zip(&deferred)
+                    .map(|(task, &j)| JobEvent::Submit {
+                        time: submit_times[j].unwrap(),
+                        task,
+                    })
+                    .collect();
+                job_events.extend(cancel_events);
+                let run = drive(
+                    &mut real,
+                    tasks,
+                    &cluster,
+                    policy,
+                    options,
+                    cluster_events,
+                    job_events,
+                    obs,
+                )?;
+                let losses = (0..n).map(|m| real.loss_log(m).to_vec()).collect();
+                Ok(SessionReport { run, losses, model_of_job })
+            }
+            sim_or_custom => {
+                let mut tasks: Vec<ModelTask> = Vec::with_capacity(n_construction);
+                let mut job_events: Vec<JobEvent> = Vec::with_capacity(n - n_construction);
+                for (m, &j) in order.iter().enumerate() {
+                    let mut task = match specs[j].take() {
+                        Some(JobSpec::Task(t)) => t,
+                        _ => unreachable!("validated at submit"),
+                    };
+                    task.id = m;
+                    match submit_times[j] {
+                        None => tasks.push(task),
+                        Some(time) => job_events.push(JobEvent::Submit { time, task }),
+                    }
+                }
+                job_events.extend(cancel_events);
+                let run = match sim_or_custom {
+                    Backend::Sim { noise, seed } => drive(
+                        &mut SimBackend::new(noise, seed),
+                        tasks,
+                        &cluster,
+                        policy,
+                        options,
+                        cluster_events,
+                        job_events,
+                        obs,
+                    )?,
+                    Backend::Custom(mut custom) => drive(
+                        &mut *custom,
+                        tasks,
+                        &cluster,
+                        policy,
+                        options,
+                        cluster_events,
+                        job_events,
+                        obs,
+                    )?,
+                    Backend::Real { .. } => unreachable!("handled above"),
+                };
+                Ok(SessionReport { run, losses: Vec::new(), model_of_job })
+            }
+        }
+    }
+}
+
+/// Construct the engine over `cluster` and run it; the engine's
+/// `run_observed` owns the `record_intervals` trace wiring.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    backend: &mut dyn ExecutionBackend,
+    tasks: Vec<ModelTask>,
+    cluster: &Cluster,
+    policy: Policy,
+    options: EngineOptions,
+    cluster_events: Vec<ClusterEvent>,
+    job_events: Vec<JobEvent>,
+    obs: Option<&mut dyn EngineObserver>,
+) -> Result<RunReport> {
+    let mut engine = SharpEngine::with_devices(
+        tasks,
+        &cluster.devices,
+        cluster.dram_bytes,
+        policy.build(),
+        backend,
+        options,
+    )?
+    .with_cluster_events(cluster_events)
+    .with_job_events(job_events);
+    engine.run_observed(obs)
+}
+
+/// Everything a caller can inspect after [`Session::run`].
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    /// Engine-level schedule report (makespan, utilization, per-job stats,
+    /// trace when interval recording is on).
+    pub run: RunReport,
+    /// Per-model loss logs in engine-id order (real backend; empty for
+    /// sim/custom runs). Prefer [`SessionReport::losses_for`].
+    pub losses: Vec<Vec<(u64, f32)>>,
+    /// Engine model id per submission index.
+    model_of_job: Vec<usize>,
+}
+
+impl SessionReport {
+    /// Engine model id a handle resolved to (mid-run submissions are
+    /// renumbered into arrival order).
+    pub fn model_of(&self, job: JobHandle) -> Option<usize> {
+        self.model_of_job.get(job.0).copied()
+    }
+
+    /// Per-job outcome: arrival, finish, latency, cancellation, units.
+    pub fn job(&self, job: JobHandle) -> Option<&JobStat> {
+        self.model_of(job).and_then(|m| self.run.jobs.get(m))
+    }
+
+    /// The job's loss log (real backend runs).
+    pub fn losses_for(&self, job: JobHandle) -> Option<&[(u64, f32)]> {
+        self.model_of(job)
+            .and_then(|m| self.losses.get(m))
+            .map(Vec::as_slice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sharp::TransferModel;
+    use crate::coordinator::task::ShardDesc;
+
+    fn task(name: &str, mbs: u32, cost: f64) -> ModelTask {
+        let sd = vec![ShardDesc {
+            param_bytes: 1 << 20,
+            fwd_transfer_bytes: 1 << 20,
+            bwd_transfer_bytes: 1 << 20,
+            activation_bytes: 1 << 10,
+            fwd_cost: cost,
+            bwd_cost: 2.0 * cost,
+            n_layers: 1,
+        }];
+        // session reassigns ids; 999 proves that
+        ModelTask::new(999, name, "sim", sd, mbs, 1, 1e-3)
+    }
+
+    fn zero_transfer() -> EngineOptions {
+        EngineOptions { transfer: TransferModel::zero_cost(), ..Default::default() }
+    }
+
+    #[test]
+    fn empty_cluster_is_rejected_at_build() {
+        let err = Session::builder(Cluster::heterogeneous(vec![], 1 << 30))
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, HydraError::Config(_)), "{err:?}");
+    }
+
+    #[test]
+    fn no_jobs_is_a_config_error() {
+        let s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .build()
+            .unwrap();
+        assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn submit_reassigns_ids_and_handles_look_up_jobs() {
+        let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .options(zero_transfer())
+            .build()
+            .unwrap();
+        let a = s.submit(task("a", 1, 1.0)).unwrap();
+        let b = s.submit(task("b", 2, 1.0)).unwrap();
+        assert_eq!(s.n_jobs(), 2);
+        let r = s.run().unwrap();
+        assert_eq!(r.model_of(a), Some(0));
+        assert_eq!(r.job(a).unwrap().name, "a");
+        assert_eq!(r.job(b).unwrap().units_executed, 4);
+    }
+
+    #[test]
+    fn real_spec_on_sim_backend_is_rejected() {
+        use crate::train::optimizer::OptKind;
+        let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .build()
+            .unwrap();
+        let err = s
+            .submit(RealModelSpec {
+                name: "x".into(),
+                config: "tiny-lm-b8".into(),
+                lr: 0.01,
+                opt: OptKind::Sgd,
+                epochs: 1,
+                minibatches_per_epoch: 1,
+                seed: 0,
+                inference: false,
+                arrival: 0.0,
+            })
+            .unwrap_err();
+        assert!(matches!(err, HydraError::Config(_)), "{err:?}");
+    }
+
+    #[test]
+    fn task_on_real_backend_is_rejected() {
+        let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .backend(Backend::Real { manifest: "artifacts".into() })
+            .build()
+            .unwrap();
+        assert!(s.submit(task("t", 1, 1.0)).is_err());
+    }
+
+    #[test]
+    fn submit_at_and_cancel_at_wire_job_events() {
+        let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .options(zero_transfer())
+            .build()
+            .unwrap();
+        let a = s.submit(task("a", 2, 1.0)).unwrap(); // 6s of work
+        let late = s.submit_at(task("late", 1, 1.0), 2.0).unwrap(); // 3s
+        s.cancel_at(a, 100.0).unwrap(); // after completion: no-op
+        assert!(s.cancel_at(a, f64::NAN).is_err());
+        assert!(s.cancel_at(a, -1.0).is_err());
+        // a handle from a different (larger) session is rejected, not a panic
+        assert!(s.cancel_at(JobHandle(99), 1.0).is_err());
+        let r = s.run().unwrap();
+        assert_eq!(r.model_of(late), Some(1));
+        let lj = r.job(late).unwrap();
+        assert_eq!(lj.arrival, 2.0);
+        assert!((lj.finished - 9.0).abs() < 1e-9, "{lj:?}");
+        assert!(!r.job(a).unwrap().cancelled);
+    }
+
+    #[test]
+    fn mid_run_submissions_renumber_into_arrival_order() {
+        let mut s = Session::builder(Cluster::uniform(2, 1 << 30, 4 << 30))
+            .options(zero_transfer())
+            .build()
+            .unwrap();
+        let _base = s.submit(task("base", 2, 1.0)).unwrap();
+        // submitted out of time order: handles keep call order, engine ids
+        // follow submission-time order
+        let second = s.submit_at(task("second", 1, 1.0), 5.0).unwrap();
+        let first = s.submit_at(task("first", 1, 1.0), 1.0).unwrap();
+        let r = s.run().unwrap();
+        assert_eq!(r.model_of(first), Some(1));
+        assert_eq!(r.model_of(second), Some(2));
+        assert_eq!(r.job(first).unwrap().name, "first");
+        assert_eq!(r.job(second).unwrap().name, "second");
+    }
+
+    #[test]
+    fn cancel_before_mid_run_submission_is_rejected() {
+        let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .options(zero_transfer())
+            .build()
+            .unwrap();
+        let _a = s.submit(task("a", 1, 1.0)).unwrap();
+        let late = s.submit_at(task("late", 1, 1.0), 5.0).unwrap();
+        s.cancel_at(late, 1.0).unwrap();
+        assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn custom_backend_drives_execution() {
+        struct Fixed;
+        impl ExecutionBackend for Fixed {
+            fn execute_unit(
+                &mut self,
+                _task: &ModelTask,
+                _unit: &crate::coordinator::unit::ShardUnit,
+            ) -> Result<f64> {
+                Ok(0.5)
+            }
+        }
+        let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+            .backend(Backend::Custom(Box::new(Fixed)))
+            .options(zero_transfer())
+            .build()
+            .unwrap();
+        s.submit(task("c", 2, 1.0)).unwrap();
+        let r = s.run().unwrap();
+        // 4 units x 0.5s each, ignoring the ShardDesc costs
+        assert!((r.run.makespan - 2.0).abs() < 1e-9, "{}", r.run.makespan);
+    }
+
+    #[test]
+    fn run_with_streams_events_and_respects_record_intervals() {
+        #[derive(Default)]
+        struct Counting {
+            arrived: usize,
+            finished: usize,
+            retired: usize,
+            decisions: usize,
+            intervals: usize,
+        }
+        impl EngineObserver for Counting {
+            fn on_job_arrived(&mut self, _m: usize, _n: &str, _t: f64) {
+                self.arrived += 1;
+            }
+            fn on_job_finished(&mut self, _m: usize, _t: f64, _c: bool) {
+                self.finished += 1;
+            }
+            fn on_unit_retired(
+                &mut self,
+                _d: usize,
+                _u: &crate::coordinator::unit::ShardUnit,
+                _t: f64,
+            ) {
+                self.retired += 1;
+            }
+            fn on_decision(&mut self, _d: usize, _m: usize, _p: bool, _t: f64) {
+                self.decisions += 1;
+            }
+            fn on_interval(&mut self, _iv: &crate::coordinator::metrics::Interval) {
+                self.intervals += 1;
+            }
+        }
+        let mk = |record: bool| {
+            let mut s = Session::builder(Cluster::uniform(2, 1 << 30, 4 << 30))
+                .options(EngineOptions { record_intervals: record, ..zero_transfer() })
+                .build()
+                .unwrap();
+            s.submit(task("a", 2, 1.0)).unwrap();
+            s.submit(task("b", 1, 1.0)).unwrap();
+            let mut c = Counting::default();
+            let r = s.run_with(&mut c).unwrap();
+            (r, c)
+        };
+        let (r_on, c_on) = mk(true);
+        assert_eq!(c_on.arrived, 2);
+        assert_eq!(c_on.finished, 2);
+        assert_eq!(c_on.retired, 6);
+        assert!(c_on.decisions >= 6);
+        assert_eq!(c_on.intervals, r_on.run.trace.intervals.len());
+        let (r_off, c_off) = mk(false);
+        // observer still sees every interval; the report trace stays empty
+        assert_eq!(c_off.intervals, c_on.intervals);
+        assert!(r_off.run.trace.intervals.is_empty());
+        assert_eq!(r_off.run.makespan, r_on.run.makespan);
+    }
+}

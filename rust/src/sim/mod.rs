@@ -9,6 +9,6 @@ pub mod workload;
 
 pub use cost::{pool_reference, GpuSpec, PaperModel};
 pub use workload::{
-    bert_grid, build_tasks, build_tasks_pool, mixed_pool, poisson_mixed_tenants,
-    uniform_grid, vit_grid, WorkloadModel,
+    bert_grid, build_tasks, build_tasks_pool, mixed_pool, parse_pool,
+    poisson_mixed_tenants, uniform_grid, vit_grid, WorkloadModel,
 };

@@ -148,6 +148,33 @@ pub fn mixed_pool(n_a4000: usize, n_a6000: usize) -> Vec<GpuSpec> {
     pool
 }
 
+/// Parse a pool description like `"a4000:4,a6000:2"` (class names from
+/// [`GpuSpec::by_name`]; a bare class name means one card) into GPU specs.
+/// Shared by the `hydra simulate --online --pool ...` CLI flag and the
+/// workload-spec `"pool"` key.
+pub fn parse_pool(s: &str) -> Result<Vec<GpuSpec>> {
+    let mut pool = Vec::new();
+    for part in s.split(',') {
+        let (class, count) = match part.split_once(':') {
+            Some((c, n)) => {
+                let n: usize = n.parse().map_err(|_| {
+                    HydraError::Config(format!("bad device count in {part:?}"))
+                })?;
+                (c, n)
+            }
+            None => (part, 1),
+        };
+        let gpu = GpuSpec::by_name(class).ok_or_else(|| {
+            HydraError::Config(format!("unknown GPU class {class:?} in pool"))
+        })?;
+        pool.extend(std::iter::repeat(gpu).take(count));
+    }
+    if pool.is_empty() {
+        return Err(HydraError::Config(format!("empty pool {s:?}")));
+    }
+    Ok(pool)
+}
+
 /// Partition every workload model for `gpu` and build ModelTasks
 /// (homogeneous pool; arrivals are threaded through).
 pub fn build_tasks(
@@ -298,5 +325,21 @@ mod tests {
     fn empty_pool_is_config_error() {
         let grid = uniform_grid(1, 1_000_000, 8, 1, 1);
         assert!(build_tasks_pool(&grid, &[], Default::default()).is_err());
+    }
+
+    #[test]
+    fn parse_pool_expands_classes_and_counts() {
+        let p = parse_pool("a4000:2,a6000").unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0].mem_bytes, GpuSpec::a4000().mem_bytes);
+        assert_eq!(p[2].mem_bytes, GpuSpec::a6000().mem_bytes);
+    }
+
+    #[test]
+    fn parse_pool_rejects_bad_inputs() {
+        assert!(parse_pool("h100:2").is_err()); // unknown class
+        assert!(parse_pool("a4000:x").is_err()); // bad count
+        assert!(parse_pool("a4000:0").is_err()); // expands to nothing
+        assert!(parse_pool("").is_err());
     }
 }

@@ -5,6 +5,7 @@
 use hydra::baselines;
 use hydra::coordinator::sharp::ParallelMode;
 use hydra::figures;
+use hydra::session::Policy;
 use hydra::sim::{build_tasks, uniform_grid, GpuSpec};
 
 fn policy() -> hydra::coordinator::partitioner::PartitionPolicy {
@@ -65,7 +66,7 @@ fn fig10_hydra_advantage_stable_across_scales() {
             gpu.mem_bytes,
             ParallelMode::Sharp,
             true,
-            "sharded-lrtf",
+            Policy::ShardedLrtf,
         )
         .unwrap();
         ratios.push(mp.makespan / hy.makespan);
@@ -92,7 +93,7 @@ fn fig9a_speedup_flattens_at_device_count() {
             gpu.mem_bytes,
             ParallelMode::Sharp,
             true,
-            "sharded-lrtf",
+            Policy::ShardedLrtf,
         )
         .unwrap();
         s / r.makespan

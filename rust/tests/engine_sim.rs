@@ -1,15 +1,18 @@
 //! Integration tests of the SHARP engine over the simulated backend:
 //! behavioural checks (makespans, ablation ordering, elasticity) plus the
 //! MILP-constraint invariants from DESIGN.md §6, property-tested with the
-//! in-crate prop driver.
+//! in-crate prop driver. Runs are constructed through the `Session` front
+//! door.
 
 use hydra::coordinator::metrics::IntervalKind;
-use hydra::coordinator::sched::{self, bnb};
+use hydra::coordinator::sched::bnb;
 use hydra::coordinator::sharp::{
-    ClusterEvent, EngineOptions, ParallelMode, RunReport, SharpEngine, TransferModel,
+    ClusterEvent, DeviceSpec, EngineOptions, ParallelMode, RunReport, TransferModel,
 };
 use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::Cluster;
 use hydra::exec::SimBackend;
+use hydra::session::{Backend, Policy, Session};
 use hydra::util::prop;
 use hydra::util::rng::Rng;
 
@@ -30,23 +33,31 @@ fn uniform_task(id: usize, shards: usize, mbs: u32, epochs: u32, cost: f64) -> M
     ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, epochs, 1e-3)
 }
 
+fn mk_session(
+    tasks: Vec<ModelTask>,
+    devices: usize,
+    opts: EngineOptions,
+    policy: Policy,
+) -> Session {
+    let mut session = Session::builder(Cluster::uniform(devices, GIB, 64 * GIB))
+        .backend(Backend::sim())
+        .policy(policy)
+        .options(opts)
+        .build()
+        .unwrap();
+    for t in tasks {
+        session.submit(t).unwrap();
+    }
+    session
+}
+
 fn run_engine(
     tasks: Vec<ModelTask>,
     devices: usize,
     opts: EngineOptions,
-    scheduler: &str,
+    policy: Policy,
 ) -> RunReport {
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::new(
-        tasks,
-        &vec![GIB; devices],
-        64 * GIB,
-        sched::by_name(scheduler).unwrap(),
-        &mut backend,
-        opts,
-    )
-    .unwrap();
-    engine.run().unwrap()
+    mk_session(tasks, devices, opts, policy).run().unwrap().run
 }
 
 fn zero_transfer_opts() -> EngineOptions {
@@ -60,7 +71,7 @@ fn zero_transfer_opts() -> EngineOptions {
 fn single_model_single_device_makespan_is_total_work() {
     let t = uniform_task(0, 2, 3, 1, 1.0);
     // per mb: 2 fwd (1.0) + 2 bwd (2.0) = 6.0; 3 mbs = 18.0
-    let r = run_engine(vec![t], 1, zero_transfer_opts(), "sharded-lrtf");
+    let r = run_engine(vec![t], 1, zero_transfer_opts(), Policy::ShardedLrtf);
     assert!((r.makespan - 18.0).abs() < 1e-9, "{}", r.makespan);
     assert_eq!(r.units_executed, 12);
     assert!((r.utilization - 1.0).abs() < 1e-9);
@@ -71,7 +82,7 @@ fn eight_models_eight_devices_scale_nearly_linearly() {
     let tasks: Vec<ModelTask> =
         (0..8).map(|i| uniform_task(i, 4, 5, 1, 0.5)).collect();
     let single_total: f64 = 5.0 * 4.0 * (0.5 + 1.0); // 30s per model
-    let r = run_engine(tasks, 8, zero_transfer_opts(), "sharded-lrtf");
+    let r = run_engine(tasks, 8, zero_transfer_opts(), Policy::ShardedLrtf);
     // perfect task parallelism would be exactly one model per device
     assert!((r.makespan - single_total).abs() < 1e-6, "{}", r.makespan);
     assert!(r.utilization > 0.99);
@@ -82,7 +93,7 @@ fn more_models_than_devices_keeps_devices_saturated() {
     let tasks: Vec<ModelTask> =
         (0..16).map(|i| uniform_task(i, 4, 3, 1, 0.5)).collect();
     let total_work: f64 = 16.0 * 3.0 * 4.0 * 1.5;
-    let r = run_engine(tasks, 8, zero_transfer_opts(), "sharded-lrtf");
+    let r = run_engine(tasks, 8, zero_transfer_opts(), Policy::ShardedLrtf);
     let lb = total_work / 8.0;
     assert!(r.makespan >= lb - 1e-9);
     assert!(r.makespan < lb * 1.1, "makespan {} vs lb {lb}", r.makespan);
@@ -99,7 +110,7 @@ fn sequential_mode_uses_one_device_at_a_time() {
         transfer: TransferModel::zero_cost(),
         ..Default::default()
     };
-    let r = run_engine(tasks, 8, opts, "sharded-lrtf");
+    let r = run_engine(tasks, 8, opts, Policy::ShardedLrtf);
     // no blending: makespan equals total serial work
     assert!((r.makespan - total_work).abs() < 1e-9, "{}", r.makespan);
     assert!(r.utilization < 0.2); // 1 of 8 devices busy
@@ -112,8 +123,8 @@ fn double_buffering_hides_transfer_latency() {
     // PCIe-class transfers of 100 MiB shards ≈ 8.7ms vs 50ms compute
     let with_db = EngineOptions { double_buffer: true, ..Default::default() };
     let without_db = EngineOptions { double_buffer: false, ..Default::default() };
-    let r_db = run_engine(tasks.clone(), 4, with_db, "sharded-lrtf");
-    let r_nodb = run_engine(tasks, 4, without_db, "sharded-lrtf");
+    let r_db = run_engine(tasks.clone(), 4, with_db, Policy::ShardedLrtf);
+    let r_nodb = run_engine(tasks, 4, without_db, Policy::ShardedLrtf);
     assert!(
         r_db.makespan < r_nodb.makespan * 0.95,
         "db {} vs nodb {}",
@@ -130,7 +141,7 @@ fn table3_ablation_ordering_holds() {
         let tasks: Vec<ModelTask> =
             (0..16).map(|i| uniform_task(i, 4, 3, 1, 0.05)).collect();
         let opts = EngineOptions { mode, double_buffer: db, ..Default::default() };
-        run_engine(tasks, 8, opts, "sharded-lrtf").makespan
+        run_engine(tasks, 8, opts, Policy::ShardedLrtf).makespan
     };
     let full = mk(ParallelMode::Sharp, true);
     let no_db = mk(ParallelMode::Sharp, false);
@@ -157,8 +168,8 @@ fn lrtf_beats_or_matches_random_on_heterogeneous_workloads() {
                 )
             })
             .collect();
-        let r_lrtf = run_engine(tasks.clone(), 4, zero_transfer_opts(), "sharded-lrtf");
-        let r_rand = run_engine(tasks, 4, zero_transfer_opts(), "random");
+        let r_lrtf = run_engine(tasks.clone(), 4, zero_transfer_opts(), Policy::ShardedLrtf);
+        let r_rand = run_engine(tasks, 4, zero_transfer_opts(), Policy::Random);
         if r_lrtf.makespan <= r_rand.makespan + 1e-9 {
             lrtf_wins += 1;
         }
@@ -187,7 +198,7 @@ fn engine_makespan_close_to_bnb_optimal_on_small_instances() {
                 .collect(),
             devices: 2,
         };
-        let r = run_engine(tasks, 2, zero_transfer_opts(), "sharded-lrtf");
+        let r = run_engine(tasks, 2, zero_transfer_opts(), Policy::ShardedLrtf);
         let opt = bnb::solve(&problem, std::time::Duration::from_secs(5), None);
         assert!(opt.proven_optimal);
         assert!(
@@ -210,21 +221,12 @@ fn device_failure_mid_run_still_completes_all_units() {
     let tasks: Vec<ModelTask> =
         (0..4).map(|i| uniform_task(i, 2, 4, 1, 0.5)).collect();
     let total_units: u64 = tasks.iter().map(|t| t.total_units()).sum();
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::new(
-        tasks,
-        &vec![GIB; 4],
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    )
-    .unwrap()
-    .with_cluster_events(vec![
+    let mut session = mk_session(tasks, 4, zero_transfer_opts(), Policy::ShardedLrtf);
+    session.cluster_events(vec![
         ClusterEvent::Fail { time: 2.0, device: 0 },
         ClusterEvent::Fail { time: 3.0, device: 1 },
     ]);
-    let r = engine.run().unwrap();
+    let r = session.run().unwrap().run;
     assert_eq!(r.units_executed, total_units);
     // two fewer devices -> longer makespan than the 4-device run
     assert!(r.makespan > 6.0);
@@ -235,20 +237,11 @@ fn device_arrival_mid_run_shortens_makespan() {
     let tasks = |n: usize| -> Vec<ModelTask> {
         (0..n).map(|i| uniform_task(i, 2, 6, 1, 0.5)).collect()
     };
-    let r_static = run_engine(tasks(4), 1, zero_transfer_opts(), "sharded-lrtf");
+    let r_static = run_engine(tasks(4), 1, zero_transfer_opts(), Policy::ShardedLrtf);
 
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::new(
-        tasks(4),
-        &[GIB],
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    )
-    .unwrap()
-    .with_cluster_events(vec![ClusterEvent::Arrive { time: 1.0, mem_bytes: GIB }]);
-    let r_elastic = engine.run().unwrap();
+    let mut session = mk_session(tasks(4), 1, zero_transfer_opts(), Policy::ShardedLrtf);
+    session.cluster_events(vec![ClusterEvent::Arrive { time: 1.0, mem_bytes: GIB }]);
+    let r_elastic = session.run().unwrap().run;
     assert!(
         r_elastic.makespan < r_static.makespan * 0.7,
         "elastic {} static {}",
@@ -295,15 +288,14 @@ fn random_workload(rng: &mut Rng) -> (Vec<ModelTask>, usize) {
 fn run_random(rng: &mut Rng) -> (RunReport, u64) {
     let (tasks, devices) = random_workload(rng);
     let total_units: u64 = tasks.iter().map(|t| t.total_units()).sum();
-    let sched_name = ["sharded-lrtf", "random", "fifo", "srtf", "affinity-lrtf"]
-        [rng.below(5) as usize];
+    let policy = Policy::ALL[rng.below(Policy::ALL.len() as u64) as usize];
     let db = rng.uniform() < 0.5;
     let opts = EngineOptions {
         double_buffer: db,
         seed: rng.next_u64(),
         ..Default::default()
     };
-    let r = run_engine(tasks, devices, opts, sched_name);
+    let r = run_engine(tasks, devices, opts, policy);
     (r, total_units)
 }
 
@@ -388,17 +380,7 @@ fn prop_makespan_at_least_lower_bound() {
             .map(|t| t.remaining_time())
             .fold(0.0, f64::max);
         let lb = (total_work / devices as f64).max(longest);
-        let mut backend = SimBackend::deterministic();
-        let mut engine = SharpEngine::new(
-            tasks,
-            &vec![GIB; devices],
-            64 * GIB,
-            sched::by_name("sharded-lrtf").unwrap(),
-            &mut backend,
-            zero_transfer_opts(),
-        )
-        .unwrap();
-        let r = engine.run().unwrap();
+        let r = run_engine(tasks, devices, zero_transfer_opts(), Policy::ShardedLrtf);
         if r.makespan < lb - 1e-6 {
             return Err(format!("makespan {} below bound {lb}", r.makespan));
         }
@@ -437,7 +419,7 @@ fn inference_tasks_schedule_fwd_only() {
     ];
     let t = ModelTask::new_inference(0, "serve", "cfg", sd, 4);
     assert_eq!(t.total_units(), 12);
-    let r = run_engine(vec![t], 2, zero_transfer_opts(), "sharded-lrtf");
+    let r = run_engine(vec![t], 2, zero_transfer_opts(), Policy::ShardedLrtf);
     assert_eq!(r.units_executed, 12);
     // all fwd: total compute = 12 * 1.0
     assert!((r.compute_secs - 12.0).abs() < 1e-9, "{}", r.compute_secs);
@@ -460,7 +442,7 @@ fn mixed_training_and_inference_workload_completes() {
     ];
     tasks.push(ModelTask::new_inference(1, "serve", "cfg", sd, 5));
     let total: u64 = tasks.iter().map(|t| t.total_units()).sum();
-    let r = run_engine(tasks, 2, zero_transfer_opts(), "sharded-lrtf");
+    let r = run_engine(tasks, 2, zero_transfer_opts(), Policy::ShardedLrtf);
     assert_eq!(r.units_executed, total);
 }
 
@@ -490,21 +472,21 @@ fn engine_early_stop_drops_remaining_units() {
     let tasks: Vec<ModelTask> =
         (0..3).map(|i| uniform_task(i, 2, 2, 3, 0.5)).collect();
     let per_model = tasks[0].total_units(); // 2 shards * 2 * 2 mbs * 3 epochs
-    let mut backend = StoppingBackend {
+    let backend = StoppingBackend {
         inner: SimBackend::deterministic(),
         stop_model: 1,
         stop_after_epoch: 0,
     };
-    let mut engine = SharpEngine::new(
-        tasks,
-        &vec![GIB; 2],
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    )
-    .unwrap();
-    let r = engine.run().unwrap();
+    let mut session = Session::builder(Cluster::uniform(2, GIB, 64 * GIB))
+        .backend(Backend::Custom(Box::new(backend)))
+        .policy(Policy::ShardedLrtf)
+        .options(zero_transfer_opts())
+        .build()
+        .unwrap();
+    for t in tasks {
+        session.submit(t).unwrap();
+    }
+    let r = session.run().unwrap().run;
     // model 1 ran only its first epoch (1/3 of units)
     let expected = 2 * per_model + per_model / 3;
     assert_eq!(r.units_executed, expected, "per_model {per_model}");
@@ -516,16 +498,19 @@ fn heterogeneous_device_memories_respected() {
     // everywhere (partitioner contract: smallest device bounds shards)
     let tasks: Vec<ModelTask> =
         (0..4).map(|i| uniform_task(i, 2, 2, 1, 0.5)).collect();
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::new(
-        tasks,
-        &[GIB, 256 << 20],
+    let cluster = Cluster::heterogeneous(
+        vec![DeviceSpec::uniform(GIB), DeviceSpec::uniform(256 << 20)],
         64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    )
-    .unwrap();
-    let r = engine.run().unwrap();
+    );
+    let mut session = Session::builder(cluster)
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(zero_transfer_opts())
+        .build()
+        .unwrap();
+    for t in tasks {
+        session.submit(t).unwrap();
+    }
+    let r = session.run().unwrap().run;
     assert_eq!(r.units_executed, 4 * 8);
 }

@@ -2,16 +2,19 @@
 //! arrivals (in and out of submission order), tenant cancellations,
 //! mid-run submissions, heterogeneous device pools (memory, speed, link),
 //! and the event-heap vs linear-scan makespan equivalence on the Table 2
-//! workloads.
+//! workloads. Runs are constructed through the `Session` front door
+//! (`submit_at`/`cancel_at` replace raw `JobEvent` wiring); two tests pin
+//! the engine-level id/cancel contracts beneath it.
 
 use hydra::coordinator::metrics::IntervalKind;
-use hydra::coordinator::sched;
 use hydra::coordinator::sharp::{
     DeviceSpec, EngineOptions, JobEvent, QueueKind, RunReport, SharpEngine,
     TransferModel,
 };
 use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::Cluster;
 use hydra::exec::SimBackend;
+use hydra::session::{Backend, Policy, Session};
 use hydra::sim::{bert_grid, build_tasks, vit_grid, GpuSpec, WorkloadModel};
 use hydra::util::prop;
 
@@ -38,25 +41,50 @@ fn zero_transfer_opts() -> EngineOptions {
     EngineOptions { transfer: TransferModel::zero_cost(), ..Default::default() }
 }
 
-fn run(
+fn mk_session(
     tasks: Vec<ModelTask>,
     devices: usize,
     opts: EngineOptions,
-    scheduler: &str,
-    jobs: Vec<JobEvent>,
+    policy: Policy,
+) -> Session {
+    let mut session = Session::builder(Cluster::uniform(devices, GIB, 64 * GIB))
+        .backend(Backend::sim())
+        .policy(policy)
+        .options(opts)
+        .build()
+        .unwrap();
+    for t in tasks {
+        session.submit(t).unwrap();
+    }
+    session
+}
+
+/// Run construction-time `tasks` plus `cancels` of `(model index, time)`.
+fn run_with_cancels(
+    tasks: Vec<ModelTask>,
+    devices: usize,
+    opts: EngineOptions,
+    policy: Policy,
+    cancels: &[(usize, f64)],
 ) -> RunReport {
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::new(
-        tasks,
-        &vec![GIB; devices],
-        64 * GIB,
-        sched::by_name(scheduler).unwrap(),
-        &mut backend,
-        opts,
-    )
-    .unwrap()
-    .with_job_events(jobs);
-    engine.run().unwrap()
+    let mut session = Session::builder(Cluster::uniform(devices, GIB, 64 * GIB))
+        .backend(Backend::sim())
+        .policy(policy)
+        .options(opts)
+        .build()
+        .unwrap();
+    let mut handles = Vec::new();
+    for t in tasks {
+        handles.push(session.submit(t).unwrap());
+    }
+    for &(model, time) in cancels {
+        session.cancel_at(handles[model], time).unwrap();
+    }
+    session.run().unwrap().run
+}
+
+fn run(tasks: Vec<ModelTask>, devices: usize, opts: EngineOptions, policy: Policy) -> RunReport {
+    run_with_cancels(tasks, devices, opts, policy, &[])
 }
 
 // ---------------------------------------------------------------------------
@@ -67,7 +95,7 @@ fn run(
 fn arrival_delays_job_start() {
     // work = 2 mbs * (1 + 2) = 6s, arriving at t=10 on an idle device
     let t = uniform_task(0, 1, 2, 1.0).with_arrival(10.0);
-    let r = run(vec![t], 1, zero_transfer_opts(), "sharded-lrtf", vec![]);
+    let r = run(vec![t], 1, zero_transfer_opts(), Policy::ShardedLrtf);
     assert!((r.makespan - 16.0).abs() < 1e-9, "{}", r.makespan);
     assert_eq!(r.jobs.len(), 1);
     assert_eq!(r.jobs[0].arrival, 10.0);
@@ -88,7 +116,7 @@ fn out_of_order_arrivals_run_in_arrival_order_under_fifo() {
         uniform_task(1, 1, 1, 1.0), // arrival 0.0
         uniform_task(2, 1, 1, 1.0).with_arrival(2.5),
     ];
-    let r = run(tasks, 1, zero_transfer_opts(), "fifo", vec![]);
+    let r = run(tasks, 1, zero_transfer_opts(), Policy::Fifo);
     assert!((r.makespan - 9.0).abs() < 1e-9, "{}", r.makespan);
     let finish: Vec<f64> = r.jobs.iter().map(|j| j.finished).collect();
     assert!((finish[1] - 3.0).abs() < 1e-9, "{finish:?}");
@@ -105,7 +133,7 @@ fn late_arrivals_fill_idle_devices_immediately() {
         uniform_task(0, 1, 2, 1.0),                  // 6s of work
         uniform_task(1, 1, 1, 1.0).with_arrival(1.0), // 3s of work
     ];
-    let r = run(tasks, 2, zero_transfer_opts(), "sharded-lrtf", vec![]);
+    let r = run(tasks, 2, zero_transfer_opts(), Policy::ShardedLrtf);
     assert!((r.jobs[1].finished - 4.0).abs() < 1e-9, "{:?}", r.jobs[1]);
     assert!((r.makespan - 6.0).abs() < 1e-9, "{}", r.makespan);
 }
@@ -122,12 +150,12 @@ fn cancel_idle_job_drops_all_its_units() {
         uniform_task(0, 1, 3, 1.0), // 9s — picked first by LRTF
         uniform_task(1, 1, 1, 1.0), // 3s — cancelled at t=0.5
     ];
-    let r = run(
+    let r = run_with_cancels(
         tasks,
         1,
         zero_transfer_opts(),
-        "sharded-lrtf",
-        vec![JobEvent::Cancel { time: 0.5, model: 1 }],
+        Policy::ShardedLrtf,
+        &[(1, 0.5)],
     );
     assert!((r.makespan - 9.0).abs() < 1e-9, "{}", r.makespan);
     assert_eq!(r.units_executed, 6); // only model 0's units
@@ -142,12 +170,12 @@ fn cancel_running_job_lets_inflight_unit_finish() {
     // single model, units: fwd 0-1, bwd 1-3, fwd 3-4, bwd 4-6, fwd 6-7,
     // bwd 7-9; cancel at 3.5 -> the in-flight fwd (3..4) completes, rest drop
     let tasks = vec![uniform_task(0, 1, 3, 1.0)];
-    let r = run(
+    let r = run_with_cancels(
         tasks,
         1,
         zero_transfer_opts(),
-        "sharded-lrtf",
-        vec![JobEvent::Cancel { time: 3.5, model: 0 }],
+        Policy::ShardedLrtf,
+        &[(0, 3.5)],
     );
     assert_eq!(r.units_executed, 3, "{:?}", r.jobs);
     assert!(r.jobs[0].cancelled);
@@ -161,12 +189,12 @@ fn cancel_before_arrival_prevents_any_execution() {
         uniform_task(0, 1, 1, 1.0),
         uniform_task(1, 1, 2, 1.0).with_arrival(5.0),
     ];
-    let r = run(
+    let r = run_with_cancels(
         tasks,
         1,
         zero_transfer_opts(),
-        "sharded-lrtf",
-        vec![JobEvent::Cancel { time: 2.0, model: 1 }],
+        Policy::ShardedLrtf,
+        &[(1, 2.0)],
     );
     assert_eq!(r.units_executed, 2); // model 0 only
     assert!(r.jobs[1].cancelled);
@@ -177,28 +205,28 @@ fn cancel_before_arrival_prevents_any_execution() {
 #[test]
 fn cancel_is_idempotent_and_ignores_finished_jobs() {
     let tasks = vec![uniform_task(0, 1, 1, 1.0)];
-    let r = run(
+    let r = run_with_cancels(
         tasks,
         1,
         zero_transfer_opts(),
-        "sharded-lrtf",
-        vec![
-            JobEvent::Cancel { time: 10.0, model: 0 }, // job already done
-        ],
+        Policy::ShardedLrtf,
+        &[(0, 10.0)], // job already done
     );
     assert_eq!(r.units_executed, 2);
     assert!(!r.jobs[0].cancelled);
     assert!((r.jobs[0].finished - 3.0).abs() < 1e-9);
 }
 
+/// Engine-level contract beneath `Session` (which cannot express an
+/// unknown-model cancel: handles always resolve).
 #[test]
-fn cancel_of_unknown_model_is_an_error() {
+fn cancel_of_unknown_model_is_an_engine_error() {
     let mut backend = SimBackend::deterministic();
     let mut engine = SharpEngine::new(
         vec![uniform_task(0, 1, 1, 1.0)],
         &[GIB],
         64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
+        Policy::ShardedLrtf.build(),
         &mut backend,
         zero_transfer_opts(),
     )
@@ -213,18 +241,21 @@ fn cancel_of_unknown_model_is_an_error() {
 
 #[test]
 fn submit_while_running_schedules_the_new_job() {
-    let tasks = vec![uniform_task(0, 1, 2, 1.0)]; // 6s
-    let late = uniform_task(1, 1, 1, 1.0).with_arrival(2.0); // 3s
-    let r = run(
-        tasks,
+    let mut session = mk_session(
+        vec![uniform_task(0, 1, 2, 1.0)], // 6s
         1,
         zero_transfer_opts(),
-        "sharded-lrtf",
-        vec![JobEvent::Submit { time: 2.0, task: late }],
+        Policy::ShardedLrtf,
     );
+    let late = session
+        .submit_at(uniform_task(1, 1, 1, 1.0).with_arrival(2.0), 2.0) // 3s
+        .unwrap();
+    let report = session.run().unwrap();
+    let r = &report.run;
     assert_eq!(r.jobs.len(), 2);
     assert_eq!(r.units_executed, 6);
-    assert!((r.jobs[1].finished - 9.0).abs() < 1e-9, "{:?}", r.jobs[1]);
+    let lj = report.job(late).unwrap();
+    assert!((lj.finished - 9.0).abs() < 1e-9, "{lj:?}");
     assert!((r.makespan - 9.0).abs() < 1e-9);
 }
 
@@ -232,28 +263,32 @@ fn submit_while_running_schedules_the_new_job() {
 fn submit_onto_idle_pool_starts_immediately() {
     // empty-ish pool: first job finishes at 3.0, submission at 5.0 starts at
     // its submission time on the parked device
-    let tasks = vec![uniform_task(0, 1, 1, 1.0)];
-    let late = uniform_task(1, 1, 1, 1.0).with_arrival(5.0);
-    let r = run(
-        tasks,
+    let mut session = mk_session(
+        vec![uniform_task(0, 1, 1, 1.0)],
         1,
         zero_transfer_opts(),
-        "sharded-lrtf",
-        vec![JobEvent::Submit { time: 5.0, task: late }],
+        Policy::ShardedLrtf,
     );
-    assert!((r.jobs[1].finished - 8.0).abs() < 1e-9, "{:?}", r.jobs[1]);
-    assert!((r.makespan - 8.0).abs() < 1e-9);
+    let late = session
+        .submit_at(uniform_task(1, 1, 1, 1.0).with_arrival(5.0), 5.0)
+        .unwrap();
+    let report = session.run().unwrap();
+    let lj = report.job(late).unwrap();
+    assert!((lj.finished - 8.0).abs() < 1e-9, "{lj:?}");
+    assert!((report.run.makespan - 8.0).abs() < 1e-9);
 }
 
+/// Engine-level contract beneath `Session` (which renumbers ids itself:
+/// see the session unit tests for the renumbering behaviour).
 #[test]
-fn submit_with_wrong_id_is_an_error() {
+fn submit_with_wrong_id_is_an_engine_error() {
     let mut backend = SimBackend::deterministic();
     let bad = uniform_task(5, 1, 1, 1.0); // should be id 1
     let mut engine = SharpEngine::new(
         vec![uniform_task(0, 1, 1, 1.0)],
         &[GIB],
         64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
+        Policy::ShardedLrtf.build(),
         &mut backend,
         zero_transfer_opts(),
     )
@@ -266,21 +301,33 @@ fn submit_with_wrong_id_is_an_error() {
 // heterogeneous pools
 // ---------------------------------------------------------------------------
 
+fn run_hetero(
+    tasks: Vec<ModelTask>,
+    specs: Vec<DeviceSpec>,
+    opts: EngineOptions,
+) -> hydra::Result<RunReport> {
+    let mut session = Session::builder(Cluster::heterogeneous(specs, 64 * GIB))
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts)
+        .build()?;
+    for t in tasks {
+        session.submit(t)?;
+    }
+    Ok(session.run()?.run)
+}
+
 #[test]
 fn faster_device_retires_units_proportionally_sooner() {
     let mk = |speed: f64| {
-        let specs = [DeviceSpec { mem_bytes: GIB, speed, link: None }];
-        let mut backend = SimBackend::deterministic();
-        let mut engine = SharpEngine::with_devices(
+        let specs = vec![DeviceSpec { mem_bytes: GIB, speed, link: None }];
+        run_hetero(
             vec![uniform_task(0, 1, 2, 1.0)], // 6s at reference speed
-            &specs,
-            64 * GIB,
-            sched::by_name("sharded-lrtf").unwrap(),
-            &mut backend,
+            specs,
             zero_transfer_opts(),
         )
-        .unwrap();
-        engine.run().unwrap().makespan
+        .unwrap()
+        .makespan
     };
     assert!((mk(1.0) - 6.0).abs() < 1e-9);
     assert!((mk(2.0) - 3.0).abs() < 1e-9);
@@ -290,23 +337,13 @@ fn faster_device_retires_units_proportionally_sooner() {
 #[test]
 fn per_device_link_charges_transfers_at_device_bandwidth() {
     let mk = |link: Option<TransferModel>| {
-        let specs = [DeviceSpec { mem_bytes: 4 * GIB, speed: 1.0, link }];
-        let mut backend = SimBackend::deterministic();
+        let specs = vec![DeviceSpec { mem_bytes: 4 * GIB, speed: 1.0, link }];
         let opts = EngineOptions {
             transfer: TransferModel::pcie_gen3(),
             double_buffer: false,
             ..Default::default()
         };
-        let mut engine = SharpEngine::with_devices(
-            vec![uniform_task(0, 2, 2, 0.01)],
-            &specs,
-            64 * GIB,
-            sched::by_name("sharded-lrtf").unwrap(),
-            &mut backend,
-            opts,
-        )
-        .unwrap();
-        engine.run().unwrap()
+        run_hetero(vec![uniform_task(0, 2, 2, 0.01)], specs, opts).unwrap()
     };
     let slow = mk(None); // engine-wide pcie gen3
     let fast = mk(Some(TransferModel::pcie_gen4()));
@@ -321,16 +358,9 @@ fn per_device_link_charges_transfers_at_device_bandwidth() {
 
 #[test]
 fn invalid_device_speed_is_rejected() {
-    let mut backend = SimBackend::deterministic();
-    let specs = [DeviceSpec { mem_bytes: GIB, speed: 0.0, link: None }];
-    let r = SharpEngine::with_devices(
-        vec![uniform_task(0, 1, 1, 1.0)],
-        &specs,
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    );
+    // caught at Session::build by Cluster::validate, before the engine
+    let specs = vec![DeviceSpec { mem_bytes: GIB, speed: 0.0, link: None }];
+    let r = Session::builder(Cluster::heterogeneous(specs, 64 * GIB)).build();
     assert!(r.is_err());
 }
 
@@ -340,21 +370,11 @@ fn unequal_capacity_ledgers_complete_and_size_zones_per_device() {
     let tasks: Vec<ModelTask> =
         (0..4).map(|i| uniform_task(i, 2, 2, 0.5)).collect();
     let total: u64 = tasks.iter().map(|t| t.total_units()).sum();
-    let specs = [
+    let specs = vec![
         DeviceSpec { mem_bytes: GIB, speed: 1.0, link: None },
         DeviceSpec { mem_bytes: 256 << 20, speed: 1.0, link: None },
     ];
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::with_devices(
-        tasks,
-        &specs,
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    )
-    .unwrap();
-    let r = engine.run().unwrap();
+    let r = run_hetero(tasks, specs, zero_transfer_opts()).unwrap();
     assert_eq!(r.units_executed, total);
     // both devices actually computed (the small one was usable)
     let devices_used: std::collections::BTreeSet<usize> = r
@@ -372,20 +392,10 @@ fn oversized_shard_on_small_device_is_clean_oom() {
     // a shard that fits the big device but not the small one: the engine
     // surfaces DeviceOom instead of silently over-packing the ledger
     let tasks = vec![uniform_task(0, 1, 1, 1.0)]; // 100 MiB params/shard
-    let specs = [
+    let specs = vec![
         DeviceSpec { mem_bytes: 64 << 20, speed: 1.0, link: None }, // too small
     ];
-    let mut backend = SimBackend::deterministic();
-    let mut engine = SharpEngine::with_devices(
-        tasks,
-        &specs,
-        64 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        zero_transfer_opts(),
-    )
-    .unwrap();
-    let err = engine.run().unwrap_err();
+    let err = run_hetero(tasks, specs, zero_transfer_opts()).unwrap_err();
     assert!(
         matches!(err, hydra::HydraError::DeviceOom { .. }),
         "expected OOM, got {err:?}"
@@ -403,23 +413,22 @@ fn run_table2_workload(workload: &[WorkloadModel], queue: QueueKind) -> RunRepor
         ..Default::default()
     };
     let tasks = build_tasks(workload, &gpu, policy).unwrap();
-    let mut backend = SimBackend::deterministic();
     let opts = EngineOptions {
         buffer_frac: 0.30,
         record_intervals: false,
         queue,
         ..Default::default()
     };
-    let mut engine = SharpEngine::new(
-        tasks,
-        &vec![gpu.mem_bytes; 8],
-        500 * GIB,
-        sched::by_name("sharded-lrtf").unwrap(),
-        &mut backend,
-        opts,
-    )
-    .unwrap();
-    engine.run().unwrap()
+    let mut session = Session::builder(Cluster::uniform(8, gpu.mem_bytes, 500 * GIB))
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts)
+        .build()
+        .unwrap();
+    for t in tasks {
+        session.submit(t).unwrap();
+    }
+    session.run().unwrap().run
 }
 
 #[test]
@@ -456,13 +465,7 @@ fn heap_and_scan_queues_agree_under_online_traffic() {
             })
             .collect();
         let opts = EngineOptions { queue, ..zero_transfer_opts() };
-        run(
-            tasks,
-            2,
-            opts,
-            "sharded-lrtf",
-            vec![JobEvent::Cancel { time: 4.0, model: 5 }],
-        )
+        run_with_cancels(tasks, 2, opts, Policy::ShardedLrtf, &[(5, 4.0)])
     };
     let heap = mk(QueueKind::Heap);
     let scan = mk(QueueKind::LinearScan);
@@ -491,15 +494,18 @@ fn prop_online_invariants_hold() {
             })
             .collect();
         let cancel_model = rng.below(n_models as u64 * 2) as usize; // may miss
-        let jobs = if cancel_model < n_models {
-            vec![JobEvent::Cancel {
-                time: rng.range_f64(0.0, 10.0),
-                model: cancel_model,
-            }]
+        let cancels: Vec<(usize, f64)> = if cancel_model < n_models {
+            vec![(cancel_model, rng.range_f64(0.0, 10.0))]
         } else {
             vec![]
         };
-        let r = run(tasks, devices, zero_transfer_opts(), "sharded-lrtf", jobs);
+        let r = run_with_cancels(
+            tasks,
+            devices,
+            zero_transfer_opts(),
+            Policy::ShardedLrtf,
+            &cancels,
+        );
 
         // every non-cancelled job finishes with all its units
         for j in &r.jobs {

@@ -1,11 +1,13 @@
 //! End-to-end integration over the REAL backend: the full stack composes —
 //! manifest -> pilot runs -> Algorithm-1 partitioning -> SHARP engine with
 //! spilling + double buffering -> PJRT execution of Pallas-bearing HLO ->
-//! Rust optimizer steps. Requires `make artifacts` (skips otherwise).
+//! Rust optimizer steps, all through the `Session` front door. Requires
+//! `make artifacts` (skips otherwise).
 
 use hydra::coordinator::sharp::{EngineOptions, ParallelMode, TransferModel};
-use hydra::coordinator::{Cluster, ModelOrchestrator};
+use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
+use hydra::session::{Backend, Policy, Session, SessionReport};
 use hydra::train::optimizer::OptKind;
 
 const MIB: u64 = 1 << 20;
@@ -28,18 +30,42 @@ fn spec(name: &str, config: &str, lr: f32, mbs: u32, seed: u64) -> RealModelSpec
     }
 }
 
+/// Real-backend session over `cluster`; submit `specs`, run, report.
+fn train(
+    cluster: Cluster,
+    policy: Policy,
+    options: EngineOptions,
+    specs: Vec<RealModelSpec>,
+) -> hydra::Result<SessionReport> {
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(policy)
+        .options(options)
+        .build()?;
+    for s in specs {
+        session.submit(s)?;
+    }
+    session.run()
+}
+
 #[test]
 fn two_models_train_and_losses_drop() {
     if !artifacts_present() {
         eprintln!("skipping: artifacts/ not built");
         return;
     }
-    let mut orch = ModelOrchestrator::new("artifacts");
-    orch.add_task(spec("lm-a", "tiny-lm-b4", 0.05, 6, 1));
-    orch.add_task(spec("lm-b", "tiny-lm-b4", 0.02, 6, 2));
     // 768 KiB virtual GPUs force multi-shard partitioning (real spilling path)
     let cluster = Cluster::uniform(2, 768 * 1024, 4096 * MIB);
-    let report = orch.train_models(&cluster).unwrap();
+    let report = train(
+        cluster,
+        Policy::ShardedLrtf,
+        EngineOptions::default(),
+        vec![
+            spec("lm-a", "tiny-lm-b4", 0.05, 6, 1),
+            spec("lm-b", "tiny-lm-b4", 0.02, 6, 2),
+        ],
+    )
+    .unwrap();
 
     assert_eq!(report.losses.len(), 2);
     for (m, losses) in report.losses.iter().enumerate() {
@@ -62,10 +88,15 @@ fn training_is_deterministic_for_fixed_seed() {
         return;
     }
     let run = || {
-        let mut orch = ModelOrchestrator::new("artifacts");
-        orch.add_task(spec("det", "tiny-lm-b4", 0.03, 3, 42));
-        let cluster = Cluster::uniform(1, 2 * MIB, 1024 * MIB);
-        orch.train_models(&cluster).unwrap().losses[0].clone()
+        train(
+            Cluster::uniform(1, 2 * MIB, 1024 * MIB),
+            Policy::ShardedLrtf,
+            EngineOptions::default(),
+            vec![spec("det", "tiny-lm-b4", 0.03, 3, 42)],
+        )
+        .unwrap()
+        .losses[0]
+            .clone()
     };
     let a = run();
     let b = run();
@@ -80,28 +111,33 @@ fn schedule_order_does_not_change_model_numerics() {
     if !artifacts_present() {
         return;
     }
-    let run = |sched: &str, mode: ParallelMode, db: bool| {
-        let mut orch = ModelOrchestrator::new("artifacts");
-        orch.add_task(spec("x0", "tiny-lm-b4", 0.03, 3, 7));
-        orch.add_task(spec("x1", "tiny-lm-b4", 0.05, 3, 8));
-        orch.scheduler = sched.to_string();
-        orch.engine_options = EngineOptions {
+    let run = |policy: Policy, mode: ParallelMode, db: bool| {
+        let options = EngineOptions {
             mode,
             double_buffer: db,
             transfer: TransferModel::pcie_gen3(),
             ..Default::default()
         };
-        let cluster = Cluster::uniform(2, 2 * MIB, 1024 * MIB);
-        let r = orch.train_models(&cluster).unwrap();
-        r.losses
+        let report = train(
+            Cluster::uniform(2, 2 * MIB, 1024 * MIB),
+            policy,
+            options,
+            vec![
+                spec("x0", "tiny-lm-b4", 0.03, 3, 7),
+                spec("x1", "tiny-lm-b4", 0.05, 3, 8),
+            ],
+        )
+        .unwrap();
+        report
+            .losses
             .iter()
             .map(|l| l.iter().map(|&(_, v)| v).collect::<Vec<f32>>())
             .collect::<Vec<_>>()
     };
-    let base = run("sharded-lrtf", ParallelMode::Sharp, true);
-    assert_eq!(base, run("random", ParallelMode::Sharp, true));
-    assert_eq!(base, run("fifo", ParallelMode::Sharp, false));
-    assert_eq!(base, run("sharded-lrtf", ParallelMode::Sequential, false));
+    let base = run(Policy::ShardedLrtf, ParallelMode::Sharp, true);
+    assert_eq!(base, run(Policy::Random, ParallelMode::Sharp, true));
+    assert_eq!(base, run(Policy::Fifo, ParallelMode::Sharp, false));
+    assert_eq!(base, run(Policy::ShardedLrtf, ParallelMode::Sequential, false));
 }
 
 #[test]
@@ -113,20 +149,23 @@ fn adam_and_momentum_paths_work_end_to_end() {
         OptKind::Momentum { beta: 0.9 },
         OptKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
     ] {
-        let mut orch = ModelOrchestrator::new("artifacts");
-        orch.add_task(RealModelSpec {
-            name: format!("{opt:?}"),
-            config: "tiny-lm-b4".into(),
-            lr: if matches!(opt, OptKind::Adam { .. }) { 0.002 } else { 0.02 },
-            opt,
-            epochs: 1,
-            minibatches_per_epoch: 4,
-            seed: 3,
-            inference: false,
-            arrival: 0.0,
-        });
-        let cluster = Cluster::uniform(1, 2 * MIB, 1024 * MIB);
-        let report = orch.train_models(&cluster).unwrap();
+        let report = train(
+            Cluster::uniform(1, 2 * MIB, 1024 * MIB),
+            Policy::ShardedLrtf,
+            EngineOptions::default(),
+            vec![RealModelSpec {
+                name: format!("{opt:?}"),
+                config: "tiny-lm-b4".into(),
+                lr: if matches!(opt, OptKind::Adam { .. }) { 0.002 } else { 0.02 },
+                opt,
+                epochs: 1,
+                minibatches_per_epoch: 4,
+                seed: 3,
+                inference: false,
+                arrival: 0.0,
+            }],
+        )
+        .unwrap();
         let l = &report.losses[0];
         assert!(l.last().unwrap().1 < l[0].1, "{opt:?}: {l:?}");
     }
@@ -137,10 +176,13 @@ fn cls_config_trains_too() {
     if !artifacts_present() {
         return;
     }
-    let mut orch = ModelOrchestrator::new("artifacts");
-    orch.add_task(spec("vit", "tiny-cls-b8", 0.05, 6, 5));
-    let cluster = Cluster::uniform(2, 2 * MIB, 1024 * MIB);
-    let report = orch.train_models(&cluster).unwrap();
+    let report = train(
+        Cluster::uniform(2, 2 * MIB, 1024 * MIB),
+        Policy::ShardedLrtf,
+        EngineOptions::default(),
+        vec![spec("vit", "tiny-cls-b8", 0.05, 6, 5)],
+    )
+    .unwrap();
     let l = &report.losses[0];
     assert_eq!(l.len(), 6);
     // 10-class CE starts near ln(10) = 2.30
@@ -153,11 +195,13 @@ fn oversized_model_on_tiny_device_is_clean_oom() {
     if !artifacts_present() {
         return;
     }
-    let mut orch = ModelOrchestrator::new("artifacts");
-    orch.add_task(spec("big", "tiny-lm-b4", 0.01, 1, 1));
     // device too small for even one layer + buffer zone
-    let cluster = Cluster::uniform(1, 64 * 1024, 1024 * MIB);
-    let err = match orch.train_models(&cluster) {
+    let err = match train(
+        Cluster::uniform(1, 64 * 1024, 1024 * MIB),
+        Policy::ShardedLrtf,
+        EngineOptions::default(),
+        vec![spec("big", "tiny-lm-b4", 0.01, 1, 1)],
+    ) {
         Err(e) => e,
         Ok(_) => panic!("expected OOM, training succeeded"),
     };
@@ -172,12 +216,15 @@ fn inference_mode_runs_forward_only() {
     if !artifacts_present() {
         return;
     }
-    let mut orch = ModelOrchestrator::new("artifacts");
     let mut s = spec("infer", "tiny-lm-b4", 0.0, 5, 9);
     s.inference = true;
-    orch.add_task(s);
-    let cluster = Cluster::uniform(1, 768 * 1024, 1024 * MIB);
-    let report = orch.train_models(&cluster).unwrap();
+    let report = train(
+        Cluster::uniform(1, 768 * 1024, 1024 * MIB),
+        Policy::ShardedLrtf,
+        EngineOptions::default(),
+        vec![s],
+    )
+    .unwrap();
     let losses = &report.losses[0];
     assert_eq!(losses.len(), 5);
     // no training: every batch's NLL stays at the random-init level
@@ -195,17 +242,20 @@ fn median_early_stopping_drops_losers() {
     if !artifacts_present() {
         return;
     }
-    let mut orch = ModelOrchestrator::new("artifacts");
     // 3 models, 4 epochs x 3 minibatches; lr=0 cannot learn and must be
     // dropped by the median rule after epoch 2
+    let mut session = Session::builder(Cluster::uniform(2, 2 * MIB, 1024 * MIB))
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(Policy::ShardedLrtf)
+        .early_stop_median_after(2)
+        .build()
+        .unwrap();
     for (i, lr) in [0.06f32, 0.04, 0.0].into_iter().enumerate() {
         let mut s = spec(&format!("m{i}"), "tiny-lm-b4", lr, 3, 11 + i as u64);
         s.epochs = 4;
-        orch.add_task(s);
+        session.submit(s).unwrap();
     }
-    orch.early_stop_median_after = Some(2);
-    let cluster = Cluster::uniform(2, 2 * MIB, 1024 * MIB);
-    let report = orch.train_models(&cluster).unwrap();
+    let report = session.run().unwrap();
     let steps: Vec<usize> = report.losses.iter().map(|l| l.len()).collect();
     // learners run all 12 steps; the lr=0 model is cut short
     assert_eq!(steps[0], 12, "{steps:?}");

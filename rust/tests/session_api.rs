@@ -1,0 +1,314 @@
+//! Equivalence suite for the `Session` redesign: the new front door must
+//! produce byte-identical `RunReport`s to the pre-redesign construction
+//! paths (raw `SharpEngine` wiring with `sched::by_name` strings, raw
+//! `JobEvent` vectors, the `ModelOrchestrator`) on the Table-2 and online
+//! workloads — plus `Policy` parse/display round-trips.
+
+use hydra::coordinator::partitioner::PartitionPolicy;
+use hydra::coordinator::sched;
+use hydra::coordinator::sharp::{
+    EngineOptions, JobEvent, ParallelMode, RunReport, SharpEngine, TransferModel,
+};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::Cluster;
+use hydra::exec::SimBackend;
+use hydra::session::{Backend, Policy, Session};
+use hydra::sim::{bert_grid, build_tasks, vit_grid, GpuSpec, WorkloadModel};
+
+const GIB: u64 = 1 << 30;
+const DRAM: u64 = 500 << 30;
+
+/// The pre-redesign construction path, verbatim: deterministic sim backend,
+/// `SharpEngine::new` positional wiring, stringly-named scheduler, raw
+/// `JobEvent` vector.
+fn legacy_run(
+    tasks: Vec<ModelTask>,
+    n_devices: usize,
+    device_mem: u64,
+    opts: EngineOptions,
+    scheduler: &str,
+    job_events: Vec<JobEvent>,
+) -> RunReport {
+    let mut backend = SimBackend::deterministic();
+    let mut engine = SharpEngine::new(
+        tasks,
+        &vec![device_mem; n_devices],
+        DRAM,
+        sched::by_name(scheduler).unwrap(),
+        &mut backend,
+        opts,
+    )
+    .unwrap()
+    .with_job_events(job_events);
+    engine.run().unwrap()
+}
+
+/// The same run through the new front door.
+fn session_run(
+    tasks: Vec<ModelTask>,
+    n_devices: usize,
+    device_mem: u64,
+    opts: EngineOptions,
+    policy: Policy,
+) -> RunReport {
+    let mut session = Session::builder(Cluster::uniform(n_devices, device_mem, DRAM))
+        .backend(Backend::sim())
+        .policy(policy)
+        .options(opts)
+        .build()
+        .unwrap();
+    for t in tasks {
+        session.submit(t).unwrap();
+    }
+    session.run().unwrap().run
+}
+
+fn assert_identical(old: &RunReport, new: &RunReport, what: &str) {
+    assert_eq!(format!("{old:?}"), format!("{new:?}"), "{what}: reports differ");
+}
+
+fn table2_tasks(grid: &[WorkloadModel]) -> Vec<ModelTask> {
+    let gpu = GpuSpec::rtx2080ti();
+    let policy = PartitionPolicy { buffer_frac: 0.30, ..Default::default() };
+    build_tasks(grid, &gpu, policy).unwrap()
+}
+
+#[test]
+fn session_matches_legacy_engine_on_table2_workloads() {
+    let gpu = GpuSpec::rtx2080ti();
+    for (name, grid) in [("bert", bert_grid(2)), ("vit", vit_grid(2))] {
+        let opts = EngineOptions {
+            buffer_frac: 0.30,
+            transfer: TransferModel::pcie_gen3(),
+            record_intervals: false,
+            ..Default::default()
+        };
+        let old = legacy_run(
+            table2_tasks(&grid),
+            8,
+            gpu.mem_bytes,
+            opts.clone(),
+            "sharded-lrtf",
+            vec![],
+        );
+        let new = session_run(
+            table2_tasks(&grid),
+            8,
+            gpu.mem_bytes,
+            opts,
+            Policy::ShardedLrtf,
+        );
+        assert_identical(&old, &new, name);
+        assert!(old.makespan > 0.0);
+    }
+}
+
+#[test]
+fn run_hydra_wrapper_matches_legacy_engine() {
+    // figures::run_hydra is now a thin Session wrapper; it must still equal
+    // the pre-redesign inline wiring it replaced, byte for byte.
+    let gpu = GpuSpec::rtx2080ti();
+    let grid = bert_grid(2);
+    let opts = EngineOptions {
+        mode: ParallelMode::Sharp,
+        double_buffer: true,
+        buffer_frac: 0.30,
+        transfer: TransferModel::pcie_gen3(),
+        record_intervals: false,
+        ..Default::default()
+    };
+    let old = legacy_run(
+        table2_tasks(&grid),
+        8,
+        gpu.mem_bytes,
+        opts,
+        "sharded-lrtf",
+        vec![],
+    );
+    let new = hydra::figures::run_hydra(
+        table2_tasks(&grid),
+        8,
+        gpu.mem_bytes,
+        ParallelMode::Sharp,
+        true,
+        Policy::ShardedLrtf,
+    )
+    .unwrap();
+    assert_identical(&old, &new, "run_hydra");
+}
+
+#[test]
+fn session_matches_legacy_engine_with_trace_recording() {
+    // record_intervals on: the observer-fed TraceRecorder must reproduce
+    // the seed engine's inline interval log exactly (order included).
+    let gpu = GpuSpec::rtx2080ti();
+    let grid = vit_grid(1);
+    let opts = EngineOptions {
+        buffer_frac: 0.30,
+        transfer: TransferModel::pcie_gen3(),
+        record_intervals: true,
+        ..Default::default()
+    };
+    let old = legacy_run(
+        table2_tasks(&grid),
+        4,
+        gpu.mem_bytes,
+        opts.clone(),
+        "sharded-lrtf",
+        vec![],
+    );
+    let new = session_run(table2_tasks(&grid), 4, gpu.mem_bytes, opts, Policy::ShardedLrtf);
+    assert!(!old.trace.intervals.is_empty());
+    assert_identical(&old, &new, "trace recording");
+}
+
+fn online_task(id: usize, shards: usize, mbs: u32, cost: f64) -> ModelTask {
+    let sd: Vec<ShardDesc> = (0..shards)
+        .map(|_| ShardDesc {
+            param_bytes: 100 << 20,
+            fwd_transfer_bytes: 50 << 20,
+            bwd_transfer_bytes: 50 << 20,
+            activation_bytes: 4 << 20,
+            fwd_cost: cost,
+            bwd_cost: 2.0 * cost,
+            n_layers: 1,
+        })
+        .collect();
+    ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, 1, 1e-3)
+}
+
+#[test]
+fn session_matches_legacy_engine_on_online_workload() {
+    // arrivals, a mid-run submission and a cancellation: raw JobEvent
+    // wiring vs Session handles (submit_at / cancel_at)
+    let opts = EngineOptions {
+        transfer: TransferModel::zero_cost(),
+        ..Default::default()
+    };
+
+    let construction = vec![
+        online_task(0, 2, 3, 0.5),
+        online_task(1, 1, 2, 1.0).with_arrival(2.0),
+    ];
+    let late_legacy = online_task(2, 1, 2, 0.7).with_arrival(5.0);
+    let old = legacy_run(
+        construction.clone(),
+        2,
+        GIB,
+        opts.clone(),
+        "sharded-lrtf",
+        vec![
+            JobEvent::Submit { time: 5.0, task: late_legacy },
+            JobEvent::Cancel { time: 6.0, model: 1 },
+        ],
+    );
+
+    let mut session = Session::builder(Cluster::uniform(2, GIB, DRAM))
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts)
+        .build()
+        .unwrap();
+    let mut handles = Vec::new();
+    for t in construction {
+        handles.push(session.submit(t).unwrap());
+    }
+    // same name as the legacy task; the session reassigns the id itself
+    let late = online_task(2, 1, 2, 0.7).with_arrival(5.0);
+    let late_h = session.submit_at(late, 5.0).unwrap();
+    session.cancel_at(handles[1], 6.0).unwrap();
+    let report = session.run().unwrap();
+
+    assert_identical(&old, &report.run, "online");
+    assert_eq!(report.model_of(late_h), Some(2));
+    assert!(report.job(handles[1]).unwrap().cancelled);
+}
+
+#[test]
+#[allow(deprecated)]
+fn orchestrator_shim_matches_session_on_real_backend() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    use hydra::coordinator::ModelOrchestrator;
+    use hydra::exec::real::RealModelSpec;
+    use hydra::train::optimizer::OptKind;
+
+    let mib = 1u64 << 20;
+    let specs = |offset: u64| -> Vec<RealModelSpec> {
+        (0..2)
+            .map(|i| RealModelSpec {
+                name: format!("eq-{i}"),
+                config: "tiny-lm-b4".into(),
+                lr: 0.03 + 0.01 * i as f32,
+                opt: OptKind::Sgd,
+                epochs: 1,
+                minibatches_per_epoch: 3,
+                seed: offset + i,
+                inference: false,
+                arrival: 0.0,
+            })
+            .collect()
+    };
+    let cluster = Cluster::uniform(2, 2 * mib, 1024 * mib);
+
+    let mut orch = ModelOrchestrator::new("artifacts");
+    for s in specs(17) {
+        orch.add_task(s);
+    }
+    let old = orch.train_models(&cluster).unwrap();
+
+    let mut session = Session::builder(cluster)
+        .backend(Backend::Real { manifest: "artifacts".into() })
+        .policy(Policy::ShardedLrtf)
+        .build()
+        .unwrap();
+    for s in specs(17) {
+        session.submit(s).unwrap();
+    }
+    let new = session.run().unwrap();
+
+    assert_identical(&old.run, &new.run, "real backend");
+    assert_eq!(old.losses, new.losses);
+}
+
+// ---------------------------------------------------------------------------
+// Policy round-trips: the FromStr shim is the only string surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_policy_name_round_trips() {
+    for p in Policy::ALL {
+        let parsed: Policy = p.name().parse().unwrap();
+        assert_eq!(parsed, p);
+        assert_eq!(p.to_string(), p.name());
+        // display name matches the built scheduler's self-reported name,
+        // which is what RunReport::scheduler carries
+        assert_eq!(p.build().name(), p.name());
+        // the legacy by_name shim agrees
+        assert_eq!(sched::by_name(p.name()).unwrap().name(), p.name());
+    }
+}
+
+#[test]
+fn policy_parse_accepts_alias_and_rejects_unknown() {
+    assert_eq!("lrtf".parse::<Policy>().unwrap(), Policy::ShardedLrtf);
+    assert!("gurobi".parse::<Policy>().is_err());
+    assert!("".parse::<Policy>().is_err());
+    assert!(sched::by_name("gurobi").is_none());
+}
+
+#[test]
+fn run_report_scheduler_field_matches_policy() {
+    for p in [Policy::ShardedLrtf, Policy::Fifo, Policy::Srtf] {
+        let r = session_run(
+            vec![online_task(0, 1, 1, 1.0)],
+            1,
+            GIB,
+            EngineOptions { transfer: TransferModel::zero_cost(), ..Default::default() },
+            p,
+        );
+        assert_eq!(r.scheduler, p.name());
+    }
+}
