@@ -1,11 +1,12 @@
-//! Bench: regenerate Table 3 (ablation: SHARP / double-buffering, plus the
-//! paper-design full-state-spilling fidelity rows).
+//! Bench: regenerate Table 3 (ablation: SHARP / double-buffering, the
+//! paper-design full-state-spilling fidelity rows, plus the NVMe-backed
+//! memory-hierarchy arm running DRAM at 75% of the aggregate parameters).
 
 use hydra::figures;
 use hydra::util::bench::run_once;
 
 fn main() {
-    let (fig, _) = run_once("table3 (5 ablation levels, 16x1B models)", || {
+    let (fig, _) = run_once("table3 (6 ablation levels, 16x1B models)", || {
         figures::table3().unwrap()
     });
     fig.print();

@@ -21,6 +21,11 @@
 //! }
 //! ```
 //!
+//! The cluster may carry an NVMe backing tier — `"nvme": "4096:3.5"`
+//! (capacity in GiB, bandwidth in GB/s, bandwidth optional) — which turns
+//! DRAM into an evicting cache so the task set's aggregate parameters may
+//! exceed `dram_mib`.
+//!
 //! Clusters may be heterogeneous: `"device_mem_mib_each": [4, 2, 8]` gives
 //! per-device memories, `"device_classes": ["a4000", "a6000"]` builds a
 //! mixed pool of named GPU classes (per-class memory, relative speed, and
@@ -29,6 +34,7 @@
 //! with the `hydra simulate --online --pool` flag. Tasks may carry an
 //! `"arrival"` time in virtual seconds — the online multi-tenant setting.
 
+use crate::coordinator::memory::TierSpec;
 use crate::coordinator::sched::Policy;
 use crate::coordinator::sharp::{DeviceSpec, EngineOptions, ParallelMode, QueueKind};
 use crate::coordinator::Cluster;
@@ -46,6 +52,10 @@ pub struct WorkloadSpec {
     pub engine: EngineOptions,
     /// Typed scheduling policy (parsed from the spec's `"scheduler"`).
     pub policy: Policy,
+    /// Optional NVMe backing tier below DRAM (cluster key `"nvme":
+    /// "<capacity-gib>[:<gbps>]"`) — lets the task set's aggregate
+    /// parameters exceed `dram_mib`.
+    pub nvme: Option<TierSpec>,
     pub early_stop_median_after: Option<u32>,
     pub tasks: Vec<RealModelSpec>,
 }
@@ -67,6 +77,15 @@ impl WorkloadSpec {
         let c = j.get("cluster").ok_or_else(|| cerr("missing cluster"))?;
         let mib = 1u64 << 20;
         let dram_bytes = c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib;
+        let nvme = match c.get("nvme") {
+            None => None,
+            Some(v) => {
+                let text = v.as_str().ok_or_else(|| {
+                    cerr(r#"nvme must be a string like "4096:3.5" (GiB:GB/s)"#)
+                })?;
+                Some(TierSpec::parse(text)?)
+            }
+        };
         let cluster = if let Some(pool) = c.get("pool") {
             // compact heterogeneous form, shared with the --pool CLI flag
             let s = pool
@@ -193,6 +212,7 @@ impl WorkloadSpec {
             cluster,
             engine,
             policy,
+            nvme,
             early_stop_median_after: early_stop,
             tasks,
         })
@@ -205,6 +225,9 @@ impl WorkloadSpec {
             .backend(Backend::Real { manifest: manifest_dir.to_string() })
             .policy(self.policy)
             .options(self.engine.clone());
+        if let Some(tier) = self.nvme {
+            builder = builder.nvme(tier);
+        }
         if let Some(min_epochs) = self.early_stop_median_after {
             builder = builder.early_stop_median_after(min_epochs);
         }
@@ -340,6 +363,34 @@ mod tests {
         assert_eq!(mk("heap").unwrap().engine.queue, QueueKind::Heap);
         assert_eq!(mk("scan").unwrap().engine.queue, QueueKind::LinearScan);
         assert!(mk("fibheap").is_err());
+    }
+
+    #[test]
+    fn nvme_key_parses_and_flows_into_the_session() {
+        let spec = r#"{
+          "cluster": { "devices": 1, "device_mem_mib": 1, "dram_mib": 2,
+                       "nvme": "2048:3.5" },
+          "tasks": [ { "config": "tiny-lm-b4", "minibatches": 1 } ]
+        }"#;
+        let w = WorkloadSpec::parse(spec).unwrap();
+        let t = w.nvme.unwrap();
+        assert_eq!(t.capacity_bytes, 2048 << 30);
+        assert!((t.link.bandwidth_bytes_per_sec - 3.5e9).abs() < 1e-3);
+        assert!(w.session("artifacts").is_ok());
+        // no key -> no tier
+        let none = r#"{
+          "cluster": { "devices": 1, "device_mem_mib": 1 },
+          "tasks": [ { "config": "x", "minibatches": 1 } ]
+        }"#;
+        assert!(WorkloadSpec::parse(none).unwrap().nvme.is_none());
+        // malformed specs are rejected
+        for bad in [r#""nvme": 7"#, r#""nvme": "fast""#, r#""nvme": "0:3""#] {
+            let spec = format!(
+                r#"{{"cluster": {{"devices":1,"device_mem_mib":1,{bad}}},
+                     "tasks":[{{"config":"x","minibatches":1}}]}}"#
+            );
+            assert!(WorkloadSpec::parse(&spec).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -54,11 +54,24 @@ impl DoubleBuffer {
 
     /// Begin prefetching a shard into the zone at time `now`; the transfer
     /// takes `transfer_secs`. Overwrites any previous staging (the engine
-    /// never stages two shards at once per device).
-    pub fn stage(&mut self, model: usize, shard: u32, bytes: u64, now: f64, transfer_secs: f64) {
-        debug_assert!(self.enabled);
-        debug_assert!(bytes <= self.zone_bytes, "shard exceeds buffer zone");
+    /// never stages two shards at once per device). Returns whether the
+    /// shard was staged: a shard larger than the zone (or a disabled
+    /// buffer) is refused — in release builds too, so callers fall back to
+    /// a synchronous transfer instead of silently overcommitting the zone.
+    #[must_use]
+    pub fn stage(
+        &mut self,
+        model: usize,
+        shard: u32,
+        bytes: u64,
+        now: f64,
+        transfer_secs: f64,
+    ) -> bool {
+        if !self.enabled || bytes > self.zone_bytes {
+            return false;
+        }
         self.staged = Some(StagedShard { model, shard, bytes, ready_at: now + transfer_secs });
+        true
     }
 
     /// At unit start time `now`, consume the staged shard if it matches.
@@ -108,7 +121,7 @@ mod tests {
         let mut l = ledger();
         let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
         // prefetch starts at t=0, takes 2s; unit starts at t=5 (compute hid it)
-        b.stage(3, 1, 80, 0.0, 2.0);
+        assert!(b.stage(3, 1, 80, 0.0, 2.0));
         let stall = b.consume(3, 1, 5.0).unwrap();
         assert_eq!(stall, 0.0);
         assert!(b.staged().is_none());
@@ -118,7 +131,7 @@ mod tests {
     fn slow_transfer_produces_partial_stall() {
         let mut l = ledger();
         let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
-        b.stage(3, 1, 80, 0.0, 7.0);
+        assert!(b.stage(3, 1, 80, 0.0, 7.0));
         let stall = b.consume(3, 1, 5.0).unwrap();
         assert!((stall - 2.0).abs() < 1e-12);
     }
@@ -127,17 +140,35 @@ mod tests {
     fn mismatched_consume_returns_none() {
         let mut l = ledger();
         let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
-        b.stage(3, 1, 80, 0.0, 1.0);
+        assert!(b.stage(3, 1, 80, 0.0, 1.0));
         assert!(b.consume(4, 1, 2.0).is_none());
         // staging preserved for the matching consumer
         assert!(b.staged().is_some());
     }
 
     #[test]
+    fn oversized_shard_is_refused_not_overcommitted() {
+        let mut l = ledger();
+        let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
+        // larger than the zone: refused in release builds too
+        assert!(!b.stage(3, 1, 200, 0.0, 1.0));
+        assert!(b.staged().is_none());
+        assert!(b.consume(3, 1, 2.0).is_none());
+    }
+
+    #[test]
+    fn disabled_buffer_refuses_staging() {
+        let mut l = ledger();
+        let mut b = DoubleBuffer::new(false, 100, &mut l).unwrap();
+        assert!(!b.stage(1, 0, 10, 0.0, 1.0));
+        assert!(b.staged().is_none());
+    }
+
+    #[test]
     fn clear_drops_staging() {
         let mut l = ledger();
         let mut b = DoubleBuffer::new(true, 100, &mut l).unwrap();
-        b.stage(1, 0, 10, 0.0, 1.0);
+        assert!(b.stage(1, 0, 10, 0.0, 1.0));
         b.clear();
         assert!(b.staged().is_none());
     }

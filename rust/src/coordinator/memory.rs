@@ -1,17 +1,510 @@
-//! Memory manager: the paper's *model spilling* substrate (§4.2, §4.5).
+//! Memory manager: the paper's *model spilling* substrate (§4.2, §4.5),
+//! generalized into a tiered HBM -> DRAM -> NVMe hierarchy.
 //!
 //! Every device has a byte-accurate ledger with an enforced capacity; model
-//! shards are *promoted* from the DRAM pool into a device ledger before
+//! shards are *promoted* from the host tiers into a device ledger before
 //! their unit runs and *demoted* back afterwards (unless cached for reuse —
 //! the §4.6 "serendipitous bonus"). The partitioner probes against this
 //! ledger exactly like Algorithm 1 probes a real GPU, and the double-buffer
 //! reserves its zone here. Capacities are per-ledger, so heterogeneous
-//! pools (unequal device memories) account correctly: each device's buffer
-//! zone and free space are derived from its own capacity.
+//! pools (unequal device memories) account correctly.
+//!
+//! Below the ledgers sits the [`MemoryHierarchy`], which replaces the old
+//! two-tier `DramPool`: shard parameters are *homed* per shard (DRAM
+//! preferred, NVMe overflow), and when an NVMe tier is configured DRAM
+//! becomes an evicting cache over it — LRU with pinning for staged /
+//! device-resident shards, eviction write-back charged on the NVMe link —
+//! instead of a hard "fits in DRAM" precondition. Promote/demote traffic is
+//! accounted per tier ([`TierTraffic`]) so reports can separate PCIe spill
+//! volume from NVMe stall volume.
 
 use std::collections::BTreeMap;
 
 use crate::error::{HydraError, Result};
+
+/// Link cost model for cross-tier transfers (DRAM<->device over PCIe,
+/// NVMe<->DRAM over the SSD link). Lives here so the memory hierarchy can
+/// own its tier links; the engine re-exports it as
+/// `coordinator::sharp::TransferModel` for compatibility.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferModel {
+    /// Sustained link bandwidth in bytes per second.
+    pub bandwidth_bytes_per_sec: f64,
+    /// Fixed per-transfer latency in seconds.
+    pub latency_secs: f64,
+}
+
+impl TransferModel {
+    /// PCIe gen3 x16-class link (the paper's testbed host link).
+    pub fn pcie_gen3() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: 12.0e9, latency_secs: 20e-6 }
+    }
+
+    /// PCIe gen4 x16-class link (A4000/A6000-era hosts).
+    pub fn pcie_gen4() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: 24.0e9, latency_secs: 20e-6 }
+    }
+
+    /// Datacenter NVMe-class link (~3 GB/s sustained, ~100 us latency).
+    pub fn nvme() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: 3.0e9, latency_secs: 100e-6 }
+    }
+
+    /// Instantaneous transfers (pure-scheduling studies, Fig 7).
+    pub fn zero_cost() -> TransferModel {
+        TransferModel { bandwidth_bytes_per_sec: f64::INFINITY, latency_secs: 0.0 }
+    }
+
+    /// Seconds to move `bytes` over this link.
+    pub fn secs(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            0.0
+        } else {
+            self.latency_secs + bytes as f64 / self.bandwidth_bytes_per_sec
+        }
+    }
+}
+
+/// Which hierarchy link a spill event moved over (for per-tier observer
+/// accounting: `Dram` is the DRAM<->device PCIe hop, `Nvme` the
+/// NVMe<->DRAM hop).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemTier {
+    /// DRAM <-> device (PCIe-class) transfers.
+    Dram,
+    /// NVMe <-> DRAM (SSD-class) transfers.
+    Nvme,
+}
+
+/// Capacity + link of one backing tier (the NVMe tier today).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    /// Usable tier capacity in bytes.
+    pub capacity_bytes: u64,
+    /// Link between this tier and the tier above it (NVMe<->DRAM).
+    pub link: TransferModel,
+}
+
+impl TierSpec {
+    /// An NVMe tier of `capacity_bytes` with the default NVMe-class link.
+    pub fn nvme(capacity_bytes: u64) -> TierSpec {
+        TierSpec { capacity_bytes, link: TransferModel::nvme() }
+    }
+
+    /// An effectively unlimited, zero-cost tier — used by the equivalence
+    /// tests to prove the hierarchy degenerates to the two-tier engine.
+    pub fn infinite() -> TierSpec {
+        TierSpec { capacity_bytes: u64::MAX, link: TransferModel::zero_cost() }
+    }
+
+    /// Parse the `--nvme` / config form `"<capacity-gib>[:<gbps>]"`, e.g.
+    /// `"4096:3.5"` = 4 TiB at 3.5 GB/s (bandwidth defaults to the
+    /// NVMe-class link when omitted).
+    pub fn parse(s: &str) -> Result<TierSpec> {
+        let bad = |what: &str| {
+            HydraError::Config(format!(
+                "bad NVMe tier spec {s:?}: {what} (expected <capacity-gib>[:<gbps>], \
+                 e.g. \"4096:3.5\")"
+            ))
+        };
+        let (cap, bw) = match s.split_once(':') {
+            Some((c, b)) => (c, Some(b)),
+            None => (s, None),
+        };
+        let cap_gib: f64 = cap.parse().map_err(|_| bad("capacity is not a number"))?;
+        if !cap_gib.is_finite() || cap_gib <= 0.0 {
+            return Err(bad("capacity must be positive"));
+        }
+        let link = match bw {
+            None => TransferModel::nvme(),
+            Some(b) => {
+                let gbps: f64 = b.parse().map_err(|_| bad("bandwidth is not a number"))?;
+                if !gbps.is_finite() || gbps <= 0.0 {
+                    return Err(bad("bandwidth must be positive"));
+                }
+                TransferModel { bandwidth_bytes_per_sec: gbps * 1e9, latency_secs: 100e-6 }
+            }
+        };
+        Ok(TierSpec {
+            capacity_bytes: (cap_gib * (1u64 << 30) as f64) as u64,
+            link,
+        })
+    }
+}
+
+/// Host-memory configuration of an engine run: the DRAM tier plus an
+/// optional NVMe backing tier. `u64` converts into the DRAM-only form, so
+/// legacy `dram_bytes` call sites keep working.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryOptions {
+    /// Size of the DRAM tier models spill to.
+    pub dram_bytes: u64,
+    /// Optional NVMe backing tier; `None` keeps the paper's "fits in DRAM"
+    /// precondition as a hard error.
+    pub nvme: Option<TierSpec>,
+}
+
+impl MemoryOptions {
+    /// The legacy two-tier configuration: DRAM only, no backing tier.
+    pub fn dram_only(dram_bytes: u64) -> MemoryOptions {
+        MemoryOptions { dram_bytes, nvme: None }
+    }
+
+    /// DRAM over an NVMe backing tier.
+    pub fn with_nvme(dram_bytes: u64, nvme: TierSpec) -> MemoryOptions {
+        MemoryOptions { dram_bytes, nvme: Some(nvme) }
+    }
+}
+
+impl From<u64> for MemoryOptions {
+    fn from(dram_bytes: u64) -> MemoryOptions {
+        MemoryOptions::dram_only(dram_bytes)
+    }
+}
+
+/// Cumulative byte traffic over one hierarchy link.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierTraffic {
+    /// Bytes moved *up* the hierarchy (toward the device).
+    pub promoted_bytes: u64,
+    /// Bytes moved *down* the hierarchy (away from the device).
+    pub demoted_bytes: u64,
+}
+
+/// Outcome of staging a shard up into DRAM: the synchronous NVMe-link time
+/// and the bytes that moved (all zero on a DRAM hit or without an NVMe
+/// tier).
+#[derive(Debug, Clone, Copy)]
+pub struct TierFetch {
+    /// Seconds of NVMe-link time (eviction write-back + fetch read).
+    pub secs: f64,
+    /// Bytes read NVMe->DRAM.
+    pub fetched_bytes: u64,
+    /// Bytes written DRAM->NVMe by evictions this fetch forced.
+    pub evicted_bytes: u64,
+}
+
+impl TierFetch {
+    /// A DRAM hit: nothing moved.
+    pub const NONE: TierFetch = TierFetch { secs: 0.0, fetched_bytes: 0, evicted_bytes: 0 };
+}
+
+/// Per-shard residency bookkeeping (only maintained when an NVMe tier is
+/// configured; the DRAM-only path keeps the legacy aggregate counter).
+#[derive(Debug, Clone)]
+struct ShardEntry {
+    /// Parameter bytes of the shard (weights + gradients + optimizer
+    /// state — the home-tier footprint).
+    bytes: u64,
+    /// Whether the shard currently lives in DRAM (else NVMe).
+    in_dram: bool,
+    /// Pin count: staged prefetches and device-resident copies pin the
+    /// DRAM slot (write-backs land there), making it ineligible for
+    /// eviction.
+    pins: u32,
+    /// LRU clock of the last touch.
+    last_touch: u64,
+}
+
+/// The tiered host-memory manager: a DRAM tier that is either the hard
+/// home of every model (no NVMe: the legacy two-tier behaviour, bit for
+/// bit) or an evicting cache over an NVMe backing tier.
+///
+/// Eviction policy: LRU over unpinned DRAM-resident shards, preferring the
+/// larger shard on recency ties (evicting fewer, bigger shards minimizes
+/// total write-back cost on the byte-proportional NVMe link). Pinned
+/// shards — staged in a double-buffer zone or resident on a device — are
+/// never evicted: demote write-backs must land in their DRAM slot.
+#[derive(Debug, Clone)]
+pub struct MemoryHierarchy {
+    dram_capacity: u64,
+    dram_used: u64,
+    nvme: Option<TierSpec>,
+    nvme_used: u64,
+    /// DRAM<->device traffic (the legacy promote/demote counters).
+    pub dram_traffic: TierTraffic,
+    /// NVMe<->DRAM traffic (zero without an NVMe tier).
+    pub nvme_traffic: TierTraffic,
+    entries: BTreeMap<(usize, u32), ShardEntry>,
+    clock: u64,
+}
+
+impl MemoryHierarchy {
+    /// Build the hierarchy from a [`MemoryOptions`] (or a bare `dram_bytes`
+    /// via `From<u64>`).
+    pub fn new(options: impl Into<MemoryOptions>) -> MemoryHierarchy {
+        let options = options.into();
+        MemoryHierarchy {
+            dram_capacity: options.dram_bytes,
+            dram_used: 0,
+            nvme: options.nvme,
+            nvme_used: 0,
+            dram_traffic: TierTraffic::default(),
+            nvme_traffic: TierTraffic::default(),
+            entries: BTreeMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// DRAM tier capacity.
+    pub fn dram_capacity(&self) -> u64 {
+        self.dram_capacity
+    }
+
+    /// Bytes currently resident in DRAM.
+    pub fn dram_used(&self) -> u64 {
+        self.dram_used
+    }
+
+    /// Bytes of DRAM headroom.
+    pub fn dram_free(&self) -> u64 {
+        self.dram_capacity - self.dram_used
+    }
+
+    /// NVMe tier capacity, if one is configured.
+    pub fn nvme_capacity(&self) -> Option<u64> {
+        self.nvme.map(|t| t.capacity_bytes)
+    }
+
+    /// Bytes currently resident on NVMe.
+    pub fn nvme_used(&self) -> u64 {
+        self.nvme_used
+    }
+
+    /// Whether an NVMe backing tier is configured.
+    pub fn nvme_configured(&self) -> bool {
+        self.nvme.is_some()
+    }
+
+    /// Whether shard (`model`, `shard`) is currently DRAM-resident
+    /// (`None` when untracked: unhomed, or no NVMe tier).
+    pub fn is_dram_resident(&self, model: usize, shard: u32) -> Option<bool> {
+        self.entries.get(&(model, shard)).map(|e| e.in_dram)
+    }
+
+    /// Pin count of shard (`model`, `shard`); 0 when untracked.
+    pub fn pins(&self, model: usize, shard: u32) -> u32 {
+        self.entries.get(&(model, shard)).map(|e| e.pins).unwrap_or(0)
+    }
+
+    /// Home a model's shards (job submission). DRAM is preferred; with an
+    /// NVMe tier, shards that do not fit overflow there. All-or-nothing:
+    /// a failure homes none of the shards.
+    pub fn home_model(&mut self, model: usize, shard_bytes: &[u64]) -> Result<()> {
+        let Some(tier) = self.nvme else {
+            let total: u64 = shard_bytes.iter().sum();
+            if total > self.dram_free() {
+                return Err(HydraError::Exec(format!(
+                    "DRAM exhausted: need {total}, free {} (configure an NVMe \
+                     tier to home parameters beyond DRAM)",
+                    self.dram_free()
+                )));
+            }
+            self.dram_used += total;
+            return Ok(());
+        };
+        // dry-run placement first so a mid-model failure homes nothing
+        let mut dram_free = self.dram_free();
+        let mut nvme_free = tier.capacity_bytes - self.nvme_used;
+        let mut placement = Vec::with_capacity(shard_bytes.len());
+        for (i, &bytes) in shard_bytes.iter().enumerate() {
+            if self.entries.contains_key(&(model, i as u32)) {
+                return Err(HydraError::Exec(format!(
+                    "duplicate home of model {model} shard {i}"
+                )));
+            }
+            if bytes <= dram_free {
+                dram_free -= bytes;
+                placement.push(true);
+            } else if bytes <= nvme_free {
+                nvme_free -= bytes;
+                placement.push(false);
+            } else {
+                return Err(HydraError::Exec(format!(
+                    "memory hierarchy exhausted homing model {model}: shard {i} \
+                     needs {bytes} bytes (DRAM free {dram_free}, NVMe free \
+                     {nvme_free})"
+                )));
+            }
+        }
+        for (i, (&bytes, &in_dram)) in shard_bytes.iter().zip(&placement).enumerate() {
+            self.clock += 1;
+            if in_dram {
+                self.dram_used += bytes;
+            } else {
+                self.nvme_used += bytes;
+            }
+            self.entries.insert(
+                (model, i as u32),
+                ShardEntry { bytes, in_dram, pins: 0, last_touch: self.clock },
+            );
+        }
+        Ok(())
+    }
+
+    /// Release a model's shards (job finish / cancellation). Releasing a
+    /// model that is not homed is a *real* error — the old `DramPool`
+    /// saturated silently here, masking double-release bugs.
+    pub fn unhome_model(&mut self, model: usize, shard_bytes: &[u64]) -> Result<()> {
+        if self.nvme.is_none() {
+            let total: u64 = shard_bytes.iter().sum();
+            if total > self.dram_used {
+                return Err(HydraError::Exec(format!(
+                    "double release: unhoming {total} bytes of model {model} with \
+                     only {} homed",
+                    self.dram_used
+                )));
+            }
+            self.dram_used -= total;
+            return Ok(());
+        }
+        for i in 0..shard_bytes.len() {
+            let Some(e) = self.entries.remove(&(model, i as u32)) else {
+                return Err(HydraError::Exec(format!(
+                    "double release: model {model} shard {i} is not homed"
+                )));
+            };
+            if e.in_dram {
+                self.dram_used -= e.bytes;
+            } else {
+                self.nvme_used -= e.bytes;
+            }
+        }
+        Ok(())
+    }
+
+    /// Stage shard (`model`, `shard`) into DRAM and pin it there (a device
+    /// is about to prefetch or promote it). On a DRAM hit this is
+    /// pin+touch only; on an NVMe miss, LRU-evicts unpinned shards until
+    /// the fetch fits and returns the synchronous NVMe-link seconds
+    /// (write-backs + read). Without an NVMe tier: a free no-op.
+    pub fn fetch_to_dram(&mut self, model: usize, shard: u32) -> Result<TierFetch> {
+        let Some(tier) = self.nvme else {
+            return Ok(TierFetch::NONE);
+        };
+        self.clock += 1;
+        let clock = self.clock;
+        let (bytes, in_dram) = match self.entries.get(&(model, shard)) {
+            Some(e) => (e.bytes, e.in_dram),
+            None => {
+                return Err(HydraError::Exec(format!(
+                    "fetch of unhomed shard (model {model}, shard {shard})"
+                )))
+            }
+        };
+        if in_dram {
+            let e = self.entries.get_mut(&(model, shard)).expect("checked above");
+            e.pins += 1;
+            e.last_touch = clock;
+            return Ok(TierFetch::NONE);
+        }
+        let mut evicted_bytes = 0u64;
+        while self.dram_free() < bytes {
+            // zero-byte shards free nothing: skipping them guarantees the
+            // loop terminates (either DRAM frees up or candidates run out)
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.in_dram && e.pins == 0 && e.bytes > 0)
+                .min_by(|(ka, a), (kb, b)| {
+                    a.last_touch
+                        .cmp(&b.last_touch)
+                        .then(b.bytes.cmp(&a.bytes))
+                        .then(ka.cmp(kb))
+                })
+                .map(|(k, e)| (*k, e.bytes));
+            let Some((vk, vb)) = victim else {
+                return Err(HydraError::Exec(format!(
+                    "memory hierarchy thrashing: shard (model {model}, shard \
+                     {shard}) needs {bytes} bytes of DRAM but every resident \
+                     shard is pinned ({} used of {}); configure more DRAM",
+                    self.dram_used, self.dram_capacity
+                )));
+            };
+            if vb > tier.capacity_bytes - self.nvme_used {
+                return Err(HydraError::Exec(format!(
+                    "NVMe tier full: cannot write back {vb} bytes ({} used of {})",
+                    self.nvme_used, tier.capacity_bytes
+                )));
+            }
+            let v = self.entries.get_mut(&vk).expect("victim exists");
+            v.in_dram = false;
+            self.dram_used -= vb;
+            self.nvme_used += vb;
+            evicted_bytes += vb;
+        }
+        let e = self.entries.get_mut(&(model, shard)).expect("checked above");
+        e.in_dram = true;
+        e.pins += 1;
+        e.last_touch = clock;
+        self.nvme_used -= bytes;
+        self.dram_used += bytes;
+        self.nvme_traffic.promoted_bytes += bytes;
+        self.nvme_traffic.demoted_bytes += evicted_bytes;
+        let mut secs = tier.link.secs(bytes);
+        if evicted_bytes > 0 {
+            secs += tier.link.secs(evicted_bytes);
+        }
+        Ok(TierFetch { secs, fetched_bytes: bytes, evicted_bytes })
+    }
+
+    /// Unpin shard (`model`, `shard`) — its device copy was demoted or its
+    /// staging was revoked. A no-op for untracked shards (DRAM-only mode,
+    /// or the model already unhomed at job finish).
+    pub fn release_device_copy(&mut self, model: usize, shard: u32) {
+        if self.nvme.is_none() {
+            return;
+        }
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&(model, shard)) {
+            debug_assert!(e.pins > 0, "unpin of unpinned shard ({model}, {shard})");
+            e.pins = e.pins.saturating_sub(1);
+            e.last_touch = self.clock;
+        }
+    }
+
+    /// Account DRAM->device promotion traffic.
+    pub fn note_promote(&mut self, bytes: u64) {
+        self.dram_traffic.promoted_bytes += bytes;
+    }
+
+    /// Account device->DRAM demotion traffic.
+    pub fn note_demote(&mut self, bytes: u64) {
+        self.dram_traffic.demoted_bytes += bytes;
+    }
+
+    /// Check the accounting invariants (per-tier used counters match the
+    /// entry map and never exceed capacity). Property tests call this
+    /// after every operation.
+    pub fn validate(&self) -> Result<()> {
+        if self.dram_used > self.dram_capacity {
+            return Err(HydraError::Exec(format!(
+                "DRAM over capacity: {} > {}",
+                self.dram_used, self.dram_capacity
+            )));
+        }
+        if let Some(t) = self.nvme {
+            if self.nvme_used > t.capacity_bytes {
+                return Err(HydraError::Exec(format!(
+                    "NVMe over capacity: {} > {}",
+                    self.nvme_used, t.capacity_bytes
+                )));
+            }
+            let dram_sum: u64 =
+                self.entries.values().filter(|e| e.in_dram).map(|e| e.bytes).sum();
+            let nvme_sum: u64 =
+                self.entries.values().filter(|e| !e.in_dram).map(|e| e.bytes).sum();
+            if dram_sum != self.dram_used || nvme_sum != self.nvme_used {
+                return Err(HydraError::Exec(format!(
+                    "tier accounting drift: entries say dram {dram_sum} / nvme \
+                     {nvme_sum}, counters say {} / {}",
+                    self.dram_used, self.nvme_used
+                )));
+            }
+        }
+        Ok(())
+    }
+}
 
 /// What a ledger entry holds (for traces and accounting).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -107,59 +600,6 @@ impl DeviceLedger {
     }
 }
 
-/// The DRAM tier: tracks spilled bytes so we can assert the paper's "fits in
-/// DRAM" precondition and report spill traffic.
-#[derive(Debug, Clone)]
-pub struct DramPool {
-    capacity: u64,
-    used: u64,
-    /// Cumulative promote/demote traffic in bytes (for EXPERIMENTS.md).
-    pub promoted_bytes: u64,
-    pub demoted_bytes: u64,
-}
-
-impl DramPool {
-    /// A DRAM tier of `capacity` bytes.
-    pub fn new(capacity: u64) -> DramPool {
-        DramPool { capacity, used: 0, promoted_bytes: 0, demoted_bytes: 0 }
-    }
-
-    /// Bytes homed in DRAM.
-    pub fn used(&self) -> u64 {
-        self.used
-    }
-
-    /// Bytes still available.
-    pub fn free(&self) -> u64 {
-        self.capacity - self.used
-    }
-
-    /// Home a model's full parameter set in DRAM (start of training).
-    pub fn home(&mut self, bytes: u64) -> Result<()> {
-        if bytes > self.free() {
-            return Err(HydraError::Exec(format!(
-                "DRAM exhausted: need {bytes}, free {}", self.free())));
-        }
-        self.used += bytes;
-        Ok(())
-    }
-
-    /// Release a model's parameter set (job eviction / teardown).
-    pub fn unhome(&mut self, bytes: u64) {
-        self.used = self.used.saturating_sub(bytes);
-    }
-
-    /// Account DRAM->device promotion traffic.
-    pub fn note_promote(&mut self, bytes: u64) {
-        self.promoted_bytes += bytes;
-    }
-
-    /// Account device->DRAM demotion traffic.
-    pub fn note_demote(&mut self, bytes: u64) {
-        self.demoted_bytes += bytes;
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,27 +649,158 @@ mod tests {
     }
 
     #[test]
-    fn dram_pool_enforces_capacity() {
-        let mut d = DramPool::new(100);
-        d.home(80).unwrap();
-        assert!(d.home(30).is_err());
-        d.unhome(80);
-        assert!(d.home(30).is_ok());
+    fn release_missing_is_zero() {
+        let mut l = DeviceLedger::new(0, 10);
+        assert_eq!(l.release(&Residency::BufferZone), 0);
+    }
+
+    // --- MemoryHierarchy ---------------------------------------------------
+
+    #[test]
+    fn dram_only_enforces_capacity_like_the_old_pool() {
+        let mut h = MemoryHierarchy::new(100u64);
+        h.home_model(0, &[80]).unwrap();
+        assert!(h.home_model(1, &[30]).is_err());
+        h.unhome_model(0, &[80]).unwrap();
+        assert!(h.home_model(1, &[30]).is_ok());
+        assert_eq!(h.dram_used(), 30);
+    }
+
+    #[test]
+    fn dram_only_double_release_is_an_error() {
+        let mut h = MemoryHierarchy::new(100u64);
+        h.home_model(0, &[60]).unwrap();
+        h.unhome_model(0, &[60]).unwrap();
+        assert!(h.unhome_model(0, &[60]).is_err());
+    }
+
+    #[test]
+    fn dram_only_fetch_is_free() {
+        let mut h = MemoryHierarchy::new(100u64);
+        h.home_model(0, &[60]).unwrap();
+        let f = h.fetch_to_dram(0, 0).unwrap();
+        assert_eq!(f.secs, 0.0);
+        assert_eq!(f.fetched_bytes, 0);
+        assert_eq!(h.nvme_traffic, TierTraffic::default());
     }
 
     #[test]
     fn traffic_counters_accumulate() {
-        let mut d = DramPool::new(100);
-        d.note_promote(10);
-        d.note_promote(5);
-        d.note_demote(7);
-        assert_eq!(d.promoted_bytes, 15);
-        assert_eq!(d.demoted_bytes, 7);
+        let mut h = MemoryHierarchy::new(100u64);
+        h.note_promote(10);
+        h.note_promote(5);
+        h.note_demote(7);
+        assert_eq!(h.dram_traffic.promoted_bytes, 15);
+        assert_eq!(h.dram_traffic.demoted_bytes, 7);
     }
 
     #[test]
-    fn release_missing_is_zero() {
-        let mut l = DeviceLedger::new(0, 10);
-        assert_eq!(l.release(&Residency::BufferZone), 0);
+    fn homing_overflows_to_nvme() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[60, 60]).unwrap(); // second shard overflows
+        assert_eq!(h.dram_used(), 60);
+        assert_eq!(h.nvme_used(), 60);
+        assert_eq!(h.is_dram_resident(0, 0), Some(true));
+        assert_eq!(h.is_dram_resident(0, 1), Some(false));
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn hierarchy_exhaustion_homes_nothing() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(50)));
+        assert!(h.home_model(0, &[90, 60, 60]).is_err()); // third shard fits nowhere
+        assert_eq!(h.dram_used(), 0);
+        assert_eq!(h.nvme_used(), 0);
+        assert!(h.is_dram_resident(0, 0).is_none());
+    }
+
+    #[test]
+    fn fetch_moves_shard_up_and_charges_the_link() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[100]).unwrap(); // DRAM full
+        h.home_model(1, &[50]).unwrap(); // -> NVMe
+        let f = h.fetch_to_dram(1, 0).unwrap();
+        // evicts model 0 (unpinned LRU), then reads model 1's shard
+        assert_eq!(f.fetched_bytes, 50);
+        assert_eq!(f.evicted_bytes, 100);
+        assert!(f.secs > 0.0);
+        assert_eq!(h.is_dram_resident(1, 0), Some(true));
+        assert_eq!(h.is_dram_resident(0, 0), Some(false));
+        assert_eq!(h.nvme_traffic.promoted_bytes, 50);
+        assert_eq!(h.nvme_traffic.demoted_bytes, 100);
+        assert_eq!(h.pins(1, 0), 1);
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn pinned_shards_are_never_evicted() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[100]).unwrap();
+        h.home_model(1, &[50]).unwrap(); // -> NVMe
+        h.fetch_to_dram(0, 0).unwrap(); // pins the only DRAM resident
+        let err = h.fetch_to_dram(1, 0).unwrap_err();
+        assert!(format!("{err}").contains("pinned"), "{err}");
+        h.release_device_copy(0, 0);
+        assert!(h.fetch_to_dram(1, 0).is_ok());
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn dram_hit_pins_without_traffic() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[40]).unwrap();
+        let f = h.fetch_to_dram(0, 0).unwrap();
+        assert_eq!(f.secs, 0.0);
+        assert_eq!(h.pins(0, 0), 1);
+        h.fetch_to_dram(0, 0).unwrap(); // second device caches it too
+        assert_eq!(h.pins(0, 0), 2);
+        assert_eq!(h.nvme_traffic, TierTraffic::default());
+    }
+
+    #[test]
+    fn unhome_with_entries_is_strict_and_releases_both_tiers() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[60, 60]).unwrap();
+        h.unhome_model(0, &[60, 60]).unwrap();
+        assert_eq!(h.dram_used(), 0);
+        assert_eq!(h.nvme_used(), 0);
+        assert!(h.unhome_model(0, &[60, 60]).is_err());
+    }
+
+    #[test]
+    fn release_after_unhome_is_a_noop() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[40]).unwrap();
+        h.fetch_to_dram(0, 0).unwrap();
+        h.unhome_model(0, &[40]).unwrap();
+        h.release_device_copy(0, 0); // device cache outlived the job
+        h.validate().unwrap();
+    }
+
+    #[test]
+    fn tier_spec_parses_cap_and_bandwidth() {
+        let t = TierSpec::parse("4096:3.5").unwrap();
+        assert_eq!(t.capacity_bytes, 4096 << 30);
+        assert!((t.link.bandwidth_bytes_per_sec - 3.5e9).abs() < 1e-3);
+        let t = TierSpec::parse("512").unwrap();
+        assert_eq!(t.capacity_bytes, 512 << 30);
+        assert_eq!(t.link, TransferModel::nvme());
+        assert!(TierSpec::parse("abc").is_err());
+        assert!(TierSpec::parse("0").is_err());
+        assert!(TierSpec::parse("10:-1").is_err());
+    }
+
+    #[test]
+    fn memory_options_from_u64_is_dram_only() {
+        let m: MemoryOptions = (4 << 30u64).into();
+        assert_eq!(m, MemoryOptions::dram_only(4 << 30));
+        assert!(m.nvme.is_none());
     }
 }

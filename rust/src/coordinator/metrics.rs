@@ -15,6 +15,9 @@ pub enum IntervalKind {
     Transfer,
     /// Waiting on an in-flight double-buffer prefetch.
     BufferStall,
+    /// Synchronous NVMe<->DRAM staging (DRAM-miss fetch + forced eviction
+    /// write-backs) blocking the device's promote path.
+    NvmeTransfer,
 }
 
 /// One device-time interval in the schedule.
@@ -90,6 +93,11 @@ impl Trace {
         self.time_of(IntervalKind::BufferStall)
     }
 
+    /// Total synchronous NVMe staging seconds (zero without an NVMe tier).
+    pub fn nvme_time(&self) -> f64 {
+        self.time_of(IntervalKind::NvmeTransfer)
+    }
+
     fn time_of(&self, kind: IntervalKind) -> f64 {
         self.intervals
             .iter()
@@ -139,7 +147,7 @@ impl Trace {
 
     /// ASCII Gantt chart (Fig 3 / Fig 6 style). Each row is a device; each
     /// column a time bucket; cells show the model letter for compute,
-    /// '·' transfer, '~' stall, ' ' idle.
+    /// '·' transfer, '~' stall, '%' NVMe staging, ' ' idle.
     pub fn gantt(&self, width: usize) -> String {
         if self.makespan <= 0.0 || self.intervals.is_empty() {
             return String::from("(empty trace)\n");
@@ -157,6 +165,7 @@ impl Trace {
                         IntervalKind::Compute => model_letter(iv.model),
                         IntervalKind::Transfer => '·',
                         IntervalKind::BufferStall => '~',
+                        IntervalKind::NvmeTransfer => '%',
                     };
                 }
             }
@@ -206,6 +215,19 @@ mod tests {
         assert_eq!(t.compute_time(), 5.0);
         assert_eq!(t.transfer_time(), 1.0);
         assert_eq!(t.stall_time(), 2.0);
+        assert_eq!(t.nvme_time(), 0.0);
+    }
+
+    #[test]
+    fn nvme_intervals_are_idle_time_with_their_own_total() {
+        let mut t = Trace::default();
+        t.set_device_window(0, 0.0, f64::INFINITY);
+        t.record(iv(0, 0.0, 3.0, 0, IntervalKind::NvmeTransfer));
+        t.record(iv(0, 3.0, 4.0, 0, IntervalKind::Compute));
+        t.close_device_windows();
+        assert_eq!(t.nvme_time(), 3.0);
+        assert!((t.utilization() - 0.25).abs() < 1e-12);
+        assert!(t.gantt(8).contains('%'));
     }
 
     #[test]

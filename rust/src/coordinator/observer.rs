@@ -10,6 +10,7 @@
 //! live gantt/progress streaming for online runs implement the trait and
 //! pass it to `run_with`.
 
+use crate::coordinator::memory::MemTier;
 use crate::coordinator::metrics::Interval;
 use crate::coordinator::unit::ShardUnit;
 
@@ -34,10 +35,21 @@ pub trait EngineObserver {
     /// Fires exactly once per job.
     fn on_job_finished(&mut self, _model: usize, _now: f64, _cancelled: bool) {}
 
-    /// Spill traffic: `promoted` bytes moved DRAM->device and/or `demoted`
-    /// bytes flowed back device->DRAM for `device`. `now` is the virtual
-    /// time the corresponding transfer starts (for both directions).
-    fn on_spill(&mut self, _device: usize, _promoted: u64, _demoted: u64, _now: f64) {}
+    /// Spill traffic on one hierarchy link, serving `device`. For
+    /// [`MemTier::Dram`]: `promoted` bytes moved DRAM->device and/or
+    /// `demoted` bytes flowed back device->DRAM. For [`MemTier::Nvme`]:
+    /// `promoted` bytes were fetched NVMe->DRAM and `demoted` bytes were
+    /// written back DRAM->NVMe by the evictions that fetch forced. `now` is
+    /// the virtual time the corresponding transfer starts.
+    fn on_spill(
+        &mut self,
+        _device: usize,
+        _promoted: u64,
+        _demoted: u64,
+        _tier: MemTier,
+        _now: f64,
+    ) {
+    }
 
     /// A device-time interval (compute / transfer / buffer-stall) was
     /// recorded. This is the trace feed: [`TraceRecorder`] collects these
@@ -94,9 +106,9 @@ impl EngineObserver for Tee<'_> {
         self.1.on_job_finished(model, now, cancelled);
     }
 
-    fn on_spill(&mut self, device: usize, promoted: u64, demoted: u64, now: f64) {
-        self.0.on_spill(device, promoted, demoted, now);
-        self.1.on_spill(device, promoted, demoted, now);
+    fn on_spill(&mut self, device: usize, promoted: u64, demoted: u64, tier: MemTier, now: f64) {
+        self.0.on_spill(device, promoted, demoted, tier, now);
+        self.1.on_spill(device, promoted, demoted, tier, now);
     }
 
     fn on_interval(&mut self, interval: &Interval) {

@@ -16,6 +16,16 @@
 //! relative compute speed, and host-link bandwidth). Per-job latency
 //! statistics come back in [`RunReport::jobs`].
 //!
+//! Host memory is a tiered [`MemoryHierarchy`]
+//! ([`crate::coordinator::memory`]): with an NVMe backing tier configured
+//! ([`MemoryOptions`]), model sets larger than DRAM still run — DRAM acts
+//! as an evicting cache, DRAM misses stage NVMe->DRAM->HBM (overlapped
+//! with compute by the double-buffer when prefetched, synchronous
+//! [`IntervalKind::NvmeTransfer`] intervals otherwise), and per-tier
+//! traffic lands in [`RunReport::nvme_promoted_bytes`] /
+//! [`RunReport::nvme_demoted_bytes`]. Without an NVMe tier the engine is
+//! bit-for-bit the legacy two-tier system.
+//!
 //! The dispatch hot path is incremental: a binary-heap event queue
 //! (O(log n) push/pop), a ready-set of eligible models, and a parked-set of
 //! idle devices replace the seed engine's linear scans over all devices and
@@ -38,7 +48,9 @@
 use std::collections::{BTreeSet, BinaryHeap};
 
 use crate::coordinator::buffer::DoubleBuffer;
-use crate::coordinator::memory::{DeviceLedger, DramPool, Residency};
+use crate::coordinator::memory::{
+    DeviceLedger, MemTier, MemoryHierarchy, MemoryOptions, Residency,
+};
 use crate::coordinator::metrics::{Interval, IntervalKind, Trace};
 use crate::coordinator::observer::{EngineObserver, NoopObserver, Tee, TraceRecorder};
 use crate::coordinator::sched::{PickContext, Scheduler};
@@ -48,40 +60,7 @@ use crate::error::{HydraError, Result};
 use crate::exec::ExecutionBackend;
 use crate::util::rng::Rng;
 
-/// Link cost model for DRAM<->device transfers (PCIe class by default).
-#[derive(Debug, Clone, Copy)]
-pub struct TransferModel {
-    /// Sustained link bandwidth in bytes per second.
-    pub bandwidth_bytes_per_sec: f64,
-    /// Fixed per-transfer latency in seconds.
-    pub latency_secs: f64,
-}
-
-impl TransferModel {
-    /// PCIe gen3 x16-class link (the paper's testbed host link).
-    pub fn pcie_gen3() -> TransferModel {
-        TransferModel { bandwidth_bytes_per_sec: 12.0e9, latency_secs: 20e-6 }
-    }
-
-    /// PCIe gen4 x16-class link (A4000/A6000-era hosts).
-    pub fn pcie_gen4() -> TransferModel {
-        TransferModel { bandwidth_bytes_per_sec: 24.0e9, latency_secs: 20e-6 }
-    }
-
-    /// Instantaneous transfers (pure-scheduling studies, Fig 7).
-    pub fn zero_cost() -> TransferModel {
-        TransferModel { bandwidth_bytes_per_sec: f64::INFINITY, latency_secs: 0.0 }
-    }
-
-    /// Seconds to move `bytes` over this link.
-    pub fn secs(&self, bytes: u64) -> f64 {
-        if bytes == 0 {
-            0.0
-        } else {
-            self.latency_secs + bytes as f64 / self.bandwidth_bytes_per_sec
-        }
-    }
-}
+pub use crate::coordinator::memory::TransferModel;
 
 /// Static description of one accelerator in a (possibly heterogeneous) pool.
 ///
@@ -396,6 +375,12 @@ pub struct RunReport {
     pub promoted_bytes: u64,
     /// Device->DRAM demotion traffic.
     pub demoted_bytes: u64,
+    /// NVMe->DRAM fetch traffic (zero without an NVMe tier).
+    pub nvme_promoted_bytes: u64,
+    /// DRAM->NVMe eviction write-back traffic.
+    pub nvme_demoted_bytes: u64,
+    /// Seconds devices spent blocked on synchronous NVMe staging.
+    pub nvme_secs: f64,
     /// Name of the scheduling policy used.
     pub scheduler: &'static str,
     /// Per-job arrival/finish/cancellation statistics (online setting;
@@ -408,7 +393,7 @@ pub struct SharpEngine<'a> {
     /// The model tasks (public for post-run inspection in tests/figures).
     pub tasks: Vec<ModelTask>,
     devices: Vec<DeviceState>,
-    dram: DramPool,
+    memory: MemoryHierarchy,
     options: EngineOptions,
     scheduler: Box<dyn Scheduler>,
     backend: &'a mut dyn ExecutionBackend,
@@ -436,24 +421,27 @@ pub struct SharpEngine<'a> {
     agg_compute: f64,
     agg_transfer: f64,
     agg_stall: f64,
+    agg_nvme: f64,
     rng: Rng,
 }
 
 impl<'a> SharpEngine<'a> {
     /// Build an engine over a homogeneous pool (`device_mem[i]` bytes each,
     /// reference speed, engine-wide link). The seed API; see
-    /// [`SharpEngine::with_devices`] for heterogeneous pools.
+    /// [`SharpEngine::with_devices`] for heterogeneous pools. `memory` is
+    /// either a bare `dram_bytes: u64` (the legacy two-tier setup) or a
+    /// full [`MemoryOptions`] with an NVMe backing tier.
     pub fn new(
         tasks: Vec<ModelTask>,
         device_mem: &[u64],
-        dram_bytes: u64,
+        memory: impl Into<MemoryOptions>,
         scheduler: Box<dyn Scheduler>,
         backend: &'a mut dyn ExecutionBackend,
         options: EngineOptions,
     ) -> Result<SharpEngine<'a>> {
         let specs: Vec<DeviceSpec> =
             device_mem.iter().map(|&m| DeviceSpec::uniform(m)).collect();
-        Self::with_devices(tasks, &specs, dram_bytes, scheduler, backend, options)
+        Self::with_devices(tasks, &specs, memory, scheduler, backend, options)
     }
 
     /// Build an engine over an explicit (possibly heterogeneous) device
@@ -463,7 +451,7 @@ impl<'a> SharpEngine<'a> {
     pub fn with_devices(
         tasks: Vec<ModelTask>,
         specs: &[DeviceSpec],
-        dram_bytes: u64,
+        memory: impl Into<MemoryOptions>,
         scheduler: Box<dyn Scheduler>,
         backend: &'a mut dyn ExecutionBackend,
         options: EngineOptions,
@@ -479,9 +467,9 @@ impl<'a> SharpEngine<'a> {
                 )));
             }
         }
-        let mut dram = DramPool::new(dram_bytes);
+        let mut memory = MemoryHierarchy::new(memory);
         for t in &tasks {
-            dram.home(t.total_param_bytes())?;
+            memory.home_model(t.id, &Self::shard_bytes(t))?;
         }
         let mut devices = Vec::new();
         for (id, &spec) in specs.iter().enumerate() {
@@ -493,7 +481,7 @@ impl<'a> SharpEngine<'a> {
         Ok(SharpEngine {
             tasks,
             devices,
-            dram,
+            memory,
             options: options.clone(),
             scheduler,
             backend,
@@ -513,8 +501,15 @@ impl<'a> SharpEngine<'a> {
             agg_compute: 0.0,
             agg_transfer: 0.0,
             agg_stall: 0.0,
+            agg_nvme: 0.0,
             rng,
         })
+    }
+
+    /// Per-shard home-tier footprints of a task (what the hierarchy homes
+    /// and unhomes).
+    fn shard_bytes(task: &ModelTask) -> Vec<u64> {
+        task.shards.iter().map(|s| s.param_bytes).collect()
     }
 
     fn mk_device(id: usize, spec: DeviceSpec, options: &EngineOptions) -> Result<DeviceState> {
@@ -587,15 +582,22 @@ impl<'a> SharpEngine<'a> {
     }
 
     /// Mark `model` finished at `now` (first transition only) and release
-    /// its DRAM-homed parameters — online streams with churn would
-    /// otherwise exhaust the pool and reject later submissions.
-    fn finish_job(&mut self, model: usize, now: f64, obs: &mut dyn EngineObserver) {
+    /// its homed parameters from the hierarchy — online streams with churn
+    /// would otherwise exhaust the tiers and reject later submissions.
+    /// Releasing twice is a real error (the old pool saturated silently).
+    fn finish_job(
+        &mut self,
+        model: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         if self.finish_times[model].is_nan() {
             self.finish_times[model] = now;
-            let bytes = self.tasks[model].total_param_bytes();
-            self.dram.unhome(bytes);
+            let bytes = Self::shard_bytes(&self.tasks[model]);
+            self.memory.unhome_model(model, &bytes)?;
             obs.on_job_finished(model, now, self.job_cancelled[model]);
         }
+        Ok(())
     }
 
     /// Wake one parked device (a model just became eligible). Waking
@@ -735,8 +737,11 @@ impl<'a> SharpEngine<'a> {
             transfer_secs: self.agg_transfer,
             stall_secs: self.agg_stall,
             units_executed: self.units_executed,
-            promoted_bytes: self.dram.promoted_bytes,
-            demoted_bytes: self.dram.demoted_bytes,
+            promoted_bytes: self.memory.dram_traffic.promoted_bytes,
+            demoted_bytes: self.memory.dram_traffic.demoted_bytes,
+            nvme_promoted_bytes: self.memory.nvme_traffic.promoted_bytes,
+            nvme_demoted_bytes: self.memory.nvme_traffic.demoted_bytes,
+            nvme_secs: self.agg_nvme,
             scheduler: self.scheduler.name(),
             jobs,
             trace: std::mem::take(&mut self.trace),
@@ -769,9 +774,14 @@ impl<'a> SharpEngine<'a> {
 
     fn kill_device(&mut self, device: usize, now: f64) {
         let pending = self.devices[device].pending.take();
+        if let Some(st) = self.devices[device].buffer.staged().copied() {
+            self.memory.release_device_copy(st.model, st.shard);
+        }
+        if let Some((m, sh)) = self.devices[device].resident.take() {
+            self.memory.release_device_copy(m, sh);
+        }
         self.devices[device].alive = false;
         self.devices[device].buffer.clear();
-        self.devices[device].resident = None;
         self.parked.remove(&device);
         self.free_devices -= 1;
         if let Some(u) = pending {
@@ -813,7 +823,7 @@ impl<'a> SharpEngine<'a> {
                 task.id
             )));
         }
-        self.dram.home(task.total_param_bytes())?;
+        self.memory.home_model(task.id, &Self::shard_bytes(&task))?;
         self.tasks.push(task);
         self.job_cancelled.push(false);
         self.finish_times.push(f64::NAN);
@@ -852,7 +862,7 @@ impl<'a> SharpEngine<'a> {
             TaskState::Idle => {
                 self.ready.remove(&model);
                 self.tasks[model].early_stop();
-                self.finish_job(model, now, obs);
+                self.finish_job(model, now, obs)?;
             }
             TaskState::Running => {
                 // The claim is either a pre-claimed double-buffer prefetch
@@ -862,12 +872,16 @@ impl<'a> SharpEngine<'a> {
                 for d in 0..self.devices.len() {
                     if self.devices[d].pending.map(|u| u.model) == Some(model) {
                         let u = self.devices[d].pending.take().expect("checked");
-                        if self.devices[d].buffer.staged().map(|s| s.model) == Some(model) {
-                            self.devices[d].buffer.clear();
+                        if let Some(st) = self.devices[d].buffer.staged().copied() {
+                            if st.model == model {
+                                // the staged fetch pinned the shard in DRAM
+                                self.memory.release_device_copy(st.model, st.shard);
+                                self.devices[d].buffer.clear();
+                            }
                         }
                         self.tasks[model].unclaim(&u);
                         self.tasks[model].early_stop();
-                        self.finish_job(model, now, obs);
+                        self.finish_job(model, now, obs)?;
                         revoked = true;
                         break;
                     }
@@ -950,9 +964,9 @@ impl<'a> SharpEngine<'a> {
                     .ledger
                     .release(&Residency::ShardParams { model: m, shard: s });
                 let wb = self.devices[device].last_demote_bytes;
-                self.dram.note_demote(wb);
+                self.memory.note_demote(wb);
                 if wb > 0 {
-                    obs.on_spill(device, 0, wb, t);
+                    obs.on_spill(device, 0, wb, MemTier::Dram, t);
                 }
                 if !self.options.double_buffer && wb > 0 {
                     // synchronous write-back (no overlap without DB)
@@ -960,6 +974,9 @@ impl<'a> SharpEngine<'a> {
                     self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
                     t += dt;
                 }
+                // write-back landed: the old resident's DRAM slot unpins
+                // and becomes an eviction candidate for the fetch below
+                self.memory.release_device_copy(m, s);
             }
             // promote: either consume the prefetched copy or transfer now
             let stall = self.devices[device]
@@ -968,16 +985,42 @@ impl<'a> SharpEngine<'a> {
             // like demotions above, spill events carry the time the
             // transfer starts
             if promote_bytes > 0 {
-                obs.on_spill(device, promote_bytes, 0, t);
+                obs.on_spill(device, promote_bytes, 0, MemTier::Dram, t);
             }
             let dt = match stall {
                 Some(stall) => {
+                    // the staged prefetch already fetched (and pinned) the
+                    // shard in DRAM; any NVMe leg was folded into its
+                    // transfer time, overlapped with compute like §4.6
                     if stall > 0.0 {
                         self.record(device, t, t + stall, unit, IntervalKind::BufferStall, obs);
                     }
                     stall
                 }
                 None => {
+                    // DRAM miss with nothing prefetched: stage the shard up
+                    // from NVMe synchronously, charged on the NVMe link
+                    let fetch = self.memory.fetch_to_dram(unit.model, unit.shard)?;
+                    if fetch.fetched_bytes > 0 {
+                        obs.on_spill(
+                            device,
+                            fetch.fetched_bytes,
+                            fetch.evicted_bytes,
+                            MemTier::Nvme,
+                            t,
+                        );
+                    }
+                    if fetch.secs > 0.0 {
+                        self.record(
+                            device,
+                            t,
+                            t + fetch.secs,
+                            unit,
+                            IntervalKind::NvmeTransfer,
+                            obs,
+                        );
+                        t += fetch.secs;
+                    }
                     let dt = link.secs(promote_bytes);
                     if dt > 0.0 {
                         self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
@@ -986,7 +1029,7 @@ impl<'a> SharpEngine<'a> {
                 }
             };
             t += dt;
-            self.dram.note_promote(promote_bytes);
+            self.memory.note_promote(promote_bytes);
             self.devices[device]
                 .ledger
                 .alloc(
@@ -1082,8 +1125,31 @@ impl<'a> SharpEngine<'a> {
         // only stage what fits the protected zone; otherwise fall back to a
         // synchronous transfer at start time (consume returns None then)
         if bytes <= self.devices[device].buffer.zone_bytes {
-            let dt = self.link(device).secs(bytes);
-            self.devices[device].buffer.stage(id, unit.shard, bytes, now, dt);
+            // a mismatched consume can leave an abandoned staging behind;
+            // unpin it before overwriting
+            if let Some(st) = self.devices[device].buffer.staged().copied() {
+                self.memory.release_device_copy(st.model, st.shard);
+            }
+            // multi-hop staging: pull the shard NVMe->DRAM (pinning it) and
+            // fold the NVMe leg into the prefetch time, so compute hides
+            // the whole DRAM-miss path exactly like §4.6 hides PCIe. If
+            // DRAM is too contended to fetch now, skip staging — start_unit
+            // retries synchronously once the demote has freed a slot.
+            if let Ok(fetch) = self.memory.fetch_to_dram(id, unit.shard) {
+                if fetch.fetched_bytes > 0 {
+                    obs.on_spill(
+                        device,
+                        fetch.fetched_bytes,
+                        fetch.evicted_bytes,
+                        MemTier::Nvme,
+                        now,
+                    );
+                }
+                let dt = fetch.secs + self.link(device).secs(bytes);
+                if !self.devices[device].buffer.stage(id, unit.shard, bytes, now, dt) {
+                    self.memory.release_device_copy(id, unit.shard);
+                }
+            }
         }
         self.devices[device].pending = Some(unit);
     }
@@ -1130,7 +1196,7 @@ impl<'a> SharpEngine<'a> {
                 self.ready.insert(unit.model);
             }
             TaskState::Done => {
-                self.finish_job(unit.model, now, obs);
+                self.finish_job(unit.model, now, obs)?;
             }
             TaskState::Running => {}
         }
@@ -1166,6 +1232,7 @@ impl<'a> SharpEngine<'a> {
             IntervalKind::Compute => self.agg_compute += end - start,
             IntervalKind::Transfer => self.agg_transfer += end - start,
             IntervalKind::BufferStall => self.agg_stall += end - start,
+            IntervalKind::NvmeTransfer => self.agg_nvme += end - start,
         }
         obs.on_interval(&Interval {
             device,

@@ -30,6 +30,7 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 
+pub use coordinator::memory::{MemTier, MemoryOptions, TierSpec};
 pub use coordinator::observer::{EngineObserver, NoopObserver, TraceRecorder};
 pub use coordinator::sched::Policy;
 pub use coordinator::Cluster;

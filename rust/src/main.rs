@@ -13,9 +13,10 @@
 
 use std::time::Duration;
 
+use hydra::coordinator::memory::TierSpec;
 use hydra::coordinator::partitioner::PartitionPolicy;
 use hydra::coordinator::sharp::{
-    EngineOptions, ParallelMode, QueueKind, TransferModel,
+    EngineOptions, ParallelMode, QueueKind, RunReport, TransferModel,
 };
 use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
@@ -48,9 +49,11 @@ USAGE:
   hydra simulate [--models 12] [--params-m 1000] [--devices 8]
                 [--minibatches 6] [--scheduler sharded-lrtf]
                 [--no-double-buffer] [--sequential] [--scan-queue]
+                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
                 [--scheduler sharded-lrtf] [--progress] [--gantt]
+                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
                 [--device-mem-mib 2]
   hydra inspect [--manifest artifacts]
@@ -130,6 +133,19 @@ impl EngineObserver for ProgressObserver {
         let how = if cancelled { "cancelled" } else { "finished" };
         println!("  [{now:>9.1}s] - job {model} {how}");
     }
+}
+
+/// Per-tier spill traffic line shared by the simulate subcommands.
+fn print_tier_traffic(r: &RunReport) {
+    println!(
+        "  spill traffic: DRAM<->HBM {} promoted / {} demoted | \
+         NVMe<->DRAM {} fetched / {} written back ({:.2}h stalled)",
+        fmt_bytes(r.promoted_bytes),
+        fmt_bytes(r.demoted_bytes),
+        fmt_bytes(r.nvme_promoted_bytes),
+        fmt_bytes(r.nvme_demoted_bytes),
+        r.nvme_secs / 3600.0,
+    );
 }
 
 fn cmd_train(args: &Args) -> CliResult {
@@ -265,25 +281,43 @@ fn cmd_simulate(args: &Args) -> CliResult {
     let params_m = args.opt_usize("params-m", 1000)?;
     let devices = args.opt_usize("devices", 8)?;
     let mbs = args.opt_usize("minibatches", 6)? as u32;
+    let dram = (args.opt_usize("dram-gib", 500)? as u64) << 30;
+    let nvme = args.opt("nvme").map(TierSpec::parse).transpose()?;
     let policy = policy_arg(args)?;
 
     let gpu = GpuSpec::rtx2080ti();
     let grid = uniform_grid(models, (params_m as u64) * 1_000_000, 8, 1, mbs);
     let tasks = build_tasks(&grid, &gpu, PartitionPolicy::default())?;
     let shards = tasks[0].shards.len();
-    let mode = if args.flag("sequential") {
-        ParallelMode::Sequential
-    } else {
-        ParallelMode::Sharp
+    let opts = EngineOptions {
+        mode: if args.flag("sequential") {
+            ParallelMode::Sequential
+        } else {
+            ParallelMode::Sharp
+        },
+        double_buffer: !args.flag("no-double-buffer"),
+        buffer_frac: 0.30,
+        transfer: TransferModel::pcie_gen3(),
+        record_intervals: false,
+        queue: if args.flag("scan-queue") {
+            QueueKind::LinearScan
+        } else {
+            QueueKind::Heap
+        },
+        ..Default::default()
     };
-    let r = figures::run_hydra(
-        tasks,
-        devices,
-        gpu.mem_bytes,
-        mode,
-        !args.flag("no-double-buffer"),
-        policy,
-    )?;
+    let mut builder = Session::builder(Cluster::uniform(devices, gpu.mem_bytes, dram))
+        .backend(Backend::sim())
+        .policy(policy)
+        .options(opts);
+    if let Some(tier) = nvme {
+        builder = builder.nvme(tier);
+    }
+    let mut session = builder.build()?;
+    for t in tasks {
+        session.submit(t)?;
+    }
+    let r = session.run()?.run;
     println!("{models} x {params_m}M models ({shards} shards each) on {devices} simulated 2080Ti:");
     println!(
         "  makespan {:.2}h | utilization {:.1}% | {} units | compute {:.2}h | transfer {:.2}h | stalls {:.2}h",
@@ -294,6 +328,7 @@ fn cmd_simulate(args: &Args) -> CliResult {
         r.transfer_secs / 3600.0,
         r.stall_secs / 3600.0,
     );
+    print_tier_traffic(&r);
     Ok(())
 }
 
@@ -304,6 +339,8 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
     let rate = args.opt_f64("rate", 6.0)?;
     let seed = args.opt_usize("seed", 7)? as u64;
     let mbs = args.opt_usize("minibatches", 3)? as u32;
+    let dram = (args.opt_usize("dram-gib", 500)? as u64) << 30;
+    let nvme = args.opt("nvme").map(TierSpec::parse).transpose()?;
     let pool = parse_pool(&args.opt_or("pool", "a4000:4,a6000:4"))?;
 
     let stream = poisson_mixed_tenants(jobs, rate, seed, mbs);
@@ -322,11 +359,14 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         },
         ..Default::default()
     };
-    let mut session = Session::builder(Cluster::heterogeneous(specs, 500 << 30))
+    let mut builder = Session::builder(Cluster::heterogeneous(specs, dram))
         .backend(Backend::sim())
         .policy(policy_arg(args)?)
-        .options(opts)
-        .build()?;
+        .options(opts);
+    if let Some(tier) = nvme {
+        builder = builder.nvme(tier);
+    }
+    let mut session = builder.build()?;
     for t in tasks {
         session.submit(t)?;
     }
@@ -347,6 +387,7 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         100.0 * r.utilization,
         r.units_executed
     );
+    print_tier_traffic(&r);
     println!(
         "  {:<26} {:>10} {:>10} {:>10} {:>7}",
         "job", "arrival", "finish", "latency", "units"

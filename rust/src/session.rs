@@ -11,6 +11,7 @@
 //!     .backend(Backend::..)        // Sim { noise, seed } | Real { manifest } | Custom(..)
 //!     .policy(Policy::..)          // typed scheduler enum (FromStr for CLIs)
 //!     .options(EngineOptions::..)  // SHARP knobs
+//!     .nvme(TierSpec::..)          // optional NVMe backing tier below DRAM
 //!     .build()?                    // validates the cluster
 //!     .submit(spec)? -> JobHandle  // pre-partitioned ModelTask or RealModelSpec
 //!     .run()? / .run_with(&mut impl EngineObserver)?
@@ -25,6 +26,7 @@
 
 use std::fmt;
 
+use crate::coordinator::memory::{MemoryOptions, TierSpec};
 use crate::coordinator::observer::EngineObserver;
 use crate::coordinator::partitioner::PartitionPolicy;
 use crate::coordinator::sharp::{
@@ -140,6 +142,7 @@ pub struct SessionBuilder {
     backend: Backend,
     policy: Policy,
     options: EngineOptions,
+    memory: Option<MemoryOptions>,
     partition_policy: PartitionPolicy,
     early_stop_median_after: Option<u32>,
 }
@@ -164,6 +167,27 @@ impl SessionBuilder {
         self
     }
 
+    /// Override the host-memory hierarchy (DRAM size + optional NVMe
+    /// backing tier). The default derives DRAM from the cluster
+    /// (`Cluster::dram_bytes`) with no NVMe tier — the legacy two-tier
+    /// setup.
+    pub fn memory(mut self, memory: MemoryOptions) -> SessionBuilder {
+        self.memory = Some(memory);
+        self
+    }
+
+    /// Add an NVMe backing tier below the cluster's DRAM, so model sets
+    /// whose aggregate parameters exceed DRAM still run (DRAM becomes an
+    /// evicting cache; see [`crate::coordinator::memory`]).
+    pub fn nvme(mut self, tier: TierSpec) -> SessionBuilder {
+        let dram = self
+            .memory
+            .map(|m| m.dram_bytes)
+            .unwrap_or(self.cluster.dram_bytes);
+        self.memory = Some(MemoryOptions::with_nvme(dram, tier));
+        self
+    }
+
     /// Set the Algorithm-1 partitioning knobs (real backend only; sim
     /// submissions arrive pre-partitioned).
     pub fn partition_policy(mut self, policy: PartitionPolicy) -> SessionBuilder {
@@ -181,11 +205,15 @@ impl SessionBuilder {
     /// Validate the cluster and produce the [`Session`].
     pub fn build(self) -> Result<Session> {
         self.cluster.validate()?;
+        let memory = self
+            .memory
+            .unwrap_or(MemoryOptions::dram_only(self.cluster.dram_bytes));
         Ok(Session {
             cluster: self.cluster,
             backend: self.backend,
             policy: self.policy,
             options: self.options,
+            memory,
             partition_policy: self.partition_policy,
             early_stop_median_after: self.early_stop_median_after,
             jobs: Vec::new(),
@@ -237,6 +265,7 @@ pub struct Session {
     backend: Backend,
     policy: Policy,
     options: EngineOptions,
+    memory: MemoryOptions,
     partition_policy: PartitionPolicy,
     early_stop_median_after: Option<u32>,
     jobs: Vec<Job>,
@@ -253,6 +282,7 @@ impl Session {
             backend: Backend::sim(),
             policy: Policy::default(),
             options: EngineOptions::default(),
+            memory: None,
             partition_policy: PartitionPolicy::default(),
             early_stop_median_after: None,
         }
@@ -349,6 +379,7 @@ impl Session {
             backend,
             policy,
             options,
+            memory,
             partition_policy,
             early_stop_median_after,
             jobs,
@@ -431,6 +462,7 @@ impl Session {
                     &mut real,
                     tasks,
                     &cluster,
+                    memory,
                     policy,
                     options,
                     cluster_events,
@@ -460,6 +492,7 @@ impl Session {
                         &mut SimBackend::new(noise, seed),
                         tasks,
                         &cluster,
+                        memory,
                         policy,
                         options,
                         cluster_events,
@@ -470,6 +503,7 @@ impl Session {
                         &mut *custom,
                         tasks,
                         &cluster,
+                        memory,
                         policy,
                         options,
                         cluster_events,
@@ -491,6 +525,7 @@ fn drive(
     backend: &mut dyn ExecutionBackend,
     tasks: Vec<ModelTask>,
     cluster: &Cluster,
+    memory: MemoryOptions,
     policy: Policy,
     options: EngineOptions,
     cluster_events: Vec<ClusterEvent>,
@@ -500,7 +535,7 @@ fn drive(
     let mut engine = SharpEngine::with_devices(
         tasks,
         &cluster.devices,
-        cluster.dram_bytes,
+        memory,
         policy.build(),
         backend,
         options,
@@ -678,6 +713,31 @@ mod tests {
         let late = s.submit_at(task("late", 1, 1.0), 5.0).unwrap();
         s.cancel_at(late, 1.0).unwrap();
         assert!(s.run().is_err());
+    }
+
+    #[test]
+    fn nvme_tier_runs_model_sets_that_exceed_dram() {
+        // three 1 MiB-param models over 2 MiB of DRAM: rejected without an
+        // NVMe tier, completes (with NVMe traffic) when one is configured
+        let mk = |nvme: Option<TierSpec>| {
+            let mut b = Session::builder(Cluster::uniform(1, 1 << 30, 2 << 20))
+                .options(zero_transfer());
+            if let Some(t) = nvme {
+                b = b.nvme(t);
+            }
+            let mut s = b.build().unwrap();
+            for i in 0..3 {
+                s.submit(task(&format!("m{i}"), 1, 1.0)).unwrap();
+            }
+            s.run()
+        };
+        let err = mk(None).unwrap_err();
+        assert!(matches!(err, HydraError::Exec(_)), "{err:?}");
+        assert!(format!("{err}").contains("NVMe"), "{err}");
+        let r = mk(Some(TierSpec::nvme(1 << 30))).unwrap();
+        // 3 models x 1 shard x 1 mini-batch x (fwd + bwd)
+        assert_eq!(r.run.units_executed, 6);
+        assert!(r.run.nvme_promoted_bytes > 0, "{:?}", r.run.nvme_promoted_bytes);
     }
 
     #[test]

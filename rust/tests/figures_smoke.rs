@@ -68,6 +68,64 @@ fn fig6_gantt_contains_all_models() {
 }
 
 #[test]
+fn ext_hierarchy_rejects_without_nvme_and_completes_with_it() {
+    let fig = figures::ext_hierarchy().unwrap();
+    let mut nvme_rows = 0;
+    let mut rejects = 0;
+    for line in fig.csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let (ratio, tier, runtime) = (cols[0], cols[2], cols[3]);
+        let ratio: f64 = ratio.parse().unwrap();
+        match tier {
+            "nvme" => {
+                // every NVMe-backed arm completes with a numeric runtime
+                let rt: f64 = runtime.parse().unwrap_or_else(|_| {
+                    panic!("nvme arm did not complete: {line}")
+                });
+                assert!(rt > 0.0, "{line}");
+                nvme_rows += 1;
+            }
+            "dram-only" => {
+                if ratio < 1.0 {
+                    assert_eq!(runtime, "reject", "{line}");
+                    rejects += 1;
+                } else {
+                    assert!(runtime.parse::<f64>().is_ok(), "{line}");
+                }
+            }
+            other => panic!("unknown tier column {other:?} in {line}"),
+        }
+    }
+    assert_eq!(nvme_rows, 5, "one NVMe arm per ratio");
+    assert!(rejects >= 2, "under-provisioned DRAM must reject without NVMe");
+    // under pressure the NVMe arms actually move bytes
+    let pressured_reads: f64 = fig
+        .csv
+        .lines()
+        .skip(1)
+        .filter(|l| l.contains(",nvme,"))
+        .map(|l| l.split(',').nth(5).unwrap().parse::<f64>().unwrap())
+        .sum();
+    assert!(pressured_reads > 0.0, "no NVMe reads across the whole sweep");
+}
+
+#[test]
+fn table3_includes_the_nvme_backed_arm() {
+    let fig = figures::table3().unwrap();
+    let row = fig
+        .csv
+        .lines()
+        .find(|l| l.contains("NVMe"))
+        .expect("table3 is missing the NVMe hierarchy arm");
+    let rel: f64 = row.split(',').nth(2).unwrap().parse().unwrap();
+    // NVMe backing may cost something but must stay within an order of
+    // magnitude of full hydra at 75% DRAM provisioning (small slack: a
+    // fully-hidden staging schedule can tie, and reordering jitter exists)
+    assert!(rel >= 0.99, "{row}");
+    assert!(rel < 10.0, "{row}");
+}
+
+#[test]
 fn csv_files_written_to_disk() {
     let dir = std::env::temp_dir().join("hydra_figcsv_test");
     let dir = dir.to_str().unwrap();
