@@ -1,0 +1,68 @@
+//! Model-selection bench: the 27-trial `hydra search` acceptance workload
+//! (lr x depth x batch over 4 simulated A4000s) under grid, random, and
+//! ASHA — reporting engine wallclock per whole search plus the simulated
+//! GPU-hours each algorithm spends. ASHA must spend strictly less than
+//! the full grid; the assertion here keeps the bench honest as the engine
+//! evolves.
+//!
+//! Run with `cargo bench --bench selection_search`.
+
+use hydra::coordinator::sharp::EngineOptions;
+use hydra::coordinator::Cluster;
+use hydra::selection::{Algo, Search, SearchReport, SearchSpace};
+use hydra::session::{Backend, Policy, Session};
+use hydra::sim::GpuSpec;
+use hydra::util::bench::run_once;
+
+fn run_search(algo: Algo) -> SearchReport {
+    let a4000 = GpuSpec::a4000();
+    let space =
+        SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48,batch=4,8,16").unwrap();
+    let mut search = Search::new(space);
+    search.algo = algo;
+    search.epochs = 9;
+    search.minibatches_per_epoch = 2;
+    search.seed = 7;
+    search.reference = a4000;
+    let opts = EngineOptions {
+        buffer_frac: 0.30,
+        transfer: a4000.transfer_model(),
+        record_intervals: false,
+        ..Default::default()
+    };
+    Session::builder(Cluster::uniform(4, a4000.mem_bytes, 512 << 30))
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts)
+        .build()
+        .unwrap()
+        .run_search(&search)
+        .unwrap()
+}
+
+fn main() {
+    println!("== selection: 27-trial search on 4x A4000 (9 epochs, eta 3) ==");
+    let mut spent = Vec::new();
+    for (tag, algo) in [
+        ("grid", Algo::Grid),
+        ("random-27", Algo::Random { trials: 27 }),
+        ("asha", Algo::Asha { trials: None, eta: 3, min_epochs: 1 }),
+    ] {
+        let (r, _) = run_once(&format!("search[{tag}]"), || run_search(algo));
+        println!(
+            "    makespan {:7.2}h | spent {:7.1} GPU-h of {:7.1} | saved {:5.1}%",
+            r.run.makespan / 3600.0,
+            r.spent_secs / 3600.0,
+            r.full_secs / 3600.0,
+            100.0 * (r.full_secs - r.spent_secs) / r.full_secs.max(1e-12)
+        );
+        spent.push((tag, r.spent_secs));
+    }
+    let grid = spent[0].1;
+    let asha = spent[2].1;
+    assert!(
+        asha < grid,
+        "ASHA must spend fewer simulated GPU-seconds than grid: {asha} vs {grid}"
+    );
+    println!("ok: asha GPU-seconds {asha:.0} < grid {grid:.0}");
+}

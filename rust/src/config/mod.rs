@@ -33,6 +33,11 @@
 //! and `"pool": "a4000:4,a6000:2"` is the compact class:count form shared
 //! with the `hydra simulate --online --pool` flag. Tasks may carry an
 //! `"arrival"` time in virtual seconds — the online multi-tenant setting.
+//!
+//! Model-selection searches have their own spec, [`SearchWorkload`]: the
+//! same `"cluster"`/`"engine"` objects plus a `"search"` object (space +
+//! algorithm + eta/rungs) instead of `"tasks"`, consumed by
+//! `hydra search --spec <file>`.
 
 use crate::coordinator::memory::TierSpec;
 use crate::coordinator::sched::Policy;
@@ -40,6 +45,7 @@ use crate::coordinator::sharp::{DeviceSpec, EngineOptions, ParallelMode, QueueKi
 use crate::coordinator::Cluster;
 use crate::error::{HydraError, Result};
 use crate::exec::real::RealModelSpec;
+use crate::selection::{Algo, Search, SearchReport, SearchSpace};
 use crate::session::{Backend, Session};
 use crate::sim::GpuSpec;
 use crate::train::optimizer::OptKind;
@@ -72,127 +78,8 @@ impl WorkloadSpec {
 
     pub fn parse(text: &str) -> Result<WorkloadSpec> {
         let j = Json::parse(text)?;
-
-        // --- cluster -------------------------------------------------------
-        let c = j.get("cluster").ok_or_else(|| cerr("missing cluster"))?;
-        let mib = 1u64 << 20;
-        let dram_bytes = c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib;
-        let nvme = match c.get("nvme") {
-            None => None,
-            Some(v) => {
-                let text = v.as_str().ok_or_else(|| {
-                    cerr(r#"nvme must be a string like "4096:3.5" (GiB:GB/s)"#)
-                })?;
-                Some(TierSpec::parse(text)?)
-            }
-        };
-        let cluster = if let Some(pool) = c.get("pool") {
-            // compact heterogeneous form, shared with the --pool CLI flag
-            let s = pool
-                .as_str()
-                .ok_or_else(|| cerr("pool must be a string like \"a4000:4,a6000:2\""))?;
-            let gpus = crate::sim::parse_pool(s)?;
-            let reference = crate::sim::pool_reference(&gpus)
-                .ok_or_else(|| cerr("pool is empty"))?;
-            Cluster::heterogeneous(
-                gpus.iter().map(|g| g.device_spec(&reference)).collect(),
-                dram_bytes,
-            )
-        } else if let Some(classes) = c.get("device_classes") {
-            // heterogeneous: named GPU classes (memory + speed + link)
-            let arr = classes
-                .as_arr()
-                .ok_or_else(|| cerr("device_classes must be an array"))?;
-            if arr.is_empty() {
-                return Err(cerr("device_classes is empty"));
-            }
-            let mut gpus: Vec<GpuSpec> = Vec::new();
-            for v in arr {
-                let name = v
-                    .as_str()
-                    .ok_or_else(|| cerr("device_classes entries must be strings"))?;
-                let g = GpuSpec::by_name(name)
-                    .ok_or_else(|| cerr(format!("unknown GPU class {name:?}")))?;
-                gpus.push(g);
-            }
-            let reference = crate::sim::pool_reference(&gpus)
-                .ok_or_else(|| cerr("device_classes is empty"))?;
-            Cluster::heterogeneous(
-                gpus.iter().map(|g| g.device_spec(&reference)).collect(),
-                dram_bytes,
-            )
-        } else if let Some(per_dev) = c.get("device_mem_mib_each") {
-            // heterogeneous in memory only: explicit per-device list
-            let mems: Vec<u64> = per_dev
-                .as_arr()
-                .ok_or_else(|| cerr("device_mem_mib_each must be an array"))?
-                .iter()
-                .map(|v| v.as_u64().map(|m| m * mib).ok_or_else(|| cerr("bad mem")))
-                .collect::<Result<_>>()?;
-            if mems.is_empty() {
-                return Err(cerr("device_mem_mib_each is empty"));
-            }
-            Cluster::heterogeneous(
-                mems.into_iter().map(DeviceSpec::uniform).collect(),
-                dram_bytes,
-            )
-        } else {
-            let devices = c
-                .get("devices")
-                .and_then(Json::as_usize)
-                .ok_or_else(|| cerr("cluster.devices missing"))?;
-            if devices == 0 {
-                return Err(cerr("cluster.devices must be > 0"));
-            }
-            Cluster::uniform(
-                devices,
-                c.get("device_mem_mib")
-                    .and_then(Json::as_u64)
-                    .ok_or_else(|| cerr("cluster.device_mem_mib missing"))?
-                    * mib,
-                dram_bytes,
-            )
-        };
-
-        // --- engine ---------------------------------------------------------
-        let mut engine = EngineOptions::default();
-        let mut policy = Policy::default();
-        let mut early_stop = None;
-        if let Some(e) = j.get("engine") {
-            if let Some(s) = e.get("scheduler").and_then(Json::as_str) {
-                policy = s.parse::<Policy>()?;
-            }
-            if let Some(db) = e.get("double_buffer").and_then(Json::as_bool) {
-                engine.double_buffer = db;
-            }
-            if let Some(seq) = e.get("sequential").and_then(Json::as_bool) {
-                engine.mode = if seq {
-                    ParallelMode::Sequential
-                } else {
-                    ParallelMode::Sharp
-                };
-            }
-            if let Some(f) = e.get("buffer_frac").and_then(Json::as_f64) {
-                if !(0.0..0.9).contains(&f) {
-                    return Err(cerr(format!("buffer_frac {f} out of [0, 0.9)")));
-                }
-                engine.buffer_frac = f;
-            }
-            if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
-                early_stop = Some(me as u32);
-            }
-            if let Some(q) = e.get("event_queue").and_then(Json::as_str) {
-                engine.queue = match q {
-                    "heap" => QueueKind::Heap,
-                    "scan" | "linear-scan" => QueueKind::LinearScan,
-                    other => {
-                        return Err(cerr(format!(
-                            "unknown event_queue {other:?} (heap|scan)"
-                        )))
-                    }
-                };
-            }
-        }
+        let (cluster, nvme, _reference) = parse_cluster(&j)?;
+        let (engine, policy, early_stop) = parse_engine(&j)?;
 
         // --- tasks ------------------------------------------------------------
         let tasks_json = j
@@ -250,6 +137,262 @@ impl WorkloadSpec {
             orch.add_task(t.clone());
         }
         orch
+    }
+}
+
+/// Parse the `"cluster"` object shared by [`WorkloadSpec`] and
+/// [`SearchWorkload`]. Returns the cluster, the optional NVMe tier, and —
+/// when the pool was built from named GPU classes — the reference class
+/// unit costs are calibrated on (the slowest listed class, the one whose
+/// `DeviceSpec::speed` is 1.0).
+fn parse_cluster(j: &Json) -> Result<(Cluster, Option<TierSpec>, Option<GpuSpec>)> {
+    let c = j.get("cluster").ok_or_else(|| cerr("missing cluster"))?;
+    let mib = 1u64 << 20;
+    let dram_bytes = c.get("dram_mib").and_then(Json::as_u64).unwrap_or(4096) * mib;
+    let nvme = match c.get("nvme") {
+        None => None,
+        Some(v) => {
+            let text = v.as_str().ok_or_else(|| {
+                cerr(r#"nvme must be a string like "4096:3.5" (GiB:GB/s)"#)
+            })?;
+            Some(TierSpec::parse(text)?)
+        }
+    };
+    let mut cost_reference = None;
+    let cluster = if let Some(pool) = c.get("pool") {
+        // compact heterogeneous form, shared with the --pool CLI flag
+        let s = pool
+            .as_str()
+            .ok_or_else(|| cerr("pool must be a string like \"a4000:4,a6000:2\""))?;
+        let gpus = crate::sim::parse_pool(s)?;
+        let reference = crate::sim::pool_reference(&gpus)
+            .ok_or_else(|| cerr("pool is empty"))?;
+        cost_reference = Some(reference);
+        Cluster::heterogeneous(
+            gpus.iter().map(|g| g.device_spec(&reference)).collect(),
+            dram_bytes,
+        )
+    } else if let Some(classes) = c.get("device_classes") {
+        // heterogeneous: named GPU classes (memory + speed + link)
+        let arr = classes
+            .as_arr()
+            .ok_or_else(|| cerr("device_classes must be an array"))?;
+        if arr.is_empty() {
+            return Err(cerr("device_classes is empty"));
+        }
+        let mut gpus: Vec<GpuSpec> = Vec::new();
+        for v in arr {
+            let name = v
+                .as_str()
+                .ok_or_else(|| cerr("device_classes entries must be strings"))?;
+            let g = GpuSpec::by_name(name)
+                .ok_or_else(|| cerr(format!("unknown GPU class {name:?}")))?;
+            gpus.push(g);
+        }
+        let reference = crate::sim::pool_reference(&gpus)
+            .ok_or_else(|| cerr("device_classes is empty"))?;
+        cost_reference = Some(reference);
+        Cluster::heterogeneous(
+            gpus.iter().map(|g| g.device_spec(&reference)).collect(),
+            dram_bytes,
+        )
+    } else if let Some(per_dev) = c.get("device_mem_mib_each") {
+        // heterogeneous in memory only: explicit per-device list
+        let mems: Vec<u64> = per_dev
+            .as_arr()
+            .ok_or_else(|| cerr("device_mem_mib_each must be an array"))?
+            .iter()
+            .map(|v| v.as_u64().map(|m| m * mib).ok_or_else(|| cerr("bad mem")))
+            .collect::<Result<_>>()?;
+        if mems.is_empty() {
+            return Err(cerr("device_mem_mib_each is empty"));
+        }
+        Cluster::heterogeneous(
+            mems.into_iter().map(DeviceSpec::uniform).collect(),
+            dram_bytes,
+        )
+    } else {
+        let devices = c
+            .get("devices")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| cerr("cluster.devices missing"))?;
+        if devices == 0 {
+            return Err(cerr("cluster.devices must be > 0"));
+        }
+        Cluster::uniform(
+            devices,
+            c.get("device_mem_mib")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| cerr("cluster.device_mem_mib missing"))?
+                * mib,
+            dram_bytes,
+        )
+    };
+    Ok((cluster, nvme, cost_reference))
+}
+
+/// Parse the optional `"engine"` object shared by [`WorkloadSpec`] and
+/// [`SearchWorkload`]: engine knobs, scheduler policy, and the median
+/// early-stop threshold.
+fn parse_engine(j: &Json) -> Result<(EngineOptions, Policy, Option<u32>)> {
+    let mut engine = EngineOptions::default();
+    let mut policy = Policy::default();
+    let mut early_stop = None;
+    if let Some(e) = j.get("engine") {
+        if let Some(s) = e.get("scheduler").and_then(Json::as_str) {
+            policy = s.parse::<Policy>()?;
+        }
+        if let Some(db) = e.get("double_buffer").and_then(Json::as_bool) {
+            engine.double_buffer = db;
+        }
+        if let Some(seq) = e.get("sequential").and_then(Json::as_bool) {
+            engine.mode = if seq {
+                ParallelMode::Sequential
+            } else {
+                ParallelMode::Sharp
+            };
+        }
+        if let Some(f) = e.get("buffer_frac").and_then(Json::as_f64) {
+            if !(0.0..0.9).contains(&f) {
+                return Err(cerr(format!("buffer_frac {f} out of [0, 0.9)")));
+            }
+            engine.buffer_frac = f;
+        }
+        if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
+            early_stop = Some(me as u32);
+        }
+        if let Some(q) = e.get("event_queue").and_then(Json::as_str) {
+            engine.queue = match q {
+                "heap" => QueueKind::Heap,
+                "scan" | "linear-scan" => QueueKind::LinearScan,
+                other => {
+                    return Err(cerr(format!(
+                        "unknown event_queue {other:?} (heap|scan)"
+                    )))
+                }
+            };
+        }
+    }
+    Ok((engine, policy, early_stop))
+}
+
+/// A declarative model-selection search — the `"search"` counterpart of
+/// [`WorkloadSpec`], consumed by `hydra search --spec <file>`:
+///
+/// ```json
+/// {
+///   "cluster": { "pool": "a4000:4", "dram_mib": 524288 },
+///   "engine": { "scheduler": "sharded-lrtf" },
+///   "search": { "space": "lr=1e-4..1e-2:log,layers=12,24,48",
+///               "algo": "asha", "eta": 3, "min_epochs": 1,
+///               "epochs": 9, "minibatches": 2, "seed": 7 }
+/// }
+/// ```
+///
+/// `algo` is `grid` | `random` | `asha`; `random` requires `trials`, and
+/// `asha` halves a random cohort of `trials` samples — or the full grid
+/// when `trials` is omitted. Optional keys: `stagger` (virtual seconds
+/// between trial submissions), `grid_points` (resolution of continuous
+/// axes, default 3). Searches run on the simulated backend; when the
+/// cluster is a named-class pool, trial costs are calibrated on its
+/// slowest class automatically.
+#[derive(Debug, Clone)]
+pub struct SearchWorkload {
+    pub cluster: Cluster,
+    /// Optional NVMe backing tier below DRAM.
+    pub nvme: Option<TierSpec>,
+    pub engine: EngineOptions,
+    /// Typed scheduling policy (parsed from the spec's `"scheduler"`).
+    pub policy: Policy,
+    /// The search itself: space + algorithm + per-trial shape.
+    pub search: Search,
+}
+
+impl SearchWorkload {
+    pub fn load(path: &str) -> Result<SearchWorkload> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<SearchWorkload> {
+        let j = Json::parse(text)?;
+        let (cluster, nvme, reference) = parse_cluster(&j)?;
+        let (mut engine, policy, early_stop) = parse_engine(&j)?;
+        if early_stop.is_some() {
+            return Err(cerr(
+                "engine.early_stop_median_after is a real-backend workload key \
+                 and has no effect on searches — prune with the search object \
+                 instead (\"algo\": \"asha\" plus eta/min_epochs)",
+            ));
+        }
+        let s = j.get("search").ok_or_else(|| cerr("missing search object"))?;
+        let space_s = s
+            .get("space")
+            .and_then(Json::as_str)
+            .ok_or_else(|| cerr("search.space missing (e.g. \"lr=1e-4..1e-2:log\")"))?;
+        let space = SearchSpace::parse(space_s)?;
+
+        // paper-scale default: unless the spec pins buffer_frac, searches
+        // use the 30% zone 1B-shard prefetch staging needs
+        let explicit_frac = j
+            .get("engine")
+            .and_then(|e| e.get("buffer_frac"))
+            .is_some();
+        if !explicit_frac {
+            engine.buffer_frac = 0.30;
+        }
+
+        let trials = s.get("trials").and_then(Json::as_usize);
+        let eta = s.get("eta").and_then(Json::as_u64).unwrap_or(3) as u32;
+        let min_epochs = s.get("min_epochs").and_then(Json::as_u64).unwrap_or(1) as u32;
+        let algo = match s.get("algo").and_then(Json::as_str).unwrap_or("grid") {
+            "grid" => Algo::Grid,
+            "random" => Algo::Random {
+                trials: trials
+                    .ok_or_else(|| cerr("search.algo \"random\" needs search.trials"))?,
+            },
+            "asha" | "sha" => Algo::Asha { trials, eta, min_epochs },
+            other => {
+                return Err(cerr(format!(
+                    "unknown search.algo {other:?} (grid|random|asha)"
+                )))
+            }
+        };
+        let stagger = s.get("stagger").and_then(Json::as_f64).unwrap_or(0.0);
+        if !stagger.is_finite() || stagger < 0.0 {
+            return Err(cerr(format!("bad search.stagger {stagger}")));
+        }
+        let mut search = Search::new(space);
+        search.algo = algo;
+        search.epochs = s.get("epochs").and_then(Json::as_u64).unwrap_or(4) as u32;
+        search.minibatches_per_epoch =
+            s.get("minibatches").and_then(Json::as_u64).unwrap_or(2) as u32;
+        search.seed = s.get("seed").and_then(Json::as_u64).unwrap_or(0);
+        search.stagger_secs = stagger;
+        search.grid_points =
+            s.get("grid_points").and_then(Json::as_usize).unwrap_or(3);
+        search.buffer_frac = engine.buffer_frac;
+        if let Some(r) = reference {
+            search.reference = r;
+        }
+        Ok(SearchWorkload { cluster, nvme, engine, policy, search })
+    }
+
+    /// Build the sim-backend [`Session`] this spec searches on.
+    pub fn session(&self) -> Result<Session> {
+        let mut builder = Session::builder(self.cluster.clone())
+            .backend(Backend::sim())
+            .policy(self.policy)
+            .options(self.engine.clone());
+        if let Some(tier) = self.nvme {
+            builder = builder.nvme(tier);
+        }
+        builder.build()
+    }
+
+    /// Run the whole search ([`Session::run_search`]).
+    pub fn run(&self) -> Result<SearchReport> {
+        self.session()?.run_search(&self.search)
     }
 }
 
@@ -443,6 +586,87 @@ mod tests {
                 "tasks":[{"config":"x","minibatches":1}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn search_spec_parses_with_pool_reference() {
+        let spec = r#"{
+          "cluster": { "pool": "a4000:4", "dram_mib": 524288 },
+          "engine": { "scheduler": "fifo" },
+          "search": { "space": "lr=1e-4..1e-2:log,layers=12,24,48",
+                      "algo": "asha", "eta": 3, "min_epochs": 1,
+                      "epochs": 9, "minibatches": 2, "seed": 7,
+                      "stagger": 30.0 }
+        }"#;
+        let w = SearchWorkload::parse(spec).unwrap();
+        assert_eq!(w.cluster.n_devices(), 4);
+        assert_eq!(w.policy, Policy::Fifo);
+        assert_eq!(
+            w.search.algo,
+            Algo::Asha { trials: None, eta: 3, min_epochs: 1 }
+        );
+        assert_eq!(w.search.epochs, 9);
+        assert_eq!(w.search.minibatches_per_epoch, 2);
+        assert_eq!(w.search.seed, 7);
+        assert_eq!(w.search.stagger_secs, 30.0);
+        // cost calibration follows the pool's reference class (A4000)
+        assert_eq!(
+            w.search.reference.mem_bytes,
+            crate::sim::GpuSpec::a4000().mem_bytes
+        );
+        // searches default to the paper-scale 30% buffer zone
+        assert_eq!(w.engine.buffer_frac, 0.30);
+        assert_eq!(w.search.buffer_frac, 0.30);
+        assert!(w.session().is_ok());
+    }
+
+    #[test]
+    fn search_spec_defaults_and_explicit_buffer_frac() {
+        let spec = r#"{
+          "cluster": { "devices": 2, "device_mem_mib": 16384 },
+          "engine": { "buffer_frac": 0.1 },
+          "search": { "space": "lr=1e-4..1e-2:log" }
+        }"#;
+        let w = SearchWorkload::parse(spec).unwrap();
+        assert_eq!(w.search.algo, Algo::Grid);
+        assert_eq!(w.search.epochs, 4);
+        assert_eq!(w.search.grid_points, 3);
+        // explicit buffer_frac wins over the search default
+        assert_eq!(w.engine.buffer_frac, 0.1);
+        assert_eq!(w.search.buffer_frac, 0.1);
+    }
+
+    #[test]
+    fn search_spec_rejects_bad_inputs() {
+        let mk = |search: &str| {
+            SearchWorkload::parse(&format!(
+                r#"{{"cluster": {{"devices":1,"device_mem_mib":16384}},
+                     "search": {search}}}"#
+            ))
+        };
+        assert!(mk(r#"{}"#).is_err()); // no space
+        assert!(mk(r#"{"space": "lr="}"#).is_err()); // malformed space
+        assert!(mk(r#"{"space": "lr=1e-4..1e-2:log", "algo": "random"}"#).is_err());
+        assert!(mk(r#"{"space": "lr=1e-4..1e-2:log", "algo": "bayes"}"#).is_err());
+        assert!(
+            mk(r#"{"space": "lr=1e-4..1e-2:log", "stagger": -3.0}"#).is_err()
+        );
+        // missing the search object entirely
+        assert!(SearchWorkload::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":1}}"#
+        )
+        .is_err());
+        // a real-backend-only engine key is rejected, not silently dropped
+        let stale_key = r#"{
+          "cluster": { "devices": 1, "device_mem_mib": 16384 },
+          "engine": { "early_stop_median_after": 2 },
+          "search": { "space": "lr=1e-4..1e-2:log" }
+        }"#;
+        let err = SearchWorkload::parse(stale_key).unwrap_err();
+        assert!(
+            format!("{err}").contains("early_stop_median_after"),
+            "{err}"
+        );
     }
 
     #[test]

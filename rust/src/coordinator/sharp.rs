@@ -225,6 +225,12 @@ pub struct JobStat {
     pub finished: f64,
     /// Whether the job was cancelled.
     pub cancelled: bool,
+    /// Earliest tenant cancel request, if any was issued — recorded even
+    /// when the request was a no-op because the job had already finished
+    /// (`cancelled` stays false then). This is how
+    /// `Session::cancel_at`-after-completion is observable in the report
+    /// instead of vanishing silently.
+    pub cancel_requested: Option<f64>,
     /// Units this job actually executed.
     pub units_executed: u64,
 }
@@ -408,6 +414,9 @@ pub struct SharpEngine<'a> {
     arrived: Vec<bool>,
     /// Per-model: has a cancellation been issued?
     job_cancelled: Vec<bool>,
+    /// Per-model earliest cancel-request time (NaN = never requested);
+    /// recorded even for no-op requests against finished jobs.
+    cancel_requested: Vec<f64>,
     /// Cancellations waiting for an in-flight unit to retire.
     cancel_pending: BTreeSet<usize>,
     /// Per-model finish time (NaN until finished).
@@ -492,6 +501,7 @@ impl<'a> SharpEngine<'a> {
             ready: BTreeSet::new(),
             arrived: vec![false; n_tasks],
             job_cancelled: vec![false; n_tasks],
+            cancel_requested: vec![f64::NAN; n_tasks],
             cancel_pending: BTreeSet::new(),
             finish_times: vec![f64::NAN; n_tasks],
             parked: BTreeSet::new(),
@@ -727,6 +737,8 @@ impl<'a> SharpEngine<'a> {
                 arrival: t.arrival(),
                 finished: self.finish_times[m],
                 cancelled: self.job_cancelled[m],
+                cancel_requested: (!self.cancel_requested[m].is_nan())
+                    .then_some(self.cancel_requested[m]),
                 units_executed: t.completed_units(),
             })
             .collect();
@@ -826,6 +838,7 @@ impl<'a> SharpEngine<'a> {
         self.memory.home_model(task.id, &Self::shard_bytes(&task))?;
         self.tasks.push(task);
         self.job_cancelled.push(false);
+        self.cancel_requested.push(f64::NAN);
         self.finish_times.push(f64::NAN);
         // a submission may carry its own later arrival time; gate on it
         let arrival = self.tasks[id].arrival();
@@ -853,6 +866,11 @@ impl<'a> SharpEngine<'a> {
             return Err(HydraError::Sched(format!(
                 "cancel of unknown model {model}"
             )));
+        }
+        // every request is recorded (earliest wins), even the no-op ones
+        // against already-finished jobs — the report stays auditable
+        if self.cancel_requested[model].is_nan() {
+            self.cancel_requested[model] = now;
         }
         if self.job_cancelled[model] || self.tasks[model].state() == TaskState::Done {
             return Ok(()); // idempotent; cancelling a finished job is a no-op
@@ -1171,15 +1189,9 @@ impl<'a> SharpEngine<'a> {
         self.backend.on_unit_retired(&self.tasks[unit.model], &unit);
         obs.on_unit_retired(device, &unit, now);
 
-        // epoch boundary: last unit of the epoch just retired (training:
-        // bwd of shard 0 on the final mini-batch; inference: fwd of the
-        // last shard) — give the backend its early-stop vote (§4.7.2)
-        let g = self.tasks[unit.model].geometry;
-        let epoch_done = unit.minibatch + 1 == g.minibatches_per_epoch
-            && match unit.phase {
-                Phase::Bwd => unit.shard == 0,
-                Phase::Fwd => g.inference_only && unit.shard + 1 == g.n_shards,
-            };
+        // epoch boundary: last unit of the epoch just retired — give the
+        // backend its early-stop vote (§4.7.2)
+        let epoch_done = self.tasks[unit.model].geometry.closes_epoch(&unit);
         if epoch_done
             && self.tasks[unit.model].state() == TaskState::Idle
             && self.backend.should_early_stop(&self.tasks[unit.model], unit.epoch)

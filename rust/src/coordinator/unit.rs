@@ -83,6 +83,19 @@ impl UnitGeometry {
         self.units_per_epoch() * self.epochs as u64
     }
 
+    /// Whether `unit` is the last unit of its epoch: the final mini-batch's
+    /// bwd of shard 0 when training, or its fwd of the last shard when
+    /// inference-only. The engine consults early-stop votes exactly here,
+    /// and the selection driver records per-epoch losses at the same
+    /// boundary — one predicate, shared so the two can never drift.
+    pub fn closes_epoch(&self, unit: &ShardUnit) -> bool {
+        unit.minibatch + 1 == self.minibatches_per_epoch
+            && match unit.phase {
+                Phase::Bwd => unit.shard == 0,
+                Phase::Fwd => self.inference_only && unit.shard + 1 == self.n_shards,
+            }
+    }
+
     /// Derive the unit at queue position `seq_idx` for model `model`.
     pub fn unit_at(&self, model: usize, seq_idx: u64) -> ShardUnit {
         debug_assert!(seq_idx < self.total_units());
@@ -147,6 +160,20 @@ mod tests {
     }
 
     #[test]
+    fn closes_epoch_fires_once_per_epoch() {
+        let g = UnitGeometry::new(3, 2, 2);
+        let boundaries: Vec<u64> = (0..g.total_units())
+            .filter(|&i| g.closes_epoch(&g.unit_at(0, i)))
+            .collect();
+        // exactly one boundary per epoch: the last minibatch's bwd of
+        // shard 0, i.e. the final unit of each epoch
+        assert_eq!(
+            boundaries,
+            vec![g.units_per_epoch() - 1, 2 * g.units_per_epoch() - 1]
+        );
+    }
+
+    #[test]
     fn every_position_round_trips_monotonically() {
         let g = UnitGeometry::new(4, 5, 3);
         let mut last: Option<ShardUnit> = None;
@@ -175,6 +202,16 @@ mod inference_tests {
             assert_eq!(u.phase, Phase::Fwd);
             assert_eq!(u.shard as u64, i % 3);
         }
+    }
+
+    #[test]
+    fn inference_epochs_close_on_the_last_shard_fwd() {
+        let g = UnitGeometry::new_inference(2, 3);
+        let boundaries: Vec<u64> = (0..g.total_units())
+            .filter(|&i| g.closes_epoch(&g.unit_at(0, i)))
+            .collect();
+        // forward-only: the final batch's last-shard fwd closes the epoch
+        assert_eq!(boundaries, vec![g.total_units() - 1]);
     }
 
     #[test]

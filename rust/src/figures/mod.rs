@@ -12,6 +12,7 @@ use crate::coordinator::sharp::{EngineOptions, ParallelMode, RunReport, Transfer
 use crate::coordinator::task::{ModelTask, ShardDesc};
 use crate::coordinator::Cluster;
 use crate::error::Result;
+use crate::selection::{Algo, Search, SearchSpace};
 use crate::session::{Backend, Policy, Session};
 use crate::sim::{bert_grid, build_tasks, uniform_grid, vit_grid, GpuSpec};
 use crate::util::rng::Rng;
@@ -939,6 +940,83 @@ pub fn ext_hierarchy() -> Result<FigureOutput> {
     })
 }
 
+/// ext-selection: ASHA-vs-grid model selection makespan across pool sizes
+/// — the workload Hydra exists for (§1). The 27-trial lr x depth x batch
+/// space (the acceptance workload of `hydra search`) runs on A4000 pools
+/// of 2/4/8 devices under both algorithms; ASHA (eta=3, rungs at 1 and 3
+/// of 9 epochs) keeps 9 then 3 survivors, so both its makespan and its
+/// simulated GPU-hours must land strictly below the full grid's on every
+/// pool size (asserted by figures_smoke).
+pub fn ext_selection() -> Result<FigureOutput> {
+    let a4000 = GpuSpec::a4000();
+    let space = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48,batch=4,8,16")?;
+    let mk_search = |algo: Algo| {
+        let mut s = Search::new(space.clone());
+        s.algo = algo;
+        s.epochs = 9;
+        s.minibatches_per_epoch = 2;
+        s.seed = 7;
+        s.reference = a4000;
+        s
+    };
+    let mut lines = vec![format!(
+        "{:<6} {:<6} {:>7} {:>10} {:>9} {:>8} {:>12}",
+        "pool", "algo", "trials", "makespan", "gpu-h", "saved", "best"
+    )];
+    let mut csv =
+        String::from("pool,algo,trials,makespan_h,gpu_h,saved_pct,best_loss\n");
+    for pool in [2usize, 4, 8] {
+        for algo in [
+            Algo::Grid,
+            Algo::Asha { trials: None, eta: 3, min_epochs: 1 },
+        ] {
+            let opts = EngineOptions {
+                buffer_frac: PAPER_BUFFER_FRAC,
+                transfer: a4000.transfer_model(),
+                record_intervals: false,
+                ..Default::default()
+            };
+            let session = Session::builder(Cluster::uniform(pool, a4000.mem_bytes, DRAM))
+                .backend(Backend::sim())
+                .policy(Policy::ShardedLrtf)
+                .options(opts)
+                .build()?;
+            let r = session.run_search(&mk_search(algo))?;
+            let saved_pct =
+                100.0 * (r.full_secs - r.spent_secs) / r.full_secs.max(1e-12);
+            let best = r
+                .best_trial()
+                .and_then(|t| t.final_loss())
+                .unwrap_or(f64::NAN);
+            lines.push(format!(
+                "{:<6} {:<6} {:>7} {:>10} {:>9.2} {:>7.1}% {:>12.4}",
+                pool,
+                r.algo,
+                r.trials.len(),
+                hours(r.run.makespan),
+                r.spent_secs / 3600.0,
+                saved_pct,
+                best
+            ));
+            csv.push_str(&format!(
+                "{pool},{},{},{},{},{saved_pct},{best}\n",
+                r.algo,
+                r.trials.len(),
+                r.run.makespan / 3600.0,
+                r.spent_secs / 3600.0,
+            ));
+        }
+    }
+    lines.push("(ASHA shares the grid's 27-trial cohort; rungs at 1 and 3 of 9 epochs".into());
+    lines.push(" keep 9 then 3 survivors — pruning must beat the grid on every pool)".into());
+    Ok(FigureOutput {
+        id: "ext_selection",
+        title: "Extension: ASHA vs full-grid model selection across pool sizes".into(),
+        lines,
+        csv,
+    })
+}
+
 /// All figure generators by id.
 pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
     match id {
@@ -954,12 +1032,13 @@ pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
         "ext_buffer" => Some(ext_buffer()),
         "ext_online" => Some(ext_online()),
         "ext_hierarchy" => Some(ext_hierarchy()),
+        "ext_selection" => Some(ext_selection()),
         _ => None,
     }
 }
 
 /// Every figure/table id, in presentation order.
-pub const ALL_IDS: [&str; 12] = [
+pub const ALL_IDS: [&str; 13] = [
     "table2", "fig6", "fig7", "fig8", "fig9a", "fig9b", "fig10", "table3",
-    "ext_sched", "ext_buffer", "ext_online", "ext_hierarchy",
+    "ext_sched", "ext_buffer", "ext_online", "ext_hierarchy", "ext_selection",
 ];

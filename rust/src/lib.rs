@@ -24,6 +24,7 @@ pub mod error;
 pub mod exec;
 pub mod figures;
 pub mod runtime;
+pub mod selection;
 pub mod session;
 pub mod sim;
 pub mod tensor;
@@ -35,4 +36,5 @@ pub use coordinator::observer::{EngineObserver, NoopObserver, TraceRecorder};
 pub use coordinator::sched::Policy;
 pub use coordinator::Cluster;
 pub use error::{HydraError, Result};
+pub use selection::{Search, SearchReport, SearchSpace};
 pub use session::{Backend, JobHandle, JobSpec, Session, SessionBuilder, SessionReport};

@@ -8,6 +8,8 @@
 //!   simulate  — ad-hoc paper-scale simulation with chosen knobs, including
 //!               the online Poisson-arrival / heterogeneous-pool scenario
 //!               (`--progress` streams job events live via EngineObserver)
+//!   search    — model selection: grid/random/ASHA over a hyperparameter
+//!               space, with ASHA pruning losers mid-run (selection::)
 //!   partition — show Algorithm-1 partitioning for a config
 //!   inspect   — list artifact configs and their executables
 
@@ -22,10 +24,11 @@ use hydra::coordinator::Cluster;
 use hydra::exec::real::RealModelSpec;
 use hydra::figures;
 use hydra::runtime::Manifest;
+use hydra::selection::{Algo, Search, SearchReport, SearchSpace, TrialState};
 use hydra::session::{Backend, Policy, Session};
 use hydra::sim::{
-    build_tasks, build_tasks_pool, parse_pool, poisson_mixed_tenants, uniform_grid,
-    GpuSpec,
+    build_tasks, build_tasks_pool, parse_pool, poisson_mixed_tenants,
+    pool_reference, uniform_grid, GpuSpec,
 };
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
@@ -54,6 +57,12 @@ USAGE:
                 [--pool a4000:4,a6000:4] [--minibatches 3]
                 [--scheduler sharded-lrtf] [--progress] [--gantt]
                 [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
+  hydra search  --space lr=1e-4..1e-2:log,layers=12,24,48
+                [--algo grid|random|asha] [--pool a4000:4] [--trials N]
+                [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
+                [--grid-points 3] [--seed 7] [--stagger 0]
+                [--scheduler sharded-lrtf] [--dram-gib 500]
+                [--nvme <cap-gib>[:<gbps>]] | --spec search.json
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
                 [--device-mem-mib 2]
   hydra inspect [--manifest artifacts]
@@ -85,6 +94,7 @@ fn main() {
         "run" => cmd_run(&args),
         "figure" => cmd_figure(&args),
         "simulate" => cmd_simulate(&args),
+        "search" => cmd_search(&args),
         "partition" => cmd_partition(&args),
         "inspect" => cmd_inspect(&args),
         other => {
@@ -406,6 +416,132 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         println!("{}", r.trace.gantt(100));
     }
     Ok(())
+}
+
+/// Model selection over a hyperparameter space: grid / random / ASHA,
+/// ASHA pruning rung losers mid-run so freed memory recirculates to the
+/// surviving trials (`hydra::selection`).
+fn cmd_search(args: &Args) -> CliResult {
+    let report = if let Some(path) = args.opt("spec") {
+        let spec = hydra::config::SearchWorkload::load(path)?;
+        println!(
+            "search spec {path}: {}-axis space on {} devices ({} scheduler)",
+            spec.search.space.params.len(),
+            spec.cluster.n_devices(),
+            spec.policy
+        );
+        spec.run()?
+    } else {
+        let space_s = args.opt("space").ok_or(
+            "search requires --space (e.g. lr=1e-4..1e-2:log,layers=12,24,48) \
+             or --spec search.json",
+        )?;
+        let space = SearchSpace::parse(space_s)?;
+        let eta = args.opt_usize("eta", 3)? as u32;
+        let min_epochs = args.opt_usize("min-epochs", 1)? as u32;
+        let trials = args
+            .opt("trials")
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| format!("--trials: bad integer {v:?}"))
+            })
+            .transpose()?;
+        let algo = match args.opt_or("algo", "asha").as_str() {
+            "grid" => Algo::Grid,
+            "random" => Algo::Random {
+                trials: trials.ok_or("--algo random requires --trials")?,
+            },
+            "asha" | "sha" => Algo::Asha { trials, eta, min_epochs },
+            other => {
+                return Err(format!("unknown --algo {other:?} (grid|random|asha)").into())
+            }
+        };
+        let pool = parse_pool(&args.opt_or("pool", "a4000:4"))?;
+        let reference = pool_reference(&pool).ok_or("empty pool")?;
+        let specs: Vec<_> = pool.iter().map(|g| g.device_spec(&reference)).collect();
+        let dram = (args.opt_usize("dram-gib", 500)? as u64) << 30;
+        let nvme = args.opt("nvme").map(TierSpec::parse).transpose()?;
+
+        let mut search = Search::new(space);
+        search.algo = algo;
+        search.epochs = args.opt_usize("epochs", 9)? as u32;
+        search.minibatches_per_epoch = args.opt_usize("minibatches", 2)? as u32;
+        search.seed = args.opt_usize("seed", 7)? as u64;
+        search.stagger_secs = args.opt_f64("stagger", 0.0)?;
+        search.grid_points = args.opt_usize("grid-points", 3)?;
+        search.reference = reference;
+
+        // engine_options honors --sequential / --no-double-buffer /
+        // --scan-queue exactly like the simulate subcommands
+        let opts = EngineOptions {
+            buffer_frac: 0.30,
+            record_intervals: false,
+            ..engine_options(args)
+        };
+        let mut builder = Session::builder(Cluster::heterogeneous(specs, dram))
+            .backend(Backend::sim())
+            .policy(policy_arg(args)?)
+            .options(opts);
+        if let Some(tier) = nvme {
+            builder = builder.nvme(tier);
+        }
+        builder.build()?.run_search(&search)?
+    };
+    print_search_report(&report);
+    Ok(())
+}
+
+fn print_search_report(r: &SearchReport) {
+    println!(
+        "{} search: {} trials | makespan {:.2}h | utilization {:.1}%",
+        r.algo,
+        r.trials.len(),
+        r.run.makespan / 3600.0,
+        100.0 * r.run.utilization
+    );
+    println!(
+        "  GPU time: spent {:.1}h of {:.1}h full-grid (saved {:.1}h, {:.1}%)",
+        r.spent_secs / 3600.0,
+        r.full_secs / 3600.0,
+        r.gpu_hours_saved(),
+        100.0 * (r.full_secs - r.spent_secs) / r.full_secs.max(1e-12),
+    );
+    for rung in &r.rungs {
+        println!(
+            "  rung @{} epoch{}: {} entered -> {} promoted",
+            rung.epochs,
+            if rung.epochs == 1 { "" } else { "s" },
+            rung.entered.len(),
+            rung.promoted.len()
+        );
+    }
+    println!(
+        "  {:<38} {:>9} {:>7} {:>10} {:>10}",
+        "trial", "state", "epochs", "final-loss", "gpu-secs"
+    );
+    for t in &r.trials {
+        let state = match t.state {
+            TrialState::Completed => "done".to_string(),
+            TrialState::Pruned { rung } => format!("pruned@{rung}"),
+            TrialState::Pending => "pending".to_string(),
+        };
+        println!(
+            "  {:<38} {:>9} {:>7} {:>10.4} {:>10.1}",
+            t.name,
+            state,
+            t.losses.len(),
+            t.final_loss().unwrap_or(f64::NAN),
+            t.executed_secs
+        );
+    }
+    match r.best_trial() {
+        Some(b) => println!(
+            "best: {} (final loss {:.4})",
+            b.name,
+            b.final_loss().unwrap_or(f64::NAN)
+        ),
+        None => println!("best: none (no trial completed)"),
+    }
 }
 
 fn cmd_partition(args: &Args) -> CliResult {

@@ -1,0 +1,678 @@
+//! The selection driver: one whole hyperparameter search on one
+//! [`Session`] run.
+//!
+//! [`Session::run_search`] submits every trial through
+//! [`Session::submit_at`], streams the run through the
+//! [`TrialMonitor`] observer, and prunes rung losers *mid-run* so their
+//! homed parameters leave the HBM/DRAM/NVMe hierarchy immediately
+//! (`finish_job` unhomes a pruned trial the moment its boundary unit
+//! retires) — freed memory recirculates to the surviving trials while the
+//! engine keeps running.
+//!
+//! ## The Trial / Rung state machine
+//!
+//! ```text
+//!  SearchSpace --Searcher--> TrialConfig[i] --trial_task--> ModelTask[i]
+//!                                                  |  submit_at(i * stagger)
+//!                                                  v
+//!  Trial[i]: Pending --(epoch boundary e)--> record loss(i, e)
+//!      |  e == rung.epochs?                       (TrialBackend)
+//!      |        in top ceil(n/eta) of the rung  -> promoted, keep running
+//!      |        else -> should_early_stop = true -> Pruned { rung }
+//!      |                (remaining units drop; memory unhomes now)
+//!      v
+//!  survivors of the last rung run to the full budget -> Completed
+//! ```
+//!
+//! ## Synchronous halving in one engine run
+//!
+//! Successive halving ranks every trial that reaches a rung against the
+//! *whole* cohort at that rung and promotes exactly `ceil(n / eta)`. A
+//! real deployment enforces that with a barrier: trials pause at the rung
+//! until the cohort reports. The engine cannot pause a job — but the
+//! simulated loss curves are a pure function of `(trial, config, epoch,
+//! seed)` ([`SynthLoss`]), independent of scheduling, so the driver
+//! resolves each rung's cutoff from the same oracle the trials will report
+//! and plants each loser's stop at its rung-boundary epoch
+//! (`ExecutionBackend::should_early_stop`, the same unit-granular
+//! mechanism behind tenant `cancel_at`). The rung invariants — exactly
+//! `ceil(n/eta)` promotions, survivors exactly the top-k by observed loss,
+//! no retired unit after a pruned trial's finish — are asserted on the
+//! *observed* run by the property suite in `rust/tests/selection.rs`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::coordinator::metrics::{Interval, IntervalKind};
+use crate::coordinator::observer::EngineObserver;
+use crate::coordinator::partitioner::{partition, PartitionPolicy};
+use crate::coordinator::sharp::RunReport;
+use crate::coordinator::task::ModelTask;
+use crate::coordinator::unit::ShardUnit;
+use crate::error::{HydraError, Result};
+use crate::exec::{ExecutionBackend, SimBackend};
+use crate::selection::loss::SynthLoss;
+use crate::selection::searcher::{
+    GridSearch, HalvingRule, RandomSearch, Searcher, SuccessiveHalving,
+};
+use crate::selection::space::{SearchSpace, TrialConfig};
+use crate::session::{Backend, Session};
+use crate::sim::cost::{GpuSpec, PaperModel};
+
+/// Which search algorithm [`Search`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Full cartesian grid, every trial to its full budget.
+    Grid,
+    /// `trials` seeded random samples, every trial to its full budget.
+    Random {
+        /// Number of samples.
+        trials: usize,
+    },
+    /// Successive halving over `trials` random samples, or over the full
+    /// grid when `trials` is `None` (same cohort as [`Algo::Grid`] — the
+    /// apples-to-apples GPU-hours comparison).
+    Asha {
+        /// Random cohort size; `None` halves the full grid.
+        trials: Option<usize>,
+        /// Reduction factor (survivors per rung = `ceil(n / eta)`).
+        eta: u32,
+        /// Epoch budget of the first rung.
+        min_epochs: u32,
+    },
+}
+
+/// A complete search specification: the space, the algorithm, and the
+/// shape every trial trains with. Run it with [`Session::run_search`].
+#[derive(Debug, Clone)]
+pub struct Search {
+    /// Hyperparameter space the trials are drawn from.
+    pub space: SearchSpace,
+    /// Search algorithm.
+    pub algo: Algo,
+    /// Full per-trial epoch budget (ASHA's `R`).
+    pub epochs: u32,
+    /// Mini-batches per epoch of every trial.
+    pub minibatches_per_epoch: u32,
+    /// Seed of the random sampler and the synthetic loss noise.
+    pub seed: u64,
+    /// `submit_at` spacing between consecutive trials in virtual seconds
+    /// (0.0 = the batch setting; > 0 = an online trial stream).
+    pub stagger_secs: f64,
+    /// Grid resolution of continuous axes (grid / grid-cohort ASHA).
+    pub grid_points: usize,
+    /// GPU class the trial unit costs are calibrated on. Must be the
+    /// reference class of the session's pool (the class whose
+    /// `DeviceSpec::speed` is 1.0) for durations to line up.
+    pub reference: GpuSpec,
+    /// Partitioner headroom fraction used when building tasks directly via
+    /// [`Search::trial_task`]. [`Session::run_search`] *overrides* it with
+    /// the session's own `EngineOptions::buffer_frac`, so shard sizing
+    /// always matches the engine's real staging zone and §4.6 prefetch
+    /// engages — a mismatched pair cannot be configured through the
+    /// driver.
+    pub buffer_frac: f64,
+}
+
+impl Search {
+    /// A grid search over `space` with the paper-scale defaults: 4 epochs,
+    /// 2 mini-batches/epoch, 3 grid points per continuous axis, RTX
+    /// 2080 Ti cost calibration, 30% partitioner headroom.
+    pub fn new(space: SearchSpace) -> Search {
+        Search {
+            space,
+            algo: Algo::Grid,
+            epochs: 4,
+            minibatches_per_epoch: 2,
+            seed: 0,
+            stagger_secs: 0.0,
+            grid_points: 3,
+            reference: GpuSpec::rtx2080ti(),
+            buffer_frac: 0.30,
+        }
+    }
+
+    /// The [`Searcher`] this spec's algorithm denotes.
+    pub fn searcher(&self) -> Result<Box<dyn Searcher>> {
+        Ok(match self.algo {
+            Algo::Grid => Box::new(GridSearch::new(self.grid_points)),
+            Algo::Random { trials } => Box::new(RandomSearch { trials, seed: self.seed }),
+            Algo::Asha { trials, eta, min_epochs } => {
+                let rule = HalvingRule { eta, min_epochs };
+                Box::new(match trials {
+                    Some(n) => SuccessiveHalving::over_random(n, self.seed, rule),
+                    None => SuccessiveHalving::over_grid(self.grid_points, rule),
+                })
+            }
+        })
+    }
+
+    /// Deterministic task name of trial `idx`.
+    pub fn trial_name(idx: usize, cfg: &TrialConfig) -> String {
+        format!("trial{idx}-{}", cfg.label())
+    }
+
+    /// Build the [`ModelTask`] trial `idx` trains: a BERT-style encoder
+    /// whose depth/batch come from the config (`layers`, `batch`),
+    /// partitioned for `min_device_mem` (the §4.3 smallest-device bound)
+    /// with costs calibrated on [`Search::reference`]. Public so the
+    /// differential suite can hand-build the byte-identical `submit_at`
+    /// job list.
+    pub fn trial_task(
+        &self,
+        idx: usize,
+        cfg: &TrialConfig,
+        min_device_mem: u64,
+    ) -> Result<ModelTask> {
+        let layers = cfg.get_or("layers", 24.0).round().max(1.0) as usize;
+        let batch = cfg.get_or("batch", 8.0).round().max(1.0) as usize;
+        let lr = cfg.get_or("lr", 1e-3);
+        let model = PaperModel::bert_depth(layers, batch);
+        let probe = GpuSpec { mem_bytes: min_device_mem, ..self.reference };
+        let part = partition(
+            &model.layer_descs(&probe),
+            min_device_mem,
+            PartitionPolicy { buffer_frac: self.buffer_frac, ..Default::default() },
+        )?;
+        Ok(ModelTask::new(
+            idx,
+            Search::trial_name(idx, cfg),
+            "search",
+            part.shards,
+            self.minibatches_per_epoch,
+            self.epochs,
+            lr as f32,
+        )
+        .with_arrival(self.stagger_secs * idx as f64))
+    }
+}
+
+/// Lifecycle state of one trial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialState {
+    /// Submitted; the run has not resolved it yet.
+    Pending,
+    /// Ran its full epoch budget.
+    Completed,
+    /// Stopped at rung `rung` (index into [`SearchReport::rungs`]).
+    Pruned {
+        /// Which rung retired it.
+        rung: usize,
+    },
+}
+
+/// One trial's full outcome.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    /// Trial id == submission index == engine model id.
+    pub id: usize,
+    /// Task name (`trial3-lr=0.001-layers=24`).
+    pub name: String,
+    /// The hyperparameter assignment.
+    pub config: TrialConfig,
+    /// Shards its model partitioned into.
+    pub shards: u32,
+    /// Observed `(epoch, loss)` pairs in completion order (epochs are
+    /// 1-based).
+    pub losses: Vec<(u32, f64)>,
+    /// Final lifecycle state.
+    pub state: TrialState,
+    /// Units actually retired.
+    pub units: u64,
+    /// Reference GPU-seconds of the units actually executed.
+    pub executed_secs: f64,
+    /// Reference GPU-seconds a full (unpruned) run would execute.
+    pub full_secs: f64,
+    /// Virtual time the trial finished (or its pruning took effect);
+    /// `NaN` if the run ended without resolving it.
+    pub finished: f64,
+    /// Virtual time its last unit retired (`NaN` if none ran).
+    pub last_retire: f64,
+}
+
+impl Trial {
+    /// The last observed loss, if any epoch completed.
+    pub fn final_loss(&self) -> Option<f64> {
+        self.losses.last().map(|&(_, l)| l)
+    }
+}
+
+/// One successive-halving rung's outcome.
+#[derive(Debug, Clone)]
+pub struct Rung {
+    /// Epoch budget of the rung.
+    pub epochs: u32,
+    /// Trial ids that reached it (ascending).
+    pub entered: Vec<usize>,
+    /// The exactly `ceil(entered / eta)` ids promoted past it (ascending)
+    /// — the top-k by loss at `epochs`.
+    pub promoted: Vec<usize>,
+}
+
+/// Everything a caller can inspect after [`Session::run_search`].
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    /// Algorithm tag (`grid`, `random`, `asha`).
+    pub algo: &'static str,
+    /// The underlying engine report (makespan, utilization, per-job
+    /// stats, spill traffic).
+    pub run: RunReport,
+    /// Per-trial outcomes, in trial-id order.
+    pub trials: Vec<Trial>,
+    /// Rung-by-rung survivor record (empty without pruning).
+    pub rungs: Vec<Rung>,
+    /// Trial id with the lowest final loss among completed trials.
+    pub best: Option<usize>,
+    /// Reference GPU-seconds a full no-pruning pass over the same trials
+    /// would execute.
+    pub full_secs: f64,
+    /// Reference GPU-seconds actually executed.
+    pub spent_secs: f64,
+    /// Units the monitor saw retire *after* their trial finished —
+    /// always 0 (asserted by the property suite).
+    pub late_retires: u64,
+}
+
+impl SearchReport {
+    /// GPU-hours pruning saved against the full-grid pass.
+    pub fn gpu_hours_saved(&self) -> f64 {
+        (self.full_secs - self.spent_secs) / 3600.0
+    }
+
+    /// The winning trial.
+    pub fn best_trial(&self) -> Option<&Trial> {
+        self.best.map(|i| &self.trials[i])
+    }
+
+    /// `(rung epochs, entered, promoted)` counts per rung.
+    pub fn survivors_per_rung(&self) -> Vec<(u32, usize, usize)> {
+        self.rungs
+            .iter()
+            .map(|r| (r.epochs, r.entered.len(), r.promoted.len()))
+            .collect()
+    }
+}
+
+/// Shared trial/rung bookkeeping the backend wrapper and the driver both
+/// touch during the run.
+struct SelectionState {
+    trials: Vec<Trial>,
+    rungs: Vec<Rung>,
+    /// Per trial: `(stop after this many epochs, rung index)` for rung
+    /// losers; `None` runs to the full budget.
+    stop_after: Vec<Option<(u32, usize)>>,
+}
+
+impl SelectionState {
+    /// Resolve the whole rung cascade from the loss oracle (see the module
+    /// docs on synchronous halving) and initialise the trial records.
+    fn plan(
+        configs: &[TrialConfig],
+        rule: Option<HalvingRule>,
+        loss: &SynthLoss,
+        max_epochs: u32,
+    ) -> SelectionState {
+        let n = configs.len();
+        let trials = configs
+            .iter()
+            .enumerate()
+            .map(|(id, cfg)| Trial {
+                id,
+                name: String::new(),
+                config: cfg.clone(),
+                shards: 0,
+                losses: Vec::new(),
+                state: TrialState::Pending,
+                units: 0,
+                executed_secs: 0.0,
+                full_secs: 0.0,
+                finished: f64::NAN,
+                last_retire: f64::NAN,
+            })
+            .collect();
+        let mut stop_after = vec![None; n];
+        let mut rungs = Vec::new();
+        if let Some(rule) = rule {
+            let mut survivors: Vec<usize> = (0..n).collect();
+            for (ri, &re) in rule.rung_epochs(max_epochs).iter().enumerate() {
+                let entered = survivors.clone();
+                let k = rule.promotions(entered.len());
+                let mut ranked: Vec<(usize, f64)> = entered
+                    .iter()
+                    .map(|&t| (t, loss.loss(t, &configs[t], re)))
+                    .collect();
+                ranked.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+                let mut promoted: Vec<usize> = ranked[..k].iter().map(|&(t, _)| t).collect();
+                promoted.sort_unstable();
+                for &(t, _) in &ranked[k..] {
+                    stop_after[t] = Some((re, ri));
+                }
+                rungs.push(Rung { epochs: re, entered, promoted: promoted.clone() });
+                survivors = promoted;
+            }
+        }
+        SelectionState { trials, rungs, stop_after }
+    }
+}
+
+/// Execution-backend wrapper that records per-epoch losses and plants the
+/// rung prunes, delegating unit durations to the wrapped backend.
+struct TrialBackend {
+    inner: Box<dyn ExecutionBackend>,
+    loss: SynthLoss,
+    state: Rc<RefCell<SelectionState>>,
+}
+
+impl ExecutionBackend for TrialBackend {
+    fn execute_unit(&mut self, task: &ModelTask, unit: &ShardUnit) -> Result<f64> {
+        self.inner.execute_unit(task, unit)
+    }
+
+    fn on_unit_retired(&mut self, task: &ModelTask, unit: &ShardUnit) {
+        self.inner.on_unit_retired(task, unit);
+        let mut st = self.state.borrow_mut();
+        let Some(t) = st.trials.get_mut(unit.model) else {
+            return;
+        };
+        t.units += 1;
+        t.executed_secs += task.shard(unit.shard).cost(unit.phase);
+        // the same boundary the engine consults should_early_stop at
+        if task.geometry.closes_epoch(unit) {
+            let e = unit.epoch + 1;
+            let l = self.loss.loss(unit.model, &t.config, e);
+            t.losses.push((e, l));
+        }
+    }
+
+    fn should_early_stop(&mut self, task: &ModelTask, epoch: u32) -> bool {
+        let mut st = self.state.borrow_mut();
+        match st.stop_after.get(task.id).copied().flatten() {
+            Some((stop, ri)) if epoch + 1 >= stop => {
+                st.trials[task.id].state = TrialState::Pruned { rung: ri };
+                true
+            }
+            _ => false,
+        }
+    }
+}
+
+/// [`EngineObserver`] that watches every trial's lifecycle live: arrival,
+/// per-unit retire times, finish/cancel, and per-model compute seconds.
+/// [`Session::run_search`] installs one automatically; it is public so
+/// callers streaming their own observers (and the test suites) can reuse
+/// the bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct TrialMonitor {
+    /// Per-model arrival time (`NaN` until seen).
+    pub arrived: Vec<f64>,
+    /// Per-model finish time (`NaN` until seen).
+    pub finished: Vec<f64>,
+    /// Per-model cancelled flag (tenant cancellation, not rung pruning).
+    pub cancelled: Vec<bool>,
+    /// Per-model last unit-retire time (`NaN` if none ran).
+    pub last_retire: Vec<f64>,
+    /// Per-model retired-unit count.
+    pub units: Vec<u64>,
+    /// Per-model device-seconds of compute.
+    pub compute_secs: Vec<f64>,
+    /// Units that retired *after* their model finished (must stay 0).
+    pub late_retires: u64,
+}
+
+impl TrialMonitor {
+    /// Monitor pre-sized for `n` models.
+    pub fn new(n: usize) -> TrialMonitor {
+        let mut m = TrialMonitor::default();
+        m.ensure(n.saturating_sub(1));
+        m
+    }
+
+    fn ensure(&mut self, model: usize) {
+        if model >= self.finished.len() {
+            let n = model + 1;
+            self.arrived.resize(n, f64::NAN);
+            self.finished.resize(n, f64::NAN);
+            self.cancelled.resize(n, false);
+            self.last_retire.resize(n, f64::NAN);
+            self.units.resize(n, 0);
+            self.compute_secs.resize(n, 0.0);
+        }
+    }
+}
+
+impl EngineObserver for TrialMonitor {
+    fn on_job_arrived(&mut self, model: usize, _name: &str, now: f64) {
+        self.ensure(model);
+        self.arrived[model] = now;
+    }
+
+    fn on_unit_retired(&mut self, _device: usize, unit: &ShardUnit, now: f64) {
+        self.ensure(unit.model);
+        let m = unit.model;
+        self.units[m] += 1;
+        if self.last_retire[m].is_nan() || now > self.last_retire[m] {
+            self.last_retire[m] = now;
+        }
+        if !self.finished[m].is_nan() && now > self.finished[m] + 1e-9 {
+            self.late_retires += 1;
+        }
+    }
+
+    fn on_job_finished(&mut self, model: usize, now: f64, cancelled: bool) {
+        self.ensure(model);
+        self.finished[model] = now;
+        self.cancelled[model] = cancelled;
+    }
+
+    fn on_interval(&mut self, interval: &Interval) {
+        if interval.kind == IntervalKind::Compute {
+            self.ensure(interval.model);
+            self.compute_secs[interval.model] += interval.end - interval.start;
+        }
+    }
+}
+
+/// The implementation behind [`Session::run_search`].
+pub(crate) fn drive_search(mut session: Session, search: &Search) -> Result<SearchReport> {
+    if session.n_jobs() != 0 {
+        return Err(HydraError::Config(
+            "run_search needs a fresh session (jobs were already submitted)".into(),
+        ));
+    }
+    if search.epochs == 0 || search.minibatches_per_epoch == 0 {
+        return Err(HydraError::Config(
+            "search needs epochs >= 1 and minibatches >= 1".into(),
+        ));
+    }
+    if !search.stagger_secs.is_finite() || search.stagger_secs < 0.0 {
+        return Err(HydraError::Config(format!(
+            "bad trial stagger {}",
+            search.stagger_secs
+        )));
+    }
+    let searcher = search.searcher()?;
+    let algo = searcher.name();
+    let rule = searcher.rule();
+    let configs = searcher.configs(&search.space)?;
+    if configs.is_empty() {
+        return Err(HydraError::Config("search produced no trials".into()));
+    }
+    // Shards are sized against the session's *actual* buffer zone: a
+    // partition headroom that disagrees with the engine's zone would
+    // silently disable §4.6 staging for every trial.
+    let mut search = search.clone();
+    search.buffer_frac = session.engine_options().buffer_frac;
+    let search = &search;
+
+    // Swap the execution backend for the trial-aware wrapper (losses +
+    // rung prunes); durations still come from the wrapped backend.
+    let inner: Box<dyn ExecutionBackend> = match session.replace_backend(Backend::sim()) {
+        Backend::Sim { noise, seed } => Box::new(SimBackend::new(noise, seed)),
+        Backend::Custom(b) => b,
+        Backend::Real { .. } => {
+            return Err(HydraError::Config(
+                "run_search drives the simulated backend (trial loss curves are \
+                 synthetic); use Backend::Sim or Backend::Custom"
+                    .into(),
+            ));
+        }
+    };
+    let loss = SynthLoss::new(search.seed);
+    let mut state = SelectionState::plan(&configs, rule, &loss, search.epochs);
+
+    // Build and submit every trial; engine model ids follow submission
+    // order, so trial id == model id.
+    let min_mem = session.cluster().min_device_mem();
+    let mut handles = Vec::with_capacity(configs.len());
+    for (i, cfg) in configs.iter().enumerate() {
+        let task = search.trial_task(i, cfg, min_mem)?;
+        state.trials[i].name = task.name.clone();
+        state.trials[i].shards = task.shards.len() as u32;
+        state.trials[i].full_secs = task.remaining_time();
+        handles.push(session.submit_at(task, search.stagger_secs * i as f64)?);
+    }
+
+    let state = Rc::new(RefCell::new(state));
+    session.replace_backend(Backend::Custom(Box::new(TrialBackend {
+        inner,
+        loss,
+        state: Rc::clone(&state),
+    })));
+    let mut monitor = TrialMonitor::new(configs.len());
+    let report = session.run_with(&mut monitor)?;
+    for (i, h) in handles.iter().enumerate() {
+        debug_assert_eq!(report.model_of(*h), Some(i), "trial ids follow submission");
+    }
+
+    let mut state = Rc::try_unwrap(state)
+        .map_err(|_| HydraError::Sched("trial state still shared after the run".into()))
+        .map(RefCell::into_inner)?;
+    let mut full_secs = 0.0;
+    let mut spent_secs = 0.0;
+    for (i, t) in state.trials.iter_mut().enumerate() {
+        full_secs += t.full_secs;
+        spent_secs += t.executed_secs;
+        if t.state == TrialState::Pending {
+            t.state = TrialState::Completed;
+        }
+        t.finished = monitor.finished.get(i).copied().unwrap_or(f64::NAN);
+        t.last_retire = monitor.last_retire.get(i).copied().unwrap_or(f64::NAN);
+    }
+    let best = state
+        .trials
+        .iter()
+        .filter(|t| t.state == TrialState::Completed)
+        .filter_map(|t| t.final_loss().map(|l| (t.id, l)))
+        .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+        .map(|(id, _)| id);
+    Ok(SearchReport {
+        algo,
+        run: report.run,
+        trials: state.trials,
+        rungs: state.rungs,
+        best,
+        full_secs,
+        spent_secs,
+        late_retires: monitor.late_retires,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sharp::EngineOptions;
+    use crate::coordinator::Cluster;
+    use crate::session::Policy;
+
+    const GIB: u64 = 1 << 30;
+
+    fn tiny_search(algo: Algo) -> Search {
+        let space = SearchSpace::parse("lr=1e-4..1e-2:log,layers=2,4").unwrap();
+        Search {
+            algo,
+            epochs: 4,
+            minibatches_per_epoch: 1,
+            seed: 7,
+            reference: GpuSpec::a4000(),
+            ..Search::new(space)
+        }
+    }
+
+    fn session() -> Session {
+        Session::builder(Cluster::uniform(2, GpuSpec::a4000().mem_bytes, 2048 * GIB))
+            .backend(Backend::sim())
+            .policy(Policy::ShardedLrtf)
+            .options(EngineOptions { record_intervals: false, ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_search_runs_every_trial_to_completion() {
+        let r = session().run_search(&tiny_search(Algo::Grid)).unwrap();
+        assert_eq!(r.algo, "grid");
+        assert_eq!(r.trials.len(), 6);
+        assert!(r.rungs.is_empty());
+        for t in &r.trials {
+            assert_eq!(t.state, TrialState::Completed, "{t:?}");
+            assert_eq!(t.losses.len(), 4);
+            assert_eq!(t.units, 2 * t.shards as u64 * 4);
+            assert!(t.finished.is_finite());
+        }
+        assert!((r.spent_secs - r.full_secs).abs() < 1e-6 * r.full_secs);
+        assert_eq!(r.late_retires, 0);
+        // best trial exists and carries the minimum final loss
+        let best = r.best_trial().unwrap();
+        for t in &r.trials {
+            assert!(best.final_loss().unwrap() <= t.final_loss().unwrap() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn asha_prunes_and_saves_gpu_time() {
+        let algo = Algo::Asha { trials: None, eta: 2, min_epochs: 1 };
+        let r = session().run_search(&tiny_search(algo)).unwrap();
+        assert_eq!(r.algo, "asha");
+        // rungs at 1 and 2 epochs: 6 -> 3 -> 2
+        assert_eq!(r.survivors_per_rung(), vec![(1, 6, 3), (2, 3, 2)]);
+        assert!(r.spent_secs < r.full_secs);
+        assert!(r.gpu_hours_saved() > 0.0);
+        let pruned = r
+            .trials
+            .iter()
+            .filter(|t| matches!(t.state, TrialState::Pruned { .. }))
+            .count();
+        assert_eq!(pruned, 4);
+        assert!(r.best.is_some());
+    }
+
+    #[test]
+    fn run_search_rejects_real_backend_and_dirty_sessions() {
+        let s = Session::builder(Cluster::uniform(1, GIB, 64 * GIB))
+            .backend(Backend::Real { manifest: "artifacts".into() })
+            .build()
+            .unwrap();
+        assert!(s.run_search(&tiny_search(Algo::Grid)).is_err());
+
+        let mut s = session();
+        let cfg = tiny_search(Algo::Grid);
+        let task = cfg.trial_task(0, &cfg.space.grid(2)[0], 16 * GIB).unwrap();
+        s.submit(task).unwrap();
+        assert!(s.run_search(&cfg).is_err());
+    }
+
+    #[test]
+    fn degenerate_rule_without_rungs_matches_grid() {
+        // min_epochs >= epochs: no rung fits below the budget, nothing is
+        // pruned — ASHA degenerates to the plain grid pass
+        let algo = Algo::Asha { trials: None, eta: 3, min_epochs: 9 };
+        let asha = session().run_search(&tiny_search(algo)).unwrap();
+        let grid = session().run_search(&tiny_search(Algo::Grid)).unwrap();
+        assert!(asha.rungs.is_empty());
+        assert_eq!(
+            format!("{:?}", asha.run),
+            format!("{:?}", grid.run),
+            "no-pruning ASHA must schedule exactly like grid"
+        );
+    }
+}

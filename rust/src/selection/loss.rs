@@ -1,0 +1,123 @@
+//! Parameterized synthetic loss curves for the simulated backend.
+//!
+//! Model-selection decisions are only testable when the simulator produces
+//! loss curves that *react to hyperparameters* the way real training does:
+//! learning rate has a sweet spot (too low converges slowly, too high
+//! plateaus above the optimum), capacity (depth) lowers the reachable
+//! floor, and run-to-run noise is small but nonzero. [`SynthLoss`] is that
+//! oracle: a pure function of `(trial, config, epoch, seed)` — deliberately
+//! independent of engine scheduling, so rung decisions are deterministic
+//! for a given search seed and replayable from the property suite.
+
+use crate::selection::space::TrialConfig;
+use crate::util::rng::Rng;
+
+/// The learning rate at the bottom of the synthetic lr valley.
+pub const SWEET_LR: f64 = 1e-3;
+
+/// Deterministic synthetic loss oracle (see module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct SynthLoss {
+    /// Seed of the per-(trial, epoch) noise stream.
+    pub seed: u64,
+    /// Noise amplitude (standard deviation of the additive term).
+    pub noise: f64,
+}
+
+impl SynthLoss {
+    /// Oracle with the default ±0.02 noise band.
+    pub fn new(seed: u64) -> SynthLoss {
+        SynthLoss { seed, noise: 0.02 }
+    }
+
+    /// Loss of `trial` (with hyperparameters `cfg`) after completing
+    /// `epoch` epochs (1-based). Recognised config keys: `lr` (sweet spot
+    /// at [`SWEET_LR`], penalised in log space), `layers` (deeper models
+    /// reach a lower floor). Unknown keys are ignored.
+    pub fn loss(&self, trial: usize, cfg: &TrialConfig, epoch: u32) -> f64 {
+        let lr = cfg.get_or("lr", SWEET_LR).max(1e-12);
+        let layers = cfg.get_or("layers", 24.0).max(1.0);
+        // distance from the sweet spot in log space: the classic U-shape
+        let miss = (lr / SWEET_LR).ln().abs();
+        // capacity floor: deeper models can fit more, mistuned lr settles
+        // above the best achievable loss
+        let floor = 1.2 + 8.0 / (layers + 4.0) + 0.08 * miss;
+        // convergence rate: fastest at the sweet spot
+        let rate = 0.8 / (1.0 + 0.6 * miss * miss);
+        let start = 7.0; // ~ln(vocab): untrained LM perplexity
+        let decay = (start - floor) * (-rate * epoch as f64).exp();
+        (floor + decay + self.noise * self.noise_sample(trial, epoch)).max(0.0)
+    }
+
+    /// One standard-normal draw keyed by (seed, trial, epoch).
+    fn noise_sample(&self, trial: usize, epoch: u32) -> f64 {
+        let key = self
+            .seed
+            ^ (trial as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (u64::from(epoch) << 40);
+        Rng::new(key).normal()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::space::SearchSpace;
+
+    fn cfg(lr: f64, layers: f64) -> TrialConfig {
+        TrialConfig { values: vec![("lr".into(), lr), ("layers".into(), layers)] }
+    }
+
+    #[test]
+    fn well_tuned_curves_decrease_towards_the_floor() {
+        let l = SynthLoss { seed: 7, noise: 0.0 };
+        let mut last = f64::INFINITY;
+        for e in 1..=12 {
+            let v = l.loss(0, &cfg(SWEET_LR, 24.0), e);
+            assert!(v < last, "epoch {e}: {v} >= {last}");
+            last = v;
+        }
+        assert!(last > 1.2 && last < 2.0, "{last}");
+    }
+
+    #[test]
+    fn mistuned_lr_loses_at_every_epoch() {
+        let l = SynthLoss { seed: 7, noise: 0.0 };
+        for e in 1..=8 {
+            let good = l.loss(0, &cfg(SWEET_LR, 24.0), e);
+            let low = l.loss(0, &cfg(1e-5, 24.0), e);
+            let high = l.loss(0, &cfg(1e-1, 24.0), e);
+            assert!(good < low, "epoch {e}: {good} vs low-lr {low}");
+            assert!(good < high, "epoch {e}: {good} vs high-lr {high}");
+        }
+    }
+
+    #[test]
+    fn deeper_models_reach_a_lower_late_loss() {
+        let l = SynthLoss { seed: 7, noise: 0.0 };
+        let shallow = l.loss(0, &cfg(SWEET_LR, 12.0), 10);
+        let deep = l.loss(0, &cfg(SWEET_LR, 48.0), 10);
+        assert!(deep < shallow, "{deep} vs {shallow}");
+    }
+
+    #[test]
+    fn noise_is_seeded_and_trial_specific() {
+        let a = SynthLoss::new(3);
+        let b = SynthLoss::new(3);
+        let c = SynthLoss::new(4);
+        let x = cfg(SWEET_LR, 24.0);
+        assert_eq!(a.loss(1, &x, 2), b.loss(1, &x, 2));
+        assert_ne!(a.loss(1, &x, 2), c.loss(1, &x, 2));
+        // identical configs on different trial slots still differ (noise
+        // keyed per trial, so duplicate random samples do not tie)
+        assert_ne!(a.loss(1, &x, 2), a.loss(2, &x, 2));
+    }
+
+    #[test]
+    fn defaults_apply_for_unknown_spaces() {
+        let l = SynthLoss::new(0);
+        let space = SearchSpace::parse("momentum=0.1..0.9").unwrap();
+        let c = space.grid(2).remove(0);
+        assert!(l.loss(0, &c, 1).is_finite());
+    }
+}

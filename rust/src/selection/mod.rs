@@ -1,0 +1,49 @@
+//! Model selection — hyperparameter / architecture search as a
+//! first-class Hydra workload.
+//!
+//! Multi-model training exists *because* of model selection ("users often
+//! need to compare dozens of models with different hyper-parameters or
+//! neural architectures", §1): this module closes the loop by generating
+//! and retiring jobs adaptively instead of replaying a static list.
+//!
+//! - [`SearchSpace`] describes the axes (`lr=1e-4..1e-2:log,layers=12,24,48`),
+//! - a [`Searcher`] ([`GridSearch`], [`RandomSearch`],
+//!   [`SuccessiveHalving`]) turns it into a deterministic trial cohort,
+//! - [`crate::session::Session::run_search`] runs the whole search on one
+//!   engine run: trials enter via `submit_at`, per-epoch losses
+//!   ([`SynthLoss`]) stream through the [`TrialMonitor`] observer, and
+//!   ASHA prunes rung losers mid-run so their HBM/DRAM/NVMe residency is
+//!   released to the survivors immediately.
+//!
+//! ```no_run
+//! use hydra::coordinator::Cluster;
+//! use hydra::selection::{Algo, Search, SearchSpace};
+//! use hydra::session::Session;
+//!
+//! # fn main() -> hydra::Result<()> {
+//! let space = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48")?;
+//! let search = Search {
+//!     algo: Algo::Asha { trials: None, eta: 3, min_epochs: 1 },
+//!     epochs: 9,
+//!     ..Search::new(space)
+//! };
+//! let session = Session::builder(Cluster::uniform(4, 16 << 30, 512 << 30)).build()?;
+//! let report = session.run_search(&search)?;
+//! println!(
+//!     "best {:?}, saved {:.1} GPU-h",
+//!     report.best_trial().map(|t| &t.name),
+//!     report.gpu_hours_saved()
+//! );
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod driver;
+pub mod loss;
+pub mod searcher;
+pub mod space;
+
+pub use driver::{Algo, Rung, Search, SearchReport, Trial, TrialMonitor, TrialState};
+pub use loss::SynthLoss;
+pub use searcher::{GridSearch, HalvingRule, RandomSearch, Searcher, SuccessiveHalving};
+pub use space::{ParamAxis, ParamSpec, SearchSpace, TrialConfig};

@@ -1,0 +1,225 @@
+//! Searchers: algorithms that turn a [`SearchSpace`] into a concrete,
+//! deterministically ordered list of trials — plus the successive-halving
+//! rule ASHA prunes with.
+//!
+//! [`GridSearch`] enumerates the full cartesian grid, [`RandomSearch`]
+//! draws seeded samples, and [`SuccessiveHalving`] wraps either with a
+//! [`HalvingRule`] so the [`crate::selection::Search`] driver retires the
+//! bottom `1 - 1/eta` of the cohort at every rung.
+
+use crate::error::{HydraError, Result};
+use crate::selection::space::{SearchSpace, TrialConfig};
+use crate::util::rng::Rng;
+
+/// Successive-halving schedule: rungs at `min_epochs * eta^k` epochs
+/// (strictly below the full budget); at each rung exactly
+/// `ceil(n / eta)` of the `n` trials that reached it are promoted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HalvingRule {
+    /// Reduction factor (>= 2): survivors per rung = `ceil(n / eta)`.
+    pub eta: u32,
+    /// Epoch budget of the first rung (>= 1).
+    pub min_epochs: u32,
+}
+
+impl HalvingRule {
+    /// Reject degenerate rules with a configuration error.
+    pub fn validate(&self) -> Result<()> {
+        if self.eta < 2 {
+            return Err(HydraError::Config(format!(
+                "halving rule: eta {} must be >= 2",
+                self.eta
+            )));
+        }
+        if self.min_epochs == 0 {
+            return Err(HydraError::Config(
+                "halving rule: min_epochs must be >= 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Rung epoch budgets strictly below `max_epochs` (survivors of the
+    /// last rung run to the full budget). Empty when `min_epochs >=
+    /// max_epochs` — the rule degenerates to no pruning.
+    pub fn rung_epochs(&self, max_epochs: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut r = self.min_epochs;
+        while r < max_epochs {
+            out.push(r);
+            r = r.saturating_mul(self.eta);
+        }
+        out
+    }
+
+    /// Survivor count for a rung `n` trials reached: `ceil(n / eta)`.
+    pub fn promotions(&self, n: usize) -> usize {
+        n.div_ceil(self.eta as usize)
+    }
+}
+
+/// A search algorithm: produces the trial list and (optionally) the
+/// pruning schedule the driver applies while the trials run.
+pub trait Searcher {
+    /// Short algorithm tag (`grid`, `random`, `asha`).
+    fn name(&self) -> &'static str;
+
+    /// The trial configurations to submit, in deterministic submission
+    /// order (trial id == position in this list).
+    fn configs(&self, space: &SearchSpace) -> Result<Vec<TrialConfig>>;
+
+    /// The pruning schedule; `None` runs every trial to its full budget.
+    fn rule(&self) -> Option<HalvingRule> {
+        None
+    }
+}
+
+/// Exhaustive cartesian grid; continuous axes are discretised to `points`
+/// values (inclusive endpoints).
+#[derive(Debug, Clone, Copy)]
+pub struct GridSearch {
+    /// Grid resolution of each continuous range axis.
+    pub points: usize,
+}
+
+impl GridSearch {
+    /// Grid with `points` values per continuous axis.
+    pub fn new(points: usize) -> GridSearch {
+        GridSearch { points }
+    }
+}
+
+impl Searcher for GridSearch {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn configs(&self, space: &SearchSpace) -> Result<Vec<TrialConfig>> {
+        space.validate()?;
+        if self.points == 0 {
+            return Err(HydraError::Config(
+                "grid search needs >= 1 point per continuous axis".into(),
+            ));
+        }
+        Ok(space.grid(self.points))
+    }
+}
+
+/// `trials` independent seeded samples of the space (uniform; log-uniform
+/// on log ranges).
+#[derive(Debug, Clone, Copy)]
+pub struct RandomSearch {
+    /// Number of trials to draw.
+    pub trials: usize,
+    /// Sampling seed (deterministic trial list per seed).
+    pub seed: u64,
+}
+
+impl Searcher for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn configs(&self, space: &SearchSpace) -> Result<Vec<TrialConfig>> {
+        space.validate()?;
+        if self.trials == 0 {
+            return Err(HydraError::Config("random search needs >= 1 trial".into()));
+        }
+        let mut rng = Rng::new(self.seed ^ 0x5EA2C4);
+        Ok((0..self.trials).map(|_| space.sample(&mut rng)).collect())
+    }
+}
+
+/// Successive halving / ASHA: the wrapped sampler's trials, pruned at
+/// [`HalvingRule`] rungs while they run.
+pub struct SuccessiveHalving {
+    /// The sampler that produces the initial cohort.
+    pub base: Box<dyn Searcher>,
+    /// Rung schedule + reduction factor.
+    pub rule: HalvingRule,
+}
+
+impl SuccessiveHalving {
+    /// Halve a full grid (the `hydra search --algo asha` default — the
+    /// same cohort as `--algo grid`, which is what makes the GPU-hours
+    /// comparison apples-to-apples).
+    pub fn over_grid(points: usize, rule: HalvingRule) -> SuccessiveHalving {
+        SuccessiveHalving { base: Box::new(GridSearch::new(points)), rule }
+    }
+
+    /// Halve `trials` random samples (classic ASHA).
+    pub fn over_random(trials: usize, seed: u64, rule: HalvingRule) -> SuccessiveHalving {
+        SuccessiveHalving { base: Box::new(RandomSearch { trials, seed }), rule }
+    }
+}
+
+impl Searcher for SuccessiveHalving {
+    fn name(&self) -> &'static str {
+        "asha"
+    }
+
+    fn configs(&self, space: &SearchSpace) -> Result<Vec<TrialConfig>> {
+        self.rule.validate()?;
+        self.base.configs(space)
+    }
+
+    fn rule(&self) -> Option<HalvingRule> {
+        Some(self.rule)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn space() -> SearchSpace {
+        SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48").unwrap()
+    }
+
+    #[test]
+    fn grid_enumerates_the_full_cartesian_product() {
+        let cfgs = GridSearch::new(3).configs(&space()).unwrap();
+        assert_eq!(cfgs.len(), 9);
+        assert!(GridSearch::new(0).configs(&space()).is_err());
+        assert!(GridSearch::new(3).rule().is_none());
+    }
+
+    #[test]
+    fn random_is_seeded_and_sized() {
+        let a = RandomSearch { trials: 7, seed: 3 }.configs(&space()).unwrap();
+        let b = RandomSearch { trials: 7, seed: 3 }.configs(&space()).unwrap();
+        let c = RandomSearch { trials: 7, seed: 4 }.configs(&space()).unwrap();
+        assert_eq!(a.len(), 7);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(RandomSearch { trials: 0, seed: 0 }.configs(&space()).is_err());
+    }
+
+    #[test]
+    fn halving_rule_rungs_and_promotions() {
+        let r = HalvingRule { eta: 3, min_epochs: 1 };
+        assert_eq!(r.rung_epochs(9), vec![1, 3]);
+        assert_eq!(r.rung_epochs(10), vec![1, 3, 9]);
+        assert_eq!(r.rung_epochs(1), Vec::<u32>::new());
+        assert_eq!(r.promotions(27), 9);
+        assert_eq!(r.promotions(9), 3);
+        assert_eq!(r.promotions(4), 2);
+        assert_eq!(r.promotions(1), 1);
+        assert!(HalvingRule { eta: 1, min_epochs: 1 }.validate().is_err());
+        assert!(HalvingRule { eta: 2, min_epochs: 0 }.validate().is_err());
+    }
+
+    #[test]
+    fn asha_shares_the_grid_cohort() {
+        let rule = HalvingRule { eta: 3, min_epochs: 1 };
+        let asha = SuccessiveHalving::over_grid(3, rule);
+        assert_eq!(asha.name(), "asha");
+        assert_eq!(asha.rule(), Some(rule));
+        assert_eq!(
+            asha.configs(&space()).unwrap(),
+            GridSearch::new(3).configs(&space()).unwrap()
+        );
+        let bad = SuccessiveHalving::over_grid(3, HalvingRule { eta: 0, min_epochs: 1 });
+        assert!(bad.configs(&space()).is_err());
+    }
+}

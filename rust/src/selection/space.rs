@@ -1,0 +1,402 @@
+//! Hyperparameter search spaces: named axes that are either continuous
+//! ranges (linear or log-scaled) or discrete choice lists, plus the compact
+//! axis syntax shared by the `hydra search --space ...` CLI flag and the
+//! config layer's `"search"` spec.
+//!
+//! Syntax: comma-separated axes. An axis is `name=lo..hi[:log]` (range) or
+//! `name=v1,v2,v3` (choices — parts without `=` extend the previous axis's
+//! choice list, so the whole space stays one comma-separated string):
+//!
+//! ```text
+//! lr=1e-4..1e-2:log,layers=12,24,48,batch=4,8,16
+//! ```
+
+use crate::error::{HydraError, Result};
+use crate::util::rng::Rng;
+
+fn serr(msg: impl Into<String>) -> HydraError {
+    HydraError::Config(msg.into())
+}
+
+/// One axis of a [`SearchSpace`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParamAxis {
+    /// Continuous range `[lo, hi]`; `log: true` grids/samples geometrically
+    /// (the right scale for learning rates).
+    Range {
+        /// Inclusive lower bound.
+        lo: f64,
+        /// Inclusive upper bound.
+        hi: f64,
+        /// Geometric (log-scale) spacing instead of arithmetic.
+        log: bool,
+    },
+    /// An explicit list of discrete values (layer counts, batch sizes).
+    Choices(Vec<f64>),
+}
+
+/// A named axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    /// Hyperparameter name (`lr`, `layers`, `batch`, ...).
+    pub name: String,
+    /// The values the axis spans.
+    pub axis: ParamAxis,
+}
+
+/// An ordered set of named axes — the space a [`crate::selection::Searcher`]
+/// draws trial configurations from.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SearchSpace {
+    /// Axes in declaration order (grid enumeration keeps this order, first
+    /// axis slowest).
+    pub params: Vec<ParamSpec>,
+}
+
+impl SearchSpace {
+    /// An empty space; add axes with [`SearchSpace::range`],
+    /// [`SearchSpace::log_range`], [`SearchSpace::choices`].
+    pub fn new() -> SearchSpace {
+        SearchSpace::default()
+    }
+
+    /// Add a linear range axis.
+    pub fn range(mut self, name: impl Into<String>, lo: f64, hi: f64) -> SearchSpace {
+        self.params
+            .push(ParamSpec { name: name.into(), axis: ParamAxis::Range { lo, hi, log: false } });
+        self
+    }
+
+    /// Add a log-scaled range axis.
+    pub fn log_range(mut self, name: impl Into<String>, lo: f64, hi: f64) -> SearchSpace {
+        self.params
+            .push(ParamSpec { name: name.into(), axis: ParamAxis::Range { lo, hi, log: true } });
+        self
+    }
+
+    /// Add a discrete choice axis.
+    pub fn choices(mut self, name: impl Into<String>, values: &[f64]) -> SearchSpace {
+        self.params
+            .push(ParamSpec { name: name.into(), axis: ParamAxis::Choices(values.to_vec()) });
+        self
+    }
+
+    /// Parse the compact axis syntax (see the module docs).
+    pub fn parse(s: &str) -> Result<SearchSpace> {
+        let mut params: Vec<ParamSpec> = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                return Err(serr(format!("empty axis in search space {s:?}")));
+            }
+            match part.split_once('=') {
+                Some((name, rest)) => {
+                    let name = name.trim();
+                    if name.is_empty() {
+                        return Err(serr(format!("axis {part:?} has an empty name")));
+                    }
+                    if params.iter().any(|p| p.name == name) {
+                        return Err(serr(format!("duplicate axis {name:?} in space {s:?}")));
+                    }
+                    let axis = if let Some((lo, hi)) = rest.split_once("..") {
+                        let (hi, log) = match hi.split_once(':') {
+                            Some((h, "log")) => (h, true),
+                            Some((_, modifier)) => {
+                                return Err(serr(format!(
+                                    "unknown range modifier {modifier:?} in axis {part:?} \
+                                     (only :log is supported)"
+                                )));
+                            }
+                            None => (hi, false),
+                        };
+                        let lo: f64 = lo.trim().parse().map_err(|_| {
+                            serr(format!("bad range bound {lo:?} in axis {part:?}"))
+                        })?;
+                        let hi: f64 = hi.trim().parse().map_err(|_| {
+                            serr(format!("bad range bound {hi:?} in axis {part:?}"))
+                        })?;
+                        ParamAxis::Range { lo, hi, log }
+                    } else {
+                        let v: f64 = rest.trim().parse().map_err(|_| {
+                            serr(format!("bad value {rest:?} in axis {part:?}"))
+                        })?;
+                        ParamAxis::Choices(vec![v])
+                    };
+                    params.push(ParamSpec { name: name.to_string(), axis });
+                }
+                None => {
+                    // a bare value extends the previous axis's choice list
+                    let Some(last) = params.last_mut() else {
+                        return Err(serr(format!(
+                            "space {s:?} starts with bare value {part:?} (axes are name=...)"
+                        )));
+                    };
+                    let v: f64 = part.parse().map_err(|_| {
+                        serr(format!("bad value {part:?} in axis {:?}", last.name))
+                    })?;
+                    match &mut last.axis {
+                        ParamAxis::Choices(vs) => vs.push(v),
+                        ParamAxis::Range { .. } => {
+                            return Err(serr(format!(
+                                "value {part:?} follows range axis {:?} (a choice list \
+                                 cannot extend a range)",
+                                last.name
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        let space = SearchSpace { params };
+        space.validate()?;
+        Ok(space)
+    }
+
+    /// Reject malformed spaces with a clear configuration error.
+    pub fn validate(&self) -> Result<()> {
+        if self.params.is_empty() {
+            return Err(serr("search space has no axes"));
+        }
+        for p in &self.params {
+            match &p.axis {
+                ParamAxis::Range { lo, hi, log } => {
+                    if !lo.is_finite() || !hi.is_finite() || lo >= hi {
+                        return Err(serr(format!(
+                            "axis {:?}: range [{lo}, {hi}] needs finite lo < hi",
+                            p.name
+                        )));
+                    }
+                    if *log && *lo <= 0.0 {
+                        return Err(serr(format!(
+                            "axis {:?}: log range needs lo > 0 (got {lo})",
+                            p.name
+                        )));
+                    }
+                }
+                ParamAxis::Choices(vs) => {
+                    if vs.is_empty() {
+                        return Err(serr(format!("axis {:?} has no choices", p.name)));
+                    }
+                    if vs.iter().any(|v| !v.is_finite()) {
+                        return Err(serr(format!("axis {:?} has a non-finite choice", p.name)));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The values one axis contributes to a grid of `points` per range.
+    fn axis_values(axis: &ParamAxis, points: usize) -> Vec<f64> {
+        match axis {
+            ParamAxis::Choices(vs) => vs.clone(),
+            ParamAxis::Range { lo, hi, log } => {
+                if points <= 1 {
+                    return vec![if *log {
+                        ((lo.ln() + hi.ln()) / 2.0).exp()
+                    } else {
+                        (lo + hi) / 2.0
+                    }];
+                }
+                (0..points)
+                    .map(|i| {
+                        let f = i as f64 / (points - 1) as f64;
+                        if *log {
+                            (lo.ln() + f * (hi.ln() - lo.ln())).exp()
+                        } else {
+                            lo + f * (hi - lo)
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Full cartesian grid; range axes are discretised to `points` values
+    /// (inclusive endpoints). First axis varies slowest — deterministic
+    /// enumeration order.
+    pub fn grid(&self, points: usize) -> Vec<TrialConfig> {
+        let axes: Vec<(String, Vec<f64>)> = self
+            .params
+            .iter()
+            .map(|p| (p.name.clone(), Self::axis_values(&p.axis, points)))
+            .collect();
+        let mut out = vec![TrialConfig { values: Vec::new() }];
+        for (name, vals) in &axes {
+            let mut next = Vec::with_capacity(out.len() * vals.len());
+            for cfg in &out {
+                for &v in vals {
+                    let mut c = cfg.clone();
+                    c.values.push((name.clone(), v));
+                    next.push(c);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+
+    /// Number of configurations [`SearchSpace::grid`] would enumerate.
+    pub fn n_grid(&self, points: usize) -> usize {
+        self.params
+            .iter()
+            .map(|p| match &p.axis {
+                ParamAxis::Choices(vs) => vs.len(),
+                ParamAxis::Range { .. } => points.max(1),
+            })
+            .product()
+    }
+
+    /// Draw one uniform sample (uniform in log space for log ranges).
+    pub fn sample(&self, rng: &mut Rng) -> TrialConfig {
+        let values = self
+            .params
+            .iter()
+            .map(|p| {
+                let v = match &p.axis {
+                    ParamAxis::Choices(vs) => vs[rng.below(vs.len() as u64) as usize],
+                    ParamAxis::Range { lo, hi, log } => {
+                        let f = rng.uniform();
+                        if *log {
+                            (lo.ln() + f * (hi.ln() - lo.ln())).exp()
+                        } else {
+                            lo + f * (hi - lo)
+                        }
+                    }
+                };
+                (p.name.clone(), v)
+            })
+            .collect();
+        TrialConfig { values }
+    }
+}
+
+/// One concrete assignment of every axis — what a trial trains with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialConfig {
+    /// `(axis name, value)` pairs in axis order.
+    pub values: Vec<(String, f64)>,
+}
+
+impl TrialConfig {
+    /// Value of the named axis, if present.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    /// Value of the named axis, or `default`.
+    pub fn get_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Deterministic human-readable tag (`lr=0.001-layers=24`), used in
+    /// trial task names.
+    pub fn label(&self) -> String {
+        self.values
+            .iter()
+            .map(|(n, v)| format!("{n}={v}"))
+            .collect::<Vec<_>>()
+            .join("-")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let s = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48").unwrap();
+        assert_eq!(s.params.len(), 2);
+        assert_eq!(
+            s.params[0].axis,
+            ParamAxis::Range { lo: 1e-4, hi: 1e-2, log: true }
+        );
+        assert_eq!(s.params[1].axis, ParamAxis::Choices(vec![12.0, 24.0, 48.0]));
+        assert_eq!(s.n_grid(3), 9);
+    }
+
+    #[test]
+    fn parses_linear_ranges_and_single_choices() {
+        let s = SearchSpace::parse("momentum=0.1..0.9,batch=8").unwrap();
+        assert_eq!(
+            s.params[0].axis,
+            ParamAxis::Range { lo: 0.1, hi: 0.9, log: false }
+        );
+        assert_eq!(s.params[1].axis, ParamAxis::Choices(vec![8.0]));
+    }
+
+    #[test]
+    fn rejects_malformed_spaces() {
+        for bad in [
+            "",
+            "lr=",
+            "12,24",                       // bare values with no axis
+            "lr=1e-2..1e-4:log",           // lo >= hi
+            "lr=-1e-3..1e-2:log",          // log with lo <= 0
+            "lr=1e-4..1e-2:exp",           // unknown modifier
+            "lr=1e-4..1e-2,3e-3",          // choices extending a range
+            "lr=a..b",
+            "layers=12,x",
+            "lr=1e-4..1e-2:log,lr=1,2",    // duplicate axis
+        ] {
+            assert!(SearchSpace::parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn grid_is_cartesian_and_log_spaced() {
+        let s = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24").unwrap();
+        let g = s.grid(3);
+        assert_eq!(g.len(), 6);
+        // first axis slowest: lr constant over consecutive pairs
+        assert_eq!(g[0].get("lr"), g[1].get("lr"));
+        assert_eq!(g[0].get("layers"), Some(12.0));
+        assert_eq!(g[1].get("layers"), Some(24.0));
+        // geometric midpoint of 1e-4..1e-2 is 1e-3
+        let mid = g[2].get("lr").unwrap();
+        assert!((mid - 1e-3).abs() < 1e-12, "{mid}");
+        // endpoints inclusive
+        assert!((g[0].get("lr").unwrap() - 1e-4).abs() < 1e-15);
+        assert!((g[5].get("lr").unwrap() - 1e-2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_point_grid_takes_the_midpoint() {
+        let s = SearchSpace::parse("x=2.0..4.0").unwrap();
+        let g = s.grid(1);
+        assert_eq!(g.len(), 1);
+        assert!((g[0].get("x").unwrap() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn samples_stay_in_bounds_and_are_seeded() {
+        let s = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48").unwrap();
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..100 {
+            let ca = s.sample(&mut a);
+            let cb = s.sample(&mut b);
+            assert_eq!(ca, cb);
+            let lr = ca.get("lr").unwrap();
+            assert!((1e-4..=1e-2).contains(&lr), "{lr}");
+            assert!([12.0, 24.0, 48.0].contains(&ca.get("layers").unwrap()));
+        }
+    }
+
+    #[test]
+    fn builder_api_matches_parse() {
+        let built = SearchSpace::new()
+            .log_range("lr", 1e-4, 1e-2)
+            .choices("layers", &[12.0, 24.0, 48.0]);
+        let parsed = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48").unwrap();
+        assert_eq!(built, parsed);
+    }
+
+    #[test]
+    fn label_is_deterministic() {
+        let s = SearchSpace::parse("lr=1e-3..1e-2:log,layers=24").unwrap();
+        let g = s.grid(2);
+        assert_eq!(g[0].label(), "lr=0.001-layers=24");
+    }
+}

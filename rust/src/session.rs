@@ -275,6 +275,40 @@ pub struct Session {
 }
 
 impl Session {
+    /// The cluster this session schedules over.
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    /// Swap the execution backend, returning the previous one. Crate-only:
+    /// the selection driver uses it to wrap the configured backend with
+    /// trial bookkeeping ([`crate::selection`]).
+    pub(crate) fn replace_backend(&mut self, backend: Backend) -> Backend {
+        std::mem::replace(&mut self.backend, backend)
+    }
+
+    /// The configured engine options (crate-only: the selection driver
+    /// sizes trial shards against the session's real buffer zone).
+    pub(crate) fn engine_options(&self) -> &EngineOptions {
+        &self.options
+    }
+
+    /// Run a whole hyperparameter search on this session: every trial of
+    /// `search` is submitted via [`Session::submit_at`], per-epoch losses
+    /// stream through a [`crate::selection::TrialMonitor`], and
+    /// successive-halving searchers prune rung losers mid-run so freed
+    /// HBM/DRAM/NVMe immediately benefits the surviving trials.
+    ///
+    /// The session must be fresh (no jobs submitted) and drive a sim or
+    /// custom backend — trial loss curves are synthetic
+    /// ([`crate::selection::SynthLoss`]).
+    pub fn run_search(
+        self,
+        search: &crate::selection::Search,
+    ) -> Result<crate::selection::SearchReport> {
+        crate::selection::driver::drive_search(self, search)
+    }
+
     /// Start building a session over `cluster`.
     pub fn builder(cluster: Cluster) -> SessionBuilder {
         SessionBuilder {
@@ -330,7 +364,10 @@ impl Session {
 
     /// Schedule a tenant cancellation of `job` at virtual `time`.
     /// Unit-granular and idempotent: an in-flight unit completes, the rest
-    /// drop; cancelling a finished job is a no-op.
+    /// drop. Cancelling an already-finished job is a defined no-op — the
+    /// request is still recorded in the report
+    /// ([`crate::coordinator::sharp::JobStat::cancel_requested`]) while
+    /// `cancelled` stays false; double cancels keep the earliest time.
     pub fn cancel_at(&mut self, job: JobHandle, time: f64) -> Result<()> {
         if !time.is_finite() || time < 0.0 {
             return Err(HydraError::Config(format!("bad cancellation time {time}")));

@@ -150,6 +150,23 @@ impl PaperModel {
         }
     }
 
+    /// BERT-style encoder with an explicit depth — model-selection spaces
+    /// sweep `layers` directly ([`crate::selection::SearchSpace`]), where
+    /// [`PaperModel::bert_like`] solves depth from a parameter target.
+    /// Same width/sequence/vocab as the Table 2 grid.
+    pub fn bert_depth(n_layers: usize, batch: usize) -> PaperModel {
+        let d = 2048usize;
+        PaperModel {
+            d_model: d,
+            n_layers: n_layers.max(1),
+            d_ff: 4 * d,
+            seq: 128,
+            batch: batch.max(1),
+            vocab: 30_522,
+            opt_factor: 2,
+        }
+    }
+
     /// ViT-style encoder scaled to ~`target_params` (Table 2: 300M–2B,
     /// CIFAR-10: small patch grid, 10 classes).
     pub fn vit_like(target_params: u64, batch: usize) -> PaperModel {
@@ -272,6 +289,19 @@ mod tests {
             (0.8e9..1.2e9).contains(&(p as f64)),
             "params {p}"
         );
+    }
+
+    #[test]
+    fn bert_depth_scales_linearly_in_layers() {
+        let shallow = PaperModel::bert_depth(12, 8);
+        let deep = PaperModel::bert_depth(48, 8);
+        assert_eq!(shallow.n_layers, 12);
+        assert_eq!(deep.n_layers, 48);
+        let extra = deep.total_params() - shallow.total_params();
+        assert_eq!(extra, 36 * deep.block_params());
+        // degenerate inputs clamp instead of panicking
+        assert_eq!(PaperModel::bert_depth(0, 0).n_layers, 1);
+        assert_eq!(PaperModel::bert_depth(0, 0).batch, 1);
     }
 
     #[test]

@@ -126,6 +126,47 @@ fn table3_includes_the_nvme_backed_arm() {
 }
 
 #[test]
+fn ext_selection_asha_beats_the_full_grid_on_every_pool() {
+    let fig = figures::ext_selection().unwrap();
+    // csv: pool,algo,trials,makespan_h,gpu_h,saved_pct,best_loss
+    let mut grid: std::collections::BTreeMap<String, (f64, f64)> = Default::default();
+    let mut asha: std::collections::BTreeMap<String, (f64, f64)> = Default::default();
+    for line in fig.csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let pool = cols[0].to_string();
+        let trials: usize = cols[2].parse().unwrap();
+        assert_eq!(trials, 27, "{line}");
+        let makespan: f64 = cols[3].parse().unwrap();
+        let gpu_h: f64 = cols[4].parse().unwrap();
+        match cols[1] {
+            "grid" => {
+                grid.insert(pool, (makespan, gpu_h));
+            }
+            "asha" => {
+                asha.insert(pool, (makespan, gpu_h));
+            }
+            other => panic!("unknown algo {other:?} in {line}"),
+        }
+    }
+    assert_eq!(grid.len(), 3);
+    assert_eq!(asha.len(), 3);
+    for (pool, &(g_mk, g_gpu)) in &grid {
+        let &(a_mk, a_gpu) = asha.get(pool).unwrap();
+        // the headline claim on the default seed: ASHA's makespan is
+        // strictly below the full grid's, on every pool size — and so are
+        // its simulated GPU-hours
+        assert!(
+            a_mk < g_mk,
+            "pool {pool}: asha makespan {a_mk} !< grid {g_mk}"
+        );
+        assert!(
+            a_gpu < g_gpu,
+            "pool {pool}: asha gpu-hours {a_gpu} !< grid {g_gpu}"
+        );
+    }
+}
+
+#[test]
 fn csv_files_written_to_disk() {
     let dir = std::env::temp_dir().join("hydra_figcsv_test");
     let dir = dir.to_str().unwrap();

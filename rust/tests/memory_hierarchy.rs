@@ -136,6 +136,68 @@ fn oversubscribed_dram_fails_clearly_without_nvme_and_completes_with_it() {
 }
 
 #[test]
+fn dram_below_the_pinned_working_set_is_an_explicit_thrashing_error() {
+    // The PR 3 caution, pinned as a regression test: DRAM must cover the
+    // pinned working set ((2*devices + 1) x max shard). Here the LRTF
+    // first pick is an 80 MiB-shard model that homes in (and pins) most of
+    // the 100 MiB of DRAM; the second device's very first fetch (an
+    // NVMe-homed 40 MiB shard, no prior resident to unpin) then finds
+    // every resident byte pinned — the run must fail with the explicit
+    // "thrashing" HydraError, not a panic or a silent stall.
+    let mk_tasks = || {
+        let mut ts = vec![ModelTask::new(
+            0,
+            "big",
+            "sim",
+            vec![ShardDesc {
+                param_bytes: 80 << 20,
+                fwd_transfer_bytes: 26 << 20,
+                bwd_transfer_bytes: 26 << 20,
+                activation_bytes: 1 << 16,
+                fwd_cost: 2.0, // longest remaining time: LRTF picks it first
+                bwd_cost: 4.0,
+                n_layers: 1,
+            }],
+            2,
+            1,
+            1e-3,
+        )];
+        ts.extend((1..6).map(|i| small_task(i, 40 << 20, 2)));
+        ts
+    };
+    let floor = (2 * 2 + 1) * (80u64 << 20); // 400 MiB
+    let dram = 100 << 20; // well below the floor
+    let opts = EngineOptions::default();
+
+    let err = run(
+        mk_tasks(),
+        Cluster::uniform(2, GIB, dram),
+        opts.clone(),
+        Some(TierSpec::nvme(4 * GIB)),
+        &[],
+    )
+    .unwrap_err();
+    assert!(matches!(err, hydra::HydraError::Exec(_)), "{err:?}");
+    let msg = format!("{err}");
+    assert!(msg.contains("thrashing"), "unexpected error: {msg}");
+    assert!(msg.contains("DRAM"), "unactionable error: {msg}");
+
+    // the prescribed fix: keep the NVMe headroom and grant one extra GiB
+    // of DRAM — now above the floor, the same workload completes
+    let r = run(
+        mk_tasks(),
+        Cluster::uniform(2, GIB, dram + GIB),
+        opts,
+        Some(TierSpec::nvme(4 * GIB)),
+        &[],
+    )
+    .unwrap();
+    assert!(dram + GIB > floor, "fix arm must clear the working-set floor");
+    assert_eq!(r.units_executed, 6 * 4);
+    assert!(r.jobs.iter().all(|j| j.finished.is_finite()));
+}
+
+#[test]
 fn nvme_stalls_appear_in_traces_and_cost_makespan() {
     let tasks = || (0..8).map(|i| small_task(i, 40 << 20, 2)).collect::<Vec<_>>();
     // double-buffering off: every DRAM miss is a synchronous NvmeTransfer

@@ -215,6 +215,54 @@ fn cancel_is_idempotent_and_ignores_finished_jobs() {
     assert_eq!(r.units_executed, 2);
     assert!(!r.jobs[0].cancelled);
     assert!((r.jobs[0].finished - 3.0).abs() < 1e-9);
+    // the no-op request is still recorded (defined semantics, not silence)
+    assert_eq!(r.jobs[0].cancel_requested, Some(10.0));
+}
+
+#[test]
+fn cancel_exactly_at_arrival_time_kills_the_job_before_any_unit() {
+    // job 1 arrives at t=5 and is cancelled at t=5: the cancel (queued at
+    // construction, lower event seq than the arrival's device wake) lands
+    // before any unit can start — 0 units, latency 0, finished == arrival
+    let tasks = vec![
+        uniform_task(0, 1, 1, 1.0),
+        uniform_task(1, 1, 2, 1.0).with_arrival(5.0),
+    ];
+    let r = run_with_cancels(
+        tasks,
+        1,
+        zero_transfer_opts(),
+        Policy::ShardedLrtf,
+        &[(1, 5.0)],
+    );
+    assert!(r.jobs[1].cancelled);
+    assert_eq!(r.jobs[1].units_executed, 0);
+    assert!((r.jobs[1].finished - 5.0).abs() < 1e-9, "{:?}", r.jobs[1]);
+    assert_eq!(r.jobs[1].cancel_requested, Some(5.0));
+    assert!(r.jobs[1].latency().abs() < 1e-9);
+    // job 0 is untouched and never saw a request
+    assert!(!r.jobs[0].cancelled);
+    assert_eq!(r.jobs[0].cancel_requested, None);
+    assert_eq!(r.units_executed, 2);
+}
+
+#[test]
+fn double_cancel_keeps_the_earliest_time_in_either_issue_order() {
+    for cancels in [[(1, 2.0), (1, 4.0)], [(1, 4.0), (1, 2.0)]] {
+        let tasks = vec![
+            uniform_task(0, 1, 3, 1.0), // 9s — LRTF keeps the device busy
+            uniform_task(1, 1, 1, 1.0), // cancelled before it ever runs
+        ];
+        // double-buffering off: the idle device must not pre-claim job 1's
+        // first unit while job 0 runs, so the t=2 cancel finds it Idle
+        let opts = EngineOptions { double_buffer: false, ..zero_transfer_opts() };
+        let r = run_with_cancels(tasks, 1, opts, Policy::ShardedLrtf, &cancels);
+        assert!(r.jobs[1].cancelled, "{cancels:?}");
+        assert_eq!(r.jobs[1].units_executed, 0);
+        // idempotent: the earlier cancel wins regardless of issue order
+        assert!((r.jobs[1].finished - 2.0).abs() < 1e-9, "{:?}", r.jobs[1]);
+        assert_eq!(r.jobs[1].cancel_requested, Some(2.0));
+    }
 }
 
 /// Engine-level contract beneath `Session` (which cannot express an

@@ -1,0 +1,379 @@
+//! The model-selection subsystem contract (ISSUE 4):
+//!
+//! 1. **Rung invariants** (property) — for random ASHA runs: exactly
+//!    `ceil(n/eta)` promotions per rung, survivors are exactly the top-k
+//!    by observed loss at each rung, and no pruned trial ever reports a
+//!    retired unit after its cancel time.
+//! 2. **Differential equivalence** — `GridSearch` through the
+//!    `SelectionDriver` produces a byte-identical `RunReport` (via
+//!    `Debug`) to the equivalent hand-built `submit_at` job list, on both
+//!    the batch (Table-2-style) and online-churn (staggered arrivals,
+//!    noisy durations, heterogeneous pool) workloads: the no-pruning path
+//!    is a pure refactor.
+//! 3. **Acceptance** — ASHA on the 27-trial space over `a4000:4`
+//!    completes with fewer simulated GPU-seconds than the full grid on
+//!    the same space and seed.
+
+use hydra::coordinator::sharp::{EngineOptions, RunReport};
+use hydra::coordinator::Cluster;
+use hydra::prop_assert;
+use hydra::selection::{Algo, GridSearch, Search, SearchSpace, Searcher, TrialState};
+use hydra::session::{Backend, Policy, Session};
+use hydra::sim::{mixed_pool, pool_reference, GpuSpec};
+use hydra::util::prop;
+
+const GIB: u64 = 1 << 30;
+
+fn search_opts(record: bool) -> EngineOptions {
+    EngineOptions {
+        buffer_frac: 0.30,
+        transfer: GpuSpec::a4000().transfer_model(),
+        record_intervals: record,
+        ..Default::default()
+    }
+}
+
+fn a4000_session(devices: usize, opts: EngineOptions, backend: Backend) -> Session {
+    Session::builder(Cluster::uniform(devices, GpuSpec::a4000().mem_bytes, 2048 * GIB))
+        .backend(backend)
+        .policy(Policy::ShardedLrtf)
+        .options(opts)
+        .build()
+        .unwrap()
+}
+
+fn acceptance_search(algo: Algo) -> Search {
+    let space =
+        SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24,48,batch=4,8,16").unwrap();
+    let mut s = Search::new(space);
+    s.algo = algo;
+    s.epochs = 9;
+    s.minibatches_per_epoch = 2;
+    s.seed = 7;
+    s.reference = GpuSpec::a4000();
+    s
+}
+
+// ---------------------------------------------------------------------------
+// acceptance: ASHA beats the grid on simulated GPU-seconds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn asha_on_27_trials_over_a4000x4_spends_fewer_gpu_seconds_than_grid() {
+    let mk = |algo| {
+        a4000_session(4, search_opts(false), Backend::sim())
+            .run_search(&acceptance_search(algo))
+            .unwrap()
+    };
+    let grid = mk(Algo::Grid);
+    let asha = mk(Algo::Asha { trials: None, eta: 3, min_epochs: 1 });
+    assert_eq!(grid.trials.len(), 27);
+    assert_eq!(asha.trials.len(), 27);
+
+    // the headline: same cohort, same seed, strictly fewer GPU-seconds —
+    // both in reference-cost accounting and in engine compute seconds
+    assert!(
+        asha.spent_secs < grid.spent_secs,
+        "asha {} vs grid {}",
+        asha.spent_secs,
+        grid.spent_secs
+    );
+    assert!(
+        asha.run.compute_secs < grid.run.compute_secs,
+        "asha {} vs grid {}",
+        asha.run.compute_secs,
+        grid.run.compute_secs
+    );
+    assert!(asha.gpu_hours_saved() > 0.0);
+    assert!(asha.run.makespan < grid.run.makespan);
+
+    // grid runs everything: spent == full (up to summation order)
+    assert!((grid.spent_secs - grid.full_secs).abs() < 1e-6 * grid.full_secs);
+    assert!(grid.rungs.is_empty());
+    for t in &grid.trials {
+        assert_eq!(t.state, TrialState::Completed);
+        assert_eq!(t.losses.len(), 9);
+    }
+
+    // the eta=3 cascade over 9 epochs: 27 -> 9 at 1 epoch, 9 -> 3 at 3
+    assert_eq!(asha.survivors_per_rung(), vec![(1, 27, 9), (3, 9, 3)]);
+    let completed = asha
+        .trials
+        .iter()
+        .filter(|t| t.state == TrialState::Completed)
+        .count();
+    assert_eq!(completed, 3);
+
+    // pruning never hides the winner: ASHA's best is a completed trial
+    // with the minimum final loss among survivors
+    let best = asha.best_trial().expect("asha found a best trial");
+    assert_eq!(best.state, TrialState::Completed);
+    assert_eq!(best.losses.len(), 9);
+}
+
+// ---------------------------------------------------------------------------
+// differential: grid through the driver == hand-built submit_at job list
+// ---------------------------------------------------------------------------
+
+/// Run `search` (grid algo) through the driver and return the engine
+/// report.
+fn grid_via_driver(search: &Search, session: Session) -> RunReport {
+    let report = session.run_search(search).unwrap();
+    assert_eq!(report.algo, "grid");
+    report.run
+}
+
+/// Hand-build the equivalent job list: same configs, same tasks, same
+/// `submit_at` times, plain sim backend — no selection machinery at all.
+fn grid_by_hand(search: &Search, mut session: Session) -> RunReport {
+    let configs = GridSearch::new(search.grid_points)
+        .configs(&search.space)
+        .unwrap();
+    let min_mem = session.cluster().min_device_mem();
+    for (i, cfg) in configs.iter().enumerate() {
+        let task = search.trial_task(i, cfg, min_mem).unwrap();
+        session
+            .submit_at(task, search.stagger_secs * i as f64)
+            .unwrap();
+    }
+    session.run().unwrap().run
+}
+
+#[test]
+fn grid_driver_is_byte_identical_to_handwritten_jobs_on_batch_workload() {
+    // Table-2-style batch setting: every trial present from t=0
+    let search = acceptance_search(Algo::Grid);
+    let driver = grid_via_driver(&search, a4000_session(4, search_opts(true), Backend::sim()));
+    let hand = grid_by_hand(&search, a4000_session(4, search_opts(true), Backend::sim()));
+    assert_eq!(
+        format!("{driver:?}"),
+        format!("{hand:?}"),
+        "batch grid reports differ"
+    );
+}
+
+#[test]
+fn grid_driver_is_byte_identical_to_handwritten_jobs_under_online_churn() {
+    // online churn: trials staggered 15 virtual minutes apart over a
+    // heterogeneous A4000+A6000 pool, with noisy unit durations
+    let pool = mixed_pool(2, 2);
+    let reference = pool_reference(&pool).unwrap();
+    let mk_session = || {
+        let specs: Vec<_> = pool.iter().map(|g| g.device_spec(&reference)).collect();
+        Session::builder(Cluster::heterogeneous(specs, 2048 * GIB))
+            .backend(Backend::Sim { noise: 0.05, seed: 11 })
+            .policy(Policy::ShardedLrtf)
+            .options(search_opts(true))
+            .build()
+            .unwrap()
+    };
+    let mut search = acceptance_search(Algo::Grid);
+    search.stagger_secs = 900.0;
+    search.reference = reference;
+    let driver = grid_via_driver(&search, mk_session());
+    let hand = grid_by_hand(&search, mk_session());
+    assert_eq!(
+        format!("{driver:?}"),
+        format!("{hand:?}"),
+        "online-churn grid reports differ"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// property: ASHA rung invariants on random searches
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_asha_rung_invariants_hold() {
+    prop::check("asha rung invariants", 25, |rng| {
+        // random space: lr always; depth / batch axes sometimes
+        let mut space_s = String::from("lr=1e-5..1e-1:log");
+        if rng.uniform() < 0.7 {
+            space_s.push_str(",layers=4,8,16");
+        }
+        if rng.uniform() < 0.4 {
+            space_s.push_str(",batch=4,8");
+        }
+        let space = SearchSpace::parse(&space_s).unwrap();
+        let n = rng.range_u64(3, 13) as usize;
+        let eta = rng.range_u64(2, 5) as u32;
+        let epochs = rng.range_u64(4, 10) as u32;
+        let min_epochs = rng.range_u64(1, 3) as u32;
+        let devices = rng.range_u64(1, 5) as usize;
+        let mbs = rng.range_u64(1, 3) as u32;
+        let stagger = if rng.uniform() < 0.5 { 0.0 } else { rng.range_f64(1.0, 400.0) };
+
+        let mut search = Search::new(space);
+        search.algo = Algo::Asha { trials: Some(n), eta, min_epochs };
+        search.epochs = epochs;
+        search.minibatches_per_epoch = mbs;
+        search.seed = rng.next_u64();
+        search.stagger_secs = stagger;
+        search.reference = GpuSpec::a4000();
+
+        let r = a4000_session(devices, search_opts(false), Backend::sim())
+            .run_search(&search)
+            .map_err(|e| format!("search failed: {e}"))?;
+        prop_assert!(r.trials.len() == n, "{} trials, wanted {n}", r.trials.len());
+        prop_assert!(
+            r.late_retires == 0,
+            "{} units retired after their trial finished",
+            r.late_retires
+        );
+
+        let mut survivors: Vec<usize> = (0..n).collect();
+        for (ri, rung) in r.rungs.iter().enumerate() {
+            // the rung chain: everyone promoted by the previous rung (or
+            // the whole cohort) enters
+            prop_assert!(
+                rung.entered == survivors,
+                "rung {ri} entered {:?} != survivors {:?}",
+                rung.entered,
+                survivors
+            );
+            // exactly ceil(n / eta) promotions
+            let k = rung.entered.len().div_ceil(eta as usize);
+            prop_assert!(
+                rung.promoted.len() == k,
+                "rung {ri}: {} promoted, wanted ceil({}/{eta}) = {k}",
+                rung.promoted.len(),
+                rung.entered.len()
+            );
+            // survivors are exactly the top-k by OBSERVED loss at the rung
+            let mut ranked: Vec<(usize, f64)> = Vec::new();
+            for &t in &rung.entered {
+                let Some(&(_, l)) = r.trials[t]
+                    .losses
+                    .iter()
+                    .find(|&&(e, _)| e == rung.epochs)
+                else {
+                    return Err(format!(
+                        "trial {t} has no observed loss at rung epoch {}",
+                        rung.epochs
+                    ));
+                };
+                ranked.push((t, l));
+            }
+            ranked.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+            let mut topk: Vec<usize> = ranked[..k].iter().map(|&(t, _)| t).collect();
+            topk.sort_unstable();
+            prop_assert!(
+                rung.promoted == topk,
+                "rung {ri}: promoted {:?} != observed top-{k} {:?}",
+                rung.promoted,
+                topk
+            );
+            // rung losers stopped exactly at the rung boundary, and never
+            // retired a unit after their cancel time
+            for &t in &rung.entered {
+                if rung.promoted.contains(&t) {
+                    continue;
+                }
+                let tr = &r.trials[t];
+                prop_assert!(
+                    matches!(tr.state, TrialState::Pruned { rung: rr } if rr == ri),
+                    "trial {t}: state {:?}, wanted Pruned at rung {ri}",
+                    tr.state
+                );
+                prop_assert!(
+                    tr.losses.last().map(|&(e, _)| e) == Some(rung.epochs),
+                    "trial {t} observed epochs past its prune: {:?}",
+                    tr.losses
+                );
+                let expected =
+                    2 * tr.shards as u64 * mbs as u64 * rung.epochs as u64;
+                prop_assert!(
+                    tr.units == expected,
+                    "trial {t}: {} units retired, wanted {expected}",
+                    tr.units
+                );
+                prop_assert!(
+                    tr.finished.is_finite() && tr.last_retire <= tr.finished + 1e-9,
+                    "trial {t}: retired at {} after its cancel at {}",
+                    tr.last_retire,
+                    tr.finished
+                );
+            }
+            survivors = rung.promoted.clone();
+        }
+        // survivors of the last rung run the full budget
+        for &t in &survivors {
+            let tr = &r.trials[t];
+            prop_assert!(
+                tr.state == TrialState::Completed,
+                "survivor {t} did not complete: {:?}",
+                tr.state
+            );
+            prop_assert!(
+                tr.losses.last().map(|&(e, _)| e) == Some(epochs),
+                "survivor {t} stopped early: {:?}",
+                tr.losses
+            );
+            let expected = 2 * tr.shards as u64 * mbs as u64 * epochs as u64;
+            prop_assert!(tr.units == expected, "survivor {t}: {} units", tr.units);
+        }
+        // accounting: spent equals the per-trial executed sum and never
+        // exceeds the full-grid cost
+        let spent: f64 = r.trials.iter().map(|t| t.executed_secs).sum();
+        prop_assert!(
+            (spent - r.spent_secs).abs() < 1e-6 * spent.max(1.0),
+            "spent {} != report {}",
+            spent,
+            r.spent_secs
+        );
+        prop_assert!(
+            r.spent_secs <= r.full_secs + 1e-6,
+            "spent {} > full {}",
+            r.spent_secs,
+            r.full_secs
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// pruning frees memory for the survivors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pruned_trials_release_their_dram_while_the_search_runs() {
+    // DRAM sized for ~half the cohort's aggregate parameters over an NVMe
+    // tier: the full grid must page against NVMe, while ASHA — whose
+    // pruned trials unhome at their rung boundary — ends with every
+    // surviving trial fitting in DRAM. Pruning visibly reduces NVMe
+    // fetch traffic on the same workload.
+    let space = SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24").unwrap();
+    let mk = |algo| {
+        let mut s = Search::new(space.clone());
+        s.algo = algo;
+        s.epochs = 9;
+        s.minibatches_per_epoch = 2;
+        s.seed = 7;
+        s.reference = GpuSpec::a4000();
+        // 6 trials x (8.2 / 14.9) GiB of parameter state: ~69 GiB total.
+        // 58 GiB of DRAM stays above the pinned working set floor
+        // ((2*devices+1) x max shard ~ 55 GiB, the PR 3 caution) while
+        // forcing the last trial to home on NVMe.
+        let session = Session::builder(Cluster::uniform(
+            2,
+            GpuSpec::a4000().mem_bytes,
+            58 * GIB,
+        ))
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(search_opts(false))
+        .nvme(hydra::TierSpec::nvme(512 * GIB))
+        .build()
+        .unwrap();
+        session.run_search(&s).unwrap()
+    };
+    let grid = mk(Algo::Grid);
+    let asha = mk(Algo::Asha { trials: None, eta: 3, min_epochs: 1 });
+    assert!(grid.run.nvme_promoted_bytes > 0, "grid never touched NVMe");
+    assert!(
+        asha.run.nvme_promoted_bytes < grid.run.nvme_promoted_bytes,
+        "pruning should cut NVMe fetch traffic: asha {} vs grid {}",
+        asha.run.nvme_promoted_bytes,
+        grid.run.nvme_promoted_bytes
+    );
+}
