@@ -9,7 +9,8 @@
 //!   "cluster": { "devices": 2, "device_mem_mib": 2, "dram_mib": 4096 },
 //!   "engine": { "scheduler": "sharded-lrtf", "double_buffer": true,
 //!               "sequential": false, "buffer_frac": 0.05,
-//!               "early_stop_median_after": 2, "event_queue": "heap" },
+//!               "prefetch_depth": 1, "early_stop_median_after": 2,
+//!               "event_queue": "heap" },
 //!   "tasks": [
 //!     { "name": "bert-a", "config": "tiny-lm-b8", "lr": 0.05,
 //!       "opt": "sgd", "epochs": 1, "minibatches": 8, "seed": 1 },
@@ -258,6 +259,14 @@ fn parse_engine(j: &Json) -> Result<(EngineOptions, Policy, Option<u32>)> {
             }
             engine.buffer_frac = f;
         }
+        if let Some(k) = e.get("prefetch_depth").and_then(Json::as_u64) {
+            if k == 0 {
+                return Err(cerr(
+                    "prefetch_depth must be >= 1 (1 = classic double-buffering)",
+                ));
+            }
+            engine.prefetch_depth = k as usize;
+        }
         if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
             early_stop = Some(me as u32);
         }
@@ -491,6 +500,33 @@ mod tests {
         assert_eq!(w.cluster.min_device_mem(), 16 << 30);
         assert!(w.cluster.devices[1].link.is_some());
         assert_eq!(w.tasks[0].arrival, 30.5);
+    }
+
+    #[test]
+    fn prefetch_depth_parses_and_rejects_zero() {
+        let mk = |engine: &str| {
+            WorkloadSpec::parse(&format!(
+                r#"{{"cluster": {{"devices":1,"device_mem_mib":1}},
+                     "engine": {engine},
+                     "tasks":[{{"config":"x","minibatches":1}}]}}"#
+            ))
+        };
+        // default is the classic single-slot double buffer
+        assert_eq!(mk(r#"{}"#).unwrap().engine.prefetch_depth, 1);
+        assert_eq!(
+            mk(r#"{"prefetch_depth": 4}"#).unwrap().engine.prefetch_depth,
+            4
+        );
+        let err = mk(r#"{"prefetch_depth": 0}"#).unwrap_err();
+        assert!(format!("{err}").contains("prefetch_depth"), "{err}");
+        // the shared engine parser gives searches the same key
+        let s = SearchWorkload::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":16384},
+                "engine": {"prefetch_depth": 2},
+                "search": {"space": "lr=1e-4..1e-2:log"}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.engine.prefetch_depth, 2);
     }
 
     #[test]

@@ -1,0 +1,785 @@
+//! The engine core: [`SharpEngine`] construction, the virtual-time run
+//! loop ([`SharpEngine::run_with`]), unit dispatch (`on_device_free` /
+//! `start_unit` / `on_unit_retire`), and the run report.
+//!
+//! Everything else lives in the sibling modules: the event queue in
+//! [`super::events`], device lifecycle in [`super::device`], job lifecycle
+//! in [`super::jobs`], and the depth-k prefetch pipeline in
+//! [`super::prefetch`].
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::memory::{
+    MemTier, MemoryHierarchy, MemoryOptions, Residency,
+};
+use crate::coordinator::metrics::{Interval, IntervalKind, Trace};
+use crate::coordinator::observer::{EngineObserver, NoopObserver, Tee, TraceRecorder};
+use crate::coordinator::sched::{PickContext, Scheduler};
+use crate::coordinator::task::{ModelSnapshot, ModelTask, TaskState};
+use crate::coordinator::unit::{Phase, ShardUnit};
+use crate::error::{HydraError, Result};
+use crate::exec::ExecutionBackend;
+use crate::util::rng::Rng;
+
+use super::device::{ClusterEvent, DeviceSpec, DeviceState};
+use super::events::{Event, EventQueue, QueueKind};
+use super::jobs::{JobEvent, JobStat};
+use super::prefetch::StagedShard;
+use super::TransferModel;
+
+/// Parallelism mode: SHARP blending vs the spilling-only ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelMode {
+    /// Full SHARP: all idle models are eligible on any free device.
+    Sharp,
+    /// Ablation (Table 3 "without SHARP"): models run one-after-another;
+    /// only the lowest-id unfinished (arrived) model is ever eligible, so
+    /// sequential shard dependencies leave at most one device busy.
+    Sequential,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// SHARP blending vs the sequential ablation.
+    pub mode: ParallelMode,
+    /// Enable §4.6 double-buffered prefetch.
+    pub double_buffer: bool,
+    /// Fraction of device memory reserved as the prefetch zone (§4.6).
+    pub buffer_frac: f64,
+    /// Upcoming units the scheduler pre-claims per device — the depth of
+    /// the prefetch pipeline. 1 (the default) is the paper's classic
+    /// double buffer; higher depths overlap the NVMe->DRAM and DRAM->HBM
+    /// legs of different slots so multi-hop DRAM-miss chains hide behind
+    /// more than one compute span. The zone size is unchanged: k is
+    /// additionally bounded by what fits the zone.
+    pub prefetch_depth: usize,
+    /// Engine-wide DRAM<->device link (overridable per device via
+    /// [`DeviceSpec::link`]).
+    pub transfer: TransferModel,
+    /// Seed for the engine's RNG stream (Random scheduler etc.).
+    pub seed: u64,
+    /// Record per-interval trace entries into the report
+    /// (`RunReport::trace`). Implemented as an opt-in
+    /// [`crate::coordinator::observer::TraceRecorder`] observer, so turning
+    /// it off removes the bookkeeping from the hot path entirely (disable
+    /// for very long sims to bound memory; scalar aggregates are still
+    /// collected).
+    pub record_intervals: bool,
+    /// Paper-fidelity mode: spilling moves the *full* shard state (weights +
+    /// gradients + optimizer state) instead of weights-only. Hydra's default
+    /// (false) keeps optimizer state in DRAM with a Rust-side update — the
+    /// same design the real backend implements — which shrinks transfer
+    /// volume ~3x. Used by the Table 3 ablation to recover the paper's
+    /// no-double-buffering penalty.
+    pub full_state_transfers: bool,
+    /// Event-queue discipline (heap by default; linear scan as reference).
+    pub queue: QueueKind,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            mode: ParallelMode::Sharp,
+            double_buffer: true,
+            buffer_frac: 0.05,
+            prefetch_depth: 1,
+            transfer: TransferModel::pcie_gen3(),
+            seed: 0,
+            record_intervals: true,
+            full_state_transfers: false,
+            queue: QueueKind::Heap,
+        }
+    }
+}
+
+/// Result summary of an engine run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Full execution trace (intervals, device windows, makespan).
+    pub trace: Trace,
+    /// Virtual time the last interval ends.
+    pub makespan: f64,
+    /// Compute seconds / available device seconds.
+    pub utilization: f64,
+    /// Total shard-unit compute seconds.
+    pub compute_secs: f64,
+    /// Total synchronous transfer seconds.
+    pub transfer_secs: f64,
+    /// Total prefetch stall seconds (devices waiting on an in-flight
+    /// staged transfer).
+    pub stall_secs: f64,
+    /// Total seconds prefetch transfers spent queued behind a busy staging
+    /// link (the at-most-one-in-flight-per-link discipline). Always 0 at
+    /// `prefetch_depth == 1`; at depth >= 2 it measures how saturated the
+    /// staging links are.
+    pub prefetch_wait_secs: f64,
+    /// Shard units retired.
+    pub units_executed: u64,
+    /// DRAM->device promotion traffic.
+    pub promoted_bytes: u64,
+    /// Device->DRAM demotion traffic.
+    pub demoted_bytes: u64,
+    /// NVMe->DRAM fetch traffic (zero without an NVMe tier).
+    pub nvme_promoted_bytes: u64,
+    /// DRAM->NVMe eviction write-back traffic.
+    pub nvme_demoted_bytes: u64,
+    /// Seconds devices spent blocked on synchronous NVMe staging.
+    pub nvme_secs: f64,
+    /// Name of the scheduling policy used.
+    pub scheduler: &'static str,
+    /// Per-job arrival/finish/cancellation statistics (online setting;
+    /// batch runs have arrival 0.0 everywhere).
+    pub jobs: Vec<JobStat>,
+}
+
+/// The SHARP engine.
+pub struct SharpEngine<'a> {
+    /// The model tasks (public for post-run inspection in tests/figures).
+    pub tasks: Vec<ModelTask>,
+    pub(crate) devices: Vec<DeviceState>,
+    pub(crate) memory: MemoryHierarchy,
+    pub(crate) options: EngineOptions,
+    pub(crate) scheduler: Box<dyn Scheduler>,
+    pub(crate) backend: &'a mut dyn ExecutionBackend,
+    pub(crate) cluster_events: Vec<ClusterEvent>,
+    pub(crate) job_events: Vec<JobEvent>,
+    // run state
+    pub(crate) queue: EventQueue,
+    pub(crate) pending_submissions: Vec<Option<ModelTask>>,
+    /// Models whose front unit is eligible right now (arrived + idle).
+    pub(crate) ready: BTreeSet<usize>,
+    /// Per-model: has the arrival time passed?
+    pub(crate) arrived: Vec<bool>,
+    /// Per-model: has a cancellation been issued?
+    pub(crate) job_cancelled: Vec<bool>,
+    /// Per-model earliest cancel-request time (NaN = never requested);
+    /// recorded even for no-op requests against finished jobs.
+    pub(crate) cancel_requested: Vec<f64>,
+    /// Cancellations waiting for an in-flight unit to retire.
+    pub(crate) cancel_pending: BTreeSet<usize>,
+    /// Per-model finish time (NaN until finished).
+    pub(crate) finish_times: Vec<f64>,
+    /// Devices that are alive, idle, and found no work at their last wake.
+    pub(crate) parked: BTreeSet<usize>,
+    /// Count of alive devices not currently computing.
+    pub(crate) free_devices: usize,
+    pub(crate) trace: Trace,
+    pub(crate) units_executed: u64,
+    pub(crate) agg_compute: f64,
+    pub(crate) agg_transfer: f64,
+    pub(crate) agg_stall: f64,
+    pub(crate) agg_nvme: f64,
+    /// Prefetch-link queueing seconds (see `RunReport::prefetch_wait_secs`).
+    pub(crate) agg_wait: f64,
+    pub(crate) rng: Rng,
+    /// Scratch snapshot buffer reused across scheduling decisions, so the
+    /// dispatch hot path allocates nothing per decision.
+    pub(crate) scratch_eligible: Vec<ModelSnapshot>,
+    /// Scratch residency buffer reused across `PickContext` builds.
+    pub(crate) scratch_resident: Vec<(usize, u32)>,
+}
+
+impl<'a> SharpEngine<'a> {
+    /// Build an engine over a homogeneous pool (`device_mem[i]` bytes each,
+    /// reference speed, engine-wide link). The seed API; see
+    /// [`SharpEngine::with_devices`] for heterogeneous pools. `memory` is
+    /// either a bare `dram_bytes: u64` (the legacy two-tier setup) or a
+    /// full [`MemoryOptions`] with an NVMe backing tier.
+    pub fn new(
+        tasks: Vec<ModelTask>,
+        device_mem: &[u64],
+        memory: impl Into<MemoryOptions>,
+        scheduler: Box<dyn Scheduler>,
+        backend: &'a mut dyn ExecutionBackend,
+        options: EngineOptions,
+    ) -> Result<SharpEngine<'a>> {
+        let specs: Vec<DeviceSpec> =
+            device_mem.iter().map(|&m| DeviceSpec::uniform(m)).collect();
+        Self::with_devices(tasks, &specs, memory, scheduler, backend, options)
+    }
+
+    /// Build an engine over an explicit (possibly heterogeneous) device
+    /// pool. Tasks must be partitioned so every shard fits the smallest
+    /// device (the §4.3 "smallest-memory GPU" contract — see
+    /// [`crate::sim::build_tasks_pool`]).
+    pub fn with_devices(
+        tasks: Vec<ModelTask>,
+        specs: &[DeviceSpec],
+        memory: impl Into<MemoryOptions>,
+        scheduler: Box<dyn Scheduler>,
+        backend: &'a mut dyn ExecutionBackend,
+        options: EngineOptions,
+    ) -> Result<SharpEngine<'a>> {
+        if specs.is_empty() {
+            return Err(HydraError::Config("no devices".into()));
+        }
+        if options.prefetch_depth == 0 {
+            return Err(HydraError::Config(
+                "prefetch_depth must be >= 1 (1 = classic double-buffering)".into(),
+            ));
+        }
+        for (m, t) in tasks.iter().enumerate() {
+            if t.id != m {
+                return Err(HydraError::Config(format!(
+                    "task {m} has id {} (ids must be dense and in order)",
+                    t.id
+                )));
+            }
+        }
+        let mut memory = MemoryHierarchy::new(memory);
+        for t in &tasks {
+            memory.home_model(t.id, &Self::shard_bytes(t))?;
+        }
+        let mut devices = Vec::new();
+        for (id, &spec) in specs.iter().enumerate() {
+            devices.push(Self::mk_device(id, spec, &options)?);
+        }
+        let rng = Rng::new(options.seed);
+        let n_tasks = tasks.len();
+        let n_devices = devices.len();
+        Ok(SharpEngine {
+            tasks,
+            devices,
+            memory,
+            options: options.clone(),
+            scheduler,
+            backend,
+            cluster_events: Vec::new(),
+            job_events: Vec::new(),
+            queue: EventQueue::new(options.queue),
+            pending_submissions: Vec::new(),
+            ready: BTreeSet::new(),
+            arrived: vec![false; n_tasks],
+            job_cancelled: vec![false; n_tasks],
+            cancel_requested: vec![f64::NAN; n_tasks],
+            cancel_pending: BTreeSet::new(),
+            finish_times: vec![f64::NAN; n_tasks],
+            parked: BTreeSet::new(),
+            free_devices: n_devices,
+            trace: Trace::default(),
+            units_executed: 0,
+            agg_compute: 0.0,
+            agg_transfer: 0.0,
+            agg_stall: 0.0,
+            agg_nvme: 0.0,
+            agg_wait: 0.0,
+            rng,
+            scratch_eligible: Vec::new(),
+            scratch_resident: Vec::new(),
+        })
+    }
+
+    /// Per-shard home-tier footprints of a task (what the hierarchy homes
+    /// and unhomes).
+    pub(crate) fn shard_bytes(task: &ModelTask) -> Vec<u64> {
+        task.shards.iter().map(|s| s.param_bytes).collect()
+    }
+
+    /// Register arrival/failure events before `run`.
+    pub fn with_cluster_events(mut self, events: Vec<ClusterEvent>) -> Self {
+        self.cluster_events = events;
+        self
+    }
+
+    /// Register online job submissions/cancellations before `run`.
+    pub fn with_job_events(mut self, events: Vec<JobEvent>) -> Self {
+        self.job_events = events;
+        self
+    }
+
+    /// Fill and hand out the engine-owned snapshot buffer of eligible
+    /// models under the current parallel mode. Built from the
+    /// incrementally-maintained ready-set, so the cost is O(|eligible|),
+    /// not O(|all tasks|) — and the buffer is reused across decisions, so
+    /// the hot path allocates nothing. Return it with
+    /// [`SharpEngine::put_eligible`] when done.
+    pub(crate) fn take_eligible(&mut self) -> Vec<ModelSnapshot> {
+        let mut buf = std::mem::take(&mut self.scratch_eligible);
+        buf.clear();
+        match self.options.mode {
+            ParallelMode::Sharp => {
+                for &id in &self.ready {
+                    if let Some(s) = ModelSnapshot::of(&self.tasks[id]) {
+                        buf.push(s);
+                    }
+                }
+            }
+            ParallelMode::Sequential => {
+                // strictly one model in flight across the whole pool: while
+                // any model runs, nothing else is eligible (otherwise a
+                // lower-id job arriving mid-unit would put two devices to
+                // work and corrupt the no-SHARP ablation)
+                if !self.tasks.iter().any(|t| t.state() == TaskState::Running) {
+                    // then: the lowest-id unfinished *arrived* model
+                    for t in &self.tasks {
+                        if t.state() != TaskState::Done && self.arrived[t.id] {
+                            buf.extend(ModelSnapshot::of(t));
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        buf
+    }
+
+    /// Return the snapshot buffer taken by [`SharpEngine::take_eligible`].
+    pub(crate) fn put_eligible(&mut self, buf: Vec<ModelSnapshot>) {
+        self.scratch_eligible = buf;
+    }
+
+    /// Fill and hand out the engine-owned residency buffer for `device`'s
+    /// `PickContext`. Return it with [`SharpEngine::put_resident`].
+    pub(crate) fn take_resident(&mut self, device: usize) -> Vec<(usize, u32)> {
+        let mut buf = std::mem::take(&mut self.scratch_resident);
+        buf.clear();
+        buf.extend(self.devices[device].resident);
+        buf
+    }
+
+    /// Return the residency buffer taken by [`SharpEngine::take_resident`].
+    pub(crate) fn put_resident(&mut self, buf: Vec<(usize, u32)>) {
+        self.scratch_resident = buf;
+    }
+
+    /// Wake one parked device (a model just became eligible). Waking
+    /// exactly one is sufficient — at most one model becomes eligible per
+    /// event — and keeps the wake cost O(log n) instead of the seed
+    /// engine's O(devices) broadcast.
+    pub(crate) fn wake_one(&mut self, now: f64) {
+        if let Some(&d) = self.parked.iter().next() {
+            self.parked.remove(&d);
+            self.queue.push(now, Event::DeviceFree { device: d });
+        }
+    }
+
+    /// Run to completion; returns the report. Per-interval trace recording
+    /// honours [`EngineOptions::record_intervals`] by installing a
+    /// [`TraceRecorder`] observer — see [`SharpEngine::run_with`] for the
+    /// underlying observer-threaded loop.
+    pub fn run(&mut self) -> Result<RunReport> {
+        self.run_observed(None)
+    }
+
+    /// Run with an optional external observer. This is the one place the
+    /// [`EngineOptions::record_intervals`] semantics live: when set, a
+    /// [`TraceRecorder`] is installed (teed with `obs` if both are present)
+    /// and its intervals become `RunReport::trace.intervals`.
+    pub fn run_observed(
+        &mut self,
+        obs: Option<&mut dyn EngineObserver>,
+    ) -> Result<RunReport> {
+        if !self.options.record_intervals {
+            return match obs {
+                Some(o) => self.run_with(o),
+                None => self.run_with(&mut NoopObserver),
+            };
+        }
+        let mut rec = TraceRecorder::default();
+        let mut report = match obs {
+            Some(o) => self.run_with(&mut Tee(o, &mut rec))?,
+            None => self.run_with(&mut rec)?,
+        };
+        report.trace.intervals = rec.intervals;
+        Ok(report)
+    }
+
+    /// Run to completion, streaming every engine event through `obs`.
+    ///
+    /// The report's `trace.intervals` stays empty on this path — interval
+    /// bookkeeping belongs to the observer (pass a [`TraceRecorder`], or use
+    /// [`SharpEngine::run`] which wires one from the options). Makespan,
+    /// device windows, utilization and the scalar aggregates are always
+    /// maintained engine-side.
+    pub fn run_with(&mut self, obs: &mut dyn EngineObserver) -> Result<RunReport> {
+        for d in 0..self.devices.len() {
+            self.trace.set_device_window(d, 0.0, f64::INFINITY);
+            self.queue.push(0.0, Event::DeviceFree { device: d });
+        }
+        for (i, ev) in self.cluster_events.clone().into_iter().enumerate() {
+            let time = match ev {
+                ClusterEvent::Arrive { time, .. } | ClusterEvent::Fail { time, .. } => time,
+            };
+            self.queue.push(time, Event::Cluster(i));
+        }
+        // Online jobs: construction-time tasks with future arrivals stay out
+        // of the ready-set until their arrival event fires.
+        self.ready.clear();
+        for m in 0..self.tasks.len() {
+            let arrival = self.tasks[m].arrival();
+            if arrival > 0.0 {
+                self.arrived[m] = false;
+                self.queue.push(arrival, Event::JobArrive { model: m });
+            } else {
+                self.arrived[m] = true;
+                obs.on_job_arrived(m, &self.tasks[m].name, 0.0);
+                if self.tasks[m].state() == TaskState::Idle {
+                    self.ready.insert(m);
+                }
+            }
+        }
+        let job_events = std::mem::take(&mut self.job_events);
+        for ev in job_events {
+            match ev {
+                JobEvent::Submit { time, task } => {
+                    let idx = self.pending_submissions.len();
+                    self.pending_submissions.push(Some(task));
+                    self.queue.push(time, Event::JobSubmit(idx));
+                }
+                JobEvent::Cancel { time, model } => {
+                    self.queue.push(time, Event::JobCancel { model });
+                }
+            }
+        }
+
+        while let Some(q) = self.queue.pop() {
+            let now = q.time;
+            match q.ev {
+                Event::DeviceFree { device } => self.on_device_free(device, now, obs)?,
+                Event::UnitRetire { device, unit } => {
+                    self.on_unit_retire(device, unit, now, obs)?
+                }
+                Event::Cluster(i) => self.on_cluster_event(i, now)?,
+                Event::JobArrive { model } => self.on_job_arrive(model, now, obs),
+                Event::JobSubmit(idx) => self.on_job_submit(idx, now, obs)?,
+                Event::JobCancel { model } => self.on_job_cancel(model, now, obs)?,
+            }
+            #[cfg(debug_assertions)]
+            self.assert_engine_invariants();
+        }
+
+        // Sanity: every task finished (unless devices all died).
+        let alive = self.devices.iter().any(|d| d.alive);
+        let done = self.tasks.iter().all(|t| t.state() == TaskState::Done);
+        if alive && !done {
+            return Err(HydraError::Sched(
+                "engine drained events with unfinished tasks".into(),
+            ));
+        }
+
+        self.trace.close_device_windows();
+        let device_secs = self.trace.device_seconds();
+        let utilization =
+            if device_secs > 0.0 { self.agg_compute / device_secs } else { 0.0 };
+        let jobs: Vec<JobStat> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(m, t)| JobStat {
+                model: m,
+                name: t.name.clone(),
+                arrival: t.arrival(),
+                finished: self.finish_times[m],
+                cancelled: self.job_cancelled[m],
+                cancel_requested: (!self.cancel_requested[m].is_nan())
+                    .then_some(self.cancel_requested[m]),
+                units_executed: t.completed_units(),
+            })
+            .collect();
+        Ok(RunReport {
+            makespan: self.trace.makespan,
+            utilization,
+            compute_secs: self.agg_compute,
+            transfer_secs: self.agg_transfer,
+            stall_secs: self.agg_stall,
+            prefetch_wait_secs: self.agg_wait,
+            units_executed: self.units_executed,
+            promoted_bytes: self.memory.dram_traffic.promoted_bytes,
+            demoted_bytes: self.memory.dram_traffic.demoted_bytes,
+            nvme_promoted_bytes: self.memory.nvme_traffic.promoted_bytes,
+            nvme_demoted_bytes: self.memory.nvme_traffic.demoted_bytes,
+            nvme_secs: self.agg_nvme,
+            scheduler: self.scheduler.name(),
+            jobs,
+            trace: std::mem::take(&mut self.trace),
+        })
+    }
+
+    fn on_device_free(
+        &mut self,
+        device: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
+        if !self.devices[device].alive || self.devices[device].busy {
+            return Ok(());
+        }
+        self.parked.remove(&device);
+        // 1. the front pre-claimed (prefetched) slot takes priority
+        let mut staged: Option<StagedShard> = None;
+        let unit = if let Some(slot) = self.devices[device].pipeline.pop_front() {
+            staged = slot.staged;
+            Some(slot.unit)
+        } else {
+            let eligible = self.take_eligible();
+            let resident = self.take_resident(device);
+            let ctx = PickContext {
+                now,
+                device,
+                speed: self.devices[device].spec.speed,
+                resident: Some(&resident),
+            };
+            let picked = self
+                .scheduler
+                .pick(&eligible, ctx, &mut self.rng)
+                .map(|i| eligible[i].id);
+            self.put_eligible(eligible);
+            self.put_resident(resident);
+            match picked {
+                Some(id) => {
+                    self.ready.remove(&id);
+                    obs.on_decision(device, id, false, now);
+                    Some(self.tasks[id].claim_front())
+                }
+                None => None, // park until a wake-up
+            }
+        };
+        match unit {
+            Some(unit) => self.start_unit(device, unit, staged, now, obs),
+            None => {
+                self.parked.insert(device);
+                Ok(())
+            }
+        }
+    }
+
+    /// Promote memory, account transfers/stalls, execute, schedule retire.
+    fn start_unit(
+        &mut self,
+        device: usize,
+        unit: ShardUnit,
+        staged: Option<StagedShard>,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
+        let task_shard = self.tasks[unit.model].shard(unit.shard).clone();
+        let link = self.link(device);
+        let mut t = now;
+
+        // --- parameter promotion -----------------------------------------
+        let promote_bytes = if self.options.full_state_transfers {
+            task_shard.param_bytes
+        } else {
+            task_shard.transfer_bytes(unit.phase)
+        };
+        let cached = self.devices[device].resident == Some((unit.model, unit.shard));
+        debug_assert!(
+            staged.is_none() || !cached,
+            "a staged slot can never be the already-resident shard"
+        );
+        if !cached {
+            // demote whatever was resident (a bwd unit's gradients/updated
+            // weights flow back; fwd demotion is a discard of clean weights)
+            if let Some((m, s)) = self.devices[device].resident.take() {
+                self.devices[device]
+                    .ledger
+                    .release(&Residency::ShardParams { model: m, shard: s });
+                let wb = self.devices[device].last_demote_bytes;
+                self.memory.note_demote(wb);
+                if wb > 0 {
+                    obs.on_spill(device, 0, wb, MemTier::Dram, t);
+                }
+                if !self.options.double_buffer && wb > 0 {
+                    // synchronous write-back (no overlap without DB)
+                    let dt = link.secs(wb);
+                    self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
+                    t += dt;
+                }
+                // write-back landed: the old resident's DRAM slot unpins
+                // and becomes an eviction candidate for the fetch below
+                self.memory.release_device_copy(m, s);
+            }
+            // promote: either consume the staged prefetch or transfer now
+            let stall = staged.map(|st| {
+                debug_assert_eq!((st.model, st.shard), (unit.model, unit.shard));
+                (st.ready_at - t).max(0.0)
+            });
+            // like demotions above, spill events carry the time the
+            // transfer starts
+            if promote_bytes > 0 {
+                obs.on_spill(device, promote_bytes, 0, MemTier::Dram, t);
+            }
+            let dt = match stall {
+                Some(stall) => {
+                    // the staged prefetch already fetched (and pinned) the
+                    // shard in DRAM; any NVMe leg was folded into its
+                    // transfer time, overlapped with compute like §4.6
+                    if stall > 0.0 {
+                        self.record(device, t, t + stall, unit, IntervalKind::BufferStall, obs);
+                    }
+                    stall
+                }
+                None => {
+                    // DRAM miss with nothing prefetched: stage the shard up
+                    // from NVMe synchronously, charged on the NVMe link
+                    let fetch = self.memory.fetch_to_dram(unit.model, unit.shard)?;
+                    if fetch.fetched_bytes > 0 {
+                        obs.on_spill(
+                            device,
+                            fetch.fetched_bytes,
+                            fetch.evicted_bytes,
+                            MemTier::Nvme,
+                            t,
+                        );
+                    }
+                    if fetch.secs > 0.0 {
+                        self.record(
+                            device,
+                            t,
+                            t + fetch.secs,
+                            unit,
+                            IntervalKind::NvmeTransfer,
+                            obs,
+                        );
+                        t += fetch.secs;
+                    }
+                    let dt = link.secs(promote_bytes);
+                    if dt > 0.0 {
+                        self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
+                    }
+                    dt
+                }
+            };
+            t += dt;
+            self.memory.note_promote(promote_bytes);
+            self.devices[device]
+                .ledger
+                .alloc(
+                    Residency::ShardParams { model: unit.model, shard: unit.shard },
+                    task_shard.param_bytes,
+                )?;
+            self.devices[device].resident = Some((unit.model, unit.shard));
+        }
+        // what flows back to DRAM when this residency is evicted: bwd units
+        // produce gradients/updated weights; fwd residency is clean
+        self.devices[device].last_demote_bytes = if self.options.full_state_transfers {
+            task_shard.param_bytes
+        } else {
+            match unit.phase {
+                Phase::Bwd => task_shard.bwd_transfer_bytes,
+                Phase::Fwd => 0,
+            }
+        };
+
+        // --- boundary activation ------------------------------------------
+        // Needed unless this model's previous unit ran on this device and the
+        // checkpoint never left (§4.6 bonus). We approximate with: cached
+        // shard => activation also local (fwd+bwd pairs share the device).
+        let needs_act = unit.shard > 0 || unit.phase == Phase::Bwd;
+        if needs_act && !cached {
+            let dt = link.secs(task_shard.activation_bytes);
+            if dt > 0.0 {
+                self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
+                t += dt;
+            }
+        }
+        self.devices[device]
+            .ledger
+            .alloc(Residency::Activation { model: unit.model }, 2 * task_shard.activation_bytes)?;
+
+        // --- execute -------------------------------------------------------
+        // Unit costs are calibrated on the reference GPU; faster devices in
+        // a heterogeneous pool retire the same unit proportionally sooner.
+        let dur = self.backend.execute_unit(&self.tasks[unit.model], &unit)?
+            / self.devices[device].spec.speed;
+        self.devices[device].busy = true;
+        self.free_devices -= 1;
+        self.record(device, t, t + dur, unit, IntervalKind::Compute, obs);
+        let end = t + dur;
+
+        // --- prefetch of the next up-to-k units ----------------------------
+        if self.options.double_buffer {
+            self.try_fill_prefetch(device, t, obs);
+        }
+
+        self.queue.push(end, Event::UnitRetire { device, unit });
+        Ok(())
+    }
+
+    fn on_unit_retire(
+        &mut self,
+        device: usize,
+        unit: ShardUnit,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
+        self.units_executed += 1;
+        self.devices[device].busy = false;
+        self.free_devices += 1;
+        self.devices[device]
+            .ledger
+            .release(&Residency::Activation { model: unit.model });
+        self.tasks[unit.model].retire(&unit);
+        self.backend.on_unit_retired(&self.tasks[unit.model], &unit);
+        obs.on_unit_retired(device, &unit, now);
+
+        // epoch boundary: last unit of the epoch just retired — give the
+        // backend its early-stop vote (§4.7.2)
+        let epoch_done = self.tasks[unit.model].geometry.closes_epoch(&unit);
+        if epoch_done
+            && self.tasks[unit.model].state() == TaskState::Idle
+            && self.backend.should_early_stop(&self.tasks[unit.model], unit.epoch)
+        {
+            self.tasks[unit.model].early_stop();
+        }
+
+        // a cancellation issued while this unit was in flight lands now
+        if self.cancel_pending.remove(&unit.model) {
+            self.tasks[unit.model].early_stop();
+        }
+        match self.tasks[unit.model].state() {
+            TaskState::Idle => {
+                self.ready.insert(unit.model);
+            }
+            TaskState::Done => {
+                self.finish_job(unit.model, now, obs)?;
+            }
+            TaskState::Running => {}
+        }
+
+        if self.devices[device].fail_pending {
+            self.kill_device(device, now);
+        } else {
+            self.queue.push(now, Event::DeviceFree { device });
+        }
+        // The retired model is idle again: one parked device may now have
+        // eligible work.
+        if self.tasks[unit.model].state() == TaskState::Idle {
+            self.wake_one(now);
+        }
+        Ok(())
+    }
+
+    /// Account an interval: scalar aggregates + makespan stay engine-side
+    /// (they feed the report); per-interval bookkeeping is the observer's.
+    fn record(
+        &mut self,
+        device: usize,
+        start: f64,
+        end: f64,
+        unit: ShardUnit,
+        kind: IntervalKind,
+        obs: &mut dyn EngineObserver,
+    ) {
+        if end > self.trace.makespan {
+            self.trace.makespan = end;
+        }
+        match kind {
+            IntervalKind::Compute => self.agg_compute += end - start,
+            IntervalKind::Transfer => self.agg_transfer += end - start,
+            IntervalKind::BufferStall => self.agg_stall += end - start,
+            IntervalKind::NvmeTransfer => self.agg_nvme += end - start,
+        }
+        obs.on_interval(&Interval {
+            device,
+            start,
+            end,
+            model: unit.model,
+            shard: unit.shard,
+            phase: unit.phase,
+            unit_seq: unit.seq_idx,
+            kind,
+        });
+    }
+}

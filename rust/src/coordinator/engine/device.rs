@@ -1,0 +1,203 @@
+//! Device state and lifecycle: the per-accelerator spec, the engine's
+//! runtime `DeviceState`, and the elasticity events (arrive / fail-stop)
+//! that change pool membership mid-run (§4.7's dynamic setting).
+
+use crate::coordinator::memory::DeviceLedger;
+use crate::error::{HydraError, Result};
+
+use super::core::{EngineOptions, SharpEngine};
+use super::events::Event;
+use super::prefetch::PrefetchPipeline;
+use super::TransferModel;
+
+/// Static description of one accelerator in a (possibly heterogeneous) pool.
+///
+/// The memory ledger, prefetch-zone sizing, transfer accounting and unit
+/// durations are all derived per device from this spec, so mixed pools
+/// (e.g. A4000s next to A6000s) schedule correctly: bigger devices get
+/// bigger prefetch zones, faster devices retire units sooner, and every
+/// transfer is charged against the device's own host link.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    /// Usable device memory in bytes (the ledger capacity).
+    pub mem_bytes: u64,
+    /// Compute speed relative to the reference GPU that calibrated the
+    /// `ShardDesc` unit costs (1.0 = the reference itself, 2.0 = twice as
+    /// fast). Unit durations are divided by this factor.
+    pub speed: f64,
+    /// Host-link override for this device; `None` uses
+    /// [`EngineOptions::transfer`].
+    pub link: Option<TransferModel>,
+}
+
+impl DeviceSpec {
+    /// A reference-speed device with the engine-wide default link.
+    pub fn uniform(mem_bytes: u64) -> DeviceSpec {
+        DeviceSpec { mem_bytes, speed: 1.0, link: None }
+    }
+}
+
+/// A fault-injection / elasticity event (§4.7's dynamic setting).
+#[derive(Debug, Clone, Copy)]
+pub enum ClusterEvent {
+    /// Device joins at `time` with the given memory capacity (reference
+    /// speed; use [`SharpEngine::with_devices`] for heterogeneous pools
+    /// known up front).
+    Arrive {
+        /// Virtual time the device joins.
+        time: f64,
+        /// Memory capacity of the joining device.
+        mem_bytes: u64,
+    },
+    /// Device `device` is lost at `time` (takes effect when its in-flight
+    /// unit retires; the unit itself completes — fail-stop between units).
+    Fail {
+        /// Virtual time of the loss.
+        time: f64,
+        /// Index of the failing device.
+        device: usize,
+    },
+}
+
+/// Runtime state of one device in the engine.
+#[derive(Debug)]
+pub(crate) struct DeviceState {
+    pub(crate) spec: DeviceSpec,
+    pub(crate) ledger: DeviceLedger,
+    /// Depth-k prefetch ring: pre-claimed units + staged transfers.
+    pub(crate) pipeline: PrefetchPipeline,
+    /// (model, shard) whose parameters are resident from the previous unit.
+    pub(crate) resident: Option<(usize, u32)>,
+    pub(crate) alive: bool,
+    /// Set while a unit is in flight.
+    pub(crate) busy: bool,
+    pub(crate) fail_pending: bool,
+    /// Bytes that flow back to DRAM when the resident shard is evicted.
+    pub(crate) last_demote_bytes: u64,
+}
+
+impl<'a> SharpEngine<'a> {
+    pub(crate) fn mk_device(
+        id: usize,
+        spec: DeviceSpec,
+        options: &EngineOptions,
+    ) -> Result<DeviceState> {
+        if !spec.speed.is_finite() || spec.speed <= 0.0 {
+            return Err(HydraError::Config(format!(
+                "device {id}: speed {} must be finite and positive",
+                spec.speed
+            )));
+        }
+        let mut ledger = DeviceLedger::new(id, spec.mem_bytes);
+        let zone = (spec.mem_bytes as f64 * options.buffer_frac) as u64;
+        let pipeline = PrefetchPipeline::new(
+            options.double_buffer,
+            zone,
+            options.prefetch_depth,
+            &mut ledger,
+        )?;
+        Ok(DeviceState {
+            spec,
+            ledger,
+            pipeline,
+            resident: None,
+            alive: true,
+            busy: false,
+            fail_pending: false,
+            last_demote_bytes: 0,
+        })
+    }
+
+    /// The effective host link of `device`.
+    pub(crate) fn link(&self, device: usize) -> TransferModel {
+        self.devices[device].spec.link.unwrap_or(self.options.transfer)
+    }
+
+    pub(crate) fn on_cluster_event(&mut self, i: usize, now: f64) -> Result<()> {
+        match self.cluster_events[i] {
+            ClusterEvent::Arrive { mem_bytes, .. } => {
+                let id = self.devices.len();
+                self.devices
+                    .push(Self::mk_device(id, DeviceSpec::uniform(mem_bytes), &self.options)?);
+                self.free_devices += 1;
+                self.trace.set_device_window(id, now, f64::INFINITY);
+                self.queue.push(now, Event::DeviceFree { device: id });
+            }
+            ClusterEvent::Fail { device, .. } => {
+                if device < self.devices.len() && self.devices[device].alive {
+                    if self.devices[device].busy {
+                        // fail-stop between units: take effect on retire
+                        self.devices[device].fail_pending = true;
+                    } else {
+                        self.kill_device(device, now);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Remove `device` from the pool: every pre-claimed slot returns to
+    /// its model's queue (releasing its staged DRAM pin), the resident
+    /// shard unpins, and the device's trace window closes.
+    ///
+    /// Only ever called for a non-busy device — a mid-compute loss defers
+    /// through `fail_pending` and lands here from `on_unit_retire`, after
+    /// the retire already returned the device to the free count. That is
+    /// why the unconditional `free_devices -= 1` below is safe; the
+    /// debug-build invariant check re-verifies it after every event.
+    pub(crate) fn kill_device(&mut self, device: usize, now: f64) {
+        debug_assert!(!self.devices[device].busy, "kill of a busy device");
+        let slots = self.devices[device].pipeline.clear();
+        for slot in &slots {
+            if let Some(st) = slot.staged {
+                self.memory.release_device_copy(st.model, st.shard);
+            }
+        }
+        if let Some((m, sh)) = self.devices[device].resident.take() {
+            self.memory.release_device_copy(m, sh);
+        }
+        self.devices[device].alive = false;
+        self.parked.remove(&device);
+        self.free_devices -= 1;
+        for slot in slots {
+            // return each pre-claimed unit to its model's queue; the
+            // models may now be runnable elsewhere
+            self.tasks[slot.unit.model].unclaim(&slot.unit);
+            self.ready.insert(slot.unit.model);
+            self.wake_one(now);
+        }
+        let start = self.trace.device_windows.get(&device).map(|w| w.0).unwrap_or(0.0);
+        self.trace.set_device_window(device, start, now);
+    }
+
+    /// Debug-build engine invariants, asserted after every event:
+    /// `free_devices` equals the count of alive non-busy devices, every
+    /// parked device is alive and idle, and no pipeline's staged set
+    /// exceeds its zone.
+    #[cfg(debug_assertions)]
+    pub(crate) fn assert_engine_invariants(&self) {
+        let free = self.devices.iter().filter(|d| d.alive && !d.busy).count();
+        assert_eq!(
+            free, self.free_devices,
+            "free_devices drift: counter {} vs actual {free}",
+            self.free_devices
+        );
+        for &d in &self.parked {
+            assert!(
+                self.devices[d].alive && !self.devices[d].busy,
+                "parked device {d} is dead or busy"
+            );
+        }
+        for (i, d) in self.devices.iter().enumerate() {
+            assert!(
+                d.pipeline.staged_bytes() <= d.pipeline.zone_bytes,
+                "device {i}: staged bytes exceed the prefetch zone"
+            );
+            assert!(
+                d.pipeline.len() <= d.pipeline.depth(),
+                "device {i}: pipeline holds more slots than its depth"
+            );
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! The engine's virtual-time event queue: the event kinds, the total
+//! (time, submission-seq) order, and the two queue disciplines
+//! ([`QueueKind::Heap`] default, [`QueueKind::LinearScan`] reference).
+//!
+//! Both disciplines pop events in identical (time, seq) order by
+//! construction — same key, same tie-break — which is what the
+//! heap-vs-scan equivalence tests in `rust/tests/online_sched.rs` pin.
+
+use std::collections::BinaryHeap;
+
+use crate::coordinator::unit::ShardUnit;
+
+/// Event-queue discipline for the engine's virtual-time loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Binary min-heap keyed by (time, submission order): O(log n) per
+    /// event. The default.
+    Heap,
+    /// Linear scan for the earliest event: O(n) per event. Kept as the
+    /// reference discipline for the heap-equivalence tests and the hotpath
+    /// bench; schedules are identical to [`QueueKind::Heap`] by
+    /// construction (same key, same tie-break).
+    LinearScan,
+}
+
+/// One engine event (crate-internal; the public surface is the observer).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Event {
+    /// A device finished its unit (or is ready at start-up / was woken).
+    DeviceFree { device: usize },
+    /// The unit on `device` retires at this time; model becomes idle.
+    UnitRetire { device: usize, unit: ShardUnit },
+    /// Index into the cluster-event list.
+    Cluster(usize),
+    /// A construction-time task reaches its arrival time.
+    JobArrive { model: usize },
+    /// Index into the pending-submission list.
+    JobSubmit(usize),
+    /// Tenant cancellation of `model`.
+    JobCancel { model: usize },
+}
+
+/// One queued event. Total order: earliest (time, seq) first; `Ord` is
+/// implemented *reversed* so `BinaryHeap` (a max-heap) pops the minimum.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct QueuedEvent {
+    pub(crate) time: f64,
+    pub(crate) seq: u64,
+    pub(crate) ev: Event,
+}
+
+impl PartialEq for QueuedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
+    }
+}
+
+impl Eq for QueuedEvent {}
+
+impl PartialOrd for QueuedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed: the earliest (time, seq) is the heap maximum
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The virtual-time event queue: a binary heap (default) or a linear-scan
+/// list with identical pop order, switchable via [`QueueKind`].
+#[derive(Debug)]
+pub(crate) struct EventQueue {
+    kind: QueueKind,
+    heap: BinaryHeap<QueuedEvent>,
+    list: Vec<QueuedEvent>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub(crate) fn new(kind: QueueKind) -> EventQueue {
+        EventQueue { kind, heap: BinaryHeap::new(), list: Vec::new(), seq: 0 }
+    }
+
+    pub(crate) fn push(&mut self, time: f64, ev: Event) {
+        let q = QueuedEvent { time, seq: self.seq, ev };
+        self.seq += 1;
+        match self.kind {
+            QueueKind::Heap => self.heap.push(q),
+            QueueKind::LinearScan => self.list.push(q),
+        }
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<QueuedEvent> {
+        match self.kind {
+            QueueKind::Heap => self.heap.pop(),
+            QueueKind::LinearScan => {
+                if self.list.is_empty() {
+                    return None;
+                }
+                // `Ord` is reversed, so the earliest event is the maximum.
+                let mut best = 0;
+                for i in 1..self.list.len() {
+                    if self.list[i] > self.list[best] {
+                        best = i;
+                    }
+                }
+                Some(self.list.swap_remove(best))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_and_scan_pop_in_identical_order() {
+        let times = [3.0, 1.0, 2.0, 1.0, 0.5, 2.0];
+        let mut heap = EventQueue::new(QueueKind::Heap);
+        let mut scan = EventQueue::new(QueueKind::LinearScan);
+        for &t in &times {
+            heap.push(t, Event::DeviceFree { device: 0 });
+            scan.push(t, Event::DeviceFree { device: 0 });
+        }
+        let mut last = f64::NEG_INFINITY;
+        for _ in 0..times.len() {
+            let h = heap.pop().unwrap();
+            let s = scan.pop().unwrap();
+            assert_eq!((h.time, h.seq), (s.time, s.seq));
+            // non-decreasing time; equal times pop in submission order
+            assert!(h.time >= last);
+            last = h.time;
+        }
+        assert!(heap.pop().is_none());
+        assert!(scan.pop().is_none());
+    }
+
+    #[test]
+    fn equal_times_break_ties_by_submission_order() {
+        let mut q = EventQueue::new(QueueKind::Heap);
+        q.push(1.0, Event::DeviceFree { device: 7 });
+        q.push(1.0, Event::DeviceFree { device: 9 });
+        assert_eq!(q.pop().unwrap().seq, 0);
+        assert_eq!(q.pop().unwrap().seq, 1);
+    }
+}

@@ -1,0 +1,208 @@
+//! Job lifecycle: online submissions and cancellations, arrival gating,
+//! finish bookkeeping, and the per-job outcome statistics
+//! ([`JobStat`]) the multi-tenant setting reports.
+
+use crate::coordinator::observer::EngineObserver;
+use crate::coordinator::task::{ModelTask, TaskState};
+use crate::error::{HydraError, Result};
+
+use super::core::SharpEngine;
+use super::events::Event;
+
+/// A tenant-facing job-queue event: submissions and cancellations that take
+/// effect *while the engine runs* (the online multi-tenant setting).
+///
+/// Jobs known up front carry their arrival via
+/// [`ModelTask::with_arrival`]; `Submit` additionally allows tasks the
+/// engine has never seen (e.g. a tenant showing up mid-run), and `Cancel`
+/// revokes a job at unit granularity: an in-flight unit completes,
+/// everything else is dropped.
+#[derive(Debug, Clone)]
+pub enum JobEvent {
+    /// Submit `task` at `time`. The task's id must equal the number of
+    /// tasks the engine will know at that point (construction tasks +
+    /// earlier submissions), i.e. ids follow submission order.
+    Submit {
+        /// Virtual time of the submission.
+        time: f64,
+        /// The job being submitted.
+        task: ModelTask,
+    },
+    /// Cancel `model` at `time`. Idempotent; cancelling a finished job is a
+    /// no-op.
+    Cancel {
+        /// Virtual time of the cancellation.
+        time: f64,
+        /// Task id to cancel.
+        model: usize,
+    },
+}
+
+/// Per-job outcome statistics for the online setting.
+#[derive(Debug, Clone)]
+pub struct JobStat {
+    /// Task id.
+    pub model: usize,
+    /// Task name (tenant-facing tag).
+    pub name: String,
+    /// Arrival (submission) time.
+    pub arrival: f64,
+    /// Virtual time the job finished (last unit retired, or the moment a
+    /// cancellation took effect). `NaN` if the run ended with the job
+    /// unfinished (e.g. every device failed).
+    pub finished: f64,
+    /// Whether the job was cancelled.
+    pub cancelled: bool,
+    /// Earliest tenant cancel request, if any was issued — recorded even
+    /// when the request was a no-op because the job had already finished
+    /// (`cancelled` stays false then). This is how
+    /// `Session::cancel_at`-after-completion is observable in the report
+    /// instead of vanishing silently.
+    pub cancel_requested: Option<f64>,
+    /// Units this job actually executed.
+    pub units_executed: u64,
+}
+
+impl JobStat {
+    /// Job latency (finish - arrival), clamped at 0 so a job cancelled
+    /// *before* its arrival reports zero rather than a negative latency;
+    /// `NaN` for unfinished jobs.
+    pub fn latency(&self) -> f64 {
+        let l = self.finished - self.arrival;
+        // NaN compares false, so unfinished jobs keep their NaN latency
+        if l < 0.0 {
+            0.0
+        } else {
+            l
+        }
+    }
+}
+
+impl<'a> SharpEngine<'a> {
+    /// Mark `model` finished at `now` (first transition only) and release
+    /// its homed parameters from the hierarchy — online streams with churn
+    /// would otherwise exhaust the tiers and reject later submissions.
+    /// Releasing twice is a real error (the old pool saturated silently).
+    pub(crate) fn finish_job(
+        &mut self,
+        model: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
+        if self.finish_times[model].is_nan() {
+            self.finish_times[model] = now;
+            let bytes = Self::shard_bytes(&self.tasks[model]);
+            self.memory.unhome_model(model, &bytes)?;
+            obs.on_job_finished(model, now, self.job_cancelled[model]);
+        }
+        Ok(())
+    }
+
+    pub(crate) fn on_job_arrive(
+        &mut self,
+        model: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) {
+        self.arrived[model] = true;
+        // a job cancelled before its arrival never becomes eligible: no
+        // arrival notification after its on_job_finished(cancelled=true)
+        if !self.job_cancelled[model] && self.tasks[model].state() == TaskState::Idle {
+            obs.on_job_arrived(model, &self.tasks[model].name, now);
+            self.ready.insert(model);
+            self.wake_one(now);
+        }
+    }
+
+    pub(crate) fn on_job_submit(
+        &mut self,
+        idx: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
+        let Some(task) = self.pending_submissions[idx].take() else {
+            return Ok(());
+        };
+        let id = self.tasks.len();
+        if task.id != id {
+            return Err(HydraError::Sched(format!(
+                "submitted task has id {} but {id} tasks are registered \
+                 (ids must follow submission order)",
+                task.id
+            )));
+        }
+        self.memory.home_model(task.id, &Self::shard_bytes(&task))?;
+        self.tasks.push(task);
+        self.job_cancelled.push(false);
+        self.cancel_requested.push(f64::NAN);
+        self.finish_times.push(f64::NAN);
+        // a submission may carry its own later arrival time; gate on it
+        let arrival = self.tasks[id].arrival();
+        if arrival > now {
+            self.arrived.push(false);
+            self.queue.push(arrival, Event::JobArrive { model: id });
+        } else {
+            self.arrived.push(true);
+            obs.on_job_arrived(id, &self.tasks[id].name, now);
+            if self.tasks[id].state() == TaskState::Idle {
+                self.ready.insert(id);
+                self.wake_one(now);
+            }
+        }
+        Ok(())
+    }
+
+    pub(crate) fn on_job_cancel(
+        &mut self,
+        model: usize,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
+        if model >= self.tasks.len() {
+            return Err(HydraError::Sched(format!(
+                "cancel of unknown model {model}"
+            )));
+        }
+        // every request is recorded (earliest wins), even the no-op ones
+        // against already-finished jobs — the report stays auditable
+        if self.cancel_requested[model].is_nan() {
+            self.cancel_requested[model] = now;
+        }
+        if self.job_cancelled[model] || self.tasks[model].state() == TaskState::Done {
+            return Ok(()); // idempotent; cancelling a finished job is a no-op
+        }
+        self.job_cancelled[model] = true;
+        match self.tasks[model].state() {
+            TaskState::Idle => {
+                self.ready.remove(&model);
+                self.tasks[model].early_stop();
+                self.finish_job(model, now, obs)?;
+            }
+            TaskState::Running => {
+                // The claim is either a pre-claimed prefetch slot (revoked
+                // immediately, releasing its staged DRAM pin) or a
+                // genuinely in-flight unit (completes first; cancellation
+                // is unit-granular).
+                let mut revoked = false;
+                for d in 0..self.devices.len() {
+                    if let Some(slot) = self.devices[d].pipeline.remove_model(model) {
+                        if let Some(st) = slot.staged {
+                            // the staged fetch pinned the shard in DRAM
+                            self.memory.release_device_copy(st.model, st.shard);
+                        }
+                        self.tasks[model].unclaim(&slot.unit);
+                        self.tasks[model].early_stop();
+                        self.finish_job(model, now, obs)?;
+                        revoked = true;
+                        break;
+                    }
+                }
+                if !revoked {
+                    self.cancel_pending.insert(model);
+                }
+            }
+            TaskState::Done => {}
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,87 @@
+//! SHARP — Shard Alternator Parallelism (§4.4): the event-driven engine
+//! that blends the shard-unit queues of many models over a pool of devices.
+//!
+//! The engine runs in *virtual time*: every decision (eligibility, memory
+//! promotion/demotion, prefetch staging, stalls) is identical whether the
+//! execution backend is the discrete-event cost model (`SimBackend`) or
+//! the real PJRT runtime (`RealBackend`, which reports measured wallclock
+//! as the unit duration). That is what lets one engine both *reproduce the
+//! paper's figures* at 8-GPU scale and *actually train* models on this
+//! machine (DESIGN.md §1).
+//!
+//! Beyond the paper's batch setting, the engine is **online and
+//! multi-tenant**: jobs carry arrival times
+//! ([`crate::coordinator::task::ModelTask::with_arrival`]), can be
+//! submitted and cancelled while the engine runs ([`JobEvent`]), and
+//! devices may be **heterogeneous** ([`DeviceSpec`]: per-device memory,
+//! relative compute speed, and host-link bandwidth). Per-job latency
+//! statistics come back in [`RunReport::jobs`].
+//!
+//! Host memory is a tiered [`crate::coordinator::memory::MemoryHierarchy`]:
+//! with an NVMe backing tier configured
+//! ([`crate::coordinator::memory::MemoryOptions`]), model sets larger than
+//! DRAM still run — DRAM acts as an evicting cache, DRAM misses stage
+//! NVMe->DRAM->HBM (overlapped with compute by the prefetch pipeline when
+//! staged, synchronous
+//! [`crate::coordinator::metrics::IntervalKind::NvmeTransfer`] intervals
+//! otherwise), and per-tier traffic lands in
+//! [`RunReport::nvme_promoted_bytes`] / [`RunReport::nvme_demoted_bytes`].
+//! Without an NVMe tier the engine is bit-for-bit the legacy two-tier
+//! system.
+//!
+//! §4.6's double buffer is generalized to a **depth-k prefetch pipeline**
+//! ([`PrefetchPipeline`], [`EngineOptions::prefetch_depth`]): each
+//! device's protected zone holds a small ring of staged slots, the
+//! scheduler pre-claims up to k upcoming units, and the NVMe->DRAM and
+//! DRAM->HBM legs of different slots overlap with at most one in-flight
+//! transfer per link (queueing surfaced as
+//! [`RunReport::prefetch_wait_secs`]). Depth 1 is the paper's classic
+//! double buffer, decision for decision.
+//!
+//! The dispatch hot path is incremental: a binary-heap event queue
+//! (O(log n) push/pop), a ready-set of eligible models, a parked-set of
+//! idle devices, and engine-owned scratch snapshot buffers (no per-decision
+//! allocation). Every engine event additionally streams through an
+//! [`crate::coordinator::observer::EngineObserver`]
+//! ([`SharpEngine::run_with`]): trace bookkeeping is just one observer
+//! impl, and live progress/gantt streaming for online runs is another.
+//! [`QueueKind::LinearScan`] keeps the O(n) event-selection discipline
+//! available as a reference implementation — the two produce identical
+//! schedules (property- and equivalence-tested in rust/tests) because both
+//! pop events in (time, submission-order) order.
+//!
+//! Module family (one file per concern; `coordinator::sharp` re-exports
+//! this surface for compatibility):
+//!
+//! | module | owns |
+//! |---|---|
+//! | [`events`] | [`QueueKind`], the event kinds, the (time, seq) queue |
+//! | [`device`] | [`DeviceSpec`], device runtime state, [`ClusterEvent`] arrive/fail lifecycle, engine invariants |
+//! | [`jobs`]   | [`JobEvent`] submit/cancel, arrival gating, finish bookkeeping, [`JobStat`] |
+//! | [`prefetch`] | the depth-k [`PrefetchPipeline`] (zone, slots, staging-link clocks) |
+//! | [`core`](self::core) | [`SharpEngine`] construction, the run loop, unit dispatch, [`RunReport`] |
+//!
+//! Invariants enforced here (property-tested in rust/tests, and — for the
+//! free/parked/zone accounting — asserted after every event in debug
+//! builds):
+//!   1. sequential order of a model's shard units (MILP constraint (a)),
+//!   2. device isolation — one unit per device at a time (b, c),
+//!   3. model isolation — one in-flight or pre-claimed unit per model,
+//!   4. ledgers never exceed device capacity; staged sets never exceed
+//!      the prefetch zone,
+//!   5. every unit executes exactly once (unless its job is cancelled),
+//!   6. no unit of a job starts before the job's arrival time.
+
+pub mod core;
+pub mod device;
+pub mod events;
+pub mod jobs;
+pub mod prefetch;
+
+pub use self::core::{EngineOptions, ParallelMode, RunReport, SharpEngine};
+pub use self::device::{ClusterEvent, DeviceSpec};
+pub use self::events::QueueKind;
+pub use self::jobs::{JobEvent, JobStat};
+pub use self::prefetch::{PrefetchPipeline, PrefetchSlot, StagedShard};
+
+pub use crate::coordinator::memory::TransferModel;

@@ -1,12 +1,13 @@
 //! The Hydra coordinator — the paper's L3 contribution.
 //!
 //! Components (paper §3): the Automated Partitioner ([`partitioner`]), the
-//! Memory Manager ([`memory`], [`buffer`]) and the Scheduler ([`sched`],
-//! [`sharp`]), plus streaming run observation ([`observer`]). The
-//! user-facing API is [`crate::session::Session`]; the paper's Figure-4
-//! style [`ModelOrchestrator`] remains as a deprecated shim over it.
+//! Memory Manager ([`memory`], [`engine::prefetch`]) and the Scheduler
+//! ([`sched`], [`engine`] — re-exported as [`sharp`]), plus streaming run
+//! observation ([`observer`]). The user-facing API is
+//! [`crate::session::Session`]; the paper's Figure-4 style
+//! [`ModelOrchestrator`] remains as a deprecated shim over it.
 
-pub mod buffer;
+pub mod engine;
 pub mod memory;
 pub mod metrics;
 pub mod observer;

@@ -1,1260 +1,15 @@
-//! SHARP — Shard Alternator Parallelism (§4.4): the event-driven engine
-//! that blends the shard-unit queues of many models over a pool of devices.
+//! Compatibility surface of the SHARP engine.
 //!
-//! The engine runs in *virtual time*: every decision (eligibility, memory
-//! promotion/demotion, double-buffer prefetch, stalls) is identical whether
-//! the execution backend is the discrete-event cost model (`SimBackend`) or
-//! the real PJRT runtime (`RealBackend`, which reports measured wallclock as
-//! the unit duration). That is what lets one engine both *reproduce the
-//! paper's figures* at 8-GPU scale and *actually train* models on this
-//! machine (DESIGN.md §1).
-//!
-//! Beyond the paper's batch setting, the engine is **online and
-//! multi-tenant**: jobs carry arrival times ([`ModelTask::with_arrival`]),
-//! can be submitted and cancelled while the engine runs ([`JobEvent`]), and
-//! devices may be **heterogeneous** ([`DeviceSpec`]: per-device memory,
-//! relative compute speed, and host-link bandwidth). Per-job latency
-//! statistics come back in [`RunReport::jobs`].
-//!
-//! Host memory is a tiered [`MemoryHierarchy`]
-//! ([`crate::coordinator::memory`]): with an NVMe backing tier configured
-//! ([`MemoryOptions`]), model sets larger than DRAM still run — DRAM acts
-//! as an evicting cache, DRAM misses stage NVMe->DRAM->HBM (overlapped
-//! with compute by the double-buffer when prefetched, synchronous
-//! [`IntervalKind::NvmeTransfer`] intervals otherwise), and per-tier
-//! traffic lands in [`RunReport::nvme_promoted_bytes`] /
-//! [`RunReport::nvme_demoted_bytes`]. Without an NVMe tier the engine is
-//! bit-for-bit the legacy two-tier system.
-//!
-//! The dispatch hot path is incremental: a binary-heap event queue
-//! (O(log n) push/pop), a ready-set of eligible models, and a parked-set of
-//! idle devices replace the seed engine's linear scans over all devices and
-//! all tasks on every decision. Every engine event additionally streams
-//! through an [`EngineObserver`] ([`SharpEngine::run_with`]): trace
-//! bookkeeping is just one observer impl, and live progress/gantt streaming
-//! for online runs is another. [`QueueKind::LinearScan`] keeps the O(n)
-//! event-selection discipline available as a reference implementation — the
-//! two produce identical schedules (property- and equivalence-tested in
-//! rust/tests) because both pop events in (time, submission-order) order.
-//!
-//! Invariants enforced here (and property-tested in rust/tests):
-//!   1. sequential order of a model's shard units (MILP constraint (a)),
-//!   2. device isolation — one unit per device at a time (b, c),
-//!   3. model isolation — one in-flight unit per model,
-//!   4. ledgers never exceed device capacity,
-//!   5. every unit executes exactly once (unless its job is cancelled),
-//!   6. no unit of a job starts before the job's arrival time.
+//! The implementation moved to [`crate::coordinator::engine`], split into
+//! one module per concern — `events` (queue), `device` (specs, lifecycle),
+//! `jobs` (submit/cancel/finish), `prefetch` (the depth-k pipeline that
+//! absorbed the old `buffer.rs` double buffer) and `core` (the engine and
+//! its run loop). This module re-exports the whole public surface so every
+//! existing `coordinator::sharp::...` call site compiles unchanged.
 
-use std::collections::{BTreeSet, BinaryHeap};
-
-use crate::coordinator::buffer::DoubleBuffer;
-use crate::coordinator::memory::{
-    DeviceLedger, MemTier, MemoryHierarchy, MemoryOptions, Residency,
+pub use crate::coordinator::engine::{
+    ClusterEvent, DeviceSpec, EngineOptions, JobEvent, JobStat, ParallelMode,
+    PrefetchPipeline, PrefetchSlot, QueueKind, RunReport, SharpEngine, StagedShard,
 };
-use crate::coordinator::metrics::{Interval, IntervalKind, Trace};
-use crate::coordinator::observer::{EngineObserver, NoopObserver, Tee, TraceRecorder};
-use crate::coordinator::sched::{PickContext, Scheduler};
-use crate::coordinator::task::{ModelSnapshot, ModelTask, TaskState};
-use crate::coordinator::unit::{Phase, ShardUnit};
-use crate::error::{HydraError, Result};
-use crate::exec::ExecutionBackend;
-use crate::util::rng::Rng;
 
 pub use crate::coordinator::memory::TransferModel;
-
-/// Static description of one accelerator in a (possibly heterogeneous) pool.
-///
-/// The memory ledger, double-buffer zone sizing, transfer accounting and
-/// unit durations are all derived per device from this spec, so mixed pools
-/// (e.g. A4000s next to A6000s) schedule correctly: bigger devices get
-/// bigger prefetch zones, faster devices retire units sooner, and every
-/// transfer is charged against the device's own host link.
-#[derive(Debug, Clone, Copy)]
-pub struct DeviceSpec {
-    /// Usable device memory in bytes (the ledger capacity).
-    pub mem_bytes: u64,
-    /// Compute speed relative to the reference GPU that calibrated the
-    /// `ShardDesc` unit costs (1.0 = the reference itself, 2.0 = twice as
-    /// fast). Unit durations are divided by this factor.
-    pub speed: f64,
-    /// Host-link override for this device; `None` uses
-    /// [`EngineOptions::transfer`].
-    pub link: Option<TransferModel>,
-}
-
-impl DeviceSpec {
-    /// A reference-speed device with the engine-wide default link.
-    pub fn uniform(mem_bytes: u64) -> DeviceSpec {
-        DeviceSpec { mem_bytes, speed: 1.0, link: None }
-    }
-}
-
-/// Parallelism mode: SHARP blending vs the spilling-only ablation.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ParallelMode {
-    /// Full SHARP: all idle models are eligible on any free device.
-    Sharp,
-    /// Ablation (Table 3 "without SHARP"): models run one-after-another;
-    /// only the lowest-id unfinished (arrived) model is ever eligible, so
-    /// sequential shard dependencies leave at most one device busy.
-    Sequential,
-}
-
-/// Event-queue discipline for the engine's virtual-time loop.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum QueueKind {
-    /// Binary min-heap keyed by (time, submission order): O(log n) per
-    /// event. The default.
-    Heap,
-    /// Linear scan for the earliest event: O(n) per event. Kept as the
-    /// reference discipline for the heap-equivalence tests and the hotpath
-    /// bench; schedules are identical to [`QueueKind::Heap`] by
-    /// construction (same key, same tie-break).
-    LinearScan,
-}
-
-/// Engine configuration.
-#[derive(Debug, Clone)]
-pub struct EngineOptions {
-    /// SHARP blending vs the sequential ablation.
-    pub mode: ParallelMode,
-    /// Enable §4.6 double-buffered prefetch.
-    pub double_buffer: bool,
-    /// Fraction of device memory reserved as the prefetch zone (§4.6).
-    pub buffer_frac: f64,
-    /// Engine-wide DRAM<->device link (overridable per device via
-    /// [`DeviceSpec::link`]).
-    pub transfer: TransferModel,
-    /// Seed for the engine's RNG stream (Random scheduler etc.).
-    pub seed: u64,
-    /// Record per-interval trace entries into the report
-    /// (`RunReport::trace`). Implemented as an opt-in
-    /// [`crate::coordinator::observer::TraceRecorder`] observer, so turning
-    /// it off removes the bookkeeping from the hot path entirely (disable
-    /// for very long sims to bound memory; scalar aggregates are still
-    /// collected).
-    pub record_intervals: bool,
-    /// Paper-fidelity mode: spilling moves the *full* shard state (weights +
-    /// gradients + optimizer state) instead of weights-only. Hydra's default
-    /// (false) keeps optimizer state in DRAM with a Rust-side update — the
-    /// same design the real backend implements — which shrinks transfer
-    /// volume ~3x. Used by the Table 3 ablation to recover the paper's
-    /// no-double-buffering penalty.
-    pub full_state_transfers: bool,
-    /// Event-queue discipline (heap by default; linear scan as reference).
-    pub queue: QueueKind,
-}
-
-impl Default for EngineOptions {
-    fn default() -> Self {
-        EngineOptions {
-            mode: ParallelMode::Sharp,
-            double_buffer: true,
-            buffer_frac: 0.05,
-            transfer: TransferModel::pcie_gen3(),
-            seed: 0,
-            record_intervals: true,
-            full_state_transfers: false,
-            queue: QueueKind::Heap,
-        }
-    }
-}
-
-/// A fault-injection / elasticity event (§4.7's dynamic setting).
-#[derive(Debug, Clone, Copy)]
-pub enum ClusterEvent {
-    /// Device joins at `time` with the given memory capacity (reference
-    /// speed; use [`SharpEngine::with_devices`] for heterogeneous pools
-    /// known up front).
-    Arrive {
-        /// Virtual time the device joins.
-        time: f64,
-        /// Memory capacity of the joining device.
-        mem_bytes: u64,
-    },
-    /// Device `device` is lost at `time` (takes effect when its in-flight
-    /// unit retires; the unit itself completes — fail-stop between units).
-    Fail {
-        /// Virtual time of the loss.
-        time: f64,
-        /// Index of the failing device.
-        device: usize,
-    },
-}
-
-/// A tenant-facing job-queue event: submissions and cancellations that take
-/// effect *while the engine runs* (the online multi-tenant setting).
-///
-/// Jobs known up front carry their arrival via [`ModelTask::with_arrival`];
-/// `Submit` additionally allows tasks the engine has never seen (e.g. a
-/// tenant showing up mid-run), and `Cancel` revokes a job at unit
-/// granularity: an in-flight unit completes, everything else is dropped.
-#[derive(Debug, Clone)]
-pub enum JobEvent {
-    /// Submit `task` at `time`. The task's id must equal the number of
-    /// tasks the engine will know at that point (construction tasks +
-    /// earlier submissions), i.e. ids follow submission order.
-    Submit {
-        /// Virtual time of the submission.
-        time: f64,
-        /// The job being submitted.
-        task: ModelTask,
-    },
-    /// Cancel `model` at `time`. Idempotent; cancelling a finished job is a
-    /// no-op.
-    Cancel {
-        /// Virtual time of the cancellation.
-        time: f64,
-        /// Task id to cancel.
-        model: usize,
-    },
-}
-
-/// Per-job outcome statistics for the online setting.
-#[derive(Debug, Clone)]
-pub struct JobStat {
-    /// Task id.
-    pub model: usize,
-    /// Task name (tenant-facing tag).
-    pub name: String,
-    /// Arrival (submission) time.
-    pub arrival: f64,
-    /// Virtual time the job finished (last unit retired, or the moment a
-    /// cancellation took effect). `NaN` if the run ended with the job
-    /// unfinished (e.g. every device failed).
-    pub finished: f64,
-    /// Whether the job was cancelled.
-    pub cancelled: bool,
-    /// Earliest tenant cancel request, if any was issued — recorded even
-    /// when the request was a no-op because the job had already finished
-    /// (`cancelled` stays false then). This is how
-    /// `Session::cancel_at`-after-completion is observable in the report
-    /// instead of vanishing silently.
-    pub cancel_requested: Option<f64>,
-    /// Units this job actually executed.
-    pub units_executed: u64,
-}
-
-impl JobStat {
-    /// Job latency (finish - arrival), clamped at 0 so a job cancelled
-    /// *before* its arrival reports zero rather than a negative latency;
-    /// `NaN` for unfinished jobs.
-    pub fn latency(&self) -> f64 {
-        let l = self.finished - self.arrival;
-        // NaN compares false, so unfinished jobs keep their NaN latency
-        if l < 0.0 {
-            0.0
-        } else {
-            l
-        }
-    }
-}
-
-#[derive(Debug)]
-struct DeviceState {
-    spec: DeviceSpec,
-    ledger: DeviceLedger,
-    buffer: DoubleBuffer,
-    /// (model, shard) whose parameters are resident from the previous unit.
-    resident: Option<(usize, u32)>,
-    /// Unit pre-claimed for this device by the double-buffer path.
-    pending: Option<ShardUnit>,
-    alive: bool,
-    /// Set while a unit is in flight.
-    busy: bool,
-    fail_pending: bool,
-    /// Bytes that flow back to DRAM when the resident shard is evicted.
-    last_demote_bytes: u64,
-}
-
-#[derive(Debug, Clone, Copy)]
-enum Event {
-    /// A device finished its unit (or is ready at start-up / was woken).
-    DeviceFree { device: usize },
-    /// The unit on `device` retires at this time; model becomes idle.
-    UnitRetire { device: usize, unit: ShardUnit },
-    /// Index into the cluster-event list.
-    Cluster(usize),
-    /// A construction-time task reaches its arrival time.
-    JobArrive { model: usize },
-    /// Index into the pending-submission list.
-    JobSubmit(usize),
-    /// Tenant cancellation of `model`.
-    JobCancel { model: usize },
-}
-
-/// One queued event. Total order: earliest (time, seq) first; `Ord` is
-/// implemented *reversed* so `BinaryHeap` (a max-heap) pops the minimum.
-#[derive(Debug, Clone, Copy)]
-struct QueuedEvent {
-    time: f64,
-    seq: u64,
-    ev: Event,
-}
-
-impl PartialEq for QueuedEvent {
-    fn eq(&self, other: &Self) -> bool {
-        self.time.total_cmp(&other.time).is_eq() && self.seq == other.seq
-    }
-}
-
-impl Eq for QueuedEvent {}
-
-impl PartialOrd for QueuedEvent {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for QueuedEvent {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // reversed: the earliest (time, seq) is the heap maximum
-        other
-            .time
-            .total_cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// The virtual-time event queue: a binary heap (default) or a linear-scan
-/// list with identical pop order, switchable via [`QueueKind`].
-#[derive(Debug)]
-struct EventQueue {
-    kind: QueueKind,
-    heap: BinaryHeap<QueuedEvent>,
-    list: Vec<QueuedEvent>,
-    seq: u64,
-}
-
-impl EventQueue {
-    fn new(kind: QueueKind) -> EventQueue {
-        EventQueue { kind, heap: BinaryHeap::new(), list: Vec::new(), seq: 0 }
-    }
-
-    fn push(&mut self, time: f64, ev: Event) {
-        let q = QueuedEvent { time, seq: self.seq, ev };
-        self.seq += 1;
-        match self.kind {
-            QueueKind::Heap => self.heap.push(q),
-            QueueKind::LinearScan => self.list.push(q),
-        }
-    }
-
-    fn pop(&mut self) -> Option<QueuedEvent> {
-        match self.kind {
-            QueueKind::Heap => self.heap.pop(),
-            QueueKind::LinearScan => {
-                if self.list.is_empty() {
-                    return None;
-                }
-                // `Ord` is reversed, so the earliest event is the maximum.
-                let mut best = 0;
-                for i in 1..self.list.len() {
-                    if self.list[i] > self.list[best] {
-                        best = i;
-                    }
-                }
-                Some(self.list.swap_remove(best))
-            }
-        }
-    }
-}
-
-/// Result summary of an engine run.
-#[derive(Debug, Clone)]
-pub struct RunReport {
-    /// Full execution trace (intervals, device windows, makespan).
-    pub trace: Trace,
-    /// Virtual time the last interval ends.
-    pub makespan: f64,
-    /// Compute seconds / available device seconds.
-    pub utilization: f64,
-    /// Total shard-unit compute seconds.
-    pub compute_secs: f64,
-    /// Total synchronous transfer seconds.
-    pub transfer_secs: f64,
-    /// Total double-buffer stall seconds.
-    pub stall_secs: f64,
-    /// Shard units retired.
-    pub units_executed: u64,
-    /// DRAM->device promotion traffic.
-    pub promoted_bytes: u64,
-    /// Device->DRAM demotion traffic.
-    pub demoted_bytes: u64,
-    /// NVMe->DRAM fetch traffic (zero without an NVMe tier).
-    pub nvme_promoted_bytes: u64,
-    /// DRAM->NVMe eviction write-back traffic.
-    pub nvme_demoted_bytes: u64,
-    /// Seconds devices spent blocked on synchronous NVMe staging.
-    pub nvme_secs: f64,
-    /// Name of the scheduling policy used.
-    pub scheduler: &'static str,
-    /// Per-job arrival/finish/cancellation statistics (online setting;
-    /// batch runs have arrival 0.0 everywhere).
-    pub jobs: Vec<JobStat>,
-}
-
-/// The SHARP engine.
-pub struct SharpEngine<'a> {
-    /// The model tasks (public for post-run inspection in tests/figures).
-    pub tasks: Vec<ModelTask>,
-    devices: Vec<DeviceState>,
-    memory: MemoryHierarchy,
-    options: EngineOptions,
-    scheduler: Box<dyn Scheduler>,
-    backend: &'a mut dyn ExecutionBackend,
-    cluster_events: Vec<ClusterEvent>,
-    job_events: Vec<JobEvent>,
-    // run state
-    queue: EventQueue,
-    pending_submissions: Vec<Option<ModelTask>>,
-    /// Models whose front unit is eligible right now (arrived + idle).
-    ready: BTreeSet<usize>,
-    /// Per-model: has the arrival time passed?
-    arrived: Vec<bool>,
-    /// Per-model: has a cancellation been issued?
-    job_cancelled: Vec<bool>,
-    /// Per-model earliest cancel-request time (NaN = never requested);
-    /// recorded even for no-op requests against finished jobs.
-    cancel_requested: Vec<f64>,
-    /// Cancellations waiting for an in-flight unit to retire.
-    cancel_pending: BTreeSet<usize>,
-    /// Per-model finish time (NaN until finished).
-    finish_times: Vec<f64>,
-    /// Devices that are alive, idle, and found no work at their last wake.
-    parked: BTreeSet<usize>,
-    /// Count of alive devices not currently computing.
-    free_devices: usize,
-    trace: Trace,
-    units_executed: u64,
-    agg_compute: f64,
-    agg_transfer: f64,
-    agg_stall: f64,
-    agg_nvme: f64,
-    rng: Rng,
-}
-
-impl<'a> SharpEngine<'a> {
-    /// Build an engine over a homogeneous pool (`device_mem[i]` bytes each,
-    /// reference speed, engine-wide link). The seed API; see
-    /// [`SharpEngine::with_devices`] for heterogeneous pools. `memory` is
-    /// either a bare `dram_bytes: u64` (the legacy two-tier setup) or a
-    /// full [`MemoryOptions`] with an NVMe backing tier.
-    pub fn new(
-        tasks: Vec<ModelTask>,
-        device_mem: &[u64],
-        memory: impl Into<MemoryOptions>,
-        scheduler: Box<dyn Scheduler>,
-        backend: &'a mut dyn ExecutionBackend,
-        options: EngineOptions,
-    ) -> Result<SharpEngine<'a>> {
-        let specs: Vec<DeviceSpec> =
-            device_mem.iter().map(|&m| DeviceSpec::uniform(m)).collect();
-        Self::with_devices(tasks, &specs, memory, scheduler, backend, options)
-    }
-
-    /// Build an engine over an explicit (possibly heterogeneous) device
-    /// pool. Tasks must be partitioned so every shard fits the smallest
-    /// device (the §4.3 "smallest-memory GPU" contract — see
-    /// [`crate::sim::build_tasks_pool`]).
-    pub fn with_devices(
-        tasks: Vec<ModelTask>,
-        specs: &[DeviceSpec],
-        memory: impl Into<MemoryOptions>,
-        scheduler: Box<dyn Scheduler>,
-        backend: &'a mut dyn ExecutionBackend,
-        options: EngineOptions,
-    ) -> Result<SharpEngine<'a>> {
-        if specs.is_empty() {
-            return Err(HydraError::Config("no devices".into()));
-        }
-        for (m, t) in tasks.iter().enumerate() {
-            if t.id != m {
-                return Err(HydraError::Config(format!(
-                    "task {m} has id {} (ids must be dense and in order)",
-                    t.id
-                )));
-            }
-        }
-        let mut memory = MemoryHierarchy::new(memory);
-        for t in &tasks {
-            memory.home_model(t.id, &Self::shard_bytes(t))?;
-        }
-        let mut devices = Vec::new();
-        for (id, &spec) in specs.iter().enumerate() {
-            devices.push(Self::mk_device(id, spec, &options)?);
-        }
-        let rng = Rng::new(options.seed);
-        let n_tasks = tasks.len();
-        let n_devices = devices.len();
-        Ok(SharpEngine {
-            tasks,
-            devices,
-            memory,
-            options: options.clone(),
-            scheduler,
-            backend,
-            cluster_events: Vec::new(),
-            job_events: Vec::new(),
-            queue: EventQueue::new(options.queue),
-            pending_submissions: Vec::new(),
-            ready: BTreeSet::new(),
-            arrived: vec![false; n_tasks],
-            job_cancelled: vec![false; n_tasks],
-            cancel_requested: vec![f64::NAN; n_tasks],
-            cancel_pending: BTreeSet::new(),
-            finish_times: vec![f64::NAN; n_tasks],
-            parked: BTreeSet::new(),
-            free_devices: n_devices,
-            trace: Trace::default(),
-            units_executed: 0,
-            agg_compute: 0.0,
-            agg_transfer: 0.0,
-            agg_stall: 0.0,
-            agg_nvme: 0.0,
-            rng,
-        })
-    }
-
-    /// Per-shard home-tier footprints of a task (what the hierarchy homes
-    /// and unhomes).
-    fn shard_bytes(task: &ModelTask) -> Vec<u64> {
-        task.shards.iter().map(|s| s.param_bytes).collect()
-    }
-
-    fn mk_device(id: usize, spec: DeviceSpec, options: &EngineOptions) -> Result<DeviceState> {
-        if !spec.speed.is_finite() || spec.speed <= 0.0 {
-            return Err(HydraError::Config(format!(
-                "device {id}: speed {} must be finite and positive",
-                spec.speed
-            )));
-        }
-        let mut ledger = DeviceLedger::new(id, spec.mem_bytes);
-        let zone = (spec.mem_bytes as f64 * options.buffer_frac) as u64;
-        let buffer = DoubleBuffer::new(options.double_buffer, zone, &mut ledger)?;
-        Ok(DeviceState {
-            spec,
-            ledger,
-            buffer,
-            resident: None,
-            pending: None,
-            alive: true,
-            busy: false,
-            fail_pending: false,
-            last_demote_bytes: 0,
-        })
-    }
-
-    /// Register arrival/failure events before `run`.
-    pub fn with_cluster_events(mut self, events: Vec<ClusterEvent>) -> Self {
-        self.cluster_events = events;
-        self
-    }
-
-    /// Register online job submissions/cancellations before `run`.
-    pub fn with_job_events(mut self, events: Vec<JobEvent>) -> Self {
-        self.job_events = events;
-        self
-    }
-
-    /// The effective host link of `device`.
-    fn link(&self, device: usize) -> TransferModel {
-        self.devices[device].spec.link.unwrap_or(self.options.transfer)
-    }
-
-    /// Eligible model snapshots under the current parallel mode. Built from
-    /// the incrementally-maintained ready-set, so the cost is
-    /// O(|eligible|), not O(|all tasks|).
-    fn eligible(&self) -> Vec<ModelSnapshot> {
-        match self.options.mode {
-            ParallelMode::Sharp => self
-                .ready
-                .iter()
-                .filter_map(|&id| ModelSnapshot::of(&self.tasks[id]))
-                .collect(),
-            ParallelMode::Sequential => {
-                // strictly one model in flight across the whole pool: while
-                // any model runs, nothing else is eligible (otherwise a
-                // lower-id job arriving mid-unit would put two devices to
-                // work and corrupt the no-SHARP ablation)
-                if self.tasks.iter().any(|t| t.state() == TaskState::Running) {
-                    return Vec::new();
-                }
-                // then: the lowest-id unfinished *arrived* model
-                for t in &self.tasks {
-                    if t.state() != TaskState::Done && self.arrived[t.id] {
-                        return ModelSnapshot::of(t).into_iter().collect();
-                    }
-                }
-                Vec::new()
-            }
-        }
-    }
-
-    /// Mark `model` finished at `now` (first transition only) and release
-    /// its homed parameters from the hierarchy — online streams with churn
-    /// would otherwise exhaust the tiers and reject later submissions.
-    /// Releasing twice is a real error (the old pool saturated silently).
-    fn finish_job(
-        &mut self,
-        model: usize,
-        now: f64,
-        obs: &mut dyn EngineObserver,
-    ) -> Result<()> {
-        if self.finish_times[model].is_nan() {
-            self.finish_times[model] = now;
-            let bytes = Self::shard_bytes(&self.tasks[model]);
-            self.memory.unhome_model(model, &bytes)?;
-            obs.on_job_finished(model, now, self.job_cancelled[model]);
-        }
-        Ok(())
-    }
-
-    /// Wake one parked device (a model just became eligible). Waking
-    /// exactly one is sufficient — at most one model becomes eligible per
-    /// event — and keeps the wake cost O(log n) instead of the seed
-    /// engine's O(devices) broadcast.
-    fn wake_one(&mut self, now: f64) {
-        if let Some(&d) = self.parked.iter().next() {
-            self.parked.remove(&d);
-            self.queue.push(now, Event::DeviceFree { device: d });
-        }
-    }
-
-    /// Run to completion; returns the report. Per-interval trace recording
-    /// honours [`EngineOptions::record_intervals`] by installing a
-    /// [`TraceRecorder`] observer — see [`SharpEngine::run_with`] for the
-    /// underlying observer-threaded loop.
-    pub fn run(&mut self) -> Result<RunReport> {
-        self.run_observed(None)
-    }
-
-    /// Run with an optional external observer. This is the one place the
-    /// [`EngineOptions::record_intervals`] semantics live: when set, a
-    /// [`TraceRecorder`] is installed (teed with `obs` if both are present)
-    /// and its intervals become `RunReport::trace.intervals`.
-    pub fn run_observed(
-        &mut self,
-        obs: Option<&mut dyn EngineObserver>,
-    ) -> Result<RunReport> {
-        if !self.options.record_intervals {
-            return match obs {
-                Some(o) => self.run_with(o),
-                None => self.run_with(&mut NoopObserver),
-            };
-        }
-        let mut rec = TraceRecorder::default();
-        let mut report = match obs {
-            Some(o) => self.run_with(&mut Tee(o, &mut rec))?,
-            None => self.run_with(&mut rec)?,
-        };
-        report.trace.intervals = rec.intervals;
-        Ok(report)
-    }
-
-    /// Run to completion, streaming every engine event through `obs`.
-    ///
-    /// The report's `trace.intervals` stays empty on this path — interval
-    /// bookkeeping belongs to the observer (pass a [`TraceRecorder`], or use
-    /// [`SharpEngine::run`] which wires one from the options). Makespan,
-    /// device windows, utilization and the scalar aggregates are always
-    /// maintained engine-side.
-    pub fn run_with(&mut self, obs: &mut dyn EngineObserver) -> Result<RunReport> {
-        for d in 0..self.devices.len() {
-            self.trace.set_device_window(d, 0.0, f64::INFINITY);
-            self.queue.push(0.0, Event::DeviceFree { device: d });
-        }
-        for (i, ev) in self.cluster_events.clone().into_iter().enumerate() {
-            let time = match ev {
-                ClusterEvent::Arrive { time, .. } | ClusterEvent::Fail { time, .. } => time,
-            };
-            self.queue.push(time, Event::Cluster(i));
-        }
-        // Online jobs: construction-time tasks with future arrivals stay out
-        // of the ready-set until their arrival event fires.
-        self.ready.clear();
-        for m in 0..self.tasks.len() {
-            let arrival = self.tasks[m].arrival();
-            if arrival > 0.0 {
-                self.arrived[m] = false;
-                self.queue.push(arrival, Event::JobArrive { model: m });
-            } else {
-                self.arrived[m] = true;
-                obs.on_job_arrived(m, &self.tasks[m].name, 0.0);
-                if self.tasks[m].state() == TaskState::Idle {
-                    self.ready.insert(m);
-                }
-            }
-        }
-        let job_events = std::mem::take(&mut self.job_events);
-        for ev in job_events {
-            match ev {
-                JobEvent::Submit { time, task } => {
-                    let idx = self.pending_submissions.len();
-                    self.pending_submissions.push(Some(task));
-                    self.queue.push(time, Event::JobSubmit(idx));
-                }
-                JobEvent::Cancel { time, model } => {
-                    self.queue.push(time, Event::JobCancel { model });
-                }
-            }
-        }
-
-        while let Some(q) = self.queue.pop() {
-            let now = q.time;
-            match q.ev {
-                Event::DeviceFree { device } => self.on_device_free(device, now, obs)?,
-                Event::UnitRetire { device, unit } => {
-                    self.on_unit_retire(device, unit, now, obs)?
-                }
-                Event::Cluster(i) => self.on_cluster_event(i, now)?,
-                Event::JobArrive { model } => self.on_job_arrive(model, now, obs),
-                Event::JobSubmit(idx) => self.on_job_submit(idx, now, obs)?,
-                Event::JobCancel { model } => self.on_job_cancel(model, now, obs)?,
-            }
-        }
-
-        // Sanity: every task finished (unless devices all died).
-        let alive = self.devices.iter().any(|d| d.alive);
-        let done = self.tasks.iter().all(|t| t.state() == TaskState::Done);
-        if alive && !done {
-            return Err(HydraError::Sched(
-                "engine drained events with unfinished tasks".into(),
-            ));
-        }
-
-        self.trace.close_device_windows();
-        let device_secs = self.trace.device_seconds();
-        let utilization =
-            if device_secs > 0.0 { self.agg_compute / device_secs } else { 0.0 };
-        let jobs: Vec<JobStat> = self
-            .tasks
-            .iter()
-            .enumerate()
-            .map(|(m, t)| JobStat {
-                model: m,
-                name: t.name.clone(),
-                arrival: t.arrival(),
-                finished: self.finish_times[m],
-                cancelled: self.job_cancelled[m],
-                cancel_requested: (!self.cancel_requested[m].is_nan())
-                    .then_some(self.cancel_requested[m]),
-                units_executed: t.completed_units(),
-            })
-            .collect();
-        Ok(RunReport {
-            makespan: self.trace.makespan,
-            utilization,
-            compute_secs: self.agg_compute,
-            transfer_secs: self.agg_transfer,
-            stall_secs: self.agg_stall,
-            units_executed: self.units_executed,
-            promoted_bytes: self.memory.dram_traffic.promoted_bytes,
-            demoted_bytes: self.memory.dram_traffic.demoted_bytes,
-            nvme_promoted_bytes: self.memory.nvme_traffic.promoted_bytes,
-            nvme_demoted_bytes: self.memory.nvme_traffic.demoted_bytes,
-            nvme_secs: self.agg_nvme,
-            scheduler: self.scheduler.name(),
-            jobs,
-            trace: std::mem::take(&mut self.trace),
-        })
-    }
-
-    fn on_cluster_event(&mut self, i: usize, now: f64) -> Result<()> {
-        match self.cluster_events[i] {
-            ClusterEvent::Arrive { mem_bytes, .. } => {
-                let id = self.devices.len();
-                self.devices
-                    .push(Self::mk_device(id, DeviceSpec::uniform(mem_bytes), &self.options)?);
-                self.free_devices += 1;
-                self.trace.set_device_window(id, now, f64::INFINITY);
-                self.queue.push(now, Event::DeviceFree { device: id });
-            }
-            ClusterEvent::Fail { device, .. } => {
-                if device < self.devices.len() && self.devices[device].alive {
-                    if self.devices[device].busy {
-                        // fail-stop between units: take effect on retire
-                        self.devices[device].fail_pending = true;
-                    } else {
-                        self.kill_device(device, now);
-                    }
-                }
-            }
-        }
-        Ok(())
-    }
-
-    fn kill_device(&mut self, device: usize, now: f64) {
-        let pending = self.devices[device].pending.take();
-        if let Some(st) = self.devices[device].buffer.staged().copied() {
-            self.memory.release_device_copy(st.model, st.shard);
-        }
-        if let Some((m, sh)) = self.devices[device].resident.take() {
-            self.memory.release_device_copy(m, sh);
-        }
-        self.devices[device].alive = false;
-        self.devices[device].buffer.clear();
-        self.parked.remove(&device);
-        self.free_devices -= 1;
-        if let Some(u) = pending {
-            // return the pre-claimed unit to its model's queue; the model
-            // may now be runnable elsewhere
-            self.tasks[u.model].unclaim(&u);
-            self.ready.insert(u.model);
-            self.wake_one(now);
-        }
-        let start = self.trace.device_windows.get(&device).map(|w| w.0).unwrap_or(0.0);
-        self.trace.set_device_window(device, start, now);
-    }
-
-    fn on_job_arrive(&mut self, model: usize, now: f64, obs: &mut dyn EngineObserver) {
-        self.arrived[model] = true;
-        // a job cancelled before its arrival never becomes eligible: no
-        // arrival notification after its on_job_finished(cancelled=true)
-        if !self.job_cancelled[model] && self.tasks[model].state() == TaskState::Idle {
-            obs.on_job_arrived(model, &self.tasks[model].name, now);
-            self.ready.insert(model);
-            self.wake_one(now);
-        }
-    }
-
-    fn on_job_submit(
-        &mut self,
-        idx: usize,
-        now: f64,
-        obs: &mut dyn EngineObserver,
-    ) -> Result<()> {
-        let Some(task) = self.pending_submissions[idx].take() else {
-            return Ok(());
-        };
-        let id = self.tasks.len();
-        if task.id != id {
-            return Err(HydraError::Sched(format!(
-                "submitted task has id {} but {id} tasks are registered \
-                 (ids must follow submission order)",
-                task.id
-            )));
-        }
-        self.memory.home_model(task.id, &Self::shard_bytes(&task))?;
-        self.tasks.push(task);
-        self.job_cancelled.push(false);
-        self.cancel_requested.push(f64::NAN);
-        self.finish_times.push(f64::NAN);
-        // a submission may carry its own later arrival time; gate on it
-        let arrival = self.tasks[id].arrival();
-        if arrival > now {
-            self.arrived.push(false);
-            self.queue.push(arrival, Event::JobArrive { model: id });
-        } else {
-            self.arrived.push(true);
-            obs.on_job_arrived(id, &self.tasks[id].name, now);
-            if self.tasks[id].state() == TaskState::Idle {
-                self.ready.insert(id);
-                self.wake_one(now);
-            }
-        }
-        Ok(())
-    }
-
-    fn on_job_cancel(
-        &mut self,
-        model: usize,
-        now: f64,
-        obs: &mut dyn EngineObserver,
-    ) -> Result<()> {
-        if model >= self.tasks.len() {
-            return Err(HydraError::Sched(format!(
-                "cancel of unknown model {model}"
-            )));
-        }
-        // every request is recorded (earliest wins), even the no-op ones
-        // against already-finished jobs — the report stays auditable
-        if self.cancel_requested[model].is_nan() {
-            self.cancel_requested[model] = now;
-        }
-        if self.job_cancelled[model] || self.tasks[model].state() == TaskState::Done {
-            return Ok(()); // idempotent; cancelling a finished job is a no-op
-        }
-        self.job_cancelled[model] = true;
-        match self.tasks[model].state() {
-            TaskState::Idle => {
-                self.ready.remove(&model);
-                self.tasks[model].early_stop();
-                self.finish_job(model, now, obs)?;
-            }
-            TaskState::Running => {
-                // The claim is either a pre-claimed double-buffer prefetch
-                // (revoked immediately) or a genuinely in-flight unit
-                // (completes first; cancellation is unit-granular).
-                let mut revoked = false;
-                for d in 0..self.devices.len() {
-                    if self.devices[d].pending.map(|u| u.model) == Some(model) {
-                        let u = self.devices[d].pending.take().expect("checked");
-                        if let Some(st) = self.devices[d].buffer.staged().copied() {
-                            if st.model == model {
-                                // the staged fetch pinned the shard in DRAM
-                                self.memory.release_device_copy(st.model, st.shard);
-                                self.devices[d].buffer.clear();
-                            }
-                        }
-                        self.tasks[model].unclaim(&u);
-                        self.tasks[model].early_stop();
-                        self.finish_job(model, now, obs)?;
-                        revoked = true;
-                        break;
-                    }
-                }
-                if !revoked {
-                    self.cancel_pending.insert(model);
-                }
-            }
-            TaskState::Done => {}
-        }
-        Ok(())
-    }
-
-    fn on_device_free(
-        &mut self,
-        device: usize,
-        now: f64,
-        obs: &mut dyn EngineObserver,
-    ) -> Result<()> {
-        if !self.devices[device].alive || self.devices[device].busy {
-            return Ok(());
-        }
-        self.parked.remove(&device);
-        // 1. a pre-claimed (double-buffered) unit takes priority
-        let unit = if let Some(u) = self.devices[device].pending.take() {
-            Some(u)
-        } else {
-            let eligible = self.eligible();
-            let resident: Vec<(usize, u32)> =
-                self.devices[device].resident.into_iter().collect();
-            let ctx = PickContext {
-                now,
-                device,
-                speed: self.devices[device].spec.speed,
-                resident: Some(&resident),
-            };
-            match self.scheduler.pick(&eligible, ctx, &mut self.rng) {
-                Some(i) => {
-                    let id = eligible[i].id;
-                    self.ready.remove(&id);
-                    obs.on_decision(device, id, false, now);
-                    Some(self.tasks[id].claim_front())
-                }
-                None => None, // park until a wake-up
-            }
-        };
-        match unit {
-            Some(unit) => self.start_unit(device, unit, now, obs),
-            None => {
-                self.parked.insert(device);
-                Ok(())
-            }
-        }
-    }
-
-    /// Promote memory, account transfers/stalls, execute, schedule retire.
-    fn start_unit(
-        &mut self,
-        device: usize,
-        unit: ShardUnit,
-        now: f64,
-        obs: &mut dyn EngineObserver,
-    ) -> Result<()> {
-        let task_shard = self.tasks[unit.model].shard(unit.shard).clone();
-        let link = self.link(device);
-        let mut t = now;
-
-        // --- parameter promotion -----------------------------------------
-        let promote_bytes = if self.options.full_state_transfers {
-            task_shard.param_bytes
-        } else {
-            task_shard.transfer_bytes(unit.phase)
-        };
-        let cached = self.devices[device].resident == Some((unit.model, unit.shard));
-        if !cached {
-            // demote whatever was resident (a bwd unit's gradients/updated
-            // weights flow back; fwd demotion is a discard of clean weights)
-            if let Some((m, s)) = self.devices[device].resident.take() {
-                self.devices[device]
-                    .ledger
-                    .release(&Residency::ShardParams { model: m, shard: s });
-                let wb = self.devices[device].last_demote_bytes;
-                self.memory.note_demote(wb);
-                if wb > 0 {
-                    obs.on_spill(device, 0, wb, MemTier::Dram, t);
-                }
-                if !self.options.double_buffer && wb > 0 {
-                    // synchronous write-back (no overlap without DB)
-                    let dt = link.secs(wb);
-                    self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
-                    t += dt;
-                }
-                // write-back landed: the old resident's DRAM slot unpins
-                // and becomes an eviction candidate for the fetch below
-                self.memory.release_device_copy(m, s);
-            }
-            // promote: either consume the prefetched copy or transfer now
-            let stall = self.devices[device]
-                .buffer
-                .consume(unit.model, unit.shard, t);
-            // like demotions above, spill events carry the time the
-            // transfer starts
-            if promote_bytes > 0 {
-                obs.on_spill(device, promote_bytes, 0, MemTier::Dram, t);
-            }
-            let dt = match stall {
-                Some(stall) => {
-                    // the staged prefetch already fetched (and pinned) the
-                    // shard in DRAM; any NVMe leg was folded into its
-                    // transfer time, overlapped with compute like §4.6
-                    if stall > 0.0 {
-                        self.record(device, t, t + stall, unit, IntervalKind::BufferStall, obs);
-                    }
-                    stall
-                }
-                None => {
-                    // DRAM miss with nothing prefetched: stage the shard up
-                    // from NVMe synchronously, charged on the NVMe link
-                    let fetch = self.memory.fetch_to_dram(unit.model, unit.shard)?;
-                    if fetch.fetched_bytes > 0 {
-                        obs.on_spill(
-                            device,
-                            fetch.fetched_bytes,
-                            fetch.evicted_bytes,
-                            MemTier::Nvme,
-                            t,
-                        );
-                    }
-                    if fetch.secs > 0.0 {
-                        self.record(
-                            device,
-                            t,
-                            t + fetch.secs,
-                            unit,
-                            IntervalKind::NvmeTransfer,
-                            obs,
-                        );
-                        t += fetch.secs;
-                    }
-                    let dt = link.secs(promote_bytes);
-                    if dt > 0.0 {
-                        self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
-                    }
-                    dt
-                }
-            };
-            t += dt;
-            self.memory.note_promote(promote_bytes);
-            self.devices[device]
-                .ledger
-                .alloc(
-                    Residency::ShardParams { model: unit.model, shard: unit.shard },
-                    task_shard.param_bytes,
-                )?;
-            self.devices[device].resident = Some((unit.model, unit.shard));
-        }
-        // what flows back to DRAM when this residency is evicted: bwd units
-        // produce gradients/updated weights; fwd residency is clean
-        self.devices[device].last_demote_bytes = if self.options.full_state_transfers {
-            task_shard.param_bytes
-        } else {
-            match unit.phase {
-                Phase::Bwd => task_shard.bwd_transfer_bytes,
-                Phase::Fwd => 0,
-            }
-        };
-
-        // --- boundary activation ------------------------------------------
-        // Needed unless this model's previous unit ran on this device and the
-        // checkpoint never left (§4.6 bonus). We approximate with: cached
-        // shard => activation also local (fwd+bwd pairs share the device).
-        let needs_act = unit.shard > 0 || unit.phase == Phase::Bwd;
-        if needs_act && !cached {
-            let dt = link.secs(task_shard.activation_bytes);
-            if dt > 0.0 {
-                self.record(device, t, t + dt, unit, IntervalKind::Transfer, obs);
-                t += dt;
-            }
-        }
-        self.devices[device]
-            .ledger
-            .alloc(Residency::Activation { model: unit.model }, 2 * task_shard.activation_bytes)?;
-
-        // --- execute -------------------------------------------------------
-        // Unit costs are calibrated on the reference GPU; faster devices in
-        // a heterogeneous pool retire the same unit proportionally sooner.
-        let dur = self.backend.execute_unit(&self.tasks[unit.model], &unit)?
-            / self.devices[device].spec.speed;
-        self.devices[device].busy = true;
-        self.free_devices -= 1;
-        self.record(device, t, t + dur, unit, IntervalKind::Compute, obs);
-        let end = t + dur;
-
-        // --- double-buffer prefetch of the *next* unit ----------------------
-        if self.options.double_buffer {
-            self.try_stage_prefetch(device, t, obs);
-        }
-
-        self.queue.push(end, Event::UnitRetire { device, unit });
-        Ok(())
-    }
-
-    /// While `device` computes, pick and claim the next unit for it and
-    /// start the prefetch transfer into the buffer zone (§4.6: "the
-    /// Scheduler is actually picking shard units for double-buffering").
-    fn try_stage_prefetch(&mut self, device: usize, now: f64, obs: &mut dyn EngineObserver) {
-        if self.devices[device].pending.is_some() || self.devices[device].fail_pending {
-            return;
-        }
-        // Don't steal an eligible model from a device that could run it
-        // *right now* — prefetching is only a win when every device is busy
-        // (claiming for the buffer would otherwise serialise work that task
-        // parallelism would run immediately).
-        if self.free_devices > 0 {
-            return;
-        }
-        let eligible = self.eligible();
-        if eligible.is_empty() {
-            return;
-        }
-        let resident: Vec<(usize, u32)> =
-            self.devices[device].resident.into_iter().collect();
-        let ctx = PickContext {
-            now,
-            device,
-            speed: self.devices[device].spec.speed,
-            resident: Some(&resident),
-        };
-        let Some(i) = self.scheduler.pick(&eligible, ctx, &mut self.rng) else {
-            return;
-        };
-        let id = eligible[i].id;
-        self.ready.remove(&id);
-        obs.on_decision(device, id, true, now);
-        let unit = self.tasks[id].claim_front();
-        let bytes = if self.options.full_state_transfers {
-            self.tasks[id].shard(unit.shard).param_bytes
-        } else {
-            self.tasks[id].shard(unit.shard).transfer_bytes(unit.phase)
-        };
-        // only stage what fits the protected zone; otherwise fall back to a
-        // synchronous transfer at start time (consume returns None then)
-        if bytes <= self.devices[device].buffer.zone_bytes {
-            // a mismatched consume can leave an abandoned staging behind;
-            // unpin it before overwriting
-            if let Some(st) = self.devices[device].buffer.staged().copied() {
-                self.memory.release_device_copy(st.model, st.shard);
-            }
-            // multi-hop staging: pull the shard NVMe->DRAM (pinning it) and
-            // fold the NVMe leg into the prefetch time, so compute hides
-            // the whole DRAM-miss path exactly like §4.6 hides PCIe. If
-            // DRAM is too contended to fetch now, skip staging — start_unit
-            // retries synchronously once the demote has freed a slot.
-            if let Ok(fetch) = self.memory.fetch_to_dram(id, unit.shard) {
-                if fetch.fetched_bytes > 0 {
-                    obs.on_spill(
-                        device,
-                        fetch.fetched_bytes,
-                        fetch.evicted_bytes,
-                        MemTier::Nvme,
-                        now,
-                    );
-                }
-                let dt = fetch.secs + self.link(device).secs(bytes);
-                if !self.devices[device].buffer.stage(id, unit.shard, bytes, now, dt) {
-                    self.memory.release_device_copy(id, unit.shard);
-                }
-            }
-        }
-        self.devices[device].pending = Some(unit);
-    }
-
-    fn on_unit_retire(
-        &mut self,
-        device: usize,
-        unit: ShardUnit,
-        now: f64,
-        obs: &mut dyn EngineObserver,
-    ) -> Result<()> {
-        self.units_executed += 1;
-        self.devices[device].busy = false;
-        self.free_devices += 1;
-        self.devices[device]
-            .ledger
-            .release(&Residency::Activation { model: unit.model });
-        self.tasks[unit.model].retire(&unit);
-        self.backend.on_unit_retired(&self.tasks[unit.model], &unit);
-        obs.on_unit_retired(device, &unit, now);
-
-        // epoch boundary: last unit of the epoch just retired — give the
-        // backend its early-stop vote (§4.7.2)
-        let epoch_done = self.tasks[unit.model].geometry.closes_epoch(&unit);
-        if epoch_done
-            && self.tasks[unit.model].state() == TaskState::Idle
-            && self.backend.should_early_stop(&self.tasks[unit.model], unit.epoch)
-        {
-            self.tasks[unit.model].early_stop();
-        }
-
-        // a cancellation issued while this unit was in flight lands now
-        if self.cancel_pending.remove(&unit.model) {
-            self.tasks[unit.model].early_stop();
-        }
-        match self.tasks[unit.model].state() {
-            TaskState::Idle => {
-                self.ready.insert(unit.model);
-            }
-            TaskState::Done => {
-                self.finish_job(unit.model, now, obs)?;
-            }
-            TaskState::Running => {}
-        }
-
-        if self.devices[device].fail_pending {
-            self.kill_device(device, now);
-        } else {
-            self.queue.push(now, Event::DeviceFree { device });
-        }
-        // The retired model is idle again: one parked device may now have
-        // eligible work.
-        if self.tasks[unit.model].state() == TaskState::Idle {
-            self.wake_one(now);
-        }
-        Ok(())
-    }
-
-    /// Account an interval: scalar aggregates + makespan stay engine-side
-    /// (they feed the report); per-interval bookkeeping is the observer's.
-    fn record(
-        &mut self,
-        device: usize,
-        start: f64,
-        end: f64,
-        unit: ShardUnit,
-        kind: IntervalKind,
-        obs: &mut dyn EngineObserver,
-    ) {
-        if end > self.trace.makespan {
-            self.trace.makespan = end;
-        }
-        match kind {
-            IntervalKind::Compute => self.agg_compute += end - start,
-            IntervalKind::Transfer => self.agg_transfer += end - start,
-            IntervalKind::BufferStall => self.agg_stall += end - start,
-            IntervalKind::NvmeTransfer => self.agg_nvme += end - start,
-        }
-        obs.on_interval(&Interval {
-            device,
-            start,
-            end,
-            model: unit.model,
-            shard: unit.shard,
-            phase: unit.phase,
-            unit_seq: unit.seq_idx,
-            kind,
-        });
-    }
-}

@@ -52,17 +52,20 @@ USAGE:
   hydra simulate [--models 12] [--params-m 1000] [--devices 8]
                 [--minibatches 6] [--scheduler sharded-lrtf]
                 [--no-double-buffer] [--sequential] [--scan-queue]
-                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
+                [--prefetch-depth 1] [--dram-gib 500]
+                [--nvme <cap-gib>[:<gbps>]]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
                 [--scheduler sharded-lrtf] [--progress] [--gantt]
-                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
+                [--prefetch-depth 1] [--dram-gib 500]
+                [--nvme <cap-gib>[:<gbps>]]
   hydra search  --space lr=1e-4..1e-2:log,layers=12,24,48
                 [--algo grid|random|asha] [--pool a4000:4] [--trials N]
                 [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
                 [--grid-points 3] [--seed 7] [--stagger 0]
-                [--scheduler sharded-lrtf] [--dram-gib 500]
-                [--nvme <cap-gib>[:<gbps>]] | --spec search.json
+                [--scheduler sharded-lrtf] [--prefetch-depth 1]
+                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
+                | --spec search.json
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
                 [--device-mem-mib 2]
   hydra inspect [--manifest artifacts]
@@ -108,14 +111,15 @@ fn main() {
     }
 }
 
-fn engine_options(args: &Args) -> EngineOptions {
-    EngineOptions {
+fn engine_options(args: &Args) -> Result<EngineOptions, String> {
+    Ok(EngineOptions {
         mode: if args.flag("sequential") {
             ParallelMode::Sequential
         } else {
             ParallelMode::Sharp
         },
         double_buffer: !args.flag("no-double-buffer"),
+        prefetch_depth: args.opt_usize("prefetch-depth", 1)?,
         transfer: TransferModel::pcie_gen3(),
         queue: if args.flag("scan-queue") {
             QueueKind::LinearScan
@@ -123,7 +127,7 @@ fn engine_options(args: &Args) -> EngineOptions {
             QueueKind::Heap
         },
         ..Default::default()
-    }
+    })
 }
 
 fn policy_arg(args: &Args) -> Result<Policy, hydra::HydraError> {
@@ -156,6 +160,12 @@ fn print_tier_traffic(r: &RunReport) {
         fmt_bytes(r.nvme_demoted_bytes),
         r.nvme_secs / 3600.0,
     );
+    println!(
+        "  prefetch: {:.2}h stalled on staged transfers, {:.2}h queued on \
+         busy staging links",
+        r.stall_secs / 3600.0,
+        r.prefetch_wait_secs / 3600.0,
+    );
 }
 
 fn cmd_train(args: &Args) -> CliResult {
@@ -173,7 +183,7 @@ fn cmd_train(args: &Args) -> CliResult {
     let mut session = Session::builder(cluster)
         .backend(Backend::Real { manifest })
         .policy(policy_arg(args)?)
-        .options(engine_options(args))
+        .options(engine_options(args)?)
         .build()?;
     for i in 0..n_models {
         // a small hyperparameter grid around the requested lr
@@ -300,21 +310,9 @@ fn cmd_simulate(args: &Args) -> CliResult {
     let tasks = build_tasks(&grid, &gpu, PartitionPolicy::default())?;
     let shards = tasks[0].shards.len();
     let opts = EngineOptions {
-        mode: if args.flag("sequential") {
-            ParallelMode::Sequential
-        } else {
-            ParallelMode::Sharp
-        },
-        double_buffer: !args.flag("no-double-buffer"),
         buffer_frac: 0.30,
-        transfer: TransferModel::pcie_gen3(),
         record_intervals: false,
-        queue: if args.flag("scan-queue") {
-            QueueKind::LinearScan
-        } else {
-            QueueKind::Heap
-        },
-        ..Default::default()
+        ..engine_options(args)?
     };
     let mut builder = Session::builder(Cluster::uniform(devices, gpu.mem_bytes, dram))
         .backend(Backend::sim())
@@ -360,15 +358,7 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         PartitionPolicy { buffer_frac: 0.30, ..Default::default() },
     )?;
     let n_devices = specs.len();
-    let opts = EngineOptions {
-        buffer_frac: 0.30,
-        queue: if args.flag("scan-queue") {
-            QueueKind::LinearScan
-        } else {
-            QueueKind::Heap
-        },
-        ..Default::default()
-    };
+    let opts = EngineOptions { buffer_frac: 0.30, ..engine_options(args)? };
     let mut builder = Session::builder(Cluster::heterogeneous(specs, dram))
         .backend(Backend::sim())
         .policy(policy_arg(args)?)
@@ -476,7 +466,7 @@ fn cmd_search(args: &Args) -> CliResult {
         let opts = EngineOptions {
             buffer_frac: 0.30,
             record_intervals: false,
-            ..engine_options(args)
+            ..engine_options(args)?
         };
         let mut builder = Session::builder(Cluster::heterogeneous(specs, dram))
             .backend(Backend::sim())

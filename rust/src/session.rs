@@ -167,6 +167,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Set the prefetch-pipeline depth: how many upcoming units the
+    /// scheduler pre-claims per device (§4.6 generalized). 1 — the
+    /// default — is the paper's classic double buffer; with an NVMe
+    /// backing tier, higher depths overlap the NVMe->DRAM and DRAM->HBM
+    /// legs of different slots so multi-hop DRAM-miss chains hide behind
+    /// more than one compute span. The prefetch zone size is unchanged;
+    /// k is additionally bounded by what fits the zone. Call after
+    /// [`SessionBuilder::options`] (which replaces the whole options
+    /// struct).
+    pub fn prefetch_depth(mut self, depth: usize) -> SessionBuilder {
+        self.options.prefetch_depth = depth;
+        self
+    }
+
     /// Override the host-memory hierarchy (DRAM size + optional NVMe
     /// backing tier). The default derives DRAM from the cluster
     /// (`Cluster::dram_bytes`) with no NVMe tier — the legacy two-tier
@@ -775,6 +789,26 @@ mod tests {
         // 3 models x 1 shard x 1 mini-batch x (fwd + bwd)
         assert_eq!(r.run.units_executed, 6);
         assert!(r.run.nvme_promoted_bytes > 0, "{:?}", r.run.nvme_promoted_bytes);
+    }
+
+    #[test]
+    fn prefetch_depth_threads_through_and_zero_is_rejected() {
+        let mk = |depth: usize| {
+            let mut s = Session::builder(Cluster::uniform(1, 1 << 30, 4 << 30))
+                .options(zero_transfer())
+                .prefetch_depth(depth)
+                .build()
+                .unwrap();
+            s.submit(task("a", 2, 1.0)).unwrap();
+            s.submit(task("b", 1, 1.0)).unwrap();
+            s.run()
+        };
+        let r = mk(3).unwrap();
+        assert_eq!(r.run.units_executed, 6);
+        // depth 0 is meaningless and rejected at engine construction
+        let err = mk(0).unwrap_err();
+        assert!(matches!(err, HydraError::Config(_)), "{err:?}");
+        assert!(format!("{err}").contains("prefetch_depth"), "{err}");
     }
 
     #[test]

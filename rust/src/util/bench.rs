@@ -62,6 +62,46 @@ pub fn bench<F: FnMut()>(name: &str, runs: usize, iters_per_run: u64, mut f: F) 
     m
 }
 
+/// Serialise measurements into a machine-readable JSON summary (the perf
+/// trajectory's input: `cargo bench --bench hotpath` writes
+/// `BENCH_engine.json` through this). Hand-rolled like `util::json` —
+/// serde is unavailable offline.
+pub fn to_json(measurements: &[Measurement]) -> String {
+    let mut out = String::from("{\n  \"benches\": [\n");
+    for (i, m) in measurements.iter().enumerate() {
+        let mut name = String::with_capacity(m.name.len());
+        for c in m.name.chars() {
+            match c {
+                '"' => name.push_str("\\\""),
+                '\\' => name.push_str("\\\\"),
+                c if (c as u32) < 0x20 => {
+                    name.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => name.push(c),
+            }
+        }
+        out.push_str(&format!(
+            "    {{\"name\": \"{name}\", \"ns_per_iter\": {:.1}, \
+             \"median_ns\": {}, \"min_ns\": {}, \"max_ns\": {}, \
+             \"iters_per_run\": {}, \"runs\": {}}}{}\n",
+            m.ns_per_iter(),
+            m.median.as_nanos(),
+            m.min.as_nanos(),
+            m.max.as_nanos(),
+            m.iters_per_run,
+            m.runs,
+            if i + 1 == measurements.len() { "" } else { "," },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write the JSON summary of `measurements` to `path`.
+pub fn write_json(path: &str, measurements: &[Measurement]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(measurements))
+}
+
 /// Run a whole-figure generator once and report wallclock.
 pub fn run_once<F: FnOnce() -> R, R>(name: &str, f: F) -> (R, Duration) {
     let t0 = Instant::now();
@@ -93,5 +133,27 @@ mod tests {
         let (v, dt) = run_once("id", || 42);
         assert_eq!(v, 42);
         assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn json_summary_is_parseable_and_escaped() {
+        let m = Measurement {
+            name: "engine \"fast\"\n\\ path".into(),
+            median: Duration::from_nanos(1500),
+            min: Duration::from_nanos(1000),
+            max: Duration::from_nanos(2000),
+            iters_per_run: 3,
+            runs: 5,
+        };
+        let text = to_json(&[m.clone(), m]);
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let benches = j.get("benches").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(benches.len(), 2);
+        assert_eq!(
+            benches[0].get("name").and_then(|n| n.as_str()),
+            Some("engine \"fast\"\n\\ path")
+        );
+        assert_eq!(benches[0].get("median_ns").and_then(|v| v.as_u64()), Some(1500));
+        assert_eq!(benches[0].get("runs").and_then(|v| v.as_u64()), Some(5));
     }
 }

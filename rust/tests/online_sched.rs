@@ -451,6 +451,82 @@ fn oversized_shard_on_small_device_is_clean_oom() {
 }
 
 // ---------------------------------------------------------------------------
+// device failure: free/ready/parked accounting (the engine asserts the
+// free_devices invariant after every event in debug builds, so these runs
+// double as invariant sweeps)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn failing_a_busy_device_defers_to_retire_and_work_migrates() {
+    use hydra::coordinator::sharp::ClusterEvent;
+    // two devices, two 6s models; device 1 is lost at t=0.5 mid-compute:
+    // fail-stop between units lets its in-flight unit (fwd, [0,1]) finish,
+    // then the survivor absorbs the remaining 5s of model 1's work.
+    // Timeline on device 0: m0 fwd [0,1] bwd [1,3] fwd [3,4] bwd [4,6],
+    // interleaved with m1's returned units -> 11s of work on one device.
+    let tasks = vec![uniform_task(0, 1, 2, 1.0), uniform_task(1, 1, 2, 1.0)];
+    let mut session = mk_session(tasks, 2, zero_transfer_opts(), Policy::ShardedLrtf);
+    session.cluster_events(vec![ClusterEvent::Fail { time: 0.5, device: 1 }]);
+    let r = session.run().unwrap().run;
+    // every unit of both models still executes exactly once
+    assert_eq!(r.units_executed, 8);
+    assert!(r.jobs.iter().all(|j| j.finished.is_finite()), "{:?}", r.jobs);
+    assert!((r.makespan - 11.0).abs() < 1e-9, "{}", r.makespan);
+    // the dead device computed exactly its one in-flight unit
+    let dev1_compute: f64 = r
+        .trace
+        .intervals
+        .iter()
+        .filter(|iv| iv.device == 1 && iv.kind == IntervalKind::Compute)
+        .map(|iv| iv.end - iv.start)
+        .sum();
+    assert!((dev1_compute - 1.0).abs() < 1e-9, "{dev1_compute}");
+}
+
+#[test]
+fn failing_a_parked_device_is_immediate_and_later_work_avoids_it() {
+    use hydra::coordinator::sharp::ClusterEvent;
+    // one 3s model on two devices: device 1 parks at t=0 (no second model),
+    // dies parked at t=1, and a job arriving at t=2 must run on device 0
+    let tasks = vec![
+        uniform_task(0, 1, 1, 1.0),
+        uniform_task(1, 1, 1, 1.0).with_arrival(2.0),
+    ];
+    let mut session = mk_session(tasks, 2, zero_transfer_opts(), Policy::ShardedLrtf);
+    session.cluster_events(vec![ClusterEvent::Fail { time: 1.0, device: 1 }]);
+    let r = session.run().unwrap().run;
+    assert_eq!(r.units_executed, 4);
+    assert!(r.jobs.iter().all(|j| j.finished.is_finite()));
+    // nothing ever computed on the parked-then-killed device
+    assert!(
+        r.trace.intervals.iter().all(|iv| iv.device == 0),
+        "work landed on the dead device"
+    );
+    // its availability window closed at the failure time
+    assert_eq!(r.trace.device_windows.get(&1).copied(), Some((0.0, 1.0)));
+}
+
+#[test]
+fn failing_a_device_with_preclaimed_slots_returns_them_to_the_queue() {
+    use hydra::coordinator::sharp::ClusterEvent;
+    // depth-2 pipeline on a 2-device pool with 4 models: device 1 claims
+    // ahead while computing, then dies mid-compute — its pre-claimed units
+    // must return to their models' queues and still execute elsewhere
+    let tasks: Vec<ModelTask> = (0..4).map(|i| uniform_task(i, 1, 2, 1.0)).collect();
+    let total: u64 = tasks.iter().map(|t| t.total_units()).sum();
+    let opts = EngineOptions {
+        prefetch_depth: 2,
+        buffer_frac: 0.3,
+        ..zero_transfer_opts()
+    };
+    let mut session = mk_session(tasks, 2, opts, Policy::ShardedLrtf);
+    session.cluster_events(vec![ClusterEvent::Fail { time: 0.5, device: 1 }]);
+    let r = session.run().unwrap().run;
+    assert_eq!(r.units_executed, total);
+    assert!(r.jobs.iter().all(|j| j.finished.is_finite()), "{:?}", r.jobs);
+}
+
+// ---------------------------------------------------------------------------
 // event-heap vs linear-scan equivalence (Table 2 workloads)
 // ---------------------------------------------------------------------------
 

@@ -1,0 +1,573 @@
+//! The depth-k prefetch-pipeline contract (ISSUE 5):
+//!
+//! 1. **Depth-1 equivalence** — `prefetch_depth = 1` is the paper's
+//!    classic double buffer. Analytic workloads pin the pre-refactor
+//!    engine's arithmetic to the second (makespan, transfer, stall and
+//!    traffic values derived by hand from the single-slot engine), and
+//!    Debug-byte report comparisons pin that the explicit depth-1
+//!    configuration, the default, and a deeper pipeline that never gets
+//!    to claim ahead are all identical.
+//! 2. **Depth pays under NVMe pressure** — with DRAM below the aggregate
+//!    parameter state and an NVMe backing tier, promotes are
+//!    NVMe->DRAM->HBM chains; depth >= 2 overlaps the legs of different
+//!    slots and must strictly cut stall seconds, with the new
+//!    `prefetch_wait_secs` metric exposing the serialized-link queueing.
+//! 3. **Zone accounting safety** — property-tested random
+//!    stage/consume/cancel/kill churn never lets the staged set exceed
+//!    the zone, leak a DRAM pin, or drift the hierarchy's accounting.
+
+use hydra::coordinator::memory::{MemoryHierarchy, MemoryOptions, TierSpec};
+use hydra::coordinator::sharp::{
+    EngineOptions, PrefetchPipeline, RunReport, TransferModel,
+};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::unit::UnitGeometry;
+use hydra::coordinator::Cluster;
+use hydra::session::{Backend, Policy, Session};
+use hydra::sim::{bert_grid, build_tasks, poisson_mixed_tenants, GpuSpec};
+use hydra::util::prop;
+
+const GIB: u64 = 1 << 30;
+const MIB: u64 = 1 << 20;
+
+fn run(
+    tasks: Vec<ModelTask>,
+    cluster: Cluster,
+    opts: EngineOptions,
+    nvme: Option<TierSpec>,
+    cancels: &[(usize, f64)],
+) -> hydra::Result<RunReport> {
+    let mut builder = Session::builder(cluster)
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts);
+    if let Some(tier) = nvme {
+        builder = builder.nvme(tier);
+    }
+    let mut session = builder.build()?;
+    let mut handles = Vec::new();
+    for t in tasks {
+        handles.push(session.submit(t)?);
+    }
+    for &(job, time) in cancels {
+        session.cancel_at(handles[job], time)?;
+    }
+    Ok(session.run()?.run)
+}
+
+fn assert_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(format!("{a:?}"), format!("{b:?}"), "{what}: reports differ");
+}
+
+// ---------------------------------------------------------------------------
+// 1a. analytic depth-1 pins: the single-slot double buffer's arithmetic
+// ---------------------------------------------------------------------------
+
+/// Two single-shard models on one device over a 1 MB/s zero-latency link:
+/// every number below is derived by hand from the pre-refactor engine.
+fn analytic_tasks(cost: f64) -> Vec<ModelTask> {
+    (0..2)
+        .map(|i| {
+            let sd = vec![ShardDesc {
+                param_bytes: 1_000_000,
+                fwd_transfer_bytes: 1_000_000,
+                bwd_transfer_bytes: 1_000_000,
+                activation_bytes: 0,
+                fwd_cost: cost,
+                bwd_cost: cost,
+                n_layers: 1,
+            }];
+            ModelTask::new(i, format!("m{i}"), "sim", sd, 1, 1, 1e-3)
+        })
+        .collect()
+}
+
+fn analytic_opts(depth: usize) -> EngineOptions {
+    EngineOptions {
+        buffer_frac: 0.2, // zone 2 MB on a 10 MB device: one staged shard fits
+        prefetch_depth: depth,
+        transfer: TransferModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.0 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn analytic_depth1_prefetch_hides_every_transfer_after_the_first() {
+    // Timeline (1 MB transfers take 1s, units compute 2s):
+    //   [0,1]   sync promote of m0.fwd (nothing staged yet)
+    //   [1,3]   m0.fwd computes; m1.fwd staged at t=1, ready t=2
+    //   [3,5]   m1.fwd computes (stall 0); m0.bwd staged t=3, ready 4
+    //   [5,7]   m0.bwd computes; m1.bwd staged t=5, ready 6
+    //   [7,9]   m1.bwd computes
+    // Only the very first transfer is synchronous; every later promote is
+    // fully hidden. m0's bwd write-back (1 MB) demotes when m1.bwd starts.
+    let r = run(
+        analytic_tasks(2.0),
+        Cluster::uniform(1, 10_000_000, 64 * GIB),
+        analytic_opts(1),
+        None,
+        &[],
+    )
+    .unwrap();
+    assert!((r.makespan - 9.0).abs() < 1e-9, "{}", r.makespan);
+    assert!((r.transfer_secs - 1.0).abs() < 1e-9, "{}", r.transfer_secs);
+    assert_eq!(r.stall_secs, 0.0);
+    assert_eq!(r.prefetch_wait_secs, 0.0);
+    assert_eq!(r.units_executed, 4);
+    assert_eq!(r.promoted_bytes, 4_000_000);
+    assert_eq!(r.demoted_bytes, 1_000_000);
+    assert!((r.utilization - 8.0 / 9.0).abs() < 1e-9, "{}", r.utilization);
+}
+
+#[test]
+fn analytic_depth1_short_compute_stalls_on_every_staged_transfer() {
+    // Same workload with 0.5s units: each 1s staged transfer only hides
+    // 0.5s behind compute, so every consume stalls exactly 0.5s:
+    //   [0,1] sync promote; [1,1.5] m0.fwd; stall [1.5,2]; [2,2.5] m1.fwd;
+    //   stall [2.5,3]; [3,3.5] m0.bwd; stall [3.5,4]; [4,4.5] m1.bwd.
+    let r = run(
+        analytic_tasks(0.5),
+        Cluster::uniform(1, 10_000_000, 64 * GIB),
+        analytic_opts(1),
+        None,
+        &[],
+    )
+    .unwrap();
+    assert!((r.makespan - 4.5).abs() < 1e-9, "{}", r.makespan);
+    assert!((r.transfer_secs - 1.0).abs() < 1e-9, "{}", r.transfer_secs);
+    assert!((r.stall_secs - 1.5).abs() < 1e-9, "{}", r.stall_secs);
+    assert_eq!(r.prefetch_wait_secs, 0.0);
+    assert_eq!(r.units_executed, 4);
+}
+
+// ---------------------------------------------------------------------------
+// 1b. report equivalence: depth 1 == default; inert depth == depth 1
+// ---------------------------------------------------------------------------
+
+#[test]
+fn explicit_depth1_is_byte_identical_to_the_default_on_table2() {
+    let gpu = GpuSpec::rtx2080ti();
+    let mk = |opts: EngineOptions| {
+        let tasks = build_tasks(&bert_grid(2), &gpu, Default::default()).unwrap();
+        run(tasks, Cluster::uniform(4, gpu.mem_bytes, 4096 * GIB), opts, None, &[])
+            .unwrap()
+    };
+    let default = mk(EngineOptions { record_intervals: true, ..Default::default() });
+    let explicit = mk(EngineOptions {
+        record_intervals: true,
+        prefetch_depth: 1,
+        ..Default::default()
+    });
+    assert_identical(&default, &explicit, "table2 bert grid");
+}
+
+#[test]
+fn explicit_depth1_is_byte_identical_to_the_default_under_online_churn() {
+    let gpu = GpuSpec::rtx2080ti();
+    let mk = |opts: EngineOptions| {
+        let stream = poisson_mixed_tenants(8, 6.0, 7, 2);
+        let tasks = build_tasks(&stream, &gpu, Default::default()).unwrap();
+        run(
+            tasks,
+            Cluster::uniform(3, gpu.mem_bytes, 4096 * GIB),
+            opts,
+            None,
+            &[(2, 1800.0), (5, 3600.0)],
+        )
+        .unwrap()
+    };
+    let default = mk(EngineOptions { record_intervals: true, ..Default::default() });
+    let explicit = mk(EngineOptions {
+        record_intervals: true,
+        prefetch_depth: 1,
+        ..Default::default()
+    });
+    assert_identical(&default, &explicit, "online poisson stream");
+}
+
+#[test]
+fn deeper_pipeline_is_inert_when_at_most_one_model_is_ever_ahead() {
+    // Two models on one device: while one computes, only the other is ever
+    // eligible, so a depth-4 pipeline can never claim a second slot — the
+    // schedule must be byte-identical to depth 1, at both compute scales.
+    for cost in [2.0, 0.5] {
+        let mk = |depth: usize| {
+            run(
+                analytic_tasks(cost),
+                Cluster::uniform(1, 10_000_000, 64 * GIB),
+                analytic_opts(depth),
+                None,
+                &[],
+            )
+            .unwrap()
+        };
+        assert_identical(&mk(1), &mk(4), "2-model inert depth");
+    }
+}
+
+#[test]
+fn cancelling_a_staged_preclaim_leaves_no_phantom_transfer_behind() {
+    // One device, three models; m1's first unit is pre-claimed with a slow
+    // 3s staged transfer, then cancelled mid-compute. The revoked slot's
+    // transfer must not linger on the staging link: every later staging
+    // starts clean, so the depth-1 "a lone slot never waits" guarantee
+    // survives online cancellation churn.
+    //   [0,1]  sync promote m0.f1; [1,3] m0.f1; m1.f staged t=1 (3 MB, 3s)
+    //   t=1.5  cancel m1 -> slot revoked
+    //   [3,5]  m0.b1 (cached); m2.f staged t=3, ready 4 (no queueing)
+    //   [5,7]  m2.f; [7,9] m0.f2; [9,11] m2.b; [11,13] m0.b2 — all staged
+    //          transfers fully hidden, zero stalls, zero wait
+    let mk_task = |id: usize, mbs: u32, transfer: u64| {
+        let sd = vec![ShardDesc {
+            param_bytes: 1_000_000,
+            fwd_transfer_bytes: transfer,
+            bwd_transfer_bytes: 1_000_000,
+            activation_bytes: 0,
+            fwd_cost: 2.0,
+            bwd_cost: 2.0,
+            n_layers: 1,
+        }];
+        ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, 1, 1e-3)
+    };
+    let tasks = vec![
+        mk_task(0, 2, 1_000_000),
+        mk_task(1, 1, 3_000_000), // its staged fetch would occupy the link 3s
+        mk_task(2, 1, 1_000_000),
+    ];
+    let opts = EngineOptions {
+        buffer_frac: 0.4, // zone 4 MB: the 3 MB staging fits
+        prefetch_depth: 1,
+        transfer: TransferModel { bandwidth_bytes_per_sec: 1e6, latency_secs: 0.0 },
+        ..Default::default()
+    };
+    let r = run(
+        tasks,
+        Cluster::uniform(1, 10_000_000, 64 * GIB),
+        opts,
+        None,
+        &[(1, 1.5)],
+    )
+    .unwrap();
+    assert!(r.jobs[1].cancelled);
+    assert_eq!(r.jobs[1].units_executed, 0);
+    assert_eq!(r.units_executed, 6);
+    assert!((r.makespan - 13.0).abs() < 1e-9, "{}", r.makespan);
+    assert!((r.transfer_secs - 1.0).abs() < 1e-9, "{}", r.transfer_secs);
+    assert_eq!(r.stall_secs, 0.0);
+    // the regression: a phantom transfer would surface here as wait > 0
+    assert_eq!(r.prefetch_wait_secs, 0.0);
+}
+
+#[test]
+fn depth_is_inert_without_double_buffering() {
+    let mk = |depth: usize| {
+        let opts = EngineOptions {
+            double_buffer: false,
+            prefetch_depth: depth,
+            ..analytic_opts(depth)
+        };
+        run(
+            analytic_tasks(1.0),
+            Cluster::uniform(1, 10_000_000, 64 * GIB),
+            opts,
+            None,
+            &[],
+        )
+        .unwrap()
+    };
+    assert_identical(&mk(1), &mk(4), "no-DB inert depth");
+}
+
+#[test]
+fn depth1_is_byte_identical_on_a_heterogeneous_pool() {
+    use hydra::coordinator::sharp::DeviceSpec;
+    let mk = |opts: EngineOptions| {
+        let tasks: Vec<ModelTask> = (0..6)
+            .map(|i| {
+                let sd = vec![
+                    ShardDesc {
+                        param_bytes: 60 * MIB,
+                        fwd_transfer_bytes: 20 * MIB,
+                        bwd_transfer_bytes: 20 * MIB,
+                        activation_bytes: MIB,
+                        fwd_cost: 0.2 + 0.1 * i as f64,
+                        bwd_cost: 0.4,
+                        n_layers: 1,
+                    };
+                    2
+                ];
+                ModelTask::new(i, format!("m{i}"), "sim", sd, 2, 1, 1e-3)
+            })
+            .collect();
+        let specs = vec![
+            DeviceSpec { mem_bytes: GIB, speed: 1.0, link: None },
+            DeviceSpec {
+                mem_bytes: 2 * GIB,
+                speed: 1.5,
+                link: Some(TransferModel::pcie_gen4()),
+            },
+        ];
+        let mut session = Session::builder(Cluster::heterogeneous(specs, 64 * GIB))
+            .backend(Backend::sim())
+            .policy(Policy::ShardedLrtf)
+            .options(opts)
+            .build()
+            .unwrap();
+        for t in tasks {
+            session.submit(t).unwrap();
+        }
+        session.run().unwrap().run
+    };
+    let default = mk(EngineOptions { buffer_frac: 0.2, ..Default::default() });
+    let explicit = mk(EngineOptions {
+        buffer_frac: 0.2,
+        prefetch_depth: 1,
+        ..Default::default()
+    });
+    assert_identical(&default, &explicit, "hetero pool depth 1");
+}
+
+// ---------------------------------------------------------------------------
+// 2. depth >= 2 pays under NVMe pressure
+// ---------------------------------------------------------------------------
+
+/// 16 x 64 MiB single-shard models over 2 devices, DRAM at 75% of the
+/// aggregate parameter state, NVMe backing tier: every promote chains
+/// NVMe->DRAM->HBM and compute (10/20 ms) is far shorter than the chain.
+fn pressured(depth: usize) -> RunReport {
+    let n = 16usize;
+    let shard = 64 * MIB;
+    let total = n as u64 * shard;
+    let tasks: Vec<ModelTask> = (0..n)
+        .map(|i| {
+            let sd = vec![ShardDesc {
+                param_bytes: shard,
+                fwd_transfer_bytes: shard,
+                bwd_transfer_bytes: shard,
+                activation_bytes: MIB,
+                fwd_cost: 0.01,
+                bwd_cost: 0.02,
+                n_layers: 1,
+            }];
+            ModelTask::new(i, format!("m{i}"), "sim", sd, 2, 1, 1e-3)
+        })
+        .collect();
+    let opts = EngineOptions {
+        buffer_frac: 0.30, // zone 307 MiB: four 64 MiB stagings fit
+        prefetch_depth: depth,
+        record_intervals: false,
+        ..Default::default()
+    };
+    run(
+        tasks,
+        Cluster::uniform(2, GIB, (total as f64 * 0.75) as u64),
+        opts,
+        Some(TierSpec::nvme(4 * total)),
+        &[],
+    )
+    .unwrap()
+}
+
+#[test]
+fn depth2_strictly_cuts_stalls_under_nvme_pressure() {
+    let d1 = pressured(1);
+    let d2 = pressured(2);
+    let d4 = pressured(4);
+    // same work retired on every arm
+    assert_eq!(d1.units_executed, 16 * 4);
+    assert_eq!(d2.units_executed, d1.units_executed);
+    assert_eq!(d4.units_executed, d1.units_executed);
+    // the single-slot buffer stalls on the NVMe leg of every chain
+    assert!(d1.stall_secs > 0.0, "depth-1 arm shows no stalls: {d1:?}");
+    // a lone slot never queues on a staging link
+    assert_eq!(d1.prefetch_wait_secs, 0.0);
+    // the headline claim: deeper pipelines strictly cut stall seconds
+    assert!(
+        d2.stall_secs < d1.stall_secs,
+        "depth 2 stalls {} !< depth 1 stalls {}",
+        d2.stall_secs,
+        d1.stall_secs
+    );
+    assert!(
+        d4.stall_secs.min(d2.stall_secs) < d1.stall_secs,
+        "no deep arm beat depth 1"
+    );
+    // overlapping slots queue on the serialized links — the new metric
+    assert!(
+        d2.prefetch_wait_secs > 0.0,
+        "depth 2 never queued a staging leg: {d2:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// 3. zone accounting safety under random churn
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pipeline_zone_and_pins_stay_in_bounds_under_churn() {
+    use hydra::coordinator::memory::DeviceLedger;
+    prop::check("pipeline zone accounting", 60, |rng| {
+        let n_models = 16usize;
+        let shard = rng.range_u64(8, 65) << 20;
+        let zone = rng.range_u64(16, 257) << 20;
+        let depth = rng.range_u64(1, 6) as usize;
+        let mut ledger = DeviceLedger::new(0, 8 * GIB);
+        let mut p = PrefetchPipeline::new(true, zone, depth, &mut ledger)
+            .map_err(|e| format!("{e}"))?;
+        // hierarchy under real pressure: DRAM holds about half the models
+        let dram = (n_models as u64 / 2) * shard + shard;
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(dram, TierSpec::nvme(64 * GIB)));
+        for m in 0..n_models {
+            h.home_model(m, &[shard]).map_err(|e| format!("{e}"))?;
+        }
+        let geometry = UnitGeometry::new(1, 1, 1);
+        // models currently claimed by a slot (engine invariant: at most one
+        // claim per model across the pipeline)
+        let mut claimed: Vec<usize> = Vec::new();
+        let mut staged_pins = 0usize;
+        let mut t = 0.0f64;
+        for _ in 0..300 {
+            t += rng.range_f64(0.0, 1.0);
+            match rng.below(4) {
+                0 => {
+                    // stage (or claim unstaged) an unclaimed model
+                    if p.is_full() || claimed.len() >= n_models {
+                        continue;
+                    }
+                    let m = (0..n_models)
+                        .find(|m| !claimed.contains(m))
+                        .expect("an unclaimed model exists");
+                    let unit = geometry.unit_at(m, 0);
+                    if p.can_stage(shard) && h.fetch_to_dram(m, 0).is_ok() {
+                        p.stage(unit, shard, t, rng.range_f64(0.0, 0.1), 0.01);
+                        staged_pins += 1;
+                    } else {
+                        p.push_unstaged(unit);
+                    }
+                    claimed.push(m);
+                }
+                1 => {
+                    // consume the front slot; the staged pin becomes the
+                    // device-resident pin, which we release right away
+                    if let Some(slot) = p.pop_front() {
+                        claimed.retain(|&m| m != slot.unit.model);
+                        if let Some(st) = slot.staged {
+                            h.release_device_copy(st.model, st.shard);
+                            staged_pins -= 1;
+                        }
+                    }
+                }
+                2 => {
+                    // cancel a random claimed model
+                    if claimed.is_empty() {
+                        continue;
+                    }
+                    let m = claimed[rng.below(claimed.len() as u64) as usize];
+                    let slot = p.remove_model(m).ok_or("claimed model has no slot")?;
+                    claimed.retain(|&x| x != m);
+                    if let Some(st) = slot.staged {
+                        h.release_device_copy(st.model, st.shard);
+                        staged_pins -= 1;
+                    }
+                }
+                _ => {
+                    // device loss: every slot revoked at once
+                    for slot in p.clear() {
+                        claimed.retain(|&m| m != slot.unit.model);
+                        if let Some(st) = slot.staged {
+                            h.release_device_copy(st.model, st.shard);
+                            staged_pins -= 1;
+                        }
+                    }
+                }
+            }
+            // invariants after every operation
+            if p.staged_bytes() > zone {
+                return Err(format!(
+                    "staged set {} exceeds zone {zone}",
+                    p.staged_bytes()
+                ));
+            }
+            if p.len() > depth {
+                return Err(format!("{} slots exceed depth {depth}", p.len()));
+            }
+            let staged_count = p.slots().filter(|s| s.staged.is_some()).count();
+            if staged_count as u64 * shard != p.staged_bytes() {
+                return Err("staged byte accounting drifted".into());
+            }
+            if staged_count != staged_pins {
+                return Err(format!(
+                    "pin leak: {staged_count} staged slots vs {staged_pins} pins"
+                ));
+            }
+            let total_pins: u32 = (0..n_models).map(|m| h.pins(m, 0)).sum();
+            if total_pins as usize != staged_pins {
+                return Err(format!(
+                    "hierarchy pins {total_pins} != staged pins {staged_pins}"
+                ));
+            }
+            h.validate().map_err(|e| format!("{e}"))?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// engine-level churn: random depths keep every online invariant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_depths_complete_under_pressure_with_sane_counters() {
+    prop::check("random-depth engine runs", 25, |rng| {
+        let n = rng.range_u64(4, 10) as usize;
+        let shard = rng.range_u64(20, 61) << 20;
+        let depth = rng.range_u64(1, 5) as usize;
+        let tasks: Vec<ModelTask> = (0..n)
+            .map(|i| {
+                let sd = vec![ShardDesc {
+                    param_bytes: shard,
+                    fwd_transfer_bytes: shard / 2,
+                    bwd_transfer_bytes: shard / 2,
+                    activation_bytes: 1 << 16,
+                    fwd_cost: rng.range_f64(0.01, 0.5),
+                    bwd_cost: rng.range_f64(0.01, 0.5),
+                    n_layers: 1,
+                }];
+                ModelTask::new(i, format!("m{i}"), "sim", sd, 2, 1, 1e-3)
+                    .with_arrival(rng.range_f64(0.0, 4.0))
+            })
+            .collect();
+        let total = n as u64 * shard;
+        // DRAM floored at the pinned working set for the deepest pipeline:
+        // 2 devices x (resident + depth staged) + 1 in-flight fetch
+        let floor = (2 * (depth as u64 + 1) + 1) * shard;
+        let dram = ((total as f64 * rng.range_f64(0.6, 1.5)) as u64).max(floor);
+        let opts = EngineOptions {
+            buffer_frac: 0.30,
+            prefetch_depth: depth,
+            double_buffer: rng.uniform() < 0.8,
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let cancels =
+            if rng.uniform() < 0.4 { vec![(0usize, rng.range_f64(0.0, 3.0))] } else { vec![] };
+        let r = run(
+            tasks,
+            Cluster::uniform(2, GIB, dram),
+            opts,
+            Some(TierSpec::nvme(4 * total)),
+            &cancels,
+        )
+        .map_err(|e| format!("run failed (depth {depth}): {e}"))?;
+        for j in &r.jobs {
+            if !j.cancelled && j.finished.is_nan() {
+                return Err(format!("job {} never finished (depth {depth})", j.model));
+            }
+        }
+        if r.stall_secs < 0.0 || r.prefetch_wait_secs < 0.0 || r.nvme_secs < 0.0 {
+            return Err("negative time aggregate".into());
+        }
+        Ok(())
+    });
+}
