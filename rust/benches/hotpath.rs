@@ -228,6 +228,28 @@ fn main() {
         },
     ));
 
+    // --- sharded multi-coordinator dispatch -------------------------------
+    // The same 64-model fleet split across 4 independent shard engines
+    // (6 devices each): per-shard event queues and ready sets are a quarter
+    // the size, so routing + merge overhead must pay for itself against the
+    // unsharded heap arm above on this workload.
+    ms.push(bench(
+        &format!("engine[shards=4]: {big_units} units, 64 models, 24 devices"),
+        runs,
+        big_units,
+        || {
+            let opts = EngineOptions {
+                transfer: TransferModel::pcie_gen3(),
+                record_intervals: false,
+                shards: 4,
+                ..Default::default()
+            };
+            let r = mk_session(64, 24, fleet_mbs, opts).run().unwrap();
+            assert_eq!(r.shard_sections.len(), 4, "expected 4 shard sections");
+            std::hint::black_box(r.run.units_executed);
+        },
+    ));
+
     // --- online multi-tenant dispatch ------------------------------------
     // Poisson arrivals over a mixed pool: the eligible-set bookkeeping path.
     ms.push(bench(

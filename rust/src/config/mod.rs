@@ -267,6 +267,12 @@ fn parse_engine(j: &Json) -> Result<(EngineOptions, Policy, Option<u32>)> {
             }
             engine.prefetch_depth = k as usize;
         }
+        if let Some(s) = e.get("shards").and_then(Json::as_u64) {
+            if s == 0 {
+                return Err(cerr("shards must be >= 1"));
+            }
+            engine.shards = s as usize;
+        }
         if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
             early_stop = Some(me as u32);
         }
@@ -527,6 +533,30 @@ mod tests {
         )
         .unwrap();
         assert_eq!(s.engine.prefetch_depth, 2);
+    }
+
+    #[test]
+    fn shards_key_parses_and_rejects_zero() {
+        let mk = |engine: &str| {
+            WorkloadSpec::parse(&format!(
+                r#"{{"cluster": {{"devices":4,"device_mem_mib":1}},
+                     "engine": {engine},
+                     "tasks":[{{"config":"x","minibatches":1}}]}}"#
+            ))
+        };
+        // default is the single global coordinator
+        assert_eq!(mk(r#"{}"#).unwrap().engine.shards, 1);
+        assert_eq!(mk(r#"{"shards": 4}"#).unwrap().engine.shards, 4);
+        let err = mk(r#"{"shards": 0}"#).unwrap_err();
+        assert!(format!("{err}").contains("shards"), "{err}");
+        // the shared engine parser gives searches the same key
+        let s = SearchWorkload::parse(
+            r#"{"cluster": {"devices":4,"device_mem_mib":16384},
+                "engine": {"shards": 2},
+                "search": {"space": "lr=1e-4..1e-2:log"}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.engine.shards, 2);
     }
 
     #[test]

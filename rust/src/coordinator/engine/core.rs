@@ -75,6 +75,13 @@ pub struct EngineOptions {
     pub full_state_transfers: bool,
     /// Event-queue discipline (heap by default; linear scan as reference).
     pub queue: QueueKind,
+    /// Number of independent coordinator shards the cluster is partitioned
+    /// into (>= 1). Only the sharded front doors
+    /// ([`super::sharded::ShardedEngine`], `Session::builder().shards(n)`)
+    /// act on it; a directly-constructed [`SharpEngine`] always runs as the
+    /// single global coordinator and ignores this field. 1 (the default) is
+    /// the unsharded engine.
+    pub shards: usize,
 }
 
 impl Default for EngineOptions {
@@ -89,6 +96,7 @@ impl Default for EngineOptions {
             record_intervals: true,
             full_state_transfers: false,
             queue: QueueKind::Heap,
+            shards: 1,
         }
     }
 }

@@ -60,6 +60,8 @@
 //! | [`jobs`]   | [`JobEvent`] submit/cancel, arrival gating, finish bookkeeping, [`JobStat`] |
 //! | [`prefetch`] | the depth-k [`PrefetchPipeline`] (zone, slots, staging-link clocks) |
 //! | [`core`](self::core) | [`SharpEngine`] construction, the run loop, unit dispatch, [`RunReport`] |
+//! | [`routing`] | [`ShardId`], the stable job->shard hash, the bounded [`ShardMailbox`] and its [`ShardBusy`] backpressure signal |
+//! | [`sharded`] | [`ShardedEngine`]: N independent shard engines, report merge, [`ShardedReport`] |
 //!
 //! Invariants enforced here (property-tested in rust/tests, and — for the
 //! free/parked/zone accounting — asserted after every event in debug
@@ -77,11 +79,17 @@ pub mod device;
 pub mod events;
 pub mod jobs;
 pub mod prefetch;
+pub mod routing;
+pub mod sharded;
 
 pub use self::core::{EngineOptions, ParallelMode, RunReport, SharpEngine};
 pub use self::device::{ClusterEvent, DeviceSpec};
 pub use self::events::QueueKind;
 pub use self::jobs::{JobEvent, JobStat};
 pub use self::prefetch::{PrefetchPipeline, PrefetchSlot, StagedShard};
+pub use self::routing::{Route, ShardBusy, ShardId, ShardMailbox};
+pub use self::sharded::{
+    ShardOutcome, ShardSection, ShardedEngine, ShardedReport,
+};
 
 pub use crate::coordinator::memory::TransferModel;

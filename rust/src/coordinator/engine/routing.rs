@@ -1,0 +1,238 @@
+//! Job→shard routing and bounded shard mailboxes for the sharded engine.
+//!
+//! Routing is a pure function of the *global* job id: a splitmix64 stable
+//! hash picks the home shard, so the assignment is deterministic, stable
+//! under submission reordering, and independent of everything else in the
+//! run (property-tested in rust/tests/sharded_engine.rs). One override
+//! exists: a job whose largest shard cannot fit the routed shard's smallest
+//! device is re-routed to the shard with the roomiest device (capacity-aware
+//! override for oversized jobs), deterministically tie-broken by shard id.
+//!
+//! Admission into a shard goes through a bounded [`ShardMailbox`]:
+//! `try_push` either accepts the job or returns it with a typed
+//! [`ShardBusy`] signal instead of growing an unbounded queue — the
+//! backpressure idiom of the multi-tenant serving literature (PAPERS.md,
+//! 2111.14247). The caller decides how to resolve the pressure (the
+//! [`super::sharded::ShardedEngine`] drains the mailbox into the shard's
+//! accepted list and retries, so every backpressured submit eventually
+//! lands).
+
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Identifier of one shard engine inside a [`super::sharded::ShardedEngine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct ShardId(pub usize);
+
+impl fmt::Display for ShardId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "shard {}", self.0)
+    }
+}
+
+/// splitmix64 finalizer: a cheap, well-mixed stable hash of a job id.
+/// Stable across runs and platforms by construction (pure integer math).
+pub fn stable_hash(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Home shard of `job` among `n_shards` shards: `stable_hash(job) % n`.
+///
+/// Deterministic and independent of submission order — two runs that
+/// contain the same job ids route identically no matter how the jobs were
+/// interleaved.
+pub fn route(job: usize, n_shards: usize) -> ShardId {
+    assert!(n_shards >= 1, "route called with zero shards");
+    ShardId((stable_hash(job as u64) % n_shards as u64) as usize)
+}
+
+/// A routing decision: the chosen shard, and whether the capacity-aware
+/// override moved the job away from its hash-routed home.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Route {
+    pub shard: ShardId,
+    pub overridden: bool,
+}
+
+/// Route `job`, overriding the hash choice when the job's largest shard
+/// (`largest_shard_bytes`) exceeds the routed shard's device capacity.
+///
+/// `device_caps[s]` is the smallest device memory of shard `s` (the
+/// binding constraint: every shard of a model must fit every device it may
+/// be placed on). An oversized job is re-routed to the shard with the
+/// largest capacity; ties break to the lowest shard id so the override is
+/// as deterministic as the hash. If no shard fits, the roomiest shard
+/// still wins and the shard engine reports the placement failure itself.
+pub fn route_capacity_aware(job: usize, largest_shard_bytes: u64, device_caps: &[u64]) -> Route {
+    let home = route(job, device_caps.len());
+    if largest_shard_bytes <= device_caps[home.0] {
+        return Route { shard: home, overridden: false };
+    }
+    let roomiest = device_caps
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(s, _)| s)
+        .unwrap_or(home.0);
+    Route { shard: ShardId(roomiest), overridden: roomiest != home.0 }
+}
+
+/// Typed backpressure signal: the mailbox of `shard` is full (at
+/// `capacity` queued jobs) and rejected the submit instead of growing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardBusy {
+    pub shard: ShardId,
+    pub capacity: usize,
+}
+
+impl fmt::Display for ShardBusy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} mailbox is full ({} queued jobs); drain it before resubmitting",
+            self.shard, self.capacity
+        )
+    }
+}
+
+/// Bounded FIFO admission queue in front of one shard engine.
+///
+/// `try_push` never grows past `capacity`: a full mailbox hands the item
+/// back together with a [`ShardBusy`] signal. The bound is the whole
+/// point — backpressure is surfaced to the submitter as a typed value
+/// rather than absorbed into an unbounded queue.
+#[derive(Debug, Clone)]
+pub struct ShardMailbox<T> {
+    shard: ShardId,
+    capacity: usize,
+    queue: VecDeque<T>,
+}
+
+impl<T> ShardMailbox<T> {
+    /// A mailbox for `shard` holding at most `capacity` (>= 1) items.
+    pub fn new(shard: ShardId, capacity: usize) -> ShardMailbox<T> {
+        ShardMailbox {
+            shard,
+            capacity: capacity.max(1),
+            queue: VecDeque::with_capacity(capacity.max(1)),
+        }
+    }
+
+    /// Accept `item`, or hand it back with a [`ShardBusy`] when full.
+    pub fn try_push(&mut self, item: T) -> Result<(), (T, ShardBusy)> {
+        if self.queue.len() >= self.capacity {
+            return Err((item, ShardBusy { shard: self.shard, capacity: self.capacity }));
+        }
+        self.queue.push_back(item);
+        Ok(())
+    }
+
+    /// Pop the oldest queued item (FIFO).
+    pub fn pop(&mut self) -> Option<T> {
+        self.queue.pop_front()
+    }
+
+    /// Drain every queued item in FIFO order.
+    pub fn drain(&mut self) -> impl Iterator<Item = T> + '_ {
+        self.queue.drain(..)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn shard(&self) -> ShardId {
+        self.shard
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_hash_is_stable() {
+        // pinned values: the routing contract is "stable across runs and
+        // platforms", so the hash itself must never drift
+        assert_eq!(stable_hash(0), 16294208416658607535);
+        assert_eq!(stable_hash(1), 10451216379200822465);
+        assert_eq!(stable_hash(0), stable_hash(0));
+    }
+
+    #[test]
+    fn route_is_deterministic_and_in_range() {
+        for n in 1..9 {
+            for job in 0..256 {
+                let a = route(job, n);
+                let b = route(job, n);
+                assert_eq!(a, b);
+                assert!(a.0 < n);
+            }
+        }
+        // n=1 routes everything to shard 0
+        for job in 0..64 {
+            assert_eq!(route(job, 1), ShardId(0));
+        }
+    }
+
+    #[test]
+    fn capacity_override_moves_only_oversized_jobs() {
+        let caps = [1 << 30, 4 << 30, 2 << 30, 1 << 30];
+        for job in 0..64 {
+            // small job: always the hash home
+            let r = route_capacity_aware(job, 1 << 20, &caps);
+            assert_eq!(r.shard, route(job, caps.len()));
+            assert!(!r.overridden);
+            // oversized for every shard but 1: lands on the roomiest
+            let r = route_capacity_aware(job, 3 << 30, &caps);
+            assert_eq!(r.shard, ShardId(1));
+            assert_eq!(r.overridden, route(job, caps.len()) != ShardId(1));
+        }
+    }
+
+    #[test]
+    fn capacity_override_ties_break_to_lowest_shard() {
+        // nothing fits: the roomiest wins, ties to the lowest id
+        let caps = [2 << 30, 2 << 30, 1 << 30];
+        let r = route_capacity_aware(7, 8 << 30, &caps);
+        assert_eq!(r.shard, ShardId(0));
+    }
+
+    #[test]
+    fn mailbox_bounds_and_backpressures() {
+        let mut mb: ShardMailbox<usize> = ShardMailbox::new(ShardId(2), 2);
+        assert!(mb.try_push(10).is_ok());
+        assert!(mb.try_push(11).is_ok());
+        let (item, busy) = mb.try_push(12).unwrap_err();
+        assert_eq!(item, 12);
+        assert_eq!(busy.shard, ShardId(2));
+        assert_eq!(busy.capacity, 2);
+        assert!(busy.to_string().contains("shard 2"));
+        assert_eq!(mb.len(), 2);
+        // FIFO drain frees the bound; the rejected item lands on retry
+        assert_eq!(mb.pop(), Some(10));
+        assert!(mb.try_push(item).is_ok());
+        let drained: Vec<usize> = mb.drain().collect();
+        assert_eq!(drained, vec![11, 12]);
+        assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn mailbox_capacity_floor_is_one() {
+        let mut mb: ShardMailbox<u8> = ShardMailbox::new(ShardId(0), 0);
+        assert_eq!(mb.capacity(), 1);
+        assert!(mb.try_push(1).is_ok());
+        assert!(mb.try_push(2).is_err());
+    }
+}

@@ -1,0 +1,629 @@
+//! The sharded multi-coordinator engine (ROADMAP item 1): N independent
+//! [`SharpEngine`] shards over one cluster, one merged [`RunReport`].
+//!
+//! [`ShardedEngine`] partitions the cluster into `EngineOptions::shards`
+//! shard engines. Each shard owns a private slice of everything the single
+//! engine owns globally — its own event queue, device pool (global devices
+//! round-robin: shard `i` gets devices `i, i+N, i+2N, ...`), an equal split
+//! of the DRAM pool and of the NVMe tier's capacity, and its own prefetch
+//! pipelines. Jobs are assigned by the deterministic routing of
+//! [`super::routing`] (stable hash of the *global* job id, capacity-aware
+//! override for oversized jobs) and admitted through bounded per-shard
+//! [`super::routing::ShardMailbox`]es: a full mailbox backpressures with a
+//! typed [`super::routing::ShardBusy`] instead of growing, and the engine
+//! resolves the pressure by draining the mailbox into the shard's accepted
+//! list and retrying — every backpressured submit eventually lands, and
+//! admission order (hence the schedule) is independent of the mailbox
+//! capacity.
+//!
+//! Shards run their event loops independently (sequentially, in shard
+//! order, each in its own virtual clock) and their reports merge into one
+//! [`ShardedReport`]: per-shard [`ShardSection`]s plus cluster totals.
+//!
+//! **The proof obligation** (rust/tests/sharded_engine.rs): with N=1 the
+//! partition, the routing, the id remapping and the merge are all exact
+//! identities, so the merged report is Debug-byte-identical to what
+//! [`SharpEngine`] produces on the same workload. With N>1 the merged
+//! totals (units, compute-seconds, per-tier traffic) are conserved exactly
+//! against the sum of the shard sections: sums are accumulated in shard
+//! order, makespan is the max over shards, utilization is recomputed as
+//! total compute over total device-seconds, and per-job stats / trace
+//! intervals are remapped back to global device and job ids.
+
+use crate::coordinator::memory::{MemTier, MemoryOptions, TierSpec};
+use crate::coordinator::metrics::{Interval, Trace};
+use crate::coordinator::observer::EngineObserver;
+use crate::coordinator::sched::Policy;
+use crate::coordinator::task::ModelTask;
+use crate::coordinator::unit::ShardUnit;
+use crate::error::{HydraError, Result};
+use crate::exec::ExecutionBackend;
+
+use super::core::{EngineOptions, RunReport, SharpEngine};
+use super::device::{ClusterEvent, DeviceSpec};
+use super::jobs::{JobEvent, JobStat};
+use super::routing::{self, ShardId, ShardMailbox};
+
+/// Default bound of each shard's admission mailbox. Small enough that
+/// routing skew on large pools actually exercises the backpressure path;
+/// admission order — and therefore the schedule — does not depend on it.
+pub const DEFAULT_MAILBOX_CAPACITY: usize = 64;
+
+/// One shard's slice of a finished sharded run.
+#[derive(Debug, Clone)]
+pub struct ShardSection {
+    /// Which shard this section describes.
+    pub shard: ShardId,
+    /// Global device ids owned by the shard, in shard-local id order
+    /// (initial round-robin slice, then mid-run arrivals in firing order).
+    pub devices: Vec<usize>,
+    /// Global job ids routed to the shard, in shard-local id order.
+    pub jobs: Vec<usize>,
+    /// Global job ids the capacity-aware override moved *to* this shard.
+    pub overridden: Vec<usize>,
+    /// [`super::routing::ShardBusy`] signals this shard's mailbox raised
+    /// during admission (each was resolved by a drain-and-retry).
+    pub backpressured: usize,
+    /// The shard engine's own report, in shard-local device/job ids.
+    pub report: RunReport,
+}
+
+/// Merged result of a sharded run: cluster totals plus per-shard sections.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Cluster-level totals with device/job ids remapped to the global
+    /// namespace. With N=1 this is byte-identical (Debug) to the report of
+    /// the single [`SharpEngine`] on the same workload.
+    pub merged: RunReport,
+    /// Per-shard sections, in shard order.
+    pub sections: Vec<ShardSection>,
+}
+
+impl ShardedReport {
+    /// Total mailbox backpressure signals across all shards.
+    pub fn backpressure_events(&self) -> usize {
+        self.sections.iter().map(|s| s.backpressured).sum()
+    }
+}
+
+/// Outcome of one shard's event loop from [`ShardedEngine::run_isolated`]:
+/// shards fail independently, so a thrashing or OOM shard reports its error
+/// here while the other shards' reports stand.
+#[derive(Debug)]
+pub struct ShardOutcome {
+    /// Which shard ran.
+    pub shard: ShardId,
+    /// Global device ids owned by the shard, in shard-local id order.
+    pub devices: Vec<usize>,
+    /// Global job ids routed to the shard, in shard-local id order.
+    pub jobs: Vec<usize>,
+    /// Global job ids the capacity-aware override moved to this shard.
+    pub overridden: Vec<usize>,
+    /// Mailbox backpressure signals raised during admission.
+    pub backpressured: usize,
+    /// The shard's report, or its failure tagged with the shard id.
+    pub outcome: Result<RunReport>,
+}
+
+/// N independent shard engines over one cluster; see the module docs.
+pub struct ShardedEngine<'a> {
+    tasks: Vec<ModelTask>,
+    specs: Vec<DeviceSpec>,
+    memory: MemoryOptions,
+    policy: Policy,
+    backend: &'a mut dyn ExecutionBackend,
+    options: EngineOptions,
+    cluster_events: Vec<ClusterEvent>,
+    job_events: Vec<JobEvent>,
+    mailbox_capacity: usize,
+}
+
+impl<'a> ShardedEngine<'a> {
+    /// Build a sharded engine over an explicit device pool.
+    /// `options.shards` is the shard count N (>= 1, <= number of devices);
+    /// task ids must be dense and in order, exactly as for
+    /// [`SharpEngine::with_devices`].
+    pub fn with_devices(
+        tasks: Vec<ModelTask>,
+        specs: &[DeviceSpec],
+        memory: impl Into<MemoryOptions>,
+        policy: Policy,
+        backend: &'a mut dyn ExecutionBackend,
+        options: EngineOptions,
+    ) -> Result<ShardedEngine<'a>> {
+        if options.shards == 0 {
+            return Err(HydraError::Config("shards must be >= 1".into()));
+        }
+        if specs.is_empty() {
+            return Err(HydraError::Config("no devices".into()));
+        }
+        if specs.len() < options.shards {
+            return Err(HydraError::Config(format!(
+                "{} shards over {} devices (each shard needs at least one device)",
+                options.shards,
+                specs.len()
+            )));
+        }
+        if options.prefetch_depth == 0 {
+            return Err(HydraError::Config(
+                "prefetch_depth must be >= 1 (1 = classic double-buffering)".into(),
+            ));
+        }
+        for (m, t) in tasks.iter().enumerate() {
+            if t.id != m {
+                return Err(HydraError::Config(format!(
+                    "task {m} has id {} (ids must be dense and in order)",
+                    t.id
+                )));
+            }
+        }
+        Ok(ShardedEngine {
+            tasks,
+            specs: specs.to_vec(),
+            memory: memory.into(),
+            policy,
+            backend,
+            options,
+            cluster_events: Vec::new(),
+            job_events: Vec::new(),
+            mailbox_capacity: DEFAULT_MAILBOX_CAPACITY,
+        })
+    }
+
+    /// Register arrival/failure events before `run`. Failures name global
+    /// device ids and are delivered to the owning shard; arriving devices
+    /// join the shard that currently owns the fewest.
+    pub fn with_cluster_events(mut self, events: Vec<ClusterEvent>) -> Self {
+        self.cluster_events = events;
+        self
+    }
+
+    /// Register online submissions/cancellations before `run`. Submitted
+    /// task ids continue the global id sequence in (time-sorted) submission
+    /// order and cancellations name global job ids — the same contract
+    /// [`crate::session::Session`] produces for the single engine.
+    pub fn with_job_events(mut self, events: Vec<JobEvent>) -> Self {
+        self.job_events = events;
+        self
+    }
+
+    /// Override the per-shard mailbox bound (admission order is independent
+    /// of it; only the backpressure counters move).
+    pub fn with_mailbox_capacity(mut self, capacity: usize) -> Self {
+        self.mailbox_capacity = capacity.max(1);
+        self
+    }
+
+    /// Run every shard and merge; equivalent to `run_observed(None)`.
+    pub fn run(self) -> Result<ShardedReport> {
+        self.run_observed(None)
+    }
+
+    /// Run every shard, streaming each shard's events through `obs` with
+    /// device/job ids remapped to the global namespace;
+    /// [`EngineObserver::on_shard_begin`] brackets each shard's stream.
+    /// Returns the merged report, or the first failing shard's error
+    /// (tagged with its shard id) — use [`ShardedEngine::run_isolated`] to
+    /// keep the surviving shards' reports on partial failure.
+    pub fn run_observed(
+        self,
+        obs: Option<&mut dyn EngineObserver>,
+    ) -> Result<ShardedReport> {
+        let outcomes = self.run_isolated(obs)?;
+        let mut sections = Vec::with_capacity(outcomes.len());
+        for o in outcomes {
+            match o.outcome {
+                Ok(report) => sections.push(ShardSection {
+                    shard: o.shard,
+                    devices: o.devices,
+                    jobs: o.jobs,
+                    overridden: o.overridden,
+                    backpressured: o.backpressured,
+                    report,
+                }),
+                Err(e) => return Err(e),
+            }
+        }
+        let merged = merge_sections(&sections);
+        Ok(ShardedReport { merged, sections })
+    }
+
+    /// Run every shard to completion independently and report per-shard
+    /// outcomes: shards fail in isolation, so one shard hitting e.g. the
+    /// memory-hierarchy thrashing error does not stop the others from
+    /// finishing. Errors come back tagged with the owning shard id.
+    /// Returns `Err` only for global configuration problems (malformed
+    /// submit ids, unknown cancel/failure targets).
+    pub fn run_isolated(
+        mut self,
+        mut obs: Option<&mut dyn EngineObserver>,
+    ) -> Result<Vec<ShardOutcome>> {
+        let n = self.options.shards;
+
+        // --- partition devices (round-robin) and memory (equal split) ----
+        let mut shard_specs: Vec<Vec<DeviceSpec>> = vec![Vec::new(); n];
+        let mut device_maps: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (d, &spec) in self.specs.iter().enumerate() {
+            shard_specs[d % n].push(spec);
+            device_maps[d % n].push(d);
+        }
+        let split = |total: u64, i: usize| -> u64 {
+            total / n as u64 + u64::from((i as u64) < total % n as u64)
+        };
+        let memories: Vec<MemoryOptions> = (0..n)
+            .map(|i| MemoryOptions {
+                dram_bytes: split(self.memory.dram_bytes, i),
+                nvme: self.memory.nvme.map(|t| TierSpec {
+                    capacity_bytes: split(t.capacity_bytes, i),
+                    link: t.link,
+                }),
+            })
+            .collect();
+
+        // --- split job events into submissions and cancellations ---------
+        let n_construction = self.tasks.len();
+        let mut submits: Vec<(f64, Option<ModelTask>)> = Vec::new();
+        let mut cancels: Vec<(f64, usize)> = Vec::new();
+        let mut last_submit_time = f64::NEG_INFINITY;
+        for ev in std::mem::take(&mut self.job_events) {
+            match ev {
+                JobEvent::Submit { time, task } => {
+                    let expect = n_construction + submits.len();
+                    if task.id != expect {
+                        return Err(HydraError::Config(format!(
+                            "submitted task has id {} but {expect} jobs precede it \
+                             (ids must follow submission order)",
+                            task.id
+                        )));
+                    }
+                    if time < last_submit_time {
+                        return Err(HydraError::Config(
+                            "mid-run submissions must be ordered by time (the \
+                             ids-follow-submission-order contract)"
+                                .into(),
+                        ));
+                    }
+                    last_submit_time = time;
+                    submits.push((time, Some(task)));
+                }
+                JobEvent::Cancel { time, model } => cancels.push((time, model)),
+            }
+        }
+        let n_jobs = n_construction + submits.len();
+        for &(_, model) in &cancels {
+            if model >= n_jobs {
+                return Err(HydraError::Config(format!(
+                    "cancellation targets unknown job {model} ({n_jobs} jobs known)"
+                )));
+            }
+        }
+
+        // --- deterministic routing through the bounded mailboxes ---------
+        let caps: Vec<u64> = shard_specs
+            .iter()
+            .map(|s| s.iter().map(|d| d.mem_bytes).min().unwrap_or(0))
+            .collect();
+        let largest = |t: &ModelTask| {
+            t.shards.iter().map(|s| s.param_bytes).max().unwrap_or(0)
+        };
+        let footprints: Vec<u64> = self
+            .tasks
+            .iter()
+            .map(&largest)
+            .chain(submits.iter().map(|(_, t)| largest(t.as_ref().unwrap())))
+            .collect();
+        let mut mailboxes: Vec<ShardMailbox<usize>> = (0..n)
+            .map(|i| ShardMailbox::new(ShardId(i), self.mailbox_capacity))
+            .collect();
+        let mut accepted: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut overridden: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut backpressured = vec![0usize; n];
+        for (gid, &bytes) in footprints.iter().enumerate() {
+            let r = routing::route_capacity_aware(gid, bytes, &caps);
+            let s = r.shard.0;
+            if r.overridden {
+                overridden[s].push(gid);
+            }
+            let mut item = gid;
+            loop {
+                match mailboxes[s].try_push(item) {
+                    Ok(()) => break,
+                    Err((back, _busy)) => {
+                        // typed backpressure: resolve by draining this
+                        // shard's mailbox into its accepted list, then retry
+                        // — the submit lands, and FIFO order is preserved
+                        backpressured[s] += 1;
+                        accepted[s].extend(mailboxes[s].drain());
+                        item = back;
+                    }
+                }
+            }
+        }
+        for (s, mb) in mailboxes.iter_mut().enumerate() {
+            accepted[s].extend(mb.drain());
+        }
+
+        // global job id -> (shard, shard-local id)
+        let mut locate = vec![(0usize, 0usize); n_jobs];
+        for (s, ids) in accepted.iter().enumerate() {
+            for (local, &gid) in ids.iter().enumerate() {
+                locate[gid] = (s, local);
+            }
+        }
+
+        // --- build per-shard task lists and job events --------------------
+        let mut construction_slots: Vec<Option<ModelTask>> =
+            std::mem::take(&mut self.tasks).into_iter().map(Some).collect();
+        let mut shard_tasks: Vec<Vec<ModelTask>> = vec![Vec::new(); n];
+        let mut shard_jobs: Vec<Vec<JobEvent>> = vec![Vec::new(); n];
+        for (s, ids) in accepted.iter().enumerate() {
+            for (local, &gid) in ids.iter().enumerate() {
+                if gid < n_construction {
+                    let mut t = construction_slots[gid].take().unwrap();
+                    t.id = local;
+                    shard_tasks[s].push(t);
+                } else {
+                    let (time, slot) = &mut submits[gid - n_construction];
+                    let mut t = slot.take().unwrap();
+                    t.id = local;
+                    shard_jobs[s].push(JobEvent::Submit { time: *time, task: t });
+                }
+            }
+        }
+        // cancels after submits, mirroring the session's event order
+        for (time, model) in cancels {
+            let (s, local) = locate[model];
+            shard_jobs[s].push(JobEvent::Cancel { time, model: local });
+        }
+
+        // --- route cluster events; arrivals extend the device maps --------
+        let mut shard_cluster: Vec<Vec<ClusterEvent>> = vec![Vec::new(); n];
+        let n_initial = self.specs.len();
+        let mut arrivals = 0usize;
+        for ev in std::mem::take(&mut self.cluster_events) {
+            match ev {
+                ClusterEvent::Arrive { time, mem_bytes } => {
+                    // join the emptiest shard (deterministic: lowest id wins
+                    // ties); the new device's global id continues the global
+                    // sequence in event order, its local id the shard's
+                    let s = (0..n).min_by_key(|&s| (device_maps[s].len(), s)).unwrap();
+                    device_maps[s].push(n_initial + arrivals);
+                    arrivals += 1;
+                    shard_cluster[s].push(ClusterEvent::Arrive { time, mem_bytes });
+                }
+                ClusterEvent::Fail { time, device } => {
+                    let owner = device_maps.iter().enumerate().find_map(|(s, ids)| {
+                        ids.iter().position(|&g| g == device).map(|local| (s, local))
+                    });
+                    let Some((s, local)) = owner else {
+                        return Err(HydraError::Config(format!(
+                            "cluster failure targets unknown device {device}"
+                        )));
+                    };
+                    shard_cluster[s].push(ClusterEvent::Fail { time, device: local });
+                }
+            }
+        }
+
+        // --- run each shard's event loop ----------------------------------
+        let mut outcomes = Vec::with_capacity(n);
+        for s in 0..n {
+            let result = run_one_shard(
+                std::mem::take(&mut shard_tasks[s]),
+                &shard_specs[s],
+                memories[s],
+                self.policy,
+                &mut *self.backend,
+                self.options.clone(),
+                std::mem::take(&mut shard_cluster[s]),
+                std::mem::take(&mut shard_jobs[s]),
+                s,
+                n,
+                &device_maps[s],
+                &accepted[s],
+                &mut obs,
+            );
+            outcomes.push(ShardOutcome {
+                shard: ShardId(s),
+                devices: std::mem::take(&mut device_maps[s]),
+                jobs: std::mem::take(&mut accepted[s]),
+                overridden: std::mem::take(&mut overridden[s]),
+                backpressured: backpressured[s],
+                outcome: result,
+            });
+        }
+        Ok(outcomes)
+    }
+}
+
+/// Build and run one shard's [`SharpEngine`]; errors come back tagged with
+/// the shard id (device ids inside OOM errors are remapped to global).
+#[allow(clippy::too_many_arguments)]
+fn run_one_shard(
+    tasks: Vec<ModelTask>,
+    specs: &[DeviceSpec],
+    memory: MemoryOptions,
+    policy: Policy,
+    backend: &mut dyn ExecutionBackend,
+    options: EngineOptions,
+    cluster_events: Vec<ClusterEvent>,
+    job_events: Vec<JobEvent>,
+    shard: usize,
+    n_shards: usize,
+    devices: &[usize],
+    jobs: &[usize],
+    obs: &mut Option<&mut dyn EngineObserver>,
+) -> Result<RunReport> {
+    let run = || -> Result<RunReport> {
+        let mut engine = SharpEngine::with_devices(
+            tasks,
+            specs,
+            memory,
+            policy.build(),
+            backend,
+            options,
+        )?
+        .with_cluster_events(cluster_events)
+        .with_job_events(job_events);
+        match obs {
+            Some(o) => {
+                let o: &mut dyn EngineObserver = &mut **o;
+                o.on_shard_begin(ShardId(shard), n_shards);
+                let mut scope = ShardScope { inner: o, devices, models: jobs };
+                engine.run_observed(Some(&mut scope))
+            }
+            None => engine.run_observed(None),
+        }
+    };
+    run().map_err(|e| tag_shard(e, ShardId(shard), devices))
+}
+
+/// Tag a shard-engine error with its shard id; OOM device ids are remapped
+/// into the global namespace. Message-carrying variants keep their variant
+/// (and so their `Display` prefix) so error-class matching still works.
+fn tag_shard(e: HydraError, shard: ShardId, devices: &[usize]) -> HydraError {
+    match e {
+        HydraError::Config(s) => HydraError::Config(format!("{shard}: {s}")),
+        HydraError::Manifest(s) => HydraError::Manifest(format!("{shard}: {s}")),
+        HydraError::Sched(s) => HydraError::Sched(format!("{shard}: {s}")),
+        HydraError::Exec(s) => HydraError::Exec(format!("{shard}: {s}")),
+        HydraError::DeviceOom { device, needed, free } => HydraError::DeviceOom {
+            device: devices.get(device).copied().unwrap_or(device),
+            needed,
+            free,
+        },
+        other => other,
+    }
+}
+
+/// Observer adapter: remaps one shard's local device/job ids to the global
+/// namespace before forwarding to the caller's observer.
+struct ShardScope<'o> {
+    inner: &'o mut dyn EngineObserver,
+    /// shard-local device id -> global device id
+    devices: &'o [usize],
+    /// shard-local job id -> global job id
+    models: &'o [usize],
+}
+
+impl ShardScope<'_> {
+    fn dev(&self, d: usize) -> usize {
+        self.devices.get(d).copied().unwrap_or(d)
+    }
+
+    fn model(&self, m: usize) -> usize {
+        self.models.get(m).copied().unwrap_or(m)
+    }
+}
+
+impl EngineObserver for ShardScope<'_> {
+    fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
+        let m = self.model(model);
+        self.inner.on_job_arrived(m, name, now);
+    }
+
+    fn on_decision(&mut self, device: usize, model: usize, prefetch: bool, now: f64) {
+        let (d, m) = (self.dev(device), self.model(model));
+        self.inner.on_decision(d, m, prefetch, now);
+    }
+
+    fn on_unit_retired(&mut self, device: usize, unit: &ShardUnit, now: f64) {
+        let mut unit = *unit;
+        unit.model = self.model(unit.model);
+        let d = self.dev(device);
+        self.inner.on_unit_retired(d, &unit, now);
+    }
+
+    fn on_job_finished(&mut self, model: usize, now: f64, cancelled: bool) {
+        let m = self.model(model);
+        self.inner.on_job_finished(m, now, cancelled);
+    }
+
+    fn on_spill(&mut self, device: usize, promoted: u64, demoted: u64, tier: MemTier, now: f64) {
+        let d = self.dev(device);
+        self.inner.on_spill(d, promoted, demoted, tier, now);
+    }
+
+    fn on_interval(&mut self, interval: &Interval) {
+        let mut iv = *interval;
+        iv.device = self.dev(iv.device);
+        iv.model = self.model(iv.model);
+        self.inner.on_interval(&iv);
+    }
+}
+
+/// Merge shard sections into one cluster-level [`RunReport`].
+///
+/// With one section the merge is the identity (the N=1 byte-equivalence
+/// obligation). Otherwise: scalar totals accumulate in shard order,
+/// makespan is the max, utilization is total compute over total
+/// device-seconds, and trace intervals / device windows / job stats are
+/// remapped to global ids (intervals shard-major, jobs in global id order).
+fn merge_sections(sections: &[ShardSection]) -> RunReport {
+    if sections.len() == 1 {
+        return sections[0].report.clone();
+    }
+    let n_jobs = sections.iter().map(|s| s.jobs.len()).sum();
+    let mut trace = Trace::default();
+    let mut jobs: Vec<Option<JobStat>> = vec![None; n_jobs];
+    let mut makespan = 0.0f64;
+    let (mut compute, mut transfer, mut stall, mut wait, mut nvme_secs) =
+        (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let (mut units, mut promoted, mut demoted, mut nvme_p, mut nvme_d) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for sec in sections {
+        let r = &sec.report;
+        makespan = makespan.max(r.makespan);
+        compute += r.compute_secs;
+        transfer += r.transfer_secs;
+        stall += r.stall_secs;
+        wait += r.prefetch_wait_secs;
+        nvme_secs += r.nvme_secs;
+        units += r.units_executed;
+        promoted += r.promoted_bytes;
+        demoted += r.demoted_bytes;
+        nvme_p += r.nvme_promoted_bytes;
+        nvme_d += r.nvme_demoted_bytes;
+        for iv in &r.trace.intervals {
+            let mut iv = *iv;
+            iv.device = sec.devices.get(iv.device).copied().unwrap_or(iv.device);
+            iv.model = sec.jobs.get(iv.model).copied().unwrap_or(iv.model);
+            trace.intervals.push(iv);
+        }
+        for (&d, &w) in &r.trace.device_windows {
+            let g = sec.devices.get(d).copied().unwrap_or(d);
+            trace.device_windows.insert(g, w);
+        }
+        for (local, stat) in r.jobs.iter().enumerate() {
+            let mut stat = stat.clone();
+            stat.model = sec.jobs[local];
+            jobs[stat.model] = Some(stat);
+        }
+    }
+    trace.makespan = makespan;
+    let device_secs = trace.device_seconds();
+    let utilization = if device_secs > 0.0 { compute / device_secs } else { 0.0 };
+    RunReport {
+        trace,
+        makespan,
+        utilization,
+        compute_secs: compute,
+        transfer_secs: transfer,
+        stall_secs: stall,
+        prefetch_wait_secs: wait,
+        units_executed: units,
+        promoted_bytes: promoted,
+        demoted_bytes: demoted,
+        nvme_promoted_bytes: nvme_p,
+        nvme_demoted_bytes: nvme_d,
+        nvme_secs,
+        scheduler: sections
+            .first()
+            .map(|s| s.report.scheduler)
+            .unwrap_or("sharded-lrtf"),
+        jobs: jobs
+            .into_iter()
+            .map(|j| j.expect("every job routed to exactly one shard"))
+            .collect(),
+    }
+}

@@ -10,6 +10,7 @@
 //! live gantt/progress streaming for online runs implement the trait and
 //! pass it to `run_with`.
 
+use crate::coordinator::engine::routing::ShardId;
 use crate::coordinator::memory::MemTier;
 use crate::coordinator::metrics::Interval;
 use crate::coordinator::unit::ShardUnit;
@@ -55,6 +56,13 @@ pub trait EngineObserver {
     /// recorded. This is the trace feed: [`TraceRecorder`] collects these
     /// into [`crate::coordinator::metrics::Trace::intervals`].
     fn on_interval(&mut self, _interval: &Interval) {}
+
+    /// A sharded run ([`crate::coordinator::engine::sharded::ShardedEngine`])
+    /// is about to drive shard `shard` of `n_shards`: every event until the
+    /// next call belongs to that shard (with device/job ids already
+    /// remapped to the global namespace). Single-engine runs never emit
+    /// this.
+    fn on_shard_begin(&mut self, _shard: ShardId, _n_shards: usize) {}
 }
 
 /// The do-nothing observer: the engine's hot path with zero bookkeeping.
@@ -114,6 +122,11 @@ impl EngineObserver for Tee<'_> {
     fn on_interval(&mut self, interval: &Interval) {
         self.0.on_interval(interval);
         self.1.on_interval(interval);
+    }
+
+    fn on_shard_begin(&mut self, shard: ShardId, n_shards: usize) {
+        self.0.on_shard_begin(shard, n_shards);
+        self.1.on_shard_begin(shard, n_shards);
     }
 }
 

@@ -9,7 +9,9 @@
 
 pub use crate::coordinator::engine::{
     ClusterEvent, DeviceSpec, EngineOptions, JobEvent, JobStat, ParallelMode,
-    PrefetchPipeline, PrefetchSlot, QueueKind, RunReport, SharpEngine, StagedShard,
+    PrefetchPipeline, PrefetchSlot, QueueKind, Route, RunReport, ShardBusy,
+    ShardId, ShardMailbox, ShardOutcome, ShardSection, SharpEngine,
+    ShardedEngine, ShardedReport, StagedShard,
 };
 
 pub use crate::coordinator::memory::TransferModel;

@@ -1128,6 +1128,138 @@ pub fn ext_prefetch() -> Result<FigureOutput> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// ext-sharding: shard-count scale sweep
+// ---------------------------------------------------------------------------
+
+/// ext-sharding: scale sweep of the sharded multi-coordinator engine — one
+/// large synthetic pool (64 single-shard models) over clusters that grow
+/// with the shard count (4 devices and 64 GiB of DRAM per shard), k ∈
+/// {1, 2, 4, 8}. Each shard runs its own event loop over its stable-hash
+/// slice of the pool, so the bottleneck shard shrinks as k grows: the
+/// merged makespan must be monotone non-increasing from 1 to 8 shards, and
+/// the k=1 sharded row must equal the unsharded `legacy` arm exactly —
+/// both asserted by figures_smoke, the figure-level restatement of the
+/// differential suite's byte-identity obligation.
+pub fn ext_sharding() -> Result<FigureOutput> {
+    use crate::coordinator::sharp::{DeviceSpec, ShardedEngine, SharpEngine};
+    use crate::exec::SimBackend;
+
+    const MIB: u64 = 1 << 20;
+    const GIB: u64 = 1 << 30;
+    let n_models = 64usize;
+    let per_shard_devices = 4usize;
+    let mk_tasks = || -> Vec<ModelTask> {
+        (0..n_models)
+            .map(|i| {
+                let sd = vec![ShardDesc {
+                    param_bytes: 8 * MIB,
+                    fwd_transfer_bytes: 8 * MIB,
+                    bwd_transfer_bytes: 8 * MIB,
+                    activation_bytes: MIB,
+                    fwd_cost: 0.4,
+                    bwd_cost: 0.8,
+                    n_layers: 1,
+                }];
+                ModelTask::new(i, format!("m{i}"), "ext_sharding", sd, 4, 1, 1e-3)
+            })
+            .collect()
+    };
+    let opts = |shards: usize| EngineOptions {
+        transfer: TransferModel::zero_cost(),
+        record_intervals: false,
+        shards,
+        ..Default::default()
+    };
+    fn push_row(
+        lines: &mut Vec<String>,
+        csv: &mut String,
+        arm: &str,
+        shards: usize,
+        devices: usize,
+        models: usize,
+        r: &RunReport,
+    ) {
+        lines.push(format!(
+            "{:<8} {:<7} {:<8} {:>10} {:>6.2} {:>7}",
+            arm,
+            shards,
+            devices,
+            hours(r.makespan),
+            r.utilization,
+            r.units_executed
+        ));
+        csv.push_str(&format!(
+            "{arm},{shards},{devices},{models},{},{},{}\n",
+            r.makespan / 3600.0,
+            r.utilization,
+            r.units_executed
+        ));
+    }
+    let mut lines = vec![format!(
+        "{:<8} {:<7} {:<8} {:>10} {:>6} {:>7}",
+        "arm", "shards", "devices", "makespan", "util", "units"
+    )];
+    let mut csv =
+        String::from("arm,shards,devices,models,makespan_h,utilization,units\n");
+
+    // unsharded reference: the legacy single engine on the k=1 cluster
+    let specs = vec![DeviceSpec::uniform(GIB); per_shard_devices];
+    let mut backend = SimBackend::deterministic();
+    let legacy = SharpEngine::with_devices(
+        mk_tasks(),
+        &specs,
+        64 * GIB,
+        Policy::ShardedLrtf.build(),
+        &mut backend,
+        opts(1),
+    )?
+    .run()?;
+    push_row(
+        &mut lines,
+        &mut csv,
+        "legacy",
+        1,
+        per_shard_devices,
+        n_models,
+        &legacy,
+    );
+
+    for k in [1usize, 2, 4, 8] {
+        let devices = per_shard_devices * k;
+        let specs = vec![DeviceSpec::uniform(GIB); devices];
+        let mut backend = SimBackend::deterministic();
+        let report = ShardedEngine::with_devices(
+            mk_tasks(),
+            &specs,
+            64 * GIB * k as u64,
+            Policy::ShardedLrtf,
+            &mut backend,
+            opts(k),
+        )?
+        .run()?;
+        push_row(
+            &mut lines,
+            &mut csv,
+            "sharded",
+            k,
+            devices,
+            n_models,
+            &report.merged,
+        );
+    }
+    lines.push("(each shard owns 4 devices and an equal DRAM slice; jobs route by".into());
+    lines.push(" stable hash, so the bottleneck shard shrinks as the shard count".into());
+    lines.push(" grows. The k=1 sharded row must equal the legacy row exactly.)".into());
+    Ok(FigureOutput {
+        id: "ext_sharding",
+        title: "Extension: sharded multi-coordinator scale sweep (1/2/4/8 shards)"
+            .into(),
+        lines,
+        csv,
+    })
+}
+
 /// All figure generators by id.
 pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
     match id {
@@ -1145,13 +1277,14 @@ pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
         "ext_hierarchy" => Some(ext_hierarchy()),
         "ext_selection" => Some(ext_selection()),
         "ext_prefetch" => Some(ext_prefetch()),
+        "ext_sharding" => Some(ext_sharding()),
         _ => None,
     }
 }
 
 /// Every figure/table id, in presentation order.
-pub const ALL_IDS: [&str; 14] = [
+pub const ALL_IDS: [&str; 15] = [
     "table2", "fig6", "fig7", "fig8", "fig9a", "fig9b", "fig10", "table3",
     "ext_sched", "ext_buffer", "ext_online", "ext_hierarchy", "ext_selection",
-    "ext_prefetch",
+    "ext_prefetch", "ext_sharding",
 ];

@@ -52,18 +52,18 @@ USAGE:
   hydra simulate [--models 12] [--params-m 1000] [--devices 8]
                 [--minibatches 6] [--scheduler sharded-lrtf]
                 [--no-double-buffer] [--sequential] [--scan-queue]
-                [--prefetch-depth 1] [--dram-gib 500]
+                [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
                 [--scheduler sharded-lrtf] [--progress] [--gantt]
-                [--prefetch-depth 1] [--dram-gib 500]
+                [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
   hydra search  --space lr=1e-4..1e-2:log,layers=12,24,48
                 [--algo grid|random|asha] [--pool a4000:4] [--trials N]
                 [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
                 [--grid-points 3] [--seed 7] [--stagger 0]
-                [--scheduler sharded-lrtf] [--prefetch-depth 1]
+                [--scheduler sharded-lrtf] [--prefetch-depth 1] [--shards 1]
                 [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
                 | --spec search.json
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
@@ -112,6 +112,10 @@ fn main() {
 }
 
 fn engine_options(args: &Args) -> Result<EngineOptions, String> {
+    let shards = args.opt_usize("shards", 1)?;
+    if shards == 0 {
+        return Err("shards must be >= 1".into());
+    }
     Ok(EngineOptions {
         mode: if args.flag("sequential") {
             ParallelMode::Sequential
@@ -126,6 +130,7 @@ fn engine_options(args: &Args) -> Result<EngineOptions, String> {
         } else {
             QueueKind::Heap
         },
+        shards,
         ..Default::default()
     })
 }

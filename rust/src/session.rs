@@ -30,7 +30,8 @@ use crate::coordinator::memory::{MemoryOptions, TierSpec};
 use crate::coordinator::observer::EngineObserver;
 use crate::coordinator::partitioner::PartitionPolicy;
 use crate::coordinator::sharp::{
-    ClusterEvent, EngineOptions, JobEvent, JobStat, RunReport, SharpEngine,
+    ClusterEvent, EngineOptions, JobEvent, JobStat, RunReport, ShardSection,
+    SharpEngine, ShardedEngine,
 };
 use crate::coordinator::task::ModelTask;
 use crate::coordinator::Cluster;
@@ -178,6 +179,20 @@ impl SessionBuilder {
     /// struct).
     pub fn prefetch_depth(mut self, depth: usize) -> SessionBuilder {
         self.options.prefetch_depth = depth;
+        self
+    }
+
+    /// Partition the cluster into `n` independent coordinator shards
+    /// (ROADMAP item 1): jobs are routed to shards by a stable hash of the
+    /// job id through bounded mailboxes, each shard runs its own event
+    /// loop over its own device slice / DRAM split / prefetch pipelines,
+    /// and the merged report (plus [`SessionReport::shard_sections`])
+    /// comes back. `n = 1` — the default — is the single global engine;
+    /// sharding requires the sim/custom backends. Call after
+    /// [`SessionBuilder::options`] (which replaces the whole options
+    /// struct).
+    pub fn shards(mut self, n: usize) -> SessionBuilder {
+        self.options.shards = n;
         self
     }
 
@@ -441,6 +456,16 @@ impl Session {
         if jobs.is_empty() {
             return Err(HydraError::Config("no jobs submitted".into()));
         }
+        if options.shards == 0 {
+            return Err(HydraError::Config("shards must be >= 1".into()));
+        }
+        if options.shards > 1 && matches!(backend, Backend::Real { .. }) {
+            return Err(HydraError::Config(
+                "shards > 1 requires the sim/custom backend (the real PJRT \
+                 backend drives one global coordinator)"
+                    .into(),
+            ));
+        }
 
         // Engine model ids: construction jobs first in submission order,
         // then mid-run submissions in (time, submission order) — the
@@ -521,7 +546,12 @@ impl Session {
                     obs,
                 )?;
                 let losses = (0..n).map(|m| real.loss_log(m).to_vec()).collect();
-                Ok(SessionReport { run, losses, model_of_job })
+                Ok(SessionReport {
+                    run,
+                    losses,
+                    model_of_job,
+                    shard_sections: Vec::new(),
+                })
             }
             sim_or_custom => {
                 let mut tasks: Vec<ModelTask> = Vec::with_capacity(n_construction);
@@ -538,8 +568,8 @@ impl Session {
                     }
                 }
                 job_events.extend(cancel_events);
-                let run = match sim_or_custom {
-                    Backend::Sim { noise, seed } => drive(
+                let (run, shard_sections) = match sim_or_custom {
+                    Backend::Sim { noise, seed } => drive_any(
                         &mut SimBackend::new(noise, seed),
                         tasks,
                         &cluster,
@@ -550,7 +580,7 @@ impl Session {
                         job_events,
                         obs,
                     )?,
-                    Backend::Custom(mut custom) => drive(
+                    Backend::Custom(mut custom) => drive_any(
                         &mut *custom,
                         tasks,
                         &cluster,
@@ -563,7 +593,12 @@ impl Session {
                     )?,
                     Backend::Real { .. } => unreachable!("handled above"),
                 };
-                Ok(SessionReport { run, losses: Vec::new(), model_of_job })
+                Ok(SessionReport {
+                    run,
+                    losses: Vec::new(),
+                    model_of_job,
+                    shard_sections,
+                })
             }
         }
     }
@@ -596,6 +631,50 @@ fn drive(
     engine.run_observed(obs)
 }
 
+/// Dispatch between the single global engine (`shards == 1`, via [`drive`])
+/// and the sharded multi-coordinator engine (`shards > 1`); the sharded
+/// path additionally returns the per-shard sections.
+#[allow(clippy::too_many_arguments)]
+fn drive_any(
+    backend: &mut dyn ExecutionBackend,
+    tasks: Vec<ModelTask>,
+    cluster: &Cluster,
+    memory: MemoryOptions,
+    policy: Policy,
+    options: EngineOptions,
+    cluster_events: Vec<ClusterEvent>,
+    job_events: Vec<JobEvent>,
+    obs: Option<&mut dyn EngineObserver>,
+) -> Result<(RunReport, Vec<ShardSection>)> {
+    if options.shards > 1 {
+        let report = ShardedEngine::with_devices(
+            tasks,
+            &cluster.devices,
+            memory,
+            policy,
+            backend,
+            options,
+        )?
+        .with_cluster_events(cluster_events)
+        .with_job_events(job_events)
+        .run_observed(obs)?;
+        Ok((report.merged, report.sections))
+    } else {
+        let run = drive(
+            backend,
+            tasks,
+            cluster,
+            memory,
+            policy,
+            options,
+            cluster_events,
+            job_events,
+            obs,
+        )?;
+        Ok((run, Vec::new()))
+    }
+}
+
 /// Everything a caller can inspect after [`Session::run`].
 #[derive(Debug, Clone)]
 pub struct SessionReport {
@@ -605,6 +684,10 @@ pub struct SessionReport {
     /// Per-model loss logs in engine-id order (real backend; empty for
     /// sim/custom runs). Prefer [`SessionReport::losses_for`].
     pub losses: Vec<Vec<(u64, f32)>>,
+    /// Per-shard report sections when the run was sharded
+    /// ([`SessionBuilder::shards`] with n > 1); empty for single-engine
+    /// runs. `run` holds the merged cluster totals either way.
+    pub shard_sections: Vec<ShardSection>,
     /// Engine model id per submission index.
     model_of_job: Vec<usize>,
 }

@@ -220,6 +220,49 @@ fn ext_prefetch_depth_cuts_stalls_under_nvme_pressure() {
 }
 
 #[test]
+fn ext_sharding_makespan_monotone_and_n1_matches_legacy() {
+    let fig = figures::ext_sharding().unwrap();
+    // csv: arm,shards,devices,models,makespan_h,utilization,units
+    let rows: Vec<Vec<String>> = fig
+        .csv
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(str::to_string).collect())
+        .collect();
+    let legacy: Vec<&Vec<String>> =
+        rows.iter().filter(|r| r[0] == "legacy").collect();
+    let sharded: Vec<&Vec<String>> =
+        rows.iter().filter(|r| r[0] == "sharded").collect();
+    assert_eq!(legacy.len(), 1, "one unsharded reference row expected");
+    assert_eq!(sharded.len(), 4, "one sharded row per shard count");
+    let shard_counts: Vec<usize> =
+        sharded.iter().map(|r| r[1].parse().unwrap()).collect();
+    assert_eq!(shard_counts, vec![1, 2, 4, 8]);
+    // every arm retires the full pool: 64 models x 8 units
+    for r in rows.iter() {
+        assert_eq!(r[6].parse::<u64>().unwrap(), 64 * 8, "{r:?}");
+    }
+    // the scale claim: makespan is monotone non-increasing from 1 to 8
+    // shards (the bottleneck hash bucket shrinks with every doubling)
+    let makespans: Vec<f64> =
+        sharded.iter().map(|r| r[4].parse().unwrap()).collect();
+    for w in makespans.windows(2) {
+        assert!(
+            w[1] <= w[0],
+            "makespan increased with more shards: {makespans:?}"
+        );
+    }
+    // the equivalence claim, restated at figure level: the k=1 sharded arm
+    // equals the unsharded legacy arm column for column (exact strings —
+    // the underlying f64s must be bit-identical, not merely close)
+    assert_eq!(
+        legacy[0][4..],
+        sharded[0][4..],
+        "k=1 sharded arm diverged from the legacy engine"
+    );
+}
+
+#[test]
 fn search_outcomes_are_invariant_to_prefetch_depth() {
     // ASHA rung outcomes come from the deterministic loss oracle, which is
     // independent of scheduling — so promotions, prunes and the winner must
