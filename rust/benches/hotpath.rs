@@ -19,7 +19,7 @@ use hydra::session::{Backend, Policy, Session};
 use hydra::util::bench::{bench, write_json, Measurement};
 use hydra::util::json::Json;
 use hydra::util::rng::Rng;
-use hydra::{NoopObserver, TraceRecorder};
+use hydra::{DurabilityOptions, NoopObserver, TraceRecorder};
 
 const GIB: u64 = 1 << 30;
 const MIB: u64 = 1 << 20;
@@ -159,6 +159,40 @@ fn main() {
             std::hint::black_box((r, rec.intervals.len()));
         },
     ));
+    // Third arm: every event CRC-framed and appended to the on-disk WAL
+    // (BufWriter-batched, flushed only at snapshots/finish). The durable
+    // run must stay close to the noop arm — durability is not allowed to
+    // become the dispatch bottleneck.
+    let wal_path = std::env::temp_dir()
+        .join(format!("hydra-bench-{}.wal", std::process::id()));
+    ms.push(bench(
+        &format!("engine[observer=wal]: {units} units, event WAL"),
+        runs,
+        units,
+        || {
+            let mut session = Session::builder(Cluster::uniform(8, GIB, 64 * GIB))
+                .backend(Backend::sim())
+                .policy(Policy::ShardedLrtf)
+                .options(no_trace_opts())
+                .durability(DurabilityOptions::new(&wal_path))
+                .build()
+                .unwrap();
+            for t in tasks(16, 4, mbs) {
+                session.submit(t).unwrap();
+            }
+            std::hint::black_box(session.run().unwrap().run.units_executed);
+        },
+    ));
+    let _ = std::fs::remove_file(&wal_path);
+    let noop_ns = ms[ms.len() - 3].ns_per_iter();
+    let wal_ns = ms[ms.len() - 1].ns_per_iter();
+    let budget = if smoke { 2.0 } else { 1.10 };
+    assert!(
+        wal_ns <= noop_ns * budget,
+        "WAL observer overhead {:.2}x exceeds the {budget:.2}x budget \
+         ({wal_ns:.1} vs {noop_ns:.1} ns/unit)",
+        wal_ns / noop_ns
+    );
 
     // --- prefetch pipeline depth under NVMe pressure ----------------------
     // Depth 1 is the classic double buffer; depth 4 overlaps the NVMe and

@@ -40,6 +40,7 @@
 //! algorithm + eta/rungs) instead of `"tasks"`, consumed by
 //! `hydra search --spec <file>`.
 
+use crate::coordinator::durability::{DurabilityOptions, WalRecord, WalWriter};
 use crate::coordinator::memory::TierSpec;
 use crate::coordinator::sched::Policy;
 use crate::coordinator::sharp::{DeviceSpec, EngineOptions, ParallelMode, QueueKind};
@@ -80,7 +81,14 @@ impl WorkloadSpec {
     pub fn parse(text: &str) -> Result<WorkloadSpec> {
         let j = Json::parse(text)?;
         let (cluster, nvme, _reference) = parse_cluster(&j)?;
-        let (engine, policy, early_stop) = parse_engine(&j)?;
+        let (engine, policy, early_stop, durability) = parse_engine(&j)?;
+        if durability.is_some() {
+            return Err(cerr(
+                "engine.wal durability applies to sim runs and searches; \
+                 real-backend workloads execute measured wallclock, which is \
+                 not replayable",
+            ));
+        }
 
         // --- tasks ------------------------------------------------------------
         let tasks_json = j
@@ -233,12 +241,15 @@ fn parse_cluster(j: &Json) -> Result<(Cluster, Option<TierSpec>, Option<GpuSpec>
 }
 
 /// Parse the optional `"engine"` object shared by [`WorkloadSpec`] and
-/// [`SearchWorkload`]: engine knobs, scheduler policy, and the median
-/// early-stop threshold.
-fn parse_engine(j: &Json) -> Result<(EngineOptions, Policy, Option<u32>)> {
+/// [`SearchWorkload`]: engine knobs, scheduler policy, the median
+/// early-stop threshold, and durability (`"wal"` / `"snapshot_every"`).
+fn parse_engine(
+    j: &Json,
+) -> Result<(EngineOptions, Policy, Option<u32>, Option<DurabilityOptions>)> {
     let mut engine = EngineOptions::default();
     let mut policy = Policy::default();
     let mut early_stop = None;
+    let mut durability = None;
     if let Some(e) = j.get("engine") {
         if let Some(s) = e.get("scheduler").and_then(Json::as_str) {
             policy = s.parse::<Policy>()?;
@@ -287,8 +298,25 @@ fn parse_engine(j: &Json) -> Result<(EngineOptions, Policy, Option<u32>)> {
                 }
             };
         }
+        if let Some(w) = e.get("wal") {
+            let path = w
+                .as_str()
+                .ok_or_else(|| cerr("engine.wal must be a path string"))?;
+            durability = Some(DurabilityOptions::new(path));
+        }
+        if let Some(n) = e.get("snapshot_every").and_then(Json::as_u64) {
+            match durability.as_mut() {
+                Some(d) => d.snapshot_every = n,
+                None => {
+                    return Err(cerr(
+                        "engine.snapshot_every needs engine.wal (snapshots \
+                         are a sidecar of the event WAL)",
+                    ))
+                }
+            }
+        }
     }
-    Ok((engine, policy, early_stop))
+    Ok((engine, policy, early_stop, durability))
 }
 
 /// A declarative model-selection search — the `"search"` counterpart of
@@ -321,6 +349,13 @@ pub struct SearchWorkload {
     pub policy: Policy,
     /// The search itself: space + algorithm + per-trial shape.
     pub search: Search,
+    /// Durability (`engine.wal` / `engine.snapshot_every`): the spec text
+    /// becomes the WAL's genesis record and every trial-driving engine
+    /// event is appended, so `hydra recover` can re-drive the search.
+    pub durability: Option<DurabilityOptions>,
+    /// The raw spec text this workload was parsed from — what a durable
+    /// search writes as its genesis.
+    raw: String,
 }
 
 impl SearchWorkload {
@@ -332,7 +367,7 @@ impl SearchWorkload {
     pub fn parse(text: &str) -> Result<SearchWorkload> {
         let j = Json::parse(text)?;
         let (cluster, nvme, reference) = parse_cluster(&j)?;
-        let (mut engine, policy, early_stop) = parse_engine(&j)?;
+        let (mut engine, policy, early_stop, durability) = parse_engine(&j)?;
         if early_stop.is_some() {
             return Err(cerr(
                 "engine.early_stop_median_after is a real-backend workload key \
@@ -390,7 +425,15 @@ impl SearchWorkload {
         if let Some(r) = reference {
             search.reference = r;
         }
-        Ok(SearchWorkload { cluster, nvme, engine, policy, search })
+        Ok(SearchWorkload {
+            cluster,
+            nvme,
+            engine,
+            policy,
+            search,
+            durability,
+            raw: text.to_string(),
+        })
     }
 
     /// Build the sim-backend [`Session`] this spec searches on.
@@ -402,11 +445,25 @@ impl SearchWorkload {
         if let Some(tier) = self.nvme {
             builder = builder.nvme(tier);
         }
+        if let Some(dur) = &self.durability {
+            builder = builder.durability(dur.clone());
+        }
         builder.build()
     }
 
     /// Run the whole search ([`Session::run_search`]).
+    ///
+    /// With durability configured, the WAL is created first with this
+    /// spec's raw JSON as its genesis record; the search driver wraps the
+    /// backend, so the session appends every trial-driving engine event
+    /// after it (record-only mode). [`crate::coordinator::durability::recover`]
+    /// re-drives the search from the genesis text.
     pub fn run(&self) -> Result<SearchReport> {
+        if let Some(dur) = &self.durability {
+            let mut wal = WalWriter::create(&dur.wal)?;
+            wal.append(&WalRecord::GenesisSearch(self.raw.clone()));
+            wal.finish()?;
+        }
         self.session()?.run_search(&self.search)
     }
 }
@@ -733,6 +790,43 @@ mod tests {
             format!("{err}").contains("early_stop_median_after"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn wal_keys_parse_and_gate_correctly() {
+        // searches accept engine.wal + engine.snapshot_every
+        let s = SearchWorkload::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":16384},
+                "engine": {"wal": "/tmp/x.wal", "snapshot_every": 64},
+                "search": {"space": "lr=1e-4..1e-2:log"}}"#,
+        )
+        .unwrap();
+        let d = s.durability.as_ref().unwrap();
+        assert_eq!(d.wal, std::path::PathBuf::from("/tmp/x.wal"));
+        assert_eq!(d.snapshot_every, 64);
+        // snapshot_every without a wal is rejected
+        let err = SearchWorkload::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":16384},
+                "engine": {"snapshot_every": 64},
+                "search": {"space": "lr=1e-4..1e-2:log"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("snapshot_every"), "{err}");
+        // real-backend workload specs reject durability outright
+        let err = WorkloadSpec::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":1},
+                "engine": {"wal": "/tmp/x.wal"},
+                "tasks":[{"config":"x","minibatches":1}]}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("wal"), "{err}");
+        // and a non-string wal is a typed config error
+        assert!(SearchWorkload::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":16384},
+                "engine": {"wal": 7},
+                "search": {"space": "lr=1e-4..1e-2:log"}}"#,
+        )
+        .is_err());
     }
 
     #[test]

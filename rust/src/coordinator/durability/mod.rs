@@ -1,0 +1,59 @@
+//! Durability subsystem: event WAL, snapshots, deterministic replay and
+//! crash recovery.
+//!
+//! The engine runs in virtual time and is a deterministic function of its
+//! inputs, so durability splits cleanly in two:
+//!
+//! * the **WAL** ([`wal`]) makes a run *auditable and recoverable* — the
+//!   first record is the complete run recipe (genesis), every later record
+//!   is one engine event, each length-prefixed and CRC-checksummed so a
+//!   torn tail is detected and clipped, never trusted;
+//! * **snapshots** ([`snapshot`]) make recovery *cheap* — a periodic full
+//!   engine-state dump in an atomically-replaced sidecar bounds the
+//!   re-execution suffix after a crash.
+//!
+//! [`replay`] ties them together: `replay(wal)` re-runs the genesis and is
+//! Debug-byte-identical to the original report; `recover(wal)` restores
+//! the latest snapshot and runs forward (falling back to replay), which is
+//! what `hydra recover` and the fault-injection drills exercise.
+//!
+//! Wired in via [`crate::session::SessionBuilder::durability`], the
+//! `"wal"` / `"snapshot_every"` engine config keys, and the `--wal` /
+//! `--snapshot-every` CLI flags.
+
+pub mod replay;
+pub mod snapshot;
+pub mod wal;
+
+use std::path::PathBuf;
+
+pub use replay::{recover, replay, Recovered};
+pub use snapshot::{read_snapshot, snapshot_path, write_snapshot, Snapshot};
+pub use wal::{scan_wal, Genesis, RunSpec, ScannedWal, WalRecord, WalWriter};
+
+pub(crate) use replay::run_durable;
+
+/// Where and how often a session persists its durability state.
+#[derive(Debug, Clone)]
+pub struct DurabilityOptions {
+    /// WAL path. The snapshot sidecar lives next to it at `<wal>.snap`;
+    /// sharded runs add `<wal>.shard<k>` per shard.
+    pub wal: PathBuf,
+    /// Take a full engine-state snapshot every this many dispatched
+    /// events. `0` (the default) disables snapshots: the WAL alone still
+    /// supports full replay, recovery just re-runs from the genesis.
+    pub snapshot_every: u64,
+}
+
+impl DurabilityOptions {
+    /// Durability with the WAL at `wal` and snapshots disabled.
+    pub fn new(wal: impl Into<PathBuf>) -> DurabilityOptions {
+        DurabilityOptions { wal: wal.into(), snapshot_every: 0 }
+    }
+
+    /// Enable snapshots every `n` dispatched events (`0` disables).
+    pub fn snapshot_every(mut self, n: u64) -> DurabilityOptions {
+        self.snapshot_every = n;
+        self
+    }
+}

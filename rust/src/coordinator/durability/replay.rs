@@ -1,0 +1,470 @@
+//! Replay and crash recovery.
+//!
+//! Three entry points, all built on the same fact — the engine is a
+//! deterministic function of its genesis:
+//!
+//! * [`run_durable`]: the durable run loop. Writes the genesis, streams
+//!   every engine event into the WAL, and (single-engine runs) persists a
+//!   full state snapshot every `snapshot_every` dispatched events.
+//! * [`replay`]: pure replay. Reads nothing but the genesis record and
+//!   re-runs it; the result is Debug-byte-identical to the original run.
+//! * [`recover`]: crash recovery. Prefers snapshot + forward-run (bounded
+//!   work: only the suffix after the last snapshot re-executes); falls
+//!   back to genesis replay when there is no usable snapshot — including
+//!   sharded runs, whose N interleaved engines have no single-point state.
+//!
+//! Recovery path:
+//!
+//! ```text
+//!             scan_wal(path)
+//!                  |
+//!         +--------+---------+
+//!         v                  v
+//!   Genesis::Run        Genesis::Search
+//!         |                  |
+//!   .snap sidecar?      re-run spec JSON
+//!    |          |       (durability off)
+//!    v          v
+//!  restore    replay
+//!  + step     genesis
+//!  forward    from 0
+//!    |          |
+//!    +----+-----+
+//!         v
+//!  identical RunReport
+//! ```
+
+use std::path::Path;
+
+use crate::coordinator::memory::MemTier;
+use crate::coordinator::metrics::Interval;
+use crate::coordinator::observer::{EngineObserver, NoopObserver, TraceRecorder};
+use crate::coordinator::sharp::{RunReport, ShardId, ShardSection, SharpEngine};
+use crate::coordinator::unit::ShardUnit;
+use crate::error::{HydraError, Result};
+use crate::exec::SimBackend;
+use crate::selection::SearchReport;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+use super::snapshot::{read_snapshot, snapshot_path, write_snapshot, Snapshot};
+use super::wal::{scan_wal, Genesis, RunSpec, WalRecord, WalWriter};
+use super::DurabilityOptions;
+
+/// The observer a durable run installs: every event goes to the WAL, then
+/// to the trace recorder (when the run records intervals), then to the
+/// user's own observer.
+pub(crate) struct DurableTap<'o> {
+    pub(crate) wal: WalWriter,
+    pub(crate) rec: Option<TraceRecorder>,
+    pub(crate) user: Option<&'o mut dyn EngineObserver>,
+}
+
+impl EngineObserver for DurableTap<'_> {
+    fn on_job_submitted(&mut self, model: usize, name: &str, now: f64) {
+        self.wal.on_job_submitted(model, name, now);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_job_submitted(model, name, now);
+        }
+    }
+
+    fn on_job_cancel_requested(&mut self, model: usize, now: f64) {
+        self.wal.on_job_cancel_requested(model, now);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_job_cancel_requested(model, now);
+        }
+    }
+
+    fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
+        self.wal.on_job_arrived(model, name, now);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_job_arrived(model, name, now);
+        }
+    }
+
+    fn on_decision(&mut self, device: usize, model: usize, prefetch: bool, now: f64) {
+        self.wal.on_decision(device, model, prefetch, now);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_decision(device, model, prefetch, now);
+        }
+    }
+
+    fn on_unit_retired(&mut self, device: usize, unit: &ShardUnit, now: f64) {
+        self.wal.on_unit_retired(device, unit, now);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_unit_retired(device, unit, now);
+        }
+    }
+
+    fn on_job_finished(&mut self, model: usize, now: f64, cancelled: bool) {
+        self.wal.on_job_finished(model, now, cancelled);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_job_finished(model, now, cancelled);
+        }
+    }
+
+    fn on_spill(&mut self, device: usize, promoted: u64, demoted: u64, tier: MemTier, now: f64) {
+        self.wal.on_spill(device, promoted, demoted, tier, now);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_spill(device, promoted, demoted, tier, now);
+        }
+    }
+
+    fn on_interval(&mut self, interval: &Interval) {
+        self.wal.on_interval(interval);
+        if let Some(rec) = self.rec.as_mut() {
+            rec.intervals.push(*interval);
+        }
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_interval(interval);
+        }
+    }
+
+    fn on_shard_begin(&mut self, shard: ShardId, n_shards: usize) {
+        self.wal.on_shard_begin(shard, n_shards);
+        if let Some(u) = self.user.as_deref_mut() {
+            u.on_shard_begin(shard, n_shards);
+        }
+    }
+}
+
+/// Persist the engine's complete state to the snapshot sidecar.
+fn take_snapshot(
+    path: &Path,
+    dispatched: u64,
+    engine: &SharpEngine<'_>,
+    rec: Option<&TraceRecorder>,
+) -> Result<()> {
+    let backend_rng = engine.backend.sim_rng_state().ok_or_else(|| {
+        HydraError::Config(
+            "durability snapshots need the sim backend (the real backend's \
+             wallclock is not replayable)"
+                .into(),
+        )
+    })?;
+    let mut w = ByteWriter::new();
+    engine.encode_state(&mut w);
+    let snap = Snapshot {
+        events_dispatched: dispatched,
+        backend_rng,
+        intervals: rec.map(|r| r.intervals.clone()).unwrap_or_default(),
+        engine_state: w.into_inner(),
+    };
+    write_snapshot(path, &snap)
+}
+
+/// Run `spec` durably: genesis + every event into a fresh WAL at
+/// `dur.wal`, snapshots every `dur.snapshot_every` dispatched events
+/// (single-engine runs; sharded runs log per-shard WALs but have no
+/// single-point snapshot and recover by genesis replay). The report is
+/// byte-identical to a non-durable run of the same spec.
+pub(crate) fn run_durable(
+    spec: &RunSpec,
+    dur: &DurabilityOptions,
+    user: Option<&mut dyn EngineObserver>,
+) -> Result<(RunReport, Vec<ShardSection>)> {
+    let mut wal = WalWriter::create(&dur.wal)?;
+    wal.append(&WalRecord::GenesisRun(spec.clone()));
+    let mut backend = SimBackend::new(spec.noise, spec.backend_seed);
+
+    if spec.options.shards > 1 {
+        let mut tap = DurableTap { wal, rec: None, user };
+        let (report, sections) = spec.run_on(&mut backend, Some(&mut tap))?;
+        tap.wal.append(&WalRecord::RunEnd { makespan: report.makespan });
+        tap.wal.finish()?;
+        return Ok((report, sections));
+    }
+
+    let snap_path = snapshot_path(&dur.wal);
+    let mut tap = DurableTap {
+        wal,
+        rec: spec.options.record_intervals.then(TraceRecorder::default),
+        user,
+    };
+    let mut engine = SharpEngine::with_devices(
+        spec.tasks.clone(),
+        &spec.devices,
+        spec.memory,
+        spec.policy.build(),
+        &mut backend,
+        spec.options.clone(),
+    )?
+    .with_cluster_events(spec.cluster_events.clone())
+    .with_job_events(spec.job_events.clone());
+
+    engine.prime(&mut tap);
+    let mut dispatched: u64 = 0;
+    while engine.step(&mut tap)? {
+        dispatched += 1;
+        if dur.snapshot_every > 0 && dispatched % dur.snapshot_every == 0 {
+            tap.wal.append(&WalRecord::SnapshotMark { events_dispatched: dispatched });
+            // the WAL on disk must never lag the snapshot that marks it
+            tap.wal.flush();
+            take_snapshot(&snap_path, dispatched, &engine, tap.rec.as_ref())?;
+        }
+    }
+    let mut report = engine.finalize()?;
+    if let Some(rec) = tap.rec.take() {
+        report.trace.intervals = rec.intervals;
+    }
+    tap.wal.append(&WalRecord::RunEnd { makespan: report.makespan });
+    tap.wal.finish()?;
+    Ok((report, Vec::new()))
+}
+
+/// Pure replay: re-run the WAL's genesis from nothing and return the
+/// report, Debug-byte-identical to the original run's. Ignores snapshots
+/// and the event suffix entirely — determinism is the proof.
+pub fn replay(wal: &Path) -> Result<RunReport> {
+    match scan_wal(wal)?.genesis {
+        Genesis::Run(spec) => spec.run(None),
+        Genesis::Search(_) => Err(HydraError::Config(
+            "this WAL records a model-selection search, not an engine run; \
+             use `hydra recover` instead"
+                .into(),
+        )),
+    }
+}
+
+/// What [`recover`] produced: an engine run's report or a re-driven
+/// search's report, depending on the WAL's genesis.
+#[derive(Debug)]
+pub enum Recovered {
+    /// The WAL recorded an engine run.
+    Run(RunReport),
+    /// The WAL recorded a model-selection search.
+    Search(SearchReport),
+}
+
+/// Recover the run (or search) a WAL belongs to after a crash.
+///
+/// Engine runs resume from the snapshot sidecar when one is present and
+/// intact — only the suffix after the snapshot re-executes — and fall back
+/// to genesis replay otherwise (missing/corrupt sidecar, sharded runs).
+/// Search WALs re-drive the recorded spec JSON with durability disabled
+/// (recovery must never clobber the WAL it is reading). Either way the
+/// result is byte-identical to what the uninterrupted run would have
+/// produced.
+pub fn recover(wal: &Path) -> Result<Recovered> {
+    match scan_wal(wal)?.genesis {
+        Genesis::Run(spec) => Ok(Recovered::Run(recover_run(wal, &spec)?)),
+        Genesis::Search(text) => {
+            let mut workload = crate::config::SearchWorkload::parse(&text)?;
+            workload.durability = None;
+            Ok(Recovered::Search(workload.run()?))
+        }
+    }
+}
+
+fn recover_run(wal: &Path, spec: &RunSpec) -> Result<RunReport> {
+    if spec.options.shards <= 1 {
+        match read_snapshot(&snapshot_path(wal)) {
+            Ok(Some(snap)) => match resume_from(spec, &snap) {
+                Ok(report) => return Ok(report),
+                // corrupt snapshot state: degrade to full replay
+                Err(HydraError::WalCorrupt(_)) => {}
+                Err(e) => return Err(e),
+            },
+            Ok(None) => {}
+            // corrupt sidecar framing: likewise degrade to full replay
+            Err(HydraError::WalCorrupt(_)) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    spec.run(None)
+}
+
+/// Rebuild the engine from the genesis skeleton + snapshot state and run
+/// it forward to completion.
+fn resume_from(spec: &RunSpec, snap: &Snapshot) -> Result<RunReport> {
+    let mut backend = SimBackend::from_state(spec.noise, snap.backend_rng);
+    let mut engine = SharpEngine::with_devices(
+        spec.tasks.clone(),
+        &spec.devices,
+        spec.memory,
+        spec.policy.build(),
+        &mut backend,
+        spec.options.clone(),
+    )?
+    // Cluster events stay registered: queued `Event::Cluster(i)` entries in
+    // the restored queue index into this list. Job events deliberately do
+    // NOT: a resumed engine never primes, and the snapshot's queue already
+    // carries every submit/cancel event.
+    .with_cluster_events(spec.cluster_events.clone());
+    let mut r = ByteReader::new(&snap.engine_state);
+    engine.restore_state(&mut r)?;
+    r.expect_end()?;
+
+    if spec.options.record_intervals {
+        let mut rec = TraceRecorder { intervals: snap.intervals.clone() };
+        while engine.step(&mut rec)? {}
+        let mut report = engine.finalize()?;
+        report.trace.intervals = rec.intervals;
+        Ok(report)
+    } else {
+        let mut obs = NoopObserver;
+        while engine.step(&mut obs)? {}
+        engine.finalize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sched::Policy;
+    use crate::coordinator::sharp::{ClusterEvent, EngineOptions, JobEvent};
+    use crate::coordinator::task::{ModelTask, ShardDesc};
+    use crate::coordinator::Cluster;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hydra-replay-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn shard(mb: u64) -> ShardDesc {
+        ShardDesc {
+            param_bytes: mb << 20,
+            fwd_transfer_bytes: mb << 20,
+            bwd_transfer_bytes: mb << 20,
+            activation_bytes: 1 << 16,
+            fwd_cost: 0.4,
+            bwd_cost: 0.8,
+            n_layers: 2,
+        }
+    }
+
+    /// A busy spec: three construction tasks (one late-arriving), a mid-run
+    /// submission, a cancellation, a device failure, noise, intervals.
+    fn busy_spec(shards: usize) -> RunSpec {
+        let cluster = Cluster::uniform(4, 64 << 20, 1 << 30);
+        let tasks = vec![
+            ModelTask::new(0, "m0", "sim", vec![shard(8), shard(8)], 3, 2, 1e-3),
+            ModelTask::new(1, "m1", "sim", vec![shard(16)], 4, 2, 1e-3),
+            ModelTask::new(2, "m2", "sim", vec![shard(4), shard(4)], 2, 2, 1e-3)
+                .with_arrival(1.5),
+        ];
+        let late = ModelTask::new(3, "late", "sim", vec![shard(8)], 2, 1, 1e-3);
+        RunSpec {
+            tasks,
+            devices: cluster.devices,
+            memory: crate::coordinator::memory::MemoryOptions::dram_only(
+                cluster.dram_bytes,
+            ),
+            policy: Policy::default(),
+            options: EngineOptions {
+                record_intervals: true,
+                shards,
+                ..EngineOptions::default()
+            },
+            cluster_events: vec![ClusterEvent::Fail { time: 2.5, device: 3 }],
+            job_events: vec![
+                JobEvent::Submit { time: 1.0, task: late },
+                JobEvent::Cancel { time: 3.0, model: 1 },
+            ],
+            noise: 0.05,
+            backend_seed: 11,
+        }
+    }
+
+    #[test]
+    fn durable_run_matches_plain_run_and_replay() {
+        let wal = tmp("replay-identity");
+        let spec = busy_spec(1);
+        let baseline = spec.run(None).unwrap();
+        let dur = DurabilityOptions::new(&wal).snapshot_every(16);
+        let (durable, sections) = run_durable(&spec, &dur, None).unwrap();
+        assert!(sections.is_empty());
+        assert_eq!(format!("{baseline:?}"), format!("{durable:?}"));
+        let replayed = replay(&wal).unwrap();
+        assert_eq!(format!("{baseline:?}"), format!("{replayed:?}"));
+        std::fs::remove_file(&wal).ok();
+        std::fs::remove_file(snapshot_path(&wal)).ok();
+    }
+
+    #[test]
+    fn recover_resumes_from_mid_run_snapshot_byte_identically() {
+        let wal = tmp("resume");
+        let spec = busy_spec(1);
+        let baseline = spec.run(None).unwrap();
+        // small interval => the sidecar retains a genuinely mid-run state
+        let dur = DurabilityOptions::new(&wal).snapshot_every(7);
+        run_durable(&spec, &dur, None).unwrap();
+        let snap = read_snapshot(&snapshot_path(&wal)).unwrap().unwrap();
+        assert!(snap.events_dispatched >= 7);
+        let resumed = match recover(&wal).unwrap() {
+            Recovered::Run(r) => r,
+            other => panic!("expected a run, got {other:?}"),
+        };
+        assert_eq!(format!("{baseline:?}"), format!("{resumed:?}"));
+        std::fs::remove_file(&wal).ok();
+        std::fs::remove_file(snapshot_path(&wal)).ok();
+    }
+
+    #[test]
+    fn recover_without_sidecar_replays_from_genesis() {
+        let wal = tmp("no-sidecar");
+        let spec = busy_spec(1);
+        let baseline = spec.run(None).unwrap();
+        let dur = DurabilityOptions::new(&wal); // snapshots disabled
+        run_durable(&spec, &dur, None).unwrap();
+        assert!(read_snapshot(&snapshot_path(&wal)).unwrap().is_none());
+        let recovered = match recover(&wal).unwrap() {
+            Recovered::Run(r) => r,
+            other => panic!("expected a run, got {other:?}"),
+        };
+        assert_eq!(format!("{baseline:?}"), format!("{recovered:?}"));
+        std::fs::remove_file(&wal).ok();
+    }
+
+    #[test]
+    fn corrupt_sidecar_degrades_to_genesis_replay() {
+        let wal = tmp("corrupt-sidecar");
+        let spec = busy_spec(1);
+        let baseline = spec.run(None).unwrap();
+        let dur = DurabilityOptions::new(&wal).snapshot_every(7);
+        run_durable(&spec, &dur, None).unwrap();
+        let sp = snapshot_path(&wal);
+        let mut bytes = std::fs::read(&sp).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&sp, &bytes).unwrap();
+        let recovered = match recover(&wal).unwrap() {
+            Recovered::Run(r) => r,
+            other => panic!("expected a run, got {other:?}"),
+        };
+        assert_eq!(format!("{baseline:?}"), format!("{recovered:?}"));
+        std::fs::remove_file(&wal).ok();
+        std::fs::remove_file(&sp).ok();
+    }
+
+    #[test]
+    fn sharded_durable_run_replays_and_recovers_from_genesis() {
+        for n in [2usize, 4] {
+            let wal = tmp(&format!("sharded-{n}"));
+            let spec = busy_spec(n);
+            let baseline = spec.run(None).unwrap();
+            let dur = DurabilityOptions::new(&wal).snapshot_every(8);
+            let (durable, sections) = run_durable(&spec, &dur, None).unwrap();
+            assert_eq!(sections.len(), n);
+            assert_eq!(format!("{baseline:?}"), format!("{durable:?}"));
+            let replayed = replay(&wal).unwrap();
+            assert_eq!(format!("{baseline:?}"), format!("{replayed:?}"));
+            let recovered = match recover(&wal).unwrap() {
+                Recovered::Run(r) => r,
+                other => panic!("expected a run, got {other:?}"),
+            };
+            assert_eq!(format!("{baseline:?}"), format!("{recovered:?}"));
+            // per-shard sidecar WALs exist and carry their ShardBegin mark
+            for k in 0..n {
+                let mut p = wal.clone().into_os_string();
+                p.push(format!(".shard{k}"));
+                let p = PathBuf::from(p);
+                let bytes = std::fs::read(&p).unwrap();
+                assert_eq!(&bytes[..8], super::super::wal::WAL_MAGIC);
+                std::fs::remove_file(&p).ok();
+            }
+            std::fs::remove_file(&wal).ok();
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Engine-state snapshots: a sidecar file (`<wal>.snap`) holding one
+//! checksummed dump of the complete mid-run engine state, rewritten
+//! atomically (tmp + rename) every [`snapshot_every`] dispatched events.
+//!
+//! Recovery pairs the snapshot with its WAL: restore the state, then run
+//! the engine forward to completion — bounded work proportional to the
+//! crash-to-snapshot distance instead of the whole run. A missing sidecar
+//! is not an error (recovery replays from the genesis); a corrupt one is
+//! reported as [`HydraError::WalCorrupt`] and recovery likewise falls back
+//! to full replay.
+//!
+//! [`snapshot_every`]: super::DurabilityOptions::snapshot_every
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::metrics::Interval;
+use crate::error::{HydraError, Result};
+use crate::util::codec::{crc32, ByteReader, ByteWriter};
+
+/// File magic of a Hydra snapshot sidecar.
+pub const SNAP_MAGIC: &[u8; 8] = b"HYSNAP01";
+
+/// One complete mid-run engine state.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Events the engine had dispatched when this was taken — pairs the
+    /// snapshot with its [`WalRecord::SnapshotMark`] in the log.
+    ///
+    /// [`WalRecord::SnapshotMark`]: super::wal::WalRecord::SnapshotMark
+    pub events_dispatched: u64,
+    /// The sim backend's noise-stream PRNG state.
+    pub backend_rng: [u64; 4],
+    /// Intervals recorded so far (empty unless the run records them) —
+    /// the [`TraceRecorder`] is outside the engine, so its accumulation
+    /// rides here.
+    ///
+    /// [`TraceRecorder`]: crate::coordinator::observer::TraceRecorder
+    pub intervals: Vec<Interval>,
+    /// Opaque engine dump ([`SharpEngine::encode_state`]).
+    ///
+    /// [`SharpEngine::encode_state`]: crate::coordinator::sharp::SharpEngine
+    pub engine_state: Vec<u8>,
+}
+
+impl Snapshot {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.events_dispatched);
+        for s in self.backend_rng {
+            w.put_u64(s);
+        }
+        w.put_usize(self.intervals.len());
+        for iv in &self.intervals {
+            iv.encode(&mut w);
+        }
+        w.put_bytes(&self.engine_state);
+        w.into_inner()
+    }
+
+    fn decode(payload: &[u8]) -> Result<Snapshot> {
+        let mut r = ByteReader::new(payload);
+        let events_dispatched = r.get_u64()?;
+        let mut backend_rng = [0u64; 4];
+        for s in &mut backend_rng {
+            *s = r.get_u64()?;
+        }
+        let n = r.get_count(42)?;
+        let mut intervals = Vec::with_capacity(n);
+        for _ in 0..n {
+            intervals.push(Interval::decode(&mut r)?);
+        }
+        let engine_state = r.get_bytes()?.to_vec();
+        r.expect_end()?;
+        Ok(Snapshot { events_dispatched, backend_rng, intervals, engine_state })
+    }
+}
+
+/// The sidecar path for a WAL: `<wal>.snap` (appended, not substituted, so
+/// `run.wal` -> `run.wal.snap` and extensionless paths work too).
+pub fn snapshot_path(wal: &Path) -> PathBuf {
+    let mut p = wal.to_path_buf().into_os_string();
+    p.push(".snap");
+    PathBuf::from(p)
+}
+
+/// Atomically persist `snap` at `path`: write `<path>.tmp`, fsync-free
+/// rename over the old sidecar. A crash mid-write leaves either the
+/// previous intact snapshot or a stray tmp file — never a half-written
+/// sidecar at the final path.
+pub fn write_snapshot(path: &Path, snap: &Snapshot) -> Result<()> {
+    let payload = snap.encode();
+    let mut buf = Vec::with_capacity(SNAP_MAGIC.len() + 8 + payload.len());
+    buf.extend_from_slice(SNAP_MAGIC);
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    let mut tmp = path.to_path_buf().into_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, &buf)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read the snapshot at `path`. `Ok(None)` when the sidecar does not exist
+/// (the run never reached a snapshot interval); [`HydraError::WalCorrupt`]
+/// when it exists but fails the magic, framing or checksum — callers fall
+/// back to genesis replay on that.
+pub fn read_snapshot(path: &Path) -> Result<Option<Snapshot>> {
+    let buf = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e.into()),
+    };
+    let corrupt = |m: &str| {
+        HydraError::WalCorrupt(format!("{}: {m}", path.display()))
+    };
+    if buf.len() < SNAP_MAGIC.len() + 8 {
+        return Err(corrupt("snapshot shorter than its header"));
+    }
+    if &buf[..SNAP_MAGIC.len()] != SNAP_MAGIC {
+        return Err(corrupt("not a Hydra snapshot (bad magic)"));
+    }
+    let rest = &buf[SNAP_MAGIC.len()..];
+    let len = u32::from_le_bytes([rest[0], rest[1], rest[2], rest[3]]) as usize;
+    let crc = u32::from_le_bytes([rest[4], rest[5], rest[6], rest[7]]);
+    if rest.len() - 8 != len {
+        return Err(corrupt("snapshot length disagrees with its header"));
+    }
+    let payload = &rest[8..];
+    if crc32(payload) != crc {
+        return Err(corrupt("snapshot checksum mismatch"));
+    }
+    let snap = Snapshot::decode(payload)?;
+    Ok(Some(snap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::IntervalKind;
+    use crate::coordinator::unit::Phase;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("hydra-snap-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            events_dispatched: 42,
+            backend_rng: [1, 2, 3, 4],
+            intervals: vec![Interval {
+                device: 0,
+                start: 1.0,
+                end: 2.0,
+                model: 1,
+                shard: 0,
+                phase: Phase::Fwd,
+                unit_seq: 7,
+                kind: IntervalKind::Compute,
+            }],
+            engine_state: vec![9, 8, 7, 6, 5],
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_disk() {
+        let path = tmp("roundtrip");
+        write_snapshot(&path, &sample()).unwrap();
+        let back = read_snapshot(&path).unwrap().unwrap();
+        assert_eq!(format!("{:?}", sample()), format!("{back:?}"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_sidecar_is_none_and_corrupt_is_typed() {
+        let path = tmp("missing");
+        std::fs::remove_file(&path).ok();
+        assert!(read_snapshot(&path).unwrap().is_none());
+
+        write_snapshot(&path, &sample()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            read_snapshot(&path),
+            Err(HydraError::WalCorrupt(_))
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sidecar_path_appends_snap() {
+        assert_eq!(
+            snapshot_path(Path::new("/x/run.wal")),
+            PathBuf::from("/x/run.wal.snap")
+        );
+        assert_eq!(
+            snapshot_path(Path::new("run")),
+            PathBuf::from("run.snap")
+        );
+    }
+}

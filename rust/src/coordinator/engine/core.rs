@@ -19,10 +19,11 @@ use crate::coordinator::task::{ModelSnapshot, ModelTask, TaskState};
 use crate::coordinator::unit::{Phase, ShardUnit};
 use crate::error::{HydraError, Result};
 use crate::exec::ExecutionBackend;
+use crate::util::codec::{ByteReader, ByteWriter};
 use crate::util::rng::Rng;
 
 use super::device::{ClusterEvent, DeviceSpec, DeviceState};
-use super::events::{Event, EventQueue, QueueKind};
+use super::events::{Event, EventQueue, QueueKind, QueuedEvent};
 use super::jobs::{JobEvent, JobStat};
 use super::prefetch::StagedShard;
 use super::TransferModel;
@@ -36,6 +37,27 @@ pub enum ParallelMode {
     /// only the lowest-id unfinished (arrived) model is ever eligible, so
     /// sequential shard dependencies leave at most one device busy.
     Sequential,
+}
+
+impl ParallelMode {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            ParallelMode::Sharp => 0,
+            ParallelMode::Sequential => 1,
+        });
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<ParallelMode> {
+        Ok(match r.get_u8()? {
+            0 => ParallelMode::Sharp,
+            1 => ParallelMode::Sequential,
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown parallel-mode tag {t}"
+                )))
+            }
+        })
+    }
 }
 
 /// Engine configuration.
@@ -98,6 +120,36 @@ impl Default for EngineOptions {
             queue: QueueKind::Heap,
             shards: 1,
         }
+    }
+}
+
+impl EngineOptions {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        self.mode.encode(w);
+        w.put_bool(self.double_buffer);
+        w.put_f64(self.buffer_frac);
+        w.put_usize(self.prefetch_depth);
+        self.transfer.encode(w);
+        w.put_u64(self.seed);
+        w.put_bool(self.record_intervals);
+        w.put_bool(self.full_state_transfers);
+        self.queue.encode(w);
+        w.put_usize(self.shards);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<EngineOptions> {
+        Ok(EngineOptions {
+            mode: ParallelMode::decode(r)?,
+            double_buffer: r.get_bool()?,
+            buffer_frac: r.get_f64()?,
+            prefetch_depth: r.get_usize()?,
+            transfer: TransferModel::decode(r)?,
+            seed: r.get_u64()?,
+            record_intervals: r.get_bool()?,
+            full_state_transfers: r.get_bool()?,
+            queue: QueueKind::decode(r)?,
+            shards: r.get_usize()?,
+        })
     }
 }
 
@@ -296,6 +348,175 @@ impl<'a> SharpEngine<'a> {
         self
     }
 
+    /// Serialize the complete mid-run state for a durability snapshot.
+    ///
+    /// Everything mutable is captured: tasks (with their private unit
+    /// bookkeeping), device states, the memory hierarchy, the pending event
+    /// queue, job gating/cancellation vectors, the trace, the scalar
+    /// aggregates and the engine RNG stream. Deliberately *not* captured —
+    /// restored from the WAL genesis record instead — are `options`,
+    /// `cluster_events` (queued events reference them by index), the
+    /// scheduler (stateless; rebuilt from the policy) and the backend
+    /// (its RNG state rides alongside this payload in the snapshot).
+    pub(crate) fn encode_state(&self, w: &mut ByteWriter) {
+        w.put_usize(self.tasks.len());
+        for t in &self.tasks {
+            t.encode(w);
+        }
+        w.put_usize(self.devices.len());
+        for d in &self.devices {
+            d.encode(w);
+        }
+        self.memory.encode(w);
+        let (entries, seq) = self.queue.snapshot();
+        w.put_usize(entries.len());
+        for q in &entries {
+            w.put_f64(q.time);
+            w.put_u64(q.seq);
+            q.ev.encode(w);
+        }
+        w.put_u64(seq);
+        w.put_usize(self.pending_submissions.len());
+        for p in &self.pending_submissions {
+            match p {
+                None => w.put_bool(false),
+                Some(t) => {
+                    w.put_bool(true);
+                    t.encode(w);
+                }
+            }
+        }
+        w.put_usize(self.ready.len());
+        for &m in &self.ready {
+            w.put_usize(m);
+        }
+        w.put_usize(self.arrived.len());
+        for &b in &self.arrived {
+            w.put_bool(b);
+        }
+        w.put_usize(self.job_cancelled.len());
+        for &b in &self.job_cancelled {
+            w.put_bool(b);
+        }
+        w.put_usize(self.cancel_requested.len());
+        for &t in &self.cancel_requested {
+            w.put_f64(t);
+        }
+        w.put_usize(self.cancel_pending.len());
+        for &m in &self.cancel_pending {
+            w.put_usize(m);
+        }
+        w.put_usize(self.finish_times.len());
+        for &t in &self.finish_times {
+            w.put_f64(t);
+        }
+        w.put_usize(self.parked.len());
+        for &d in &self.parked {
+            w.put_usize(d);
+        }
+        w.put_usize(self.free_devices);
+        self.trace.encode(w);
+        w.put_u64(self.units_executed);
+        w.put_f64(self.agg_compute);
+        w.put_f64(self.agg_transfer);
+        w.put_f64(self.agg_stall);
+        w.put_f64(self.agg_nvme);
+        w.put_f64(self.agg_wait);
+        for s in self.rng.state() {
+            w.put_u64(s);
+        }
+    }
+
+    /// Overwrite this engine's run state with an [`SharpEngine::encode_state`]
+    /// payload. The engine must have been constructed from the same genesis
+    /// record (same options, cluster events, scheduler) and must *not* be
+    /// primed — a restored engine resumes by stepping directly.
+    pub(crate) fn restore_state(&mut self, r: &mut ByteReader<'_>) -> Result<()> {
+        let n = r.get_count(32)?;
+        let mut tasks = Vec::with_capacity(n);
+        for _ in 0..n {
+            tasks.push(ModelTask::decode(r)?);
+        }
+        self.tasks = tasks;
+        let n = r.get_count(32)?;
+        let mut devices = Vec::with_capacity(n);
+        for _ in 0..n {
+            devices.push(DeviceState::decode(r)?);
+        }
+        self.devices = devices;
+        self.memory = MemoryHierarchy::decode(r)?;
+        let n = r.get_count(17)?;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            entries.push(QueuedEvent {
+                time: r.get_f64()?,
+                seq: r.get_u64()?,
+                ev: Event::decode(r)?,
+            });
+        }
+        let seq = r.get_u64()?;
+        self.queue = EventQueue::from_snapshot(self.options.queue, entries, seq);
+        let n = r.get_count(1)?;
+        let mut pending = Vec::with_capacity(n);
+        for _ in 0..n {
+            pending.push(if r.get_bool()? { Some(ModelTask::decode(r)?) } else { None });
+        }
+        self.pending_submissions = pending;
+        let n = r.get_count(8)?;
+        self.ready = (0..n).map(|_| r.get_usize()).collect::<Result<_>>()?;
+        let n = r.get_count(1)?;
+        self.arrived = (0..n).map(|_| r.get_bool()).collect::<Result<_>>()?;
+        let n = r.get_count(1)?;
+        self.job_cancelled = (0..n).map(|_| r.get_bool()).collect::<Result<_>>()?;
+        let n = r.get_count(8)?;
+        self.cancel_requested = (0..n).map(|_| r.get_f64()).collect::<Result<_>>()?;
+        let n = r.get_count(8)?;
+        self.cancel_pending = (0..n).map(|_| r.get_usize()).collect::<Result<_>>()?;
+        let n = r.get_count(8)?;
+        self.finish_times = (0..n).map(|_| r.get_f64()).collect::<Result<_>>()?;
+        let n = r.get_count(8)?;
+        self.parked = (0..n).map(|_| r.get_usize()).collect::<Result<_>>()?;
+        self.free_devices = r.get_usize()?;
+        self.trace = Trace::decode(r)?;
+        self.units_executed = r.get_u64()?;
+        self.agg_compute = r.get_f64()?;
+        self.agg_transfer = r.get_f64()?;
+        self.agg_stall = r.get_f64()?;
+        self.agg_nvme = r.get_f64()?;
+        self.agg_wait = r.get_f64()?;
+        let mut s = [0u64; 4];
+        for v in &mut s {
+            *v = r.get_u64()?;
+        }
+        self.rng = Rng::from_state(s);
+        // a restored engine never primes: its job events already live in the
+        // queue / pending-submission list captured above
+        self.job_events.clear();
+        // scratch buffers are transient per-decision storage; start empty
+        self.scratch_eligible.clear();
+        self.scratch_resident.clear();
+        // cross-field sanity so a corrupt-but-checksummed payload cannot
+        // install an inconsistent engine
+        let nt = self.tasks.len();
+        if self.arrived.len() != nt
+            || self.job_cancelled.len() != nt
+            || self.cancel_requested.len() != nt
+            || self.finish_times.len() != nt
+        {
+            return Err(HydraError::WalCorrupt(
+                "snapshot per-task vectors disagree with the task count".into(),
+            ));
+        }
+        let free = self.devices.iter().filter(|d| d.alive && !d.busy).count();
+        if free != self.free_devices {
+            return Err(HydraError::WalCorrupt(format!(
+                "snapshot free-device counter {} disagrees with device states ({free})",
+                self.free_devices
+            )));
+        }
+        Ok(())
+    }
+
     /// Fill and hand out the engine-owned snapshot buffer of eligible
     /// models under the current parallel mode. Built from the
     /// incrementally-maintained ready-set, so the cost is O(|eligible|),
@@ -401,6 +622,17 @@ impl<'a> SharpEngine<'a> {
     /// device windows, utilization and the scalar aggregates are always
     /// maintained engine-side.
     pub fn run_with(&mut self, obs: &mut dyn EngineObserver) -> Result<RunReport> {
+        self.prime(obs);
+        while self.step(obs)? {}
+        self.finalize()
+    }
+
+    /// Seed the event queue for a fresh run: initial device wakes, cluster
+    /// events, construction-task arrivals, and the online job events. Split
+    /// out of [`SharpEngine::run_with`] so the durability runner can
+    /// interleave snapshots between [`SharpEngine::step`] calls — a resumed
+    /// engine restores a mid-run queue instead of priming.
+    pub(crate) fn prime(&mut self, obs: &mut dyn EngineObserver) {
         for d in 0..self.devices.len() {
             self.trace.set_device_window(d, 0.0, f64::INFINITY);
             self.queue.push(0.0, Event::DeviceFree { device: d });
@@ -440,23 +672,33 @@ impl<'a> SharpEngine<'a> {
                 }
             }
         }
+    }
 
-        while let Some(q) = self.queue.pop() {
-            let now = q.time;
-            match q.ev {
-                Event::DeviceFree { device } => self.on_device_free(device, now, obs)?,
-                Event::UnitRetire { device, unit } => {
-                    self.on_unit_retire(device, unit, now, obs)?
-                }
-                Event::Cluster(i) => self.on_cluster_event(i, now)?,
-                Event::JobArrive { model } => self.on_job_arrive(model, now, obs),
-                Event::JobSubmit(idx) => self.on_job_submit(idx, now, obs)?,
-                Event::JobCancel { model } => self.on_job_cancel(model, now, obs)?,
+    /// Dispatch the next queued event; `Ok(false)` when the queue drained.
+    /// `prime + while step + finalize` is exactly the old monolithic run
+    /// loop, event for event.
+    pub(crate) fn step(&mut self, obs: &mut dyn EngineObserver) -> Result<bool> {
+        let Some(q) = self.queue.pop() else {
+            return Ok(false);
+        };
+        let now = q.time;
+        match q.ev {
+            Event::DeviceFree { device } => self.on_device_free(device, now, obs)?,
+            Event::UnitRetire { device, unit } => {
+                self.on_unit_retire(device, unit, now, obs)?
             }
-            #[cfg(debug_assertions)]
-            self.assert_engine_invariants();
+            Event::Cluster(i) => self.on_cluster_event(i, now)?,
+            Event::JobArrive { model } => self.on_job_arrive(model, now, obs),
+            Event::JobSubmit(idx) => self.on_job_submit(idx, now, obs)?,
+            Event::JobCancel { model } => self.on_job_cancel(model, now, obs)?,
         }
+        #[cfg(debug_assertions)]
+        self.assert_engine_invariants();
+        Ok(true)
+    }
 
+    /// Check the end-of-run invariant and build the report.
+    pub(crate) fn finalize(&mut self) -> Result<RunReport> {
         // Sanity: every task finished (unless devices all died).
         let alive = self.devices.iter().any(|d| d.alive);
         let done = self.tasks.iter().all(|t| t.state() == TaskState::Done);

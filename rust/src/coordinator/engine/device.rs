@@ -4,6 +4,7 @@
 
 use crate::coordinator::memory::DeviceLedger;
 use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
 
 use super::core::{EngineOptions, SharpEngine};
 use super::events::Event;
@@ -35,6 +36,26 @@ impl DeviceSpec {
     pub fn uniform(mem_bytes: u64) -> DeviceSpec {
         DeviceSpec { mem_bytes, speed: 1.0, link: None }
     }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.mem_bytes);
+        w.put_f64(self.speed);
+        match &self.link {
+            None => w.put_bool(false),
+            Some(l) => {
+                w.put_bool(true);
+                l.encode(w);
+            }
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<DeviceSpec> {
+        Ok(DeviceSpec {
+            mem_bytes: r.get_u64()?,
+            speed: r.get_f64()?,
+            link: if r.get_bool()? { Some(TransferModel::decode(r)?) } else { None },
+        })
+    }
 }
 
 /// A fault-injection / elasticity event (§4.7's dynamic setting).
@@ -59,6 +80,35 @@ pub enum ClusterEvent {
     },
 }
 
+impl ClusterEvent {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            ClusterEvent::Arrive { time, mem_bytes } => {
+                w.put_u8(0);
+                w.put_f64(*time);
+                w.put_u64(*mem_bytes);
+            }
+            ClusterEvent::Fail { time, device } => {
+                w.put_u8(1);
+                w.put_f64(*time);
+                w.put_usize(*device);
+            }
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<ClusterEvent> {
+        Ok(match r.get_u8()? {
+            0 => ClusterEvent::Arrive { time: r.get_f64()?, mem_bytes: r.get_u64()? },
+            1 => ClusterEvent::Fail { time: r.get_f64()?, device: r.get_usize()? },
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown cluster-event tag {t}"
+                )))
+            }
+        })
+    }
+}
+
 /// Runtime state of one device in the engine.
 #[derive(Debug)]
 pub(crate) struct DeviceState {
@@ -74,6 +124,47 @@ pub(crate) struct DeviceState {
     pub(crate) fail_pending: bool,
     /// Bytes that flow back to DRAM when the resident shard is evicted.
     pub(crate) last_demote_bytes: u64,
+}
+
+impl DeviceState {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        self.spec.encode(w);
+        self.ledger.encode(w);
+        self.pipeline.encode(w);
+        match self.resident {
+            None => w.put_bool(false),
+            Some((m, sh)) => {
+                w.put_bool(true);
+                w.put_usize(m);
+                w.put_u32(sh);
+            }
+        }
+        w.put_bool(self.alive);
+        w.put_bool(self.busy);
+        w.put_bool(self.fail_pending);
+        w.put_u64(self.last_demote_bytes);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<DeviceState> {
+        let spec = DeviceSpec::decode(r)?;
+        let ledger = DeviceLedger::decode(r)?;
+        let pipeline = PrefetchPipeline::decode(r)?;
+        let resident = if r.get_bool()? {
+            Some((r.get_usize()?, r.get_u32()?))
+        } else {
+            None
+        };
+        Ok(DeviceState {
+            spec,
+            ledger,
+            pipeline,
+            resident,
+            alive: r.get_bool()?,
+            busy: r.get_bool()?,
+            fail_pending: r.get_bool()?,
+            last_demote_bytes: r.get_u64()?,
+        })
+    }
 }
 
 impl<'a> SharpEngine<'a> {

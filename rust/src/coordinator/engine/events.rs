@@ -9,6 +9,8 @@
 use std::collections::BinaryHeap;
 
 use crate::coordinator::unit::ShardUnit;
+use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
 
 /// Event-queue discipline for the engine's virtual-time loop.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,6 +23,27 @@ pub enum QueueKind {
     /// bench; schedules are identical to [`QueueKind::Heap`] by
     /// construction (same key, same tie-break).
     LinearScan,
+}
+
+impl QueueKind {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            QueueKind::Heap => 0,
+            QueueKind::LinearScan => 1,
+        });
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<QueueKind> {
+        Ok(match r.get_u8()? {
+            0 => QueueKind::Heap,
+            1 => QueueKind::LinearScan,
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown queue-kind tag {t}"
+                )))
+            }
+        })
+    }
 }
 
 /// One engine event (crate-internal; the public surface is the observer).
@@ -38,6 +61,57 @@ pub(crate) enum Event {
     JobSubmit(usize),
     /// Tenant cancellation of `model`.
     JobCancel { model: usize },
+}
+
+impl Event {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Event::DeviceFree { device } => {
+                w.put_u8(0);
+                w.put_usize(*device);
+            }
+            Event::UnitRetire { device, unit } => {
+                w.put_u8(1);
+                w.put_usize(*device);
+                unit.encode(w);
+            }
+            Event::Cluster(i) => {
+                w.put_u8(2);
+                w.put_usize(*i);
+            }
+            Event::JobArrive { model } => {
+                w.put_u8(3);
+                w.put_usize(*model);
+            }
+            Event::JobSubmit(i) => {
+                w.put_u8(4);
+                w.put_usize(*i);
+            }
+            Event::JobCancel { model } => {
+                w.put_u8(5);
+                w.put_usize(*model);
+            }
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<Event> {
+        Ok(match r.get_u8()? {
+            0 => Event::DeviceFree { device: r.get_usize()? },
+            1 => Event::UnitRetire {
+                device: r.get_usize()?,
+                unit: ShardUnit::decode(r)?,
+            },
+            2 => Event::Cluster(r.get_usize()?),
+            3 => Event::JobArrive { model: r.get_usize()? },
+            4 => Event::JobSubmit(r.get_usize()?),
+            5 => Event::JobCancel { model: r.get_usize()? },
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown event tag {t}"
+                )))
+            }
+        })
+    }
 }
 
 /// One queued event. Total order: earliest (time, seq) first; `Ord` is
@@ -97,6 +171,37 @@ impl EventQueue {
         }
     }
 
+    /// Snapshot support: every pending event, sorted ascending by
+    /// (time, seq) so the serialized form is canonical regardless of the
+    /// queue discipline, plus the submission-sequence counter.
+    pub(crate) fn snapshot(&self) -> (Vec<QueuedEvent>, u64) {
+        let mut entries: Vec<QueuedEvent> = match self.kind {
+            QueueKind::Heap => self.heap.iter().copied().collect(),
+            QueueKind::LinearScan => self.list.clone(),
+        };
+        // `Ord` is reversed (earliest == maximum), so sort descending by
+        // `Ord` to get ascending (time, seq)
+        entries.sort_by(|a, b| b.cmp(a));
+        (entries, self.seq)
+    }
+
+    /// Rebuild a queue mid-run from [`EventQueue::snapshot`] output. The
+    /// restored queue pops in the exact order the snapshotted one would
+    /// have (same keys, same seq tie-breaks), for either discipline.
+    pub(crate) fn from_snapshot(
+        kind: QueueKind,
+        entries: Vec<QueuedEvent>,
+        seq: u64,
+    ) -> EventQueue {
+        let mut q = EventQueue::new(kind);
+        q.seq = seq;
+        match kind {
+            QueueKind::Heap => q.heap.extend(entries),
+            QueueKind::LinearScan => q.list = entries,
+        }
+        q
+    }
+
     pub(crate) fn pop(&mut self) -> Option<QueuedEvent> {
         match self.kind {
             QueueKind::Heap => self.heap.pop(),
@@ -150,5 +255,55 @@ mod tests {
         q.push(1.0, Event::DeviceFree { device: 9 });
         assert_eq!(q.pop().unwrap().seq, 0);
         assert_eq!(q.pop().unwrap().seq, 1);
+    }
+
+    #[test]
+    fn snapshot_round_trip_preserves_pop_order_across_disciplines() {
+        let times = [3.0, 1.0, 2.0, 1.0, 0.5];
+        for kind in [QueueKind::Heap, QueueKind::LinearScan] {
+            let mut q = EventQueue::new(kind);
+            for (d, &t) in times.iter().enumerate() {
+                q.push(t, Event::DeviceFree { device: d });
+            }
+            q.pop().unwrap(); // snapshot mid-drain
+            let (entries, seq) = q.snapshot();
+            assert_eq!(entries.len(), times.len() - 1);
+            assert!(entries.windows(2).all(|w| w[1] < w[0])); // reversed Ord
+            // restoring into the *other* discipline pops identically
+            let other = match kind {
+                QueueKind::Heap => QueueKind::LinearScan,
+                QueueKind::LinearScan => QueueKind::Heap,
+            };
+            let mut r = EventQueue::from_snapshot(other, entries, seq);
+            while let Some(a) = q.pop() {
+                let b = r.pop().unwrap();
+                assert_eq!((a.time, a.seq), (b.time, b.seq));
+            }
+            assert!(r.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn event_codec_round_trips_every_variant() {
+        let unit = crate::coordinator::unit::UnitGeometry::new(2, 2, 1).unit_at(3, 2);
+        let events = [
+            Event::DeviceFree { device: 4 },
+            Event::UnitRetire { device: 1, unit },
+            Event::Cluster(9),
+            Event::JobArrive { model: 5 },
+            Event::JobSubmit(2),
+            Event::JobCancel { model: 7 },
+        ];
+        let mut w = ByteWriter::new();
+        for e in &events {
+            e.encode(&mut w);
+        }
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        for e in &events {
+            let back = Event::decode(&mut r).unwrap();
+            assert_eq!(format!("{e:?}"), format!("{back:?}"));
+        }
+        r.expect_end().unwrap();
     }
 }

@@ -5,6 +5,7 @@
 use crate::coordinator::observer::EngineObserver;
 use crate::coordinator::task::{ModelTask, TaskState};
 use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
 
 use super::core::SharpEngine;
 use super::events::Event;
@@ -36,6 +37,35 @@ pub enum JobEvent {
         /// Task id to cancel.
         model: usize,
     },
+}
+
+impl JobEvent {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            JobEvent::Submit { time, task } => {
+                w.put_u8(0);
+                w.put_f64(*time);
+                task.encode(w);
+            }
+            JobEvent::Cancel { time, model } => {
+                w.put_u8(1);
+                w.put_f64(*time);
+                w.put_usize(*model);
+            }
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<JobEvent> {
+        Ok(match r.get_u8()? {
+            0 => JobEvent::Submit { time: r.get_f64()?, task: ModelTask::decode(r)? },
+            1 => JobEvent::Cancel { time: r.get_f64()?, model: r.get_usize()? },
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown job-event tag {t}"
+                )))
+            }
+        })
+    }
 }
 
 /// Per-job outcome statistics for the online setting.
@@ -132,6 +162,7 @@ impl<'a> SharpEngine<'a> {
             )));
         }
         self.memory.home_model(task.id, &Self::shard_bytes(&task))?;
+        obs.on_job_submitted(task.id, &task.name, now);
         self.tasks.push(task);
         self.job_cancelled.push(false);
         self.cancel_requested.push(f64::NAN);
@@ -163,6 +194,7 @@ impl<'a> SharpEngine<'a> {
                 "cancel of unknown model {model}"
             )));
         }
+        obs.on_job_cancel_requested(model, now);
         // every request is recorded (earliest wins), even the no-op ones
         // against already-finished jobs — the report stays auditable
         if self.cancel_requested[model].is_nan() {

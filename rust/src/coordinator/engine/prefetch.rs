@@ -37,6 +37,7 @@ use crate::coordinator::memory::{DeviceLedger, MemTier, Residency};
 use crate::coordinator::sched::PickContext;
 use crate::coordinator::unit::ShardUnit;
 use crate::error::Result;
+use crate::util::codec::{ByteReader, ByteWriter};
 
 use super::core::SharpEngine;
 
@@ -57,6 +58,26 @@ pub struct StagedShard {
     pub ready_at: f64,
 }
 
+impl StagedShard {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.model);
+        w.put_u32(self.shard);
+        w.put_u64(self.bytes);
+        w.put_f64(self.nvme_done);
+        w.put_f64(self.ready_at);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<StagedShard> {
+        Ok(StagedShard {
+            model: r.get_usize()?,
+            shard: r.get_u32()?,
+            bytes: r.get_u64()?,
+            nvme_done: r.get_f64()?,
+            ready_at: r.get_f64()?,
+        })
+    }
+}
+
 /// One pre-claimed unit in the pipeline: the unit itself plus its staged
 /// transfer, if the zone had room and DRAM admitted the fetch (`None`
 /// falls back to a synchronous transfer at start time).
@@ -66,6 +87,22 @@ pub struct PrefetchSlot {
     pub unit: ShardUnit,
     /// Its staged transfer, when one was issued.
     pub staged: Option<StagedShard>,
+}
+
+impl PrefetchSlot {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        self.unit.encode(w);
+        w.put_bool(self.staged.is_some());
+        if let Some(st) = &self.staged {
+            st.encode(w);
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<PrefetchSlot> {
+        let unit = ShardUnit::decode(r)?;
+        let staged = if r.get_bool()? { Some(StagedShard::decode(r)?) } else { None };
+        Ok(PrefetchSlot { unit, staged })
+    }
 }
 
 /// Per-device prefetch state: a ring of up to `depth` pre-claimed slots
@@ -244,6 +281,44 @@ impl PrefetchPipeline {
             }
         }
         Some(slot)
+    }
+
+    /// Serialize the full pipeline state — slots in claim order, zone
+    /// accounting, both link clocks — for durability snapshots. The zone's
+    /// ledger reservation is re-created by the ledger's own snapshot, so
+    /// decode never touches a [`DeviceLedger`].
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_bool(self.enabled);
+        w.put_u64(self.zone_bytes);
+        w.put_usize(self.depth);
+        w.put_usize(self.slots.len());
+        for s in &self.slots {
+            s.encode(w);
+        }
+        w.put_u64(self.staged_bytes);
+        w.put_f64(self.nvme_busy_until);
+        w.put_f64(self.link_busy_until);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<PrefetchPipeline> {
+        let enabled = r.get_bool()?;
+        let zone_bytes = r.get_u64()?;
+        let depth = r.get_usize()?;
+        // each slot: ShardUnit (8+8+4+4+4+1) + staged flag
+        let n = r.get_count(30)?;
+        let mut slots = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            slots.push_back(PrefetchSlot::decode(r)?);
+        }
+        Ok(PrefetchPipeline {
+            enabled,
+            zone_bytes,
+            depth: depth.max(1),
+            slots,
+            staged_bytes: r.get_u64()?,
+            nvme_busy_until: r.get_f64()?,
+            link_busy_until: r.get_f64()?,
+        })
     }
 
     /// Drop every slot and reset the link clocks (device loss). Returns
@@ -526,6 +601,23 @@ mod tests {
         let wait = p.stage(unit(2), 20, 0.0, 4.0, 1.0);
         assert_eq!(wait, 0.0);
         assert!((p.pop_front().unwrap().staged.unwrap().ready_at - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn codec_round_trips_a_busy_pipeline() {
+        let mut l = ledger();
+        let mut p = PrefetchPipeline::new(true, 100, 3, &mut l).unwrap();
+        p.stage(unit(0), 20, 0.0, 4.0, 1.0);
+        p.push_unstaged(unit(1));
+        let mut w = ByteWriter::new();
+        p.encode(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let back = PrefetchPipeline::decode(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(format!("{p:?}"), format!("{back:?}"));
+        assert_eq!(back.staged_bytes(), 20);
+        assert_eq!(back.len(), 2);
     }
 
     #[test]

@@ -517,6 +517,16 @@ impl ShardScope<'_> {
 }
 
 impl EngineObserver for ShardScope<'_> {
+    fn on_job_submitted(&mut self, model: usize, name: &str, now: f64) {
+        let m = self.model(model);
+        self.inner.on_job_submitted(m, name, now);
+    }
+
+    fn on_job_cancel_requested(&mut self, model: usize, now: f64) {
+        let m = self.model(model);
+        self.inner.on_job_cancel_requested(m, now);
+    }
+
     fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
         let m = self.model(model);
         self.inner.on_job_arrived(m, name, now);

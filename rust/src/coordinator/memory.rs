@@ -21,6 +21,7 @@
 use std::collections::BTreeMap;
 
 use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
 
 /// Link cost model for cross-tier transfers (DRAM<->device over PCIe,
 /// NVMe<->DRAM over the SSD link). Lives here so the memory hierarchy can
@@ -63,6 +64,18 @@ impl TransferModel {
             self.latency_secs + bytes as f64 / self.bandwidth_bytes_per_sec
         }
     }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_f64(self.bandwidth_bytes_per_sec);
+        w.put_f64(self.latency_secs);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<TransferModel> {
+        Ok(TransferModel {
+            bandwidth_bytes_per_sec: r.get_f64()?,
+            latency_secs: r.get_f64()?,
+        })
+    }
 }
 
 /// Which hierarchy link a spill event moved over (for per-tier observer
@@ -74,6 +87,23 @@ pub enum MemTier {
     Dram,
     /// NVMe <-> DRAM (SSD-class) transfers.
     Nvme,
+}
+
+impl MemTier {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            MemTier::Dram => 0,
+            MemTier::Nvme => 1,
+        });
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<MemTier> {
+        match r.get_u8()? {
+            0 => Ok(MemTier::Dram),
+            1 => Ok(MemTier::Nvme),
+            t => Err(HydraError::WalCorrupt(format!("unknown tier tag {t}"))),
+        }
+    }
 }
 
 /// Capacity + link of one backing tier (the NVMe tier today).
@@ -130,6 +160,18 @@ impl TierSpec {
             link,
         })
     }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.capacity_bytes);
+        self.link.encode(w);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<TierSpec> {
+        Ok(TierSpec {
+            capacity_bytes: r.get_u64()?,
+            link: TransferModel::decode(r)?,
+        })
+    }
 }
 
 /// Host-memory configuration of an engine run: the DRAM tier plus an
@@ -154,6 +196,20 @@ impl MemoryOptions {
     pub fn with_nvme(dram_bytes: u64, nvme: TierSpec) -> MemoryOptions {
         MemoryOptions { dram_bytes, nvme: Some(nvme) }
     }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.dram_bytes);
+        w.put_bool(self.nvme.is_some());
+        if let Some(t) = &self.nvme {
+            t.encode(w);
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<MemoryOptions> {
+        let dram_bytes = r.get_u64()?;
+        let nvme = if r.get_bool()? { Some(TierSpec::decode(r)?) } else { None };
+        Ok(MemoryOptions { dram_bytes, nvme })
+    }
 }
 
 impl From<u64> for MemoryOptions {
@@ -169,6 +225,20 @@ pub struct TierTraffic {
     pub promoted_bytes: u64,
     /// Bytes moved *down* the hierarchy (away from the device).
     pub demoted_bytes: u64,
+}
+
+impl TierTraffic {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.promoted_bytes);
+        w.put_u64(self.demoted_bytes);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<TierTraffic> {
+        Ok(TierTraffic {
+            promoted_bytes: r.get_u64()?,
+            demoted_bytes: r.get_u64()?,
+        })
+    }
 }
 
 /// Outcome of staging a shard up into DRAM: the synchronous NVMe-link time
@@ -204,6 +274,24 @@ struct ShardEntry {
     pins: u32,
     /// LRU clock of the last touch.
     last_touch: u64,
+}
+
+impl ShardEntry {
+    fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.bytes);
+        w.put_bool(self.in_dram);
+        w.put_u32(self.pins);
+        w.put_u64(self.last_touch);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<ShardEntry> {
+        Ok(ShardEntry {
+            bytes: r.get_u64()?,
+            in_dram: r.get_bool()?,
+            pins: r.get_u32()?,
+            last_touch: r.get_u64()?,
+        })
+    }
 }
 
 /// The tiered host-memory manager: a DRAM tier that is either the hard
@@ -504,6 +592,57 @@ impl MemoryHierarchy {
         }
         Ok(())
     }
+
+    /// Serialize the full hierarchy state — capacities, per-tier usage and
+    /// traffic counters, every shard entry (pins and LRU clocks included) —
+    /// for durability snapshots.
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.dram_capacity);
+        w.put_u64(self.dram_used);
+        w.put_bool(self.nvme.is_some());
+        if let Some(t) = &self.nvme {
+            t.encode(w);
+        }
+        w.put_u64(self.nvme_used);
+        self.dram_traffic.encode(w);
+        self.nvme_traffic.encode(w);
+        w.put_usize(self.entries.len());
+        for ((model, shard), e) in &self.entries {
+            w.put_usize(*model);
+            w.put_u32(*shard);
+            e.encode(w);
+        }
+        w.put_u64(self.clock);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<MemoryHierarchy> {
+        let dram_capacity = r.get_u64()?;
+        let dram_used = r.get_u64()?;
+        let nvme = if r.get_bool()? { Some(TierSpec::decode(r)?) } else { None };
+        let nvme_used = r.get_u64()?;
+        let dram_traffic = TierTraffic::decode(r)?;
+        let nvme_traffic = TierTraffic::decode(r)?;
+        // each entry: key (8 + 4) + ShardEntry (8 + 1 + 4 + 8)
+        let n = r.get_count(33)?;
+        let mut entries = BTreeMap::new();
+        for _ in 0..n {
+            let key = (r.get_usize()?, r.get_u32()?);
+            entries.insert(key, ShardEntry::decode(r)?);
+        }
+        let h = MemoryHierarchy {
+            dram_capacity,
+            dram_used,
+            nvme,
+            nvme_used,
+            dram_traffic,
+            nvme_traffic,
+            entries,
+            clock: r.get_u64()?,
+        };
+        h.validate()
+            .map_err(|e| HydraError::WalCorrupt(format!("snapshot hierarchy: {e}")))?;
+        Ok(h)
+    }
 }
 
 /// What a ledger entry holds (for traces and accounting).
@@ -518,6 +657,44 @@ pub enum Residency {
     Workspace { model: usize },
     /// Reserved double-buffer zone.
     BufferZone,
+}
+
+impl Residency {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Residency::ShardParams { model, shard } => {
+                w.put_u8(0);
+                w.put_usize(*model);
+                w.put_u32(*shard);
+            }
+            Residency::Activation { model } => {
+                w.put_u8(1);
+                w.put_usize(*model);
+            }
+            Residency::Workspace { model } => {
+                w.put_u8(2);
+                w.put_usize(*model);
+            }
+            Residency::BufferZone => w.put_u8(3),
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<Residency> {
+        Ok(match r.get_u8()? {
+            0 => Residency::ShardParams {
+                model: r.get_usize()?,
+                shard: r.get_u32()?,
+            },
+            1 => Residency::Activation { model: r.get_usize()? },
+            2 => Residency::Workspace { model: r.get_usize()? },
+            3 => Residency::BufferZone,
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown residency tag {t}"
+                )))
+            }
+        })
+    }
 }
 
 /// Byte-accurate per-device memory ledger.
@@ -586,6 +763,39 @@ impl DeviceLedger {
         let bytes = self.entries.remove(r).unwrap_or(0);
         self.used -= bytes;
         bytes
+    }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.device);
+        w.put_u64(self.capacity);
+        w.put_usize(self.entries.len());
+        for (res, bytes) in &self.entries {
+            res.encode(w);
+            w.put_u64(*bytes);
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<DeviceLedger> {
+        let device = r.get_usize()?;
+        let capacity = r.get_u64()?;
+        // each entry: residency tag (>=1) + bytes (8)
+        let n = r.get_count(9)?;
+        let mut entries = BTreeMap::new();
+        let mut used = 0u64;
+        for _ in 0..n {
+            let res = Residency::decode(r)?;
+            let bytes = r.get_u64()?;
+            used = used
+                .checked_add(bytes)
+                .filter(|&u| u <= capacity)
+                .ok_or_else(|| {
+                    HydraError::WalCorrupt(format!(
+                        "snapshot ledger for device {device} over capacity"
+                    ))
+                })?;
+            entries.insert(res, bytes);
+        }
+        Ok(DeviceLedger { device, capacity, used, entries })
     }
 
     /// All shard-param residencies currently held (for eviction decisions).
@@ -795,6 +1005,28 @@ mod tests {
         assert!(TierSpec::parse("abc").is_err());
         assert!(TierSpec::parse("0").is_err());
         assert!(TierSpec::parse("10:-1").is_err());
+    }
+
+    #[test]
+    fn codec_round_trips_hierarchy_and_ledger_mid_run() {
+        let mut h =
+            MemoryHierarchy::new(MemoryOptions::with_nvme(100, TierSpec::nvme(1000)));
+        h.home_model(0, &[60, 60]).unwrap();
+        h.fetch_to_dram(0, 0).unwrap(); // pin + traffic
+        let mut l = DeviceLedger::new(2, 1000);
+        l.alloc(Residency::ShardParams { model: 0, shard: 1 }, 10).unwrap();
+        l.alloc(Residency::BufferZone, 50).unwrap();
+        let mut w = ByteWriter::new();
+        h.encode(&mut w);
+        l.encode(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let h2 = MemoryHierarchy::decode(&mut r).unwrap();
+        let l2 = DeviceLedger::decode(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(format!("{h:?}"), format!("{h2:?}"));
+        assert_eq!(format!("{l:?}"), format!("{l2:?}"));
+        assert_eq!(l2.used(), 60);
     }
 
     #[test]

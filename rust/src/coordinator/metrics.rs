@@ -5,6 +5,8 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::unit::Phase;
+use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
 
 /// What a device interval was spent on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -18,6 +20,29 @@ pub enum IntervalKind {
     /// Synchronous NVMe<->DRAM staging (DRAM-miss fetch + forced eviction
     /// write-backs) blocking the device's promote path.
     NvmeTransfer,
+}
+
+impl IntervalKind {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            IntervalKind::Compute => 0,
+            IntervalKind::Transfer => 1,
+            IntervalKind::BufferStall => 2,
+            IntervalKind::NvmeTransfer => 3,
+        });
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<IntervalKind> {
+        match r.get_u8()? {
+            0 => Ok(IntervalKind::Compute),
+            1 => Ok(IntervalKind::Transfer),
+            2 => Ok(IntervalKind::BufferStall),
+            3 => Ok(IntervalKind::NvmeTransfer),
+            t => Err(HydraError::WalCorrupt(format!(
+                "unknown interval kind tag {t}"
+            ))),
+        }
+    }
 }
 
 /// One device-time interval in the schedule.
@@ -39,6 +64,32 @@ pub struct Interval {
     pub unit_seq: u64,
     /// What the time was spent on.
     pub kind: IntervalKind,
+}
+
+impl Interval {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.device);
+        w.put_f64(self.start);
+        w.put_f64(self.end);
+        w.put_usize(self.model);
+        w.put_u32(self.shard);
+        self.phase.encode(w);
+        w.put_u64(self.unit_seq);
+        self.kind.encode(w);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<Interval> {
+        Ok(Interval {
+            device: r.get_usize()?,
+            start: r.get_f64()?,
+            end: r.get_f64()?,
+            model: r.get_usize()?,
+            shard: r.get_u32()?,
+            phase: Phase::decode(r)?,
+            unit_seq: r.get_u64()?,
+            kind: IntervalKind::decode(r)?,
+        })
+    }
 }
 
 /// Full execution trace of a run.
@@ -143,6 +194,36 @@ impl Trace {
             }
         }
         m
+    }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.intervals.len());
+        for iv in &self.intervals {
+            iv.encode(w);
+        }
+        w.put_usize(self.device_windows.len());
+        for (&d, &(s, e)) in &self.device_windows {
+            w.put_usize(d);
+            w.put_f64(s);
+            w.put_f64(e);
+        }
+        w.put_f64(self.makespan);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<Trace> {
+        // each interval: 2 usize + 2 f64 + u32 + phase + u64 + kind
+        let n = r.get_count(42)?;
+        let mut intervals = Vec::with_capacity(n);
+        for _ in 0..n {
+            intervals.push(Interval::decode(r)?);
+        }
+        let n = r.get_count(24)?;
+        let mut device_windows = BTreeMap::new();
+        for _ in 0..n {
+            let d = r.get_usize()?;
+            device_windows.insert(d, (r.get_f64()?, r.get_f64()?));
+        }
+        Ok(Trace { intervals, device_windows, makespan: r.get_f64()? })
     }
 
     /// ASCII Gantt chart (Fig 3 / Fig 6 style). Each row is a device; each
@@ -263,6 +344,21 @@ mod tests {
         assert!(g.contains("dev 0"));
         assert!(g.contains('A'));
         assert!(g.contains('B'));
+    }
+
+    #[test]
+    fn codec_round_trips_a_trace() {
+        let mut t = Trace::default();
+        t.set_device_window(0, 0.0, f64::INFINITY);
+        t.record(iv(0, 0.0, 1.0, 0, IntervalKind::Compute));
+        t.record(iv(0, 1.0, 2.5, 1, IntervalKind::NvmeTransfer));
+        let mut w = ByteWriter::new();
+        t.encode(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let back = Trace::decode(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(format!("{t:?}"), format!("{back:?}"));
     }
 
     #[test]

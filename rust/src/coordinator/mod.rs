@@ -7,6 +7,7 @@
 //! [`crate::session::Session`]; the paper's Figure-4 style
 //! [`ModelOrchestrator`] remains as a deprecated shim over it.
 
+pub mod durability;
 pub mod engine;
 pub mod memory;
 pub mod metrics;

@@ -20,6 +20,20 @@ use crate::coordinator::unit::ShardUnit;
 /// override only what they care about; implementations must be cheap — they
 /// run on the dispatch hot path.
 pub trait EngineObserver {
+    /// A job the engine first learned about mid-run ([`crate::coordinator
+    /// ::engine::jobs::JobEvent::Submit`]) was accepted and assigned
+    /// `model`. Fires before the matching [`EngineObserver::on_job_arrived`]
+    /// (which may be deferred until the job's arrival time passes). Jobs
+    /// known up front never emit this.
+    fn on_job_submitted(&mut self, _model: usize, _name: &str, _now: f64) {}
+
+    /// A tenant requested cancellation of `model`
+    /// ([`crate::coordinator::engine::jobs::JobEvent::Cancel`]). Fires on
+    /// every request, idempotent duplicates included; the effect (if any)
+    /// is reported by [`EngineObserver::on_job_finished`] with
+    /// `cancelled == true`.
+    fn on_job_cancel_requested(&mut self, _model: usize, _now: f64) {}
+
     /// A job entered the eligible set (its arrival time passed, or it was
     /// submitted mid-run with an arrival in the past).
     fn on_job_arrived(&mut self, _model: usize, _name: &str, _now: f64) {}
@@ -94,6 +108,16 @@ impl EngineObserver for TraceRecorder {
 pub struct Tee<'a>(pub &'a mut dyn EngineObserver, pub &'a mut dyn EngineObserver);
 
 impl EngineObserver for Tee<'_> {
+    fn on_job_submitted(&mut self, model: usize, name: &str, now: f64) {
+        self.0.on_job_submitted(model, name, now);
+        self.1.on_job_submitted(model, name, now);
+    }
+
+    fn on_job_cancel_requested(&mut self, model: usize, now: f64) {
+        self.0.on_job_cancel_requested(model, now);
+        self.1.on_job_cancel_requested(model, now);
+    }
+
     fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
         self.0.on_job_arrived(model, name, now);
         self.1.on_job_arrived(model, name, now);

@@ -3,6 +3,8 @@
 //! queue-front tracking, remaining-time accounting, running/idle state.
 
 use crate::coordinator::unit::{Phase, ShardUnit, UnitGeometry};
+use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
 
 /// Per-shard static description produced by the partitioner.
 #[derive(Debug, Clone)]
@@ -44,6 +46,28 @@ impl ShardDesc {
             Phase::Bwd => self.bwd_cost,
         }
     }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.param_bytes);
+        w.put_u64(self.fwd_transfer_bytes);
+        w.put_u64(self.bwd_transfer_bytes);
+        w.put_u64(self.activation_bytes);
+        w.put_f64(self.fwd_cost);
+        w.put_f64(self.bwd_cost);
+        w.put_u32(self.n_layers);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<ShardDesc> {
+        Ok(ShardDesc {
+            param_bytes: r.get_u64()?,
+            fwd_transfer_bytes: r.get_u64()?,
+            bwd_transfer_bytes: r.get_u64()?,
+            activation_bytes: r.get_u64()?,
+            fwd_cost: r.get_f64()?,
+            bwd_cost: r.get_f64()?,
+            n_layers: r.get_u32()?,
+        })
+    }
 }
 
 /// Lifecycle state of a model task.
@@ -56,6 +80,25 @@ pub enum TaskState {
     Running,
     /// All units retired.
     Done,
+}
+
+impl TaskState {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            TaskState::Idle => 0,
+            TaskState::Running => 1,
+            TaskState::Done => 2,
+        });
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<TaskState> {
+        match r.get_u8()? {
+            0 => Ok(TaskState::Idle),
+            1 => Ok(TaskState::Running),
+            2 => Ok(TaskState::Done),
+            t => Err(HydraError::WalCorrupt(format!("unknown task state tag {t}"))),
+        }
+    }
 }
 
 /// A model training task with scheduler bookkeeping.
@@ -252,6 +295,62 @@ impl ModelTask {
     pub fn total_param_bytes(&self) -> u64 {
         self.shards.iter().map(|s| s.param_bytes).sum()
     }
+
+    /// Serialize the whole task — static description *and* the scheduler's
+    /// runtime bookkeeping (queue front, remaining time, lifecycle state) —
+    /// for durability snapshots and WAL genesis records.
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.id);
+        w.put_str(&self.name);
+        w.put_str(&self.config_name);
+        w.put_usize(self.shards.len());
+        for s in &self.shards {
+            s.encode(w);
+        }
+        self.geometry.encode(w);
+        w.put_f32(self.lr);
+        w.put_f64(self.arrival);
+        w.put_u64(self.next_idx);
+        self.state.encode(w);
+        w.put_f64(self.remaining_time);
+        w.put_u64(self.completed);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<ModelTask> {
+        let id = r.get_usize()?;
+        let name = r.get_str()?;
+        let config_name = r.get_str()?;
+        // each ShardDesc occupies at least 4*8 + 2*8 + 4 bytes
+        let n = r.get_count(52)?;
+        if n == 0 {
+            return Err(HydraError::WalCorrupt("task with zero shards".into()));
+        }
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            shards.push(ShardDesc::decode(r)?);
+        }
+        let geometry = UnitGeometry::decode(r)?;
+        if geometry.n_shards as usize != shards.len() {
+            return Err(HydraError::WalCorrupt(format!(
+                "geometry says {} shards but {} are described",
+                geometry.n_shards,
+                shards.len()
+            )));
+        }
+        Ok(ModelTask {
+            id,
+            name,
+            config_name,
+            shards,
+            geometry,
+            lr: r.get_f32()?,
+            arrival: r.get_f64()?,
+            next_idx: r.get_u64()?,
+            state: TaskState::decode(r)?,
+            remaining_time: r.get_f64()?,
+            completed: r.get_u64()?,
+        })
+    }
 }
 
 /// Immutable scheduler view of one model (what `Scheduler::pick` sees).
@@ -384,6 +483,22 @@ mod tests {
     #[should_panic(expected = "bad arrival")]
     fn negative_arrival_panics() {
         let _ = mk_task(1, 1, 1).with_arrival(-1.0);
+    }
+
+    #[test]
+    fn codec_round_trips_mid_run_bookkeeping() {
+        let mut t = mk_task(2, 3, 2).with_arrival(4.25);
+        let u = t.claim_front();
+        t.retire(&u);
+        let mut w = ByteWriter::new();
+        t.encode(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let back = ModelTask::decode(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(format!("{t:?}"), format!("{back:?}"));
+        assert_eq!(back.completed_units(), 1);
+        assert_eq!(back.state(), TaskState::Idle);
     }
 
     #[test]

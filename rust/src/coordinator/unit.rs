@@ -7,6 +7,9 @@
 //! it can reach tens of millions of entries (§4.4) — instead a unit is
 //! *derived* from its position index in O(1).
 
+use crate::error::{HydraError, Result};
+use crate::util::codec::{ByteReader, ByteWriter};
+
 /// Direction of a shard unit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Phase {
@@ -14,6 +17,23 @@ pub enum Phase {
     Fwd,
     /// Backward pass.
     Bwd,
+}
+
+impl Phase {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u8(match self {
+            Phase::Fwd => 0,
+            Phase::Bwd => 1,
+        });
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<Phase> {
+        match r.get_u8()? {
+            0 => Ok(Phase::Fwd),
+            1 => Ok(Phase::Bwd),
+            t => Err(HydraError::WalCorrupt(format!("unknown phase tag {t}"))),
+        }
+    }
 }
 
 /// A fully-resolved shard unit description.
@@ -30,6 +50,28 @@ pub struct ShardUnit {
     /// Shard index within the model (0-based, front-to-back).
     pub shard: u32,
     pub phase: Phase,
+}
+
+impl ShardUnit {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_usize(self.model);
+        w.put_u64(self.seq_idx);
+        w.put_u32(self.epoch);
+        w.put_u32(self.minibatch);
+        w.put_u32(self.shard);
+        self.phase.encode(w);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<ShardUnit> {
+        Ok(ShardUnit {
+            model: r.get_usize()?,
+            seq_idx: r.get_u64()?,
+            epoch: r.get_u32()?,
+            minibatch: r.get_u32()?,
+            shard: r.get_u32()?,
+            phase: Phase::decode(r)?,
+        })
+    }
 }
 
 /// Geometry of a model's unit queue: derives units from positions.
@@ -114,6 +156,26 @@ impl UnitGeometry {
         };
         ShardUnit { model, seq_idx, epoch, minibatch, shard, phase }
     }
+
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        w.put_u32(self.n_shards);
+        w.put_u32(self.minibatches_per_epoch);
+        w.put_u32(self.epochs);
+        w.put_bool(self.inference_only);
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<UnitGeometry> {
+        let g = UnitGeometry {
+            n_shards: r.get_u32()?,
+            minibatches_per_epoch: r.get_u32()?,
+            epochs: r.get_u32()?,
+            inference_only: r.get_bool()?,
+        };
+        if g.n_shards == 0 || g.minibatches_per_epoch == 0 || g.epochs == 0 {
+            return Err(HydraError::WalCorrupt("zero-sized unit geometry".into()));
+        }
+        Ok(g)
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +233,20 @@ mod tests {
             boundaries,
             vec![g.units_per_epoch() - 1, 2 * g.units_per_epoch() - 1]
         );
+    }
+
+    #[test]
+    fn codec_round_trips_units_and_geometry() {
+        let g = UnitGeometry::new(4, 5, 3);
+        let u = g.unit_at(7, 23);
+        let mut w = ByteWriter::new();
+        u.encode(&mut w);
+        g.encode(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(ShardUnit::decode(&mut r).unwrap(), u);
+        assert_eq!(UnitGeometry::decode(&mut r).unwrap(), g);
+        r.expect_end().unwrap();
     }
 
     #[test]

@@ -32,6 +32,11 @@ pub enum HydraError {
     Sched(String),
     /// Execution backend failure.
     Exec(String),
+    /// A write-ahead log or snapshot failed its checksum / framing checks
+    /// (torn write, bit flip, truncation). Recovery treats everything up to
+    /// the last complete checksummed record as valid and surfaces this for
+    /// the tail — never a panic.
+    WalCorrupt(String),
 }
 
 impl fmt::Display for HydraError {
@@ -48,6 +53,7 @@ impl fmt::Display for HydraError {
             ),
             HydraError::Sched(m) => write!(f, "scheduling error: {m}"),
             HydraError::Exec(m) => write!(f, "execution error: {m}"),
+            HydraError::WalCorrupt(m) => write!(f, "wal corrupt: {m}"),
         }
     }
 }

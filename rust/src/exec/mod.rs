@@ -30,6 +30,14 @@ pub trait ExecutionBackend {
     fn should_early_stop(&mut self, _task: &ModelTask, _epoch: u32) -> bool {
         false
     }
+
+    /// The backend's PRNG state, if it has one the durability subsystem can
+    /// snapshot ([`SimBackend`] does; the real backend's wallclock is not
+    /// replayable and returns `None`, which restricts snapshots to sim
+    /// runs). Default: `None`.
+    fn sim_rng_state(&self) -> Option<[u64; 4]> {
+        None
+    }
 }
 
 /// Cost-model backend: unit duration = ShardDesc estimate, optionally
@@ -48,6 +56,18 @@ impl SimBackend {
     pub fn deterministic() -> SimBackend {
         SimBackend::new(0.0, 0)
     }
+
+    /// The noise stream's raw PRNG state — captured by durability
+    /// snapshots so a resumed run draws the exact same perturbations.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rebuild the backend mid-stream from a snapshot
+    /// ([`SimBackend::rng_state`]).
+    pub fn from_state(noise: f64, state: [u64; 4]) -> SimBackend {
+        SimBackend { noise, rng: Rng::from_state(state) }
+    }
 }
 
 impl ExecutionBackend for SimBackend {
@@ -59,6 +79,10 @@ impl ExecutionBackend for SimBackend {
             let f = 1.0 + self.noise * (2.0 * self.rng.uniform() - 1.0);
             Ok(base * f.max(0.01))
         }
+    }
+
+    fn sim_rng_state(&self) -> Option<[u64; 4]> {
+        Some(self.rng_state())
     }
 }
 

@@ -31,6 +31,7 @@ pub mod tensor;
 pub mod train;
 pub mod util;
 
+pub use coordinator::durability::{recover, replay, DurabilityOptions, Recovered};
 pub use coordinator::memory::{MemTier, MemoryOptions, TierSpec};
 pub use coordinator::observer::{EngineObserver, NoopObserver, TraceRecorder};
 pub use coordinator::sched::Policy;

@@ -13,8 +13,12 @@
 //!   partition — show Algorithm-1 partitioning for a config
 //!   inspect   — list artifact configs and their executables
 
+use std::path::Path;
 use std::time::Duration;
 
+use hydra::coordinator::durability::{
+    recover, scan_wal, DurabilityOptions, Recovered, WalRecord,
+};
 use hydra::coordinator::memory::TierSpec;
 use hydra::coordinator::partitioner::PartitionPolicy;
 use hydra::coordinator::sharp::{
@@ -54,18 +58,24 @@ USAGE:
                 [--no-double-buffer] [--sequential] [--scan-queue]
                 [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
+                [--wal run.wal] [--snapshot-every 4096]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
                 [--scheduler sharded-lrtf] [--progress] [--gantt]
                 [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
+                [--wal run.wal] [--snapshot-every 4096]
   hydra search  --space lr=1e-4..1e-2:log,layers=12,24,48
                 [--algo grid|random|asha] [--pool a4000:4] [--trials N]
                 [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
                 [--grid-points 3] [--seed 7] [--stagger 0]
                 [--scheduler sharded-lrtf] [--prefetch-depth 1] [--shards 1]
                 [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
+                [--wal search.wal] [--snapshot-every 4096]
                 | --spec search.json
+  hydra recover <run.wal>
+                replay/resume a crashed durable run or search from its
+                event WAL (+ .snap sidecar when snapshots were enabled)
   hydra partition [--manifest artifacts] [--config tiny-lm-b8]
                 [--device-mem-mib 2]
   hydra inspect [--manifest artifacts]
@@ -98,6 +108,7 @@ fn main() {
         "figure" => cmd_figure(&args),
         "simulate" => cmd_simulate(&args),
         "search" => cmd_search(&args),
+        "recover" => cmd_recover(&args),
         "partition" => cmd_partition(&args),
         "inspect" => cmd_inspect(&args),
         other => {
@@ -137,6 +148,33 @@ fn engine_options(args: &Args) -> Result<EngineOptions, String> {
 
 fn policy_arg(args: &Args) -> Result<Policy, hydra::HydraError> {
     args.opt_or("scheduler", "sharded-lrtf").parse()
+}
+
+/// `--wal <path> [--snapshot-every <n>]` shared by the simulate and search
+/// subcommands.
+fn durability_args(args: &Args) -> Result<Option<DurabilityOptions>, String> {
+    let every = args
+        .opt("snapshot-every")
+        .map(|v| {
+            v.parse::<u64>()
+                .map_err(|_| format!("--snapshot-every: bad integer {v:?}"))
+        })
+        .transpose()?;
+    match args.opt("wal") {
+        Some(path) => {
+            let mut d = DurabilityOptions::new(path);
+            if let Some(n) = every {
+                d.snapshot_every = n;
+            }
+            Ok(Some(d))
+        }
+        None if every.is_some() => {
+            Err("--snapshot-every requires --wal (snapshots are a sidecar \
+                 of the event WAL)"
+                .into())
+        }
+        None => Ok(None),
+    }
 }
 
 /// Streams job lifecycle events while the engine runs — the
@@ -326,6 +364,9 @@ fn cmd_simulate(args: &Args) -> CliResult {
     if let Some(tier) = nvme {
         builder = builder.nvme(tier);
     }
+    if let Some(d) = durability_args(args)? {
+        builder = builder.durability(d);
+    }
     let mut session = builder.build()?;
     for t in tasks {
         session.submit(t)?;
@@ -370,6 +411,9 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
         .options(opts);
     if let Some(tier) = nvme {
         builder = builder.nvme(tier);
+    }
+    if let Some(d) = durability_args(args)? {
+        builder = builder.durability(d);
     }
     let mut session = builder.build()?;
     for t in tasks {
@@ -418,7 +462,11 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
 /// surviving trials (`hydra::selection`).
 fn cmd_search(args: &Args) -> CliResult {
     let report = if let Some(path) = args.opt("spec") {
-        let spec = hydra::config::SearchWorkload::load(path)?;
+        let mut spec = hydra::config::SearchWorkload::load(path)?;
+        if let Some(d) = durability_args(args)? {
+            // CLI flags override the spec's own engine.wal/snapshot_every
+            spec.durability = Some(d);
+        }
         println!(
             "search spec {path}: {}-axis space on {} devices ({} scheduler)",
             spec.search.space.params.len(),
@@ -451,7 +499,8 @@ fn cmd_search(args: &Args) -> CliResult {
                 return Err(format!("unknown --algo {other:?} (grid|random|asha)").into())
             }
         };
-        let pool = parse_pool(&args.opt_or("pool", "a4000:4"))?;
+        let pool_s = args.opt_or("pool", "a4000:4");
+        let pool = parse_pool(&pool_s)?;
         let reference = pool_reference(&pool).ok_or("empty pool")?;
         let specs: Vec<_> = pool.iter().map(|g| g.device_spec(&reference)).collect();
         let dram = (args.opt_usize("dram-gib", 500)? as u64) << 30;
@@ -473,16 +522,132 @@ fn cmd_search(args: &Args) -> CliResult {
             record_intervals: false,
             ..engine_options(args)?
         };
-        let mut builder = Session::builder(Cluster::heterogeneous(specs, dram))
-            .backend(Backend::sim())
-            .policy(policy_arg(args)?)
-            .options(opts);
-        if let Some(tier) = nvme {
-            builder = builder.nvme(tier);
+        if let Some(d) = durability_args(args)? {
+            // A durable search routes through the declarative spec path:
+            // the synthesized spec text becomes the WAL genesis record, so
+            // `hydra recover` re-drives the search from the same recipe.
+            let mut engine = format!(
+                r#""scheduler": "{}", "shards": {}, "prefetch_depth": {}, "buffer_frac": 0.3, "wal": "{}""#,
+                args.opt_or("scheduler", "sharded-lrtf"),
+                opts.shards,
+                opts.prefetch_depth,
+                d.wal.display(),
+            );
+            if d.snapshot_every > 0 {
+                engine.push_str(&format!(
+                    r#", "snapshot_every": {}"#,
+                    d.snapshot_every
+                ));
+            }
+            if args.flag("sequential") {
+                engine.push_str(r#", "sequential": true"#);
+            }
+            if args.flag("no-double-buffer") {
+                engine.push_str(r#", "double_buffer": false"#);
+            }
+            if args.flag("scan-queue") {
+                engine.push_str(r#", "event_queue": "scan""#);
+            }
+            let mut cluster =
+                format!(r#""pool": "{pool_s}", "dram_mib": {}"#, dram >> 20);
+            if let Some(nv) = args.opt("nvme") {
+                cluster.push_str(&format!(r#", "nvme": "{nv}""#));
+            }
+            let mut search_obj = format!(
+                r#""space": "{space_s}", "algo": "{}", "eta": {eta}, "min_epochs": {min_epochs}, "epochs": {}, "minibatches": {}, "seed": {}, "stagger": {}, "grid_points": {}"#,
+                args.opt_or("algo", "asha"),
+                search.epochs,
+                search.minibatches_per_epoch,
+                search.seed,
+                search.stagger_secs,
+                search.grid_points,
+            );
+            if let Some(t) = trials {
+                search_obj.push_str(&format!(r#", "trials": {t}"#));
+            }
+            let text = format!(
+                "{{\"cluster\": {{{cluster}}}, \"engine\": {{{engine}}}, \
+                 \"search\": {{{search_obj}}}}}"
+            );
+            println!("durable search: event WAL at {}", d.wal.display());
+            hydra::config::SearchWorkload::parse(&text)?.run()?
+        } else {
+            let mut builder =
+                Session::builder(Cluster::heterogeneous(specs, dram))
+                    .backend(Backend::sim())
+                    .policy(policy_arg(args)?)
+                    .options(opts);
+            if let Some(tier) = nvme {
+                builder = builder.nvme(tier);
+            }
+            builder.build()?.run_search(&search)?
         }
-        builder.build()?.run_search(&search)?
     };
     print_search_report(&report);
+    Ok(())
+}
+
+/// Recover a crashed (or finished) durable run from its event WAL:
+/// scan + forensics line, then snapshot-resume or genesis replay.
+fn cmd_recover(args: &Args) -> CliResult {
+    let path = args.positional.get(1).map(String::as_str).ok_or(
+        "recover requires a WAL path: hydra recover <run.wal>",
+    )?;
+    let wal = Path::new(path);
+    let scanned = scan_wal(wal)?;
+    let kind = match &scanned.genesis {
+        hydra::coordinator::durability::Genesis::Run(spec) => format!(
+            "run ({} tasks on {} devices)",
+            spec.tasks.len(),
+            spec.devices.len()
+        ),
+        hydra::coordinator::durability::Genesis::Search(_) => {
+            "search".to_string()
+        }
+    };
+    let complete = matches!(scanned.records.last(), Some(WalRecord::RunEnd { .. }));
+    println!(
+        "{path}: {kind} genesis + {} event records{}{}",
+        scanned.records.len(),
+        if complete { ", RunEnd present (clean)" } else { ", no RunEnd (interrupted)" },
+        match &scanned.torn {
+            Some(e) => format!("; torn tail clipped: {e}"),
+            None => String::new(),
+        },
+    );
+    let started = std::time::Instant::now();
+    match recover(wal)? {
+        Recovered::Run(r) => {
+            println!(
+                "recovered run in {:.3}s wallclock:",
+                started.elapsed().as_secs_f64()
+            );
+            println!(
+                "  makespan {:.2}h | utilization {:.1}% | {} units executed",
+                r.makespan / 3600.0,
+                100.0 * r.utilization,
+                r.units_executed
+            );
+            print_tier_traffic(&r);
+            for j in &r.jobs {
+                println!(
+                    "  {:<26} {:>9.2}m {:>9.2}m {:>7} units{}",
+                    j.name,
+                    j.arrival / 60.0,
+                    j.finished / 60.0,
+                    j.units_executed,
+                    if j.cancelled { " (cancelled)" } else { "" },
+                );
+            }
+        }
+        Recovered::Search(r) => {
+            println!(
+                "recovered search in {:.3}s wallclock:",
+                started.elapsed().as_secs_f64()
+            );
+            print_search_report(&r);
+        }
+    }
     Ok(())
 }
 

@@ -26,6 +26,9 @@
 
 use std::fmt;
 
+use crate::coordinator::durability::replay::DurableTap;
+use crate::coordinator::durability::wal::WalRecord;
+use crate::coordinator::durability::{run_durable, DurabilityOptions, RunSpec, WalWriter};
 use crate::coordinator::memory::{MemoryOptions, TierSpec};
 use crate::coordinator::observer::EngineObserver;
 use crate::coordinator::partitioner::PartitionPolicy;
@@ -146,6 +149,7 @@ pub struct SessionBuilder {
     memory: Option<MemoryOptions>,
     partition_policy: PartitionPolicy,
     early_stop_median_after: Option<u32>,
+    durability: Option<DurabilityOptions>,
 }
 
 impl SessionBuilder {
@@ -231,6 +235,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Make the run durable: write an event WAL (and, with
+    /// [`DurabilityOptions::snapshot_every`], periodic engine-state
+    /// snapshots) so the run can be replayed byte-identically or recovered
+    /// after a crash via [`crate::coordinator::durability::recover`].
+    /// Requires the sim or custom backend — the real backend's measured
+    /// wallclock is not replayable.
+    pub fn durability(mut self, durability: DurabilityOptions) -> SessionBuilder {
+        self.durability = Some(durability);
+        self
+    }
+
     /// Validate the cluster and produce the [`Session`].
     pub fn build(self) -> Result<Session> {
         self.cluster.validate()?;
@@ -245,6 +260,7 @@ impl SessionBuilder {
             memory,
             partition_policy: self.partition_policy,
             early_stop_median_after: self.early_stop_median_after,
+            durability: self.durability,
             jobs: Vec::new(),
             cancels: Vec::new(),
             cluster_events: Vec::new(),
@@ -297,6 +313,7 @@ pub struct Session {
     memory: MemoryOptions,
     partition_policy: PartitionPolicy,
     early_stop_median_after: Option<u32>,
+    durability: Option<DurabilityOptions>,
     jobs: Vec<Job>,
     /// (job index, virtual time) cancellations.
     cancels: Vec<(usize, f64)>,
@@ -348,6 +365,7 @@ impl Session {
             memory: None,
             partition_policy: PartitionPolicy::default(),
             early_stop_median_after: None,
+            durability: None,
         }
     }
 
@@ -448,6 +466,7 @@ impl Session {
             memory,
             partition_policy,
             early_stop_median_after,
+            durability,
             jobs,
             cancels,
             cluster_events,
@@ -463,6 +482,13 @@ impl Session {
             return Err(HydraError::Config(
                 "shards > 1 requires the sim/custom backend (the real PJRT \
                  backend drives one global coordinator)"
+                    .into(),
+            ));
+        }
+        if durability.is_some() && matches!(backend, Backend::Real { .. }) {
+            return Err(HydraError::Config(
+                "durability requires the sim/custom backend (the real \
+                 backend's measured wallclock is not replayable)"
                     .into(),
             ));
         }
@@ -568,8 +594,25 @@ impl Session {
                     }
                 }
                 job_events.extend(cancel_events);
-                let (run, shard_sections) = match sim_or_custom {
-                    Backend::Sim { noise, seed } => drive_any(
+                let (run, shard_sections) = match (sim_or_custom, durability) {
+                    // The fully durable path: the complete run recipe
+                    // becomes the WAL's genesis record, every event is
+                    // logged, snapshots interleave with the event loop.
+                    (Backend::Sim { noise, seed }, Some(dur)) => {
+                        let spec = RunSpec {
+                            tasks,
+                            devices: cluster.devices.clone(),
+                            memory,
+                            policy,
+                            options,
+                            cluster_events,
+                            job_events,
+                            noise,
+                            backend_seed: seed,
+                        };
+                        run_durable(&spec, &dur, obs)?
+                    }
+                    (Backend::Sim { noise, seed }, None) => drive_any(
                         &mut SimBackend::new(noise, seed),
                         tasks,
                         &cluster,
@@ -580,7 +623,32 @@ impl Session {
                         job_events,
                         obs,
                     )?,
-                    Backend::Custom(mut custom) => drive_any(
+                    // Custom backends can't be serialized into a genesis,
+                    // so durability degrades to record-only append mode:
+                    // events land in the WAL after whatever genesis its
+                    // creator wrote (e.g. a search's spec JSON).
+                    (Backend::Custom(mut custom), Some(dur)) => {
+                        let mut tap = DurableTap {
+                            wal: WalWriter::append_to(&dur.wal)?,
+                            rec: None,
+                            user: obs,
+                        };
+                        let (run, sections) = drive_any(
+                            &mut *custom,
+                            tasks,
+                            &cluster,
+                            memory,
+                            policy,
+                            options,
+                            cluster_events,
+                            job_events,
+                            Some(&mut tap),
+                        )?;
+                        tap.wal.append(&WalRecord::RunEnd { makespan: run.makespan });
+                        tap.wal.finish()?;
+                        (run, sections)
+                    }
+                    (Backend::Custom(mut custom), None) => drive_any(
                         &mut *custom,
                         tasks,
                         &cluster,
@@ -591,7 +659,7 @@ impl Session {
                         job_events,
                         obs,
                     )?,
-                    Backend::Real { .. } => unreachable!("handled above"),
+                    (Backend::Real { .. }, _) => unreachable!("handled above"),
                 };
                 Ok(SessionReport {
                     run,

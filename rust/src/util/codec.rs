@@ -1,0 +1,304 @@
+//! Hand-rolled binary codec for the durability subsystem (no external
+//! serialization crates — see the Cargo.toml note): fixed-width
+//! little-endian integers, `f64` as raw IEEE-754 bits (NaN patterns such as
+//! the engine's "never cancelled" sentinel survive a round trip exactly),
+//! length-prefixed strings, and an IEEE CRC-32 for record checksums.
+//!
+//! Every decode error is a typed [`HydraError::WalCorrupt`] — a torn or
+//! bit-flipped WAL must surface as a recoverable error, never a panic
+//! (property-tested in rust/tests/durability.rs). Readers therefore treat
+//! every length and count as untrusted: a count that could not possibly fit
+//! in the remaining bytes is rejected before any allocation happens.
+
+use crate::error::{HydraError, Result};
+
+/// IEEE CRC-32 (reflected, polynomial 0xEDB88320) lookup table, built at
+/// compile time.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// IEEE CRC-32 of `data` (the checksum zlib and PNG use).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Append-only byte buffer with typed little-endian writers.
+#[derive(Debug, Default, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// `f64` as raw bits: round trips every bit pattern, NaNs included.
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.put_u32(v.to_bits());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+}
+
+fn corrupt(what: &str) -> HydraError {
+    HydraError::WalCorrupt(format!("truncated or malformed field: {what}"))
+}
+
+/// Cursor over an immutable byte slice with typed little-endian readers.
+/// Every getter fails with [`HydraError::WalCorrupt`] instead of panicking
+/// when the slice runs short.
+#[derive(Debug, Clone)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(corrupt(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(HydraError::WalCorrupt(format!("bad bool byte {b:#x}"))),
+        }
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let s = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let s = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v)
+            .map_err(|_| HydraError::WalCorrupt(format!("usize overflow: {v}")))
+    }
+
+    /// Read an element count for a collection whose elements occupy at
+    /// least `min_bytes_per_item` bytes each. Rejects counts that could not
+    /// possibly fit in the remaining buffer *before* any allocation — the
+    /// guard against corrupted lengths turning into allocation bombs.
+    pub fn get_count(&mut self, min_bytes_per_item: usize) -> Result<usize> {
+        let n = self.get_usize()?;
+        let per = min_bytes_per_item.max(1);
+        if n > self.remaining() / per {
+            return Err(HydraError::WalCorrupt(format!(
+                "impossible element count {n} ({} bytes remain)",
+                self.remaining()
+            )));
+        }
+        Ok(n)
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_usize()?;
+        if n > self.remaining() {
+            return Err(corrupt("byte string"));
+        }
+        self.take(n, "byte string")
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| HydraError::WalCorrupt("invalid utf-8 string".into()))
+    }
+
+    /// The decode analogue of "trailing garbage": snapshot payloads must be
+    /// consumed exactly.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.is_empty() {
+            Ok(())
+        } else {
+            Err(HydraError::WalCorrupt(format!(
+                "{} trailing bytes after record payload",
+                self.remaining()
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE CRC-32 check values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"hello"), 0x3610_A686);
+    }
+
+    #[test]
+    fn round_trip_all_types() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_usize(42);
+        w.put_f64(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_f32(1.5);
+        w.put_str("hydra");
+        w.put_bytes(&[1, 2, 3]);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_usize().unwrap(), 42);
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.get_f64().unwrap().is_nan());
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_str().unwrap(), "hydra");
+        assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_u64(99);
+        w.put_str("tail");
+        let buf = w.into_inner();
+        for cut in 0..buf.len() {
+            let mut r = ByteReader::new(&buf[..cut]);
+            // reading the full sequence from any strict prefix must fail
+            let res = r.get_u64().and_then(|_| r.get_str());
+            assert!(res.is_err(), "cut at {cut} decoded successfully");
+        }
+    }
+
+    #[test]
+    fn bad_bool_and_trailing_bytes_rejected() {
+        let mut r = ByteReader::new(&[2]);
+        assert!(r.get_bool().is_err());
+        let r = ByteReader::new(&[0]);
+        assert!(r.expect_end().is_err());
+    }
+
+    #[test]
+    fn impossible_counts_rejected_before_allocation() {
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX); // claimed count
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.get_count(1).is_err());
+        // a huge length prefix on a byte string is equally rejected
+        let mut w = ByteWriter::new();
+        w.put_u64(1 << 40);
+        w.put_u8(1);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        assert!(r.get_bytes().is_err());
+    }
+}

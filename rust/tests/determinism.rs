@@ -1,0 +1,105 @@
+//! Determinism audit: the engine is a pure function of its inputs, which
+//! is what makes the durability subsystem's replay-from-genesis recovery
+//! sound. Two runs with identical inputs — same seed, every scheduling
+//! policy, sharded and unsharded, with noise, mid-run arrivals, a tenant
+//! cancellation and a device failure — must produce byte-identical Debug
+//! reports. Searches get the same treatment end-to-end.
+
+use hydra::coordinator::sharp::{ClusterEvent, EngineOptions, TransferModel};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::Cluster;
+use hydra::selection::{Algo, Search, SearchSpace};
+use hydra::session::{Backend, Policy, Session};
+
+const MIB: u64 = 1 << 20;
+const GIB: u64 = 1 << 30;
+
+fn shard(bytes: u64) -> ShardDesc {
+    ShardDesc {
+        param_bytes: bytes,
+        fwd_transfer_bytes: bytes,
+        bwd_transfer_bytes: bytes,
+        activation_bytes: MIB,
+        fwd_cost: 0.4,
+        bwd_cost: 0.8,
+        n_layers: 2,
+    }
+}
+
+/// A busy scenario: noisy backend, staggered arrivals, a cancellation, a
+/// device failure — everything that could perturb a sloppy RNG or
+/// iteration order. Returns the full report rendered to bytes.
+fn run_once(policy: Policy, shards: usize) -> String {
+    let tasks = vec![
+        ModelTask::new(0, "m0", "det", vec![shard(8 * MIB), shard(8 * MIB)], 3, 2, 1e-3),
+        ModelTask::new(1, "m1", "det", vec![shard(16 * MIB)], 4, 2, 1e-3),
+        ModelTask::new(2, "m2", "det", vec![shard(4 * MIB), shard(4 * MIB)], 2, 2, 1e-3)
+            .with_arrival(1.5),
+        ModelTask::new(3, "m3", "det", vec![shard(8 * MIB)], 2, 2, 1e-3)
+            .with_arrival(2.0),
+    ];
+    let opts = EngineOptions {
+        record_intervals: true,
+        transfer: TransferModel::pcie_gen3(),
+        shards,
+        ..Default::default()
+    };
+    let mut session = Session::builder(Cluster::uniform(4, 64 * MIB, GIB))
+        .backend(Backend::Sim { noise: 0.05, seed: 11 })
+        .policy(policy)
+        .options(opts)
+        .build()
+        .unwrap();
+    let mut handles = Vec::new();
+    for t in tasks {
+        handles.push(session.submit(t).unwrap());
+    }
+    session.cancel_at(handles[1], 3.0).unwrap();
+    session.cluster_events(vec![ClusterEvent::Fail { time: 2.5, device: 3 }]);
+    let report = session.run().unwrap();
+    format!("{:?} losses={:?}", report.run, report.losses)
+}
+
+#[test]
+fn identical_runs_are_byte_identical_for_every_policy() {
+    for policy in Policy::ALL {
+        let a = run_once(policy, 1);
+        let b = run_once(policy, 1);
+        assert_eq!(a, b, "{policy:?}: two identical unsharded runs diverged");
+    }
+}
+
+#[test]
+fn identical_sharded_runs_are_byte_identical_for_every_policy() {
+    for shards in [2usize, 4] {
+        for policy in Policy::ALL {
+            let a = run_once(policy, shards);
+            let b = run_once(policy, shards);
+            assert_eq!(
+                a, b,
+                "{policy:?}: two identical {shards}-shard runs diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn identical_searches_are_byte_identical() {
+    let run = || {
+        let space =
+            SearchSpace::parse("lr=1e-4..1e-2:log,layers=12,24").unwrap();
+        let mut search = Search::new(space);
+        search.algo = Algo::Asha { trials: Some(6), eta: 3, min_epochs: 1 };
+        search.epochs = 4;
+        search.minibatches_per_epoch = 2;
+        search.seed = 7;
+        search.stagger_secs = 30.0;
+        let session = Session::builder(Cluster::uniform(4, 16 * GIB, 64 * GIB))
+            .backend(Backend::Sim { noise: 0.05, seed: 3 })
+            .policy(Policy::ShardedLrtf)
+            .build()
+            .unwrap();
+        format!("{:?}", session.run_search(&search).unwrap())
+    };
+    assert_eq!(run(), run(), "two identical searches diverged");
+}

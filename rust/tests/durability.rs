@@ -1,0 +1,304 @@
+//! Fault-injection drills for the durability subsystem.
+//!
+//! Satellite obligations from the WAL/snapshot/replay PR:
+//!
+//! * **torn-write property test** — a WAL truncated or bit-flipped at any
+//!   byte offset scans to the last complete checksummed record, surfaces a
+//!   typed [`HydraError::WalCorrupt`] for the damaged tail, and never
+//!   panics;
+//! * **crash-recovery e2e** — a device dies mid-run (and, sharded, a whole
+//!   shard's devices); the run is killed (WAL tail torn off, RunEnd lost)
+//!   and recovered from snapshot + WAL; the finished report must be
+//!   byte-identical to the uninterrupted baseline, on unsharded and
+//!   N ∈ {2, 4} sharded workloads;
+//! * **durable search e2e** — `hydra recover` on a search WAL re-drives
+//!   the search from its genesis spec text to an identical report.
+
+use std::path::{Path, PathBuf};
+
+use hydra::coordinator::durability::{
+    recover, replay, scan_wal, snapshot_path, DurabilityOptions, Recovered,
+};
+use hydra::coordinator::sharp::{ClusterEvent, EngineOptions, TransferModel};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::Cluster;
+use hydra::session::{Backend, Policy, Session};
+use hydra::HydraError;
+
+const MIB: u64 = 1 << 20;
+const GIB: u64 = 1 << 30;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hydra-durability-{}-{name}", std::process::id()))
+}
+
+fn cleanup(wal: &Path) {
+    let _ = std::fs::remove_file(wal);
+    let _ = std::fs::remove_file(snapshot_path(wal));
+    for k in 0..8 {
+        let mut p = wal.as_os_str().to_os_string();
+        p.push(format!(".shard{k}"));
+        let _ = std::fs::remove_file(PathBuf::from(p));
+    }
+}
+
+fn shard(bytes: u64) -> ShardDesc {
+    ShardDesc {
+        param_bytes: bytes,
+        fwd_transfer_bytes: bytes,
+        bwd_transfer_bytes: bytes,
+        activation_bytes: MIB,
+        fwd_cost: 0.4,
+        bwd_cost: 0.8,
+        n_layers: 2,
+    }
+}
+
+fn tasks() -> Vec<ModelTask> {
+    vec![
+        ModelTask::new(0, "m0", "dur", vec![shard(8 * MIB), shard(8 * MIB)], 3, 2, 1e-3),
+        ModelTask::new(1, "m1", "dur", vec![shard(16 * MIB)], 4, 2, 1e-3),
+        ModelTask::new(2, "m2", "dur", vec![shard(4 * MIB), shard(4 * MIB)], 2, 2, 1e-3)
+            .with_arrival(1.5),
+    ]
+}
+
+/// Run the drill workload — noisy backend, mid-run arrival, a tenant
+/// cancellation, and the given device failures ("kill a device") — with
+/// optional durability. Returns the report rendered to bytes.
+fn run_workload(
+    durability: Option<DurabilityOptions>,
+    shards: usize,
+    fail_devices: &[usize],
+) -> String {
+    let opts = EngineOptions {
+        record_intervals: true,
+        transfer: TransferModel::pcie_gen3(),
+        shards,
+        ..Default::default()
+    };
+    let mut builder = Session::builder(Cluster::uniform(4, 64 * MIB, GIB))
+        .backend(Backend::Sim { noise: 0.05, seed: 11 })
+        .policy(Policy::ShardedLrtf)
+        .options(opts);
+    if let Some(d) = durability {
+        builder = builder.durability(d);
+    }
+    let mut session = builder.build().unwrap();
+    let mut handles = Vec::new();
+    for t in tasks() {
+        handles.push(session.submit(t).unwrap());
+    }
+    session.cancel_at(handles[1], 3.0).unwrap();
+    session.cluster_events(
+        fail_devices
+            .iter()
+            .map(|&d| ClusterEvent::Fail { time: 2.5, device: d })
+            .collect(),
+    );
+    format!("{:?}", session.run().unwrap().run)
+}
+
+// ---------------------------------------------------------------------------
+// satellite: torn-write property test
+// ---------------------------------------------------------------------------
+
+/// Truncate the WAL at *every* byte offset: the scan must never panic,
+/// must return exactly the longest prefix of complete records, and must
+/// surface the damage as a typed `WalCorrupt` — either as the scan error
+/// (genesis unrecoverable) or as the clipped-tail marker.
+#[test]
+fn wal_truncated_at_any_offset_recovers_the_complete_prefix() {
+    let wal = tmp("torn.wal");
+    cleanup(&wal);
+    run_workload(Some(DurabilityOptions::new(&wal)), 1, &[3]);
+    let bytes = std::fs::read(&wal).unwrap();
+    let full = scan_wal(&wal).unwrap();
+    assert!(full.torn.is_none(), "pristine WAL reported torn");
+    let full_records: Vec<String> =
+        full.records.iter().map(|r| format!("{r:?}")).collect();
+
+    let cut = tmp("torn.cut.wal");
+    for len in 0..bytes.len() {
+        std::fs::write(&cut, &bytes[..len]).unwrap();
+        match scan_wal(&cut) {
+            Ok(scanned) => {
+                // what survived must be exactly the leading complete
+                // records of the pristine WAL; a cut inside a record is
+                // flagged as torn, a cut on a record boundary is
+                // indistinguishable from a crash right after a flush and
+                // may scan clean — but then records must be missing
+                match &scanned.torn {
+                    Some(HydraError::WalCorrupt(_)) => {}
+                    Some(e) => panic!("truncation at {len}: untyped tear {e:?}"),
+                    None => assert!(
+                        scanned.records.len() < full_records.len(),
+                        "truncation at {len} lost bytes but scanned clean and full"
+                    ),
+                }
+                assert!(scanned.records.len() <= full_records.len());
+                for (i, r) in scanned.records.iter().enumerate() {
+                    assert_eq!(
+                        format!("{r:?}"),
+                        full_records[i],
+                        "truncation at {len}: record {i} corrupted, not clipped"
+                    );
+                }
+            }
+            // truncation inside the magic or the genesis record: the WAL
+            // is unusable, but the failure is typed, not a panic
+            Err(HydraError::WalCorrupt(_)) => {}
+            Err(e) => panic!("truncation at {len}: untyped error {e:?}"),
+        }
+    }
+    let _ = std::fs::remove_file(&cut);
+    cleanup(&wal);
+}
+
+/// Flip one byte at *every* offset: scans either clip the damage (CRC
+/// catches the flip) or fail with a typed `WalCorrupt` — never a panic,
+/// never a crash from a hostile length prefix.
+#[test]
+fn wal_bit_flips_at_any_offset_are_typed_never_panics() {
+    let wal = tmp("flip.wal");
+    cleanup(&wal);
+    run_workload(Some(DurabilityOptions::new(&wal)), 1, &[3]);
+    let bytes = std::fs::read(&wal).unwrap();
+
+    let hit = tmp("flip.hit.wal");
+    for off in 0..bytes.len() {
+        let mut copy = bytes.clone();
+        copy[off] ^= 0xa5;
+        std::fs::write(&hit, &copy).unwrap();
+        match scan_wal(&hit) {
+            Ok(scanned) => {
+                // damage to record framing/payload bytes must be flagged;
+                // a flip past the last complete record may clip silently
+                // only if it produced a structurally-valid tail, which the
+                // CRC makes impossible — so torn must be set
+                assert!(
+                    scanned.torn.is_some(),
+                    "flip at {off} silently altered the WAL"
+                );
+            }
+            Err(HydraError::WalCorrupt(_)) => {}
+            Err(e) => panic!("flip at {off}: untyped error {e:?}"),
+        }
+    }
+    let _ = std::fs::remove_file(&hit);
+    cleanup(&wal);
+}
+
+// ---------------------------------------------------------------------------
+// satellite: crash-recovery e2e drills
+// ---------------------------------------------------------------------------
+
+/// Kill a device mid-run, then kill the *process* (simulated by tearing
+/// the WAL tail off mid-stream, losing RunEnd and the sidecar's trailing
+/// records). `recover` must finish the run byte-identically to the
+/// uninterrupted baseline — via the snapshot when the sidecar survives,
+/// via genesis replay when it does not.
+#[test]
+fn crash_recovery_is_byte_identical_to_the_uninterrupted_baseline() {
+    let baseline = run_workload(None, 1, &[3]);
+
+    let wal = tmp("crash.wal");
+    cleanup(&wal);
+    let durable =
+        run_workload(Some(DurabilityOptions::new(&wal).snapshot_every(7)), 1, &[3]);
+    assert_eq!(durable, baseline, "durable run perturbed the schedule");
+
+    // full replay of the intact WAL
+    let replayed = format!("{:?}", replay(&wal).unwrap());
+    assert_eq!(replayed, baseline, "replay(wal) diverged");
+
+    // crash: tear off the tail (RunEnd and the last records are lost)
+    let bytes = std::fs::read(&wal).unwrap();
+    std::fs::write(&wal, &bytes[..bytes.len() * 3 / 5]).unwrap();
+    assert!(
+        snapshot_path(&wal).exists(),
+        "snapshot_every(7) never wrote the sidecar"
+    );
+    let recovered = match recover(&wal).unwrap() {
+        Recovered::Run(r) => format!("{r:?}"),
+        Recovered::Search(_) => panic!("run genesis recovered as a search"),
+    };
+    assert_eq!(recovered, baseline, "snapshot-resume recovery diverged");
+
+    // same crash with the sidecar gone: degrade to genesis replay
+    std::fs::remove_file(snapshot_path(&wal)).unwrap();
+    let recovered = match recover(&wal).unwrap() {
+        Recovered::Run(r) => format!("{r:?}"),
+        Recovered::Search(_) => panic!("run genesis recovered as a search"),
+    };
+    assert_eq!(recovered, baseline, "genesis-replay recovery diverged");
+    cleanup(&wal);
+}
+
+/// Sharded drills, N ∈ {2, 4}: kill a whole shard's devices mid-run, tear
+/// the WAL tail off, recover. Sharded recovery replays from genesis (no
+/// physical snapshot), so the recovered report must match both the durable
+/// run and the no-WAL baseline.
+#[test]
+fn sharded_crash_recovery_replays_from_genesis_byte_identically() {
+    for shards in [2usize, 4] {
+        // devices partition round-robin (shard i owns i, i+N, ...), so with
+        // 4 devices killing {1, 3} is all of shard 1 at N=2 and the whole
+        // of shards 1 and 3 at N=4
+        let killed = [1usize, 3];
+        let baseline = run_workload(None, shards, &killed);
+
+        let wal = tmp(&format!("crash{shards}.wal"));
+        cleanup(&wal);
+        let durable = run_workload(
+            Some(DurabilityOptions::new(&wal).snapshot_every(7)),
+            shards,
+            &killed,
+        );
+        assert_eq!(durable, baseline, "{shards}-shard durable run diverged");
+
+        let bytes = std::fs::read(&wal).unwrap();
+        std::fs::write(&wal, &bytes[..bytes.len() / 2]).unwrap();
+        let recovered = match recover(&wal).unwrap() {
+            Recovered::Run(r) => format!("{r:?}"),
+            Recovered::Search(_) => panic!("run genesis recovered as a search"),
+        };
+        assert_eq!(recovered, baseline, "{shards}-shard recovery diverged");
+        cleanup(&wal);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// satellite: durable search e2e
+// ---------------------------------------------------------------------------
+
+/// A durable search's WAL genesis is the spec text itself; `recover` must
+/// re-drive the whole search to an identical report.
+#[test]
+fn durable_search_recovers_to_an_identical_report() {
+    let wal = tmp("search.wal");
+    cleanup(&wal);
+    let spec_text = format!(
+        r#"{{
+  "cluster": {{ "devices": 4, "device_mem_mib": 16384, "dram_mib": 65536 }},
+  "engine": {{ "scheduler": "sharded-lrtf", "wal": "{}", "snapshot_every": 64 }},
+  "search": {{ "space": "lr=1e-4..1e-2:log,layers=12,24", "algo": "asha",
+               "trials": 6, "epochs": 4, "minibatches": 2, "seed": 7,
+               "stagger": 30 }}
+}}"#,
+        wal.display()
+    );
+    let spec = hydra::config::SearchWorkload::parse(&spec_text).unwrap();
+    let original = format!("{:?}", spec.run().unwrap());
+
+    let scanned = scan_wal(&wal).unwrap();
+    assert!(scanned.torn.is_none(), "search WAL torn after clean run");
+    assert!(!scanned.records.is_empty(), "search WAL logged no events");
+
+    let recovered = match recover(&wal).unwrap() {
+        Recovered::Search(r) => format!("{r:?}"),
+        Recovered::Run(_) => panic!("search genesis recovered as a run"),
+    };
+    assert_eq!(recovered, original, "recovered search diverged");
+    cleanup(&wal);
+}
