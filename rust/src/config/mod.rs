@@ -10,7 +10,7 @@
 //!   "engine": { "scheduler": "sharded-lrtf", "double_buffer": true,
 //!               "sequential": false, "buffer_frac": 0.05,
 //!               "prefetch_depth": 1, "early_stop_median_after": 2,
-//!               "event_queue": "heap" },
+//!               "queue": "heap" },
 //!   "tasks": [
 //!     { "name": "bert-a", "config": "tiny-lm-b8", "lr": 0.05,
 //!       "opt": "sgd", "epochs": 1, "minibatches": 8, "seed": 1 },
@@ -287,13 +287,16 @@ fn parse_engine(
         if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
             early_stop = Some(me as u32);
         }
-        if let Some(q) = e.get("event_queue").and_then(Json::as_str) {
+        // "queue" is the preferred key; "event_queue" is the legacy alias.
+        let queue_key = e.get("queue").or_else(|| e.get("event_queue"));
+        if let Some(q) = queue_key.and_then(Json::as_str) {
             engine.queue = match q {
                 "heap" => QueueKind::Heap,
                 "scan" | "linear-scan" => QueueKind::LinearScan,
+                "calendar" => QueueKind::Calendar,
                 other => {
                     return Err(cerr(format!(
-                        "unknown event_queue {other:?} (heap|scan)"
+                        "unknown queue {other:?} (heap|scan|calendar)"
                     )))
                 }
             };
@@ -619,16 +622,25 @@ mod tests {
     #[test]
     fn event_queue_option_parses() {
         use crate::coordinator::sharp::QueueKind;
-        let mk = |q: &str| {
+        let mk = |key: &str, q: &str| {
             WorkloadSpec::parse(&format!(
                 r#"{{"cluster": {{"devices":1,"device_mem_mib":1}},
-                     "engine": {{"event_queue": "{q}"}},
+                     "engine": {{"{key}": "{q}"}},
                      "tasks":[{{"config":"x","minibatches":1}}]}}"#
             ))
         };
-        assert_eq!(mk("heap").unwrap().engine.queue, QueueKind::Heap);
-        assert_eq!(mk("scan").unwrap().engine.queue, QueueKind::LinearScan);
-        assert!(mk("fibheap").is_err());
+        assert_eq!(mk("queue", "heap").unwrap().engine.queue, QueueKind::Heap);
+        assert_eq!(mk("queue", "scan").unwrap().engine.queue, QueueKind::LinearScan);
+        assert_eq!(
+            mk("queue", "calendar").unwrap().engine.queue,
+            QueueKind::Calendar
+        );
+        // legacy alias keeps parsing
+        assert_eq!(
+            mk("event_queue", "calendar").unwrap().engine.queue,
+            QueueKind::Calendar
+        );
+        assert!(mk("queue", "fibheap").is_err());
     }
 
     #[test]

@@ -7,8 +7,6 @@
 //! in [`super::jobs`], and the depth-k prefetch pipeline in
 //! [`super::prefetch`].
 
-use std::collections::BTreeSet;
-
 use crate::coordinator::memory::{
     MemTier, MemoryHierarchy, MemoryOptions, Residency,
 };
@@ -20,6 +18,7 @@ use crate::coordinator::unit::{Phase, ShardUnit};
 use crate::error::{HydraError, Result};
 use crate::exec::ExecutionBackend;
 use crate::util::codec::{ByteReader, ByteWriter};
+use crate::util::idset::IdSet;
 use crate::util::rng::Rng;
 
 use super::device::{ClusterEvent, DeviceSpec, DeviceState};
@@ -95,7 +94,9 @@ pub struct EngineOptions {
     /// volume ~3x. Used by the Table 3 ablation to recover the paper's
     /// no-double-buffering penalty.
     pub full_state_transfers: bool,
-    /// Event-queue discipline (heap by default; linear scan as reference).
+    /// Event-queue discipline: heap by default, linear scan as the
+    /// reference, calendar for heavy same-timestamp churn (arrival
+    /// storms). All three pop in identical (time, seq) order.
     pub queue: QueueKind,
     /// Number of independent coordinator shards the cluster is partitioned
     /// into (>= 1). Only the sharded front doors
@@ -208,7 +209,9 @@ pub struct SharpEngine<'a> {
     pub(crate) queue: EventQueue,
     pub(crate) pending_submissions: Vec<Option<ModelTask>>,
     /// Models whose front unit is eligible right now (arrived + idle).
-    pub(crate) ready: BTreeSet<usize>,
+    /// Sorted dense-id slab ([`IdSet`]): ascending iteration matches the
+    /// `BTreeSet` it replaced, so snapshots and schedules are unchanged.
+    pub(crate) ready: IdSet,
     /// Per-model: has the arrival time passed?
     pub(crate) arrived: Vec<bool>,
     /// Per-model: has a cancellation been issued?
@@ -217,11 +220,11 @@ pub struct SharpEngine<'a> {
     /// recorded even for no-op requests against finished jobs.
     pub(crate) cancel_requested: Vec<f64>,
     /// Cancellations waiting for an in-flight unit to retire.
-    pub(crate) cancel_pending: BTreeSet<usize>,
+    pub(crate) cancel_pending: IdSet,
     /// Per-model finish time (NaN until finished).
     pub(crate) finish_times: Vec<f64>,
     /// Devices that are alive, idle, and found no work at their last wake.
-    pub(crate) parked: BTreeSet<usize>,
+    pub(crate) parked: IdSet,
     /// Count of alive devices not currently computing.
     pub(crate) free_devices: usize,
     pub(crate) trace: Trace,
@@ -309,13 +312,13 @@ impl<'a> SharpEngine<'a> {
             job_events: Vec::new(),
             queue: EventQueue::new(options.queue),
             pending_submissions: Vec::new(),
-            ready: BTreeSet::new(),
+            ready: IdSet::new(),
             arrived: vec![false; n_tasks],
             job_cancelled: vec![false; n_tasks],
             cancel_requested: vec![f64::NAN; n_tasks],
-            cancel_pending: BTreeSet::new(),
+            cancel_pending: IdSet::new(),
             finish_times: vec![f64::NAN; n_tasks],
-            parked: BTreeSet::new(),
+            parked: IdSet::new(),
             free_devices: n_devices,
             trace: Trace::default(),
             units_executed: 0,
@@ -387,7 +390,7 @@ impl<'a> SharpEngine<'a> {
             }
         }
         w.put_usize(self.ready.len());
-        for &m in &self.ready {
+        for m in self.ready.iter() {
             w.put_usize(m);
         }
         w.put_usize(self.arrived.len());
@@ -403,7 +406,7 @@ impl<'a> SharpEngine<'a> {
             w.put_f64(t);
         }
         w.put_usize(self.cancel_pending.len());
-        for &m in &self.cancel_pending {
+        for m in self.cancel_pending.iter() {
             w.put_usize(m);
         }
         w.put_usize(self.finish_times.len());
@@ -411,7 +414,7 @@ impl<'a> SharpEngine<'a> {
             w.put_f64(t);
         }
         w.put_usize(self.parked.len());
-        for &d in &self.parked {
+        for d in self.parked.iter() {
             w.put_usize(d);
         }
         w.put_usize(self.free_devices);
@@ -528,7 +531,7 @@ impl<'a> SharpEngine<'a> {
         buf.clear();
         match self.options.mode {
             ParallelMode::Sharp => {
-                for &id in &self.ready {
+                for id in self.ready.iter() {
                     if let Some(s) = ModelSnapshot::of(&self.tasks[id]) {
                         buf.push(s);
                     }
@@ -574,11 +577,11 @@ impl<'a> SharpEngine<'a> {
 
     /// Wake one parked device (a model just became eligible). Waking
     /// exactly one is sufficient — at most one model becomes eligible per
-    /// event — and keeps the wake cost O(log n) instead of the seed
-    /// engine's O(devices) broadcast.
+    /// event — and with the slab-backed parked set the lowest-id pick is
+    /// a front read instead of the seed engine's O(devices) broadcast.
     pub(crate) fn wake_one(&mut self, now: f64) {
-        if let Some(&d) = self.parked.iter().next() {
-            self.parked.remove(&d);
+        if let Some(d) = self.parked.first() {
+            self.parked.remove(d);
             self.queue.push(now, Event::DeviceFree { device: d });
         }
     }
@@ -674,14 +677,39 @@ impl<'a> SharpEngine<'a> {
         }
     }
 
-    /// Dispatch the next queued event; `Ok(false)` when the queue drained.
-    /// `prime + while step + finalize` is exactly the old monolithic run
-    /// loop, event for event.
+    /// Dispatch the next same-timestamp batch of queued events; `Ok(false)`
+    /// when the queue drained. `prime + while step + finalize` is exactly
+    /// the old monolithic run loop, event for event: within a batch,
+    /// `pop_at` yields precisely the events `pop` would have, in the same
+    /// (time, seq) order — including events the batch itself schedules at
+    /// the current timestamp (wakes, device-free reposts) — so schedules
+    /// and observer callback order are byte-identical to one-event
+    /// stepping. What coalescing buys: a burst of N simultaneous
+    /// arrivals/retires costs one queue descent + one (debug-only,
+    /// side-effect-free) invariant sweep instead of N.
     pub(crate) fn step(&mut self, obs: &mut dyn EngineObserver) -> Result<bool> {
-        let Some(q) = self.queue.pop() else {
+        let Some(mut q) = self.queue.pop() else {
             return Ok(false);
         };
         let now = q.time;
+        loop {
+            self.dispatch(q, now, obs)?;
+            match self.queue.pop_at(now) {
+                Some(next) => q = next,
+                None => break,
+            }
+        }
+        #[cfg(debug_assertions)]
+        self.assert_engine_invariants();
+        Ok(true)
+    }
+
+    fn dispatch(
+        &mut self,
+        q: QueuedEvent,
+        now: f64,
+        obs: &mut dyn EngineObserver,
+    ) -> Result<()> {
         match q.ev {
             Event::DeviceFree { device } => self.on_device_free(device, now, obs)?,
             Event::UnitRetire { device, unit } => {
@@ -692,9 +720,7 @@ impl<'a> SharpEngine<'a> {
             Event::JobSubmit(idx) => self.on_job_submit(idx, now, obs)?,
             Event::JobCancel { model } => self.on_job_cancel(model, now, obs)?,
         }
-        #[cfg(debug_assertions)]
-        self.assert_engine_invariants();
-        Ok(true)
+        Ok(())
     }
 
     /// Check the end-of-run invariant and build the report.
@@ -755,7 +781,7 @@ impl<'a> SharpEngine<'a> {
         if !self.devices[device].alive || self.devices[device].busy {
             return Ok(());
         }
-        self.parked.remove(&device);
+        self.parked.remove(device);
         // 1. the front pre-claimed (prefetched) slot takes priority
         let mut staged: Option<StagedShard> = None;
         let unit = if let Some(slot) = self.devices[device].pipeline.pop_front() {
@@ -778,7 +804,7 @@ impl<'a> SharpEngine<'a> {
             self.put_resident(resident);
             match picked {
                 Some(id) => {
-                    self.ready.remove(&id);
+                    self.ready.remove(id);
                     obs.on_decision(device, id, false, now);
                     Some(self.tasks[id].claim_front())
                 }
@@ -975,7 +1001,7 @@ impl<'a> SharpEngine<'a> {
         }
 
         // a cancellation issued while this unit was in flight lands now
-        if self.cancel_pending.remove(&unit.model) {
+        if self.cancel_pending.remove(unit.model) {
             self.tasks[unit.model].early_stop();
         }
         match self.tasks[unit.model].state() {

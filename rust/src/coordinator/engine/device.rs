@@ -249,7 +249,7 @@ impl<'a> SharpEngine<'a> {
             self.memory.release_device_copy(m, sh);
         }
         self.devices[device].alive = false;
-        self.parked.remove(&device);
+        self.parked.remove(device);
         self.free_devices -= 1;
         for slot in slots {
             // return each pre-claimed unit to its model's queue; the
@@ -262,10 +262,10 @@ impl<'a> SharpEngine<'a> {
         self.trace.set_device_window(device, start, now);
     }
 
-    /// Debug-build engine invariants, asserted after every event:
-    /// `free_devices` equals the count of alive non-busy devices, every
-    /// parked device is alive and idle, and no pipeline's staged set
-    /// exceeds its zone.
+    /// Debug-build engine invariants, asserted after every same-timestamp
+    /// event batch: `free_devices` equals the count of alive non-busy
+    /// devices, every parked device is alive and idle, and no pipeline's
+    /// staged set exceeds its zone.
     #[cfg(debug_assertions)]
     pub(crate) fn assert_engine_invariants(&self) {
         let free = self.devices.iter().filter(|d| d.alive && !d.busy).count();
@@ -274,7 +274,7 @@ impl<'a> SharpEngine<'a> {
             "free_devices drift: counter {} vs actual {free}",
             self.free_devices
         );
-        for &d in &self.parked {
+        for d in self.parked.iter() {
             assert!(
                 self.devices[d].alive && !self.devices[d].busy,
                 "parked device {d} is dead or busy"

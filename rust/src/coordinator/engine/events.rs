@@ -1,12 +1,14 @@
 //! The engine's virtual-time event queue: the event kinds, the total
-//! (time, submission-seq) order, and the two queue disciplines
-//! ([`QueueKind::Heap`] default, [`QueueKind::LinearScan`] reference).
+//! (time, submission-seq) order, and the three queue disciplines
+//! ([`QueueKind::Heap`] default, [`QueueKind::LinearScan`] reference,
+//! [`QueueKind::Calendar`] for heavy same-timestamp churn).
 //!
-//! Both disciplines pop events in identical (time, seq) order by
+//! All disciplines pop events in identical (time, seq) order by
 //! construction — same key, same tie-break — which is what the
-//! heap-vs-scan equivalence tests in `rust/tests/online_sched.rs` pin.
+//! queue-equivalence tests in `rust/tests/online_sched.rs` and
+//! `rust/tests/queue_differential.rs` pin.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::coordinator::unit::ShardUnit;
 use crate::error::{HydraError, Result};
@@ -23,6 +25,13 @@ pub enum QueueKind {
     /// bench; schedules are identical to [`QueueKind::Heap`] by
     /// construction (same key, same tie-break).
     LinearScan,
+    /// Calendar/bucket queue: events hash by timestamp into an epoch of
+    /// power-of-two buckets, and everything at the current frontier time
+    /// sits in a FIFO that pops in O(1). Tuned for the open-loop arrival
+    /// storms where thousands of events share a timestamp; pop order is
+    /// provably identical to [`QueueKind::Heap`] (see the `CalendarQueue`
+    /// internals in `events.rs`).
+    Calendar,
 }
 
 impl QueueKind {
@@ -30,6 +39,7 @@ impl QueueKind {
         w.put_u8(match self {
             QueueKind::Heap => 0,
             QueueKind::LinearScan => 1,
+            QueueKind::Calendar => 2,
         });
     }
 
@@ -37,6 +47,7 @@ impl QueueKind {
         Ok(match r.get_u8()? {
             0 => QueueKind::Heap,
             1 => QueueKind::LinearScan,
+            2 => QueueKind::Calendar,
             t => {
                 return Err(HydraError::WalCorrupt(format!(
                     "unknown queue-kind tag {t}"
@@ -147,19 +158,203 @@ impl Ord for QueuedEvent {
     }
 }
 
-/// The virtual-time event queue: a binary heap (default) or a linear-scan
-/// list with identical pop order, switchable via [`QueueKind`].
+/// Calendar/bucket queue for [`QueueKind::Calendar`].
+///
+/// Layout:
+/// - `fifo` holds every pending event whose time equals `frontier` (the
+///   timestamp of the most recently popped event), in ascending `seq`
+///   order. Same-timestamp churn — the dominant pattern under open-loop
+///   arrival storms — pops from here in O(1).
+/// - `buckets` is the current epoch: a power-of-two array covering
+///   `[epoch_start, horizon)` with uniform `width`; an event at time `t`
+///   lives in bucket `min(floor((t - epoch_start) / width), nb - 1)`.
+///   The mapping is monotone in `t`, so the first non-empty bucket at or
+///   after `cursor` contains the global bucket minimum.
+/// - `overflow` holds events at or beyond `horizon`. `horizon` is kept
+///   strictly above every bucketed timestamp, so overflow events are
+///   strictly later than everything in the epoch; when the fifo and
+///   buckets drain, the overflow is redistributed into a fresh epoch
+///   sized to it.
+///
+/// Correctness argument (identical pop order to `Heap`/`LinearScan`):
+/// the engine never pushes into the past (`time >= frontier` always — a
+/// discrete-event simulator schedules at or after `now`), and `seq` is
+/// globally monotone. Invariant: after every pop, *no* bucket or overflow
+/// event has time equal to `frontier` — when a bucket pop advances the
+/// frontier, all same-time ties are drained into the fifo (sorted by
+/// `seq`), and later pushes at the frontier time append to the fifo with
+/// strictly larger `seq`. Hence a non-empty fifo's front is always the
+/// global (time, seq) minimum, and when the fifo is empty the minimum is
+/// the (time, seq)-least element of the first non-empty bucket (or, once
+/// the epoch drains, of the overflow after redistribution).
+#[derive(Debug)]
+struct CalendarQueue {
+    fifo: VecDeque<QueuedEvent>,
+    buckets: Vec<Vec<QueuedEvent>>,
+    /// Total events across `buckets`.
+    in_buckets: usize,
+    /// First bucket that may be non-empty (only advances within an epoch).
+    cursor: usize,
+    epoch_start: f64,
+    width: f64,
+    /// Exclusive time bound of the epoch, strictly above every bucketed
+    /// event's timestamp.
+    horizon: f64,
+    overflow: Vec<QueuedEvent>,
+    /// Timestamp of the most recently popped event.
+    frontier: f64,
+    /// Whether an epoch is live; false until the first rebuild (and after
+    /// restoring from a snapshot, which reloads via `overflow`).
+    active: bool,
+}
+
+impl CalendarQueue {
+    fn new() -> CalendarQueue {
+        CalendarQueue {
+            fifo: VecDeque::new(),
+            buckets: Vec::new(),
+            in_buckets: 0,
+            cursor: 0,
+            epoch_start: 0.0,
+            width: 1.0,
+            horizon: 0.0,
+            overflow: Vec::new(),
+            frontier: f64::NEG_INFINITY,
+            active: false,
+        }
+    }
+
+    fn push(&mut self, q: QueuedEvent) {
+        debug_assert!(
+            q.time.total_cmp(&self.frontier) != std::cmp::Ordering::Less,
+            "calendar queue: push at {} behind frontier {}",
+            q.time,
+            self.frontier
+        );
+        if q.time.total_cmp(&self.frontier).is_eq() {
+            self.fifo.push_back(q);
+        } else if self.active && q.time < self.horizon {
+            let nb = self.buckets.len();
+            let idx =
+                (((q.time - self.epoch_start) / self.width) as usize).min(nb - 1);
+            self.buckets[idx].push(q);
+            self.in_buckets += 1;
+        } else {
+            self.overflow.push(q);
+        }
+    }
+
+    /// Redistribute the overflow into a fresh epoch sized to it. Called
+    /// only when the fifo and buckets are empty and the overflow is not.
+    fn rebuild(&mut self) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for q in &self.overflow {
+            lo = lo.min(q.time);
+            hi = hi.max(q.time);
+        }
+        let nb = self.overflow.len().clamp(1, 65_536).next_power_of_two();
+        let span = hi - lo;
+        let mut width = if span > 0.0 { span / nb as f64 } else { 1.0 };
+        let mut horizon = lo + width * nb as f64;
+        // Float round-down can land the horizon at or below `hi`; widen
+        // until it is strictly above, so every bucketed time is < horizon
+        // and overflow events stay strictly later than bucketed ones.
+        while horizon <= hi {
+            width *= 2.0;
+            horizon = lo + width * nb as f64;
+        }
+        self.epoch_start = lo;
+        self.width = width;
+        self.horizon = horizon;
+        self.buckets.clear();
+        self.buckets.resize_with(nb, Vec::new);
+        self.cursor = 0;
+        self.active = true;
+        self.in_buckets = self.overflow.len();
+        for q in std::mem::take(&mut self.overflow) {
+            let idx = (((q.time - lo) / width) as usize).min(nb - 1);
+            self.buckets[idx].push(q);
+        }
+    }
+
+    fn pop(&mut self) -> Option<QueuedEvent> {
+        if let Some(q) = self.fifo.pop_front() {
+            return Some(q);
+        }
+        if self.in_buckets == 0 {
+            if self.overflow.is_empty() {
+                return None;
+            }
+            self.rebuild();
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+        }
+        let b = &mut self.buckets[self.cursor];
+        // `Ord` is reversed, so the earliest (time, seq) is the maximum.
+        let mut best = 0;
+        for i in 1..b.len() {
+            if b[i] > b[best] {
+                best = i;
+            }
+        }
+        let q = b.swap_remove(best);
+        // Advance the frontier and drain same-time ties into the fifo (it
+        // is empty here), ascending by seq: every remaining event at this
+        // timestamp now pops in O(1), and later same-time pushes append
+        // with strictly larger seq.
+        let mut i = 0;
+        while i < b.len() {
+            if b[i].time.total_cmp(&q.time).is_eq() {
+                self.fifo.push_back(b.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        self.fifo.make_contiguous().sort_unstable_by_key(|e| e.seq);
+        self.in_buckets -= 1 + self.fifo.len();
+        self.frontier = q.time;
+        Some(q)
+    }
+
+    /// Pop the next event only if its time equals `time`, which must be
+    /// the timestamp of the most recently popped event. By the frontier
+    /// invariant every remaining event at that time sits in the fifo.
+    fn pop_front_at(&mut self, time: f64) -> Option<QueuedEvent> {
+        debug_assert!(
+            self.fifo.is_empty() || time.total_cmp(&self.frontier).is_eq(),
+            "calendar queue: pop_at({time}) off the frontier {}",
+            self.frontier
+        );
+        match self.fifo.front() {
+            Some(f) if f.time.total_cmp(&time).is_eq() => self.fifo.pop_front(),
+            _ => None,
+        }
+    }
+}
+
+/// The virtual-time event queue: a binary heap (default), a linear-scan
+/// list, or a calendar queue, all with identical pop order, switchable
+/// via [`QueueKind`].
 #[derive(Debug)]
 pub(crate) struct EventQueue {
     kind: QueueKind,
     heap: BinaryHeap<QueuedEvent>,
     list: Vec<QueuedEvent>,
+    cal: CalendarQueue,
     seq: u64,
 }
 
 impl EventQueue {
     pub(crate) fn new(kind: QueueKind) -> EventQueue {
-        EventQueue { kind, heap: BinaryHeap::new(), list: Vec::new(), seq: 0 }
+        EventQueue {
+            kind,
+            heap: BinaryHeap::new(),
+            list: Vec::new(),
+            cal: CalendarQueue::new(),
+            seq: 0,
+        }
     }
 
     pub(crate) fn push(&mut self, time: f64, ev: Event) {
@@ -168,6 +363,7 @@ impl EventQueue {
         match self.kind {
             QueueKind::Heap => self.heap.push(q),
             QueueKind::LinearScan => self.list.push(q),
+            QueueKind::Calendar => self.cal.push(q),
         }
     }
 
@@ -178,6 +374,14 @@ impl EventQueue {
         let mut entries: Vec<QueuedEvent> = match self.kind {
             QueueKind::Heap => self.heap.iter().copied().collect(),
             QueueKind::LinearScan => self.list.clone(),
+            QueueKind::Calendar => self
+                .cal
+                .fifo
+                .iter()
+                .chain(self.cal.buckets.iter().flatten())
+                .chain(self.cal.overflow.iter())
+                .copied()
+                .collect(),
         };
         // `Ord` is reversed (earliest == maximum), so sort descending by
         // `Ord` to get ascending (time, seq)
@@ -187,7 +391,7 @@ impl EventQueue {
 
     /// Rebuild a queue mid-run from [`EventQueue::snapshot`] output. The
     /// restored queue pops in the exact order the snapshotted one would
-    /// have (same keys, same seq tie-breaks), for either discipline.
+    /// have (same keys, same seq tie-breaks), for any discipline.
     pub(crate) fn from_snapshot(
         kind: QueueKind,
         entries: Vec<QueuedEvent>,
@@ -198,6 +402,10 @@ impl EventQueue {
         match kind {
             QueueKind::Heap => q.heap.extend(entries),
             QueueKind::LinearScan => q.list = entries,
+            // Load everything through the overflow: the first pop
+            // redistributes it into a fresh epoch, and the frontier stays
+            // at -inf so no restored event is ever "in the past".
+            QueueKind::Calendar => q.cal.overflow = entries,
         }
         q
     }
@@ -206,61 +414,227 @@ impl EventQueue {
         match self.kind {
             QueueKind::Heap => self.heap.pop(),
             QueueKind::LinearScan => {
-                if self.list.is_empty() {
-                    return None;
-                }
-                // `Ord` is reversed, so the earliest event is the maximum.
-                let mut best = 0;
-                for i in 1..self.list.len() {
-                    if self.list[i] > self.list[best] {
-                        best = i;
-                    }
-                }
+                let best = self.scan_best()?;
                 Some(self.list.swap_remove(best))
             }
+            QueueKind::Calendar => self.cal.pop(),
         }
+    }
+
+    /// Pop the next event only if its timestamp equals `time` — the
+    /// coalesced-dispatch hook: after popping an event at `time`, the
+    /// engine drains the whole same-timestamp batch through this before
+    /// running its (debug) invariant sweep. Contract: `time` is the
+    /// timestamp of the most recently popped event (the calendar
+    /// discipline keeps all pending frontier-time events in its fifo and
+    /// answers in O(1)).
+    pub(crate) fn pop_at(&mut self, time: f64) -> Option<QueuedEvent> {
+        match self.kind {
+            QueueKind::Heap => match self.heap.peek() {
+                Some(p) if p.time.total_cmp(&time).is_eq() => self.heap.pop(),
+                _ => None,
+            },
+            QueueKind::LinearScan => {
+                let best = self.scan_best()?;
+                if self.list[best].time.total_cmp(&time).is_eq() {
+                    Some(self.list.swap_remove(best))
+                } else {
+                    None
+                }
+            }
+            QueueKind::Calendar => self.cal.pop_front_at(time),
+        }
+    }
+
+    /// Index of the earliest (time, seq) event in the linear-scan list.
+    fn scan_best(&self) -> Option<usize> {
+        if self.list.is_empty() {
+            return None;
+        }
+        // `Ord` is reversed, so the earliest event is the maximum.
+        let mut best = 0;
+        for i in 1..self.list.len() {
+            if self.list[i] > self.list[best] {
+                best = i;
+            }
+        }
+        Some(best)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    const KINDS: [QueueKind; 3] =
+        [QueueKind::Heap, QueueKind::LinearScan, QueueKind::Calendar];
 
     #[test]
-    fn heap_and_scan_pop_in_identical_order() {
+    fn all_disciplines_pop_in_identical_order() {
         let times = [3.0, 1.0, 2.0, 1.0, 0.5, 2.0];
-        let mut heap = EventQueue::new(QueueKind::Heap);
-        let mut scan = EventQueue::new(QueueKind::LinearScan);
+        let mut qs: Vec<EventQueue> =
+            KINDS.iter().map(|&k| EventQueue::new(k)).collect();
         for &t in &times {
-            heap.push(t, Event::DeviceFree { device: 0 });
-            scan.push(t, Event::DeviceFree { device: 0 });
+            for q in &mut qs {
+                q.push(t, Event::DeviceFree { device: 0 });
+            }
         }
         let mut last = f64::NEG_INFINITY;
         for _ in 0..times.len() {
-            let h = heap.pop().unwrap();
-            let s = scan.pop().unwrap();
-            assert_eq!((h.time, h.seq), (s.time, s.seq));
+            let h = qs[0].pop().unwrap();
+            for q in &mut qs[1..] {
+                let o = q.pop().unwrap();
+                assert_eq!((h.time, h.seq), (o.time, o.seq));
+            }
             // non-decreasing time; equal times pop in submission order
             assert!(h.time >= last);
             last = h.time;
         }
-        assert!(heap.pop().is_none());
-        assert!(scan.pop().is_none());
+        for q in &mut qs {
+            assert!(q.pop().is_none());
+        }
     }
 
     #[test]
     fn equal_times_break_ties_by_submission_order() {
-        let mut q = EventQueue::new(QueueKind::Heap);
-        q.push(1.0, Event::DeviceFree { device: 7 });
-        q.push(1.0, Event::DeviceFree { device: 9 });
-        assert_eq!(q.pop().unwrap().seq, 0);
-        assert_eq!(q.pop().unwrap().seq, 1);
+        for kind in KINDS {
+            let mut q = EventQueue::new(kind);
+            q.push(1.0, Event::DeviceFree { device: 7 });
+            q.push(1.0, Event::DeviceFree { device: 9 });
+            assert_eq!(q.pop().unwrap().seq, 0);
+            assert_eq!(q.pop().unwrap().seq, 1);
+            assert!(q.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn pop_at_drains_exactly_the_same_timestamp_batch() {
+        for kind in KINDS {
+            let mut q = EventQueue::new(kind);
+            for &t in &[1.0, 1.0, 1.0, 2.0, 2.0] {
+                q.push(t, Event::DeviceFree { device: 0 });
+            }
+            let first = q.pop().unwrap();
+            assert_eq!((first.time, first.seq), (1.0, 0));
+            // frontier-time pushes interleave with the batch drain
+            q.push(1.0, Event::DeviceFree { device: 1 });
+            let mut seqs = Vec::new();
+            while let Some(e) = q.pop_at(first.time) {
+                assert_eq!(e.time, 1.0);
+                seqs.push(e.seq);
+            }
+            assert_eq!(seqs, vec![1, 2, 5]);
+            let next = q.pop().unwrap();
+            assert_eq!((next.time, next.seq), (2.0, 3));
+        }
+    }
+
+    #[test]
+    fn calendar_rebuilds_epochs_over_wide_time_spans() {
+        let mut cal = EventQueue::new(QueueKind::Calendar);
+        let mut heap = EventQueue::new(QueueKind::Heap);
+        // Interleave pushes and pops so the epoch drains and rebuilds
+        // from the overflow several times (pushes land beyond the
+        // horizon of the epoch built from the first batch).
+        let mut t = 0.0;
+        for round in 0..64 {
+            for i in 0..4 {
+                let at = t + (i as f64) * 1e3 * ((round % 7) + 1) as f64;
+                cal.push(at, Event::DeviceFree { device: i });
+                heap.push(at, Event::DeviceFree { device: i });
+            }
+            let a = cal.pop().unwrap();
+            let b = heap.pop().unwrap();
+            assert_eq!((a.time, a.seq), (b.time, b.seq));
+            t = a.time;
+        }
+        loop {
+            match (cal.pop(), heap.pop()) {
+                (Some(a), Some(b)) => {
+                    assert_eq!((a.time, a.seq), (b.time, b.seq))
+                }
+                (None, None) => break,
+                (a, b) => panic!("queue length mismatch: {a:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn random_streams_pop_identically_from_all_three_disciplines() {
+        let mut rng = Rng::new(0x8e11);
+        for _case in 0..40 {
+            let mut qs: Vec<EventQueue> =
+                KINDS.iter().map(|&k| EventQueue::new(k)).collect();
+            let mut now = 0.0_f64;
+            let mut pending = 0usize;
+            let mut pushed = 0usize;
+            for _op in 0..400 {
+                if rng.uniform() < 0.55 || pending == 0 {
+                    // A discrete-event engine only schedules at or after
+                    // `now`: ~1/3 exactly at the frontier (fifo path),
+                    // occasionally far ahead (forces epoch rebuilds).
+                    let t = if rng.uniform() < 0.35 {
+                        now
+                    } else if rng.uniform() < 0.1 {
+                        now + 1.0 + rng.uniform() * 1e4
+                    } else {
+                        now + rng.uniform() * 3.0
+                    };
+                    for q in &mut qs {
+                        q.push(t, Event::DeviceFree { device: pushed });
+                    }
+                    pushed += 1;
+                    pending += 1;
+                } else {
+                    let a = qs[0].pop().unwrap();
+                    for q in &mut qs[1..] {
+                        let o = q.pop().unwrap();
+                        assert_eq!((a.time, a.seq), (o.time, o.seq));
+                    }
+                    now = a.time;
+                    pending -= 1;
+                    // Half the time, drain the whole same-time batch the
+                    // way the coalesced dispatch loop does.
+                    if rng.uniform() < 0.5 {
+                        loop {
+                            let x = qs[0].pop_at(now);
+                            for q in &mut qs[1..] {
+                                let y = q.pop_at(now);
+                                match (&x, &y) {
+                                    (Some(a), Some(b)) => assert_eq!(
+                                        (a.time, a.seq),
+                                        (b.time, b.seq)
+                                    ),
+                                    (None, None) => {}
+                                    _ => panic!("pop_at disagreement"),
+                                }
+                            }
+                            match x {
+                                Some(_) => pending -= 1,
+                                None => break,
+                            }
+                        }
+                    }
+                }
+            }
+            for _ in 0..pending {
+                let a = qs[0].pop().unwrap();
+                for q in &mut qs[1..] {
+                    let o = q.pop().unwrap();
+                    assert_eq!((a.time, a.seq), (o.time, o.seq));
+                }
+            }
+            for q in &mut qs {
+                assert!(q.pop().is_none());
+            }
+        }
     }
 
     #[test]
     fn snapshot_round_trip_preserves_pop_order_across_disciplines() {
         let times = [3.0, 1.0, 2.0, 1.0, 0.5];
-        for kind in [QueueKind::Heap, QueueKind::LinearScan] {
+        for (i, &kind) in KINDS.iter().enumerate() {
             let mut q = EventQueue::new(kind);
             for (d, &t) in times.iter().enumerate() {
                 q.push(t, Event::DeviceFree { device: d });
@@ -269,11 +643,8 @@ mod tests {
             let (entries, seq) = q.snapshot();
             assert_eq!(entries.len(), times.len() - 1);
             assert!(entries.windows(2).all(|w| w[1] < w[0])); // reversed Ord
-            // restoring into the *other* discipline pops identically
-            let other = match kind {
-                QueueKind::Heap => QueueKind::LinearScan,
-                QueueKind::LinearScan => QueueKind::Heap,
-            };
+            // restoring into the *next* discipline pops identically
+            let other = KINDS[(i + 1) % KINDS.len()];
             let mut r = EventQueue::from_snapshot(other, entries, seq);
             while let Some(a) = q.pop() {
                 let b = r.pop().unwrap();
@@ -281,6 +652,20 @@ mod tests {
             }
             assert!(r.pop().is_none());
         }
+    }
+
+    #[test]
+    fn queue_kind_codec_round_trips_and_rejects_unknown_tags() {
+        for kind in KINDS {
+            let mut w = ByteWriter::new();
+            kind.encode(&mut w);
+            let buf = w.into_inner();
+            let mut r = ByteReader::new(&buf);
+            assert_eq!(QueueKind::decode(&mut r).unwrap(), kind);
+            r.expect_end().unwrap();
+        }
+        let mut r = ByteReader::new(&[9]);
+        assert!(QueueKind::decode(&mut r).is_err());
     }
 
     #[test]

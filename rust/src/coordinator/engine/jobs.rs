@@ -206,7 +206,7 @@ impl<'a> SharpEngine<'a> {
         self.job_cancelled[model] = true;
         match self.tasks[model].state() {
             TaskState::Idle => {
-                self.ready.remove(&model);
+                self.ready.remove(model);
                 self.tasks[model].early_stop();
                 self.finish_job(model, now, obs)?;
             }

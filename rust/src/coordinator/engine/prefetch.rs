@@ -374,7 +374,7 @@ impl<'a> SharpEngine<'a> {
             let Some(id) = picked else {
                 return;
             };
-            self.ready.remove(&id);
+            self.ready.remove(id);
             obs.on_decision(device, id, true, now);
             let unit = self.tasks[id].claim_front();
             let bytes = if self.options.full_state_transfers {

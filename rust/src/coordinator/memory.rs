@@ -17,8 +17,13 @@
 //! instead of a hard "fits in DRAM" precondition. Promote/demote traffic is
 //! accounted per tier ([`TierTraffic`]) so reports can separate PCIe spill
 //! volume from NVMe stall volume.
-
-use std::collections::BTreeMap;
+//!
+//! Storage is slab-based (ISSUE 8): model and shard ids are dense, so the
+//! per-shard entries live in a `Vec` slab with a free list and an
+//! id-indexed lookup table instead of a `BTreeMap` — every hot-path access
+//! (residency probe, pin, LRU touch) is two array indexings. The codec and
+//! `Debug` forms iterate in key order, so snapshots and the house
+//! Debug-byte-identity proofs are independent of slab fragmentation.
 
 use crate::error::{HydraError, Result};
 use crate::util::codec::{ByteReader, ByteWriter};
@@ -261,7 +266,7 @@ impl TierFetch {
 
 /// Per-shard residency bookkeeping (only maintained when an NVMe tier is
 /// configured; the DRAM-only path keeps the legacy aggregate counter).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 struct ShardEntry {
     /// Parameter bytes of the shard (weights + gradients + optimizer
     /// state — the home-tier footprint).
@@ -303,7 +308,7 @@ impl ShardEntry {
 /// total write-back cost on the byte-proportional NVMe link). Pinned
 /// shards — staged in a double-buffer zone or resident on a device — are
 /// never evicted: demote write-backs must land in their DRAM slot.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct MemoryHierarchy {
     dram_capacity: u64,
     dram_used: u64,
@@ -313,8 +318,54 @@ pub struct MemoryHierarchy {
     pub dram_traffic: TierTraffic,
     /// NVMe<->DRAM traffic (zero without an NVMe tier).
     pub nvme_traffic: TierTraffic,
-    entries: BTreeMap<(usize, u32), ShardEntry>,
+    /// Entry slab: dense storage with a free list; `index` maps
+    /// (model, shard) to a slot. Iteration-order-sensitive consumers
+    /// (codec, `Debug`, the LRU victim scan's key tie-break) go through
+    /// [`MemoryHierarchy::iter_key_order`] or carry explicit keys, so slab
+    /// fragmentation never shows up in behaviour or bytes.
+    slots: Vec<SlabSlot>,
+    free: Vec<u32>,
+    /// model -> shard -> slot index ([`NO_SLOT`] when absent).
+    index: Vec<Vec<u32>>,
     clock: u64,
+}
+
+/// Sentinel for an empty `index` cell.
+const NO_SLOT: u32 = u32::MAX;
+
+/// One slab slot: the (model, shard) key plus its entry. `live` is false
+/// while the slot sits on the free list.
+#[derive(Debug, Clone)]
+struct SlabSlot {
+    model: usize,
+    shard: u32,
+    live: bool,
+    entry: ShardEntry,
+}
+
+impl std::fmt::Debug for MemoryHierarchy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Canonical form: entries print as a key-ordered map, exactly like
+        // the `BTreeMap`-backed struct this slab replaced, regardless of
+        // slot fragmentation (the mid-run codec round-trip tests compare
+        // these strings byte for byte).
+        struct Entries<'a>(&'a MemoryHierarchy);
+        impl std::fmt::Debug for Entries<'_> {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                f.debug_map().entries(self.0.iter_key_order()).finish()
+            }
+        }
+        f.debug_struct("MemoryHierarchy")
+            .field("dram_capacity", &self.dram_capacity)
+            .field("dram_used", &self.dram_used)
+            .field("nvme", &self.nvme)
+            .field("nvme_used", &self.nvme_used)
+            .field("dram_traffic", &self.dram_traffic)
+            .field("nvme_traffic", &self.nvme_traffic)
+            .field("entries", &Entries(self))
+            .field("clock", &self.clock)
+            .finish()
+    }
 }
 
 impl MemoryHierarchy {
@@ -329,9 +380,89 @@ impl MemoryHierarchy {
             nvme_used: 0,
             dram_traffic: TierTraffic::default(),
             nvme_traffic: TierTraffic::default(),
-            entries: BTreeMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: Vec::new(),
             clock: 0,
         }
+    }
+
+    /// Slot index of (`model`, `shard`), if homed.
+    #[inline]
+    fn slot_of(&self, model: usize, shard: u32) -> Option<usize> {
+        let s = *self.index.get(model)?.get(shard as usize)?;
+        (s != NO_SLOT).then_some(s as usize)
+    }
+
+    #[inline]
+    fn entry(&self, model: usize, shard: u32) -> Option<&ShardEntry> {
+        self.slot_of(model, shard).map(|i| &self.slots[i].entry)
+    }
+
+    #[inline]
+    fn entry_mut(&mut self, model: usize, shard: u32) -> Option<&mut ShardEntry> {
+        self.slot_of(model, shard).map(|i| &mut self.slots[i].entry)
+    }
+
+    /// Number of live entries.
+    fn live_entries(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Install an entry for (`model`, `shard`), reusing a free slot when
+    /// one exists. The cell must be empty.
+    fn insert_entry(&mut self, model: usize, shard: u32, entry: ShardEntry) {
+        if self.index.len() <= model {
+            self.index.resize_with(model + 1, Vec::new);
+        }
+        let row = &mut self.index[model];
+        if row.len() <= shard as usize {
+            row.resize(shard as usize + 1, NO_SLOT);
+        }
+        debug_assert_eq!(row[shard as usize], NO_SLOT, "cell ({model},{shard}) occupied");
+        let slot = match self.free.pop() {
+            Some(i) => {
+                let s = &mut self.slots[i as usize];
+                s.model = model;
+                s.shard = shard;
+                s.live = true;
+                s.entry = entry;
+                i
+            }
+            None => {
+                self.slots.push(SlabSlot { model, shard, live: true, entry });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        row[shard as usize] = slot;
+    }
+
+    /// Remove the entry for (`model`, `shard`), returning it and recycling
+    /// its slot.
+    fn remove_entry(&mut self, model: usize, shard: u32) -> Option<ShardEntry> {
+        let cell = self.index.get_mut(model)?.get_mut(shard as usize)?;
+        let slot = *cell;
+        if slot == NO_SLOT {
+            return None;
+        }
+        *cell = NO_SLOT;
+        self.free.push(slot);
+        let s = &mut self.slots[slot as usize];
+        s.live = false;
+        Some(s.entry)
+    }
+
+    /// All live entries in ascending (model, shard) key order — the
+    /// `BTreeMap` iteration order the codec and `Debug` forms preserve.
+    fn iter_key_order(
+        &self,
+    ) -> impl Iterator<Item = ((usize, u32), &ShardEntry)> + '_ {
+        self.index.iter().enumerate().flat_map(move |(m, row)| {
+            row.iter().enumerate().filter_map(move |(s, &slot)| {
+                (slot != NO_SLOT)
+                    .then(|| ((m, s as u32), &self.slots[slot as usize].entry))
+            })
+        })
     }
 
     /// DRAM tier capacity.
@@ -367,12 +498,12 @@ impl MemoryHierarchy {
     /// Whether shard (`model`, `shard`) is currently DRAM-resident
     /// (`None` when untracked: unhomed, or no NVMe tier).
     pub fn is_dram_resident(&self, model: usize, shard: u32) -> Option<bool> {
-        self.entries.get(&(model, shard)).map(|e| e.in_dram)
+        self.entry(model, shard).map(|e| e.in_dram)
     }
 
     /// Pin count of shard (`model`, `shard`); 0 when untracked.
     pub fn pins(&self, model: usize, shard: u32) -> u32 {
-        self.entries.get(&(model, shard)).map(|e| e.pins).unwrap_or(0)
+        self.entry(model, shard).map(|e| e.pins).unwrap_or(0)
     }
 
     /// Home a model's shards (job submission). DRAM is preferred; with an
@@ -396,7 +527,7 @@ impl MemoryHierarchy {
         let mut nvme_free = tier.capacity_bytes - self.nvme_used;
         let mut placement = Vec::with_capacity(shard_bytes.len());
         for (i, &bytes) in shard_bytes.iter().enumerate() {
-            if self.entries.contains_key(&(model, i as u32)) {
+            if self.slot_of(model, i as u32).is_some() {
                 return Err(HydraError::Exec(format!(
                     "duplicate home of model {model} shard {i}"
                 )));
@@ -422,8 +553,9 @@ impl MemoryHierarchy {
             } else {
                 self.nvme_used += bytes;
             }
-            self.entries.insert(
-                (model, i as u32),
+            self.insert_entry(
+                model,
+                i as u32,
                 ShardEntry { bytes, in_dram, pins: 0, last_touch: self.clock },
             );
         }
@@ -447,7 +579,7 @@ impl MemoryHierarchy {
             return Ok(());
         }
         for i in 0..shard_bytes.len() {
-            let Some(e) = self.entries.remove(&(model, i as u32)) else {
+            let Some(e) = self.remove_entry(model, i as u32) else {
                 return Err(HydraError::Exec(format!(
                     "double release: model {model} shard {i} is not homed"
                 )));
@@ -457,6 +589,12 @@ impl MemoryHierarchy {
             } else {
                 self.nvme_used -= e.bytes;
             }
+        }
+        // Drop the model's index row: ids are never reused, so under a
+        // million-job storm the lookup table does not accrete dead rows'
+        // shard vectors.
+        if let Some(row) = self.index.get_mut(model) {
+            *row = Vec::new();
         }
         Ok(())
     }
@@ -472,7 +610,7 @@ impl MemoryHierarchy {
         };
         self.clock += 1;
         let clock = self.clock;
-        let (bytes, in_dram) = match self.entries.get(&(model, shard)) {
+        let (bytes, in_dram) = match self.entry(model, shard) {
             Some(e) => (e.bytes, e.in_dram),
             None => {
                 return Err(HydraError::Exec(format!(
@@ -481,7 +619,7 @@ impl MemoryHierarchy {
             }
         };
         if in_dram {
-            let e = self.entries.get_mut(&(model, shard)).expect("checked above");
+            let e = self.entry_mut(model, shard).expect("checked above");
             e.pins += 1;
             e.last_touch = clock;
             return Ok(TierFetch::NONE);
@@ -489,18 +627,24 @@ impl MemoryHierarchy {
         let mut evicted_bytes = 0u64;
         while self.dram_free() < bytes {
             // zero-byte shards free nothing: skipping them guarantees the
-            // loop terminates (either DRAM frees up or candidates run out)
+            // loop terminates (either DRAM frees up or candidates run out).
+            // Scanning the slab visits live slots in arbitrary order; the
+            // comparator is a total order over unique keys, so the victim
+            // is the same one the key-ordered map scan picked.
             let victim = self
-                .entries
+                .slots
                 .iter()
-                .filter(|(_, e)| e.in_dram && e.pins == 0 && e.bytes > 0)
-                .min_by(|(ka, a), (kb, b)| {
-                    a.last_touch
-                        .cmp(&b.last_touch)
-                        .then(b.bytes.cmp(&a.bytes))
-                        .then(ka.cmp(kb))
+                .filter(|s| {
+                    s.live && s.entry.in_dram && s.entry.pins == 0 && s.entry.bytes > 0
                 })
-                .map(|(k, e)| (*k, e.bytes));
+                .min_by(|a, b| {
+                    a.entry
+                        .last_touch
+                        .cmp(&b.entry.last_touch)
+                        .then(b.entry.bytes.cmp(&a.entry.bytes))
+                        .then((a.model, a.shard).cmp(&(b.model, b.shard)))
+                })
+                .map(|s| ((s.model, s.shard), s.entry.bytes));
             let Some((vk, vb)) = victim else {
                 return Err(HydraError::Exec(format!(
                     "memory hierarchy thrashing: shard (model {model}, shard \
@@ -515,13 +659,13 @@ impl MemoryHierarchy {
                     self.nvme_used, tier.capacity_bytes
                 )));
             }
-            let v = self.entries.get_mut(&vk).expect("victim exists");
+            let v = self.entry_mut(vk.0, vk.1).expect("victim exists");
             v.in_dram = false;
             self.dram_used -= vb;
             self.nvme_used += vb;
             evicted_bytes += vb;
         }
-        let e = self.entries.get_mut(&(model, shard)).expect("checked above");
+        let e = self.entry_mut(model, shard).expect("checked above");
         e.in_dram = true;
         e.pins += 1;
         e.last_touch = clock;
@@ -544,10 +688,11 @@ impl MemoryHierarchy {
             return;
         }
         self.clock += 1;
-        if let Some(e) = self.entries.get_mut(&(model, shard)) {
+        let clock = self.clock;
+        if let Some(e) = self.entry_mut(model, shard) {
             debug_assert!(e.pins > 0, "unpin of unpinned shard ({model}, {shard})");
             e.pins = e.pins.saturating_sub(1);
-            e.last_touch = self.clock;
+            e.last_touch = clock;
         }
     }
 
@@ -578,10 +723,17 @@ impl MemoryHierarchy {
                     self.nvme_used, t.capacity_bytes
                 )));
             }
-            let dram_sum: u64 =
-                self.entries.values().filter(|e| e.in_dram).map(|e| e.bytes).sum();
-            let nvme_sum: u64 =
-                self.entries.values().filter(|e| !e.in_dram).map(|e| e.bytes).sum();
+            let live = self.slots.iter().filter(|s| s.live);
+            let dram_sum: u64 = live
+                .clone()
+                .filter(|s| s.entry.in_dram)
+                .map(|s| s.entry.bytes)
+                .sum();
+            let nvme_sum: u64 = live
+                .clone()
+                .filter(|s| !s.entry.in_dram)
+                .map(|s| s.entry.bytes)
+                .sum();
             if dram_sum != self.dram_used || nvme_sum != self.nvme_used {
                 return Err(HydraError::Exec(format!(
                     "tier accounting drift: entries say dram {dram_sum} / nvme \
@@ -589,6 +741,13 @@ impl MemoryHierarchy {
                     self.dram_used, self.nvme_used
                 )));
             }
+        }
+        let dead = self.slots.iter().filter(|s| !s.live).count();
+        if dead != self.free.len() {
+            return Err(HydraError::Exec(format!(
+                "slab drift: {dead} dead slots but a free list of {}",
+                self.free.len()
+            )));
         }
         Ok(())
     }
@@ -606,10 +765,12 @@ impl MemoryHierarchy {
         w.put_u64(self.nvme_used);
         self.dram_traffic.encode(w);
         self.nvme_traffic.encode(w);
-        w.put_usize(self.entries.len());
-        for ((model, shard), e) in &self.entries {
-            w.put_usize(*model);
-            w.put_u32(*shard);
+        // key order: canonical bytes regardless of slab fragmentation, so
+        // a snapshot -> restore -> re-encode cycle is byte-stable
+        w.put_usize(self.live_entries());
+        for ((model, shard), e) in self.iter_key_order() {
+            w.put_usize(model);
+            w.put_u32(shard);
             e.encode(w);
         }
         w.put_u64(self.clock);
@@ -622,23 +783,40 @@ impl MemoryHierarchy {
         let nvme_used = r.get_u64()?;
         let dram_traffic = TierTraffic::decode(r)?;
         let nvme_traffic = TierTraffic::decode(r)?;
-        // each entry: key (8 + 4) + ShardEntry (8 + 1 + 4 + 8)
-        let n = r.get_count(33)?;
-        let mut entries = BTreeMap::new();
-        for _ in 0..n {
-            let key = (r.get_usize()?, r.get_u32()?);
-            entries.insert(key, ShardEntry::decode(r)?);
-        }
-        let h = MemoryHierarchy {
+        let mut h = MemoryHierarchy {
             dram_capacity,
             dram_used,
             nvme,
             nvme_used,
             dram_traffic,
             nvme_traffic,
-            entries,
-            clock: r.get_u64()?,
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: Vec::new(),
+            clock: 0,
         };
+        // each entry: key (8 + 4) + ShardEntry (8 + 1 + 4 + 8)
+        let n = r.get_count(33)?;
+        h.slots.reserve(n);
+        for _ in 0..n {
+            let model = r.get_usize()?;
+            let shard = r.get_u32()?;
+            // Bound the id-indexed lookup table a checksummed-but-bogus
+            // payload can make us allocate, and reject duplicate keys the
+            // old map silently overwrote.
+            if model > (1usize << 24) || shard > (1u32 << 24) {
+                return Err(HydraError::WalCorrupt(format!(
+                    "snapshot hierarchy: implausible key ({model}, {shard})"
+                )));
+            }
+            if h.slot_of(model, shard).is_some() {
+                return Err(HydraError::WalCorrupt(format!(
+                    "snapshot hierarchy: duplicate entry ({model}, {shard})"
+                )));
+            }
+            h.insert_entry(model, shard, ShardEntry::decode(r)?);
+        }
+        h.clock = r.get_u64()?;
         h.validate()
             .map_err(|e| HydraError::WalCorrupt(format!("snapshot hierarchy: {e}")))?;
         Ok(h)
@@ -698,12 +876,18 @@ impl Residency {
 }
 
 /// Byte-accurate per-device memory ledger.
+///
+/// A ledger holds a handful of residencies (the resident shard, the
+/// activation pair, workspace, buffer zone), so the entries live in a
+/// `Vec` kept sorted by residency key — `BTreeMap` iteration order, hence
+/// canonical codec bytes and `Debug` form — where a binary search plus a
+/// short memmove beats tree-node traffic on every alloc/release.
 #[derive(Debug, Clone)]
 pub struct DeviceLedger {
     pub device: usize,
     capacity: u64,
     used: u64,
-    entries: BTreeMap<Residency, u64>,
+    entries: Vec<(Residency, u64)>,
 }
 
 impl DeviceLedger {
@@ -711,7 +895,13 @@ impl DeviceLedger {
     /// pools simply build ledgers with different capacities — all
     /// accounting below is per-ledger.
     pub fn new(device: usize, capacity: u64) -> DeviceLedger {
-        DeviceLedger { device, capacity, used: 0, entries: BTreeMap::new() }
+        DeviceLedger { device, capacity, used: 0, entries: Vec::new() }
+    }
+
+    /// Position of residency `r`, `Ok` when held.
+    #[inline]
+    fn find(&self, r: &Residency) -> std::result::Result<usize, usize> {
+        self.entries.binary_search_by(|(k, _)| k.cmp(r))
     }
 
     /// Total device capacity in bytes.
@@ -731,21 +921,27 @@ impl DeviceLedger {
 
     /// Whether residency `r` is currently held.
     pub fn contains(&self, r: &Residency) -> bool {
-        self.entries.contains_key(r)
+        self.find(r).is_ok()
     }
 
     /// Bytes held by residency `r` (0 if absent).
     pub fn bytes_of(&self, r: &Residency) -> u64 {
-        self.entries.get(r).copied().unwrap_or(0)
+        match self.find(r) {
+            Ok(i) => self.entries[i].1,
+            Err(_) => 0,
+        }
     }
 
     /// Allocate; errors with DeviceOom if over capacity (a *real* error
     /// path — Algorithm 1's pilot runs rely on it).
     pub fn alloc(&mut self, r: Residency, bytes: u64) -> Result<()> {
-        if self.entries.contains_key(&r) {
-            return Err(HydraError::Exec(format!(
-                "device {}: duplicate residency {r:?}", self.device)));
-        }
+        let pos = match self.find(&r) {
+            Ok(_) => {
+                return Err(HydraError::Exec(format!(
+                    "device {}: duplicate residency {r:?}", self.device)));
+            }
+            Err(pos) => pos,
+        };
         if bytes > self.free() {
             return Err(HydraError::DeviceOom {
                 device: self.device,
@@ -754,15 +950,21 @@ impl DeviceLedger {
             });
         }
         self.used += bytes;
-        self.entries.insert(r, bytes);
+        self.entries.insert(pos, (r, bytes));
         Ok(())
     }
 
     /// Free; returns the freed byte count.
     pub fn release(&mut self, r: &Residency) -> u64 {
-        let bytes = self.entries.remove(r).unwrap_or(0);
-        self.used -= bytes;
-        bytes
+        match self.find(r) {
+            Ok(i) => {
+                // ordered removal keeps the sorted (canonical) order
+                let (_, bytes) = self.entries.remove(i);
+                self.used -= bytes;
+                bytes
+            }
+            Err(_) => 0,
+        }
     }
 
     pub(crate) fn encode(&self, w: &mut ByteWriter) {
@@ -780,7 +982,7 @@ impl DeviceLedger {
         let capacity = r.get_u64()?;
         // each entry: residency tag (>=1) + bytes (8)
         let n = r.get_count(9)?;
-        let mut entries = BTreeMap::new();
+        let mut entries = Vec::with_capacity(n);
         let mut used = 0u64;
         for _ in 0..n {
             let res = Residency::decode(r)?;
@@ -793,7 +995,17 @@ impl DeviceLedger {
                         "snapshot ledger for device {device} over capacity"
                     ))
                 })?;
-            entries.insert(res, bytes);
+            if let Some((last, _)) = entries.last() {
+                // canonical payloads are strictly key-sorted (the encoder
+                // writes them that way); anything else is corruption the
+                // old map-based decoder would have papered over
+                if *last >= res {
+                    return Err(HydraError::WalCorrupt(format!(
+                        "snapshot ledger for device {device}: entries out of order"
+                    )));
+                }
+            }
+            entries.push((res, bytes));
         }
         Ok(DeviceLedger { device, capacity, used, entries })
     }

@@ -55,13 +55,15 @@ USAGE:
                 [--out results] [--bnb-secs 3]
   hydra simulate [--models 12] [--params-m 1000] [--devices 8]
                 [--minibatches 6] [--scheduler sharded-lrtf]
-                [--no-double-buffer] [--sequential] [--scan-queue]
+                [--no-double-buffer] [--sequential]
+                [--queue heap|scan|calendar]
                 [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
                 [--wal run.wal] [--snapshot-every 4096]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
                 [--scheduler sharded-lrtf] [--progress] [--gantt]
+                [--queue heap|scan|calendar]
                 [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
                 [--wal run.wal] [--snapshot-every 4096]
@@ -69,7 +71,8 @@ USAGE:
                 [--algo grid|random|asha] [--pool a4000:4] [--trials N]
                 [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
                 [--grid-points 3] [--seed 7] [--stagger 0]
-                [--scheduler sharded-lrtf] [--prefetch-depth 1] [--shards 1]
+                [--scheduler sharded-lrtf] [--queue heap|scan|calendar]
+                [--prefetch-depth 1] [--shards 1]
                 [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
                 [--wal search.wal] [--snapshot-every 4096]
                 | --spec search.json
@@ -136,14 +139,28 @@ fn engine_options(args: &Args) -> Result<EngineOptions, String> {
         double_buffer: !args.flag("no-double-buffer"),
         prefetch_depth: args.opt_usize("prefetch-depth", 1)?,
         transfer: TransferModel::pcie_gen3(),
-        queue: if args.flag("scan-queue") {
-            QueueKind::LinearScan
-        } else {
-            QueueKind::Heap
-        },
+        queue: queue_arg(args)?,
         shards,
         ..Default::default()
     })
+}
+
+/// `--queue heap|scan|calendar`, with `--scan-queue` as the legacy spelling
+/// of `--queue scan`. All disciplines produce byte-identical reports; the
+/// calendar queue is the fast choice for storm workloads with heavy
+/// same-timestamp churn.
+fn queue_arg(args: &Args) -> Result<QueueKind, String> {
+    match args.opt("queue") {
+        Some("heap") => Ok(QueueKind::Heap),
+        Some("scan") | Some("linear-scan") => Ok(QueueKind::LinearScan),
+        Some("calendar") => Ok(QueueKind::Calendar),
+        Some(other) => Err(format!("unknown --queue {other:?} (heap|scan|calendar)")),
+        None => Ok(if args.flag("scan-queue") {
+            QueueKind::LinearScan
+        } else {
+            QueueKind::Heap
+        }),
+    }
 }
 
 fn policy_arg(args: &Args) -> Result<Policy, hydra::HydraError> {
@@ -516,7 +533,7 @@ fn cmd_search(args: &Args) -> CliResult {
         search.reference = reference;
 
         // engine_options honors --sequential / --no-double-buffer /
-        // --scan-queue exactly like the simulate subcommands
+        // --queue exactly like the simulate subcommands
         let opts = EngineOptions {
             buffer_frac: 0.30,
             record_intervals: false,
@@ -545,8 +562,14 @@ fn cmd_search(args: &Args) -> CliResult {
             if args.flag("no-double-buffer") {
                 engine.push_str(r#", "double_buffer": false"#);
             }
-            if args.flag("scan-queue") {
-                engine.push_str(r#", "event_queue": "scan""#);
+            match opts.queue {
+                QueueKind::Heap => {}
+                QueueKind::LinearScan => {
+                    engine.push_str(r#", "queue": "scan""#);
+                }
+                QueueKind::Calendar => {
+                    engine.push_str(r#", "queue": "calendar""#);
+                }
             }
             let mut cluster =
                 format!(r#""pool": "{pool_s}", "dram_mib": {}"#, dram >> 20);

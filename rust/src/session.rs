@@ -33,8 +33,8 @@ use crate::coordinator::memory::{MemoryOptions, TierSpec};
 use crate::coordinator::observer::EngineObserver;
 use crate::coordinator::partitioner::PartitionPolicy;
 use crate::coordinator::sharp::{
-    ClusterEvent, EngineOptions, JobEvent, JobStat, RunReport, ShardSection,
-    SharpEngine, ShardedEngine,
+    ClusterEvent, EngineOptions, JobEvent, JobStat, QueueKind, RunReport,
+    ShardSection, SharpEngine, ShardedEngine,
 };
 use crate::coordinator::task::ModelTask;
 use crate::coordinator::Cluster;
@@ -183,6 +183,16 @@ impl SessionBuilder {
     /// struct).
     pub fn prefetch_depth(mut self, depth: usize) -> SessionBuilder {
         self.options.prefetch_depth = depth;
+        self
+    }
+
+    /// Select the event-queue discipline (default: [`QueueKind::Heap`]).
+    /// All disciplines pop the identical `(time, seq)` order;
+    /// [`QueueKind::Calendar`] is tuned for storm workloads with heavy
+    /// same-timestamp churn. Call after [`SessionBuilder::options`]
+    /// (which replaces the whole options struct).
+    pub fn queue(mut self, queue: QueueKind) -> SessionBuilder {
+        self.options.queue = queue;
         self
     }
 
@@ -960,6 +970,25 @@ mod tests {
         let err = mk(0).unwrap_err();
         assert!(matches!(err, HydraError::Config(_)), "{err:?}");
         assert!(format!("{err}").contains("prefetch_depth"), "{err}");
+    }
+
+    #[test]
+    fn queue_kind_threads_through_and_reports_are_identical() {
+        let mk = |queue: QueueKind| {
+            let mut s = Session::builder(Cluster::uniform(2, 1 << 30, 4 << 30))
+                .options(zero_transfer())
+                .queue(queue)
+                .build()
+                .unwrap();
+            s.submit(task("a", 2, 1.0)).unwrap();
+            s.submit(task("b", 3, 1.0)).unwrap();
+            s.run().unwrap()
+        };
+        let heap = mk(QueueKind::Heap);
+        let scan = mk(QueueKind::LinearScan);
+        let cal = mk(QueueKind::Calendar);
+        assert_eq!(format!("{:?}", heap.run), format!("{:?}", scan.run));
+        assert_eq!(format!("{:?}", heap.run), format!("{:?}", cal.run));
     }
 
     #[test]

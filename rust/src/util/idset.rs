@@ -1,0 +1,132 @@
+//! A sorted dense-id set: the hot-path replacement for the engine's
+//! `BTreeSet<usize>` ready/parked/cancel-pending sets (ISSUE 8).
+//!
+//! Engine ids (models, devices) are small dense integers, and the sets
+//! are consulted on every event, so pointer-chasing tree nodes dominate
+//! the hot loop. [`IdSet`] stores the members in one sorted `Vec`:
+//! membership is a binary search, insert/remove are a binary search plus
+//! a memmove (cheap at engine set sizes, and cache-friendly at storm
+//! sizes), and iteration is ascending — exactly the `BTreeSet` iteration
+//! order, which the engine's state codec and `wake_one`/`take_eligible`
+//! byte-identity proofs rely on.
+
+/// A set of `usize` ids backed by a sorted vector.
+#[derive(Clone, Default)]
+pub struct IdSet {
+    ids: Vec<usize>,
+}
+
+impl IdSet {
+    pub fn new() -> IdSet {
+        IdSet { ids: Vec::new() }
+    }
+
+    /// Insert `id`; returns true if it was not already present
+    /// (`BTreeSet::insert` semantics).
+    pub fn insert(&mut self, id: usize) -> bool {
+        match self.ids.binary_search(&id) {
+            Ok(_) => false,
+            Err(pos) => {
+                self.ids.insert(pos, id);
+                true
+            }
+        }
+    }
+
+    /// Remove `id`; returns true if it was present
+    /// (`BTreeSet::remove` semantics).
+    pub fn remove(&mut self, id: usize) -> bool {
+        match self.ids.binary_search(&id) {
+            Ok(pos) => {
+                self.ids.remove(pos);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.ids.binary_search(&id).is_ok()
+    }
+
+    /// The smallest member — what `BTreeSet::iter().next()` returned at
+    /// the `wake_one` call site.
+    pub fn first(&self) -> Option<usize> {
+        self.ids.first().copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Ascending iteration, matching `BTreeSet` order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.ids.iter().copied()
+    }
+}
+
+impl std::fmt::Debug for IdSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Print as a set, like the `BTreeSet` it replaced.
+        f.debug_set().entries(self.ids.iter()).finish()
+    }
+}
+
+impl FromIterator<usize> for IdSet {
+    fn from_iter<I: IntoIterator<Item = usize>>(iter: I) -> IdSet {
+        let mut ids: Vec<usize> = iter.into_iter().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        IdSet { ids }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn insert_remove_contains_match_btreeset_semantics() {
+        let mut s = IdSet::new();
+        assert!(s.insert(5));
+        assert!(s.insert(1));
+        assert!(!s.insert(5));
+        assert!(s.contains(1) && s.contains(5) && !s.contains(3));
+        assert_eq!(s.first(), Some(1));
+        assert!(s.remove(1));
+        assert!(!s.remove(1));
+        assert_eq!(s.first(), Some(5));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn iteration_and_debug_mirror_a_btreeset() {
+        let mut rng = Rng::new(0x1d5e);
+        let mut ours = IdSet::new();
+        let mut reference = BTreeSet::new();
+        for _ in 0..2_000 {
+            let id = (rng.next_u64() % 128) as usize;
+            if rng.uniform() < 0.6 {
+                assert_eq!(ours.insert(id), reference.insert(id));
+            } else {
+                assert_eq!(ours.remove(id), reference.remove(&id));
+            }
+            assert_eq!(ours.len(), reference.len());
+            assert_eq!(ours.first(), reference.iter().next().copied());
+            assert!(ours.iter().eq(reference.iter().copied()));
+            assert_eq!(format!("{ours:?}"), format!("{reference:?}"));
+        }
+    }
+
+    #[test]
+    fn from_iterator_sorts_and_dedups() {
+        let s: IdSet = [9, 1, 4, 1, 9].into_iter().collect();
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![1, 4, 9]);
+    }
+}

@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod cli;
 pub mod codec;
+pub mod idset;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,232 @@
+//! Three-way event-queue differential suite (ISSUE 8): the binary heap,
+//! the linear scan, and the calendar queue must produce **byte-identical**
+//! `Debug`-formatted `RunReport`s on every workload shape the engine
+//! supports — batch Table-2 grids, online churn with cancellations,
+//! heterogeneous pools, NVMe-backed three-tier pressure, and sharded
+//! runs. Byte-identity (not makespan tolerance) is the house proof style:
+//! if any discipline ever popped a different `(time, seq)` order, some
+//! counter, interval, or job stat would differ and the string comparison
+//! would catch it.
+
+use hydra::coordinator::memory::TierSpec;
+use hydra::coordinator::sharp::{
+    DeviceSpec, EngineOptions, QueueKind, RunReport, TransferModel,
+};
+use hydra::coordinator::task::{ModelTask, ShardDesc};
+use hydra::coordinator::Cluster;
+use hydra::session::{Backend, Policy, Session, SessionReport};
+use hydra::sim::{bert_grid, build_tasks, poisson_mixed_tenants, vit_grid, GpuSpec};
+
+const GIB: u64 = 1 << 30;
+
+const QUEUES: [QueueKind; 3] =
+    [QueueKind::Heap, QueueKind::LinearScan, QueueKind::Calendar];
+
+/// Run `mk` once per queue discipline and assert the three reports render
+/// to identical bytes.
+fn assert_three_way_identical(what: &str, mk: impl Fn(QueueKind) -> String) {
+    let heap = mk(QueueKind::Heap);
+    for kind in [QueueKind::LinearScan, QueueKind::Calendar] {
+        let other = mk(kind);
+        assert_eq!(heap, other, "{what}: {kind:?} report differs from Heap");
+    }
+}
+
+fn uniform_task(id: usize, shards: usize, mbs: u32, cost: f64) -> ModelTask {
+    let sd: Vec<ShardDesc> = (0..shards)
+        .map(|_| ShardDesc {
+            param_bytes: 100 << 20,
+            fwd_transfer_bytes: 50 << 20,
+            bwd_transfer_bytes: 50 << 20,
+            activation_bytes: 4 << 20,
+            fwd_cost: cost,
+            bwd_cost: 2.0 * cost,
+            n_layers: 1,
+        })
+        .collect();
+    ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, 1, 1e-3)
+}
+
+fn run_session(
+    tasks: Vec<ModelTask>,
+    cluster: Cluster,
+    opts: EngineOptions,
+    nvme: Option<TierSpec>,
+    cancels: &[(usize, f64)],
+) -> SessionReport {
+    let mut builder = Session::builder(cluster)
+        .backend(Backend::sim())
+        .policy(Policy::ShardedLrtf)
+        .options(opts);
+    if let Some(tier) = nvme {
+        builder = builder.nvme(tier);
+    }
+    let mut session = builder.build().unwrap();
+    let mut handles = Vec::new();
+    for t in tasks {
+        handles.push(session.submit(t).unwrap());
+    }
+    for &(job, time) in cancels {
+        session.cancel_at(handles[job], time).unwrap();
+    }
+    session.run().unwrap()
+}
+
+fn report_bytes(r: &RunReport) -> String {
+    format!("{r:?}")
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 batch grids
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_queues_agree_byte_for_byte_on_table2_grids() {
+    let gpu = GpuSpec::rtx2080ti();
+    for (name, workload) in [("bert", bert_grid(2)), ("vit", vit_grid(2))] {
+        assert_three_way_identical(name, |queue| {
+            let tasks =
+                build_tasks(&workload, &gpu, Default::default()).unwrap();
+            let opts = EngineOptions {
+                buffer_frac: 0.30,
+                record_intervals: true,
+                queue,
+                ..Default::default()
+            };
+            let cluster = Cluster::uniform(8, gpu.mem_bytes, 500 * GIB);
+            report_bytes(&run_session(tasks, cluster, opts, None, &[]).run)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// online churn with cancellations
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_queues_agree_byte_for_byte_under_online_churn_with_cancels() {
+    let gpu = GpuSpec::rtx2080ti();
+    assert_three_way_identical("poisson churn", |queue| {
+        let stream = poisson_mixed_tenants(10, 6.0, 7, 2);
+        let tasks = build_tasks(&stream, &gpu, Default::default()).unwrap();
+        let opts = EngineOptions {
+            record_intervals: true,
+            queue,
+            ..Default::default()
+        };
+        let cluster = Cluster::uniform(3, gpu.mem_bytes, 4096 * GIB);
+        // two mid-stream cancels: the cancel/unhome paths must also agree
+        let r = run_session(tasks, cluster, opts, None, &[(2, 1800.0), (5, 3600.0)]);
+        report_bytes(&r.run)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// heterogeneous pool (mixed memory, speed, and host links)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_queues_agree_byte_for_byte_on_a_heterogeneous_pool() {
+    assert_three_way_identical("hetero pool", |queue| {
+        let specs = vec![
+            DeviceSpec { mem_bytes: GIB, speed: 1.0, link: None },
+            DeviceSpec { mem_bytes: 2 * GIB, speed: 1.5, link: None },
+            DeviceSpec {
+                mem_bytes: GIB,
+                speed: 0.75,
+                link: Some(TransferModel::pcie_gen4()),
+            },
+        ];
+        let tasks: Vec<ModelTask> = (0..6)
+            .map(|i| {
+                uniform_task(i, 1 + i % 3, 2, 0.3 + 0.2 * i as f64)
+                    .with_arrival(1.5 * i as f64)
+            })
+            .collect();
+        let opts = EngineOptions {
+            transfer: TransferModel::pcie_gen3(),
+            record_intervals: true,
+            queue,
+            ..Default::default()
+        };
+        let cluster = Cluster::heterogeneous(specs, 64 * GIB);
+        report_bytes(&run_session(tasks, cluster, opts, None, &[]).run)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// NVMe pressure (three-tier promotions, demotions, write-backs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_queues_agree_byte_for_byte_under_nvme_pressure() {
+    let small_task = |id: usize, param_bytes: u64, mbs: u32| {
+        let sd = vec![ShardDesc {
+            param_bytes,
+            fwd_transfer_bytes: param_bytes / 3,
+            bwd_transfer_bytes: param_bytes / 3,
+            activation_bytes: 1 << 16,
+            fwd_cost: 0.5,
+            bwd_cost: 1.0,
+            n_layers: 1,
+        }];
+        ModelTask::new(id, format!("m{id}"), "sim", sd, mbs, 1, 1e-3)
+    };
+    assert_three_way_identical("nvme pressure", |queue| {
+        // 8 x 40 MiB of parameter state over 256 MiB of DRAM: every run
+        // must promote from and demote to the NVMe tier
+        let tasks: Vec<ModelTask> =
+            (0..8).map(|i| small_task(i, 40 << 20, 2)).collect();
+        let opts = EngineOptions { record_intervals: true, queue, ..Default::default() };
+        let cluster = Cluster::uniform(2, GIB, 256 << 20);
+        let r = run_session(tasks, cluster, opts, Some(TierSpec::nvme(4 * GIB)), &[]);
+        assert!(r.run.nvme_promoted_bytes > 0, "workload failed to pressure NVMe");
+        report_bytes(&r.run)
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sharded runs (N = 2 and N = 4): every shard engine inherits the queue
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_queues_agree_byte_for_byte_when_sharded() {
+    for shards in [2usize, 4] {
+        assert_three_way_identical(&format!("sharded n={shards}"), |queue| {
+            let tasks: Vec<ModelTask> = (0..8)
+                .map(|i| {
+                    uniform_task(i, 1 + i % 2, 2, 0.4 + 0.1 * i as f64)
+                        .with_arrival(0.5 * i as f64)
+                })
+                .collect();
+            let opts = EngineOptions {
+                transfer: TransferModel::zero_cost(),
+                record_intervals: true,
+                queue,
+                shards,
+                ..Default::default()
+            };
+            let cluster = Cluster::uniform(4, GIB, 64 * GIB);
+            let r = run_session(tasks, cluster, opts, None, &[]);
+            assert_eq!(r.shard_sections.len(), shards);
+            // merged report plus every per-shard section must match
+            format!("{:?}\n{:?}", r.run, r.shard_sections)
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the three disciplines expose the same default and answer `QUEUES`
+// ---------------------------------------------------------------------------
+
+#[test]
+fn queue_kinds_cover_the_three_disciplines() {
+    // compile-time completeness guard: adding a fourth discipline must
+    // extend this suite
+    for q in QUEUES {
+        match q {
+            QueueKind::Heap | QueueKind::LinearScan | QueueKind::Calendar => {}
+        }
+    }
+    assert_eq!(QUEUES.len(), 3);
+}
