@@ -30,11 +30,19 @@ fn main() {
                 front_shard: 0,
                 front_phase: Phase::Fwd,
                 arrival: 0.0,
+                tenant: 0,
+                weight: 1.0,
             })
             .collect();
         let mut lrtf = Policy::ShardedLrtf.build();
         let mut rng = Rng::new(0);
-        let ctx = PickContext { now: 0.0, device: 0, speed: 1.0, resident: None };
+        let ctx = PickContext {
+            now: 0.0,
+            device: 0,
+            speed: 1.0,
+            resident: None,
+            tenant_gpu_secs: None,
+        };
         bench(&format!("sharded-lrtf pick, {n} eligible models"), 7, 1000, || {
             for _ in 0..1000 {
                 std::hint::black_box(lrtf.pick(&snaps, ctx, &mut rng));

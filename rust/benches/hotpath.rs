@@ -113,6 +113,14 @@ fn run_depth_bench(depth: usize, mbs: u32) -> RunReport {
 /// dispatch-dominated regime the ISSUE 8 hot-path overhaul targets.
 /// Returns units executed (2 per job) for the caller's sanity check.
 fn run_storm_bench(n: usize, queue: QueueKind) -> u64 {
+    run_storm(n, queue, Policy::ShardedLrtf, 0)
+}
+
+/// [`run_storm_bench`] with a chosen policy and (when `tenants > 0`) jobs
+/// spread round-robin over that many weighted tenants — the wfq-storm arm's
+/// worst case for the per-tenant accrual slabs and the weighted-fair pick.
+fn run_storm(n: usize, queue: QueueKind, policy: Policy, tenants: usize) -> u64 {
+    const WEIGHTS: [f64; 8] = [10.0, 5.0, 4.0, 3.0, 2.0, 1.0, 1.0, 0.5];
     let mut rng = Rng::new(0x5702);
     let mut t = 0.0f64;
     let opts = EngineOptions {
@@ -132,7 +140,7 @@ fn run_storm_bench(n: usize, queue: QueueKind) -> u64 {
     ]);
     let mut session = Session::builder(Cluster::heterogeneous(specs, 256 * GIB))
         .backend(Backend::sim())
-        .policy(Policy::ShardedLrtf)
+        .policy(policy)
         .options(opts)
         .build()
         .unwrap();
@@ -147,9 +155,12 @@ fn run_storm_bench(n: usize, queue: QueueKind) -> u64 {
             bwd_cost: 0.01,
             n_layers: 1,
         }];
-        session
-            .submit(ModelTask::new(i, format!("j{i}"), "storm", sd, 1, 1, 1e-3).with_arrival(t))
-            .unwrap();
+        let mut task =
+            ModelTask::new(i, format!("j{i}"), "storm", sd, 1, 1, 1e-3).with_arrival(t);
+        if tenants > 0 {
+            task = task.with_tenant(i % tenants, WEIGHTS[(i % tenants) % WEIGHTS.len()]);
+        }
+        session.submit(task).unwrap();
     }
     session.run().unwrap().run.units_executed
 }
@@ -474,6 +485,21 @@ fn main() {
         || {
             let units = run_storm_bench(storm_jobs, QueueKind::Calendar);
             assert_eq!(units, 2 * storm_jobs as u64, "storm lost units");
+            std::hint::black_box(units);
+        },
+    ));
+
+    // --- weighted-fair storm: the same regime, 8 weighted tenants ---------
+    // Every pick walks the eligible set computing virtual finish times and
+    // every dispatch charges a tenant accrual slab — the multi-tenant
+    // bookkeeping's worst case.
+    ms.push(bench(
+        &format!("engine[wfq-storm]: {storm_jobs} Poisson arrivals, 8 weighted tenants, 8-device mixed pool"),
+        1,
+        2 * storm_jobs as u64,
+        || {
+            let units = run_storm(storm_jobs, QueueKind::Calendar, Policy::WeightedFair, 8);
+            assert_eq!(units, 2 * storm_jobs as u64, "wfq storm lost units");
             std::hint::black_box(units);
         },
     ));

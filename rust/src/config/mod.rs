@@ -33,7 +33,12 @@
 //! host-link bandwidth; speeds are relative to the slowest listed class),
 //! and `"pool": "a4000:4,a6000:2"` is the compact class:count form shared
 //! with the `hydra simulate --online --pool` flag. Tasks may carry an
-//! `"arrival"` time in virtual seconds — the online multi-tenant setting.
+//! `"arrival"` time in virtual seconds — the online multi-tenant setting —
+//! plus tenant metadata: `"tenant"` (owning tenant id), `"weight"` (fair
+//! share under `"scheduler": "weighted-fair"`) and `"deadline"` (latency
+//! SLO in virtual seconds after arrival; attainment lands in the report's
+//! per-tenant section). `"engine": { "admission_depth": k }` sheds a
+//! tenant's mid-run submissions once it has `k` unfinished jobs queued.
 //!
 //! Model-selection searches have their own spec, [`SearchWorkload`]: the
 //! same `"cluster"`/`"engine"` objects plus a `"search"` object (space +
@@ -44,6 +49,7 @@ use crate::coordinator::durability::{DurabilityOptions, WalRecord, WalWriter};
 use crate::coordinator::memory::TierSpec;
 use crate::coordinator::sched::Policy;
 use crate::coordinator::sharp::{DeviceSpec, EngineOptions, ParallelMode, QueueKind};
+use crate::coordinator::task::MAX_TENANT_ID;
 use crate::coordinator::Cluster;
 use crate::error::{HydraError, Result};
 use crate::exec::real::RealModelSpec;
@@ -72,6 +78,20 @@ fn cerr(msg: impl Into<String>) -> HydraError {
     HydraError::Config(msg.into())
 }
 
+/// A sharded front door partitions the device pool, so more shards than
+/// devices would leave some shards with an empty pool. Rejected here so a
+/// spec fails at parse time with the same message `Session::build` uses.
+fn check_shards_fit(engine: &EngineOptions, cluster: &Cluster) -> Result<()> {
+    if engine.shards > cluster.devices.len() {
+        return Err(cerr(format!(
+            "{} shards over {} devices (each shard needs at least one device)",
+            engine.shards,
+            cluster.devices.len()
+        )));
+    }
+    Ok(())
+}
+
 impl WorkloadSpec {
     pub fn load(path: &str) -> Result<WorkloadSpec> {
         let text = std::fs::read_to_string(path)?;
@@ -82,6 +102,7 @@ impl WorkloadSpec {
         let j = Json::parse(text)?;
         let (cluster, nvme, _reference) = parse_cluster(&j)?;
         let (engine, policy, early_stop, durability) = parse_engine(&j)?;
+        check_shards_fit(&engine, &cluster)?;
         if durability.is_some() {
             return Err(cerr(
                 "engine.wal durability applies to sim runs and searches; \
@@ -284,6 +305,16 @@ fn parse_engine(
             }
             engine.shards = s as usize;
         }
+        if let Some(d) = e.get("admission_depth").and_then(Json::as_u64) {
+            if d == 0 {
+                return Err(cerr(
+                    "admission_depth must be >= 1 (it bounds each tenant's \
+                     unfinished mid-run submissions; omit the key to disable \
+                     admission control)",
+                ));
+            }
+            engine.admission_depth = Some(d as usize);
+        }
         if let Some(me) = e.get("early_stop_median_after").and_then(Json::as_u64) {
             early_stop = Some(me as u32);
         }
@@ -371,6 +402,7 @@ impl SearchWorkload {
         let j = Json::parse(text)?;
         let (cluster, nvme, reference) = parse_cluster(&j)?;
         let (mut engine, policy, early_stop, durability) = parse_engine(&j)?;
+        check_shards_fit(&engine, &cluster)?;
         if early_stop.is_some() {
             return Err(cerr(
                 "engine.early_stop_median_after is a real-backend workload key \
@@ -488,6 +520,22 @@ fn parse_task(i: usize, t: &Json) -> Result<RealModelSpec> {
     if !arrival.is_finite() || arrival < 0.0 {
         return Err(cerr(format!("task {name}: bad arrival {arrival}")));
     }
+    let tenant = t.get("tenant").and_then(Json::as_u64).unwrap_or(0) as usize;
+    if tenant > MAX_TENANT_ID {
+        return Err(cerr(format!(
+            "task {name}: tenant {tenant} over the {MAX_TENANT_ID} cap"
+        )));
+    }
+    let weight = t.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
+    if !weight.is_finite() || weight <= 0.0 {
+        return Err(cerr(format!("task {name}: bad weight {weight}")));
+    }
+    let deadline = match t.get("deadline").and_then(Json::as_f64) {
+        Some(d) if !d.is_finite() || d <= 0.0 => {
+            return Err(cerr(format!("task {name}: bad deadline {d}")))
+        }
+        d => d,
+    };
     Ok(RealModelSpec {
         name,
         config,
@@ -501,6 +549,9 @@ fn parse_task(i: usize, t: &Json) -> Result<RealModelSpec> {
         seed: t.get("seed").and_then(Json::as_u64).unwrap_or(i as u64),
         inference: t.get("inference").and_then(Json::as_bool).unwrap_or(false),
         arrival,
+        tenant,
+        weight,
+        deadline,
     })
 }
 
@@ -617,6 +668,73 @@ mod tests {
         )
         .unwrap();
         assert_eq!(s.engine.shards, 2);
+    }
+
+    #[test]
+    fn shards_over_devices_rejected_at_parse() {
+        let err = WorkloadSpec::parse(
+            r#"{"cluster": {"devices":2,"device_mem_mib":1},
+                "engine": {"shards": 3},
+                "tasks":[{"config":"x","minibatches":1}]}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, HydraError::Config(_)), "{err:?}");
+        assert!(format!("{err}").contains("3 shards over 2 devices"), "{err}");
+        // the search spec shares the cross-check
+        let err = SearchWorkload::parse(
+            r#"{"cluster": {"devices":1,"device_mem_mib":16384},
+                "engine": {"shards": 4},
+                "search": {"space": "lr=1e-4..1e-2:log"}}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("4 shards over 1 devices"), "{err}");
+    }
+
+    #[test]
+    fn admission_depth_parses_and_rejects_zero() {
+        let mk = |engine: &str| {
+            WorkloadSpec::parse(&format!(
+                r#"{{"cluster": {{"devices":1,"device_mem_mib":1}},
+                     "engine": {engine},
+                     "tasks":[{{"config":"x","minibatches":1}}]}}"#
+            ))
+        };
+        assert_eq!(mk(r#"{}"#).unwrap().engine.admission_depth, None);
+        assert_eq!(
+            mk(r#"{"admission_depth": 8}"#).unwrap().engine.admission_depth,
+            Some(8)
+        );
+        let err = mk(r#"{"admission_depth": 0}"#).unwrap_err();
+        assert!(format!("{err}").contains("admission_depth"), "{err}");
+    }
+
+    #[test]
+    fn tenant_keys_parse_and_validate() {
+        let mk = |task_extra: &str| {
+            WorkloadSpec::parse(&format!(
+                r#"{{"cluster": {{"devices":1,"device_mem_mib":1}},
+                     "tasks":[{{"config":"x","minibatches":1{task_extra}}}]}}"#
+            ))
+        };
+        // defaults: tenant 0, weight 1, no deadline
+        let w = mk("").unwrap();
+        assert_eq!(w.tasks[0].tenant, 0);
+        assert_eq!(w.tasks[0].weight, 1.0);
+        assert_eq!(w.tasks[0].deadline, None);
+        let w = mk(r#", "tenant": 3, "weight": 2.5, "deadline": 90.0"#).unwrap();
+        assert_eq!(w.tasks[0].tenant, 3);
+        assert_eq!(w.tasks[0].weight, 2.5);
+        assert_eq!(w.tasks[0].deadline, Some(90.0));
+        for bad in [
+            r#", "tenant": 1048577"#, // over MAX_TENANT_ID
+            r#", "weight": 0.0"#,
+            r#", "weight": -1.0"#,
+            r#", "deadline": 0.0"#,
+            r#", "deadline": -5.0"#,
+        ] {
+            let err = mk(bad).unwrap_err();
+            assert!(matches!(err, HydraError::Config(_)), "{bad}: {err:?}");
+        }
     }
 
     #[test]

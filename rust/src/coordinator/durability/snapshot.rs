@@ -18,7 +18,7 @@ use crate::error::{HydraError, Result};
 use crate::util::codec::{crc32, ByteReader, ByteWriter};
 
 /// File magic of a Hydra snapshot sidecar.
-pub const SNAP_MAGIC: &[u8; 8] = b"HYSNAP01";
+pub const SNAP_MAGIC: &[u8; 8] = b"HYSNAP02";
 
 /// One complete mid-run engine state.
 #[derive(Debug, Clone)]

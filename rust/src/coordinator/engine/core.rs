@@ -23,7 +23,7 @@ use crate::util::rng::Rng;
 
 use super::device::{ClusterEvent, DeviceSpec, DeviceState};
 use super::events::{Event, EventQueue, QueueKind, QueuedEvent};
-use super::jobs::{JobEvent, JobStat};
+use super::jobs::{Admission, JobEvent, JobStat};
 use super::prefetch::StagedShard;
 use super::TransferModel;
 
@@ -105,6 +105,15 @@ pub struct EngineOptions {
     /// single global coordinator and ignores this field. 1 (the default) is
     /// the unsharded engine.
     pub shards: usize,
+    /// Per-tenant admission bound: a mid-run submission
+    /// ([`super::jobs::JobEvent::Submit`]) is shed when its tenant already
+    /// has this many unfinished jobs queued. Shed jobs keep their dense task
+    /// id but finish immediately with zero units, and each rejection is
+    /// recorded as an [`super::jobs::Admission::Shed`] in
+    /// [`RunReport::sheds`]. `None` (the default) admits everything.
+    /// Construction-time tasks are never shed — they model the accepted
+    /// backlog. Under a sharded front door the bound applies per shard.
+    pub admission_depth: Option<usize>,
 }
 
 impl Default for EngineOptions {
@@ -120,6 +129,7 @@ impl Default for EngineOptions {
             full_state_transfers: false,
             queue: QueueKind::Heap,
             shards: 1,
+            admission_depth: None,
         }
     }
 }
@@ -136,6 +146,13 @@ impl EngineOptions {
         w.put_bool(self.full_state_transfers);
         self.queue.encode(w);
         w.put_usize(self.shards);
+        match self.admission_depth {
+            None => w.put_bool(false),
+            Some(d) => {
+                w.put_bool(true);
+                w.put_usize(d);
+            }
+        }
     }
 
     pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<EngineOptions> {
@@ -150,12 +167,46 @@ impl EngineOptions {
             full_state_transfers: r.get_bool()?,
             queue: QueueKind::decode(r)?,
             shards: r.get_usize()?,
+            admission_depth: if r.get_bool()? { Some(r.get_usize()?) } else { None },
         })
     }
 }
 
+/// Per-tenant accounting section of a [`RunReport`], present only when the
+/// run carried tenant metadata (any job with a non-default tenant, weight or
+/// deadline, or admission control switched on). Sections merge across
+/// coordinator shards exactly like the scalar aggregates: counts add, and
+/// GPU-seconds fold in shard order so sharded totals conserve bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStat {
+    /// Tenant id (dense, `0` is the default tenant).
+    pub tenant: usize,
+    /// Jobs submitted under this tenant, shed ones included.
+    pub jobs: usize,
+    /// Accumulated compute seconds across the tenant's units — the WFQ
+    /// virtual clock's input.
+    pub gpu_secs: f64,
+    /// Shard units the tenant's jobs retired.
+    pub units: u64,
+    /// Jobs rejected by admission control.
+    pub shed: u64,
+    /// Jobs that carried a deadline.
+    pub slo_jobs: usize,
+    /// Deadline-carrying jobs that finished (uncancelled, unshed) within
+    /// `arrival + deadline`.
+    pub slo_met: usize,
+}
+
+impl TenantStat {
+    /// SLO attainment: fraction of deadline-carrying jobs that met their
+    /// deadline; `None` when the tenant set no deadlines.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        (self.slo_jobs > 0).then(|| self.slo_met as f64 / self.slo_jobs as f64)
+    }
+}
+
 /// Result summary of an engine run.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct RunReport {
     /// Full execution trace (intervals, device windows, makespan).
     pub trace: Trace,
@@ -192,6 +243,45 @@ pub struct RunReport {
     /// Per-job arrival/finish/cancellation statistics (online setting;
     /// batch runs have arrival 0.0 everywhere).
     pub jobs: Vec<JobStat>,
+    /// Per-tenant accounting, ascending tenant id. Empty unless the run
+    /// carried tenant metadata (see [`TenantStat`]).
+    pub tenants: Vec<TenantStat>,
+    /// Admission-control rejections in submission order. Empty unless
+    /// [`EngineOptions::admission_depth`] shed something.
+    pub sheds: Vec<Admission>,
+}
+
+/// Hand-rolled to match the output the derive produced before the
+/// multi-tenant fields existed: `tenants`/`sheds` are appended only when
+/// non-empty, so reports without tenant metadata stay Debug-byte-identical
+/// to pre-tenancy builds (the backward-compat proof the property suite
+/// pins).
+impl std::fmt::Debug for RunReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = f.debug_struct("RunReport");
+        s.field("trace", &self.trace)
+            .field("makespan", &self.makespan)
+            .field("utilization", &self.utilization)
+            .field("compute_secs", &self.compute_secs)
+            .field("transfer_secs", &self.transfer_secs)
+            .field("stall_secs", &self.stall_secs)
+            .field("prefetch_wait_secs", &self.prefetch_wait_secs)
+            .field("units_executed", &self.units_executed)
+            .field("promoted_bytes", &self.promoted_bytes)
+            .field("demoted_bytes", &self.demoted_bytes)
+            .field("nvme_promoted_bytes", &self.nvme_promoted_bytes)
+            .field("nvme_demoted_bytes", &self.nvme_demoted_bytes)
+            .field("nvme_secs", &self.nvme_secs)
+            .field("scheduler", &self.scheduler)
+            .field("jobs", &self.jobs);
+        if !self.tenants.is_empty() {
+            s.field("tenants", &self.tenants);
+        }
+        if !self.sheds.is_empty() {
+            s.field("sheds", &self.sheds);
+        }
+        s.finish()
+    }
 }
 
 /// The SHARP engine.
@@ -241,6 +331,34 @@ pub struct SharpEngine<'a> {
     pub(crate) scratch_eligible: Vec<ModelSnapshot>,
     /// Scratch residency buffer reused across `PickContext` builds.
     pub(crate) scratch_resident: Vec<(usize, u32)>,
+    // multi-tenant state: dense per-tenant slabs grown on first touch (no
+    // tree maps on the hot path), live only when `tenant_meta` is set
+    /// Does this run carry tenant metadata at all? Latched at construction
+    /// from the initial tasks and admission config, and by any mid-run
+    /// submission that brings metadata with it. Off, the tenant slabs stay
+    /// untouched and the report's tenant section stays empty.
+    pub(crate) tenant_meta: bool,
+    /// Accumulated compute seconds per tenant — the WFQ virtual clock.
+    pub(crate) tenant_gpu_secs: Vec<f64>,
+    /// Shard units retired per tenant.
+    pub(crate) tenant_units: Vec<u64>,
+    /// Unfinished jobs per tenant (admission's queue-depth gauge).
+    pub(crate) tenant_outstanding: Vec<usize>,
+    /// Admission rejections in submission order.
+    pub(crate) sheds: Vec<Admission>,
+    /// Models rejected by admission control (`JobStat::shed`).
+    pub(crate) shed_models: IdSet,
+}
+
+/// Index into a dense per-tenant slab, growing it (default-filled) on first
+/// touch. Tenant ids are small dense integers (bounded by
+/// [`crate::coordinator::task::MAX_TENANT_ID`]), so flat `Vec`s replace the
+/// tree maps the hot path must avoid.
+pub(crate) fn tenant_slot<T: Default + Clone>(v: &mut Vec<T>, tenant: usize) -> &mut T {
+    if v.len() <= tenant {
+        v.resize(tenant + 1, T::default());
+    }
+    &mut v[tenant]
 }
 
 impl<'a> SharpEngine<'a> {
@@ -301,6 +419,16 @@ impl<'a> SharpEngine<'a> {
         let rng = Rng::new(options.seed);
         let n_tasks = tasks.len();
         let n_devices = devices.len();
+        let tenant_meta = options.admission_depth.is_some()
+            || tasks.iter().any(|t| t.has_tenant_meta());
+        let mut tenant_outstanding = Vec::new();
+        if tenant_meta {
+            // construction tasks are pre-admitted backlog: they count
+            // against their tenant's queue depth from t = 0
+            for t in &tasks {
+                *tenant_slot(&mut tenant_outstanding, t.tenant()) += 1;
+            }
+        }
         Ok(SharpEngine {
             tasks,
             devices,
@@ -330,6 +458,12 @@ impl<'a> SharpEngine<'a> {
             rng,
             scratch_eligible: Vec::new(),
             scratch_resident: Vec::new(),
+            tenant_meta,
+            tenant_gpu_secs: Vec::new(),
+            tenant_units: Vec::new(),
+            tenant_outstanding,
+            sheds: Vec::new(),
+            shed_models: IdSet::new(),
         })
     }
 
@@ -428,6 +562,21 @@ impl<'a> SharpEngine<'a> {
         for s in self.rng.state() {
             w.put_u64(s);
         }
+        // multi-tenant state: only the non-derivable pieces are serialized —
+        // the unit/outstanding slabs are rebuilt from the tasks on restore
+        w.put_bool(self.tenant_meta);
+        w.put_usize(self.tenant_gpu_secs.len());
+        for &g in &self.tenant_gpu_secs {
+            w.put_f64(g);
+        }
+        w.put_usize(self.sheds.len());
+        for s in &self.sheds {
+            s.encode(w);
+        }
+        w.put_usize(self.shed_models.len());
+        for m in self.shed_models.iter() {
+            w.put_usize(m);
+        }
     }
 
     /// Overwrite this engine's run state with an [`SharpEngine::encode_state`]
@@ -492,6 +641,29 @@ impl<'a> SharpEngine<'a> {
             *v = r.get_u64()?;
         }
         self.rng = Rng::from_state(s);
+        self.tenant_meta = r.get_bool()?;
+        let n = r.get_count(8)?;
+        self.tenant_gpu_secs = (0..n).map(|_| r.get_f64()).collect::<Result<_>>()?;
+        let n = r.get_count(1)?;
+        let mut sheds = Vec::with_capacity(n);
+        for _ in 0..n {
+            sheds.push(Admission::decode(r)?);
+        }
+        self.sheds = sheds;
+        let n = r.get_count(8)?;
+        self.shed_models = (0..n).map(|_| r.get_usize()).collect::<Result<_>>()?;
+        // derived per-tenant slabs: rebuilt from the restored tasks so they
+        // can never disagree with them
+        self.tenant_units.clear();
+        self.tenant_outstanding.clear();
+        if self.tenant_meta {
+            for t in &self.tasks {
+                *tenant_slot(&mut self.tenant_units, t.tenant()) += t.completed_units();
+                if t.state() != TaskState::Done {
+                    *tenant_slot(&mut self.tenant_outstanding, t.tenant()) += 1;
+                }
+            }
+        }
         // a restored engine never primes: its job events already live in the
         // queue / pending-submission list captured above
         self.job_events.clear();
@@ -751,8 +923,10 @@ impl<'a> SharpEngine<'a> {
                 cancel_requested: (!self.cancel_requested[m].is_nan())
                     .then_some(self.cancel_requested[m]),
                 units_executed: t.completed_units(),
+                shed: self.shed_models.contains(m),
             })
             .collect();
+        let tenants = self.tenant_sections();
         Ok(RunReport {
             makespan: self.trace.makespan,
             utilization,
@@ -768,8 +942,99 @@ impl<'a> SharpEngine<'a> {
             nvme_secs: self.agg_nvme,
             scheduler: self.scheduler.name(),
             jobs,
+            tenants,
+            sheds: std::mem::take(&mut self.sheds),
             trace: std::mem::take(&mut self.trace),
         })
+    }
+
+    /// Assemble the per-tenant report rows (ascending tenant id). Empty
+    /// unless the run carried tenant metadata, which is what keeps
+    /// metadata-free reports Debug-identical to pre-tenancy builds.
+    fn tenant_sections(&self) -> Vec<TenantStat> {
+        fn row(rows: &mut Vec<TenantStat>, tenant: usize) -> &mut TenantStat {
+            for t in rows.len()..=tenant {
+                rows.push(TenantStat {
+                    tenant: t,
+                    jobs: 0,
+                    gpu_secs: 0.0,
+                    units: 0,
+                    shed: 0,
+                    slo_jobs: 0,
+                    slo_met: 0,
+                });
+            }
+            &mut rows[tenant]
+        }
+        let mut rows: Vec<TenantStat> = Vec::new();
+        if !self.tenant_meta {
+            return rows;
+        }
+        for (m, t) in self.tasks.iter().enumerate() {
+            let r = row(&mut rows, t.tenant());
+            r.jobs += 1;
+            if let Some(deadline) = t.deadline() {
+                r.slo_jobs += 1;
+                let finish = self.finish_times[m];
+                // shed and cancelled jobs never meet their SLO — a shed
+                // job "finishes" instantly, which must not count
+                if finish.is_finite()
+                    && !self.job_cancelled[m]
+                    && !self.shed_models.contains(m)
+                    && finish - t.arrival() <= deadline
+                {
+                    r.slo_met += 1;
+                }
+            }
+        }
+        for (t, &g) in self.tenant_gpu_secs.iter().enumerate() {
+            if g != 0.0 {
+                row(&mut rows, t).gpu_secs = g;
+            }
+        }
+        for (t, &u) in self.tenant_units.iter().enumerate() {
+            if u != 0 {
+                row(&mut rows, t).units = u;
+            }
+        }
+        for s in &self.sheds {
+            let Admission::Shed { tenant, .. } = s;
+            row(&mut rows, *tenant).shed += 1;
+        }
+        // dense fill leaves all-zero gap rows for unused tenant ids
+        rows.retain(|r| r.jobs > 0 || r.shed > 0);
+        rows
+    }
+
+    /// Attach concrete sizing numbers to the memory hierarchy's "thrashing"
+    /// error: the pinned working set this configuration can demand —
+    /// `(devices × (prefetch_depth + 1) + 1) × max_shard`, every device
+    /// pinning one resident shard plus `prefetch_depth` staged ones, plus
+    /// one slot for the fetch in flight — alongside the DRAM actually
+    /// configured. Every other error passes through untouched.
+    fn enrich_thrashing(&self, e: HydraError) -> HydraError {
+        match e {
+            HydraError::Exec(msg) if msg.contains("thrashing") => {
+                let devices = self.devices.len();
+                let k = self.options.prefetch_depth;
+                let max_shard = self
+                    .tasks
+                    .iter()
+                    .flat_map(|t| t.shards.iter().map(|s| s.param_bytes))
+                    .max()
+                    .unwrap_or(0);
+                let need = (devices * (k + 1) + 1) as u64 * max_shard;
+                HydraError::Exec(format!(
+                    "{msg}; the pinned working set can reach \
+                     (devices x (prefetch_depth + 1) + 1) x max_shard = \
+                     ({devices} x {} + 1) x {max_shard} = {need} bytes \
+                     against {} bytes of configured DRAM",
+                    k + 1,
+                    self.memory.dram_capacity()
+                ))
+            }
+            other => other,
+        }
     }
 
     fn on_device_free(
@@ -795,6 +1060,7 @@ impl<'a> SharpEngine<'a> {
                 device,
                 speed: self.devices[device].spec.speed,
                 resident: Some(&resident),
+                tenant_gpu_secs: Some(&self.tenant_gpu_secs),
             };
             let picked = self
                 .scheduler
@@ -889,7 +1155,10 @@ impl<'a> SharpEngine<'a> {
                 None => {
                     // DRAM miss with nothing prefetched: stage the shard up
                     // from NVMe synchronously, charged on the NVMe link
-                    let fetch = self.memory.fetch_to_dram(unit.model, unit.shard)?;
+                    let fetch = match self.memory.fetch_to_dram(unit.model, unit.shard) {
+                        Ok(f) => f,
+                        Err(e) => return Err(self.enrich_thrashing(e)),
+                    };
                     if fetch.fetched_bytes > 0 {
                         obs.on_spill(
                             device,
@@ -981,6 +1250,10 @@ impl<'a> SharpEngine<'a> {
         obs: &mut dyn EngineObserver,
     ) -> Result<()> {
         self.units_executed += 1;
+        if self.tenant_meta {
+            let tenant = self.tasks[unit.model].tenant();
+            *tenant_slot(&mut self.tenant_units, tenant) += 1;
+        }
         self.devices[device].busy = false;
         self.free_devices += 1;
         self.devices[device]
@@ -1042,7 +1315,15 @@ impl<'a> SharpEngine<'a> {
             self.trace.makespan = end;
         }
         match kind {
-            IntervalKind::Compute => self.agg_compute += end - start,
+            IntervalKind::Compute => {
+                self.agg_compute += end - start;
+                // the WFQ virtual clock: tenants are charged on dispatch
+                // (the compute interval is recorded when the unit starts)
+                if self.tenant_meta {
+                    let tenant = self.tasks[unit.model].tenant();
+                    *tenant_slot(&mut self.tenant_gpu_secs, tenant) += end - start;
+                }
+            }
             IntervalKind::Transfer => self.agg_transfer += end - start,
             IntervalKind::BufferStall => self.agg_stall += end - start,
             IntervalKind::NvmeTransfer => self.agg_nvme += end - start,

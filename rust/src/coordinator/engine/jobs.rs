@@ -7,7 +7,7 @@ use crate::coordinator::task::{ModelTask, TaskState};
 use crate::error::{HydraError, Result};
 use crate::util::codec::{ByteReader, ByteWriter};
 
-use super::core::SharpEngine;
+use super::core::{tenant_slot, SharpEngine};
 use super::events::Event;
 
 /// A tenant-facing job-queue event: submissions and cancellations that take
@@ -68,8 +68,48 @@ impl JobEvent {
     }
 }
 
+/// A typed admission-control rejection, recorded in
+/// [`super::core::RunReport::sheds`] — the same make-the-drop-visible idiom
+/// as the sharded front door's `ShardBusy`. Carries no model id, so sharded
+/// merges concatenate sections without remapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// A submission was shed because its tenant already had `depth`
+    /// unfinished jobs queued (the configured
+    /// [`super::core::EngineOptions::admission_depth`] bound).
+    Shed {
+        /// Tenant whose queue was full.
+        tenant: usize,
+        /// The bound that was hit.
+        depth: usize,
+    },
+}
+
+impl Admission {
+    pub(crate) fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Admission::Shed { tenant, depth } => {
+                w.put_u8(0);
+                w.put_usize(*tenant);
+                w.put_usize(*depth);
+            }
+        }
+    }
+
+    pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<Admission> {
+        Ok(match r.get_u8()? {
+            0 => Admission::Shed { tenant: r.get_usize()?, depth: r.get_usize()? },
+            t => {
+                return Err(HydraError::WalCorrupt(format!(
+                    "unknown admission tag {t}"
+                )))
+            }
+        })
+    }
+}
+
 /// Per-job outcome statistics for the online setting.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct JobStat {
     /// Task id.
     pub model: usize,
@@ -91,6 +131,29 @@ pub struct JobStat {
     pub cancel_requested: Option<f64>,
     /// Units this job actually executed.
     pub units_executed: u64,
+    /// Whether admission control shed this job at submission: it finished
+    /// instantly with zero units and was never scheduled.
+    pub shed: bool,
+}
+
+/// Hand-rolled to match the pre-tenancy derive output: `shed` is appended
+/// only when set, so jobs from runs without admission control print exactly
+/// as they always did (part of the Debug-byte-identity compat proof).
+impl std::fmt::Debug for JobStat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = f.debug_struct("JobStat");
+        s.field("model", &self.model)
+            .field("name", &self.name)
+            .field("arrival", &self.arrival)
+            .field("finished", &self.finished)
+            .field("cancelled", &self.cancelled)
+            .field("cancel_requested", &self.cancel_requested)
+            .field("units_executed", &self.units_executed);
+        if self.shed {
+            s.field("shed", &self.shed);
+        }
+        s.finish()
+    }
 }
 
 impl JobStat {
@@ -121,6 +184,13 @@ impl<'a> SharpEngine<'a> {
     ) -> Result<()> {
         if self.finish_times[model].is_nan() {
             self.finish_times[model] = now;
+            // the tenant's queue-depth gauge drains here (shed jobs bypass
+            // this path entirely: they were never counted in)
+            if self.tenant_meta {
+                let slot =
+                    tenant_slot(&mut self.tenant_outstanding, self.tasks[model].tenant());
+                *slot = slot.saturating_sub(1);
+            }
             let bytes = Self::shard_bytes(&self.tasks[model]);
             self.memory.unhome_model(model, &bytes)?;
             obs.on_job_finished(model, now, self.job_cancelled[model]);
@@ -161,8 +231,34 @@ impl<'a> SharpEngine<'a> {
                 task.id
             )));
         }
+        // a submission carrying tenant metadata switches tenant accounting
+        // on for the rest of the run
+        self.tenant_meta |= task.has_tenant_meta();
+        // admission control: shed when the tenant's queue sits at its
+        // bound. The shed task keeps its dense id (later submissions stay
+        // valid) but finishes instantly with zero units — never homed,
+        // never eligible, never retiring anything.
+        if let Some(depth) = self.options.admission_depth {
+            let tenant = task.tenant();
+            if self.tenant_outstanding.get(tenant).copied().unwrap_or(0) >= depth {
+                obs.on_job_shed(id, &task.name, tenant, depth, now);
+                let mut task = task;
+                task.early_stop();
+                self.tasks.push(task);
+                self.job_cancelled.push(false);
+                self.cancel_requested.push(f64::NAN);
+                self.finish_times.push(now);
+                self.arrived.push(false);
+                self.sheds.push(Admission::Shed { tenant, depth });
+                self.shed_models.insert(id);
+                return Ok(());
+            }
+        }
         self.memory.home_model(task.id, &Self::shard_bytes(&task))?;
         obs.on_job_submitted(task.id, &task.name, now);
+        if self.tenant_meta {
+            *tenant_slot(&mut self.tenant_outstanding, task.tenant()) += 1;
+        }
         self.tasks.push(task);
         self.job_cancelled.push(false);
         self.cancel_requested.push(f64::NAN);

@@ -82,10 +82,10 @@ pub mod prefetch;
 pub mod routing;
 pub mod sharded;
 
-pub use self::core::{EngineOptions, ParallelMode, RunReport, SharpEngine};
+pub use self::core::{EngineOptions, ParallelMode, RunReport, SharpEngine, TenantStat};
 pub use self::device::{ClusterEvent, DeviceSpec};
 pub use self::events::QueueKind;
-pub use self::jobs::{JobEvent, JobStat};
+pub use self::jobs::{Admission, JobEvent, JobStat};
 pub use self::prefetch::{PrefetchPipeline, PrefetchSlot, StagedShard};
 pub use self::routing::{Route, ShardBusy, ShardId, ShardMailbox};
 pub use self::sharded::{

@@ -364,6 +364,7 @@ impl<'a> SharpEngine<'a> {
                 device,
                 speed: self.devices[device].spec.speed,
                 resident: Some(&resident),
+                tenant_gpu_secs: Some(&self.tenant_gpu_secs),
             };
             let picked = self
                 .scheduler

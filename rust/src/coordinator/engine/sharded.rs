@@ -39,9 +39,9 @@ use crate::coordinator::unit::ShardUnit;
 use crate::error::{HydraError, Result};
 use crate::exec::ExecutionBackend;
 
-use super::core::{EngineOptions, RunReport, SharpEngine};
+use super::core::{EngineOptions, RunReport, SharpEngine, TenantStat};
 use super::device::{ClusterEvent, DeviceSpec};
-use super::jobs::{JobEvent, JobStat};
+use super::jobs::{Admission, JobEvent, JobStat};
 use super::routing::{self, ShardId, ShardMailbox};
 
 /// Default bound of each shard's admission mailbox. Small enough that
@@ -522,6 +522,11 @@ impl EngineObserver for ShardScope<'_> {
         self.inner.on_job_submitted(m, name, now);
     }
 
+    fn on_job_shed(&mut self, model: usize, name: &str, tenant: usize, depth: usize, now: f64) {
+        let m = self.model(model);
+        self.inner.on_job_shed(m, name, tenant, depth, now);
+    }
+
     fn on_job_cancel_requested(&mut self, model: usize, now: f64) {
         let m = self.model(model);
         self.inner.on_job_cancel_requested(m, now);
@@ -576,6 +581,25 @@ fn merge_sections(sections: &[ShardSection]) -> RunReport {
     let n_jobs = sections.iter().map(|s| s.jobs.len()).sum();
     let mut trace = Trace::default();
     let mut jobs: Vec<Option<JobStat>> = vec![None; n_jobs];
+    // per-tenant sections fold like the scalar aggregates: counts add and
+    // GPU-seconds accumulate in shard order, so sharded totals conserve
+    // exactly against the sum of the sections
+    let mut tenants: Vec<TenantStat> = Vec::new();
+    fn tenant_row(rows: &mut Vec<TenantStat>, tenant: usize) -> &mut TenantStat {
+        for t in rows.len()..=tenant {
+            rows.push(TenantStat {
+                tenant: t,
+                jobs: 0,
+                gpu_secs: 0.0,
+                units: 0,
+                shed: 0,
+                slo_jobs: 0,
+                slo_met: 0,
+            });
+        }
+        &mut rows[tenant]
+    }
+    let mut sheds: Vec<Admission> = Vec::new();
     let mut makespan = 0.0f64;
     let (mut compute, mut transfer, mut stall, mut wait, mut nvme_secs) =
         (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
@@ -609,7 +633,19 @@ fn merge_sections(sections: &[ShardSection]) -> RunReport {
             stat.model = sec.jobs[local];
             jobs[stat.model] = Some(stat);
         }
+        for t in &r.tenants {
+            let row = tenant_row(&mut tenants, t.tenant);
+            row.jobs += t.jobs;
+            row.gpu_secs += t.gpu_secs;
+            row.units += t.units;
+            row.shed += t.shed;
+            row.slo_jobs += t.slo_jobs;
+            row.slo_met += t.slo_met;
+        }
+        // Admission carries no job id, so shard sheds concatenate directly
+        sheds.extend(r.sheds.iter().copied());
     }
+    tenants.retain(|t| t.jobs > 0 || t.shed > 0);
     trace.makespan = makespan;
     let device_secs = trace.device_seconds();
     let utilization = if device_secs > 0.0 { compute / device_secs } else { 0.0 };
@@ -635,5 +671,7 @@ fn merge_sections(sections: &[ShardSection]) -> RunReport {
             .into_iter()
             .map(|j| j.expect("every job routed to exactly one shard"))
             .collect(),
+        tenants,
+        sheds,
     }
 }

@@ -27,6 +27,23 @@ pub trait EngineObserver {
     /// known up front never emit this.
     fn on_job_submitted(&mut self, _model: usize, _name: &str, _now: f64) {}
 
+    /// A mid-run submission was rejected by admission control: its tenant
+    /// already had `depth` unfinished jobs queued
+    /// ([`crate::coordinator::engine::EngineOptions::admission_depth`]).
+    /// The job still occupies `model` in the dense id space but finishes
+    /// instantly with zero units; neither
+    /// [`EngineObserver::on_job_submitted`] nor
+    /// [`EngineObserver::on_job_arrived`] fires for it.
+    fn on_job_shed(
+        &mut self,
+        _model: usize,
+        _name: &str,
+        _tenant: usize,
+        _depth: usize,
+        _now: f64,
+    ) {
+    }
+
     /// A tenant requested cancellation of `model`
     /// ([`crate::coordinator::engine::jobs::JobEvent::Cancel`]). Fires on
     /// every request, idempotent duplicates included; the effect (if any)
@@ -111,6 +128,11 @@ impl EngineObserver for Tee<'_> {
     fn on_job_submitted(&mut self, model: usize, name: &str, now: f64) {
         self.0.on_job_submitted(model, name, now);
         self.1.on_job_submitted(model, name, now);
+    }
+
+    fn on_job_shed(&mut self, model: usize, name: &str, tenant: usize, depth: usize, now: f64) {
+        self.0.on_job_shed(model, name, tenant, depth, now);
+        self.1.on_job_shed(model, name, tenant, depth, now);
     }
 
     fn on_job_cancel_requested(&mut self, model: usize, now: f64) {

@@ -31,6 +31,11 @@ pub struct PickContext<'a> {
     /// (model, shard) already resident on this device, if any — lets
     /// affinity-aware policies exploit the §4.6 no-move bonus.
     pub resident: Option<&'a [(usize, u32)]>,
+    /// Accrued GPU-seconds per tenant (indexed by tenant id), maintained by
+    /// the engine as compute intervals are charged. [`WeightedFair`] orders
+    /// by virtual finish time over this slice; tenants past the end of the
+    /// slice (or a `None` slice) have accrued nothing yet.
+    pub tenant_gpu_secs: Option<&'a [f64]>,
 }
 
 /// A scheduling policy. Returns an index into `eligible`, or None to leave
@@ -204,6 +209,55 @@ impl Scheduler for AffinityLrtf {
 }
 
 // ---------------------------------------------------------------------------
+// Weighted fair queueing over accumulated GPU-seconds per tenant
+// ---------------------------------------------------------------------------
+
+/// Weighted fair queueing: pick the eligible job with the smallest *virtual
+/// finish time* `(accrued_gpu_secs[tenant] + front_cost) / weight`, ties
+/// broken by lower job id for determinism.
+///
+/// The accrued-GPU-seconds slice in [`PickContext`] is the per-tenant
+/// virtual clock: a tenant that has consumed more than its weighted share
+/// carries a later virtual time, so its jobs lose ties against starved
+/// tenants until the shares re-converge. Jobs without tenant metadata all
+/// sit in tenant 0 with weight 1.0, where the ordering degenerates to
+/// cheapest-front-unit-first with FIFO-by-id ties.
+#[derive(Debug, Default)]
+pub struct WeightedFair;
+
+impl Scheduler for WeightedFair {
+    fn name(&self) -> &'static str {
+        "weighted-fair"
+    }
+
+    fn pick(
+        &mut self,
+        eligible: &[ModelSnapshot],
+        ctx: PickContext<'_>,
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        let accrued = |tenant: usize| -> f64 {
+            ctx.tenant_gpu_secs
+                .and_then(|a| a.get(tenant))
+                .copied()
+                .unwrap_or(0.0)
+        };
+        let mut best: Option<(usize, f64, usize)> = None;
+        for (i, m) in eligible.iter().enumerate() {
+            let vft = (accrued(m.tenant) + m.front_cost) / m.weight;
+            let better = match best {
+                None => true,
+                Some((_, v, id)) => vft < v || (vft == v && m.id < id),
+            };
+            if better {
+                best = Some((i, vft, m.id));
+            }
+        }
+        best.map(|(i, _, _)| i)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Typed policy surface
 // ---------------------------------------------------------------------------
 
@@ -225,17 +279,21 @@ pub enum Policy {
     Srtf,
     /// Uniform random choice (paper baseline).
     Random,
+    /// Weighted fair queueing over accumulated per-tenant GPU-seconds
+    /// (multi-tenant extension).
+    WeightedFair,
 }
 
 impl Policy {
     /// Every policy, in presentation order (round-trip tested against
     /// [`Policy::from_str`]).
-    pub const ALL: [Policy; 5] = [
+    pub const ALL: [Policy; 6] = [
         Policy::ShardedLrtf,
         Policy::AffinityLrtf,
         Policy::Fifo,
         Policy::Srtf,
         Policy::Random,
+        Policy::WeightedFair,
     ];
 
     /// Canonical name (matches `Scheduler::name` of the built instance).
@@ -246,6 +304,7 @@ impl Policy {
             Policy::Fifo => "fifo",
             Policy::Srtf => "srtf",
             Policy::Random => "random",
+            Policy::WeightedFair => "weighted-fair",
         }
     }
 
@@ -257,6 +316,7 @@ impl Policy {
             Policy::Fifo => Box::new(FifoSched),
             Policy::Srtf => Box::new(SrtfSched),
             Policy::Random => Box::new(RandomSched),
+            Policy::WeightedFair => Box::new(WeightedFair),
         }
     }
 }
@@ -281,9 +341,10 @@ impl FromStr for Policy {
             "fifo" => Ok(Policy::Fifo),
             "srtf" => Ok(Policy::Srtf),
             "random" => Ok(Policy::Random),
+            "weighted-fair" | "wfq" => Ok(Policy::WeightedFair),
             other => Err(HydraError::Config(format!(
                 "unknown scheduler {other:?} (expected one of: sharded-lrtf, \
-                 affinity-lrtf, fifo, srtf, random)"
+                 affinity-lrtf, fifo, srtf, random, weighted-fair)"
             ))),
         }
     }
@@ -309,11 +370,19 @@ mod tests {
             front_shard: 0,
             front_phase: Phase::Fwd,
             arrival: 0.0,
+            tenant: 0,
+            weight: 1.0,
         }
     }
 
     fn ctx() -> PickContext<'static> {
-        PickContext { now: 0.0, device: 0, speed: 1.0, resident: None }
+        PickContext {
+            now: 0.0,
+            device: 0,
+            speed: 1.0,
+            resident: None,
+            tenant_gpu_secs: None,
+        }
     }
 
     #[test]
@@ -371,9 +440,68 @@ mod tests {
         assert!(picks1.iter().any(|&p| p != picks1[0])); // some variety
     }
 
+    fn tenant_snap(id: usize, tenant: usize, weight: f64, cost: f64) -> ModelSnapshot {
+        let mut s = snap(id, 10.0);
+        s.tenant = tenant;
+        s.weight = weight;
+        s.front_cost = cost;
+        s
+    }
+
+    #[test]
+    fn wfq_picks_smallest_virtual_finish_time() {
+        let mut s = WeightedFair;
+        // tenant 0 has burned 30 GPU-s, tenant 1 only 2: tenant 1 is owed
+        let accrued = [30.0, 2.0];
+        let c = PickContext {
+            now: 0.0,
+            device: 0,
+            speed: 1.0,
+            resident: None,
+            tenant_gpu_secs: Some(&accrued),
+        };
+        let es = [tenant_snap(0, 0, 1.0, 1.0), tenant_snap(1, 1, 1.0, 1.0)];
+        assert_eq!(s.pick(&es, c, &mut Rng::new(0)), Some(1));
+    }
+
+    #[test]
+    fn wfq_weight_scales_the_virtual_clock() {
+        let mut s = WeightedFair;
+        // both tenants at 10 accrued GPU-s, but tenant 0 carries weight 10:
+        // its virtual time (10+1)/10 = 1.1 beats tenant 1's (10+1)/1 = 11
+        let accrued = [10.0, 10.0];
+        let c = PickContext {
+            now: 0.0,
+            device: 0,
+            speed: 1.0,
+            resident: None,
+            tenant_gpu_secs: Some(&accrued),
+        };
+        let es = [tenant_snap(3, 1, 1.0, 1.0), tenant_snap(5, 0, 10.0, 1.0)];
+        assert_eq!(s.pick(&es, c, &mut Rng::new(0)), Some(1));
+    }
+
+    #[test]
+    fn wfq_ties_break_by_lower_job_id() {
+        let mut s = WeightedFair;
+        // identical tenants, weights and costs -> lowest id wins
+        let es = [tenant_snap(9, 0, 1.0, 2.0), tenant_snap(4, 0, 1.0, 2.0)];
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(1));
+    }
+
+    #[test]
+    fn wfq_without_accrual_slice_treats_tenants_as_fresh() {
+        let mut s = WeightedFair;
+        // no slice: every tenant's clock is 0, cheaper front unit wins
+        let es = [tenant_snap(0, 2, 1.0, 5.0), tenant_snap(1, 7, 1.0, 1.0)];
+        assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(1));
+    }
+
     #[test]
     fn empty_eligible_returns_none() {
-        for name in ["sharded-lrtf", "random", "fifo", "srtf", "affinity-lrtf"] {
+        for name in
+            ["sharded-lrtf", "random", "fifo", "srtf", "affinity-lrtf", "weighted-fair"]
+        {
             let mut s = by_name(name).unwrap();
             assert_eq!(s.pick(&[], ctx(), &mut Rng::new(0)), None, "{name}");
         }
@@ -384,7 +512,13 @@ mod tests {
         let mut s = AffinityLrtf;
         let es = [snap(0, 9.0), snap(1, 2.0)];
         let resident = [(1usize, 0u32)];
-        let c = PickContext { now: 0.0, device: 0, speed: 1.0, resident: Some(&resident) };
+        let c = PickContext {
+            now: 0.0,
+            device: 0,
+            speed: 1.0,
+            resident: Some(&resident),
+            tenant_gpu_secs: None,
+        };
         assert_eq!(s.pick(&es, c, &mut Rng::new(0)), Some(1));
         // without residency info falls back to LRTF
         assert_eq!(s.pick(&es, ctx(), &mut Rng::new(0)), Some(0));

@@ -8,10 +8,10 @@
 //! existing `coordinator::sharp::...` call site compiles unchanged.
 
 pub use crate::coordinator::engine::{
-    ClusterEvent, DeviceSpec, EngineOptions, JobEvent, JobStat, ParallelMode,
-    PrefetchPipeline, PrefetchSlot, QueueKind, Route, RunReport, ShardBusy,
-    ShardId, ShardMailbox, ShardOutcome, ShardSection, SharpEngine,
-    ShardedEngine, ShardedReport, StagedShard,
+    Admission, ClusterEvent, DeviceSpec, EngineOptions, JobEvent, JobStat,
+    ParallelMode, PrefetchPipeline, PrefetchSlot, QueueKind, Route, RunReport,
+    ShardBusy, ShardId, ShardMailbox, ShardOutcome, ShardSection, SharpEngine,
+    ShardedEngine, ShardedReport, StagedShard, TenantStat,
 };
 
 pub use crate::coordinator::memory::TransferModel;

@@ -129,7 +129,22 @@ pub struct ModelTask {
     remaining_time: f64,
     /// Completed-unit counter (== next_idx unless a unit is in flight).
     completed: u64,
+    /// Owning tenant (0 = the default single-tenant namespace). Tenant ids
+    /// index dense per-tenant accounting vectors in the engine, so they must
+    /// stay small — [`ModelTask::with_tenant`] enforces a bound.
+    tenant: usize,
+    /// Weighted-fair-queueing weight of this job (1.0 = the default). A
+    /// tenant's GPU-second share under `Policy::WeightedFair` converges to
+    /// its weight's fraction of the active weight sum.
+    weight: f64,
+    /// Optional latency SLO: the job meets its deadline when it finishes
+    /// within `deadline` virtual seconds of its arrival (NaN = no SLO).
+    deadline: f64,
 }
+
+/// Upper bound on tenant ids: they index dense per-tenant vectors in the
+/// engine, so an absurd id would be an accidental giant allocation.
+pub const MAX_TENANT_ID: usize = 1 << 20;
 
 impl ModelTask {
     /// A training task over `shards`, running `epochs` x
@@ -163,6 +178,9 @@ impl ModelTask {
             state: TaskState::Idle,
             remaining_time,
             completed: 0,
+            tenant: 0,
+            weight: 1.0,
+            deadline: f64::NAN,
         }
     }
 
@@ -192,6 +210,9 @@ impl ModelTask {
             state: TaskState::Idle,
             remaining_time,
             completed: 0,
+            tenant: 0,
+            weight: 1.0,
+            deadline: f64::NAN,
         }
     }
 
@@ -204,9 +225,56 @@ impl ModelTask {
         self
     }
 
+    /// Assign the job to `tenant` with weighted-fair-queueing weight
+    /// `weight` (builder style). The defaults — tenant 0, weight 1.0 —
+    /// mean "no tenant metadata": setting them explicitly is a no-op.
+    ///
+    /// Panics if `tenant` exceeds [`MAX_TENANT_ID`] or `weight` is not a
+    /// finite positive number (mirroring [`ModelTask::with_arrival`]).
+    pub fn with_tenant(mut self, tenant: usize, weight: f64) -> ModelTask {
+        assert!(tenant <= MAX_TENANT_ID, "bad tenant id {tenant}");
+        assert!(weight.is_finite() && weight > 0.0, "bad tenant weight {weight}");
+        self.tenant = tenant;
+        self.weight = weight;
+        self
+    }
+
+    /// Set a latency SLO (builder style): the job meets its deadline when
+    /// it finishes within `deadline` virtual seconds of its arrival.
+    ///
+    /// Panics if `deadline` is not a finite positive number.
+    pub fn with_deadline(mut self, deadline: f64) -> ModelTask {
+        assert!(deadline.is_finite() && deadline > 0.0, "bad deadline {deadline}");
+        self.deadline = deadline;
+        self
+    }
+
     /// Virtual time this job enters the system.
     pub fn arrival(&self) -> f64 {
         self.arrival
+    }
+
+    /// Owning tenant (0 = the default namespace).
+    pub fn tenant(&self) -> usize {
+        self.tenant
+    }
+
+    /// Weighted-fair-queueing weight (1.0 = the default).
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Latency SLO in seconds from arrival, if one was set.
+    pub fn deadline(&self) -> Option<f64> {
+        self.deadline.is_finite().then_some(self.deadline)
+    }
+
+    /// Whether this job carries any tenant metadata — a non-default tenant,
+    /// weight, or an SLO. Reports only grow a per-tenant section when some
+    /// job (or the admission option) opts in, keeping metadata-free runs
+    /// Debug-byte-identical to pre-tenant reports.
+    pub fn has_tenant_meta(&self) -> bool {
+        self.tenant != 0 || self.weight != 1.0 || self.deadline.is_finite()
     }
 
     /// Current lifecycle state.
@@ -314,6 +382,9 @@ impl ModelTask {
         self.state.encode(w);
         w.put_f64(self.remaining_time);
         w.put_u64(self.completed);
+        w.put_usize(self.tenant);
+        w.put_f64(self.weight);
+        w.put_f64(self.deadline);
     }
 
     pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<ModelTask> {
@@ -349,6 +420,17 @@ impl ModelTask {
             state: TaskState::decode(r)?,
             remaining_time: r.get_f64()?,
             completed: r.get_u64()?,
+            tenant: {
+                let t = r.get_usize()?;
+                if t > MAX_TENANT_ID {
+                    return Err(HydraError::WalCorrupt(format!(
+                        "implausible tenant id {t}"
+                    )));
+                }
+                t
+            },
+            weight: r.get_f64()?,
+            deadline: r.get_f64()?,
         })
     }
 }
@@ -371,6 +453,11 @@ pub struct ModelSnapshot {
     /// Arrival time of the job (0.0 for batch workloads). Lets FIFO order
     /// by true arrival under online submissions instead of model id.
     pub arrival: f64,
+    /// Owning tenant — indexes the per-tenant accrued-GPU-seconds slice a
+    /// `PickContext` carries for weighted-fair policies.
+    pub tenant: usize,
+    /// Weighted-fair-queueing weight of the job.
+    pub weight: f64,
 }
 
 impl ModelSnapshot {
@@ -388,6 +475,8 @@ impl ModelSnapshot {
             front_shard: u.shard,
             front_phase: u.phase,
             arrival: task.arrival(),
+            tenant: task.tenant(),
+            weight: task.weight(),
         })
     }
 }
@@ -483,6 +572,51 @@ mod tests {
     #[should_panic(expected = "bad arrival")]
     fn negative_arrival_panics() {
         let _ = mk_task(1, 1, 1).with_arrival(-1.0);
+    }
+
+    #[test]
+    fn tenant_metadata_defaults_off_and_builds() {
+        let t = mk_task(1, 1, 1);
+        assert_eq!(t.tenant(), 0);
+        assert_eq!(t.weight(), 1.0);
+        assert!(t.deadline().is_none());
+        assert!(!t.has_tenant_meta());
+        // setting the defaults explicitly is still "no metadata"
+        assert!(!mk_task(1, 1, 1).with_tenant(0, 1.0).has_tenant_meta());
+        let t = t.with_tenant(3, 2.5).with_deadline(60.0);
+        assert!(t.has_tenant_meta());
+        assert_eq!(t.tenant(), 3);
+        assert_eq!(t.weight(), 2.5);
+        assert_eq!(t.deadline(), Some(60.0));
+        let s = ModelSnapshot::of(&t).unwrap();
+        assert_eq!((s.tenant, s.weight), (3, 2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad tenant weight")]
+    fn zero_weight_panics() {
+        let _ = mk_task(1, 1, 1).with_tenant(1, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad deadline")]
+    fn nan_deadline_panics() {
+        let _ = mk_task(1, 1, 1).with_deadline(f64::NAN);
+    }
+
+    #[test]
+    fn codec_round_trips_tenant_metadata() {
+        let t = mk_task(1, 2, 1).with_tenant(7, 4.0).with_deadline(120.0);
+        let mut w = ByteWriter::new();
+        t.encode(&mut w);
+        let buf = w.into_inner();
+        let mut r = ByteReader::new(&buf);
+        let back = ModelTask::decode(&mut r).unwrap();
+        r.expect_end().unwrap();
+        assert_eq!(format!("{t:?}"), format!("{back:?}"));
+        assert_eq!(back.tenant(), 7);
+        assert_eq!(back.weight(), 4.0);
+        assert_eq!(back.deadline(), Some(120.0));
     }
 
     #[test]

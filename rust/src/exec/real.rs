@@ -46,6 +46,16 @@ pub struct RealModelSpec {
     /// engine keeps the job out of the eligible set until this time passes
     /// — the online multi-tenant setting.
     pub arrival: f64,
+    /// Owning tenant (0 = default tenant). Drives weighted-fair scheduling,
+    /// per-tenant report sections and admission control.
+    pub tenant: usize,
+    /// Fair-share weight under the `weighted-fair` scheduler (must be
+    /// finite and > 0; 1.0 = equal share).
+    pub weight: f64,
+    /// Optional latency SLO: the job meets its deadline iff
+    /// `finish - arrival <= deadline`. Attainment lands in the report's
+    /// per-tenant section.
+    pub deadline: Option<f64>,
 }
 
 /// A model layer at shard granularity.
@@ -181,7 +191,12 @@ impl RealBackend {
                     spec.lr,
                 )
             }
-            .with_arrival(spec.arrival);
+            .with_arrival(spec.arrival)
+            .with_tenant(spec.tenant, spec.weight);
+            let task = match spec.deadline {
+                Some(d) => task.with_deadline(d),
+                None => task,
+            };
 
             let mut rng = Rng::new(spec.seed);
             let params: Vec<Vec<HostTensor>> = layers

@@ -1387,6 +1387,165 @@ pub fn ext_durability() -> Result<FigureOutput> {
     })
 }
 
+/// ext-fairness: one hot tenant (weight 10) flooding 12 jobs at t=0 against
+/// three background tenants (weight 1) with one job each, under FIFO vs
+/// weighted fair queueing. FIFO serves the flood in submission order and
+/// starves the background; WFQ bounds the hot tenant to its weighted share
+/// (10/13 of GPU-seconds while every tenant is backlogged) and the
+/// background tenants' latency SLOs recover. The SLO deadline is calibrated
+/// between the two policies' background latencies so attainment separates
+/// them cleanly.
+pub fn ext_fairness() -> Result<FigureOutput> {
+    use crate::coordinator::metrics::IntervalKind;
+
+    const HOT_JOBS: usize = 12;
+    const BG_TENANTS: usize = 3;
+    const HOT_WEIGHT: f64 = 10.0;
+    let n_jobs = HOT_JOBS + BG_TENANTS;
+    let devices = 4usize;
+    let gpu = GpuSpec::rtx2080ti();
+
+    // identical jobs so GPU-second shares compare directly; the hot tenant
+    // owns the first 12 ids (submission order = FIFO order)
+    let mut grid = uniform_grid(n_jobs, 300_000_000, 8, 1, 4);
+    for (i, w) in grid.iter_mut().enumerate() {
+        if i < HOT_JOBS {
+            w.tenant = 0;
+            w.weight = HOT_WEIGHT;
+        } else {
+            w.tenant = 1 + (i - HOT_JOBS);
+            w.weight = 1.0;
+        }
+        w.name = format!("t{}-job{i}", w.tenant);
+    }
+    let tenant_of: Vec<usize> = grid.iter().map(|w| w.tenant).collect();
+
+    let run = |policy: Policy, ws: &[crate::sim::WorkloadModel]| -> Result<RunReport> {
+        let tasks = build_tasks(ws, &gpu, paper_policy())?;
+        let opts = EngineOptions {
+            buffer_frac: PAPER_BUFFER_FRAC,
+            transfer: TransferModel::pcie_gen3(),
+            record_intervals: true,
+            ..Default::default()
+        };
+        sim_run(tasks, Cluster::uniform(devices, gpu.mem_bytes, DRAM), policy, opts)
+    };
+
+    // the hot tenant's GPU-second share over the window where every tenant
+    // still has queued work (ends when the first tenant drains)
+    let hot_share = |r: &RunReport| -> f64 {
+        let mut last = vec![0.0f64; 1 + BG_TENANTS];
+        for (m, j) in r.jobs.iter().enumerate() {
+            if j.finished.is_finite() {
+                last[tenant_of[m]] = last[tenant_of[m]].max(j.finished);
+            }
+        }
+        let t_end = last.iter().copied().fold(f64::INFINITY, f64::min);
+        let (mut hot, mut total) = (0.0, 0.0);
+        for iv in &r.trace.intervals {
+            if iv.kind != IntervalKind::Compute {
+                continue;
+            }
+            let end = iv.end.min(t_end);
+            if end <= iv.start {
+                continue;
+            }
+            total += end - iv.start;
+            if tenant_of[iv.model] == 0 {
+                hot += end - iv.start;
+            }
+        }
+        if total > 0.0 {
+            hot / total
+        } else {
+            0.0
+        }
+    };
+    let bg_latencies = |r: &RunReport| -> Vec<f64> {
+        r.jobs
+            .iter()
+            .enumerate()
+            .filter(|(m, _)| tenant_of[*m] != 0)
+            .map(|(_, j)| j.latency())
+            .collect()
+    };
+
+    // calibration pass (no SLO): pick a deadline between WFQ's worst and
+    // FIFO's best background latency
+    let cal_wfq = run(Policy::WeightedFair, &grid)?;
+    let cal_fifo = run(Policy::Fifo, &grid)?;
+    let wfq_worst = bg_latencies(&cal_wfq).into_iter().fold(0.0, f64::max);
+    let fifo_best =
+        bg_latencies(&cal_fifo).into_iter().fold(f64::INFINITY, f64::min);
+    let deadline = 0.5 * (wfq_worst + fifo_best);
+
+    let mut slo_grid = grid.clone();
+    for w in &mut slo_grid {
+        w.deadline = Some(deadline);
+    }
+
+    let mut lines = vec![format!(
+        "SLO deadline {:.2}h (calibrated between the policies' background latencies)",
+        deadline / 3600.0
+    )];
+    let mut csv =
+        String::from("policy,hot_share_window,bg_slo_attainment,makespan_h\n");
+    for policy in [Policy::Fifo, Policy::WeightedFair] {
+        let r = run(policy, &slo_grid)?;
+        let share = hot_share(&r);
+        let (mut bg_slo_jobs, mut bg_slo_met) = (0usize, 0usize);
+        lines.push(format!(
+            "{:<14} hot share {:5.1}% (target {:5.1}%) | makespan {}",
+            policy.name(),
+            100.0 * share,
+            100.0 * HOT_WEIGHT / (HOT_WEIGHT + BG_TENANTS as f64),
+            hours(r.makespan),
+        ));
+        lines.push(format!(
+            "  {:<8} {:>6} {:>12} {:>8} {:>6} {:>8}",
+            "tenant", "jobs", "gpu-secs", "units", "shed", "slo"
+        ));
+        for t in &r.tenants {
+            if t.tenant != 0 {
+                bg_slo_jobs += t.slo_jobs;
+                bg_slo_met += t.slo_met;
+            }
+            lines.push(format!(
+                "  {:<8} {:>6} {:>12.1} {:>8} {:>6} {:>7.0}%",
+                t.tenant,
+                t.jobs,
+                t.gpu_secs,
+                t.units,
+                t.shed,
+                100.0 * t.slo_attainment().unwrap_or(0.0),
+            ));
+        }
+        let bg_att = bg_slo_met as f64 / bg_slo_jobs.max(1) as f64;
+        csv.push_str(&format!(
+            "{},{share},{bg_att},{}\n",
+            policy.name(),
+            r.makespan / 3600.0
+        ));
+    }
+    lines.push(
+        "(1 hot tenant floods 12 jobs at t=0; 3 background tenants submit \
+         1 job each."
+            .into(),
+    );
+    lines.push(
+        " Shares are measured while every tenant is backlogged; FIFO gives \
+         the flood"
+            .into(),
+    );
+    lines.push(" everything, WFQ holds it to weight/total = 10/13.)".into());
+    Ok(FigureOutput {
+        id: "ext_fairness",
+        title: "Extension: weighted fairness under a hot-tenant flood".into(),
+        lines,
+        csv,
+    })
+}
+
 /// All figure generators by id.
 pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
     match id {
@@ -1406,13 +1565,14 @@ pub fn by_id(id: &str, bnb_budget: Duration) -> Option<Result<FigureOutput>> {
         "ext_prefetch" => Some(ext_prefetch()),
         "ext_sharding" => Some(ext_sharding()),
         "ext_durability" => Some(ext_durability()),
+        "ext_fairness" => Some(ext_fairness()),
         _ => None,
     }
 }
 
 /// Every figure/table id, in presentation order.
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "table2", "fig6", "fig7", "fig8", "fig9a", "fig9b", "fig10", "table3",
     "ext_sched", "ext_buffer", "ext_online", "ext_hierarchy", "ext_selection",
-    "ext_prefetch", "ext_sharding", "ext_durability",
+    "ext_prefetch", "ext_sharding", "ext_durability", "ext_fairness",
 ];

@@ -31,8 +31,9 @@ use hydra::runtime::Manifest;
 use hydra::selection::{Algo, Search, SearchReport, SearchSpace, TrialState};
 use hydra::session::{Backend, Policy, Session};
 use hydra::sim::{
-    build_tasks, build_tasks_pool, parse_pool, poisson_mixed_tenants,
-    pool_reference, uniform_grid, GpuSpec,
+    build_tasks, build_tasks_pool, bursty_mixed_tenants,
+    diurnal_mixed_tenants, parse_pool, poisson_mixed_tenants, pool_reference,
+    uniform_grid, GpuSpec,
 };
 use hydra::train::optimizer::OptKind;
 use hydra::util::cli::Args;
@@ -62,7 +63,11 @@ USAGE:
                 [--wal run.wal] [--snapshot-every 4096]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
-                [--scheduler sharded-lrtf] [--progress] [--gantt]
+                [--arrivals poisson|diurnal|bursty] [--burst-factor 20]
+                [--tenants N | --tenant-weights 10,1,1] [--slo <secs>]
+                [--admission-depth K]
+                [--scheduler sharded-lrtf|weighted-fair|...]
+                [--progress] [--gantt]
                 [--queue heap|scan|calendar]
                 [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
                 [--nvme <cap-gib>[:<gbps>]]
@@ -72,7 +77,7 @@ USAGE:
                 [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
                 [--grid-points 3] [--seed 7] [--stagger 0]
                 [--scheduler sharded-lrtf] [--queue heap|scan|calendar]
-                [--prefetch-depth 1] [--shards 1]
+                [--prefetch-depth 1] [--shards 1] [--admission-depth K]
                 [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
                 [--wal search.wal] [--snapshot-every 4096]
                 | --spec search.json
@@ -130,7 +135,22 @@ fn engine_options(args: &Args) -> Result<EngineOptions, String> {
     if shards == 0 {
         return Err("shards must be >= 1".into());
     }
+    let admission_depth = match args.opt("admission-depth") {
+        Some(v) => {
+            let d: usize = v
+                .parse()
+                .map_err(|_| format!("--admission-depth: bad integer {v:?}"))?;
+            if d == 0 {
+                return Err("--admission-depth must be >= 1 (omit the flag \
+                            to disable admission control)"
+                    .into());
+            }
+            Some(d)
+        }
+        None => None,
+    };
     Ok(EngineOptions {
+        admission_depth,
         mode: if args.flag("sequential") {
             ParallelMode::Sequential
         } else {
@@ -258,6 +278,9 @@ fn cmd_train(args: &Args) -> CliResult {
             seed: 1000 + i as u64,
             inference: false,
             arrival: 0.0,
+            tenant: 0,
+            weight: 1.0,
+            deadline: None,
         })?;
     }
     println!(
@@ -414,7 +437,69 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
     let nvme = args.opt("nvme").map(TierSpec::parse).transpose()?;
     let pool = parse_pool(&args.opt_or("pool", "a4000:4,a6000:4"))?;
 
-    let stream = poisson_mixed_tenants(jobs, rate, seed, mbs);
+    let arrivals = args.opt_or("arrivals", "poisson");
+    let mut stream = match arrivals.as_str() {
+        "poisson" => poisson_mixed_tenants(jobs, rate, seed, mbs),
+        "diurnal" => diurnal_mixed_tenants(jobs, rate, seed, mbs),
+        "bursty" => bursty_mixed_tenants(
+            jobs,
+            rate,
+            args.opt_f64("burst-factor", 20.0)?,
+            seed,
+            mbs,
+        ),
+        other => {
+            return Err(format!(
+                "unknown --arrivals {other:?} (poisson|diurnal|bursty)"
+            )
+            .into())
+        }
+    };
+    // --tenant-weights gives per-tenant fair-share weights (and implies the
+    // tenant count); --tenants N is the equal-weight shorthand; --slo
+    // applies a uniform deadline. Jobs go to tenants round-robin.
+    let weights: Option<Vec<f64>> = match args.opt("tenant-weights") {
+        Some(s) => {
+            let w: Vec<f64> = s
+                .split(',')
+                .map(|v| {
+                    v.parse::<f64>().map_err(|_| {
+                        format!("--tenant-weights: bad weight {v:?}")
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            if w.is_empty() || w.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+                return Err(
+                    "--tenant-weights must be finite and > 0".into()
+                );
+            }
+            Some(w)
+        }
+        None => args
+            .opt("tenants")
+            .map(|v| -> Result<Vec<f64>, String> {
+                let n: usize = v
+                    .parse()
+                    .map_err(|_| format!("--tenants: bad integer {v:?}"))?;
+                if n == 0 {
+                    return Err("--tenants must be >= 1".into());
+                }
+                Ok(vec![1.0; n])
+            })
+            .transpose()?,
+    };
+    let slo = args
+        .opt("slo")
+        .map(|v| {
+            v.parse::<f64>()
+                .map_err(|_| format!("--slo: bad seconds {v:?}"))
+        })
+        .transpose()?;
+    if let Some(w) = &weights {
+        hydra::sim::assign_tenants(&mut stream, w, slo);
+    } else if slo.is_some() {
+        hydra::sim::assign_tenants(&mut stream, &[1.0], slo);
+    }
     let (tasks, specs) = build_tasks_pool(
         &stream,
         &pool,
@@ -445,7 +530,7 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
     let r = report.run;
 
     println!(
-        "{jobs} tenant jobs (Poisson, {rate}/h) over {n_devices} heterogeneous devices:"
+        "{jobs} tenant jobs ({arrivals}, {rate}/h) over {n_devices} heterogeneous devices:"
     );
     println!(
         "  makespan {:.2}h | utilization {:.1}% | {} units executed",
@@ -467,6 +552,22 @@ fn cmd_simulate_online(args: &Args) -> CliResult {
             j.latency() / 60.0,
             j.units_executed
         );
+    }
+    if !r.tenants.is_empty() {
+        println!(
+            "  {:<8} {:>6} {:>12} {:>8} {:>6} {:>8}",
+            "tenant", "jobs", "gpu-secs", "units", "shed", "slo"
+        );
+        for t in &r.tenants {
+            let slo = match t.slo_attainment() {
+                Some(a) => format!("{:.0}%", 100.0 * a),
+                None => "-".into(),
+            };
+            println!(
+                "  {:<8} {:>6} {:>12.1} {:>8} {:>6} {:>8}",
+                t.tenant, t.jobs, t.gpu_secs, t.units, t.shed, slo
+            );
+        }
     }
     if args.flag("gantt") {
         println!("{}", r.trace.gantt(100));
@@ -555,6 +656,9 @@ fn cmd_search(args: &Args) -> CliResult {
                     r#", "snapshot_every": {}"#,
                     d.snapshot_every
                 ));
+            }
+            if let Some(k) = opts.admission_depth {
+                engine.push_str(&format!(r#", "admission_depth": {k}"#));
             }
             if args.flag("sequential") {
                 engine.push_str(r#", "sequential": true"#);
@@ -744,6 +848,9 @@ fn cmd_partition(args: &Args) -> CliResult {
             seed: 0,
             inference: false,
             arrival: 0.0,
+            tenant: 0,
+            weight: 1.0,
+            deadline: None,
         }],
         (mem_mib as u64) << 20,
         PartitionPolicy::default(),

@@ -259,6 +259,15 @@ impl SessionBuilder {
     /// Validate the cluster and produce the [`Session`].
     pub fn build(self) -> Result<Session> {
         self.cluster.validate()?;
+        // more shards than devices would round-robin empty device slices
+        // into deviceless shard engines — jobs routed there could never run
+        if self.options.shards > self.cluster.devices.len() {
+            return Err(HydraError::Config(format!(
+                "{} shards over {} devices (each shard needs at least one device)",
+                self.options.shards,
+                self.cluster.devices.len()
+            )));
+        }
         let memory = self
             .memory
             .unwrap_or(MemoryOptions::dram_only(self.cluster.dram_bytes));
@@ -501,6 +510,18 @@ impl Session {
                  backend's measured wallclock is not replayable)"
                     .into(),
             ));
+        }
+        // a NaN time would poison the event queue's (time, seq) total
+        // order — the same boundary check submit_at/cancel_at make
+        for ev in &cluster_events {
+            let time = match ev {
+                ClusterEvent::Arrive { time, .. } | ClusterEvent::Fail { time, .. } => *time,
+            };
+            if !time.is_finite() || time < 0.0 {
+                return Err(HydraError::Config(format!(
+                    "bad cluster-event time {time}"
+                )));
+            }
         }
 
         // Engine model ids: construction jobs first in submission order,
@@ -862,6 +883,9 @@ mod tests {
                 seed: 0,
                 inference: false,
                 arrival: 0.0,
+                tenant: 0,
+                weight: 1.0,
+                deadline: None,
             })
             .unwrap_err();
         assert!(matches!(err, HydraError::Config(_)), "{err:?}");

@@ -9,6 +9,7 @@ pub mod workload;
 
 pub use cost::{pool_reference, GpuSpec, PaperModel};
 pub use workload::{
-    bert_grid, build_tasks, build_tasks_pool, mixed_pool, parse_pool,
+    assign_tenants, bert_grid, build_tasks, build_tasks_pool,
+    bursty_mixed_tenants, diurnal_mixed_tenants, mixed_pool, parse_pool,
     poisson_mixed_tenants, uniform_grid, vit_grid, WorkloadModel,
 };

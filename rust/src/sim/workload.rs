@@ -22,6 +22,12 @@ pub struct WorkloadModel {
     pub minibatches_per_epoch: u32,
     /// Virtual arrival time in seconds (0.0 = batch workload).
     pub arrival: f64,
+    /// Owning tenant (0 = default tenant).
+    pub tenant: usize,
+    /// Fair-share weight under the weighted-fair scheduler (1.0 = equal).
+    pub weight: f64,
+    /// Optional latency SLO in virtual seconds after arrival.
+    pub deadline: Option<f64>,
 }
 
 /// Table 2 row 1: BERT-Large* hyperparameter grid — batch {8,16,32} x
@@ -42,6 +48,9 @@ pub fn bert_grid(minibatches_per_epoch: u32) -> Vec<WorkloadModel> {
                 minibatches_per_epoch: (minibatches_per_epoch * 8 / batch as u32)
                     .max(1),
                 arrival: 0.0,
+                tenant: 0,
+                weight: 1.0,
+                deadline: None,
             });
         }
     }
@@ -70,6 +79,9 @@ pub fn vit_grid(minibatches_per_epoch: u32) -> Vec<WorkloadModel> {
                     / batch as u32)
                     .max(1),
                 arrival: 0.0,
+                tenant: 0,
+                weight: 1.0,
+                deadline: None,
             });
         }
     }
@@ -92,6 +104,9 @@ pub fn uniform_grid(
             epochs,
             minibatches_per_epoch,
             arrival: 0.0,
+            tenant: 0,
+            weight: 1.0,
+            deadline: None,
         })
         .collect()
 }
@@ -112,33 +127,137 @@ pub fn poisson_mixed_tenants(
     let mut t = 0.0f64;
     let mut out = Vec::new();
     for i in 0..n {
-        // inverse-CDF exponential sample; uniform() < 1.0 keeps ln finite
-        t += -(1.0 - rng.uniform()).ln() * mean_gap_secs;
-        let w = if i % 2 == 0 {
-            let batch = [8usize, 16, 32][rng.below(3) as usize];
-            let params = [600_000_000u64, 1_000_000_000][rng.below(2) as usize];
-            WorkloadModel {
-                name: format!("tenant{i}-bert-{}m-b{batch}", params / 1_000_000),
-                model: PaperModel::bert_like(params, batch),
-                epochs: 1,
-                minibatches_per_epoch,
-                arrival: t,
-            }
-        } else {
-            let batch = [512usize, 1024][rng.below(2) as usize];
-            let params =
-                [300_000_000u64, 800_000_000, 1_500_000_000][rng.below(3) as usize];
-            WorkloadModel {
-                name: format!("tenant{i}-vit-{}m-b{batch}", params / 1_000_000),
-                model: PaperModel::vit_like(params, batch),
-                epochs: 1,
-                minibatches_per_epoch,
-                arrival: t,
-            }
-        };
-        out.push(w);
+        t += exp_sample(&mut rng, mean_gap_secs);
+        out.push(mixed_job(i, t, &mut rng, minibatches_per_epoch));
     }
     out
+}
+
+/// Inverse-CDF exponential sample; `uniform() < 1.0` keeps ln finite.
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    -(1.0 - rng.uniform()).ln() * mean
+}
+
+/// One job of the mixed BERT/ViT stream arriving at `t` (even indexes are
+/// BERT-style language models, odd indexes ViT-style vision models).
+fn mixed_job(
+    i: usize,
+    t: f64,
+    rng: &mut Rng,
+    minibatches_per_epoch: u32,
+) -> WorkloadModel {
+    if i % 2 == 0 {
+        let batch = [8usize, 16, 32][rng.below(3) as usize];
+        let params = [600_000_000u64, 1_000_000_000][rng.below(2) as usize];
+        WorkloadModel {
+            name: format!("tenant{i}-bert-{}m-b{batch}", params / 1_000_000),
+            model: PaperModel::bert_like(params, batch),
+            epochs: 1,
+            minibatches_per_epoch,
+            arrival: t,
+            tenant: 0,
+            weight: 1.0,
+            deadline: None,
+        }
+    } else {
+        let batch = [512usize, 1024][rng.below(2) as usize];
+        let params =
+            [300_000_000u64, 800_000_000, 1_500_000_000][rng.below(3) as usize];
+        WorkloadModel {
+            name: format!("tenant{i}-vit-{}m-b{batch}", params / 1_000_000),
+            model: PaperModel::vit_like(params, batch),
+            epochs: 1,
+            minibatches_per_epoch,
+            arrival: t,
+            tenant: 0,
+            weight: 1.0,
+            deadline: None,
+        }
+    }
+}
+
+/// Diurnal variant of [`poisson_mixed_tenants`]: the arrival rate follows a
+/// 24-hour sinusoid around `mean_rate_per_hour` (peak ~1.8x the mean at
+/// virtual 6h, trough ~0.2x at 18h), the day/night load cycle of a shared
+/// training cluster. Each inter-arrival gap is an exponential sample at the
+/// instantaneous rate. Deterministic for a given `seed`.
+pub fn diurnal_mixed_tenants(
+    n: usize,
+    mean_rate_per_hour: f64,
+    seed: u64,
+    minibatches_per_epoch: u32,
+) -> Vec<WorkloadModel> {
+    assert!(mean_rate_per_hour > 0.0, "rate must be positive");
+    const DAY_SECS: f64 = 86_400.0;
+    const AMPLITUDE: f64 = 0.8;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    for i in 0..n {
+        let phase = (2.0 * std::f64::consts::PI * t / DAY_SECS).sin();
+        let rate = (mean_rate_per_hour * (1.0 + AMPLITUDE * phase)).max(1e-3);
+        t += exp_sample(&mut rng, 3600.0 / rate);
+        out.push(mixed_job(i, t, &mut rng, minibatches_per_epoch));
+    }
+    out
+}
+
+/// Bursty variant of [`poisson_mixed_tenants`]: a two-state Markov-modulated
+/// Poisson process. The stream alternates between a quiet state (Poisson at
+/// `rate_per_hour`, mean sojourn 30 virtual minutes) and a burst state
+/// (Poisson at `burst_factor * rate_per_hour`, mean sojourn 5 minutes), with
+/// exponentially distributed sojourns. Memorylessness lets the gap be
+/// resampled at each state flip without biasing the process. Deterministic
+/// for a given `seed`.
+pub fn bursty_mixed_tenants(
+    n: usize,
+    rate_per_hour: f64,
+    burst_factor: f64,
+    seed: u64,
+    minibatches_per_epoch: u32,
+) -> Vec<WorkloadModel> {
+    assert!(rate_per_hour > 0.0, "rate must be positive");
+    assert!(burst_factor >= 1.0, "burst_factor must be >= 1");
+    const QUIET_SOJOURN_SECS: f64 = 1800.0;
+    const BURST_SOJOURN_SECS: f64 = 300.0;
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    let mut burst = false;
+    let mut state_end = exp_sample(&mut rng, QUIET_SOJOURN_SECS);
+    let mut out = Vec::new();
+    for i in 0..n {
+        loop {
+            let rate = if burst { rate_per_hour * burst_factor } else { rate_per_hour };
+            let gap = exp_sample(&mut rng, 3600.0 / rate);
+            if t + gap <= state_end {
+                t += gap;
+                break;
+            }
+            t = state_end;
+            burst = !burst;
+            let mean = if burst { BURST_SOJOURN_SECS } else { QUIET_SOJOURN_SECS };
+            state_end = t + exp_sample(&mut rng, mean);
+        }
+        out.push(mixed_job(i, t, &mut rng, minibatches_per_epoch));
+    }
+    out
+}
+
+/// Assign tenant metadata round-robin over a weight vector: job `i` belongs
+/// to tenant `i % weights.len()` with that tenant's weight, and optionally a
+/// uniform latency SLO. This is what the `hydra simulate --online
+/// --tenants/--tenant-weights/--slo` flags apply to a generated stream.
+pub fn assign_tenants(
+    workload: &mut [WorkloadModel],
+    weights: &[f64],
+    deadline: Option<f64>,
+) {
+    assert!(!weights.is_empty(), "need at least one tenant weight");
+    for (i, w) in workload.iter_mut().enumerate() {
+        w.tenant = i % weights.len();
+        w.weight = weights[w.tenant];
+        w.deadline = deadline;
+    }
 }
 
 /// A mixed GPU pool: `n_a4000` A4000-class and `n_a6000` A6000-class cards.
@@ -188,7 +307,7 @@ pub fn build_tasks(
         .map(|(id, w)| {
             let layers = w.model.layer_descs(gpu);
             let part = partition(&layers, gpu.mem_bytes, policy)?;
-            Ok(ModelTask::new(
+            let task = ModelTask::new(
                 id,
                 w.name.clone(),
                 "paper-sim",
@@ -197,7 +316,12 @@ pub fn build_tasks(
                 w.epochs,
                 1e-3,
             )
-            .with_arrival(w.arrival))
+            .with_arrival(w.arrival)
+            .with_tenant(w.tenant, w.weight);
+            Ok(match w.deadline {
+                Some(d) => task.with_deadline(d),
+                None => task,
+            })
         })
         .collect()
 }
@@ -224,7 +348,7 @@ pub fn build_tasks_pool(
         .map(|(id, w)| {
             let layers = w.model.layer_descs(&probe);
             let part = partition(&layers, min_mem, policy)?;
-            Ok(ModelTask::new(
+            let task = ModelTask::new(
                 id,
                 w.name.clone(),
                 "paper-sim",
@@ -233,7 +357,12 @@ pub fn build_tasks_pool(
                 w.epochs,
                 1e-3,
             )
-            .with_arrival(w.arrival))
+            .with_arrival(w.arrival)
+            .with_tenant(w.tenant, w.weight);
+            Ok(match w.deadline {
+                Some(d) => task.with_deadline(d),
+                None => task,
+            })
         })
         .collect::<Result<Vec<ModelTask>>>()?;
     let specs = pool.iter().map(|g| g.device_spec(&reference)).collect();
@@ -300,6 +429,71 @@ mod tests {
         assert!(mean > 60.0 && mean < 6000.0, "{mean}");
         // tenants alternate modality
         assert!(a[0].name.contains("bert") && a[1].name.contains("vit"));
+    }
+
+    #[test]
+    fn diurnal_arrivals_are_increasing_seeded_and_rate_modulated() {
+        let a = diurnal_mixed_tenants(40, 60.0, 7, 2);
+        let b = diurnal_mixed_tenants(40, 60.0, 7, 2);
+        assert_eq!(a.len(), 40);
+        let mut last = 0.0;
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.arrival > last, "{} <= {last}", x.arrival);
+            last = x.arrival;
+            assert_eq!(x.arrival, y.arrival);
+        }
+        // a different seed gives a different stream
+        let c = diurnal_mixed_tenants(40, 60.0, 8, 2);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.arrival != y.arrival));
+    }
+
+    #[test]
+    fn bursty_arrivals_are_increasing_and_burstier_than_poisson() {
+        let n = 400;
+        let mmpp = bursty_mixed_tenants(n, 60.0, 20.0, 5, 2);
+        let poisson = poisson_mixed_tenants(n, 60.0, 5, 2);
+        let mut last = 0.0;
+        for w in &mmpp {
+            assert!(w.arrival > last, "{} <= {last}", w.arrival);
+            last = w.arrival;
+        }
+        // squared coefficient of variation of inter-arrival gaps: ~1 for a
+        // Poisson process, strictly larger for a 20x burst MMPP
+        let scv = |ws: &[WorkloadModel]| {
+            let gaps: Vec<f64> = ws
+                .windows(2)
+                .map(|p| p[1].arrival - p[0].arrival)
+                .collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+                / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        assert!(
+            scv(&mmpp) > 1.5 * scv(&poisson),
+            "mmpp scv {} vs poisson scv {}",
+            scv(&mmpp),
+            scv(&poisson)
+        );
+    }
+
+    #[test]
+    fn assign_tenants_round_robins_weights_and_slo() {
+        let mut ws = uniform_grid(5, 1_000_000, 8, 1, 1);
+        assign_tenants(&mut ws, &[10.0, 1.0], Some(120.0));
+        assert_eq!(ws[0].tenant, 0);
+        assert_eq!(ws[0].weight, 10.0);
+        assert_eq!(ws[1].tenant, 1);
+        assert_eq!(ws[1].weight, 1.0);
+        assert_eq!(ws[4].tenant, 0);
+        assert!(ws.iter().all(|w| w.deadline == Some(120.0)));
+        // the metadata flows through task building
+        let gpu = GpuSpec::rtx2080ti();
+        let tasks = build_tasks(&ws, &gpu, Default::default()).unwrap();
+        assert_eq!(tasks[1].tenant(), 1);
+        assert_eq!(tasks[0].weight(), 10.0);
+        assert_eq!(tasks[2].deadline(), Some(120.0));
+        assert!(tasks[0].has_tenant_meta());
     }
 
     #[test]

@@ -321,6 +321,39 @@ fn search_outcomes_are_invariant_to_prefetch_depth() {
 }
 
 #[test]
+fn ext_fairness_wfq_hits_weighted_share_and_beats_fifo_slo() {
+    let fig = figures::ext_fairness().unwrap();
+    // csv: policy,hot_share_window,bg_slo_attainment,makespan_h
+    let mut rows: std::collections::BTreeMap<String, (f64, f64)> = Default::default();
+    for line in fig.csv.lines().skip(1) {
+        let cols: Vec<&str> = line.split(',').collect();
+        let share: f64 = cols[1].parse().unwrap();
+        let bg_att: f64 = cols[2].parse().unwrap();
+        let makespan_h: f64 = cols[3].parse().unwrap();
+        assert!(makespan_h > 0.0, "{line}");
+        rows.insert(cols[0].to_string(), (share, bg_att));
+    }
+    let &(wfq_share, wfq_att) = rows.get("weighted-fair").expect("missing wfq row");
+    let &(fifo_share, fifo_att) = rows.get("fifo").expect("missing fifo row");
+    // the acceptance claim: a 10:1 hot tenant's GPU-second share over the
+    // all-backlogged window lands within 5% of its weight fraction (10/13)
+    let target = 10.0 / 13.0;
+    assert!(
+        (wfq_share - target).abs() <= 0.05,
+        "wfq hot share {wfq_share} off target {target}"
+    );
+    // FIFO serves the hot tenant's earlier arrivals first: its window share
+    // exceeds the weight fraction, and background SLO attainment is
+    // strictly worse than under weighted fairness
+    assert!(fifo_share > target, "fifo hot share {fifo_share} <= {target}");
+    assert!(
+        wfq_att > fifo_att,
+        "background SLO attainment: wfq {wfq_att} !> fifo {fifo_att}"
+    );
+    assert!(wfq_att > 0.0, "wfq met no background SLOs");
+}
+
+#[test]
 fn csv_files_written_to_disk() {
     let dir = std::env::temp_dir().join("hydra_figcsv_test");
     let dir = dir.to_str().unwrap();

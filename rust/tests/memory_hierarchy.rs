@@ -181,6 +181,14 @@ fn dram_below_the_pinned_working_set_is_an_explicit_thrashing_error() {
     let msg = format!("{err}");
     assert!(msg.contains("thrashing"), "unexpected error: {msg}");
     assert!(msg.contains("DRAM"), "unactionable error: {msg}");
+    // the error spells out the computed requirement and the configured DRAM:
+    // (devices x (prefetch_depth + 1) + 1) x max_shard, here (2x2+1) x 80 MiB
+    let need = (2 * (1 + 1) + 1) as u64 * (80u64 << 20);
+    assert!(msg.contains(&format!("= {need} bytes")), "{msg}");
+    assert!(
+        msg.contains(&format!("against {dram} bytes")),
+        "error must state the configured DRAM: {msg}"
+    );
 
     // the prescribed fix: keep the NVMe headroom and grant one extra GiB
     // of DRAM — now above the floor, the same workload completes

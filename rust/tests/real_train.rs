@@ -27,6 +27,9 @@ fn spec(name: &str, config: &str, lr: f32, mbs: u32, seed: u64) -> RealModelSpec
         seed,
         inference: false,
         arrival: 0.0,
+        tenant: 0,
+        weight: 1.0,
+        deadline: None,
     }
 }
 
@@ -163,6 +166,9 @@ fn adam_and_momentum_paths_work_end_to_end() {
                 seed: 3,
                 inference: false,
                 arrival: 0.0,
+                tenant: 0,
+                weight: 1.0,
+                deadline: None,
             }],
         )
         .unwrap();

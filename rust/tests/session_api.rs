@@ -248,6 +248,9 @@ fn orchestrator_shim_matches_session_on_real_backend() {
                 seed: offset + i,
                 inference: false,
                 arrival: 0.0,
+                tenant: 0,
+                weight: 1.0,
+                deadline: None,
             })
             .collect()
     };

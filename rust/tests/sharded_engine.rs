@@ -719,6 +719,14 @@ fn thrashing_shard_fails_with_its_id_while_the_other_completes() {
     let msg = format!("{err}");
     assert!(msg.contains("shard 1"), "error not tagged with shard id: {msg}");
     assert!(msg.contains("thrashing"), "unexpected error class: {msg}");
+    // the error spells out the shard-local requirement and DRAM slice:
+    // (2 devices x (prefetch_depth + 1) + 1) x 80 MiB against 100 MiB
+    let need = (2 * (1 + 1) + 1) as u64 * (80 * MIB);
+    assert!(msg.contains(&format!("= {need} bytes")), "{msg}");
+    assert!(
+        msg.contains(&format!("against {} bytes", 100 * MIB)),
+        "error must state the shard's DRAM slice: {msg}"
+    );
 
     // shard 0 is untouched: all four of its jobs retired every unit
     let ok = outcomes[0].outcome.as_ref().unwrap();
