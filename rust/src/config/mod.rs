@@ -39,6 +39,10 @@
 //! SLO in virtual seconds after arrival; attainment lands in the report's
 //! per-tenant section). `"engine": { "admission_depth": k }` sheds a
 //! tenant's mid-run submissions once it has `k` unfinished jobs queued.
+//! `"engine": { "shards": n, "threads": true }` runs the n coordinator
+//! shards on one OS thread each (byte-identical merged report, better
+//! wall-clock), and `"stealing": true` adds admission-time work stealing
+//! between shards.
 //!
 //! Model-selection searches have their own spec, [`SearchWorkload`]: the
 //! same `"cluster"`/`"engine"` objects plus a `"search"` object (space +
@@ -304,6 +308,12 @@ fn parse_engine(
                 return Err(cerr("shards must be >= 1"));
             }
             engine.shards = s as usize;
+        }
+        if let Some(t) = e.get("threads").and_then(Json::as_bool) {
+            engine.threads = t;
+        }
+        if let Some(st) = e.get("stealing").and_then(Json::as_bool) {
+            engine.stealing = st;
         }
         if let Some(d) = e.get("admission_depth").and_then(Json::as_u64) {
             if d == 0 {
@@ -688,6 +698,25 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err}").contains("4 shards over 1 devices"), "{err}");
+    }
+
+    #[test]
+    fn threads_and_stealing_keys_parse() {
+        let mk = |engine: &str| {
+            WorkloadSpec::parse(&format!(
+                r#"{{"cluster": {{"devices":4,"device_mem_mib":1}},
+                     "engine": {engine},
+                     "tasks":[{{"config":"x","minibatches":1}}]}}"#
+            ))
+        };
+        // both off by default: the sequential, hash-routed baseline
+        let spec = mk(r#"{}"#).unwrap();
+        assert!(!spec.engine.threads);
+        assert!(!spec.engine.stealing);
+        let spec = mk(r#"{"shards": 4, "threads": true, "stealing": true}"#).unwrap();
+        assert!(spec.engine.threads);
+        assert!(spec.engine.stealing);
+        assert!(!mk(r#"{"threads": false}"#).unwrap().engine.threads);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! The event write-ahead log: an append-only file of length-prefixed,
 //! CRC-checksummed records.
 //!
-//! Layout: an 8-byte magic (`HYWAL002`) followed by records of
+//! Layout: an 8-byte magic (`HYWAL003`) followed by records of
 //! `[u32 len][u32 crc][payload]`, where `crc = crc32(payload)` and
 //! `payload[0]` is the record kind. The first record is always a *genesis*
 //! record carrying the complete run recipe ([`RunSpec`] for engine runs,
@@ -37,7 +37,7 @@ use crate::exec::{ExecutionBackend, SimBackend};
 use crate::util::codec::{crc32, ByteReader, ByteWriter};
 
 /// File magic of a Hydra event WAL.
-pub const WAL_MAGIC: &[u8; 8] = b"HYWAL002";
+pub const WAL_MAGIC: &[u8; 8] = b"HYWAL003";
 
 /// The complete recipe of one engine run — everything
 /// [`crate::session::Session::run`] feeds the engine, captured in the WAL's

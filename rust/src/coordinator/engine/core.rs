@@ -25,6 +25,7 @@ use super::device::{ClusterEvent, DeviceSpec, DeviceState};
 use super::events::{Event, EventQueue, QueueKind, QueuedEvent};
 use super::jobs::{Admission, JobEvent, JobStat};
 use super::prefetch::StagedShard;
+use super::routing::StolenJob;
 use super::TransferModel;
 
 /// Parallelism mode: SHARP blending vs the spilling-only ablation.
@@ -114,6 +115,24 @@ pub struct EngineOptions {
     /// Construction-time tasks are never shed — they model the accepted
     /// backlog. Under a sharded front door the bound applies per shard.
     pub admission_depth: Option<usize>,
+    /// Run the shard engines of a sharded front door on real OS threads
+    /// (one scoped thread per shard) instead of the sequential shard loop.
+    /// Requires an [`ExecutionBackend`] that can
+    /// [`fork`](ExecutionBackend::fork_for_shard) an independent per-shard
+    /// copy — the noiseless [`crate::exec::SimBackend`] can, a noisy one
+    /// cannot (it threads a single RNG stream through the shards in shard
+    /// order, which threads could not replicate). The merged report is
+    /// Debug-byte-identical to the sequential shard loop either way; only
+    /// wall-clock changes. Ignored at `shards == 1`.
+    pub threads: bool,
+    /// Admission-time work stealing between shards: after routing and
+    /// mailbox drain, jobs migrate from the deepest admission queue to the
+    /// shallowest through a capacity-checked steal handshake
+    /// ([`super::routing::steal_allowed`]). Off by default so the
+    /// hash-routed baseline stays byte-identical; every migration is
+    /// recorded in [`RunReport::stolen`]. Only not-yet-started jobs move —
+    /// never in-flight units.
+    pub stealing: bool,
 }
 
 impl Default for EngineOptions {
@@ -130,6 +149,8 @@ impl Default for EngineOptions {
             queue: QueueKind::Heap,
             shards: 1,
             admission_depth: None,
+            threads: false,
+            stealing: false,
         }
     }
 }
@@ -153,6 +174,10 @@ impl EngineOptions {
                 w.put_usize(d);
             }
         }
+        // codec is append-only (the WAL genesis embeds it): new fields go
+        // strictly after every older one
+        w.put_bool(self.threads);
+        w.put_bool(self.stealing);
     }
 
     pub(crate) fn decode(r: &mut ByteReader<'_>) -> Result<EngineOptions> {
@@ -168,6 +193,8 @@ impl EngineOptions {
             queue: QueueKind::decode(r)?,
             shards: r.get_usize()?,
             admission_depth: if r.get_bool()? { Some(r.get_usize()?) } else { None },
+            threads: r.get_bool()?,
+            stealing: r.get_bool()?,
         })
     }
 }
@@ -249,6 +276,11 @@ pub struct RunReport {
     /// Admission-control rejections in submission order. Empty unless
     /// [`EngineOptions::admission_depth`] shed something.
     pub sheds: Vec<Admission>,
+    /// Jobs the steal planner migrated between shards, in planning order
+    /// (shard-order concatenated when merged). Empty unless
+    /// [`EngineOptions::stealing`] moved something; always empty on
+    /// per-shard and unsharded reports.
+    pub stolen: Vec<StolenJob>,
 }
 
 /// Hand-rolled to match the output the derive produced before the
@@ -279,6 +311,9 @@ impl std::fmt::Debug for RunReport {
         }
         if !self.sheds.is_empty() {
             s.field("sheds", &self.sheds);
+        }
+        if !self.stolen.is_empty() {
+            s.field("stolen", &self.stolen);
         }
         s.finish()
     }
@@ -944,6 +979,7 @@ impl<'a> SharpEngine<'a> {
             jobs,
             tenants,
             sheds: std::mem::take(&mut self.sheds),
+            stolen: Vec::new(),
             trace: std::mem::take(&mut self.trace),
         })
     }

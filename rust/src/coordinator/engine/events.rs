@@ -191,6 +191,10 @@ impl Ord for QueuedEvent {
 struct CalendarQueue {
     fifo: VecDeque<QueuedEvent>,
     buckets: Vec<Vec<QueuedEvent>>,
+    /// Bucket count of the *current* epoch. `buckets.len()` may be larger:
+    /// the outer Vec is a reusable arena that never shrinks, so buckets at
+    /// and beyond `epoch_nb` are inert leftovers from a larger past epoch.
+    epoch_nb: usize,
     /// Total events across `buckets`.
     in_buckets: usize,
     /// First bucket that may be non-empty (only advances within an epoch).
@@ -213,6 +217,7 @@ impl CalendarQueue {
         CalendarQueue {
             fifo: VecDeque::new(),
             buckets: Vec::new(),
+            epoch_nb: 0,
             in_buckets: 0,
             cursor: 0,
             epoch_start: 0.0,
@@ -234,7 +239,10 @@ impl CalendarQueue {
         if q.time.total_cmp(&self.frontier).is_eq() {
             self.fifo.push_back(q);
         } else if self.active && q.time < self.horizon {
-            let nb = self.buckets.len();
+            // clamp to the current epoch's bucket count, not the arena
+            // length — a time that float-rounds to exactly `epoch_nb` must
+            // land in the epoch's last bucket, not an inert trailing one
+            let nb = self.epoch_nb;
             let idx =
                 (((q.time - self.epoch_start) / self.width) as usize).min(nb - 1);
             self.buckets[idx].push(q);
@@ -267,8 +275,23 @@ impl CalendarQueue {
         self.epoch_start = lo;
         self.width = width;
         self.horizon = horizon;
-        self.buckets.clear();
-        self.buckets.resize_with(nb, Vec::new);
+        // Bucket arena reuse: epochs rebuild every time the bucketed set
+        // drains, and `clear()` + `resize_with` used to drop every inner
+        // Vec's capacity each time — steady-state churn re-paid the
+        // allocation for each hot bucket on every epoch. Clear the inner
+        // Vecs in place and only grow the outer Vec when an epoch needs
+        // more buckets than any before it. Never shrink: push and pop both
+        // index strictly below this epoch's `nb` (every bucketed time is
+        // < horizon, and `pop` only advances `cursor` while `in_buckets`
+        // says a non-empty bucket remains), and snapshots flatten the
+        // buckets, so trailing empties from a larger past epoch are inert.
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        if self.buckets.len() < nb {
+            self.buckets.resize_with(nb, Vec::new);
+        }
+        self.epoch_nb = nb;
         self.cursor = 0;
         self.active = true;
         self.in_buckets = self.overflow.len();

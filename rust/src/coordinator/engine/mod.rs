@@ -87,7 +87,7 @@ pub use self::device::{ClusterEvent, DeviceSpec};
 pub use self::events::QueueKind;
 pub use self::jobs::{Admission, JobEvent, JobStat};
 pub use self::prefetch::{PrefetchPipeline, PrefetchSlot, StagedShard};
-pub use self::routing::{Route, ShardBusy, ShardId, ShardMailbox};
+pub use self::routing::{Route, ShardBusy, ShardId, ShardMailbox, StolenJob};
 pub use self::sharded::{
     ShardOutcome, ShardSection, ShardedEngine, ShardedReport,
 };

@@ -352,13 +352,17 @@ impl<'a> SharpEngine<'a> {
         if self.free_devices > 0 {
             return;
         }
-        while !self.devices[device].pipeline.is_full() {
-            let eligible = self.take_eligible();
-            if eligible.is_empty() {
-                self.put_eligible(eligible);
-                return;
-            }
-            let resident = self.take_resident(device);
+        // Cursor refill: snapshot the eligible set and device residency
+        // ONCE and walk the snapshot, removing each picked model in place.
+        // A depth-k refill used to rebuild both buffers for every slot
+        // (O(k * |eligible|) rescans); nothing in the loop body invalidates
+        // either snapshot — the picked model leaves `ready` (and leaves the
+        // cursor), residency only changes at unit start/retire, and no
+        // events fire mid-loop — so one snapshot serves the whole ring and
+        // the picks (and their order) match the rebuild-per-slot version.
+        let mut eligible = self.take_eligible();
+        let resident = self.take_resident(device);
+        while !self.devices[device].pipeline.is_full() && !eligible.is_empty() {
             let ctx = PickContext {
                 now,
                 device,
@@ -366,15 +370,13 @@ impl<'a> SharpEngine<'a> {
                 resident: Some(&resident),
                 tenant_gpu_secs: Some(&self.tenant_gpu_secs),
             };
-            let picked = self
-                .scheduler
-                .pick(&eligible, ctx, &mut self.rng)
-                .map(|i| eligible[i].id);
-            self.put_eligible(eligible);
-            self.put_resident(resident);
-            let Some(id) = picked else {
-                return;
+            let Some(i) = self.scheduler.pick(&eligible, ctx, &mut self.rng) else {
+                break;
             };
+            let id = eligible[i].id;
+            // order-preserving removal keeps the remaining snapshot exactly
+            // what a fresh rebuild from the ready-set would produce
+            eligible.remove(i);
             self.ready.remove(id);
             obs.on_decision(device, id, true, now);
             let unit = self.tasks[id].claim_front();
@@ -418,8 +420,10 @@ impl<'a> SharpEngine<'a> {
             self.devices[device].pipeline.push_unstaged(unit);
             // an unstaged claim overlaps nothing: claiming further ahead
             // would only hoard eligible models, so stop filling here
-            return;
+            break;
         }
+        self.put_eligible(eligible);
+        self.put_resident(resident);
     }
 }
 

@@ -80,6 +80,82 @@ pub fn route_capacity_aware(job: usize, largest_shard_bytes: u64, device_caps: &
     Route { shard: ShardId(roomiest), overridden: roomiest != home.0 }
 }
 
+/// One job migration planned by the work stealer: `job` (global id) left
+/// `from`'s admission queue for `to`'s. Recorded in
+/// `RunReport::stolen` so a stealing run documents exactly how it diverged
+/// from the hash-routed baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StolenJob {
+    /// Global job id that migrated.
+    pub job: usize,
+    /// Victim shard the job was routed to.
+    pub from: ShardId,
+    /// Thief shard that executed it.
+    pub to: ShardId,
+}
+
+/// The capacity-checked steal handshake: the thief may take a job only
+/// when (a) the victim's admission queue is deeper by at least two — moving
+/// a job across a difference of one merely swaps the imbalance — and
+/// (b) the job's largest shard fits the thief's smallest device
+/// (`footprint <= thief_cap`), the same binding constraint
+/// [`route_capacity_aware`] enforces at admission.
+pub fn steal_allowed(
+    footprint: u64,
+    thief_cap: u64,
+    victim_depth: usize,
+    thief_depth: usize,
+) -> bool {
+    victim_depth >= thief_depth + 2 && footprint <= thief_cap
+}
+
+/// Greedy admission-time steal planner: repeatedly move one job from the
+/// deepest admission queue to the shallowest until the pool is balanced
+/// (depth difference < 2) or the deepest queue holds nothing the thief can
+/// fit. Jobs are stolen from the *back* of the victim's queue (most
+/// recently admitted first) so the victim's imminent work keeps its
+/// hash-routed home. Only not-yet-started jobs are in these queues, so no
+/// in-flight unit ever migrates.
+///
+/// `queues[s]` holds global job ids accepted to shard `s`,
+/// `footprints[gid]` the job's largest shard in bytes, `caps[s]` the
+/// smallest device memory of shard `s`. Ties (equal depth) break to the
+/// lowest shard id on both sides, so the plan is fully deterministic.
+pub fn plan_steals(
+    queues: &mut [Vec<usize>],
+    footprints: &[u64],
+    caps: &[u64],
+) -> Vec<StolenJob> {
+    let mut stolen = Vec::new();
+    let n = queues.len();
+    if n < 2 {
+        return stolen;
+    }
+    loop {
+        let thief = (0..n).min_by_key(|&s| (queues[s].len(), s)).unwrap();
+        let victim = (0..n).max_by_key(|&s| (queues[s].len(), n - s)).unwrap();
+        let (vd, td) = (queues[victim].len(), queues[thief].len());
+        let movable = queues[victim]
+            .iter()
+            .rposition(|&gid| steal_allowed(footprints[gid], caps[thief], vd, td));
+        match movable {
+            Some(i) => {
+                let gid = queues[victim].remove(i);
+                queues[thief].push(gid);
+                stolen.push(StolenJob {
+                    job: gid,
+                    from: ShardId(victim),
+                    to: ShardId(thief),
+                });
+            }
+            // balanced, or the deepest queue has nothing the emptiest
+            // shard can hold — either way the plan is done
+            None => break,
+        }
+    }
+    stolen
+}
+
 /// Typed backpressure signal: the mailbox of `shard` is full (at
 /// `capacity` queued jobs) and rejected the submit instead of growing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -226,6 +302,64 @@ mod tests {
         let drained: Vec<usize> = mb.drain().collect();
         assert_eq!(drained, vec![11, 12]);
         assert!(mb.is_empty());
+    }
+
+    #[test]
+    fn steal_handshake_requires_room_and_imbalance() {
+        // fits and imbalanced: allowed
+        assert!(steal_allowed(1 << 20, 1 << 30, 5, 1));
+        // depth difference of one merely swaps the imbalance: refused
+        assert!(!steal_allowed(1 << 20, 1 << 30, 2, 1));
+        assert!(!steal_allowed(1 << 20, 1 << 30, 1, 1));
+        // job too large for the thief's smallest device: refused
+        assert!(!steal_allowed(2 << 30, 1 << 30, 5, 1));
+    }
+
+    #[test]
+    fn plan_steals_balances_and_conserves_jobs() {
+        let footprints = vec![1u64; 8];
+        let caps = [10, 10, 10];
+        let mut queues = vec![vec![0, 1, 2, 3, 4, 5], vec![6, 7], vec![]];
+        let stolen = plan_steals(&mut queues, &footprints, &caps);
+        // balanced within 1 and no job lost or duplicated
+        let mut all: Vec<usize> = queues.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        let depths: Vec<usize> = queues.iter().map(Vec::len).collect();
+        assert!(depths.iter().max().unwrap() - depths.iter().min().unwrap() < 2);
+        // stolen records match what actually moved, back of queue first
+        assert!(!stolen.is_empty());
+        for s in &stolen {
+            assert_ne!(s.from, s.to);
+            assert!(queues[s.to.0].contains(&s.job));
+        }
+        assert_eq!(stolen[0].from, ShardId(0));
+        assert_eq!(stolen[0].job, 5);
+    }
+
+    #[test]
+    fn plan_steals_respects_thief_capacity() {
+        // shard 1 is empty but too small for any of shard 0's jobs
+        let footprints = vec![100u64; 4];
+        let caps = [200, 50];
+        let mut queues = vec![vec![0, 1, 2, 3], vec![]];
+        let stolen = plan_steals(&mut queues, &footprints, &caps);
+        assert!(stolen.is_empty());
+        assert_eq!(queues[0], vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn plan_steals_is_deterministic_and_single_shard_is_noop() {
+        let footprints = vec![1u64; 6];
+        let caps = [10, 10];
+        let mut a = vec![vec![0, 1, 2, 3, 4, 5], vec![]];
+        let mut b = a.clone();
+        let sa = plan_steals(&mut a, &footprints, &caps);
+        let sb = plan_steals(&mut b, &footprints, &caps);
+        assert_eq!(sa, sb);
+        assert_eq!(a, b);
+        let mut one = vec![vec![0, 1, 2]];
+        assert!(plan_steals(&mut one, &footprints, &caps[..1]).is_empty());
     }
 
     #[test]

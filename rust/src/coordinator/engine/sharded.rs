@@ -16,9 +16,22 @@
 //! admission order (hence the schedule) is independent of the mailbox
 //! capacity.
 //!
-//! Shards run their event loops independently (sequentially, in shard
-//! order, each in its own virtual clock) and their reports merge into one
-//! [`ShardedReport`]: per-shard [`ShardSection`]s plus cluster totals.
+//! Shards run their event loops independently, each in its own virtual
+//! clock — sequentially in shard order by default, or on one scoped OS
+//! thread per shard with [`EngineOptions::threads`] — and their reports
+//! merge into one [`ShardedReport`]: per-shard [`ShardSection`]s plus
+//! cluster totals. Threaded execution changes wall-clock only: outcomes
+//! land in a fixed shard-indexed slot vector, totals fold in shard order
+//! exactly as the sequential loop's merge does, and each thread streams
+//! its events into a private [`BufferedEvents`] that is replayed through
+//! the caller's observer in shard order after all threads join — so the
+//! merged report *and* the observer byte stream are identical to
+//! sequential execution. Opt-in admission-time work stealing
+//! ([`EngineOptions::stealing`]) rebalances deep admission queues into
+//! shallow ones through the capacity-checked
+//! [`super::routing::steal_allowed`] handshake before any shard starts;
+//! only not-yet-started jobs move, and every migration is recorded in
+//! [`RunReport::stolen`].
 //!
 //! **The proof obligation** (rust/tests/sharded_engine.rs): with N=1 the
 //! partition, the routing, the id remapping and the merge are all exact
@@ -32,7 +45,7 @@
 
 use crate::coordinator::memory::{MemTier, MemoryOptions, TierSpec};
 use crate::coordinator::metrics::{Interval, Trace};
-use crate::coordinator::observer::EngineObserver;
+use crate::coordinator::observer::{BufferedEvents, EngineObserver};
 use crate::coordinator::sched::Policy;
 use crate::coordinator::task::ModelTask;
 use crate::coordinator::unit::ShardUnit;
@@ -42,7 +55,7 @@ use crate::exec::ExecutionBackend;
 use super::core::{EngineOptions, RunReport, SharpEngine, TenantStat};
 use super::device::{ClusterEvent, DeviceSpec};
 use super::jobs::{Admission, JobEvent, JobStat};
-use super::routing::{self, ShardId, ShardMailbox};
+use super::routing::{self, ShardId, ShardMailbox, StolenJob};
 
 /// Default bound of each shard's admission mailbox. Small enough that
 /// routing skew on large pools actually exercises the backpressure path;
@@ -64,6 +77,10 @@ pub struct ShardSection {
     /// [`super::routing::ShardBusy`] signals this shard's mailbox raised
     /// during admission (each was resolved by a drain-and-retry).
     pub backpressured: usize,
+    /// Jobs the steal planner migrated *to* this shard (global ids, in
+    /// planning order). Empty unless [`EngineOptions::stealing`] is on; a
+    /// stolen job also appears in this shard's `jobs`.
+    pub stolen: Vec<StolenJob>,
     /// The shard engine's own report, in shard-local device/job ids.
     pub report: RunReport,
 }
@@ -101,6 +118,9 @@ pub struct ShardOutcome {
     pub overridden: Vec<usize>,
     /// Mailbox backpressure signals raised during admission.
     pub backpressured: usize,
+    /// Jobs the steal planner migrated to this shard (see
+    /// [`ShardSection::stolen`]).
+    pub stolen: Vec<StolenJob>,
     /// The shard's report, or its failure tagged with the shard id.
     pub outcome: Result<RunReport>,
 }
@@ -219,6 +239,7 @@ impl<'a> ShardedEngine<'a> {
                     jobs: o.jobs,
                     overridden: o.overridden,
                     backpressured: o.backpressured,
+                    stolen: o.stolen,
                     report,
                 }),
                 Err(e) => return Err(e),
@@ -343,6 +364,23 @@ impl<'a> ShardedEngine<'a> {
             accepted[s].extend(mb.drain());
         }
 
+        // --- opt-in admission-time work stealing --------------------------
+        // Runs after the mailboxes drain and before local ids are assigned,
+        // so everything downstream (locate map, id remapping, observers)
+        // sees the post-steal placement. Each shard's queue is then
+        // re-sorted to ascending global id — exactly the order hash routing
+        // produces — so the per-shard submit streams keep the
+        // ids-follow-submission-order contract the shard engines enforce.
+        let mut stolen_by_shard: Vec<Vec<StolenJob>> = vec![Vec::new(); n];
+        if self.options.stealing {
+            for st in routing::plan_steals(&mut accepted, &footprints, &caps) {
+                stolen_by_shard[st.to.0].push(st);
+            }
+            for queue in &mut accepted {
+                queue.sort_unstable();
+            }
+        }
+
         // global job id -> (shard, shard-local id)
         let mut locate = vec![(0usize, 0usize); n_jobs];
         for (s, ids) in accepted.iter().enumerate() {
@@ -406,29 +444,126 @@ impl<'a> ShardedEngine<'a> {
         }
 
         // --- run each shard's event loop ----------------------------------
+        let results: Vec<Result<RunReport>> = if self.options.threads && n > 1 {
+            // fork one backend per shard up front, so a backend that cannot
+            // give shards independent streams is a clean config error
+            // before any thread spawns
+            let mut forks = Vec::with_capacity(n);
+            for _ in 0..n {
+                match self.backend.fork_for_shard() {
+                    Some(b) => forks.push(b),
+                    None => {
+                        return Err(HydraError::Config(
+                            "threads requires an execution backend that can \
+                             fork an independent per-shard copy (a noiseless \
+                             SimBackend can; noisy and real backends thread \
+                             one global state through the shards in shard \
+                             order, which parallel shard clocks cannot \
+                             replicate)"
+                                .into(),
+                        ))
+                    }
+                }
+            }
+            let buffering = obs.is_some();
+            // fixed shard-indexed slots: arrival order of thread results
+            // can never reorder the merge
+            let mut slots: Vec<Option<(Result<RunReport>, BufferedEvents)>> =
+                (0..n).map(|_| None).collect();
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(n);
+                for (s, mut backend) in forks.into_iter().enumerate() {
+                    let tasks = std::mem::take(&mut shard_tasks[s]);
+                    let specs = std::mem::take(&mut shard_specs[s]);
+                    let cluster = std::mem::take(&mut shard_cluster[s]);
+                    let jobs_ev = std::mem::take(&mut shard_jobs[s]);
+                    let memory = memories[s];
+                    let policy = self.policy;
+                    let options = self.options.clone();
+                    handles.push(scope.spawn(move || {
+                        let mut buf = BufferedEvents::default();
+                        let thread_obs: Option<&mut dyn EngineObserver> =
+                            buffering.then_some(&mut buf as &mut dyn EngineObserver);
+                        let r = run_shard_engine(
+                            tasks,
+                            &specs,
+                            memory,
+                            policy,
+                            &mut *backend,
+                            options,
+                            cluster,
+                            jobs_ev,
+                            thread_obs,
+                        );
+                        (r, buf)
+                    }));
+                }
+                // join ALL threads in shard order before reporting: a
+                // panicking shard becomes a tagged error in its slot and
+                // never takes down the process or a sibling's report
+                for (s, h) in handles.into_iter().enumerate() {
+                    slots[s] = Some(match h.join() {
+                        Ok(pair) => pair,
+                        Err(payload) => (
+                            Err(HydraError::Exec(format!(
+                                "shard thread panicked: {}",
+                                panic_message(payload.as_ref())
+                            ))),
+                            BufferedEvents::default(),
+                        ),
+                    });
+                }
+            });
+            // observer fan-in: replay each shard's private buffer in shard
+            // order through the caller's observer with ids remapped to the
+            // global namespace — byte-for-byte the stream the sequential
+            // shard loop produces (a panicked shard replays what it
+            // buffered before dying, which for a scoped panic is nothing)
+            let mut results = Vec::with_capacity(n);
+            for (s, slot) in slots.into_iter().enumerate() {
+                let (result, buf) = slot.expect("every shard thread joined");
+                if let Some(o) = obs.as_deref_mut() {
+                    o.on_shard_begin(ShardId(s), n);
+                    let mut scope = ShardScope {
+                        inner: o,
+                        devices: &device_maps[s],
+                        models: &accepted[s],
+                    };
+                    buf.replay(&mut scope);
+                }
+                results.push(result.map_err(|e| tag_shard(e, ShardId(s), &device_maps[s])));
+            }
+            results
+        } else {
+            (0..n)
+                .map(|s| {
+                    run_one_shard(
+                        std::mem::take(&mut shard_tasks[s]),
+                        &shard_specs[s],
+                        memories[s],
+                        self.policy,
+                        &mut *self.backend,
+                        self.options.clone(),
+                        std::mem::take(&mut shard_cluster[s]),
+                        std::mem::take(&mut shard_jobs[s]),
+                        s,
+                        n,
+                        &device_maps[s],
+                        &accepted[s],
+                        &mut obs,
+                    )
+                })
+                .collect()
+        };
         let mut outcomes = Vec::with_capacity(n);
-        for s in 0..n {
-            let result = run_one_shard(
-                std::mem::take(&mut shard_tasks[s]),
-                &shard_specs[s],
-                memories[s],
-                self.policy,
-                &mut *self.backend,
-                self.options.clone(),
-                std::mem::take(&mut shard_cluster[s]),
-                std::mem::take(&mut shard_jobs[s]),
-                s,
-                n,
-                &device_maps[s],
-                &accepted[s],
-                &mut obs,
-            );
+        for (s, result) in results.into_iter().enumerate() {
             outcomes.push(ShardOutcome {
                 shard: ShardId(s),
                 devices: std::mem::take(&mut device_maps[s]),
                 jobs: std::mem::take(&mut accepted[s]),
                 overridden: std::mem::take(&mut overridden[s]),
                 backpressured: backpressured[s],
+                stolen: std::mem::take(&mut stolen_by_shard[s]),
                 outcome: result,
             });
         }
@@ -436,8 +571,46 @@ impl<'a> ShardedEngine<'a> {
     }
 }
 
-/// Build and run one shard's [`SharpEngine`]; errors come back tagged with
-/// the shard id (device ids inside OOM errors are remapped to global).
+/// Render a joined thread's panic payload for the tagged shard error:
+/// `panic!` carries a `&str` or `String` in practice; anything else gets a
+/// placeholder rather than an unwind out of the sharded engine.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Build and run one shard's [`SharpEngine`] against the given observer
+/// (already scoped or buffered by the caller). Errors come back untagged —
+/// shard tagging happens where the shard id and device map live. This is
+/// the body a sequential shard iteration and a shard thread share.
+#[allow(clippy::too_many_arguments)]
+fn run_shard_engine(
+    tasks: Vec<ModelTask>,
+    specs: &[DeviceSpec],
+    memory: MemoryOptions,
+    policy: Policy,
+    backend: &mut dyn ExecutionBackend,
+    options: EngineOptions,
+    cluster_events: Vec<ClusterEvent>,
+    job_events: Vec<JobEvent>,
+    obs: Option<&mut dyn EngineObserver>,
+) -> Result<RunReport> {
+    let mut engine =
+        SharpEngine::with_devices(tasks, specs, memory, policy.build(), backend, options)?
+            .with_cluster_events(cluster_events)
+            .with_job_events(job_events);
+    engine.run_observed(obs)
+}
+
+/// Build and run one shard's [`SharpEngine`] sequentially, streaming events
+/// through the caller's observer live via [`ShardScope`]; errors come back
+/// tagged with the shard id (device ids inside OOM errors are remapped to
+/// global).
 #[allow(clippy::too_many_arguments)]
 fn run_one_shard(
     tasks: Vec<ModelTask>,
@@ -454,28 +627,38 @@ fn run_one_shard(
     jobs: &[usize],
     obs: &mut Option<&mut dyn EngineObserver>,
 ) -> Result<RunReport> {
-    let run = || -> Result<RunReport> {
-        let mut engine = SharpEngine::with_devices(
-            tasks,
-            specs,
-            memory,
-            policy.build(),
-            backend,
-            options,
-        )?
-        .with_cluster_events(cluster_events)
-        .with_job_events(job_events);
+    let run = |obs: &mut Option<&mut dyn EngineObserver>| -> Result<RunReport> {
         match obs {
             Some(o) => {
                 let o: &mut dyn EngineObserver = &mut **o;
                 o.on_shard_begin(ShardId(shard), n_shards);
                 let mut scope = ShardScope { inner: o, devices, models: jobs };
-                engine.run_observed(Some(&mut scope))
+                run_shard_engine(
+                    tasks,
+                    specs,
+                    memory,
+                    policy,
+                    backend,
+                    options,
+                    cluster_events,
+                    job_events,
+                    Some(&mut scope),
+                )
             }
-            None => engine.run_observed(None),
+            None => run_shard_engine(
+                tasks,
+                specs,
+                memory,
+                policy,
+                backend,
+                options,
+                cluster_events,
+                job_events,
+                None,
+            ),
         }
     };
-    run().map_err(|e| tag_shard(e, ShardId(shard), devices))
+    run(obs).map_err(|e| tag_shard(e, ShardId(shard), devices))
 }
 
 /// Tag a shard-engine error with its shard id; OOM device ids are remapped
@@ -600,6 +783,7 @@ fn merge_sections(sections: &[ShardSection]) -> RunReport {
         &mut rows[tenant]
     }
     let mut sheds: Vec<Admission> = Vec::new();
+    let mut stolen: Vec<StolenJob> = Vec::new();
     let mut makespan = 0.0f64;
     let (mut compute, mut transfer, mut stall, mut wait, mut nvme_secs) =
         (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
@@ -644,6 +828,9 @@ fn merge_sections(sections: &[ShardSection]) -> RunReport {
         }
         // Admission carries no job id, so shard sheds concatenate directly
         sheds.extend(r.sheds.iter().copied());
+        // steal records already carry global ids; concatenate in shard
+        // order (of the thief) like every other fold
+        stolen.extend(sec.stolen.iter().copied());
     }
     tenants.retain(|t| t.jobs > 0 || t.shed > 0);
     trace.makespan = makespan;
@@ -673,5 +860,6 @@ fn merge_sections(sections: &[ShardSection]) -> RunReport {
             .collect(),
         tenants,
         sheds,
+        stolen,
     }
 }

@@ -176,6 +176,128 @@ impl EngineObserver for Tee<'_> {
     }
 }
 
+/// One buffered engine event, ids in whatever namespace the producing
+/// engine used (shard-local for a threaded shard run). The variants mirror
+/// the [`EngineObserver`] methods one-to-one; names are owned so the buffer
+/// is `Send` and outlives the engine that produced it.
+#[derive(Debug, Clone)]
+enum BufferedEvent {
+    JobSubmitted { model: usize, name: String, now: f64 },
+    JobShed { model: usize, name: String, tenant: usize, depth: usize, now: f64 },
+    JobCancelRequested { model: usize, now: f64 },
+    JobArrived { model: usize, name: String, now: f64 },
+    Decision { device: usize, model: usize, prefetch: bool, now: f64 },
+    UnitRetired { device: usize, unit: ShardUnit, now: f64 },
+    JobFinished { model: usize, now: f64, cancelled: bool },
+    Spill { device: usize, promoted: u64, demoted: u64, tier: MemTier, now: f64 },
+    Interval(Interval),
+}
+
+/// Records every engine event for later, ordered replay — the observer
+/// fan-in half of threaded sharded execution. Each shard thread streams
+/// into its own private `BufferedEvents` (no cross-thread observer calls
+/// ever happen), and after all threads join, the sharded engine replays the
+/// buffers *in shard order* through the caller's real observer. The replay
+/// is byte-for-byte the event stream the sequential shard loop would have
+/// produced, which is what keeps streaming consumers (`WalWriter`,
+/// `TraceRecorder`, gantt/progress) correct without being `Send`.
+#[derive(Debug, Clone, Default)]
+pub struct BufferedEvents {
+    events: Vec<BufferedEvent>,
+}
+
+impl BufferedEvents {
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Replay the buffer into `obs` in recording order.
+    pub fn replay(&self, obs: &mut dyn EngineObserver) {
+        for ev in &self.events {
+            match ev {
+                BufferedEvent::JobSubmitted { model, name, now } => {
+                    obs.on_job_submitted(*model, name, *now)
+                }
+                BufferedEvent::JobShed { model, name, tenant, depth, now } => {
+                    obs.on_job_shed(*model, name, *tenant, *depth, *now)
+                }
+                BufferedEvent::JobCancelRequested { model, now } => {
+                    obs.on_job_cancel_requested(*model, *now)
+                }
+                BufferedEvent::JobArrived { model, name, now } => {
+                    obs.on_job_arrived(*model, name, *now)
+                }
+                BufferedEvent::Decision { device, model, prefetch, now } => {
+                    obs.on_decision(*device, *model, *prefetch, *now)
+                }
+                BufferedEvent::UnitRetired { device, unit, now } => {
+                    obs.on_unit_retired(*device, unit, *now)
+                }
+                BufferedEvent::JobFinished { model, now, cancelled } => {
+                    obs.on_job_finished(*model, *now, *cancelled)
+                }
+                BufferedEvent::Spill { device, promoted, demoted, tier, now } => {
+                    obs.on_spill(*device, *promoted, *demoted, *tier, *now)
+                }
+                BufferedEvent::Interval(iv) => obs.on_interval(iv),
+            }
+        }
+    }
+}
+
+impl EngineObserver for BufferedEvents {
+    fn on_job_submitted(&mut self, model: usize, name: &str, now: f64) {
+        self.events.push(BufferedEvent::JobSubmitted { model, name: name.into(), now });
+    }
+
+    fn on_job_shed(&mut self, model: usize, name: &str, tenant: usize, depth: usize, now: f64) {
+        self.events.push(BufferedEvent::JobShed {
+            model,
+            name: name.into(),
+            tenant,
+            depth,
+            now,
+        });
+    }
+
+    fn on_job_cancel_requested(&mut self, model: usize, now: f64) {
+        self.events.push(BufferedEvent::JobCancelRequested { model, now });
+    }
+
+    fn on_job_arrived(&mut self, model: usize, name: &str, now: f64) {
+        self.events.push(BufferedEvent::JobArrived { model, name: name.into(), now });
+    }
+
+    fn on_decision(&mut self, device: usize, model: usize, prefetch: bool, now: f64) {
+        self.events.push(BufferedEvent::Decision { device, model, prefetch, now });
+    }
+
+    fn on_unit_retired(&mut self, device: usize, unit: &ShardUnit, now: f64) {
+        self.events.push(BufferedEvent::UnitRetired { device, unit: *unit, now });
+    }
+
+    fn on_job_finished(&mut self, model: usize, now: f64, cancelled: bool) {
+        self.events.push(BufferedEvent::JobFinished { model, now, cancelled });
+    }
+
+    fn on_spill(&mut self, device: usize, promoted: u64, demoted: u64, tier: MemTier, now: f64) {
+        self.events.push(BufferedEvent::Spill { device, promoted, demoted, tier, now });
+    }
+
+    fn on_interval(&mut self, interval: &Interval) {
+        self.events.push(BufferedEvent::Interval(*interval));
+    }
+
+    // on_shard_begin is deliberately NOT buffered: a shard thread's engine
+    // never emits it (only the sharded front door does, on the real
+    // observer, right before replaying this buffer).
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +324,22 @@ mod tests {
         rec.on_interval(&iv(1.0, 2.0));
         assert_eq!(rec.intervals.len(), 2);
         assert_eq!(rec.intervals[1].start, 1.0);
+    }
+
+    #[test]
+    fn buffered_events_replay_in_recording_order() {
+        let mut buf = BufferedEvents::default();
+        buf.on_job_arrived(1, "a", 0.0);
+        buf.on_interval(&iv(0.0, 1.0));
+        buf.on_job_finished(1, 1.0, false);
+        assert_eq!(buf.len(), 3);
+        let mut rec = TraceRecorder::default();
+        buf.replay(&mut rec);
+        assert_eq!(rec.intervals.len(), 1);
+        // replay is non-destructive: the same buffer replays again
+        buf.replay(&mut rec);
+        assert_eq!(rec.intervals.len(), 2);
+        assert!(!buf.is_empty());
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub use crate::coordinator::engine::{
     Admission, ClusterEvent, DeviceSpec, EngineOptions, JobEvent, JobStat,
     ParallelMode, PrefetchPipeline, PrefetchSlot, QueueKind, Route, RunReport,
     ShardBusy, ShardId, ShardMailbox, ShardOutcome, ShardSection, SharpEngine,
-    ShardedEngine, ShardedReport, StagedShard, TenantStat,
+    ShardedEngine, ShardedReport, StagedShard, StolenJob, TenantStat,
 };
 
 pub use crate::coordinator::memory::TransferModel;

@@ -38,6 +38,22 @@ pub trait ExecutionBackend {
     fn sim_rng_state(&self) -> Option<[u64; 4]> {
         None
     }
+
+    /// Fork an independent copy of this backend for one shard of a
+    /// threaded sharded run (`EngineOptions::threads`). The contract: every
+    /// fork must return exactly what the original would have returned for
+    /// that shard's units in the sequential shard loop — otherwise the
+    /// threaded merge cannot be byte-identical to sequential execution.
+    ///
+    /// Default: `None`, meaning the backend has cross-shard state threads
+    /// would corrupt and the sharded engine must refuse `threads: true`.
+    /// [`SimBackend`] forks only when `noise == 0.0`: the noiseless cost
+    /// model never draws from its RNG, so copies are trivially equivalent,
+    /// while a noisy backend consumes one global RNG stream in shard order
+    /// that per-shard copies could not replicate.
+    fn fork_for_shard(&self) -> Option<Box<dyn ExecutionBackend + Send>> {
+        None
+    }
 }
 
 /// Cost-model backend: unit duration = ShardDesc estimate, optionally
@@ -83,6 +99,17 @@ impl ExecutionBackend for SimBackend {
 
     fn sim_rng_state(&self) -> Option<[u64; 4]> {
         Some(self.rng_state())
+    }
+
+    fn fork_for_shard(&self) -> Option<Box<dyn ExecutionBackend + Send>> {
+        // noise == 0.0 never touches the RNG, so a fresh copy is
+        // byte-equivalent to the shared sequential backend; a noisy stream
+        // is consumed in shard order and cannot be split across threads
+        if self.noise == 0.0 {
+            Some(Box::new(SimBackend::deterministic()))
+        } else {
+            None
+        }
     }
 }
 

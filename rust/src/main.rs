@@ -58,8 +58,8 @@ USAGE:
                 [--minibatches 6] [--scheduler sharded-lrtf]
                 [--no-double-buffer] [--sequential]
                 [--queue heap|scan|calendar]
-                [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
-                [--nvme <cap-gib>[:<gbps>]]
+                [--prefetch-depth 1] [--shards 1] [--threads] [--stealing]
+                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
                 [--wal run.wal] [--snapshot-every 4096]
   hydra simulate --online [--jobs 12] [--rate 6] [--seed 7]
                 [--pool a4000:4,a6000:4] [--minibatches 3]
@@ -69,15 +69,16 @@ USAGE:
                 [--scheduler sharded-lrtf|weighted-fair|...]
                 [--progress] [--gantt]
                 [--queue heap|scan|calendar]
-                [--prefetch-depth 1] [--shards 1] [--dram-gib 500]
-                [--nvme <cap-gib>[:<gbps>]]
+                [--prefetch-depth 1] [--shards 1] [--threads] [--stealing]
+                [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
                 [--wal run.wal] [--snapshot-every 4096]
   hydra search  --space lr=1e-4..1e-2:log,layers=12,24,48
                 [--algo grid|random|asha] [--pool a4000:4] [--trials N]
                 [--eta 3] [--min-epochs 1] [--epochs 9] [--minibatches 2]
                 [--grid-points 3] [--seed 7] [--stagger 0]
                 [--scheduler sharded-lrtf] [--queue heap|scan|calendar]
-                [--prefetch-depth 1] [--shards 1] [--admission-depth K]
+                [--prefetch-depth 1] [--shards 1] [--threads] [--stealing]
+                [--admission-depth K]
                 [--dram-gib 500] [--nvme <cap-gib>[:<gbps>]]
                 [--wal search.wal] [--snapshot-every 4096]
                 | --spec search.json
@@ -98,6 +99,8 @@ fn main() {
         "online",
         "scan-queue",
         "progress",
+        "threads",
+        "stealing",
     ];
     let args = match Args::from_env(&flags) {
         Ok(a) => a,
@@ -161,6 +164,8 @@ fn engine_options(args: &Args) -> Result<EngineOptions, String> {
         transfer: TransferModel::pcie_gen3(),
         queue: queue_arg(args)?,
         shards,
+        threads: args.flag("threads"),
+        stealing: args.flag("stealing"),
         ..Default::default()
     })
 }
@@ -665,6 +670,12 @@ fn cmd_search(args: &Args) -> CliResult {
             }
             if args.flag("no-double-buffer") {
                 engine.push_str(r#", "double_buffer": false"#);
+            }
+            if opts.threads {
+                engine.push_str(r#", "threads": true"#);
+            }
+            if opts.stealing {
+                engine.push_str(r#", "stealing": true"#);
             }
             match opts.queue {
                 QueueKind::Heap => {}

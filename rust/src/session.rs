@@ -210,6 +210,33 @@ impl SessionBuilder {
         self
     }
 
+    /// Run the shard engines on one scoped OS thread per shard instead of
+    /// the sequential shard loop ([`EngineOptions::threads`]). The merged
+    /// report and observer stream are byte-identical to sequential
+    /// execution; only wall-clock changes. Requires a backend that can fork
+    /// an independent per-shard copy (the noiseless sim backend can; noisy
+    /// and real backends cannot) — refused with a config error at run time
+    /// otherwise. No effect at `shards == 1`. Call after
+    /// [`SessionBuilder::options`] (which replaces the whole options
+    /// struct).
+    pub fn threads(mut self, threads: bool) -> SessionBuilder {
+        self.options.threads = threads;
+        self
+    }
+
+    /// Enable admission-time work stealing between shards
+    /// ([`EngineOptions::stealing`]): deep admission queues rebalance into
+    /// shallow ones through a capacity-checked steal handshake before any
+    /// shard starts, and every migration is recorded in
+    /// [`RunReport::stolen`]. Off by default so the hash-routed placement
+    /// stays byte-identical. No effect at `shards == 1`. Call after
+    /// [`SessionBuilder::options`] (which replaces the whole options
+    /// struct).
+    pub fn stealing(mut self, stealing: bool) -> SessionBuilder {
+        self.options.stealing = stealing;
+        self
+    }
+
     /// Override the host-memory hierarchy (DRAM size + optional NVMe
     /// backing tier). The default derives DRAM from the cluster
     /// (`Cluster::dram_bytes`) with no NVMe tier — the legacy two-tier

@@ -30,6 +30,21 @@ fn shard(bytes: u64) -> ShardDesc {
 /// device failure — everything that could perturb a sloppy RNG or
 /// iteration order. Returns the full report rendered to bytes.
 fn run_once(policy: Policy, shards: usize) -> String {
+    run_scenario(policy, shards, 0.05, false, false, 4)
+}
+
+/// [`run_once`] with the backend noise and the threading knobs exposed.
+/// Threaded arms need `noise == 0.0` — a noisy backend consumes one global
+/// RNG stream in shard order that per-shard forks cannot replicate, so the
+/// sharded engine refuses to thread it — and N = 8 needs the wider pool.
+fn run_scenario(
+    policy: Policy,
+    shards: usize,
+    noise: f64,
+    threads: bool,
+    stealing: bool,
+    devices: usize,
+) -> String {
     let tasks = vec![
         ModelTask::new(0, "m0", "det", vec![shard(8 * MIB), shard(8 * MIB)], 3, 2, 1e-3),
         ModelTask::new(1, "m1", "det", vec![shard(16 * MIB)], 4, 2, 1e-3),
@@ -42,10 +57,12 @@ fn run_once(policy: Policy, shards: usize) -> String {
         record_intervals: true,
         transfer: TransferModel::pcie_gen3(),
         shards,
+        threads,
+        stealing,
         ..Default::default()
     };
-    let mut session = Session::builder(Cluster::uniform(4, 64 * MIB, GIB))
-        .backend(Backend::Sim { noise: 0.05, seed: 11 })
+    let mut session = Session::builder(Cluster::uniform(devices, 64 * MIB, GIB))
+        .backend(Backend::Sim { noise, seed: 11 })
         .policy(policy)
         .options(opts)
         .build()
@@ -80,6 +97,35 @@ fn identical_sharded_runs_are_byte_identical_for_every_policy() {
                 "{policy:?}: two identical {shards}-shard runs diverged"
             );
         }
+    }
+}
+
+#[test]
+fn threaded_sharded_runs_match_sequential_for_every_policy() {
+    // One scoped OS thread per shard must be a wall-clock detail only: the
+    // same scenario (noiseless — a noisy RNG stream cannot fork) produces
+    // byte-identical reports with the shard clocks threaded or sequential,
+    // at every shard count and under every scheduling policy.
+    for shards in [2usize, 4, 8] {
+        for policy in Policy::ALL {
+            let seq = run_scenario(policy, shards, 0.0, false, false, 8);
+            let thr = run_scenario(policy, shards, 0.0, true, false, 8);
+            assert_eq!(
+                seq, thr,
+                "{policy:?}: {shards}-shard threaded run diverged from sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn stealing_runs_are_deterministic_and_thread_independent() {
+    for policy in Policy::ALL {
+        let a = run_scenario(policy, 4, 0.0, true, true, 8);
+        let b = run_scenario(policy, 4, 0.0, true, true, 8);
+        assert_eq!(a, b, "{policy:?}: two identical stealing runs diverged");
+        let seq = run_scenario(policy, 4, 0.0, false, true, 8);
+        assert_eq!(a, seq, "{policy:?}: the steal plan depends on threading");
     }
 }
 

@@ -631,7 +631,7 @@ fn storm_1m_arrivals_complete_under_the_wall_clock_budget() {
             tasks,
             &specs,
             mem(256 * GIB, None),
-            EngineOptions { shards: 4, ..opts },
+            EngineOptions { shards: 4, ..opts.clone() },
             Vec::new(),
         );
         let sharded_wall = t0.elapsed();
@@ -642,6 +642,32 @@ fn storm_1m_arrivals_complete_under_the_wall_clock_budget() {
             sharded_wall < budget,
             "sharded storm took {sharded_wall:?} (budget {budget:?}): \
              routing/merge overhead regressed"
+        );
+
+        // parallel shard clocks: one OS thread per shard must bank real
+        // wall-clock on a dispatch-dominated storm — the CI budget is
+        // threaded(4) < 0.6x sequential(4). The schedule itself may not
+        // move: spot-check the exact scalar totals instead of rendering
+        // two 1M-job reports to strings.
+        let (tasks, specs) = storm_inputs();
+        let t0 = std::time::Instant::now();
+        let thr = sharded(
+            tasks,
+            &specs,
+            mem(256 * GIB, None),
+            EngineOptions { shards: 4, threads: true, ..opts },
+            Vec::new(),
+        );
+        let threaded_wall = t0.elapsed();
+        assert_eq!(thr.merged.units_executed, r.merged.units_executed);
+        assert_eq!(thr.merged.makespan, r.merged.makespan);
+        assert_eq!(thr.merged.compute_secs, r.merged.compute_secs);
+        assert_eq!(thr.merged.stall_secs, r.merged.stall_secs);
+        assert!(
+            threaded_wall.as_secs_f64() < 0.6 * sharded_wall.as_secs_f64(),
+            "threaded shard clocks took {threaded_wall:?} against the \
+             sequential {sharded_wall:?}: expected < 0.6x — parallelism \
+             regressed"
         );
     }
 }
@@ -748,6 +774,399 @@ fn thrashing_shard_fails_with_its_id_while_the_other_completes() {
     .unwrap_err();
     let msg = format!("{err}");
     assert!(msg.contains("shard 1") && msg.contains("thrashing"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// 6. parallel shard clocks: threads are a wall-clock detail, not a schedule
+// ---------------------------------------------------------------------------
+
+/// Run the same workload with the shard clocks sequential and then with one
+/// scoped OS thread per shard, for N in {2, 4, 8}: the merged report and
+/// every per-shard section must be Debug-byte-identical — threading may
+/// only change wall-clock, never the schedule.
+fn assert_threads_identical(
+    what: &str,
+    tasks: impl Fn() -> Vec<ModelTask>,
+    specs: &[DeviceSpec],
+    memory: MemoryOptions,
+    opts: EngineOptions,
+    jobs: &[JobEvent],
+) {
+    for shards in [2usize, 4, 8] {
+        let seq = sharded(
+            tasks(),
+            specs,
+            memory,
+            EngineOptions { shards, threads: false, ..opts.clone() },
+            jobs.to_vec(),
+        );
+        let thr = sharded(
+            tasks(),
+            specs,
+            memory,
+            EngineOptions { shards, threads: true, ..opts.clone() },
+            jobs.to_vec(),
+        );
+        assert_eq!(
+            format!("{:?}", seq.merged),
+            format!("{:?}", thr.merged),
+            "{what}: N={shards} threaded merged report diverged from sequential"
+        );
+        assert_eq!(seq.sections.len(), thr.sections.len());
+        for (a, b) in seq.sections.iter().zip(&thr.sections) {
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "{what}: N={shards} shard {} section diverged",
+                a.shard
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_shards_are_byte_identical_on_the_table2_grid() {
+    let gpu = GpuSpec::rtx2080ti();
+    assert_threads_identical(
+        "table2 bert grid",
+        || build_tasks(&bert_grid(2), &gpu, Default::default()).unwrap(),
+        &vec![DeviceSpec::uniform(gpu.mem_bytes); 8],
+        mem(4096 * GIB, None),
+        EngineOptions { record_intervals: true, ..Default::default() },
+        &[],
+    );
+}
+
+#[test]
+fn threaded_shards_are_byte_identical_under_online_churn() {
+    let gpu = GpuSpec::rtx2080ti();
+    assert_threads_identical(
+        "online poisson stream with cancels",
+        || {
+            build_tasks(&poisson_mixed_tenants(12, 6.0, 7, 2), &gpu, Default::default())
+                .unwrap()
+        },
+        &vec![DeviceSpec::uniform(gpu.mem_bytes); 8],
+        mem(4096 * GIB, None),
+        EngineOptions { record_intervals: true, ..Default::default() },
+        &[
+            JobEvent::Cancel { time: 1800.0, model: 2 },
+            JobEvent::Cancel { time: 3600.0, model: 5 },
+        ],
+    );
+}
+
+#[test]
+fn threaded_shards_are_byte_identical_under_nvme_pressure() {
+    // 48 x 64 MiB models against 1600 MiB of DRAM: the aggregate parameter
+    // state (3 GiB) overflows DRAM at every shard count, so the NVMe fetch
+    // path stays hot, while each shard's slice clears the pinned-working-set
+    // floor ((devices/N) * (depth+1) + 1) * 64 MiB at N = 2, 4 and 8.
+    let total = 48 * 64 * MIB;
+    assert_threads_identical(
+        "nvme pressure",
+        || pressure_tasks(48, 64 * MIB),
+        &vec![DeviceSpec::uniform(GIB); 8],
+        mem(1600 * MIB, Some(TierSpec::nvme(4 * total))),
+        EngineOptions {
+            buffer_frac: 0.30,
+            record_intervals: false,
+            ..Default::default()
+        },
+        &[],
+    );
+}
+
+#[test]
+fn threaded_durable_run_matches_sequential_and_replays_from_genesis() {
+    use hydra::coordinator::Cluster;
+    use hydra::session::{Backend, Session};
+
+    let dir = std::env::temp_dir();
+    let run = |threads: bool, tag: &str| {
+        let wal =
+            dir.join(format!("hydra-threads-{}-{tag}.wal", std::process::id()));
+        let _ = std::fs::remove_file(&wal);
+        let mut session = Session::builder(Cluster::uniform(4, GIB, 64 * GIB))
+            .backend(Backend::sim())
+            .policy(Policy::ShardedLrtf)
+            .options(EngineOptions {
+                shards: 4,
+                threads,
+                ..Default::default()
+            })
+            .durability(hydra::DurabilityOptions::new(&wal))
+            .build()
+            .unwrap();
+        for t in pressure_tasks(12, MIB) {
+            session.submit(t).unwrap();
+        }
+        let report = session.run().unwrap();
+        (format!("{:?}", report.run), wal)
+    };
+    let (seq, seq_wal) = run(false, "seq");
+    let (thr, thr_wal) = run(true, "thr");
+    assert_eq!(seq, thr, "threaded durable run diverged from sequential");
+    // the WAL genesis embeds the options (threads included), so replaying
+    // it from nothing re-runs threaded and must land on the same bytes
+    let replayed = hydra::replay(&thr_wal).unwrap();
+    assert_eq!(format!("{replayed:?}"), thr, "genesis replay diverged");
+    for wal in [seq_wal, thr_wal] {
+        let _ = std::fs::remove_file(&wal);
+        for k in 0..4 {
+            let mut sidecar = wal.as_os_str().to_owned();
+            sidecar.push(format!(".shard{k}"));
+            let _ = std::fs::remove_file(std::path::PathBuf::from(sidecar));
+        }
+    }
+}
+
+#[test]
+fn threads_refuse_a_backend_that_cannot_fork() {
+    // a noisy SimBackend threads one global RNG stream through the shards
+    // in shard order; parallel shard clocks cannot replicate that, so the
+    // sharded engine must refuse up front with a Config error
+    let mut backend = SimBackend::new(0.05, 11);
+    let err = ShardedEngine::with_devices(
+        pressure_tasks(8, MIB),
+        &vec![DeviceSpec::uniform(GIB); 4],
+        MemoryOptions::dram_only(64 * GIB),
+        Policy::ShardedLrtf,
+        &mut backend,
+        EngineOptions { shards: 2, threads: true, ..Default::default() },
+    )
+    .unwrap()
+    .run()
+    .unwrap_err();
+    assert!(matches!(err, hydra::HydraError::Config(_)), "{err:?}");
+    let msg = format!("{err}");
+    assert!(msg.contains("fork an independent per-shard copy"), "{msg}");
+}
+
+/// Fault-injecting backend: forks hand out one [`ShardFault`] per shard in
+/// shard order, and exactly one of them panics on its first unit.
+struct FaultInjector {
+    forks: std::cell::Cell<usize>,
+    victim: usize,
+}
+
+struct ShardFault {
+    panics: bool,
+}
+
+impl hydra::exec::ExecutionBackend for FaultInjector {
+    fn execute_unit(
+        &mut self,
+        task: &ModelTask,
+        unit: &hydra::coordinator::unit::ShardUnit,
+    ) -> hydra::Result<f64> {
+        Ok(task.shard(unit.shard).cost(unit.phase))
+    }
+
+    fn fork_for_shard(
+        &self,
+    ) -> Option<Box<dyn hydra::exec::ExecutionBackend + Send>> {
+        let k = self.forks.get();
+        self.forks.set(k + 1);
+        Some(Box::new(ShardFault { panics: k == self.victim }))
+    }
+}
+
+impl hydra::exec::ExecutionBackend for ShardFault {
+    fn execute_unit(
+        &mut self,
+        task: &ModelTask,
+        unit: &hydra::coordinator::unit::ShardUnit,
+    ) -> hydra::Result<f64> {
+        if self.panics {
+            panic!("injected shard fault");
+        }
+        Ok(task.shard(unit.shard).cost(unit.phase))
+    }
+}
+
+#[test]
+fn a_panicking_shard_thread_becomes_a_tagged_error_not_an_abort() {
+    // shard 1's thread panics mid-run: run_isolated must join every
+    // thread, surface the panic as a HydraError tagged "shard 1", and keep
+    // shard 0's report intact — never abort the process or lose a sibling
+    let mut backend = FaultInjector { forks: std::cell::Cell::new(0), victim: 1 };
+    let outcomes = ShardedEngine::with_devices(
+        pressure_tasks(8, MIB),
+        &vec![DeviceSpec::uniform(GIB); 4],
+        MemoryOptions::dram_only(64 * GIB),
+        Policy::ShardedLrtf,
+        &mut backend,
+        EngineOptions { shards: 2, threads: true, ..Default::default() },
+    )
+    .unwrap()
+    .run_isolated(None)
+    .unwrap();
+    assert_eq!(outcomes.len(), 2);
+    let err = outcomes[1].outcome.as_ref().unwrap_err();
+    assert!(matches!(err, hydra::HydraError::Exec(_)), "{err:?}");
+    let msg = format!("{err}");
+    assert!(msg.contains("shard 1"), "error not tagged with shard id: {msg}");
+    assert!(msg.contains("panicked"), "error hides the panic: {msg}");
+    assert!(msg.contains("injected shard fault"), "payload lost: {msg}");
+    // the sibling's report stands: all of shard 0's jobs retired fully
+    let ok = outcomes[0].outcome.as_ref().unwrap();
+    assert_eq!(ok.units_executed, outcomes[0].jobs.len() as u64 * 4);
+    assert!(ok.jobs.iter().all(|j| !j.finished.is_nan()));
+}
+
+// ---------------------------------------------------------------------------
+// 7. work stealing: rebalanced, conserved, recorded
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stealing_rebalances_conserves_and_records_migrations() {
+    use hydra::coordinator::sharp::StolenJob;
+
+    // 16 jobs hash-route [2, 4, 6, 4] over 4 shards (stale-table assert
+    // below), so the greedy planner moves the two most recently admitted
+    // jobs of shard 2 — 14, then 10 — to shard 0 and stops balanced.
+    let depths: Vec<usize> = (0..4)
+        .map(|s| (0..16).filter(|&id| routing::route(id, 4).0 == s).count())
+        .collect();
+    assert_eq!(
+        depths,
+        vec![2, 4, 6, 4],
+        "routing moved: the expectations below are stale"
+    );
+    let mk = |stealing: bool, threads: bool| {
+        sharded(
+            pressure_tasks(16, MIB),
+            &vec![DeviceSpec::uniform(GIB); 4],
+            mem(64 * GIB, None),
+            EngineOptions { shards: 4, stealing, threads, ..Default::default() },
+            Vec::new(),
+        )
+    };
+    let r = mk(true, false);
+    let expect = vec![
+        StolenJob { job: 14, from: ShardId(2), to: ShardId(0) },
+        StolenJob { job: 10, from: ShardId(2), to: ShardId(0) },
+    ];
+    assert_eq!(r.merged.stolen, expect, "planned migrations drifted");
+    assert_eq!(r.sections[0].stolen, expect, "steals recorded off the thief");
+    assert!(r.sections.iter().skip(1).all(|s| s.stolen.is_empty()));
+    // the stolen ids moved queues and the thief's queue re-sorted to
+    // ascending global id (the order hash routing would have produced)
+    assert_eq!(r.sections[0].jobs, vec![6, 9, 10, 14]);
+    assert_eq!(r.sections[2].jobs, vec![2, 4, 5, 8]);
+    // conservation: every job on exactly one shard, every unit retired
+    let mut seen = vec![0usize; 16];
+    for sec in &r.sections {
+        for &gid in &sec.jobs {
+            seen[gid] += 1;
+        }
+    }
+    assert!(seen.iter().all(|&c| c == 1), "lost or duplicated job: {seen:?}");
+    assert_eq!(r.merged.units_executed, 16 * 4);
+    assert_eq!(r.merged.jobs.len(), 16);
+    for (gid, stat) in r.merged.jobs.iter().enumerate() {
+        assert_eq!(stat.model, gid, "job stats out of global order");
+        assert_eq!(stat.units_executed, 4, "job {gid} lost units migrating");
+        assert!(!stat.finished.is_nan(), "stolen job {gid} never finished");
+    }
+    // stealing composes with threads byte-identically, and stays off by
+    // default
+    let t = mk(true, true);
+    assert_eq!(format!("{:?}", r.merged), format!("{:?}", t.merged));
+    assert!(mk(false, false).merged.stolen.is_empty());
+}
+
+#[test]
+fn prop_stealing_conserves_jobs_and_units_under_random_workloads() {
+    // Stealing on arbitrary workloads: no lost or duplicated jobs, stolen
+    // records internally consistent (from != to, the job now lives on the
+    // thief), per-queue order restored to ascending gid, and unit totals
+    // conserved against the sections.
+    prop::check("stealing conservation", 25, |rng| {
+        let shards = rng.range_u64(2, 5) as usize;
+        let n_jobs = rng.range_u64(1, 30) as usize;
+        let specs = vec![DeviceSpec::uniform(GIB); shards];
+        let tasks: Vec<ModelTask> = (0..n_jobs)
+            .map(|id| {
+                let sd = vec![ShardDesc {
+                    param_bytes: rng.range_u64(1, 17) << 20,
+                    fwd_transfer_bytes: 1 << 20,
+                    bwd_transfer_bytes: 1 << 20,
+                    activation_bytes: 1 << 16,
+                    fwd_cost: rng.range_f64(0.01, 0.2),
+                    bwd_cost: rng.range_f64(0.01, 0.2),
+                    n_layers: 1,
+                }];
+                ModelTask::new(id, format!("m{id}"), "sim", sd, 2, 1, 1e-3)
+                    .with_arrival(rng.range_f64(0.0, 1.0))
+            })
+            .collect();
+        let mut backend = SimBackend::deterministic();
+        let r = ShardedEngine::with_devices(
+            tasks,
+            &specs,
+            MemoryOptions::dram_only(64 * GIB),
+            Policy::ShardedLrtf,
+            &mut backend,
+            EngineOptions {
+                shards,
+                stealing: true,
+                ..Default::default()
+            },
+        )
+        .map_err(|e| format!("{e}"))?
+        .run()
+        .map_err(|e| format!("stealing run failed: {e}"))?;
+        let mut seen = vec![0usize; n_jobs];
+        for sec in &r.sections {
+            for &gid in &sec.jobs {
+                seen[gid] += 1;
+            }
+            let mut sorted = sec.jobs.clone();
+            sorted.sort_unstable();
+            prop_assert!(
+                sorted == sec.jobs,
+                "shard queue not in ascending gid order: {:?}",
+                sec.jobs
+            );
+        }
+        prop_assert!(
+            seen.iter().all(|&c| c == 1),
+            "a job landed on 0 or 2 shards: {seen:?}"
+        );
+        for st in &r.merged.stolen {
+            prop_assert!(st.from != st.to, "self-steal recorded: {st:?}");
+            prop_assert!(st.job < n_jobs, "stolen job out of range: {st:?}");
+            prop_assert!(
+                r.sections[st.to.0].jobs.contains(&st.job),
+                "stolen job {} not on its thief {:?}",
+                st.job,
+                st.to
+            );
+            prop_assert!(
+                !r.sections[st.from.0].jobs.contains(&st.job),
+                "stolen job {} still on its victim {:?}",
+                st.job,
+                st.from
+            );
+        }
+        let sum: u64 = r.sections.iter().map(|s| s.report.units_executed).sum();
+        prop_assert!(
+            r.merged.units_executed == sum && sum == n_jobs as u64 * 4,
+            "units not conserved: merged {} sections {sum} expected {}",
+            r.merged.units_executed,
+            n_jobs * 4
+        );
+        for (gid, stat) in r.merged.jobs.iter().enumerate() {
+            prop_assert!(
+                stat.units_executed == 4,
+                "job {gid} retired {} of 4 units",
+                stat.units_executed
+            );
+        }
+        Ok(())
+    });
 }
 
 // ---------------------------------------------------------------------------
